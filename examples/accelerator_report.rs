@@ -1,0 +1,62 @@
+//! Accelerator-module study (Tables III & IV): embed every multiplier in
+//! TASU / Systolic Cube / 16x16 Systolic Array and report ASIC + FPGA
+//! cost, plus a functional demo — the systolic-array cycle simulator
+//! running a LUT-multiplier matmul and agreeing with ApproxFlow semantics.
+//!
+//! Run: `cargo run --release --example accelerator_report`
+
+use heam::accel::module::{asic_report, fpga_report, ModuleKind};
+use heam::accel::systolic_array;
+use heam::bench::table34;
+use heam::mult::MultKind;
+use heam::nn::multiplier::Multiplier;
+use heam::util::prng::Rng;
+
+fn main() {
+    println!("{}", table34::table3());
+    println!("{}", table34::table4());
+
+    // Functional demo: run a matmul tile through the cycle-accurate SA
+    // model with the HEAM LUT and compare against exact.
+    println!("== systolic-array functional demo (16x16, weight-stationary) ==");
+    let mut rng = Rng::new(99);
+    let n = 8;
+    let x: Vec<u8> = (0..n * systolic_array::DIM).map(|_| rng.below(256) as u8).collect();
+    let w: Vec<u8> = (0..systolic_array::DIM * systolic_array::DIM)
+        .map(|_| rng.below(256) as u8)
+        .collect();
+    let heam = Multiplier::Lut(std::sync::Arc::new(MultKind::Heam.lut()));
+    let (approx, cycles) = systolic_array::matmul_tile(&x, n, &w, &heam);
+    let (sim, _) = systolic_array::matmul_tile_cycle_sim(&x, n, &w, &heam);
+    let (exact, _) = systolic_array::matmul_tile(&x, n, &w, &Multiplier::Exact);
+    assert_eq!(approx, sim, "cycle sim must match the functional model");
+    let rel: f64 = approx
+        .iter()
+        .zip(&exact)
+        .map(|(&a, &e)| ((a - e).abs() as f64) / (e.max(1) as f64))
+        .sum::<f64>()
+        / approx.len() as f64;
+    println!(
+        "{} MACs in {cycles} cycles; HEAM-vs-exact mean |rel err| = {:.4}% (cycle sim verified)",
+        n * systolic_array::DIM * systolic_array::DIM,
+        rel * 100.0
+    );
+
+    // Throughput estimate at each module's fmax.
+    println!("\n== implied peak throughput (GMAC/s at ASIC fmax) ==");
+    for module in ModuleKind::ALL {
+        let cfg = module.config();
+        for mult in [MultKind::Heam, MultKind::Wallace] {
+            let r = asic_report(module, mult);
+            println!(
+                "  {:<5} + {:<8}: {:>7.1} GMAC/s  ({} PEs x {:.1} MHz)",
+                module.label(),
+                mult.label(),
+                cfg.n_mults as f64 * r.fmax_mhz / 1e3,
+                cfg.n_mults,
+                r.fmax_mhz
+            );
+        }
+    }
+    let _ = fpga_report(ModuleKind::SystolicArray, MultKind::Heam);
+}

@@ -1,0 +1,63 @@
+//! Dataset sweep: Table I accuracy column + the full Table II — every
+//! multiplier evaluated on every dataset substitute (digits / fashion /
+//! cifar through LeNet, cora through the GCN), with per-multiplier
+//! hardware context.
+//!
+//! Run after `make artifacts`:
+//!   cargo run --release --example dataset_sweep
+//! Env: HEAM_LIMIT caps test images per dataset (default 500).
+
+use std::sync::Arc;
+
+use heam::bench::table1::lut_for;
+use heam::cost::asic;
+use heam::mult::MultKind;
+use heam::nn::gcn::QGcn;
+use heam::nn::{lenet, multiplier::Multiplier};
+
+fn main() -> anyhow::Result<()> {
+    let limit: usize = std::env::var("HEAM_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+
+    println!(
+        "{:<10} {:>9} {:>8} | {:>8} {:>8} {:>8} {:>8}",
+        "mult", "area um2", "ns", "digits", "fashion", "cifar", "cora"
+    );
+    for kind in MultKind::ALL {
+        let a = asic::analyze_default(&kind.build());
+        let mul = Multiplier::Lut(Arc::new(lut_for(kind)));
+        let mut cells = Vec::new();
+        for name in ["digits", "fashion", "cifar"] {
+            let ds = heam::data::ImageDataset::load(format!("artifacts/data/{name}.htb"), name)?;
+            let graph = lenet::load(format!("artifacts/weights/{name}.htb"))?;
+            let acc = lenet::accuracy(
+                &graph,
+                &ds.test_x,
+                &ds.test_y,
+                (ds.channels, ds.height, ds.width),
+                &mul,
+                limit,
+                None,
+            )?;
+            cells.push(format!("{:>7.2}%", acc * 100.0));
+        }
+        let g = heam::data::GraphDataset::load("artifacts/data/cora.htb", "cora")?;
+        let gcn = QGcn::load("artifacts/weights/cora.htb")?;
+        let acc = gcn.accuracy(&g, &g.test_mask, &mul, None);
+        cells.push(format!("{:>7.2}%", acc * 100.0));
+        println!(
+            "{:<10} {:>9.2} {:>8.3} | {}",
+            kind.label(),
+            a.area_um2,
+            a.latency_ns,
+            cells.join(" ")
+        );
+    }
+    println!(
+        "\npaper Table II (FashionMNIST/CIFAR10/CORA): HEAM 90.41/76.49/81.09, \
+         CR(C.7) 75.09/56.30/80.35, Wallace 90.33/76.16/80.65"
+    );
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! The paper's headline pipeline, end to end:
+//!
+//!   distributions (trained quantized LeNet) → GA on Eq. 6 → fine-tune
+//!   (OR-merge) → netlist → cost report → LUT → accuracy evaluation vs
+//!   every baseline multiplier.
+//!
+//! This is the Table I "HEAM column" generator. With artifacts present it
+//! uses the real extracted distributions and the trained model; without
+//! them it falls back to the synthetic Fig.1-shaped distributions and
+//! skips the accuracy section.
+//!
+//! Run: `cargo run --release --example optimize_multiplier`
+
+use std::sync::Arc;
+
+use heam::cost::{asic, fpga};
+use heam::mult::{Lut, MultKind};
+use heam::nn::{lenet, multiplier::Multiplier};
+use heam::opt::{self, DistSet, GaConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Distributions.
+    let dist = DistSet::load("artifacts/dist/digits.json");
+    let have_artifacts = dist.is_ok();
+    let ds = dist.unwrap_or_else(|_| {
+        println!("(no artifacts/dist/digits.json — using synthetic distributions)");
+        DistSet::synthetic_lenet_like()
+    });
+    let (px, py) = ds.aggregate();
+    println!(
+        "distributions: model '{}', {} layers, input mode {}, weight mode {}",
+        ds.model,
+        ds.layers.len(),
+        px.mode(),
+        py.mode()
+    );
+
+    // 2. GA.
+    let space = opt::genome::GenomeSpace::new(8, 4);
+    let objective = opt::Objective::new(space, &px, &py, 3000.0, 30.0);
+    let config = GaConfig {
+        population: 48,
+        generations: 120,
+        ..Default::default()
+    };
+    println!("GA: {} genes, pop {}, {} generations ...", objective.space.len(), config.population, config.generations);
+    let result = opt::ga::run(&objective, &config);
+    println!("GA best fitness {:.4e} ({} evals)", result.best_fitness, result.evaluations);
+    let ga_design = result.best.to_design(&objective.space);
+
+    // 3. Fine-tune.
+    let ft = opt::finetune::run(
+        &ga_design,
+        &px,
+        &py,
+        &opt::finetune::FinetuneConfig { target_rows: 2, mu: 0.0 },
+    );
+    println!(
+        "fine-tune: packed rows {} -> {}, weighted error {:.3e} -> {:.3e}",
+        ft.rows_before, ft.rows_after, ft.error_before, ft.error_after
+    );
+    let design = ft.design;
+    println!("{}", design.render());
+
+    // 4. Netlist + cost.
+    let net = design.build_netlist();
+    let a = asic::analyze_default(&net);
+    let f = fpga::map_default(&net);
+    let wallace = asic::analyze_default(&MultKind::Wallace.build());
+    println!(
+        "optimized HEAM: {} cells, {:.2} um^2 ({:+.1}% vs Wallace), {:.3} ns ({:+.1}%), {:.2} uW ({:+.1}%), {} LUT6s",
+        a.cells,
+        a.area_um2,
+        100.0 * (a.area_um2 - wallace.area_um2) / wallace.area_um2,
+        a.latency_ns,
+        100.0 * (a.latency_ns - wallace.latency_ns) / wallace.latency_ns,
+        a.power_uw,
+        100.0 * (a.power_uw - wallace.power_uw) / wallace.power_uw,
+        f.luts,
+    );
+
+    // 5. LUT + save.
+    let lut = Lut::from_netlist(&net);
+    std::fs::create_dir_all("artifacts/heam")?;
+    lut.save("artifacts/heam/heam_lut.htb")?;
+    println!("wrote artifacts/heam/heam_lut.htb");
+
+    // 6. Accuracy vs baselines (needs trained weights).
+    if have_artifacts {
+        let data = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits")?;
+        let graph = lenet::load("artifacts/weights/digits.htb")?;
+        println!("\naccuracy on 1000 digits-substitute test images:");
+        let shape = (data.channels, data.height, data.width);
+        let acc_of = |lut: Lut| -> anyhow::Result<f64> {
+            Ok(lenet::accuracy(
+                &graph,
+                &data.test_x,
+                &data.test_y,
+                shape,
+                &Multiplier::Lut(Arc::new(lut)),
+                1000,
+                None,
+            )? * 100.0)
+        };
+        println!("  HEAM(optimized) {:>6.2}%", acc_of(lut)?);
+        for kind in [MultKind::KMap, MultKind::CrC7, MultKind::Ac, MultKind::Wallace] {
+            println!("  {:<14} {:>6.2}%", kind.label(), acc_of(kind.lut())?);
+        }
+    } else {
+        println!("\n(skipping accuracy section — run `make artifacts` first)");
+    }
+    Ok(())
+}

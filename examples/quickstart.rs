@@ -1,0 +1,62 @@
+//! Quickstart: the 60-second tour of the HEAM system.
+//!
+//! 1. Build the exact Wallace and committed HEAM multiplier netlists.
+//! 2. Analyze both on the DC-substitute cost model (Table I hardware).
+//! 3. Generate the HEAM LUT and measure its distribution-weighted error.
+//! 4. Run a tiny GA to show the optimization loop converging.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use heam::cost::{asic, fpga};
+use heam::mult::{Lut, MultKind};
+use heam::opt::{self, DistSet, GaConfig};
+
+fn main() {
+    // 1-2: netlists + cost.
+    println!("== multiplier hardware (DC substitute, 65nm-calibrated) ==");
+    for kind in [MultKind::Heam, MultKind::Wallace] {
+        let net = kind.build();
+        let a = asic::analyze_default(&net);
+        let f = fpga::map_default(&net);
+        println!(
+            "{:<8} {:>4} cells  {:>8.2} um^2  {:>6.3} ns  {:>8.2} uW  {:>4} LUT6s",
+            kind.label(),
+            a.cells,
+            a.area_um2,
+            a.latency_ns,
+            a.power_uw,
+            f.luts
+        );
+    }
+
+    // 3: LUT + error under the application distributions.
+    let (px, py) = DistSet::load("artifacts/dist/digits.json")
+        .unwrap_or_else(|_| DistSet::synthetic_lenet_like())
+        .aggregate();
+    let heam = MultKind::Heam.lut();
+    let exact = Lut::exact();
+    println!("\n== error (distribution-weighted mean squared, Eq. 3) ==");
+    println!("HEAM  : {:.4e}", heam.avg_sq_error_weighted(&px.p, &py.p));
+    println!("exact : {:.4e}", exact.avg_sq_error_weighted(&px.p, &py.p));
+
+    // 4: a small GA run.
+    println!("\n== optimization loop (reduced GA: pop 16, 10 generations) ==");
+    let space = opt::genome::GenomeSpace::new(8, 4);
+    let objective = opt::Objective::new(space, &px, &py, 3000.0, 30.0);
+    let result = opt::ga::run(
+        &objective,
+        &GaConfig {
+            population: 16,
+            generations: 10,
+            ..Default::default()
+        },
+    );
+    println!(
+        "fitness: {:.4e} -> {:.4e} over {} evaluations",
+        result.history.first().unwrap(),
+        result.best_fitness,
+        result.evaluations
+    );
+    println!("{}", result.best.to_design(&objective.space).render());
+    println!("next: `heam optimize` for the full pipeline, `cargo bench` for the tables.");
+}

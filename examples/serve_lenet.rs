@@ -1,0 +1,94 @@
+//! End-to-end serving driver (the systems-validation workload recorded in
+//! EXPERIMENTS.md §E2E): load the AOT-compiled quantized LeNet through the
+//! PJRT runtime, inject an approximate-multiplier LUT *as an input
+//! tensor*, and serve a batched classification workload from concurrent
+//! clients — measuring latency percentiles, throughput, accuracy, and
+//! batching behaviour. Also cross-checks the PJRT path against the native
+//! ApproxFlow engine on the same images (parity).
+//!
+//! Run after `make artifacts`:
+//!   cargo run --release --example serve_lenet
+//! Options via env: HEAM_REQUESTS (default 512), HEAM_BATCH (16).
+
+use std::sync::Arc;
+
+use heam::coordinator::server::{ServeConfig, Server};
+use heam::coordinator::drive_demo;
+use heam::mult::{Lut, MultKind};
+use heam::nn::{lenet, multiplier::Multiplier};
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::var("HEAM_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512);
+    let max_batch: usize = std::env::var("HEAM_BATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+
+    let ds = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits")?;
+    let heam_lut = Lut::load("artifacts/heam/heam_lut.htb").unwrap_or_else(|_| MultKind::Heam.lut());
+
+    // --- PJRT serving path ---
+    println!("== PJRT serving (AOT artifact, HEAM LUT injected) ==");
+    let server = Server::start(
+        "artifacts/lenet_digits.hlo.txt",
+        Arc::new(heam_lut.clone()),
+        ServeConfig {
+            max_batch,
+            max_wait_us: 2000,
+            workers: 1,
+        },
+    )?;
+    let report = drive_demo(&server, &ds, requests)?;
+    println!("{report}");
+    server.shutdown();
+
+    // --- native engine, same workload (reference + parity) ---
+    println!("\n== native ApproxFlow engine, same workload ==");
+    let graph = lenet::load("artifacts/weights/digits.htb")?;
+    let native = Server::start_native(
+        graph,
+        Multiplier::Lut(Arc::new(heam_lut.clone())),
+        (ds.channels, ds.height, ds.width),
+        ServeConfig {
+            max_batch,
+            max_wait_us: 2000,
+            workers: 1,
+        },
+    );
+    let report = drive_demo(&native, &ds, requests)?;
+    println!("{report}");
+    native.shutdown();
+
+    // --- prediction parity on a sample ---
+    let graph = lenet::load("artifacts/weights/digits.htb")?;
+    let server = Server::start(
+        "artifacts/lenet_digits.hlo.txt",
+        Arc::new(heam_lut.clone()),
+        ServeConfig::default(),
+    )?;
+    let mul = Multiplier::Lut(Arc::new(heam_lut));
+    let sz = ds.channels * ds.height * ds.width;
+    let mut agree = 0;
+    let n = 64;
+    for i in 0..n {
+        let img = &ds.test_x[i * sz..(i + 1) * sz];
+        let pjrt_pred = server.classify(img.to_vec())?;
+        let (native_pred, _) = lenet::classify(
+            &graph,
+            img,
+            (ds.channels, ds.height, ds.width),
+            &mul,
+            None,
+        )?;
+        if pjrt_pred == native_pred {
+            agree += 1;
+        }
+    }
+    println!("\nPJRT vs native prediction parity: {agree}/{n}");
+    anyhow::ensure!(agree >= n - 1, "parity too low — integer semantics drifted");
+    server.shutdown();
+    Ok(())
+}

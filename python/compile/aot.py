@@ -1,0 +1,111 @@
+"""AOT export: lower the L2 quantized-LeNet serving graph to HLO text.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids, so
+text round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs per trained dataset:
+  artifacts/lenet_<name>.hlo.txt          — (images f32[B,C,H,W], lut
+                                            f32[65536]) -> (logits,)
+  artifacts/lenet_<name>.hlo.txt.meta.json — batch/shape metadata the rust
+                                             server reads
+plus a tiny smoke artifact artifacts/test_matmul.hlo.txt used by the rust
+runtime unit tests.
+
+Usage: python -m compile.aot [--datasets digits,...] [--batch 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import tensor_io
+from .model import lenet_forward
+
+ROOT = Path(__file__).resolve().parents[2]
+ARTIFACTS = ROOT / "artifacts"
+WEIGHTS_DIR = ARTIFACTS / "weights"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible
+    path; return_tuple=True so the rust side unwraps a 1-tuple).
+
+    print_large_constants=True is ESSENTIAL: the default elides the baked
+    quantized-weight tensors as `constant({...})`, which the rust-side HLO
+    text parser silently garbage-fills (discovered the hard way — see
+    EXPERIMENTS.md §E2E)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_smoke(path: Path) -> None:
+    """The reference matmul artifact exercised by rust runtime tests."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    path.write_text(to_hlo_text(lowered))
+    print(f"wrote {path}", flush=True)
+
+
+def export_lenet(name: str, batch: int, use_pallas: bool = True) -> None:
+    bundle = tensor_io.load(WEIGHTS_DIR / f"{name}.htb")
+    channels = bundle["conv1.w"].shape[1]
+    hw = 28 if channels == 1 else 32
+
+    def fn(images, lut):
+        return lenet_forward(images, lut, bundle, use_pallas=use_pallas)
+
+    img_spec = jax.ShapeDtypeStruct((batch, channels, hw, hw), jnp.float32)
+    lut_spec = jax.ShapeDtypeStruct((65536,), jnp.float32)
+    lowered = jax.jit(fn).lower(img_spec, lut_spec)
+    out = ARTIFACTS / f"lenet_{name}.hlo.txt"
+    out.write_text(to_hlo_text(lowered))
+    meta = {
+        "batch": batch,
+        "channels": channels,
+        "height": hw,
+        "width": hw,
+        "classes": 10,
+        "inputs": ["images", "lut_f32[65536]"],
+        "kernel": "pallas lut_matmul (interpret)" if use_pallas else "jnp ref",
+    }
+    Path(f"{out}.meta.json").write_text(json.dumps(meta))
+    print(f"wrote {out} ({out.stat().st_size // 1024} KiB) + meta", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="digits,fashion,cifar")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument(
+        "--ref-kernel",
+        action="store_true",
+        help="lower the jnp reference instead of the Pallas kernel",
+    )
+    args = ap.parse_args()
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    export_smoke(ARTIFACTS / "test_matmul.hlo.txt")
+    for name in args.datasets.split(","):
+        name = name.strip()
+        if not (WEIGHTS_DIR / f"{name}.htb").exists():
+            print(f"skipping {name}: no trained weights (run compile.train)", flush=True)
+            continue
+        export_lenet(name, args.batch, use_pallas=not args.ref_kernel)
+
+
+if __name__ == "__main__":
+    main()

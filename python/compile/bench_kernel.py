@@ -1,0 +1,76 @@
+"""L1 kernel tile-shape sweep (§Perf).
+
+IMPORTANT CAVEAT: the kernel runs interpret=True on CPU, so wall-clock
+numbers here measure the *interpreter*, not TPU performance — they are
+reported only to confirm functional scaling. The quantities that transfer
+to real TPU are structural: VMEM footprint per grid step (must fit 16 MiB
+with double-buffering headroom) and the HBM traffic per tile schedule,
+both printed below; DESIGN.md §Hardware-Adaptation derives the expected
+MXU/VPU behaviour.
+
+Usage: python -m compile.bench_kernel
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.lut_matmul import lut_matmul, vmem_footprint_bytes
+from .kernels.ref import exact_lut, lut_matmul_ref
+
+
+def hbm_traffic_bytes(n, k, m, bm, bn, bk):
+    """Bytes moved HBM->VMEM for one full matmul under the (bm,bn,bk)
+    schedule: x tile re-read per n-block, w tile re-read per m-block,
+    LUT resident (loaded once)."""
+    grid_m, grid_n, grid_k = n // bm, m // bn, k // bk
+    x_reads = grid_m * grid_n * grid_k * bm * bk * 4
+    w_reads = grid_m * grid_n * grid_k * bk * bn * 4
+    out = n * m * 4
+    lut = 65536 * 4
+    return x_reads + w_reads + out + lut
+
+
+def main():
+    n, k, m = 64, 256, 128  # fc1-like workload
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, (n, k)).astype(np.int32))
+    w = jnp.asarray(rng.integers(0, 256, (k, m)).astype(np.int32))
+    lut = exact_lut()
+    want = np.asarray(lut_matmul_ref(x, w, lut))
+
+    print(f"workload: [{n},{k}] x [{k},{m}] (fc1-like)")
+    print(f"{'tile (bm,bn,bk)':>18} {'VMEM/step':>10} {'HBM traffic':>12} {'interp ms':>10} ok")
+    configs = [
+        (n, m, k),       # whole-array (grid 1x1x1)
+        (32, 128, 64),   # DESIGN.md reference tiling
+        (32, 32, 64),
+        (16, 32, 32),
+        (8, 16, 16),
+    ]
+    for bm, bn, bk in configs:
+        if n % bm or m % bn or k % bk:
+            continue
+        fn = lambda: lut_matmul(x, w, lut, block_m=bm, block_n=bn, block_k=bk)
+        got = np.asarray(fn())  # warm (traces + compiles)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            np.asarray(fn())
+        dt = (time.perf_counter() - t0) / 3 * 1000
+        vmem = vmem_footprint_bytes(bm, bn, bk) / 1024
+        hbm = hbm_traffic_bytes(n, k, m, bm, bn, bk) / 1024
+        ok = np.array_equal(got, want)
+        print(f"{str((bm, bn, bk)):>18} {vmem:>8.0f}KB {hbm:>10.0f}KB {dt:>10.1f} {ok}")
+    print(
+        "\nstructural conclusion: the (32,128,64) tiling keeps one grid step"
+        "\nat ~1.3 MiB VMEM (LUT-resident 256 KiB + gathered intermediate),"
+        "\nleaving >10x headroom for double buffering on a 16 MiB core;"
+        "\ninterpret-mode times are NOT a TPU proxy (see module docstring)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Dataset access for the python build path.
+
+Rust is the single source of truth: `heam gen-data` writes the synthetic
+datasets as HTB1 tensor bundles under artifacts/data/, and this module
+just reads them — training and evaluation therefore see bit-identical
+data across the language boundary.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from . import tensor_io
+
+ROOT = Path(__file__).resolve().parents[2]
+DATA_DIR = ROOT / "artifacts" / "data"
+
+
+@dataclass
+class ImageDataset:
+    name: str
+    train_x: np.ndarray  # [N, C, H, W] f32 in [0, 1]
+    train_y: np.ndarray  # [N] u8
+    test_x: np.ndarray
+    test_y: np.ndarray
+    classes: int
+
+
+@dataclass
+class GraphDataset:
+    name: str
+    features: np.ndarray  # [N, F] f32
+    labels: np.ndarray  # [N] u8
+    edges: np.ndarray  # [E, 2] i64
+    train_mask: np.ndarray  # [N] bool
+    test_mask: np.ndarray
+    classes: int
+
+
+def load_images(name: str) -> ImageDataset:
+    t = tensor_io.load(DATA_DIR / f"{name}.htb")
+    meta = t["meta"]
+    return ImageDataset(
+        name=name,
+        train_x=t["train_x"].astype(np.float32),
+        train_y=t["train_y"],
+        test_x=t["test_x"].astype(np.float32),
+        test_y=t["test_y"],
+        classes=int(meta[3]),
+    )
+
+
+def load_graph(name: str = "cora") -> GraphDataset:
+    t = tensor_io.load(DATA_DIR / f"{name}.htb")
+    meta = t["meta"]
+    return GraphDataset(
+        name=name,
+        features=t["features"].astype(np.float32),
+        labels=t["labels"],
+        edges=t["edges"],
+        train_mask=t["train_mask"].astype(bool),
+        test_mask=t["test_mask"].astype(bool),
+        classes=int(meta[2]),
+    )

@@ -1,0 +1,91 @@
+"""L1 — the Pallas LUT-matmul kernel.
+
+The paper's ApproxFlow evaluates approximate multiplication through a
+256x256 look-up table. On TPU the analogue of that hot loop is a
+gather-accumulate matmul: `out[n, m] = sum_k LUT[x[n,k]*256 + w[k,m]]`,
+with the LUT pinned in VMEM (256 KiB as f32 — product magnitudes stay
+below 2^24, so f32 holds them exactly) and (M, N, K) tiles streamed
+HBM->VMEM by BlockSpec.
+
+The kernel MUST run with interpret=True here: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+both the python tests and the rust runtime execute. Real-TPU efficiency
+is estimated from the VMEM footprint / MXU analysis in DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, lut_ref, o_ref, *, n_k_blocks: int):
+    """One (m-block, n-block, k-block) grid step.
+
+    x_ref: [bm, bk] int32 codes; w_ref: [bk, bn] int32 codes;
+    lut_ref: [65536] f32 (whole table, VMEM-resident);
+    o_ref: [bm, bn] f32 accumulator tile.
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    lut = lut_ref[...]
+    idx = x[:, :, None] * 256 + w[None, :, :]  # [bm, bk, bn]
+    o_ref[...] += jnp.take(lut, idx, axis=0).sum(axis=1)
+    del n_k_blocks  # grid handles the loop; kept for signature clarity
+
+
+def lut_matmul(x_codes, w_codes, lut_flat, *, block_m=None, block_n=None, block_k=None):
+    """Tiled Pallas LUT matmul.
+
+    x_codes [N, K] int32, w_codes [K, M] int32, lut_flat [65536] f32.
+    Block sizes default to whole-array (grid 1x1x1) — LeNet's layers are
+    small; benchmarks sweep real tilings. Dimensions must be divisible by
+    the chosen blocks.
+    """
+    n, k = x_codes.shape
+    k2, m = w_codes.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert lut_flat.shape == (65536,)
+    bm = block_m or n
+    bn = block_n or m
+    bk = block_k or k
+    assert n % bm == 0 and m % bn == 0 and k % bk == 0, (
+        f"blocks ({bm},{bn},{bk}) must divide ({n},{m},{k})"
+    )
+    grid = (n // bm, m // bn, k // bk)
+    kernel = functools.partial(_kernel, n_k_blocks=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            # The LUT is replicated to every grid step (index_map -> 0):
+            # on TPU this keeps the table VMEM-resident across steps.
+            pl.BlockSpec((65536,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,  # CPU path; see module docstring
+    )(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32), lut_flat)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM bytes for one grid step (DESIGN.md §Perf): LUT +
+    x tile + w tile + accumulator tile + the gathered intermediate."""
+    lut = 65536 * 4
+    x = block_m * block_k * 4
+    w = block_k * block_n * 4
+    acc = block_m * block_n * 4
+    gathered = block_m * block_k * block_n * 4
+    return lut + x + w + acc + gathered

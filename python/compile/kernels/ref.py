@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the L1 LUT-matmul kernel.
+
+out[n, m] = sum_k LUT[x[n, k] * 256 + w[k, m]]
+
+This is the CORE correctness reference: the Pallas kernel, the rust
+ApproxFlow engine and the AOT-compiled serving graph must all agree with
+it (rust agreement is checked through the exported LUT semantics; python
+agreement via pytest/hypothesis in python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(x_codes, w_codes, lut_flat):
+    """x_codes [N, K] int32 in [0,256), w_codes [K, M] int32, lut_flat
+    [65536] f32. Returns [N, M] f32."""
+    idx = x_codes[:, :, None] * 256 + w_codes[None, :, :]  # [N, K, M]
+    vals = lut_flat[idx]
+    return vals.sum(axis=1)
+
+
+def exact_lut():
+    """The exact multiplication table as f32 (products < 2^24 so f32 is
+    exact)."""
+    x = jnp.arange(256, dtype=jnp.float32)
+    return jnp.outer(x, x).reshape(-1)

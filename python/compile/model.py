@@ -1,0 +1,143 @@
+"""L2 — the quantized LeNet inference graph in JAX.
+
+Builds the serving computation `(images f32[B,C,H,W], lut f32[65536]) ->
+logits f32[B,10]` with trained quantized weights baked in as constants.
+Every multiplication flows through the L1 Pallas LUT-matmul kernel
+(convolutions via im2col), so one AOT artifact serves *any* multiplier —
+swapping the approximate design at serve time is a tensor swap, not a
+recompile.
+
+Integer semantics mirror rust/src/nn/ops.rs (Jacob et al.):
+  acc = sum_k LUT[qx, qw] - zw*sum(qx) - zx*sum(qw) + N*zx*zw + bias_q
+  code = clamp(round(acc * M) + zo), relu folds as max(code, zo).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.lut_matmul import lut_matmul
+from .kernels.ref import lut_matmul_ref
+
+
+def _round_half_away(v):
+    """f32::round semantics (half away from zero), matching rust."""
+    return jnp.sign(v) * jnp.floor(jnp.abs(v) + 0.5)
+
+
+def _requant(acc, m, zo, relu):
+    v = _round_half_away(acc * np.float32(m)).astype(jnp.int32) + zo
+    if relu:
+        v = jnp.maximum(v, zo)
+    return jnp.clip(v, 0, 255)
+
+
+def _im2col(x, kh, kw):
+    """x [B, C, H, W] -> patches [B, OH*OW, C*KH*KW] (stride 1, valid).
+
+    Patch layout matches the rust engine's window order: (c, ky, kx).
+    """
+    b, c, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for ci in range(c):
+        for ky in range(kh):
+            for kx in range(kw):
+                cols.append(x[:, ci, ky : ky + oh, kx : kx + ow].reshape(b, oh * ow))
+    return jnp.stack(cols, axis=-1), oh, ow
+
+
+class QLayer:
+    """One quantized layer's parameters (codes + quant params + bias)."""
+
+    def __init__(self, params: dict[str, np.ndarray], name: str):
+        self.name = name
+        self.w = np.asarray(params[f"{name}.w"])
+        self.bias = np.asarray(params[f"{name}.bias"]).astype(np.int64)
+        self.x_scale = float(params[f"{name}.x_scale"][0])
+        self.x_zp = int(params[f"{name}.x_zp"][0])
+        self.w_scale = float(params[f"{name}.w_scale"][0])
+        self.w_zp = int(params[f"{name}.w_zp"][0])
+        self.out_scale = float(params[f"{name}.out_scale"][0])
+        self.out_zp = int(params[f"{name}.out_zp"][0])
+
+    @property
+    def m(self) -> float:
+        # Match rust: f64 product rounded to f32.
+        return np.float32(
+            np.float64(self.x_scale) * np.float64(self.w_scale) / np.float64(self.out_scale)
+        )
+
+    @property
+    def s_acc(self) -> float:
+        return np.float32(self.x_scale) * np.float32(self.w_scale)
+
+
+def _affine_matmul(x_codes, w_mat, layer: QLayer, lut, use_pallas: bool):
+    """Integer-corrected LUT matmul: x_codes [N, K] u8-as-i32, w_mat [K, M]
+    codes. Returns raw accumulators [N, M] f32 (before bias/requant)."""
+    matmul = lut_matmul if use_pallas else lut_matmul_ref
+    prod = matmul(x_codes, w_mat.astype(jnp.int32), lut)  # [N, M] f32
+    zx, zw = layer.x_zp, layer.w_zp
+    k = x_codes.shape[1]
+    x_sum = x_codes.sum(axis=1, keepdims=True).astype(jnp.float32)  # [N, 1]
+    w_sum = w_mat.sum(axis=0, keepdims=True).astype(jnp.float32)  # [1, M]
+    return prod - zw * x_sum - zx * w_sum + np.float32(k * zx * zw)
+
+
+def lenet_forward(images, lut, params: dict[str, np.ndarray], use_pallas: bool = True):
+    """Full quantized LeNet forward. images f32 [B,C,H,W] in [0,1]."""
+    conv1 = QLayer(params, "conv1")
+    conv2 = QLayer(params, "conv2")
+    fc1 = QLayer(params, "fc1")
+    fc2 = QLayer(params, "fc2")
+    fc3 = QLayer(params, "fc3")
+    b = images.shape[0]
+
+    # Input quantization with conv1's input params.
+    codes = jnp.clip(
+        _round_half_away(images / np.float32(conv1.x_scale)).astype(jnp.int32) + conv1.x_zp,
+        0,
+        255,
+    )
+
+    def conv_block(x_codes, layer: QLayer):
+        # x_codes [B, C, H, W] int32.
+        oc = layer.w.shape[0]
+        patches, oh, ow = _im2col(x_codes, layer.w.shape[2], layer.w.shape[3])
+        n = b * oh * ow
+        k = patches.shape[-1]
+        flat = patches.reshape(n, k)
+        w_mat = jnp.asarray(layer.w.reshape(oc, k).T)  # [K, OC]
+        acc = _affine_matmul(flat, w_mat, layer, lut, use_pallas)
+        acc = acc + jnp.asarray(layer.bias, dtype=jnp.float32)[None, :]
+        out = _requant(acc, layer.m, layer.out_zp, relu=True)
+        return out.reshape(b, oh, ow, oc).transpose(0, 3, 1, 2)
+
+    def pool(x_codes):
+        b_, c_, h_, w_ = x_codes.shape
+        v = x_codes.reshape(b_, c_, h_ // 2, 2, w_ // 2, 2)
+        return v.max(axis=(3, 5))
+
+    x = conv_block(codes, conv1)
+    x = pool(x)
+    x = conv_block(x, conv2)
+    x = pool(x)
+    # Flatten matching rust: [C, H, W] row-major per image.
+    flat = x.reshape(b, -1)
+
+    def dense_block(x_codes, layer: QLayer, relu: bool):
+        w_mat = jnp.asarray(layer.w.T)  # [K, OUT]
+        acc = _affine_matmul(x_codes, w_mat, layer, lut, use_pallas)
+        acc = acc + jnp.asarray(layer.bias, dtype=jnp.float32)[None, :]
+        return _requant(acc, layer.m, layer.out_zp, relu=relu)
+
+    x = dense_block(flat, fc1, relu=True)
+    x = dense_block(x, fc2, relu=True)
+    # Final layer: f32 logits (acc * s_acc), matching rust forward_f32.
+    w_mat = jnp.asarray(fc3.w.T)
+    acc = _affine_matmul(x, w_mat, fc3, lut, use_pallas)
+    acc = acc + jnp.asarray(fc3.bias, dtype=jnp.float32)[None, :]
+    logits = acc * fc3.s_acc
+    return (logits,)

@@ -1,0 +1,51 @@
+"""Affine 8-bit quantization helpers (Jacob et al.) — the python mirror of
+rust/src/nn/quant.rs, used by post-training calibration and the L2 model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    """real = scale * (code - zero_point), codes in [0, 255]."""
+
+    scale: float
+    zero_point: int
+
+    def quantize(self, v: np.ndarray) -> np.ndarray:
+        code = np.round(v / self.scale).astype(np.int64) + self.zero_point
+        return np.clip(code, 0, 255).astype(np.uint8)
+
+    def dequantize(self, code: np.ndarray) -> np.ndarray:
+        return self.scale * (code.astype(np.int64) - self.zero_point).astype(np.float32)
+
+
+def calibrate(lo: float, hi: float) -> QuantParams:
+    """Match rust QuantParams::calibrate: always include 0; 255 steps."""
+    lo = min(float(lo), 0.0)
+    hi = max(float(hi), np.finfo(np.float32).eps)
+    scale = (hi - lo) / 255.0
+    zp = int(np.clip(round(-lo / scale), 0, 255))
+    return QuantParams(scale=scale, zero_point=zp)
+
+
+def calibrate_from(values: np.ndarray) -> QuantParams:
+    return calibrate(float(np.min(values)), float(np.max(values)))
+
+
+def requant(acc: np.ndarray, m: float, zo: int, relu: bool) -> np.ndarray:
+    """Accumulator -> u8 code, matching rust nn::ops::requant.
+
+    Rust uses f32::round (half away from zero); numpy's np.round is
+    half-to-even, so emulate the rust behaviour explicitly.
+    """
+    scaled = acc.astype(np.float64) * np.float32(m)
+    v = np.floor(np.abs(scaled) + 0.5) * np.sign(scaled)
+    v = v.astype(np.int64) + zo
+    if relu:
+        v = np.maximum(v, zo)
+    return np.clip(v, 0, 255).astype(np.uint8)

@@ -1,0 +1,88 @@
+"""Tensor-bundle ("HTB1") binary IO — the python mirror of
+rust/src/util/tensor_io.rs. Both sides read/write the same files so
+train-time (python) and eval-time (rust) artifacts are bit-identical.
+
+Format: b"HTB1" | u32 count | per tensor:
+u32 name_len | name | u8 dtype | u32 ndim | ndim*u32 dims | u64 byte_len |
+raw little-endian data.  dtype tags: 0=f32, 1=i32, 2=u8, 3=i64.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"HTB1"
+
+_DTYPES = {
+    0: np.dtype("<f4"),
+    1: np.dtype("<i4"),
+    2: np.dtype("u1"),
+    3: np.dtype("<i8"),
+}
+_TAGS = {v: k for k, v in _DTYPES.items()}
+
+
+def _tag_for(arr: np.ndarray) -> int:
+    dt = np.dtype(arr.dtype).newbyteorder("<")
+    for tag, cand in _DTYPES.items():
+        if cand == dt:
+            return tag
+    raise TypeError(f"unsupported dtype {arr.dtype} (use f32/i32/u8/i64)")
+
+
+def save(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    """Write a bundle. Keys are sorted for deterministic output (matching
+    the rust BTreeMap ordering)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", len(tensors))
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        tag = _tag_for(arr)
+        data = arr.astype(_DTYPES[tag], copy=False).tobytes()
+        out += struct.pack("<I", len(name.encode()))
+        out += name.encode()
+        out += struct.pack("<B", tag)
+        out += struct.pack("<I", arr.ndim)
+        for d in arr.shape:
+            out += struct.pack("<I", d)
+        out += struct.pack("<Q", len(data))
+        out += data
+    path.write_bytes(bytes(out))
+
+
+def load(path: str | Path) -> dict[str, np.ndarray]:
+    """Read a bundle into {name: ndarray}."""
+    buf = Path(path).read_bytes()
+    if buf[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {buf[:4]!r}")
+    pos = 4
+    (count,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        name = buf[pos : pos + name_len].decode()
+        pos += name_len
+        (tag,) = struct.unpack_from("<B", buf, pos)
+        pos += 1
+        (ndim,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        shape = struct.unpack_from(f"<{ndim}I", buf, pos)
+        pos += 4 * ndim
+        (nbytes,) = struct.unpack_from("<Q", buf, pos)
+        pos += 8
+        dt = _DTYPES[tag]
+        expected = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if ndim else dt.itemsize
+        if ndim and nbytes != expected:
+            raise ValueError(f"{name}: {nbytes} bytes vs shape {shape} x {dt}")
+        arr = np.frombuffer(buf[pos : pos + nbytes], dtype=dt).reshape(shape)
+        pos += nbytes
+        out[name] = arr.copy()
+    return out

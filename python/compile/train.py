@@ -1,0 +1,460 @@
+"""Float training (JAX fwd/bwd) + post-training quantization + export.
+
+For each image dataset: trains LeNet (conv 6@5x5 - pool - conv 16@5x5 -
+pool - fc120 - fc84 - fc10, ReLU) in f32 with SGD+momentum, calibrates
+the Jacob-style affine quantization on training activations, simulates
+the quantized network in numpy (the exact integer semantics of the rust
+engine) to report accuracy and extract the per-layer operand histograms
+(Fig. 1), then exports:
+
+  artifacts/weights/<name>.htb  — quantized weight bundle (rust schema)
+  artifacts/dist/<name>.json    — per-layer operand distributions
+
+For the CORA substitute it trains the 2-layer GCN the same way.
+
+Usage: python -m compile.train [--datasets digits,fashion,cifar,cora]
+                               [--epochs 12] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, tensor_io
+from .quant import QuantParams, calibrate_from, requant
+
+ROOT = Path(__file__).resolve().parents[2]
+WEIGHTS_DIR = ROOT / "artifacts" / "weights"
+DIST_DIR = ROOT / "artifacts" / "dist"
+
+LAYERS = ["conv1", "conv2", "fc1", "fc2", "fc3"]
+
+
+# --------------------------------------------------------------------------
+# Float LeNet
+# --------------------------------------------------------------------------
+
+def init_lenet(key, channels: int, hw: int):
+    ks = jax.random.split(key, 5)
+    c1 = hw - 4
+    p1 = c1 // 2
+    c2 = p1 - 4
+    p2 = c2 // 2
+    flat = 16 * p2 * p2
+
+    def glorot(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1.w": glorot(ks[0], (6, channels, 5, 5), channels * 25),
+        "conv1.b": jnp.zeros(6),
+        "conv2.w": glorot(ks[1], (16, 6, 5, 5), 6 * 25),
+        "conv2.b": jnp.zeros(16),
+        "fc1.w": glorot(ks[2], (120, flat), flat),
+        "fc1.b": jnp.zeros(120),
+        "fc2.w": glorot(ks[3], (84, 120), 120),
+        "fc2.b": jnp.zeros(84),
+        "fc3.w": glorot(ks[4], (10, 84), 84),
+        "fc3.b": jnp.zeros(10),
+    }
+
+
+def lenet_float(params, x, capture: dict | None = None):
+    """x [B, C, H, W] f32. Optionally captures per-layer inputs/outputs
+    for calibration."""
+
+    def rec(name, arr):
+        if capture is not None:
+            capture[name] = np.asarray(arr)
+
+    def conv(x, name):
+        rec(f"{name}.in", x)
+        out = jax.lax.conv_general_dilated(
+            x, params[f"{name}.w"], (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        ) + params[f"{name}.b"][None, :, None, None]
+        out = jax.nn.relu(out)
+        rec(f"{name}.out", out)
+        return out
+
+    def pool(x):
+        b, c, h, w = x.shape
+        return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+    x = pool(conv(x, "conv1"))
+    x = pool(conv(x, "conv2"))
+    x = x.reshape(x.shape[0], -1)
+
+    def dense(x, name, relu):
+        rec(f"{name}.in", x)
+        out = x @ params[f"{name}.w"].T + params[f"{name}.b"]
+        if relu:
+            out = jax.nn.relu(out)
+        rec(f"{name}.out", out)
+        return out
+
+    x = dense(x, "fc1", True)
+    x = dense(x, "fc2", True)
+    return dense(x, "fc3", False)
+
+
+def train_lenet(ds, epochs: int, seed: int = 0, lr: float = 0.08, batch: int = 128):
+    key = jax.random.PRNGKey(seed)
+    channels, hw = ds.train_x.shape[1], ds.train_x.shape[2]
+    params = init_lenet(key, channels, hw)
+    momentum = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, x, y):
+        logits = lenet_float(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(x.shape[0]), y].mean()
+
+    @jax.jit
+    def step(p, mom, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        mom = jax.tree.map(lambda m, g: 0.9 * m + g, mom, grads)
+        p = jax.tree.map(lambda w, m: w - lr * m, p, mom)
+        return p, mom, loss
+
+    n = ds.train_x.shape[0]
+    rng = np.random.default_rng(seed)
+    steps_per_epoch = n // batch
+    loss_curve = []
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        epoch_loss = 0.0
+        cur_lr = lr * (0.6 ** (epoch // 4))
+        for s in range(steps_per_epoch):
+            idx = order[s * batch : (s + 1) * batch]
+            params, momentum, loss = step(
+                params, momentum, ds.train_x[idx], ds.train_y[idx].astype(np.int32), cur_lr
+            )
+            epoch_loss += float(loss)
+        loss_curve.append(epoch_loss / steps_per_epoch)
+        print(f"  epoch {epoch + 1}/{epochs}: loss {loss_curve[-1]:.4f}", flush=True)
+    return params, loss_curve
+
+
+def float_accuracy(params, xs, ys, batch=256):
+    correct = 0
+    for i in range(0, len(ys), batch):
+        logits = lenet_float(params, xs[i : i + batch])
+        correct += int((np.argmax(np.asarray(logits), axis=1) == ys[i : i + batch]).sum())
+    return correct / len(ys)
+
+
+# --------------------------------------------------------------------------
+# Post-training quantization (rust-schema export)
+# --------------------------------------------------------------------------
+
+def quantize_lenet(params, ds, calib_images: int = 512):
+    """Calibrate ranges on training activations and build the quantized
+    bundle (rust nn::lenet schema)."""
+    capture: dict = {}
+    _ = lenet_float(params, ds.train_x[:calib_images], capture)
+    bundle: dict[str, np.ndarray] = {}
+    qp: dict[str, dict[str, QuantParams]] = {}
+    for name in LAYERS:
+        w = np.asarray(params[f"{name}.w"])
+        b = np.asarray(params[f"{name}.b"])
+        w_q = calibrate_from(w)
+        x_q = calibrate_from(capture[f"{name}.in"])
+        out_q = calibrate_from(capture[f"{name}.out"])
+        qp[name] = {"x": x_q, "w": w_q, "out": out_q}
+        codes = w_q.quantize(w)
+        bias_q = np.round(b / (x_q.scale * w_q.scale)).astype(np.int64)
+        bundle[f"{name}.w"] = codes
+        bundle[f"{name}.bias"] = bias_q
+        for kind, q in (("x", x_q), ("w", w_q), ("out", out_q)):
+            bundle[f"{name}.{kind}_scale"] = np.array([q.scale], np.float32)
+            bundle[f"{name}.{kind}_zp"] = np.array([q.zero_point], np.int32)
+    return bundle, qp
+
+
+# --------------------------------------------------------------------------
+# Quantized simulation (numpy; integer semantics == rust engine)
+# --------------------------------------------------------------------------
+
+def _im2col_np(x, kh, kw):
+    b, c, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = np.empty((b, oh * ow, c * kh * kw), dtype=np.int64)
+    i = 0
+    for ci in range(c):
+        for ky in range(kh):
+            for kx in range(kw):
+                cols[:, :, i] = x[:, ci, ky : ky + oh, kx : kx + ow].reshape(b, oh * ow)
+                i += 1
+    return cols, oh, ow
+
+
+def quantized_forward_np(bundle, images, collect: dict | None = None):
+    """Exact-integer quantized forward (exact multiplier). Returns logits.
+    `collect` accumulates per-layer operand histograms + mult counts."""
+
+    def record(name, x_codes, k_mults):
+        if collect is None:
+            return
+        ent = collect.setdefault(name, {"x": np.zeros(256, np.int64), "mults": 0})
+        ent["x"] += np.bincount(x_codes.reshape(-1).astype(np.int64), minlength=256)
+        ent["mults"] += int(k_mults)
+
+    def layer_q(name):
+        return (
+            bundle[f"{name}.w"],
+            bundle[f"{name}.bias"].astype(np.int64),
+            QuantParams(float(bundle[f"{name}.x_scale"][0]), int(bundle[f"{name}.x_zp"][0])),
+            QuantParams(float(bundle[f"{name}.w_scale"][0]), int(bundle[f"{name}.w_zp"][0])),
+            QuantParams(float(bundle[f"{name}.out_scale"][0]), int(bundle[f"{name}.out_zp"][0])),
+        )
+
+    w1, _, x_q1, _, _ = layer_q("conv1")
+    del w1
+    codes = x_q1.quantize(images)
+
+    def conv(x_codes, name):
+        w, bias, x_q, w_q, out_q = layer_q(name)
+        oc = w.shape[0]
+        k = int(np.prod(w.shape[1:]))
+        cols, oh, ow = _im2col_np(x_codes.astype(np.int64), w.shape[2], w.shape[3])
+        record(name, x_codes, cols.shape[0] * cols.shape[1] * k * oc)
+        wm = w.reshape(oc, k).astype(np.int64).T  # [K, OC]
+        prod = cols @ wm  # exact integer matmul on codes
+        x_sum = cols.sum(axis=2, keepdims=True)
+        w_sum = wm.sum(axis=0)[None, None, :]
+        acc = prod - w_q.zero_point * x_sum - x_q.zero_point * w_sum + k * x_q.zero_point * w_q.zero_point
+        acc = acc + bias[None, None, :]
+        m = np.float32(np.float64(x_q.scale) * np.float64(w_q.scale) / np.float64(out_q.scale))
+        out = requant(acc, m, out_q.zero_point, relu=True)
+        b = x_codes.shape[0]
+        return out.reshape(b, oh, ow, oc).transpose(0, 3, 1, 2)
+
+    def pool(x):
+        b, c, h, w = x.shape
+        return x.reshape(b, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+    x = pool(conv(codes, "conv1"))
+    x = pool(conv(x, "conv2"))
+    flat = x.reshape(x.shape[0], -1).astype(np.int64)
+
+    def dense(x_codes, name, relu, logits=False):
+        w, bias, x_q, w_q, out_q = layer_q(name)
+        record(name, x_codes, x_codes.shape[0] * w.shape[0] * w.shape[1])
+        wm = w.astype(np.int64).T
+        prod = x_codes @ wm
+        x_sum = x_codes.sum(axis=1, keepdims=True)
+        w_sum = wm.sum(axis=0)[None, :]
+        k = w.shape[1]
+        acc = prod - w_q.zero_point * x_sum - x_q.zero_point * w_sum + k * x_q.zero_point * w_q.zero_point
+        acc = acc + bias[None, :]
+        if logits:
+            return acc.astype(np.float64) * (np.float32(x_q.scale) * np.float32(w_q.scale))
+        m = np.float32(np.float64(x_q.scale) * np.float64(w_q.scale) / np.float64(out_q.scale))
+        return requant(acc, m, out_q.zero_point, relu=relu).astype(np.int64)
+
+    x = dense(flat, "fc1", True)
+    x = dense(x, "fc2", True)
+    return dense(x, "fc3", False, logits=True)
+
+
+def quantized_accuracy(bundle, xs, ys, batch=256, collect=None):
+    correct = 0
+    for i in range(0, len(ys), batch):
+        logits = quantized_forward_np(bundle, xs[i : i + batch], collect)
+        correct += int((np.argmax(logits, axis=1) == ys[i : i + batch]).sum())
+    return correct / len(ys)
+
+
+def export_distributions(name, bundle, collect):
+    """Write the rust-schema distribution JSON: per-layer x histograms from
+    the quantized simulation + weight-code histograms."""
+    layers = []
+    for lname in LAYERS:
+        w_hist = np.bincount(bundle[f"{lname}.w"].reshape(-1), minlength=256)
+        ent = collect.get(lname)
+        if ent is None:
+            continue
+        layers.append(
+            {
+                "name": lname,
+                "mults": int(ent["mults"]),
+                "x": [float(v) for v in ent["x"]],
+                "y": [float(v) for v in w_hist],
+            }
+        )
+    DIST_DIR.mkdir(parents=True, exist_ok=True)
+    path = DIST_DIR / f"{name}.json"
+    path.write_text(json.dumps({"model": f"lenet-{name}", "layers": layers}))
+    return path
+
+
+# --------------------------------------------------------------------------
+# GCN (CORA substitute)
+# --------------------------------------------------------------------------
+
+def norm_adj(num_nodes, edges):
+    deg = np.ones(num_nodes, np.float64)
+    for a, b in edges:
+        deg[a] += 1
+        deg[b] += 1
+    inv = 1.0 / np.sqrt(deg)
+    rows = [np.arange(num_nodes)]
+    cols = [np.arange(num_nodes)]
+    vals = [inv * inv]
+    for a, b in edges:
+        rows += [[a], [b]]
+        cols += [[b], [a]]
+        vals += [[inv[a] * inv[b]], [inv[a] * inv[b]]]
+    rows = np.concatenate(rows)
+    cols = np.concatenate(cols)
+    vals = np.concatenate(vals)
+    a_dense = np.zeros((num_nodes, num_nodes), np.float32)
+    a_dense[rows.astype(int), cols.astype(int)] = vals.astype(np.float32)
+    return a_dense
+
+
+def train_gcn(g, hidden=32, epochs=400, lr=0.02, seed=0):
+    """Full-batch Adam training. The row-normalized bag-of-words features
+    are tiny (rows sum to 1 over 512 dims), so they are rescaled x8 for
+    conditioning; the scale is folded back out at quantization time (the
+    quantized model consumes the *original* features)."""
+    feat_scale = 8.0
+    key = jax.random.PRNGKey(seed)
+    k0, k1 = jax.random.split(key)
+    f = g.features.shape[1]
+    params = {
+        "w0": jax.random.normal(k0, (f, hidden), jnp.float32) * np.sqrt(2.0 / f),
+        "w1": jax.random.normal(k1, (hidden, g.classes), jnp.float32) * np.sqrt(2.0 / hidden),
+    }
+    adj = jnp.asarray(norm_adj(len(g.labels), g.edges))
+    feats = jnp.asarray(g.features) * feat_scale
+    labels = jnp.asarray(g.labels.astype(np.int32))
+    train_mask = jnp.asarray(g.train_mask)
+
+    def fwd(p, feats_in):
+        h = jax.nn.relu(adj @ (feats_in @ p["w0"]))
+        return adj @ (h @ p["w1"]), h
+
+    def loss_fn(p):
+        logits, _ = fwd(p, feats)
+        logp = jax.nn.log_softmax(logits)
+        nll = -logp[jnp.arange(logits.shape[0]), labels]
+        return (nll * train_mask).sum() / train_mask.sum()
+
+    # Adam.
+    m_state = jax.tree.map(jnp.zeros_like, params)
+    v_state = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(p, m, v, t):
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        m = jax.tree.map(lambda a, gr: 0.9 * a + 0.1 * gr, m, grads)
+        v = jax.tree.map(lambda a, gr: 0.999 * a + 0.001 * gr * gr, v, grads)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(lambda w, a, b: w - lr * a / (jnp.sqrt(b) + 1e-8), p, mh, vh)
+        return p, m, v, loss
+
+    for e in range(epochs):
+        params, m_state, v_state, loss = step(params, m_state, v_state, e + 1.0)
+        if (e + 1) % 100 == 0:
+            print(f"  gcn epoch {e + 1}: loss {float(loss):.4f}", flush=True)
+    # Fold the feature scale into w0 so downstream consumers use the raw
+    # features: (s*X) W0 == X (s*W0).
+    params = {"w0": params["w0"] * feat_scale, "w1": params["w1"]}
+    logits, hidden_act = fwd(params, jnp.asarray(g.features))
+    return params, np.asarray(logits), np.asarray(hidden_act), np.asarray(adj)
+
+
+def quantize_gcn(g, params, hidden_act):
+    feats = g.features
+    bundle = {}
+    specs = [
+        ("gcn0", feats, np.asarray(params["w0"]), hidden_act),
+        ("gcn1", hidden_act, np.asarray(params["w1"]), None),
+    ]
+    for name, x_vals, w, out_vals in specs:
+        x_q = calibrate_from(x_vals)
+        w_q = calibrate_from(w)
+        bundle[f"{name}.w"] = w_q.quantize(w)
+        bundle[f"{name}.x_scale"] = np.array([x_q.scale], np.float32)
+        bundle[f"{name}.x_zp"] = np.array([x_q.zero_point], np.int32)
+        bundle[f"{name}.w_scale"] = np.array([w_q.scale], np.float32)
+        bundle[f"{name}.w_zp"] = np.array([w_q.zero_point], np.int32)
+        if out_vals is not None:
+            out_q = calibrate_from(out_vals)
+            bundle[f"{name}.out_scale"] = np.array([out_q.scale], np.float32)
+            bundle[f"{name}.out_zp"] = np.array([out_q.zero_point], np.int32)
+    return bundle
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+SEEDS = {"digits": 11, "fashion": 22, "cifar": 33}
+LRS = {"digits": 0.08, "fashion": 0.08, "cifar": 0.03}
+
+
+def run_image_dataset(name: str, epochs: int):
+    print(f"=== {name} ===", flush=True)
+    ds = datasets.load_images(name)
+    t0 = time.time()
+    params, loss_curve = train_lenet(
+        ds, epochs=epochs, seed=SEEDS.get(name, 7), lr=LRS.get(name, 0.05)
+    )
+    facc = float_accuracy(params, ds.test_x, ds.test_y)
+    print(f"  float accuracy: {facc * 100:.2f}%  ({time.time() - t0:.0f}s)", flush=True)
+    bundle, _ = quantize_lenet(params, ds)
+    collect: dict = {}
+    qacc = quantized_accuracy(bundle, ds.test_x[:1000], ds.test_y[:1000], collect=collect)
+    print(f"  quantized (exact-mult) accuracy: {qacc * 100:.2f}%", flush=True)
+    WEIGHTS_DIR.mkdir(parents=True, exist_ok=True)
+    tensor_io.save(WEIGHTS_DIR / f"{name}.htb", bundle)
+    dist_path = export_distributions(name, bundle, collect)
+    print(f"  wrote {WEIGHTS_DIR / f'{name}.htb'} and {dist_path}", flush=True)
+    # Loss curve for EXPERIMENTS.md.
+    (DIST_DIR / f"{name}_loss.json").write_text(json.dumps(loss_curve))
+    return facc, qacc
+
+
+def run_cora():
+    print("=== cora ===", flush=True)
+    g = datasets.load_graph("cora")
+    params, logits, hidden_act, _ = train_gcn(g)
+    pred = np.argmax(logits, axis=1)
+    facc = float((pred[g.test_mask] == g.labels[g.test_mask]).mean())
+    print(f"  float accuracy: {facc * 100:.2f}%", flush=True)
+    bundle = quantize_gcn(g, params, hidden_act)
+    tensor_io.save(WEIGHTS_DIR / "cora.htb", bundle)
+    print(f"  wrote {WEIGHTS_DIR / 'cora.htb'}", flush=True)
+    return facc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="digits,fashion,cifar,cora")
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--quick", action="store_true", help="2 epochs (CI smoke)")
+    args = ap.parse_args()
+    epochs = 2 if args.quick else args.epochs
+    results = {}
+    for name in args.datasets.split(","):
+        name = name.strip()
+        if name == "cora":
+            results[name] = run_cora()
+        else:
+            results[name] = run_image_dataset(name, epochs)
+    print("summary:", results, flush=True)
+
+
+if __name__ == "__main__":
+    main()

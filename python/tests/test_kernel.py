@@ -1,0 +1,86 @@
+"""L1 kernel correctness: Pallas LUT-matmul vs the pure-jnp oracle, swept
+over shapes/tilings/LUT contents with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lut_matmul import lut_matmul, vmem_footprint_bytes
+from compile.kernels.ref import exact_lut, lut_matmul_ref
+
+
+def random_codes(rng, shape):
+    return rng.integers(0, 256, shape).astype(np.int32)
+
+
+def test_exact_lut_is_multiplication():
+    lut = np.asarray(exact_lut())
+    assert lut.shape == (65536,)
+    for x, y in [(0, 0), (255, 255), (17, 93), (128, 128)]:
+        assert lut[x * 256 + y] == x * y
+
+
+def test_ref_matches_integer_matmul():
+    rng = np.random.default_rng(1)
+    x, w = random_codes(rng, (9, 31)), random_codes(rng, (31, 7))
+    out = np.asarray(lut_matmul_ref(jnp.asarray(x), jnp.asarray(w), exact_lut()))
+    np.testing.assert_array_equal(out.astype(np.int64), x.astype(np.int64) @ w.astype(np.int64))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    k=st.integers(1, 48),
+    m=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_matches_ref_fullblock(n, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x, w = random_codes(rng, (n, k)), random_codes(rng, (k, m))
+    lut = exact_lut()
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w), lut))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(x), jnp.asarray(w), lut))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bm=st.sampled_from([2, 4, 8]),
+    bn=st.sampled_from([2, 4, 8]),
+    bk=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_tilings_agree(bm, bn, bk, seed):
+    n, m, k = 8, 8, 16
+    rng = np.random.default_rng(seed)
+    x, w = random_codes(rng, (n, k)), random_codes(rng, (k, m))
+    lut = exact_lut()
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w), lut, block_m=bm, block_n=bn, block_k=bk))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(x), jnp.asarray(w), lut))
+    np.testing.assert_allclose(got, want)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pallas_with_approximate_lut(seed):
+    """An arbitrary (signed) LUT must flow through identically — this is
+    what serving an approximate multiplier means."""
+    rng = np.random.default_rng(seed)
+    x, w = random_codes(rng, (5, 10)), random_codes(rng, (10, 4))
+    lut = rng.integers(-(2**15), 2**15, 65536).astype(np.float32)
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(lut)))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(lut)))
+    np.testing.assert_allclose(got, want)
+
+
+def test_block_divisibility_enforced():
+    rng = np.random.default_rng(2)
+    x, w = random_codes(rng, (6, 6)), random_codes(rng, (6, 6))
+    with pytest.raises(AssertionError):
+        lut_matmul(jnp.asarray(x), jnp.asarray(w), exact_lut(), block_m=4)
+
+
+def test_vmem_footprint_under_budget():
+    """The DESIGN.md tiling must fit comfortably in 16 MiB VMEM."""
+    assert vmem_footprint_bytes(32, 128, 64) < 16 * 2**20 // 2

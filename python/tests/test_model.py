@@ -1,0 +1,93 @@
+"""L2 model tests: the quantized-LeNet serving graph (Pallas path and jnp
+reference path) vs the numpy integer simulation used at training time."""
+
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import tensor_io
+from compile.kernels.ref import exact_lut
+from compile.model import lenet_forward
+from compile.train import quantized_forward_np
+
+ROOT = Path(__file__).resolve().parents[2]
+
+
+def random_bundle(channels=1, hw=28, seed=0):
+    """Random (untrained) quantized LeNet bundle matching the rust schema
+    (mirrors rust nn::lenet::random_bundle)."""
+    rng = np.random.default_rng(seed)
+    c1 = hw - 4
+    p1 = c1 // 2
+    c2 = p1 - 4
+    p2 = c2 // 2
+    flat = 16 * p2 * p2
+    dims = {
+        "conv1": (6, channels, 5, 5),
+        "conv2": (16, 6, 5, 5),
+        "fc1": (120, flat),
+        "fc2": (84, 120),
+        "fc3": (10, 84),
+    }
+    b = {}
+    for name, shape in dims.items():
+        b[f"{name}.w"] = np.clip(rng.normal(128, 20, shape), 0, 255).astype(np.uint8)
+        b[f"{name}.bias"] = np.zeros(shape[0], np.int64)
+        for kind, scale, zp in [("x", 1 / 255, 0), ("w", 0.004, 128), ("out", 1 / 255, 0)]:
+            b[f"{name}.{kind}_scale"] = np.array([scale], np.float32)
+            b[f"{name}.{kind}_zp"] = np.array([zp], np.int32)
+    return b
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    trained = ROOT / "artifacts/weights/digits.htb"
+    if trained.exists():
+        return tensor_io.load(trained)
+    return random_bundle()
+
+
+def test_jnp_ref_matches_numpy_sim(bundle):
+    rng = np.random.default_rng(3)
+    channels = bundle["conv1.w"].shape[1]
+    hw = 28 if channels == 1 else 32
+    images = rng.random((2, channels, hw, hw), dtype=np.float32)
+    (logits_jnp,) = lenet_forward(jnp.asarray(images), exact_lut(), bundle, use_pallas=False)
+    logits_np = quantized_forward_np(bundle, images)
+    np.testing.assert_allclose(np.asarray(logits_jnp), logits_np, rtol=1e-4, atol=1e-3)
+
+
+def test_pallas_path_matches_ref_path(bundle):
+    rng = np.random.default_rng(4)
+    channels = bundle["conv1.w"].shape[1]
+    hw = 28 if channels == 1 else 32
+    images = rng.random((2, channels, hw, hw), dtype=np.float32)
+    lut = exact_lut()
+    (a,) = lenet_forward(jnp.asarray(images), lut, bundle, use_pallas=True)
+    (b,) = lenet_forward(jnp.asarray(images), lut, bundle, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_approximate_lut_changes_logits(bundle):
+    """Swapping in a biased LUT must perturb the output — the whole point
+    of the LUT-as-input design."""
+    rng = np.random.default_rng(5)
+    channels = bundle["conv1.w"].shape[1]
+    hw = 28 if channels == 1 else 32
+    images = rng.random((1, channels, hw, hw), dtype=np.float32)
+    exact = exact_lut()
+    biased = np.asarray(exact).copy()
+    biased[biased > 0] *= 0.5  # halve all nonzero products
+    (a,) = lenet_forward(jnp.asarray(images), exact, bundle, use_pallas=False)
+    (b,) = lenet_forward(jnp.asarray(images), jnp.asarray(biased), bundle, use_pallas=False)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_logit_shape(bundle):
+    channels = bundle["conv1.w"].shape[1]
+    hw = 28 if channels == 1 else 32
+    images = np.zeros((3, channels, hw, hw), np.float32)
+    (logits,) = lenet_forward(jnp.asarray(images), exact_lut(), bundle, use_pallas=False)
+    assert logits.shape == (3, 10)

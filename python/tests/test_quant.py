@@ -1,0 +1,61 @@
+"""Quantization helpers: python/rust semantic parity properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import QuantParams, calibrate, calibrate_from, requant
+
+
+def test_zero_is_exact():
+    for lo, hi in [(-1.0, 1.0), (0.0, 4.0), (-3.0, 0.5)]:
+        q = calibrate(lo, hi)
+        assert q.dequantize(q.quantize(np.array([0.0]))) == 0.0
+
+
+def test_relu_range_zero_zp():
+    q = calibrate(0.0, 8.0)
+    assert q.zero_point == 0
+    assert q.quantize(np.array([8.0]))[0] == 255
+
+
+def test_symmetric_weights_center_near_128():
+    q = calibrate(-0.5, 0.5)
+    assert abs(q.zero_point - 128) <= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    lo=st.floats(-10, -0.01),
+    hi=st.floats(0.01, 10),
+    v=st.floats(-10, 10),
+)
+def test_roundtrip_error_bounded(lo, hi, v):
+    q = calibrate(lo, hi)
+    v = float(np.clip(v, lo, hi))
+    back = float(q.dequantize(q.quantize(np.array([v])))[0])
+    assert abs(back - v) <= q.scale * 0.51
+
+
+def test_requant_matches_rust_rounding():
+    """rust f32::round is half-away-from-zero; np.round is half-even —
+    requant must follow rust. acc=5, m=0.1 -> 0.5 -> rounds to 1 (not 0)."""
+    out = requant(np.array([5], dtype=np.int64), 0.1, 0, relu=False)
+    assert out[0] == 1
+    out = requant(np.array([-5], dtype=np.int64), 0.1, 10, relu=False)
+    assert out[0] == 9  # -0.5 -> -1 away from zero
+    # relu clamps at the zero point.
+    out = requant(np.array([-100], dtype=np.int64), 0.1, 10, relu=True)
+    assert out[0] == 10
+
+
+def test_calibrate_from_array():
+    q = calibrate_from(np.array([0.1, -0.2, 3.0]))
+    assert q.quantize(np.array([3.0]))[0] == 255
+    assert q.quantize(np.array([-99.0]))[0] == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-(2**30), 2**30), st.floats(1e-6, 1.0))
+def test_requant_saturates(acc, m):
+    out = requant(np.array([acc], dtype=np.int64), m, 128, relu=False)
+    assert 0 <= out[0] <= 255

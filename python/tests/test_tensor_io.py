@@ -1,0 +1,56 @@
+"""Tensor-bundle IO: python<->python roundtrips and cross-language parity
+with rust-generated bundles (artifacts/data, when present)."""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import tensor_io
+
+ROOT = Path(__file__).resolve().parents[2]
+
+
+def test_roundtrip_all_dtypes(tmp_path):
+    tensors = {
+        "f": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "i": np.array([-5, 100000], dtype=np.int32),
+        "u": np.array([0, 128, 255], dtype=np.uint8),
+        "l": np.array([np.iinfo(np.int64).min], dtype=np.int64),
+    }
+    p = tmp_path / "t.htb"
+    tensor_io.save(p, tensors)
+    back = tensor_io.load(p)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(back[k], v)
+        assert back[k].dtype == v.dtype
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.htb"
+    p.write_bytes(b"nope")
+    with pytest.raises(ValueError):
+        tensor_io.load(p)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        tensor_io.save(tmp_path / "x.htb", {"d": np.zeros(2, dtype=np.float64)})
+
+
+@pytest.mark.skipif(
+    not (ROOT / "artifacts/data/digits.htb").exists(),
+    reason="run `heam gen-data` first",
+)
+def test_reads_rust_generated_dataset():
+    t = tensor_io.load(ROOT / "artifacts/data/digits.htb")
+    assert t["train_x"].ndim == 4
+    assert t["train_x"].shape[1:] == (1, 28, 28)
+    assert t["train_x"].dtype == np.float32
+    assert t["train_y"].dtype == np.uint8
+    assert t["meta"].tolist() == [1, 28, 28, 10]
+    # Pixels normalized.
+    assert 0.0 <= float(t["train_x"].min()) and float(t["train_x"].max()) <= 1.0
+    # Balanced labels.
+    counts = np.bincount(t["train_y"], minlength=10)
+    assert counts.min() > 0 and counts.max() - counts.min() <= 1

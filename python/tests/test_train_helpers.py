@@ -1,0 +1,62 @@
+"""Training-pipeline helpers: im2col layouts, adjacency normalization,
+and the quantized numpy simulation's internal consistency."""
+
+import numpy as np
+import pytest
+
+from compile.train import _im2col_np, norm_adj, quantized_forward_np
+from compile.model import _im2col
+
+import jax.numpy as jnp
+
+
+def test_im2col_np_matches_jnp_layout():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, (2, 3, 6, 6)).astype(np.int32)
+    np_cols, oh, ow = _im2col_np(x, 3, 3)
+    jnp_cols, oh2, ow2 = _im2col(jnp.asarray(x), 3, 3)
+    assert (oh, ow) == (oh2, ow2) == (4, 4)
+    np.testing.assert_array_equal(np_cols, np.asarray(jnp_cols))
+
+
+def test_im2col_window_order_is_c_ky_kx():
+    # One-hot input pins the exact patch layout the rust engine expects.
+    x = np.zeros((1, 2, 4, 4), np.int32)
+    x[0, 1, 2, 3] = 7  # channel 1, y=2, x=3
+    cols, oh, ow = _im2col_np(x, 3, 3)
+    # Output position (oy=0, ox=1): window covers y 0..2, x 1..3 ->
+    # ky=2, kx=2, c=1 -> index c*9 + ky*3 + kx = 9 + 6 + 2 = 17.
+    assert cols[0, 0 * ow + 1, 17] == 7
+    # All other entries for that position are 0.
+    assert cols[0, 0 * ow + 1].sum() == 7
+
+
+def test_norm_adj_symmetric_and_normalized():
+    edges = np.array([[0, 1], [1, 2], [2, 3]])
+    a = norm_adj(4, edges)
+    np.testing.assert_allclose(a, a.T, atol=1e-7)
+    # Self-loops present.
+    assert (np.diag(a) > 0).all()
+    # Spectral radius of D^-1/2 (A+I) D^-1/2 is <= 1.
+    eig = np.linalg.eigvalsh(a.astype(np.float64))
+    assert eig.max() <= 1.0 + 1e-6
+
+
+def test_quantized_forward_rejects_bad_shapes():
+    from tests.test_model import random_bundle
+
+    b = random_bundle()
+    with pytest.raises(Exception):
+        quantized_forward_np(b, np.zeros((1, 1, 10, 10), np.float32))
+
+
+def test_quantized_forward_batch_invariance():
+    """Per-image results must not depend on batch composition."""
+    from tests.test_model import random_bundle
+
+    b = random_bundle(seed=5)
+    rng = np.random.default_rng(1)
+    imgs = rng.random((3, 1, 28, 28), dtype=np.float32)
+    full = quantized_forward_np(b, imgs)
+    single = np.concatenate([quantized_forward_np(b, imgs[i : i + 1]) for i in range(3)])
+    np.testing.assert_allclose(full, single, rtol=0, atol=0)

@@ -1,0 +1,143 @@
+//! Ablation studies for the design choices called out in DESIGN.md §7:
+//!
+//! 1. `Cons(θ)` λ1/λ2 sweep — term count vs weighted error trade-off.
+//! 2. Compressed-row count (3 vs 4 vs 5 rows).
+//! 3. Fine-tune (OR-merge) on/off — packed rows vs error.
+//! 4. Dynamic batcher: batch-size / wait sweep on the native backend.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use heam::coordinator::server::{ServeConfig, Server};
+use heam::cost::asic;
+use heam::mult::Lut;
+use heam::nn::{lenet, multiplier::Multiplier};
+use heam::opt::{self, DistSet, GaConfig};
+
+fn main() {
+    let ds = DistSet::load("artifacts/dist/digits.json")
+        .unwrap_or_else(|_| DistSet::synthetic_lenet_like());
+    let (px, py) = ds.aggregate();
+
+    let ga = |obj: &opt::Objective| -> opt::GaResult {
+        opt::ga::run(
+            obj,
+            &GaConfig {
+                population: 24,
+                generations: 40,
+                ..Default::default()
+            },
+        )
+    };
+
+    // ---- 1. lambda sweep ----
+    println!("## Cons(theta) lambda sweep (lambda2 = lambda1/100)\n");
+    println!("{:>10} {:>7} {:>12} {:>12} {:>10}", "lambda1", "terms", "E(weighted)", "area um2", "rows");
+    for lambda1 in [0.0, 300.0, 1000.0, 3000.0, 10000.0, 30000.0] {
+        let obj = opt::Objective::new(
+            opt::genome::GenomeSpace::new(8, 4),
+            &px,
+            &py,
+            lambda1,
+            lambda1 / 100.0,
+        );
+        let r = ga(&obj);
+        let design = r.best.to_design(&obj.space);
+        let err = obj.error(&r.best);
+        let area = asic::analyze_default(&design.build_netlist()).area_um2;
+        println!(
+            "{lambda1:>10.0} {:>7} {err:>12.4e} {area:>12.2} {:>10}",
+            design.term_count(),
+            design.packed_rows()
+        );
+    }
+
+    // ---- 2. compressed-row count ----
+    println!("\n## compressed-row count (lambda1 = 3000)\n");
+    println!("{:>5} {:>7} {:>12} {:>12}", "rows", "terms", "E(weighted)", "area um2");
+    for rows in [3usize, 4, 5] {
+        let obj = opt::Objective::new(
+            opt::genome::GenomeSpace::new(8, rows),
+            &px,
+            &py,
+            3000.0,
+            30.0,
+        );
+        let r = ga(&obj);
+        let design = r.best.to_design(&obj.space);
+        let area = asic::analyze_default(&design.build_netlist()).area_um2;
+        println!(
+            "{rows:>5} {:>7} {:>12.4e} {area:>12.2}",
+            design.term_count(),
+            obj.error(&r.best)
+        );
+    }
+
+    // ---- 3. fine-tune on/off ----
+    println!("\n## fine-tune (OR-merge) ablation\n");
+    let obj = opt::Objective::new(opt::genome::GenomeSpace::new(8, 4), &px, &py, 500.0, 5.0);
+    let r = ga(&obj);
+    let design = r.best.to_design(&obj.space);
+    let before_rows = design.packed_rows();
+    let before_err = opt::finetune::weighted_error(&design, &px, &py);
+    let before_area = asic::analyze_default(&design.build_netlist()).area_um2;
+    println!("off        : rows {before_rows}, E {before_err:.4e}, area {before_area:.2}");
+    for target in [2usize, 1] {
+        let ft = opt::finetune::run(
+            &design,
+            &px,
+            &py,
+            &opt::finetune::FinetuneConfig { target_rows: target, mu: 0.0 },
+        );
+        let after_area = asic::analyze_default(&ft.design.build_netlist()).area_um2;
+        println!(
+            "on (rows<={target}): rows {}, E {:.4e}, area {after_area:.2} ({} merges/drops)",
+            ft.design.packed_rows(),
+            ft.error_after,
+            ft.log.len()
+        );
+    }
+
+    // ---- 4. batcher sweep (needs artifacts; skipped otherwise) ----
+    println!("\n## dynamic batcher sweep (native backend, 256 requests)\n");
+    match lenet::load("artifacts/weights/digits.htb") {
+        Ok(_) => {
+            let data = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits").unwrap();
+            let lut = Arc::new(
+                Lut::load("artifacts/heam/heam_lut.htb").unwrap_or_else(|_| Lut::exact()),
+            );
+            println!(
+                "{:>6} {:>9} {:>10} {:>10} {:>10}",
+                "batch", "wait_us", "req/s", "p50 ms", "mean batch"
+            );
+            for (batch, wait) in [(1, 0u64), (4, 500), (8, 2000), (16, 2000), (32, 5000)] {
+                let graph = lenet::load("artifacts/weights/digits.htb").unwrap();
+                let server = Server::start_native(
+                    graph,
+                    Multiplier::Lut(lut.clone()),
+                    (data.channels, data.height, data.width),
+                    ServeConfig {
+                        max_batch: batch,
+                        max_wait_us: wait,
+                        workers: 1,
+                    },
+                );
+                let t0 = Instant::now();
+                let report = heam::coordinator::drive_demo(&server, &data, 256).unwrap();
+                let elapsed = t0.elapsed().as_secs_f64();
+                let m = server.metrics_snapshot();
+                let p50 = m.latency_percentile_us(0.5) as f64 / 1000.0;
+                println!(
+                    "{batch:>6} {wait:>9} {:>10.1} {p50:>10.2} {:>10.2}",
+                    256.0 / elapsed,
+                    m.mean_batch()
+                );
+                let _ = report;
+                server.shutdown();
+            }
+        }
+        Err(_) => println!("(skipped — run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,28 @@
+//! Fig. 1 regeneration: histograms of the quantized inputs and weights of
+//! LeNet's FC1 layer (inputs concentrated at 0, weights around 128).
+//!
+//! Run: `cargo bench --bench fig1_histograms`
+//! Uses the python-exported distributions (`make artifacts`); falls back
+//! to extracting them live from the trained model, then to the synthetic
+//! Fig.1-shaped set so the bench always renders.
+
+use heam::bench::{figs, paths, table1};
+use heam::opt::DistSet;
+
+fn main() {
+    let ds = DistSet::load(paths::dist("digits"))
+        .or_else(|_| table1::extract_distributions(200))
+        .unwrap_or_else(|_| {
+            println!("(artifacts missing — using the synthetic Fig.1-shaped distributions)");
+            DistSet::synthetic_lenet_like()
+        });
+    println!("{}", figs::fig1(&ds));
+    // CSV dump for plotting.
+    if let Ok(layer) = ds.layer("fc1") {
+        println!("csv (code, p_input, p_weight):");
+        for i in (0..256).step_by(8) {
+            println!("{i},{:.6},{:.6}", layer.x.p[i], layer.y.p[i]);
+        }
+    }
+    println!("paper shape check: inputs mode at 0, weights mode near 128.");
+}

@@ -1,0 +1,25 @@
+//! Fig. 2 / §II.A regeneration: the uniform-fit multiplier f1 vs the
+//! distribution-fit f2 over the bases {1, x, y, x^2, y^2}, their error
+//! surfaces and the total-FC1-error gap (paper: 3.12e16 vs 4.77e14).
+//!
+//! Run: `cargo bench --bench fig2_error_surface`
+
+use heam::bench::{figs, paths};
+use heam::opt::DistSet;
+
+fn main() {
+    let ds = DistSet::load(paths::dist("digits")).unwrap_or_else(|_| {
+        println!("(artifacts missing — using the synthetic Fig.1-shaped distributions)");
+        DistSet::synthetic_lenet_like()
+    });
+    // The paper fits against the FC1 layer specifically.
+    let (px, py) = match ds.layer("fc1") {
+        Ok(l) => (l.x.clone(), l.y.clone()),
+        Err(_) => ds.aggregate(),
+    };
+    match figs::fig2(&px, &py) {
+        Ok(out) => println!("{out}"),
+        Err(e) => println!("fig2 failed: {e:#}"),
+    }
+    println!("paper reference: f1 = -16384 + 128x + 128y; f2 = -1549 + 129x + 12y.");
+}

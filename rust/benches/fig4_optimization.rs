@@ -1,0 +1,44 @@
+//! Fig. 4 + §II.C regeneration: the GA on Eq. 6 over the 8x8 compressed
+//! partial-product space, the fine-tune (OR-merge) pass, and the
+//! Mul1-vs-Mul2 ablation (with vs without distribution weighting).
+//!
+//! Run: `cargo bench --bench fig4_optimization`
+
+use heam::bench::{figs, paths};
+use heam::mult::Lut;
+use heam::opt::{Dist256, DistSet};
+
+fn main() {
+    let ds = DistSet::load(paths::dist("digits")).unwrap_or_else(|_| {
+        println!("(artifacts missing — using the synthetic Fig.1-shaped distributions)");
+        DistSet::synthetic_lenet_like()
+    });
+    let (px, py) = ds.aggregate();
+
+    println!("== GA + fine-tune with the application distributions (Mul1) ==");
+    let f = figs::fig4(&px, &py, 32, 40);
+    println!(
+        "convergence (best fitness by generation, every 5th): {:?}",
+        f.history.iter().step_by(5).map(|v| *v as i64).collect::<Vec<_>>()
+    );
+    println!("GA design (Fig. 4b analogue):\n{}", f.ga_design);
+    println!(
+        "fine-tuned design (Fig. 4c analogue, rows {} -> {}):\n{}",
+        f.rows_before, f.rows_after, f.final_design
+    );
+    let mul1_lut = Lut::from_fn("mul1", |x, y| f.design.eval(x, y));
+    let mul1_err = mul1_lut.avg_sq_error_weighted(&px.p, &py.p);
+
+    println!("== same pipeline without distributions (Mul2 ablation) ==");
+    let u = Dist256::uniform();
+    let g = figs::fig4(&u, &u, 32, 40);
+    let mul2_lut = Lut::from_fn("mul2", |x, y| g.design.eval(x, y));
+    let mul2_err = mul2_lut.avg_sq_error_weighted(&px.p, &py.p);
+    println!("Mul2 design:\n{}", g.final_design);
+    println!(
+        "application-weighted avg sq error: Mul1 {mul1_err:.4e} vs Mul2 {mul2_err:.4e} \
+         ({:.2}x; paper §II.C: 1.74e7 vs 8.60e8 ~ 49x — direction reproduced, \
+         magnitude is distribution-dependent, see EXPERIMENTS.md §Deviations)",
+        mul2_err / mul1_err.max(1e-12)
+    );
+}

@@ -1,0 +1,119 @@
+//! §Perf micro-benchmarks: the hot paths the performance pass iterates on
+//! (see EXPERIMENTS.md §Perf for before/after numbers).
+//!
+//! * LUT generation — exhaustive 64-wide bit-parallel netlist simulation
+//!   (65 536 pairs).
+//! * GA objective evaluation — one genome fitness over the precomputed
+//!   bitplanes.
+//! * ApproxFlow conv hot loop — one LeNet conv2 layer forward.
+//! * LUT-dot primitive — the MAC inner loop.
+//! * Switching-activity power estimation — 4096-vector toggle counting.
+//!
+//! Run: `cargo bench --bench perf_hotpaths`
+
+use std::sync::Arc;
+
+use heam::bench::harness::bench_print;
+use heam::logic::Simulator;
+use heam::mult::{Lut, MultKind};
+use heam::nn::multiplier::Multiplier;
+use heam::nn::ops::QConv2d;
+use heam::nn::quant::QuantParams;
+use heam::nn::tensor::Tensor;
+use heam::opt::{self, DistSet};
+use heam::util::prng::Rng;
+
+fn main() {
+    let wallace = MultKind::Wallace.build();
+
+    // 1. Exhaustive LUT generation.
+    bench_print("lut_from_netlist (wallace 8x8, 65536 pairs)", || {
+        std::hint::black_box(Lut::from_netlist(&wallace));
+    });
+
+    // 2. GA objective — both on the dense synthetic distributions (worst
+    //    case: every pair has mass) and on the real extracted ones (the
+    //    production path; zero-mass pairs are compacted away).
+    let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+    let objective = opt::Objective::new(opt::genome::GenomeSpace::new(8, 4), &px, &py, 3000.0, 30.0);
+    let genome = opt::Genome::seeded(&objective.space);
+    bench_print("ga_objective_fitness (synthetic dist, dense)", || {
+        std::hint::black_box(objective.fitness(&genome));
+    });
+    if let Ok(real) = DistSet::load("artifacts/dist/digits.json") {
+        let (px, py) = real.aggregate();
+        let obj = opt::Objective::new(opt::genome::GenomeSpace::new(8, 4), &px, &py, 3000.0, 30.0);
+        let genome = opt::Genome::seeded(&obj.space);
+        bench_print("ga_objective_fitness (extracted dist, compacted)", || {
+            std::hint::black_box(obj.fitness(&genome));
+        });
+    }
+
+    // 3. Conv hot loop: LeNet conv2 geometry (6x12x12 -> 16 @ 5x5).
+    let mut rng = Rng::new(42);
+    let conv = QConv2d {
+        name: "conv2".into(),
+        w: Tensor::new(
+            vec![16, 6, 5, 5],
+            (0..16 * 150).map(|_| rng.below(256) as u8).collect(),
+        ),
+        bias: vec![0; 16],
+        x_q: QuantParams { scale: 0.01, zero_point: 0 },
+        w_q: QuantParams { scale: 0.004, zero_point: 128 },
+        out_q: QuantParams { scale: 0.02, zero_point: 0 },
+        relu: true,
+    };
+    let x = Tensor::new(
+        vec![6, 12, 12],
+        (0..6 * 144).map(|_| rng.below(256) as u8).collect(),
+    );
+    let heam_mul = Multiplier::Lut(Arc::new(MultKind::Heam.lut()));
+    bench_print("qconv2d_forward (conv2 geometry, LUT mult)", || {
+        std::hint::black_box(conv.forward(&x, &heam_mul, None));
+    });
+    bench_print("qconv2d_forward (conv2 geometry, exact mult)", || {
+        std::hint::black_box(conv.forward(&x, &Multiplier::Exact, None));
+    });
+
+    // 4. The dot primitive.
+    let xs: Vec<u8> = (0..1024).map(|_| rng.below(256) as u8).collect();
+    let ys: Vec<u8> = (0..1024).map(|_| rng.below(256) as u8).collect();
+    bench_print("lut_dot_1024", || {
+        std::hint::black_box(heam_mul.dot(&xs, &ys));
+    });
+
+    // 5. Power estimation (toggle counting).
+    let words: Vec<u64> = {
+        let mut r = Rng::new(7);
+        (0..4096).map(|_| r.next_u64() & 0xFFFF).collect()
+    };
+    bench_print("toggle_counts (wallace, 4096 vectors)", || {
+        let mut sim = Simulator::new(&wallace);
+        std::hint::black_box(sim.toggle_counts(&words));
+    });
+
+    // 6. Full eval throughput context: images/second for LeNet-digits if
+    //    artifacts exist.
+    if let (Ok(ds), Ok(graph)) = (
+        heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits"),
+        heam::nn::lenet::load("artifacts/weights/digits.htb"),
+    ) {
+        let t0 = std::time::Instant::now();
+        let n = 200;
+        let _ = heam::nn::lenet::accuracy(
+            &graph,
+            &ds.test_x,
+            &ds.test_y,
+            (ds.channels, ds.height, ds.width),
+            &heam_mul,
+            n,
+            None,
+        )
+        .unwrap();
+        let dt = t0.elapsed();
+        println!(
+            "lenet_eval_throughput: {n} images in {dt:?} = {:.1} img/s",
+            n as f64 / dt.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Table I regeneration: multiplier hardware costs + average error +
+//! digits-substitute accuracy, with the paper's Margin column.
+//!
+//! Run: `cargo bench --bench table1_multipliers`
+//! Accuracy rows need artifacts (make artifacts); hardware rows always run.
+
+use heam::bench::{report::margin, table1};
+use heam::mult::MultKind;
+
+fn main() {
+    println!("{}", table1::hardware_table());
+
+    println!("paper reference rows (SMIC 65nm, Table I):");
+    for (metric, vals) in table1::PAPER {
+        println!(
+            "  {metric:<16} HEAM {:>8.2}  KMap {:>8.2}  CR6 {:>8.2}  CR7 {:>8.2}  AC {:>8.2}",
+            vals[0], vals[1], vals[2], vals[3], vals[4]
+        );
+    }
+    println!();
+
+    match table1::accuracy_row(1000) {
+        Ok(rows) => {
+            println!("### Accuracy on digits substitute (1000 test images)\n");
+            let heam = rows
+                .iter()
+                .find(|(k, _)| *k == MultKind::Heam)
+                .map(|(_, a)| *a)
+                .unwrap();
+            let cr7 = rows
+                .iter()
+                .find(|(k, _)| *k == MultKind::CrC7)
+                .map(|(_, a)| *a)
+                .unwrap();
+            for (kind, acc) in &rows {
+                println!("  {:<10} {acc:>6.2}%", kind.label());
+            }
+            println!("  Margin vs CR(C.7): {}", margin(cr7, heam, 2));
+        }
+        Err(e) => println!("accuracy rows skipped: {e:#} (run `make artifacts`)"),
+    }
+}

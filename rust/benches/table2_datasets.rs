@@ -1,0 +1,44 @@
+//! Table II regeneration: accuracies on the FashionMNIST / CIFAR-10 / CORA
+//! substitutes under every multiplier (multiplier optimized on digits,
+//! reused everywhere, per the paper).
+//!
+//! Run: `cargo bench --bench table2_datasets` (needs `make artifacts`).
+
+use heam::bench::{report::Table, table2};
+use heam::mult::MultKind;
+
+fn main() {
+    let cols: Vec<String> = MultKind::ALL.iter().map(|k| k.label().to_string()).collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table II — accuracy on FashionMNIST/CIFAR-10/CORA substitutes (%)",
+        &col_refs,
+    );
+    let mut any = false;
+    for (row_name, loader) in [
+        ("FashionMNIST", table2::image_row("fashion", 1000)),
+        ("CIFAR10", table2::image_row("cifar", 1000)),
+        ("CORA", table2::cora_row()),
+    ] {
+        match loader {
+            Ok(rows) => {
+                any = true;
+                table.row_f64(
+                    row_name,
+                    &rows.iter().map(|(_, a)| *a).collect::<Vec<_>>(),
+                    2,
+                );
+            }
+            Err(e) => println!("{row_name}: skipped ({e:#})"),
+        }
+    }
+    if any {
+        println!("{}", table.to_markdown());
+    } else {
+        println!("no rows produced — run `make artifacts` first");
+    }
+    println!("paper reference rows (Table II):");
+    for (name, vals) in table2::PAPER {
+        println!("  {name:<14} {vals:?}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Table III regeneration: TASU / Systolic Cube / 16x16 Systolic Array
+//! with every multiplier, on the DC substitute (max freq, area, power).
+//!
+//! Run: `cargo bench --bench table3_accelerators_asic`
+
+use heam::bench::table34;
+
+fn main() {
+    println!("{}", table34::table3());
+    println!("paper reference (Table III, Wallace column): TASU 288.18 MHz / 2966.10e3 um^2 / 572.21 mW;");
+    println!("SC 363.64 MHz / 114.45e3 um^2 / 19.00 mW; SA 361.01 MHz / 719.11e3 um^2 / 95.12 mW.");
+}

@@ -1,0 +1,13 @@
+//! Table IV regeneration: the same modules on the Vivado substitute
+//! (max freq, LUT utilization, power); OU (L.3) fails routing on TASU and
+//! SA like in the paper.
+//!
+//! Run: `cargo bench --bench table4_accelerators_fpga`
+
+use heam::bench::table34;
+
+fn main() {
+    println!("{}", table34::table4());
+    println!("paper reference (Table IV, Wallace column): TASU 107.45 MHz / 140.72e3 LUTs / 0.79 W;");
+    println!("SC 253.49 MHz / 4.22e3 LUTs / 0.67 W; SA 219.25 MHz / 28.43e3 LUTs / 0.74 W.");
+}

@@ -1,0 +1,27 @@
+//! DNN-accelerator module models for the Table III / IV experiments.
+//!
+//! Three modules from the paper's §III.C, each embedding one multiplier
+//! per processing element:
+//!
+//! * [`tasu`] — the processing block of TASU \[31\], an FPGA accelerator
+//!   for DoReFa-Net (first convolutional layer configuration).
+//! * [`systolic_cube`] — Systolic Cube \[33\], a 3D systolic module for
+//!   convolution.
+//! * [`systolic_array`] — a 16x16 weight-stationary systolic array (the
+//!   TPU-style module \[34\]), including a cycle-accurate dataflow
+//!   simulator whose numerics run through the same pluggable multiplier
+//!   as ApproxFlow.
+//!
+//! Cost composition ([`module`]): a processing element is the multiplier
+//! plus a real accumulator-adder netlist and register file (costed with
+//! the same calibrated 65nm library), and each module adds a fixed
+//! periphery (buffers, control) calibrated once against the paper's
+//! Wallace column — so the *differences* between multiplier columns come
+//! entirely from our gate-level models, like Tables III/IV's margins.
+
+pub mod module;
+pub mod systolic_array;
+pub mod systolic_cube;
+pub mod tasu;
+
+pub use module::{ModuleAsicReport, ModuleFpgaReport, ModuleKind};

@@ -1,0 +1,143 @@
+//! 16x16 weight-stationary systolic array: a cycle-accurate dataflow
+//! simulator whose PEs multiply through the pluggable multiplier.
+//!
+//! Validates that the accelerator datapath computes exactly what
+//! ApproxFlow's matmul computes (same LUT semantics), and provides the
+//! cycle counts behind the throughput discussion in EXPERIMENTS.md.
+
+use crate::nn::multiplier::Multiplier;
+
+/// The array geometry.
+pub const DIM: usize = 16;
+
+/// One weight-stationary matmul tile pass: computes `X (n x DIM) * W
+/// (DIM x DIM)` by streaming X rows diagonally through the array.
+/// Returns (result codes as i64 accumulators, total cycles).
+///
+/// Cycle model: weights preloaded (DIM cycles), then one column of X
+/// enters per cycle; the pipeline drains after `n + 2*DIM - 1` cycles.
+pub fn matmul_tile(x: &[u8], n: usize, w: &[u8], mul: &Multiplier) -> (Vec<i64>, u64) {
+    assert_eq!(x.len(), n * DIM);
+    assert_eq!(w.len(), DIM * DIM);
+    // Functional result: acc[i][j] = sum_k mul(x[i,k], w[k,j]); the
+    // systolic schedule reorders the additions but sums the same terms,
+    // so computing it directly is bit-exact with the hardware dataflow.
+    let mut out = vec![0i64; n * DIM];
+    for i in 0..n {
+        for j in 0..DIM {
+            let mut acc = 0i64;
+            for k in 0..DIM {
+                acc += mul.mul(x[i * DIM + k], w[k * DIM + j]) as i64;
+            }
+            out[i * DIM + j] = acc;
+        }
+    }
+    let cycles = (DIM + n + 2 * DIM - 1) as u64;
+    (out, cycles)
+}
+
+/// Cycle-level simulation (explicit register movement) — used by tests to
+/// prove the schedule computes the same sums as [`matmul_tile`].
+pub fn matmul_tile_cycle_sim(x: &[u8], n: usize, w: &[u8], mul: &Multiplier) -> (Vec<i64>, u64) {
+    assert_eq!(x.len(), n * DIM);
+    // acc[r][c] accumulates in place (weight-stationary, output-stationary
+    // accumulation along k happens as x values march right and partial
+    // sums march down).
+    // State: x_reg[r][c] holds the activation moving right; psum[r][c]
+    // moves down each cycle.
+    let mut x_reg = [[0u8; DIM]; DIM];
+    let mut psum = [[0i64; DIM]; DIM];
+    let mut out = vec![0i64; n * DIM];
+    let total_cycles = n + 3 * DIM;
+    for t in 0..total_cycles {
+        // Partial sums exit the bottom row: row DIM-1's psum of column c
+        // at time t corresponds to x row (t - DIM - c ... ) — standard
+        // skewed schedule; we collect exits below.
+        // Move psums down and x right (back-to-front).
+        for r in (0..DIM).rev() {
+            for c in (0..DIM).rev() {
+                let x_in = if c == 0 {
+                    // Skewed injection: row r receives x[i][r] at cycle
+                    // t = i + r.
+                    let i = t as i64 - r as i64;
+                    if i >= 0 && (i as usize) < n {
+                        x[(i as usize) * DIM + r]
+                    } else {
+                        0
+                    }
+                } else {
+                    x_reg[r][c - 1]
+                };
+                let p_in = if r == 0 { 0 } else { psum[r - 1][c] };
+                // PE computes p_out = p_in + x_in * w[r][c]; registers
+                // update at the cycle edge.
+                let contribution = mul.mul(x_in, w[r * DIM + c]) as i64;
+                psum[r][c] = p_in + contribution;
+                x_reg[r][c] = x_in;
+                // NOTE: iterating back-to-front lets us read the previous
+                // cycle's neighbor values before overwriting them.
+            }
+        }
+        // Collect bottom-row outputs: column c's full sum for x row i
+        // exits at t = i + (DIM - 1) + c + 1... captured via the skew:
+        let _ = t;
+        for c in 0..DIM {
+            let i = t as i64 - (DIM as i64 - 1) - c as i64;
+            if i >= 0 && (i as usize) < n {
+                out[(i as usize) * DIM + c] = psum[DIM - 1][c];
+            }
+        }
+    }
+    (out, total_cycles as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn tile_matches_reference_exact() {
+        let mut rng = Rng::new(1);
+        let n = 5;
+        let x: Vec<u8> = (0..n * DIM).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..DIM * DIM).map(|_| rng.below(256) as u8).collect();
+        let (out, cycles) = matmul_tile(&x, n, &w, &Multiplier::Exact);
+        for i in 0..n {
+            for j in 0..DIM {
+                let expect: i64 = (0..DIM)
+                    .map(|k| x[i * DIM + k] as i64 * w[k * DIM + j] as i64)
+                    .sum();
+                assert_eq!(out[i * DIM + j], expect);
+            }
+        }
+        assert!(cycles >= (n + DIM) as u64);
+    }
+
+    #[test]
+    fn cycle_sim_matches_functional_model() {
+        let mut rng = Rng::new(2);
+        let n = 7;
+        let x: Vec<u8> = (0..n * DIM).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..DIM * DIM).map(|_| rng.below(256) as u8).collect();
+        let (fast, _) = matmul_tile(&x, n, &w, &Multiplier::Exact);
+        let (sim, _) = matmul_tile_cycle_sim(&x, n, &w, &Multiplier::Exact);
+        assert_eq!(fast, sim, "systolic schedule must sum the same terms");
+    }
+
+    #[test]
+    fn approximate_multiplier_flows_through() {
+        let mut rng = Rng::new(3);
+        let lut = std::sync::Arc::new(crate::mult::MultKind::KMap.lut());
+        let mul = Multiplier::Lut(lut);
+        let n = 3;
+        let x: Vec<u8> = (0..n * DIM).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..DIM * DIM).map(|_| rng.below(256) as u8).collect();
+        let (a, _) = matmul_tile(&x, n, &w, &mul);
+        let (b, _) = matmul_tile_cycle_sim(&x, n, &w, &mul);
+        assert_eq!(a, b);
+        // And it differs from exact somewhere (KMap is approximate).
+        let (exact, _) = matmul_tile(&x, n, &w, &Multiplier::Exact);
+        assert_ne!(a, exact);
+    }
+}

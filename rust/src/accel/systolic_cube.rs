@@ -1,0 +1,96 @@
+//! Systolic Cube (Wang et al., DAC 2019 — reference \[33\]): a 3D systolic
+//! module for convolution. Behavioral model: a 3x4x4 cube of PEs computes
+//! one 3x3 (x channel-depth) convolution window per beat; numerics run
+//! through the pluggable multiplier (same semantics as ApproxFlow).
+
+use crate::nn::multiplier::Multiplier;
+
+/// Cube geometry: kernel plane 4x4 (padded 3x3) x 3 channel slices = 48
+/// multipliers — matching the [`crate::accel::module`] cost config.
+pub const PLANE: usize = 4;
+pub const SLICES: usize = 3;
+
+/// Convolve one [C, H, W] input with one [C, 3, 3] kernel (valid, stride
+/// 1), accumulating in i64 code space. Channels are processed SLICES at a
+/// beat. Returns (accumulator map [OH*OW], beats).
+pub fn conv3x3(
+    x: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    kernel: &[u8],
+    mul: &Multiplier,
+) -> (Vec<i64>, u64) {
+    assert_eq!(x.len(), c * h * w);
+    assert_eq!(kernel.len(), c * 9);
+    let (oh, ow) = (h - 2, w - 2);
+    let mut out = vec![0i64; oh * ow];
+    let mut beats = 0u64;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0i64;
+            let mut ci = 0;
+            while ci < c {
+                // One beat: up to SLICES channel slices in parallel.
+                let hi = (ci + SLICES).min(c);
+                for cc in ci..hi {
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            let xv = x[cc * h * w + (oy + ky) * w + ox + kx];
+                            let kv = kernel[cc * 9 + ky * 3 + kx];
+                            acc += mul.mul(xv, kv) as i64;
+                        }
+                    }
+                }
+                beats += 1;
+                ci = hi;
+            }
+            out[oy * ow + ox] = acc;
+        }
+    }
+    (out, beats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn conv_matches_direct() {
+        let mut rng = Rng::new(5);
+        let (c, h, w) = (6usize, 8usize, 8usize);
+        let x: Vec<u8> = (0..c * h * w).map(|_| rng.below(256) as u8).collect();
+        let k: Vec<u8> = (0..c * 9).map(|_| rng.below(256) as u8).collect();
+        let (out, beats) = conv3x3(&x, c, h, w, &k, &Multiplier::Exact);
+        // Direct reference.
+        for oy in 0..h - 2 {
+            for ox in 0..w - 2 {
+                let mut expect = 0i64;
+                for cc in 0..c {
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            expect += x[cc * h * w + (oy + ky) * w + ox + kx] as i64
+                                * k[cc * 9 + ky * 3 + kx] as i64;
+                        }
+                    }
+                }
+                assert_eq!(out[oy * (w - 2) + ox], expect);
+            }
+        }
+        // 6 channels / 3 slices = 2 beats per window.
+        assert_eq!(beats, ((h - 2) * (w - 2) * 2) as u64);
+    }
+
+    #[test]
+    fn lut_semantics_flow_through() {
+        let mut rng = Rng::new(6);
+        let (c, h, w) = (3usize, 6usize, 6usize);
+        let x: Vec<u8> = (0..c * h * w).map(|_| rng.below(256) as u8).collect();
+        let k: Vec<u8> = (0..c * 9).map(|_| rng.below(256) as u8).collect();
+        let lut = Multiplier::Lut(std::sync::Arc::new(crate::mult::MultKind::Ac.lut()));
+        let (approx, _) = conv3x3(&x, c, h, w, &k, &lut);
+        let (exact, _) = conv3x3(&x, c, h, w, &k, &Multiplier::Exact);
+        assert_ne!(approx, exact, "AC multiplier must perturb the conv");
+    }
+}

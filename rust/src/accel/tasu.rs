@@ -1,0 +1,92 @@
+//! TASU processing block (Jiao et al., FPL 2017 — reference \[31\]): the
+//! first-convolutional-layer block of an embedded-FPGA accelerator for
+//! DoReFa-Net. Behavioral model: a 64-PE x 3x3-lane block computing
+//! low-bitwidth convolutions; in the paper's Table III/IV configuration
+//! the 8-bit multipliers under test replace its multiply lanes.
+
+use crate::nn::multiplier::Multiplier;
+
+/// PE count and kernel lanes (64 PEs x 9 lanes = 576 multipliers,
+/// matching the [`crate::accel::module`] cost config).
+pub const PES: usize = 64;
+pub const LANES: usize = 9;
+
+/// One block invocation: 64 output channels of a 3x3 convolution over a
+/// single input channel tile, one output position per PE group per beat.
+/// Returns accumulators [PES] and the beat count.
+pub fn conv_beat(window: &[u8; 9], kernels: &[u8], mul: &Multiplier) -> (Vec<i64>, u64) {
+    assert_eq!(kernels.len(), PES * LANES);
+    let mut out = vec![0i64; PES];
+    for (pe, acc) in out.iter_mut().enumerate() {
+        let k = &kernels[pe * LANES..(pe + 1) * LANES];
+        let mut a = 0i64;
+        for lane in 0..LANES {
+            a += mul.mul(window[lane], k[lane]) as i64;
+        }
+        *acc = a;
+    }
+    (out, 1)
+}
+
+/// Full single-channel conv over an [H, W] tile for all 64 output
+/// channels. Returns ([PES, OH, OW] accumulators, beats).
+pub fn conv_tile(
+    x: &[u8],
+    h: usize,
+    w: usize,
+    kernels: &[u8],
+    mul: &Multiplier,
+) -> (Vec<i64>, u64) {
+    assert_eq!(x.len(), h * w);
+    let (oh, ow) = (h - 2, w - 2);
+    let mut out = vec![0i64; PES * oh * ow];
+    let mut beats = 0u64;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut window = [0u8; 9];
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    window[ky * 3 + kx] = x[(oy + ky) * w + ox + kx];
+                }
+            }
+            let (accs, b) = conv_beat(&window, kernels, mul);
+            beats += b;
+            for pe in 0..PES {
+                out[pe * oh * ow + oy * ow + ox] = accs[pe];
+            }
+        }
+    }
+    (out, beats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn beat_matches_direct_dot() {
+        let mut rng = Rng::new(7);
+        let window: [u8; 9] = std::array::from_fn(|_| rng.below(256) as u8);
+        let kernels: Vec<u8> = (0..PES * LANES).map(|_| rng.below(256) as u8).collect();
+        let (out, beats) = conv_beat(&window, &kernels, &Multiplier::Exact);
+        assert_eq!(beats, 1);
+        for pe in 0..PES {
+            let expect: i64 = (0..9)
+                .map(|l| window[l] as i64 * kernels[pe * LANES + l] as i64)
+                .sum();
+            assert_eq!(out[pe], expect);
+        }
+    }
+
+    #[test]
+    fn tile_shape_and_beats() {
+        let mut rng = Rng::new(8);
+        let (h, w) = (10usize, 12usize);
+        let x: Vec<u8> = (0..h * w).map(|_| rng.below(256) as u8).collect();
+        let kernels: Vec<u8> = (0..PES * LANES).map(|_| rng.below(256) as u8).collect();
+        let (out, beats) = conv_tile(&x, h, w, &kernels, &Multiplier::Exact);
+        assert_eq!(out.len(), PES * 8 * 10);
+        assert_eq!(beats, 80);
+    }
+}

@@ -1,0 +1,166 @@
+//! Figures 1, 2 and 4 — reproduced as text/CSV artifacts:
+//!
+//! * **Fig. 1** — histograms of the quantized FC1 inputs and weights
+//!   (printed as ASCII bars + CSV for plotting).
+//! * **Fig. 2 / §II.A** — the f1 (uniform-fit) vs f2 (distribution-fit)
+//!   linear-form multipliers, their coefficient vectors, the error-surface
+//!   samples and the total-FC1-error gap.
+//! * **Fig. 4** — the GA + fine-tune pipeline on the 8x8 multiplier:
+//!   convergence history, selected compressed terms, merged final matrix.
+
+use anyhow::Result;
+
+use crate::opt::distributions::{Dist256, DistSet};
+use crate::opt::{finetune, ga, genome::GenomeSpace, linear_fit, GaConfig, Objective};
+
+/// ASCII histogram of a distribution (64-bin downsample, height 12).
+pub fn ascii_hist(title: &str, d: &Dist256) -> String {
+    let bins = 64;
+    let mut agg = vec![0.0f64; bins];
+    for (i, &p) in d.p.iter().enumerate() {
+        agg[i * bins / 256] += p;
+    }
+    let max = agg.iter().cloned().fold(1e-12, f64::max);
+    let mut s = format!("{title} (mode {}, mean {:.1})\n", d.mode(), d.mean());
+    for level in (1..=10).rev() {
+        let thresh = max * level as f64 / 10.0;
+        for &v in &agg {
+            s.push(if v >= thresh { '#' } else { ' ' });
+        }
+        s.push('\n');
+    }
+    s.push_str(&"-".repeat(bins));
+    s.push_str("\n0");
+    s.push_str(&" ".repeat(bins - 4));
+    s.push_str("255\n");
+    s
+}
+
+/// Fig. 1: FC1-layer histograms from a distribution set (falls back to
+/// the aggregate when the set has no fc1 layer).
+pub fn fig1(ds: &DistSet) -> String {
+    let layer = ds
+        .layer("fc1")
+        .cloned()
+        .unwrap_or_else(|_| {
+            let (x, y) = ds.aggregate();
+            crate::opt::LayerDist { name: "aggregate".into(), x, y, mults: 1 }
+        });
+    format!(
+        "{}\n{}",
+        ascii_hist(&format!("Fig 1(a) — {} inputs", layer.name), &layer.x),
+        ascii_hist(&format!("Fig 1(b) — {} weights", layer.name), &layer.y),
+    )
+}
+
+/// Fig. 2 / §II.A: fit f1 and f2, report coefficients, total errors and a
+/// coarse error surface (CSV: x, y, err_f1, err_f2).
+pub fn fig2(px: &Dist256, py: &Dist256) -> Result<String> {
+    let u = Dist256::uniform();
+    let f1 = linear_fit::fit(&u, &u)?;
+    let f2 = linear_fit::fit(px, py)?;
+    // Counts at the paper's FC1 scale (10k images -> ~1e6 input samples).
+    let mut xc = [0.0f64; 256];
+    let mut yc = [0.0f64; 256];
+    for i in 0..256 {
+        xc[i] = px.p[i] * 1.2e6;
+        yc[i] = py.p[i] * 4.8e4;
+    }
+    let e1 = linear_fit::total_error(&f1, &xc, &yc);
+    let e2 = linear_fit::total_error(&f2, &xc, &yc);
+    let mut s = format!(
+        "f1 (uniform fit):      {:?}\n\
+         f2 (distribution fit): {:?}\n\
+         total FC1 error: f1 = {e1:.3e}, f2 = {e2:.3e} (paper: 3.12e16 vs 4.77e14; ratio {:.1}x)\n\
+         error surface samples (x, y, |err_f1|, |err_f2|):\n",
+        f1.rounded(),
+        f2.rounded(),
+        e1 / e2.max(1.0)
+    );
+    for x in (0..256).step_by(32) {
+        for y in (0..256).step_by(32) {
+            let exact = (x * y) as f64;
+            let d1 = (exact - f1.eval(x as f64, y as f64)).abs();
+            let d2 = (exact - f2.eval(x as f64, y as f64)).abs();
+            s.push_str(&format!("{x},{y},{d1:.0},{d2:.0}\n"));
+        }
+    }
+    Ok(s)
+}
+
+/// Fig. 4 result bundle.
+pub struct Fig4 {
+    pub history: Vec<f64>,
+    pub ga_design: String,
+    pub final_design: String,
+    pub design: crate::mult::heam::HeamDesign,
+    pub rows_before: usize,
+    pub rows_after: usize,
+}
+
+/// Fig. 4: run the full optimization pipeline (GA + fine-tune) at reduced
+/// scale (configurable) and return the artifacts.
+///
+/// The `Cons(θ)` weights are scaled relative to the objective's own error
+/// magnitude (`E` of the all-dropped genome) so that designs optimized
+/// under *different* distributions end up with comparable hardware
+/// budgets — the premise of the paper's §II.C Mul1-vs-Mul2 comparison
+/// ("Mul1 and Mul2 have comparable hardware costs").
+pub fn fig4(px: &Dist256, py: &Dist256, population: usize, generations: usize) -> Fig4 {
+    let space = GenomeSpace::new(8, 4);
+    let probe = Objective::new(space.clone(), px, py, 0.0, 0.0);
+    let scale = probe.error_dropping_all();
+    let obj = Objective::new(space, px, py, scale / 300.0, scale / 30_000.0);
+    let config = GaConfig {
+        population,
+        generations,
+        ..Default::default()
+    };
+    let result = ga::run(&obj, &config);
+    let design = result.best.to_design(&obj.space);
+    let ft = finetune::run(
+        &design,
+        px,
+        py,
+        &finetune::FinetuneConfig { target_rows: 2, mu: 0.0 },
+    );
+    Fig4 {
+        history: result.history,
+        ga_design: design.render(),
+        final_design: ft.design.render(),
+        rows_before: ft.rows_before,
+        rows_after: ft.rows_after,
+        design: ft.design,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_renders_shape() {
+        let ds = DistSet::synthetic_lenet_like();
+        let out = fig1(&ds);
+        assert!(out.contains("inputs"));
+        assert!(out.contains("weights"));
+        assert!(out.contains('#'));
+    }
+
+    #[test]
+    fn fig2_shows_gap() {
+        let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+        let out = fig2(&px, &py).unwrap();
+        assert!(out.contains("f1 (uniform fit)"));
+        assert!(out.contains("total FC1 error"));
+    }
+
+    #[test]
+    fn fig4_pipeline_small() {
+        let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+        let f = fig4(&px, &py, 8, 4);
+        assert!(!f.history.is_empty());
+        assert!(f.rows_after <= 2);
+        assert!(f.final_design.contains("HEAM 8x8"));
+    }
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmark timing harness (criterion substitute): warmup +
+//! median-of-N wall-clock measurement with spread reporting.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Nanoseconds per iteration (median).
+    pub fn ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Human-readable line.
+    pub fn fmt(&self, name: &str) -> String {
+        format!(
+            "{name:<44} median {:>12.3?}  (min {:>10.3?}, max {:>10.3?}, n={})",
+            self.median, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Time `f` with automatic iteration-count tuning: targets ~`budget` of
+/// total measurement after one warmup call. Returns per-call statistics
+/// over `samples` samples.
+pub fn bench<F: FnMut()>(samples: usize, budget: Duration, mut f: F) -> Measurement {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let per_sample = budget.as_secs_f64() / samples.max(1) as f64;
+    let iters = (per_sample / once.as_secs_f64()).clamp(1.0, 1e7) as usize;
+    let mut durations = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        durations.push(t.elapsed() / iters as u32);
+    }
+    durations.sort();
+    Measurement {
+        median: durations[durations.len() / 2],
+        min: durations[0],
+        max: *durations.last().unwrap(),
+        iters,
+    }
+}
+
+/// Convenience wrapper printing the result immediately.
+pub fn bench_print<F: FnMut()>(name: &str, f: F) -> Measurement {
+    let m = bench(9, Duration::from_millis(900), f);
+    println!("{}", m.fmt(name));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut acc = 0u64;
+        let m = bench(3, Duration::from_millis(30), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(m.ns() > 10.0, "1000 mul-adds can't be free: {}", m.ns());
+        assert!(m.min <= m.median && m.median <= m.max);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn ordering_detects_slower_work() {
+        let fast = bench(3, Duration::from_millis(20), || {
+            std::hint::black_box((0..100u64).sum::<u64>());
+        });
+        let slow = bench(3, Duration::from_millis(20), || {
+            std::hint::black_box((0..20_000u64).sum::<u64>());
+        });
+        assert!(slow.ns() > fast.ns() * 2.0, "slow {} fast {}", slow.ns(), fast.ns());
+    }
+}

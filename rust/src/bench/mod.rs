@@ -1,0 +1,34 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation section. Each `rust/benches/*.rs` target (harness = false —
+//! criterion is absent offline) calls into this module and prints the
+//! paper-format markdown table plus a paper-vs-measured margin line.
+
+pub mod figs;
+pub mod harness;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table34;
+
+/// Shared artifact locations.
+pub mod paths {
+    /// Dataset bundles (written by `heam gen-data`).
+    pub fn data(name: &str) -> String {
+        format!("artifacts/data/{name}.htb")
+    }
+
+    /// Trained weight bundles (written by python/compile/train.py).
+    pub fn weights(name: &str) -> String {
+        format!("artifacts/weights/{name}.htb")
+    }
+
+    /// Extracted distribution JSONs (written by python/compile/train.py).
+    pub fn dist(name: &str) -> String {
+        format!("artifacts/dist/{name}.json")
+    }
+
+    /// The optimized HEAM LUT (written by `heam optimize`).
+    pub fn heam_lut() -> String {
+        "artifacts/heam/heam_lut.htb".to_string()
+    }
+}

@@ -1,0 +1,105 @@
+//! Markdown table rendering for the bench targets (the paper's table
+//! layout: metric rows x multiplier columns, plus a Margin column
+//! comparing HEAM with the best reproduced baseline).
+
+/// A metric-rows-by-column table.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    /// New table with given column headers.
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add a row of pre-formatted cells.
+    pub fn row(&mut self, metric: &str, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row '{metric}' width");
+        self.rows.push((metric.to_string(), cells));
+    }
+
+    /// Add a numeric row with a format width.
+    pub fn row_f64(&mut self, metric: &str, values: &[f64], decimals: usize) {
+        self.row(
+            metric,
+            values.iter().map(|v| format!("{v:.decimals$}")).collect(),
+        );
+    }
+
+    /// Render as markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let mut metric_w = "Metric".len();
+        for (m, cells) in &self.rows {
+            metric_w = metric_w.max(m.len());
+            for (i, c) in cells.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&format!("| {:<metric_w$} |", "Metric"));
+        for (c, w) in self.columns.iter().zip(&widths) {
+            s.push_str(&format!(" {c:<w$} |"));
+        }
+        s.push('\n');
+        s.push_str(&format!("|{}|", "-".repeat(metric_w + 2)));
+        for w in &widths {
+            s.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        s.push('\n');
+        for (m, cells) in &self.rows {
+            s.push_str(&format!("| {m:<metric_w$} |"));
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// The paper's "Margin" cell: absolute and percentage gap between HEAM
+/// and the chosen baseline (negative = HEAM smaller/lower).
+pub fn margin(heam: f64, baseline: f64, decimals: usize) -> String {
+    let diff = baseline - heam;
+    let pct = if baseline != 0.0 { 100.0 * diff / baseline } else { 0.0 };
+    format!("{diff:.decimals$} ({pct:.2}%)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("Test", &["A", "B"]);
+        t.row_f64("metric-1", &[1.5, 2.25], 2);
+        t.row("metric-2", vec!["x".into(), "y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Test"));
+        assert!(md.contains("| metric-1 | 1.50 | 2.25 |"));
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    fn margin_formats() {
+        assert_eq!(margin(523.32, 595.8, 2), "72.48 (12.17%)");
+        // HEAM worse -> negative margin, like the paper's latency row.
+        let m = margin(1.16, 1.01, 2);
+        assert!(m.starts_with("-0.15"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["A", "B"]);
+        t.row("bad", vec!["only-one".into()]);
+    }
+}

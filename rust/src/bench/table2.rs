@@ -1,0 +1,65 @@
+//! Table II — accuracy on the FashionMNIST / CIFAR-10 / CORA substitutes
+//! under every multiplier (the multiplier is always the one optimized on
+//! the digits distributions, per the paper: "we use the multiplier
+//! generated from LeNet on MNIST dataset in all experiments").
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::mult::MultKind;
+use crate::nn::gcn::QGcn;
+use crate::nn::{lenet, multiplier::Multiplier};
+
+use super::paths;
+use super::table1::lut_for;
+
+/// Paper accuracies (Table II), columns HEAM..Wallace.
+pub const PAPER: [(&str, [f64; 8]); 3] = [
+    (
+        "FashionMNIST",
+        [90.41, 59.35, 15.29, 75.09, 23.29, 10.00, 71.95, 90.33],
+    ),
+    (
+        "CIFAR10",
+        [76.49, 44.71, 12.78, 56.30, 9.06, 10.00, 50.61, 76.16],
+    ),
+    (
+        "CORA",
+        [81.09, 79.80, 80.24, 80.35, 74.48, 12.96, 6.68, 80.65],
+    ),
+];
+
+/// Accuracy of the LeNet on an image dataset under every multiplier.
+pub fn image_row(dataset: &str, limit: usize) -> Result<Vec<(MultKind, f64)>> {
+    let ds = crate::data::ImageDataset::load(paths::data(dataset), dataset)?;
+    let graph = lenet::load(paths::weights(dataset))?;
+    let mut out = Vec::new();
+    for kind in MultKind::ALL {
+        let mul = Multiplier::Lut(Arc::new(lut_for(kind)));
+        let acc = lenet::accuracy(
+            &graph,
+            &ds.test_x,
+            &ds.test_y,
+            (ds.channels, ds.height, ds.width),
+            &mul,
+            limit,
+            None,
+        )?;
+        out.push((kind, acc * 100.0));
+    }
+    Ok(out)
+}
+
+/// Accuracy of the GCN on the CORA substitute under every multiplier.
+pub fn cora_row() -> Result<Vec<(MultKind, f64)>> {
+    let g = crate::data::GraphDataset::load(paths::data("cora"), "cora")?;
+    let model = QGcn::load(paths::weights("cora"))?;
+    let mut out = Vec::new();
+    for kind in MultKind::ALL {
+        let mul = Multiplier::Lut(Arc::new(lut_for(kind)));
+        let acc = model.accuracy(&g, &g.test_mask, &mul, None);
+        out.push((kind, acc * 100.0));
+    }
+    Ok(out)
+}

@@ -1,0 +1,118 @@
+//! Tables III & IV — the accelerator modules (TASU / SC / SA) with each
+//! multiplier embedded, on the DC substitute (Table III: fmax, area,
+//! power) and the Vivado substitute (Table IV: fmax, LUT utilization,
+//! power).
+
+use crate::accel::module::{asic_report, fpga_report, ModuleKind};
+use crate::mult::MultKind;
+
+use super::report::{margin, Table};
+
+/// Render Table III (ASIC).
+pub fn table3() -> String {
+    let mut cols: Vec<String> = MultKind::ALL.iter().map(|k| k.label().to_string()).collect();
+    cols.push("Margin vs KMap".into());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut out = String::new();
+    for module in ModuleKind::ALL {
+        let mut t = Table::new(
+            &format!("Table III — {} on the DC substitute", module.label()),
+            &col_refs,
+        );
+        let reports: Vec<_> = MultKind::ALL
+            .iter()
+            .map(|&k| asic_report(module, k))
+            .collect();
+        let fmax: Vec<f64> = reports.iter().map(|r| r.fmax_mhz).collect();
+        let area: Vec<f64> = reports.iter().map(|r| r.area_um2 / 1e3).collect();
+        let power: Vec<f64> = reports.iter().map(|r| r.power_uw / 1e3).collect();
+        let with_margin = |vals: &[f64], flip: bool| -> Vec<String> {
+            let mut cells: Vec<String> = vals.iter().map(|v| format!("{v:.2}")).collect();
+            // Margin vs KMap (the paper's strongest hardware baseline in
+            // Table III), sign convention per metric direction.
+            let m = if flip {
+                margin(vals[1], vals[0], 2) // higher-is-better: fmax
+            } else {
+                margin(vals[0], vals[1], 2)
+            };
+            cells.push(m);
+            cells
+        };
+        t.row("Max freq (MHz)", with_margin(&fmax, true));
+        t.row("Area (um^2 x1e3)", with_margin(&area, false));
+        t.row("Power (mW)", with_margin(&power, false));
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render Table IV (FPGA). OU (L.3) rows that fail routing print "-" like
+/// the paper.
+pub fn table4() -> String {
+    let mut cols: Vec<String> = MultKind::ALL.iter().map(|k| k.label().to_string()).collect();
+    cols.push("Margin vs KMap".into());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut out = String::new();
+    for module in ModuleKind::ALL {
+        let mut t = Table::new(
+            &format!("Table IV — {} on the Vivado substitute", module.label()),
+            &col_refs,
+        );
+        let reports: Vec<_> = MultKind::ALL
+            .iter()
+            .map(|&k| fpga_report(module, k))
+            .collect();
+        let fmt_opt = |v: f64, routable: bool| -> String {
+            if routable {
+                format!("{v:.2}")
+            } else {
+                "-".to_string()
+            }
+        };
+        let mut fmax: Vec<String> = reports
+            .iter()
+            .map(|r| fmt_opt(r.fmax_mhz, r.routable))
+            .collect();
+        fmax.push(margin(reports[1].fmax_mhz, reports[0].fmax_mhz, 2));
+        // LUT counts are reported even for unroutable designs (the demand
+        // is what made them unroutable).
+        let mut luts: Vec<String> = reports
+            .iter()
+            .map(|r| format!("{:.2}", r.luts as f64 / 1e3))
+            .collect();
+        luts.push(margin(
+            reports[0].luts as f64 / 1e3,
+            reports[1].luts as f64 / 1e3,
+            2,
+        ));
+        let mut power: Vec<String> = reports
+            .iter()
+            .map(|r| fmt_opt(r.power_w, r.routable))
+            .collect();
+        power.push(margin(reports[0].power_w, reports[1].power_w, 2));
+        t.row("Max freq (MHz)", fmax);
+        t.row("LUT util (x1e3)", luts);
+        t.row("Power (W)", power);
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_all_modules() {
+        let t3 = table3();
+        for m in ["TASU", "SC", "SA"] {
+            assert!(t3.contains(m), "missing {m} in Table III");
+        }
+        let t4 = table4();
+        assert!(t4.contains("LUT util"));
+        // OU L.3 unroutable rows are dashed on TASU.
+        assert!(t4.contains(" - "), "expected '-' cells for failed routing");
+    }
+}

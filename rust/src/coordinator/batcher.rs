@@ -1,0 +1,79 @@
+//! Dynamic batching: coalesce queued requests under a size cap and a wait
+//! budget (the vLLM-router-style policy, scaled to this workload).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Collect a batch from a channel: blocks for the first item, then keeps
+/// pulling until `max_batch` items are held or `max_wait` has elapsed
+/// since the first item arrived. Returns `None` when the channel closed
+/// with nothing pending.
+pub fn collect_batch<T>(
+    rx: &Receiver<T>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn fills_to_max_when_queue_is_deep() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let batch = collect_batch(&rx, 4, Duration::from_millis(50)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = collect_batch(&rx, 4, Duration::from_millis(50)).unwrap();
+        assert_eq!(batch, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn times_out_with_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 8, Duration::from_millis(20)).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+        drop(tx);
+    }
+
+    #[test]
+    fn returns_none_on_closed_empty_channel() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn drains_before_deadline_when_producer_closes() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 16, Duration::from_secs(5)).unwrap();
+        assert_eq!(batch, vec![7, 8]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait out the deadline");
+    }
+}

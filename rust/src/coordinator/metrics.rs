@@ -1,0 +1,123 @@
+//! Serving metrics: request/batch counters and a latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free metrics shared between the batcher, workers and clients.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub execute_us: AtomicU64,
+    /// Log2-bucketed latency histogram (microseconds), buckets 0..=24.
+    latency_buckets: [AtomicU64; 25],
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub execute_us: u64,
+    pub latency_buckets: Vec<u64>,
+}
+
+impl Metrics {
+    /// Record one completed request's end-to-end latency.
+    pub fn record_request(&self, latency_us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(24);
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&self, items: usize, execute_us: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+        self.execute_us.fetch_add(execute_us, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            execute_us: self.execute_us.load(Ordering::Relaxed),
+            latency_buckets: self
+                .latency_buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+impl Snapshot {
+    /// Mean items per executed batch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Approximate latency percentile from the log2 histogram (upper bucket
+    /// bound, microseconds).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.latency_buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 25
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.record_request(100);
+        m.record_request(200);
+        m.record_batch(2, 500);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batched_items, 2);
+        assert_eq!(s.mean_batch(), 2.0);
+    }
+
+    #[test]
+    fn percentile_tracks_magnitude() {
+        let m = Metrics::default();
+        for _ in 0..99 {
+            m.record_request(100); // bucket ~6 (64-127)
+        }
+        m.record_request(1_000_000); // slow outlier
+        let s = m.snapshot();
+        let p50 = s.latency_percentile_us(0.5);
+        let p999 = s.latency_percentile_us(0.999);
+        assert!(p50 <= 256, "p50 {p50}");
+        assert!(p999 >= 512_000, "p999 {p999}");
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.latency_percentile_us(0.9), 0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+}

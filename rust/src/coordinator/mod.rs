@@ -1,0 +1,83 @@
+//! The L3 serving coordinator: request router, dynamic batcher, worker
+//! dispatch and metrics.
+//!
+//! Built on threads + channels (the offline crate snapshot has no tokio).
+//! Clients submit single images; the batcher coalesces them (size- or
+//! timeout-bound) into one PJRT execution — or one native ApproxFlow pass
+//! when no AOT artifact is available. The approximate-multiplier LUT is an
+//! *input tensor* of the AOT model, so swapping multipliers at serve time
+//! is a tensor swap, not a recompile (see DESIGN.md §6).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+use anyhow::Result;
+
+use crate::data::ImageDataset;
+
+use self::server::Server;
+
+/// Drive a demo workload against a running server from several client
+/// threads; returns a human-readable latency/throughput/accuracy report.
+/// This is the end-to-end validation workload recorded in EXPERIMENTS.md.
+pub fn drive_demo(server: &Server, ds: &ImageDataset, requests: usize) -> Result<String> {
+    let clients = 4usize;
+    let sz = ds.channels * ds.height * ds.width;
+    let n_test = ds.test_len().min(requests.max(1));
+    let started = std::time::Instant::now();
+    let results: Vec<(usize, u128)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = &*server;
+            let test_x = &ds.test_x;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut i = c;
+                while i < requests {
+                    let idx = i % n_test;
+                    let image = &test_x[idx * sz..(idx + 1) * sz];
+                    let t0 = std::time::Instant::now();
+                    let pred = server.classify(image.to_vec());
+                    let latency_us = t0.elapsed().as_micros();
+                    out.push((idx, latency_us, pred));
+                    i += clients;
+                }
+                out
+            }));
+        }
+        let mut all = Vec::new();
+        for h in handles {
+            for (idx, lat, pred) in h.join().expect("client thread") {
+                let pred = pred.expect("classification failed");
+                all.push((idx, lat, pred));
+            }
+        }
+        all.into_iter()
+            .map(|(idx, lat, pred)| {
+                let correct = (pred == ds.test_y[idx] as usize) as usize;
+                (correct, lat)
+            })
+            .collect()
+    });
+    let wall = started.elapsed();
+    let total = results.len();
+    let correct: usize = results.iter().map(|r| r.0).sum();
+    let mut lats: Vec<u128> = results.iter().map(|r| r.1).collect();
+    lats.sort_unstable();
+    let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize] as f64 / 1000.0;
+    let m = server.metrics_snapshot();
+    Ok(format!(
+        "served {total} requests in {:.2}s — {:.1} req/s\n\
+         latency ms: p50 {:.2}  p90 {:.2}  p99 {:.2}\n\
+         accuracy: {:.2}%  batches: {}  mean batch: {:.2}",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64(),
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        100.0 * correct as f64 / total as f64,
+        m.batches,
+        m.mean_batch(),
+    ))
+}

@@ -1,0 +1,488 @@
+//! The serving loop: a request channel, a batching worker, and two
+//! execution backends — the PJRT runtime (AOT artifact) or the native
+//! ApproxFlow engine (no artifact required; also the parity reference).
+
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::mult::Lut;
+use crate::nn::graph::Graph;
+use crate::nn::multiplier::Multiplier;
+use crate::nn::ops::argmax;
+use crate::runtime::{model::Input, Model, Runtime};
+
+use super::batcher::collect_batch;
+use super::metrics::{Metrics, Snapshot};
+
+/// Batching/serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    /// Worker threads (PJRT CPU: 1 device — keep 1; native backend can
+    /// use more).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_wait_us: 2000,
+            workers: 1,
+        }
+    }
+}
+
+struct Request {
+    image: Vec<f32>,
+    resp: Sender<Result<usize>>,
+    submitted: Instant,
+}
+
+/// Execution backend.
+enum Backend {
+    /// AOT artifact via PJRT. Fixed-batch executable: requests are padded
+    /// to `aot_batch`.
+    Pjrt {
+        model: Model,
+        lut_f32: Vec<f32>,
+        aot_batch: usize,
+        image_dims: (usize, usize, usize),
+    },
+    /// Native ApproxFlow engine.
+    Native {
+        graph: Graph,
+        mul: Multiplier,
+        image_dims: (usize, usize, usize),
+    },
+}
+
+impl Backend {
+    fn image_size(&self) -> usize {
+        let (c, h, w) = match self {
+            Backend::Pjrt { image_dims, .. } => *image_dims,
+            Backend::Native { image_dims, .. } => *image_dims,
+        };
+        c * h * w
+    }
+
+    /// Classify a batch of images (flattened back-to-back).
+    fn execute(&self, images: &[f32], count: usize) -> Result<Vec<usize>> {
+        match self {
+            Backend::Pjrt {
+                model,
+                lut_f32,
+                aot_batch,
+                image_dims: (c, h, w),
+            } => {
+                // Pad to the artifact's fixed batch.
+                anyhow::ensure!(
+                    count <= *aot_batch,
+                    "batch {count} exceeds artifact batch {aot_batch}"
+                );
+                let sz = c * h * w;
+                let mut padded = vec![0f32; aot_batch * sz];
+                padded[..count * sz].copy_from_slice(&images[..count * sz]);
+                let (logits, dims) = model.execute(&[
+                    Input {
+                        data: &padded,
+                        dims: &[*aot_batch as i64, *c as i64, *h as i64, *w as i64],
+                    },
+                    Input {
+                        data: lut_f32,
+                        dims: &[65536],
+                    },
+                ])?;
+                anyhow::ensure!(
+                    dims.len() == 2 && dims[0] == *aot_batch,
+                    "unexpected logits shape {dims:?}"
+                );
+                let classes = dims[1];
+                Ok((0..count)
+                    .map(|i| argmax(&logits[i * classes..(i + 1) * classes]))
+                    .collect())
+            }
+            Backend::Native {
+                graph,
+                mul,
+                image_dims,
+            } => {
+                let sz = self.image_size();
+                let mut preds = Vec::with_capacity(count);
+                for i in 0..count {
+                    let (pred, _) = crate::nn::lenet::classify(
+                        graph,
+                        &images[i * sz..(i + 1) * sz],
+                        *image_dims,
+                        mul,
+                        None,
+                    )?;
+                    preds.push(pred);
+                }
+                Ok(preds)
+            }
+        }
+    }
+}
+
+/// Boxed backend constructor run inside each worker thread.
+type BackendFactory = Box<dyn FnOnce() -> Result<Backend> + Send + 'static>;
+
+/// A running server.
+pub struct Server {
+    tx: Mutex<Option<Sender<Request>>>,
+    metrics: Arc<Metrics>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    image_size: usize,
+}
+
+impl Server {
+    /// Start with the PJRT backend from an HLO text artifact whose
+    /// signature is `(images f32[B,C,H,W], lut f32[65536]) -> logits`.
+    /// Artifact metadata (B, C, H, W) is read from the sidecar JSON
+    /// `<model>.meta.json` written by aot.py.
+    ///
+    /// The PJRT handles are not `Send`, so the client, compilation and
+    /// execution all live on the worker thread; startup errors are
+    /// reported back synchronously.
+    pub fn start(model_path: &str, lut: Arc<Lut>, config: ServeConfig) -> Result<Self> {
+        let meta_path = format!("{model_path}.meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading artifact metadata {meta_path}"))?;
+        let meta = crate::util::json::parse(&meta_text)?;
+        let get = |k: &str| -> Result<usize> {
+            Ok(meta
+                .require(k)?
+                .as_i64()
+                .ok_or_else(|| anyhow!("{k} must be an integer"))? as usize)
+        };
+        let (b, c, h, w) = (get("batch")?, get("channels")?, get("height")?, get("width")?);
+        let lut_f32: Vec<f32> = lut.values.iter().map(|&v| v as f32).collect();
+        let path = model_path.to_string();
+        let mut cfg = config;
+        cfg.max_batch = cfg.max_batch.min(b);
+        cfg.workers = 1; // one PJRT CPU device
+        Self::spawn_pool(
+            vec![Box::new(move || -> Result<Backend> {
+                let runtime = Runtime::cpu()?;
+                let model = runtime.load_hlo_text(&path)?;
+                Ok(Backend::Pjrt {
+                    model,
+                    lut_f32,
+                    aot_batch: b,
+                    image_dims: (c, h, w),
+                })
+            })],
+            c * h * w,
+            cfg,
+        )
+    }
+
+    /// Start with the native ApproxFlow backend (no artifact needed).
+    pub fn start_native(
+        graph: Graph,
+        mul: Multiplier,
+        image_dims: (usize, usize, usize),
+        config: ServeConfig,
+    ) -> Self {
+        let (c, h, w) = image_dims;
+        let mut cfg = config;
+        cfg.workers = 1; // a single Graph serves one worker
+        Self::spawn_pool(
+            vec![Box::new(move || Ok(Backend::Native { graph, mul, image_dims }))],
+            c * h * w,
+            cfg,
+        )
+        .expect("native backend construction is infallible")
+    }
+
+    /// Start a native worker *pool*: `config.workers` threads, each with
+    /// its own engine built by `factory` (e.g. reloading the same weight
+    /// bundle). Batches are pulled from a shared queue — the dispatch
+    /// layer of the coordinator.
+    pub fn start_native_pool(
+        factory: impl Fn() -> Result<(Graph, Multiplier)> + Send + Sync + 'static,
+        image_dims: (usize, usize, usize),
+        config: ServeConfig,
+    ) -> Result<Self> {
+        let (c, h, w) = image_dims;
+        let factory = Arc::new(factory);
+        let makers: Vec<BackendFactory> = (0..config.workers.max(1))
+            .map(|_| {
+                let f = factory.clone();
+                Box::new(move || {
+                    let (graph, mul) = f()?;
+                    Ok(Backend::Native { graph, mul, image_dims })
+                }) as BackendFactory
+            })
+            .collect();
+        Self::spawn_pool(makers, c * h * w, config)
+    }
+
+    fn spawn_pool(
+        makers: Vec<BackendFactory>,
+        image_size: usize,
+        config: ServeConfig,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let n_workers = makers.len();
+        // Batcher thread: coalesces requests into jobs.
+        let (job_tx, job_rx) = mpsc::channel::<Vec<Request>>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let batcher = {
+            let wait = Duration::from_micros(config.max_wait_us);
+            let max_batch = config.max_batch;
+            std::thread::spawn(move || {
+                while let Some(batch) = collect_batch(&rx, max_batch, wait) {
+                    if job_tx.send(batch).is_err() {
+                        break;
+                    }
+                }
+            })
+        };
+        let mut handles = vec![batcher];
+        for make_backend in makers {
+            let m = metrics.clone();
+            let ready = ready_tx.clone();
+            let jobs = job_rx.clone();
+            handles.push(std::thread::spawn(move || {
+                let backend = match make_backend() {
+                    Ok(b) => {
+                        let _ = ready.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                let image_size = backend.image_size();
+                loop {
+                    // Pull the next batch job (work-sharing across the pool).
+                    let batch = match jobs.lock().unwrap().recv() {
+                        Ok(b) => b,
+                        Err(_) => break,
+                    };
+                    let count = batch.len();
+                    let mut flat = Vec::with_capacity(count * image_size);
+                    for r in &batch {
+                        flat.extend_from_slice(&r.image);
+                    }
+                    let t0 = Instant::now();
+                    let preds = backend.execute(&flat, count);
+                    m.record_batch(count, t0.elapsed().as_micros() as u64);
+                    match preds {
+                        Ok(preds) => {
+                            for (req, pred) in batch.into_iter().zip(preds) {
+                                m.record_request(req.submitted.elapsed().as_micros() as u64);
+                                let _ = req.resp.send(Ok(pred));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            for req in batch {
+                                let _ = req.resp.send(Err(anyhow!("{msg}")));
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        // Wait for every backend to come up (or fail).
+        for _ in 0..n_workers {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("server worker died during startup"))??;
+        }
+        Ok(Self {
+            tx: Mutex::new(Some(tx)),
+            metrics,
+            workers: Mutex::new(handles),
+            image_size,
+        })
+    }
+
+    /// Classify one image (blocking).
+    pub fn classify(&self, image: Vec<f32>) -> Result<usize> {
+        anyhow::ensure!(
+            image.len() == self.image_size,
+            "image has {} values, expected {}",
+            image.len(),
+            self.image_size
+        );
+        let (resp_tx, resp_rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
+            tx.send(Request {
+                image,
+                resp: resp_tx,
+                submitted: Instant::now(),
+            })
+            .map_err(|_| anyhow!("server worker exited"))?;
+        }
+        resp_rx.recv().map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics_snapshot(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(&self) {
+        let handles: Vec<_> = {
+            let mut tx = self.tx.lock().unwrap();
+            tx.take(); // close the channel
+            self.workers.lock().unwrap().drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lenet;
+
+    fn native_server(max_batch: usize, wait_us: u64) -> Server {
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        Server::start_native(
+            graph,
+            Multiplier::Exact,
+            (1, 28, 28),
+            ServeConfig {
+                max_batch,
+                max_wait_us: wait_us,
+                workers: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_requests_and_batches() {
+        let server = native_server(8, 3000);
+        let results: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..16)
+                .map(|i| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let img = vec![(i as f32) / 16.0; 28 * 28];
+                        server.classify(img).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 16);
+        assert!(results.iter().all(|&p| p < 10));
+        let m = server.metrics_snapshot();
+        assert_eq!(m.requests, 16);
+        assert!(m.batches <= 16);
+        assert!(m.mean_batch() >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let server = native_server(4, 100);
+        assert!(server.classify(vec![0.0; 3]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_safe() {
+        let server = native_server(4, 100);
+        server.shutdown();
+        server.shutdown();
+        assert!(server.classify(vec![0.0; 28 * 28]).is_err());
+    }
+
+    #[test]
+    fn worker_pool_serves_and_scales_out() {
+        let server = Server::start_native_pool(
+            || {
+                let bundle = lenet::random_bundle(1, 28, 42);
+                Ok((lenet::load_graph(&bundle)?, Multiplier::Exact))
+            },
+            (1, 28, 28),
+            ServeConfig {
+                max_batch: 2,
+                max_wait_us: 200,
+                workers: 3,
+            },
+        )
+        .unwrap();
+        let preds: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..12)
+                .map(|i| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let img = vec![(i as f32) / 12.0; 28 * 28];
+                        server.classify(img).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(preds.len(), 12);
+        let m = server.metrics_snapshot();
+        assert_eq!(m.requests, 12);
+        // All workers share one weight seed -> identical inputs give
+        // identical outputs regardless of which worker served them.
+        let a = server.classify(vec![0.25; 28 * 28]).unwrap();
+        let b = server.classify(vec![0.25; 28 * 28]).unwrap();
+        assert_eq!(a, b);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pool_startup_failure_is_reported() {
+        let r = Server::start_native_pool(
+            || anyhow::bail!("boom"),
+            (1, 28, 28),
+            ServeConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn deep_queue_produces_multi_item_batches() {
+        let server = native_server(8, 20_000);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let server = &server;
+                s.spawn(move || {
+                    let img = vec![0.5; 28 * 28];
+                    server.classify(img).unwrap()
+                });
+            }
+        });
+        let m = server.metrics_snapshot();
+        assert!(
+            m.mean_batch() > 1.5,
+            "expected coalescing, got mean batch {}",
+            m.mean_batch()
+        );
+        server.shutdown();
+    }
+}

@@ -1,0 +1,248 @@
+//! FPGA technology mapping (the Xilinx Vivado substitute).
+//!
+//! A depth-bounded, cut-enumeration k-LUT mapper in the FlowMap/DAOmap
+//! family: for every node it enumerates bounded-size cuts (input sets of
+//! at most k signals whose cones cover the node), picks the
+//! depth-optimal cut with an area tie-break, then covers the netlist from
+//! the outputs. Reports LUT count (Table IV "LUT util."), LUT-level
+//! critical path, and an fmax estimate from per-level LUT + routing
+//! delay — the same quantities Vivado's implementation report provides.
+
+use std::collections::BTreeSet;
+
+use crate::logic::Netlist;
+
+/// Mapping result.
+#[derive(Clone, Debug)]
+pub struct FpgaReport {
+    pub name: String,
+    /// Number of k-LUTs after covering.
+    pub luts: usize,
+    /// Critical path in LUT levels.
+    pub depth: u32,
+    /// Estimated max frequency, MHz.
+    pub fmax_mhz: f64,
+    /// LUT input size used.
+    pub k: usize,
+}
+
+/// Per-LUT timing at a 7-series-class FPGA operating point (matching the
+/// paper's Vivado targets): LUT6 delay + average local routing. Used only
+/// for the fmax estimate; LUT counts are exact properties of the covering.
+const LUT_DELAY_NS: f64 = 0.12;
+const ROUTE_DELAY_NS: f64 = 0.35;
+/// Fixed clocking overhead (clock-to-Q + setup + global route).
+const CLOCK_OVERHEAD_NS: f64 = 0.6;
+
+/// One cut: the set of leaf signals (node indices), sorted.
+type Cut = Vec<u32>;
+
+const MAX_CUTS_PER_NODE: usize = 12;
+
+fn merge_cuts(a: &Cut, b: &Cut, k: usize) -> Option<Cut> {
+    let mut out = Vec::with_capacity(k + 1);
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let v = match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) => {
+                if x == y {
+                    i += 1;
+                    j += 1;
+                    x
+                } else if x < y {
+                    i += 1;
+                    x
+                } else {
+                    j += 1;
+                    y
+                }
+            }
+            (Some(&x), None) => {
+                i += 1;
+                x
+            }
+            (None, Some(&y)) => {
+                j += 1;
+                y
+            }
+            (None, None) => break,
+        };
+        if out.len() == k {
+            return None;
+        }
+        out.push(v);
+    }
+    Some(out)
+}
+
+/// Map a netlist onto k-input LUTs.
+pub fn map_kluts(net: &Netlist, k: usize) -> FpgaReport {
+    let nodes = net.nodes();
+    let n = nodes.len();
+    // Cut enumeration with depth-optimal selection.
+    let mut cuts: Vec<Vec<Cut>> = vec![Vec::new(); n];
+    let mut best_depth: Vec<u32> = vec![0; n];
+    let mut best_cut: Vec<Cut> = vec![Vec::new(); n];
+    for (i, g) in nodes.iter().enumerate() {
+        match g.kind.arity() {
+            0 => {
+                // Sources: trivial cut = self, depth 0.
+                cuts[i] = vec![vec![i as u32]];
+                best_depth[i] = 0;
+                best_cut[i] = vec![i as u32];
+            }
+            arity => {
+                let fan_in: Vec<usize> = if arity == 1 {
+                    vec![g.a.idx()]
+                } else {
+                    vec![g.a.idx(), g.b.idx()]
+                };
+                let mut cand: Vec<Cut> = Vec::new();
+                // Trivial cut (the node's own fan-ins).
+                let mut triv: Cut = fan_in.iter().map(|&x| x as u32).collect();
+                triv.sort_unstable();
+                triv.dedup();
+                cand.push(triv);
+                // Cross-products of fan-in cuts.
+                if arity == 1 {
+                    for c in &cuts[fan_in[0]] {
+                        cand.push(c.clone());
+                    }
+                } else {
+                    for ca in &cuts[fan_in[0]] {
+                        for cb in &cuts[fan_in[1]] {
+                            if let Some(m) = merge_cuts(ca, cb, k) {
+                                cand.push(m);
+                            }
+                        }
+                    }
+                }
+                // Dedup and filter.
+                let mut seen: BTreeSet<Cut> = BTreeSet::new();
+                let mut uniq: Vec<Cut> = Vec::new();
+                for c in cand {
+                    if c.len() <= k && seen.insert(c.clone()) {
+                        uniq.push(c);
+                    }
+                }
+                // Score: depth = 1 + max leaf depth; tie-break on cut size.
+                let score = |c: &Cut| -> (u32, usize) {
+                    let d = c
+                        .iter()
+                        .map(|&l| best_depth[l as usize])
+                        .max()
+                        .unwrap_or(0);
+                    (d + 1, c.len())
+                };
+                uniq.sort_by_key(|c| score(c));
+                uniq.truncate(MAX_CUTS_PER_NODE);
+                let (d, _) = score(&uniq[0]);
+                best_depth[i] = d;
+                best_cut[i] = uniq[0].clone();
+                cuts[i] = uniq;
+            }
+        }
+    }
+    // Cover from outputs.
+    let mut lut_count = 0usize;
+    let mut needed = vec![false; n];
+    let mut stack: Vec<usize> = net
+        .outputs()
+        .iter()
+        .map(|s| s.idx())
+        .filter(|&i| nodes[i].kind.arity() > 0)
+        .collect();
+    for i in &stack {
+        needed[*i] = true;
+    }
+    while let Some(i) = stack.pop() {
+        lut_count += 1;
+        for &leaf in &best_cut[i] {
+            let l = leaf as usize;
+            if nodes[l].kind.arity() > 0 && !needed[l] {
+                needed[l] = true;
+                stack.push(l);
+            }
+        }
+    }
+    let depth = net
+        .outputs()
+        .iter()
+        .map(|s| best_depth[s.idx()])
+        .max()
+        .unwrap_or(0);
+    let crit_ns = CLOCK_OVERHEAD_NS + depth as f64 * (LUT_DELAY_NS + ROUTE_DELAY_NS);
+    FpgaReport {
+        name: net.name.clone(),
+        luts: lut_count,
+        depth,
+        fmax_mhz: 1000.0 / crit_ns,
+        k,
+    }
+}
+
+/// Default mapping at k = 6 (Vivado's LUT6 fabric).
+pub fn map_default(net: &Netlist) -> FpgaReport {
+    map_kluts(net, 6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::NetBuilder;
+    use crate::mult::{ou, wallace};
+
+    #[test]
+    fn single_gate_is_one_lut() {
+        let mut b = NetBuilder::new(2);
+        let (x, y) = (b.input(0), b.input(1));
+        let g = b.and(x, y);
+        b.output(g);
+        let n = b.finish("and");
+        let r = map_kluts(&n, 6);
+        assert_eq!(r.luts, 1);
+        assert_eq!(r.depth, 1);
+    }
+
+    #[test]
+    fn six_input_tree_fits_one_lut6() {
+        // A 6-input AND tree (5 gates) must map into a single LUT6.
+        let mut b = NetBuilder::new(6);
+        let xs: Vec<_> = (0..6).map(|i| b.input(i)).collect();
+        let g = b.and_all(&xs);
+        b.output(g);
+        let n = b.finish("and6");
+        let r = map_kluts(&n, 6);
+        assert_eq!(r.luts, 1, "5 gates, 6 leaves -> 1 LUT6");
+        assert_eq!(r.depth, 1);
+        // At k=4 it needs more than one.
+        let r4 = map_kluts(&n, 4);
+        assert!(r4.luts >= 2);
+    }
+
+    #[test]
+    fn mapping_covers_all_outputs() {
+        let n = wallace::build(8);
+        let r = map_default(&n);
+        // 8x8 multipliers land around 50-120 LUT6s in practice.
+        assert!((30..200).contains(&r.luts), "luts = {}", r.luts);
+        assert!(r.depth >= 3, "depth = {}", r.depth);
+        assert!(r.fmax_mhz > 50.0 && r.fmax_mhz < 700.0);
+    }
+
+    #[test]
+    fn ou3_uses_most_luts() {
+        // Table IV shape: OU (L.3) is an order of magnitude larger.
+        let w = map_default(&wallace::build(8));
+        let o = map_default(&ou::build(8, 3));
+        assert!(o.luts > 2 * w.luts, "ou3 {} vs wallace {}", o.luts, w.luts);
+    }
+
+    #[test]
+    fn lut_count_monotone_in_k() {
+        let n = wallace::build(8);
+        let r4 = map_kluts(&n, 4);
+        let r6 = map_kluts(&n, 6);
+        assert!(r6.luts <= r4.luts, "k=6 {} !<= k=4 {}", r6.luts, r4.luts);
+    }
+}

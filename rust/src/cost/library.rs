@@ -1,0 +1,150 @@
+//! 65nm-class standard-cell library.
+//!
+//! Relative per-cell numbers follow typical commercial 65nm libraries
+//! (INV as the unit: NAND2/NOR2 ~1.3x area, AND2/OR2 ~1.7x (extra output
+//! inverter), XOR2/XNOR2 ~2.3x and roughly double the switch energy and
+//! delay). Absolute scale factors are *calibrated once* against the
+//! paper's exact Wallace-tree anchor (Table I: 829.11 um^2, 658.49 uW at
+//! its reported operating point, 1.34 ns) — see
+//! [`CellLibrary::calibrated`]. The relative ordering between multiplier
+//! architectures is therefore produced by their structure, not by tuning.
+
+use crate::logic::GateKind;
+
+/// Per-cell characterization (relative units before scaling).
+#[derive(Clone, Copy, Debug)]
+pub struct CellParams {
+    /// Area in INV-equivalents.
+    pub area: f64,
+    /// Dynamic switch energy per output toggle, in INV-equivalents.
+    pub energy: f64,
+    /// Intrinsic delay in INV-equivalents.
+    pub delay: f64,
+    /// Leakage in INV-equivalents.
+    pub leakage: f64,
+}
+
+/// The cell library plus global calibration scales.
+#[derive(Clone, Debug)]
+pub struct CellLibrary {
+    /// um^2 per INV-equivalent of area.
+    pub area_scale: f64,
+    /// ns per INV-equivalent of delay.
+    pub delay_scale: f64,
+    /// uW per (INV-equivalent switch energy x toggle rate) unit.
+    pub power_scale: f64,
+    /// uW of leakage per INV-equivalent of leakage.
+    pub leakage_scale: f64,
+    /// Extra delay per unit of fanout beyond 1, in INV-equivalents
+    /// (models load-dependent slew).
+    pub fanout_delay: f64,
+}
+
+impl CellLibrary {
+    /// Relative characterization of one cell kind.
+    pub fn cell(kind: GateKind) -> CellParams {
+        match kind {
+            GateKind::Input(_) | GateKind::Const(_) => CellParams {
+                area: 0.0,
+                energy: 0.0,
+                delay: 0.0,
+                leakage: 0.0,
+            },
+            GateKind::Not => CellParams {
+                area: 1.0,
+                energy: 1.0,
+                delay: 1.0,
+                leakage: 1.0,
+            },
+            GateKind::Nand => CellParams {
+                area: 1.3,
+                energy: 1.4,
+                delay: 1.2,
+                leakage: 1.3,
+            },
+            GateKind::Nor => CellParams {
+                area: 1.3,
+                energy: 1.5,
+                delay: 1.4,
+                leakage: 1.3,
+            },
+            GateKind::And => CellParams {
+                area: 1.7,
+                energy: 1.8,
+                delay: 1.6,
+                leakage: 1.6,
+            },
+            GateKind::Or => CellParams {
+                area: 1.7,
+                energy: 1.9,
+                delay: 1.7,
+                leakage: 1.6,
+            },
+            GateKind::Xor => CellParams {
+                area: 2.3,
+                energy: 2.8,
+                delay: 2.1,
+                leakage: 2.0,
+            },
+            GateKind::Xnor => CellParams {
+                area: 2.3,
+                energy: 2.8,
+                delay: 2.1,
+                leakage: 2.0,
+            },
+        }
+    }
+
+    /// The library calibrated against the paper's Wallace 8x8 anchor.
+    ///
+    /// Calibration constants were fitted once (see
+    /// `cargo run --example quickstart -- --calibrate` and
+    /// EXPERIMENTS.md §Calibration) such that [`crate::cost::analyze`] on
+    /// [`crate::mult::wallace::build`]`(8)` reports ~829 um^2 / ~658 uW /
+    /// ~1.34 ns under uniform random operands at the paper's implied
+    /// activity factor.
+    pub fn calibrated() -> Self {
+        Self {
+            area_scale: AREA_SCALE,
+            delay_scale: DELAY_SCALE,
+            power_scale: POWER_SCALE,
+            leakage_scale: LEAKAGE_SCALE,
+            fanout_delay: 0.35,
+        }
+    }
+}
+
+// Calibration anchors, fitted once against the raw (scale = 1) Wallace 8x8
+// analysis (area 652.2 INV-eq, depth 59.75 INV-eq-delays, 249.86 switch
+// units at uniform stimulus) so the calibrated report hits the paper's
+// 829.11 um^2 / 1.34 ns / 658.49 uW with leakage fixed at a typical-65nm
+// 8% of total power. Regenerate with
+// `cargo test calibration_probe -- --ignored --nocapture`; see
+// EXPERIMENTS.md §Calibration.
+pub(crate) const AREA_SCALE: f64 = 1.2712511499540016;
+pub(crate) const DELAY_SCALE: f64 = 0.022426778242677803;
+pub(crate) const POWER_SCALE: f64 = 2.4246028722920485;
+pub(crate) const LEAKAGE_SCALE: f64 = 0.08077154247163446;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_costs_more_than_nand() {
+        let x = CellLibrary::cell(GateKind::Xor);
+        let n = CellLibrary::cell(GateKind::Nand);
+        assert!(x.area > n.area);
+        assert!(x.energy > n.energy);
+        assert!(x.delay > n.delay);
+    }
+
+    #[test]
+    fn sources_are_free() {
+        for k in [GateKind::Input(0), GateKind::Const(true)] {
+            let c = CellLibrary::cell(k);
+            assert_eq!(c.area, 0.0);
+            assert_eq!(c.energy, 0.0);
+        }
+    }
+}

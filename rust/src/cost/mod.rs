@@ -1,0 +1,26 @@
+//! Synthesis-cost substrate: the Synopsys DC / Xilinx Vivado substitute.
+//!
+//! The build environment has no EDA tools, so hardware cost is computed
+//! directly on the gate netlists (which is where DC/Vivado numbers come
+//! from anyway):
+//!
+//! * [`library`] — a 65nm-class standard-cell library (per-cell area,
+//!   pin capacitance / switch energy, intrinsic delay), with global scale
+//!   factors *calibrated* so the exact Wallace 8x8 reproduces the paper's
+//!   anchor row (829.11 um^2, 658.49 uW, 1.34 ns in SMIC 65nm). All other
+//!   designs' numbers *emerge* from their own structure.
+//! * [`asic`] — area (sum of cells), latency (critical path over cell
+//!   delays with fanout loading), and power (Monte-Carlo switching
+//!   activity under a chosen operand distribution x per-cell switch
+//!   energy, plus leakage).
+//! * [`fpga`] — a depth-bounded cut-enumeration k-LUT technology mapper
+//!   (FlowMap-style) that reports LUT utilization and LUT-level critical
+//!   path for the Vivado comparison (Table IV).
+
+pub mod asic;
+pub mod fpga;
+pub mod library;
+
+pub use asic::{analyze, AsicReport};
+pub use fpga::{map_kluts, FpgaReport};
+pub use library::CellLibrary;

@@ -1,0 +1,202 @@
+//! CORA substitute: a stochastic-block-model citation graph with
+//! topic-mixture bag-of-words features.
+//!
+//! Real CORA: 2708 nodes, 1433 binary word features, 7 classes, ~5400
+//! undirected edges, strong homophily, 20 labeled nodes per class
+//! (Planetoid split). The substitute reproduces those statistics: an SBM
+//! with high intra-class edge probability, per-class word-topic
+//! distributions with shared common words, row-normalized features, and
+//! the same 20-per-class train split.
+
+use crate::util::prng::Rng;
+
+use super::GraphDataset;
+
+/// Generate the graph dataset.
+///
+/// * `nodes` — number of nodes (CORA: 2708; default runs use ~1400 for
+///   CPU-friendly training).
+/// * `features` — vocabulary size.
+/// * `classes` — number of classes (CORA: 7).
+pub fn generate(nodes: usize, features: usize, classes: usize, seed: u64) -> GraphDataset {
+    let mut rng = Rng::new(seed ^ 0xC07A);
+    // Class sizes: roughly balanced with jitter (CORA is mildly skewed).
+    let labels: Vec<u8> = (0..nodes).map(|i| (i % classes) as u8).collect();
+
+    // Per-class topic: each class owns a band of "topic words" plus a
+    // shared common-word band.
+    let topic_words = features / (classes + 1);
+    let common_start = classes * topic_words;
+    let mut feat = vec![0.0f32; nodes * features];
+    for n in 0..nodes {
+        let c = labels[n] as usize;
+        // ~5% of topic words + ~2% of common words present (CORA features
+        // are sparse binary).
+        let topic_base = c * topic_words;
+        let mut present = Vec::new();
+        for w in 0..topic_words {
+            if rng.chance(0.065) {
+                present.push(topic_base + w);
+            }
+        }
+        for w in common_start..features {
+            if rng.chance(0.05) {
+                present.push(w);
+            }
+        }
+        // Cross-topic noise words (keeps the GCN in CORA's ~80% band
+        // rather than saturating).
+        for _ in 0..9 {
+            present.push(rng.below(features));
+        }
+        if present.is_empty() {
+            present.push(topic_base);
+        }
+        present.sort_unstable();
+        present.dedup();
+        // Row normalization (like the GCN paper's preprocessing).
+        let v = 1.0 / present.len() as f32;
+        for w in present {
+            feat[n * features + w] = v;
+        }
+    }
+
+    // SBM edges: expected degree ~4 (CORA's mean degree ~3.9), homophily
+    // ~0.8.
+    let mut edges = Vec::new();
+    let avg_degree = 4.0;
+    let intra_frac = 0.81;
+    let n_edges = (nodes as f64 * avg_degree / 2.0) as usize;
+    let per_class: Vec<Vec<u32>> = (0..classes)
+        .map(|c| {
+            (0..nodes)
+                .filter(|&n| labels[n] as usize == c)
+                .map(|n| n as u32)
+                .collect()
+        })
+        .collect();
+    let mut seen = std::collections::BTreeSet::new();
+    while edges.len() < n_edges {
+        let (a, b) = if rng.chance(intra_frac) {
+            // Intra-class edge.
+            let c = rng.below(classes);
+            let members = &per_class[c];
+            (*rng.choose_slice(members), *rng.choose_slice(members))
+        } else {
+            (rng.below(nodes) as u32, rng.below(nodes) as u32)
+        };
+        if a == b {
+            continue;
+        }
+        let key = (a.min(b), a.max(b));
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+
+    // Planetoid-style split: 20 train nodes per class; the last ~1000
+    // nodes (or 35%, whichever is smaller) as test.
+    let mut train_mask = vec![false; nodes];
+    for c in 0..classes {
+        let mut count = 0;
+        for n in 0..nodes {
+            if labels[n] as usize == c && count < 20 {
+                train_mask[n] = true;
+                count += 1;
+            }
+        }
+    }
+    let test_n = 1000.min(nodes * 35 / 100);
+    let mut test_mask = vec![false; nodes];
+    for n in (nodes - test_n)..nodes {
+        if !train_mask[n] {
+            test_mask[n] = true;
+        }
+    }
+
+    GraphDataset {
+        name: "cora".into(),
+        num_nodes: nodes,
+        num_features: features,
+        classes,
+        features: feat,
+        labels,
+        edges,
+        train_mask,
+        test_mask,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statistics_match_cora_regime() {
+        let g = generate(1400, 512, 7, 1);
+        assert_eq!(g.num_nodes, 1400);
+        let degree = 2.0 * g.edges.len() as f64 / g.num_nodes as f64;
+        assert!((3.0..5.5).contains(&degree), "mean degree {degree}");
+        // Homophily: fraction of intra-class edges.
+        let intra = g
+            .edges
+            .iter()
+            .filter(|&&(a, b)| g.labels[a as usize] == g.labels[b as usize])
+            .count() as f64
+            / g.edges.len() as f64;
+        assert!(intra > 0.7, "homophily {intra}");
+        // Train split: 20 per class.
+        assert_eq!(g.train_mask.iter().filter(|&&m| m).count(), 7 * 20);
+        assert!(g.test_mask.iter().filter(|&&m| m).count() >= 400);
+    }
+
+    #[test]
+    fn features_are_row_normalized() {
+        let g = generate(100, 128, 7, 2);
+        for n in 0..g.num_nodes {
+            let row = &g.features[n * g.num_features..(n + 1) * g.num_features];
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 0.15, "node {n} row sum {sum}");
+        }
+    }
+
+    #[test]
+    fn no_self_loops_or_dups() {
+        let g = generate(300, 64, 7, 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for &(a, b) in &g.edges {
+            assert_ne!(a, b, "self loop");
+            assert!(seen.insert((a, b)), "duplicate edge");
+            assert!(a < b, "edges stored canonically");
+        }
+    }
+
+    #[test]
+    fn topic_features_correlate_with_class() {
+        let g = generate(700, 512, 7, 4);
+        let topic_words = 512 / 8;
+        // Mean in-topic mass should dominate cross-topic mass.
+        let mut in_topic = 0.0f32;
+        let mut out_topic = 0.0f32;
+        for n in 0..g.num_nodes {
+            let c = g.labels[n] as usize;
+            let row = &g.features[n * 512..(n + 1) * 512];
+            for w in 0..(7 * topic_words) {
+                if w / topic_words == c {
+                    in_topic += row[w];
+                } else {
+                    out_topic += row[w];
+                }
+            }
+        }
+        // Per-word mass: each node's own topic band must be several times
+        // denser than the average other-topic band (total other-topic mass
+        // can exceed in-topic mass since there are 6 other bands).
+        let per_in = in_topic / topic_words as f32;
+        let per_out = out_topic / (6.0 * topic_words as f32);
+        assert!(
+            per_in > 2.5 * per_out,
+            "in-topic/word {per_in} vs out-topic/word {per_out}"
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Synthetic dataset substitutes.
+//!
+//! The build environment has no network access, so the paper's benchmark
+//! datasets are replaced by procedurally generated equivalents with the
+//! same tensor shapes, class counts and qualitative difficulty ordering
+//! (digits easiest → fashion → cifar hardest; see DESIGN.md §2 for why the
+//! substitution preserves the paper's claims):
+//!
+//! * [`digits`]   — MNIST substitute: 28x28 grayscale rasterized digit
+//!   strokes with affine jitter and noise.
+//! * [`fashion`]  — FashionMNIST substitute: 28x28 garment silhouettes
+//!   with per-class texture.
+//! * [`cifar`]    — CIFAR-10 substitute: 32x32x3 colored shape/texture
+//!   classes over noisy backgrounds.
+//! * [`cora`]     — CORA substitute: stochastic-block-model citation graph
+//!   with topic-mixture bag-of-words features.
+//!
+//! Rust is the single source of truth: `heam gen-data` writes the datasets
+//! as tensor bundles under `artifacts/data/`, and the python training
+//! pipeline reads the *same files*, so train-time (python) and eval-time
+//! (rust) data are bit-identical.
+
+pub mod cifar;
+pub mod cora;
+pub mod digits;
+pub mod fashion;
+pub mod raster;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::tensor_io::{Bundle, Tensor};
+
+/// An image-classification dataset (train + test splits).
+#[derive(Clone)]
+pub struct ImageDataset {
+    pub name: String,
+    /// [N, C, H, W] pixel values in [0, 1].
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<u8>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u8>,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub classes: usize,
+}
+
+impl ImageDataset {
+    /// Number of training images.
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    /// Number of test images.
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Pixels of one image from a split.
+    pub fn image<'a>(&self, split_x: &'a [f32], idx: usize) -> &'a [f32] {
+        let sz = self.channels * self.height * self.width;
+        &split_x[idx * sz..(idx + 1) * sz]
+    }
+
+    /// Save as a tensor bundle.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let sz = self.channels * self.height * self.width;
+        let mut b = Bundle::new();
+        b.insert(
+            "train_x",
+            Tensor::from_f32(
+                vec![self.train_len(), self.channels, self.height, self.width],
+                &self.train_x,
+            ),
+        );
+        b.insert("train_y", Tensor::from_u8(vec![self.train_len()], &self.train_y));
+        b.insert(
+            "test_x",
+            Tensor::from_f32(
+                vec![self.test_len(), self.channels, self.height, self.width],
+                &self.test_x,
+            ),
+        );
+        b.insert("test_y", Tensor::from_u8(vec![self.test_len()], &self.test_y));
+        b.insert(
+            "meta",
+            Tensor::from_i64(vec![4], &[
+                self.channels as i64,
+                self.height as i64,
+                self.width as i64,
+                self.classes as i64,
+            ]),
+        );
+        debug_assert_eq!(self.train_x.len(), self.train_len() * sz);
+        b.save(path)
+    }
+
+    /// Load from a tensor bundle.
+    pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let b = Bundle::load(path)?;
+        let meta = b.get("meta")?.as_i64()?;
+        let train_x = b.get("train_x")?.as_f32()?;
+        let train_y = b.get("train_y")?.as_u8()?.to_vec();
+        let test_x = b.get("test_x")?.as_f32()?;
+        let test_y = b.get("test_y")?.as_u8()?.to_vec();
+        Ok(Self {
+            name: name.to_string(),
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            channels: meta[0] as usize,
+            height: meta[1] as usize,
+            width: meta[2] as usize,
+            classes: meta[3] as usize,
+        })
+    }
+}
+
+/// A node-classification graph dataset (the CORA substitute).
+#[derive(Clone)]
+pub struct GraphDataset {
+    pub name: String,
+    pub num_nodes: usize,
+    pub num_features: usize,
+    pub classes: usize,
+    /// Row-normalized dense features [N, F] in [0, 1].
+    pub features: Vec<f32>,
+    /// Labels per node.
+    pub labels: Vec<u8>,
+    /// Edges as (src, dst) pairs (undirected; stored once).
+    pub edges: Vec<(u32, u32)>,
+    /// Train/test node masks.
+    pub train_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl GraphDataset {
+    /// Save as a tensor bundle.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut b = Bundle::new();
+        b.insert(
+            "features",
+            Tensor::from_f32(vec![self.num_nodes, self.num_features], &self.features),
+        );
+        b.insert("labels", Tensor::from_u8(vec![self.num_nodes], &self.labels));
+        let mut flat = Vec::with_capacity(self.edges.len() * 2);
+        for &(s, d) in &self.edges {
+            flat.push(s as i64);
+            flat.push(d as i64);
+        }
+        b.insert("edges", Tensor::from_i64(vec![self.edges.len(), 2], &flat));
+        let mask_to_u8 = |m: &[bool]| m.iter().map(|&b| b as u8).collect::<Vec<_>>();
+        b.insert(
+            "train_mask",
+            Tensor::from_u8(vec![self.num_nodes], &mask_to_u8(&self.train_mask)),
+        );
+        b.insert(
+            "test_mask",
+            Tensor::from_u8(vec![self.num_nodes], &mask_to_u8(&self.test_mask)),
+        );
+        b.insert(
+            "meta",
+            Tensor::from_i64(vec![3], &[
+                self.num_nodes as i64,
+                self.num_features as i64,
+                self.classes as i64,
+            ]),
+        );
+        b.save(path)
+    }
+
+    /// Load from a tensor bundle.
+    pub fn load(path: impl AsRef<Path>, name: &str) -> Result<Self> {
+        let b = Bundle::load(path)?;
+        let meta = b.get("meta")?.as_i64()?;
+        let edges_flat = b.get("edges")?.as_i64()?;
+        let edges = edges_flat
+            .chunks_exact(2)
+            .map(|c| (c[0] as u32, c[1] as u32))
+            .collect();
+        let to_mask = |t: &[u8]| t.iter().map(|&v| v != 0).collect::<Vec<_>>();
+        Ok(Self {
+            name: name.to_string(),
+            num_nodes: meta[0] as usize,
+            num_features: meta[1] as usize,
+            classes: meta[2] as usize,
+            features: b.get("features")?.as_f32()?,
+            labels: b.get("labels")?.as_u8()?.to_vec(),
+            edges,
+            train_mask: to_mask(b.get("train_mask")?.as_u8()?),
+            test_mask: to_mask(b.get("test_mask")?.as_u8()?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_dataset_roundtrip() {
+        let ds = digits::generate(64, 16, 1);
+        let dir = std::env::temp_dir().join("heam_data_test");
+        let path = dir.join("d.htb");
+        ds.save(&path).unwrap();
+        let ds2 = ImageDataset::load(&path, "digits").unwrap();
+        assert_eq!(ds.train_x, ds2.train_x);
+        assert_eq!(ds.test_y, ds2.test_y);
+        assert_eq!(ds2.height, 28);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn graph_dataset_roundtrip() {
+        let g = cora::generate(200, 64, 7, 42);
+        let dir = std::env::temp_dir().join("heam_graph_test");
+        let path = dir.join("g.htb");
+        g.save(&path).unwrap();
+        let g2 = GraphDataset::load(&path, "cora").unwrap();
+        assert_eq!(g.features, g2.features);
+        assert_eq!(g.edges, g2.edges);
+        assert_eq!(g.train_mask, g2.train_mask);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

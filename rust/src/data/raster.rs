@@ -1,0 +1,130 @@
+//! Tiny software rasterizer used by the synthetic image datasets:
+//! anti-aliased strokes (capsules), filled polygons, and simple procedural
+//! textures on small grayscale/RGB canvases.
+
+/// A single-channel canvas with values in [0, 1].
+pub struct Canvas {
+    pub w: usize,
+    pub h: usize,
+    pub pix: Vec<f32>,
+}
+
+impl Canvas {
+    /// Black canvas.
+    pub fn new(w: usize, h: usize) -> Self {
+        Self { w, h, pix: vec![0.0; w * h] }
+    }
+
+    /// Additively blend a value at (x, y), clamped to [0, 1].
+    #[inline]
+    pub fn add(&mut self, x: usize, y: usize, v: f32) {
+        let p = &mut self.pix[y * self.w + x];
+        *p = (*p + v).clamp(0.0, 1.0);
+    }
+
+    /// Draw an anti-aliased thick line segment (capsule) in unit
+    /// coordinates: endpoints (x0,y0)-(x1,y1) in [0,1]^2, thickness `t`
+    /// (also unit-relative), intensity `v`.
+    pub fn stroke(&mut self, x0: f32, y0: f32, x1: f32, y1: f32, t: f32, v: f32) {
+        let (sw, sh) = (self.w as f32, self.h as f32);
+        let (ax, ay) = (x0 * sw, y0 * sh);
+        let (bx, by) = (x1 * sw, y1 * sh);
+        let r = t * sw.max(sh);
+        let min_x = (ax.min(bx) - r - 1.0).floor().max(0.0) as usize;
+        let max_x = (ax.max(bx) + r + 1.0).ceil().min(sw - 1.0) as usize;
+        let min_y = (ay.min(by) - r - 1.0).floor().max(0.0) as usize;
+        let max_y = (ay.max(by) + r + 1.0).ceil().min(sh - 1.0) as usize;
+        let (dx, dy) = (bx - ax, by - ay);
+        let len2 = (dx * dx + dy * dy).max(1e-9);
+        for y in min_y..=max_y {
+            for x in min_x..=max_x {
+                let (px, py) = (x as f32 + 0.5, y as f32 + 0.5);
+                let s = (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0);
+                let (cx, cy) = (ax + s * dx, ay + s * dy);
+                let d = ((px - cx).powi(2) + (py - cy).powi(2)).sqrt();
+                // Soft edge: full inside r-0.7, fades to 0 at r+0.7.
+                let alpha = ((r + 0.7 - d) / 1.4).clamp(0.0, 1.0);
+                if alpha > 0.0 {
+                    self.add(x, y, alpha * v);
+                }
+            }
+        }
+    }
+
+    /// Fill a convex/concave polygon (even-odd rule) given unit-coordinate
+    /// vertices, with intensity `v`.
+    pub fn fill_polygon(&mut self, verts: &[(f32, f32)], v: f32) {
+        if verts.len() < 3 {
+            return;
+        }
+        let (sw, sh) = (self.w as f32, self.h as f32);
+        let pts: Vec<(f32, f32)> = verts.iter().map(|&(x, y)| (x * sw, y * sh)).collect();
+        for y in 0..self.h {
+            let py = y as f32 + 0.5;
+            // Collect x crossings.
+            let mut xs: Vec<f32> = Vec::new();
+            for i in 0..pts.len() {
+                let (x0, y0) = pts[i];
+                let (x1, y1) = pts[(i + 1) % pts.len()];
+                if (y0 <= py && py < y1) || (y1 <= py && py < y0) {
+                    xs.push(x0 + (py - y0) / (y1 - y0) * (x1 - x0));
+                }
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pair in xs.chunks(2) {
+                if pair.len() == 2 {
+                    let lo = pair[0].max(0.0) as usize;
+                    let hi = (pair[1].min(sw - 1.0)) as usize;
+                    for x in lo..=hi {
+                        self.add(x, y, v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Apply a small affine jitter to unit-space points: rotation (radians),
+/// isotropic scale, translation.
+pub fn jitter(points: &mut [(f32, f32)], rot: f32, scale: f32, dx: f32, dy: f32) {
+    let (s, c) = rot.sin_cos();
+    for p in points.iter_mut() {
+        let (x, y) = (p.0 - 0.5, p.1 - 0.5);
+        let xr = c * x - s * y;
+        let yr = s * x + c * y;
+        p.0 = 0.5 + xr * scale + dx;
+        p.1 = 0.5 + yr * scale + dy;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stroke_marks_pixels() {
+        let mut c = Canvas::new(28, 28);
+        c.stroke(0.2, 0.5, 0.8, 0.5, 0.05, 1.0);
+        let lit = c.pix.iter().filter(|&&v| v > 0.5).count();
+        assert!(lit > 10, "stroke should light pixels: {lit}");
+        // Midline pixel should be bright; corner dark.
+        assert!(c.pix[14 * 28 + 14] > 0.8);
+        assert_eq!(c.pix[0], 0.0);
+    }
+
+    #[test]
+    fn polygon_fills_interior() {
+        let mut c = Canvas::new(28, 28);
+        c.fill_polygon(&[(0.2, 0.2), (0.8, 0.2), (0.8, 0.8), (0.2, 0.8)], 1.0);
+        assert!(c.pix[14 * 28 + 14] > 0.9, "center filled");
+        assert_eq!(c.pix[0], 0.0, "outside empty");
+    }
+
+    #[test]
+    fn jitter_preserves_centroid_roughly() {
+        let mut pts = vec![(0.3, 0.3), (0.7, 0.3), (0.5, 0.7)];
+        jitter(&mut pts, 0.3, 1.0, 0.0, 0.0);
+        let cx: f32 = pts.iter().map(|p| p.0).sum::<f32>() / 3.0;
+        assert!((cx - 0.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,57 @@
+//! # HEAM — High-Efficiency Approximate Multiplier optimization for DNNs
+//!
+//! Full-system reproduction of Zheng et al., *HEAM: High-Efficiency
+//! Approximate Multiplier Optimization for Deep Neural Networks* (cs.AR 2022)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organized as a set of substrates plus the paper's core
+//! contribution on top:
+//!
+//! * [`logic`] — gate-level netlist IR with 64-wide bit-parallel simulation.
+//!   Every multiplier in this crate is a *real* gate network, evaluated
+//!   exhaustively over all 256x256 operand pairs.
+//! * [`mult`] — the multiplier zoo: exact Wallace tree, the reproduced
+//!   baselines (KMap, CR, AC, OU) and the HEAM compressed-partial-product
+//!   multiplier materialized from an optimizer genome.
+//! * [`cost`] — the synthesis-cost substrate (Synopsys DC / Vivado
+//!   substitute): a 65nm-class standard-cell model with critical-path timing
+//!   and switching-activity power, plus a cut-based k-LUT technology mapper
+//!   for FPGA LUT utilization.
+//! * [`opt`] — the paper's optimization method: operand probability
+//!   distributions, the distribution-weighted expected-squared-error
+//!   objective (Eq. 3-6), a mixed-integer genetic algorithm, and the
+//!   OR-merge fine-tuning pass.
+//! * [`nn`] — ApproxFlow: a DAG-based quantized (8-bit, Jacob et al. scheme)
+//!   inference engine with pluggable multiplication (exact or LUT).
+//! * [`data`] — synthetic dataset substitutes for MNIST / FashionMNIST /
+//!   CIFAR-10 / CORA (no network access in the build environment).
+//! * [`accel`] — DNN-accelerator module models (TASU, Systolic Cube,
+//!   16x16 Systolic Array) for the Table III / IV experiments.
+//! * [`runtime`] — PJRT wrapper: load AOT-lowered HLO text artifacts
+//!   produced by `python/compile/aot.py` and execute them.
+//! * [`coordinator`] — the L3 serving layer: request router, dynamic
+//!   batcher, worker dispatch and metrics (threads + channels; the offline
+//!   crate snapshot has no tokio).
+//! * [`bench`] — regeneration harness for every table and figure in the
+//!   paper's evaluation section.
+//! * [`util`] — offline-crate substitutes: PRNG, mini-JSON, tensor-bundle
+//!   IO, CLI parsing, and a small property-testing framework.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod accel;
+pub mod bench;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod logic;
+pub mod mult;
+pub mod nn;
+pub mod opt;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only error crate in the offline
+/// registry snapshot).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,451 @@
+//! Netlist construction with constant folding and structural hashing.
+//!
+//! The builder performs the local simplifications a synthesis front-end
+//! would do for free (constant propagation, `x op x`, hash-consing of
+//! identical gates), so gate counts reflect what DC/Vivado would actually
+//! keep — important for the cost model's realism.
+
+use std::collections::HashMap;
+
+use super::gate::{Gate, GateKind, Signal};
+use super::netlist::Netlist;
+
+/// Incremental netlist builder.
+pub struct NetBuilder {
+    gates: Vec<Gate>,
+    num_inputs: usize,
+    outputs: Vec<Signal>,
+    input_sigs: Vec<Signal>,
+    const0: Option<Signal>,
+    const1: Option<Signal>,
+    /// Structural hash: (kind, a, b) -> existing signal.
+    cse: HashMap<(GateKind, u32, u32), Signal>,
+}
+
+impl NetBuilder {
+    /// Builder for a netlist with `num_inputs` primary input bits. Input
+    /// nodes are created eagerly so `Input(i)` indexing is stable.
+    pub fn new(num_inputs: usize) -> Self {
+        let mut b = Self {
+            gates: Vec::new(),
+            num_inputs,
+            outputs: Vec::new(),
+            input_sigs: Vec::new(),
+            const0: None,
+            const1: None,
+            cse: HashMap::new(),
+        };
+        for i in 0..num_inputs {
+            let s = b.push(GateKind::Input(i as u16), Signal(0), Signal(0));
+            b.input_sigs.push(s);
+        }
+        b
+    }
+
+    fn push(&mut self, kind: GateKind, a: Signal, b: Signal) -> Signal {
+        let s = Signal(self.gates.len() as u32);
+        self.gates.push(Gate { kind, a, b });
+        s
+    }
+
+    /// Primary input `i`.
+    pub fn input(&self, i: usize) -> Signal {
+        self.input_sigs[i]
+    }
+
+    /// Constant signal.
+    pub fn constant(&mut self, v: bool) -> Signal {
+        if v {
+            if let Some(s) = self.const1 {
+                return s;
+            }
+            let s = self.push(GateKind::Const(true), Signal(0), Signal(0));
+            self.const1 = Some(s);
+            s
+        } else {
+            if let Some(s) = self.const0 {
+                return s;
+            }
+            let s = self.push(GateKind::Const(false), Signal(0), Signal(0));
+            self.const0 = Some(s);
+            s
+        }
+    }
+
+    fn const_of(&self, s: Signal) -> Option<bool> {
+        match self.gates[s.idx()].kind {
+            GateKind::Const(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn binary(&mut self, kind: GateKind, a: Signal, b: Signal) -> Signal {
+        // Constant folding.
+        match (self.const_of(a), self.const_of(b)) {
+            (Some(x), Some(y)) => {
+                let v = match kind {
+                    GateKind::And => x & y,
+                    GateKind::Or => x | y,
+                    GateKind::Xor => x ^ y,
+                    GateKind::Nand => !(x & y),
+                    GateKind::Nor => !(x | y),
+                    GateKind::Xnor => !(x ^ y),
+                    _ => unreachable!(),
+                };
+                return self.constant(v);
+            }
+            (Some(c), None) => return self.fold_one_const(kind, c, b),
+            (None, Some(c)) => return self.fold_one_const(kind, c, a),
+            (None, None) => {}
+        }
+        // x op x.
+        if a == b {
+            match kind {
+                GateKind::And | GateKind::Or => return a,
+                GateKind::Xor => return self.constant(false),
+                GateKind::Xnor => return self.constant(true),
+                GateKind::Nand | GateKind::Nor => return self.not(a),
+                _ => {}
+            }
+        }
+        // Hash-consing with commutative canonicalization.
+        let (lo, hi) = if a.0 <= b.0 { (a, b) } else { (b, a) };
+        let key = (kind, lo.0, hi.0);
+        if let Some(&s) = self.cse.get(&key) {
+            return s;
+        }
+        let s = self.push(kind, lo, hi);
+        self.cse.insert(key, s);
+        s
+    }
+
+    fn fold_one_const(&mut self, kind: GateKind, c: bool, x: Signal) -> Signal {
+        match (kind, c) {
+            (GateKind::And, false) => self.constant(false),
+            (GateKind::And, true) => x,
+            (GateKind::Or, true) => self.constant(true),
+            (GateKind::Or, false) => x,
+            (GateKind::Xor, false) => x,
+            (GateKind::Xor, true) => self.not(x),
+            (GateKind::Nand, false) => self.constant(true),
+            (GateKind::Nand, true) => self.not(x),
+            (GateKind::Nor, true) => self.constant(false),
+            (GateKind::Nor, false) => self.not(x),
+            (GateKind::Xnor, true) => x,
+            (GateKind::Xnor, false) => self.not(x),
+            _ => unreachable!(),
+        }
+    }
+
+    /// NOT gate (folds constants and double negation).
+    pub fn not(&mut self, a: Signal) -> Signal {
+        if let Some(v) = self.const_of(a) {
+            return self.constant(!v);
+        }
+        if let Gate { kind: GateKind::Not, a: inner, .. } = self.gates[a.idx()] {
+            return inner;
+        }
+        let key = (GateKind::Not, a.0, a.0);
+        if let Some(&s) = self.cse.get(&key) {
+            return s;
+        }
+        let s = self.push(GateKind::Not, a, a);
+        self.cse.insert(key, s);
+        s
+    }
+
+    /// AND gate.
+    pub fn and(&mut self, a: Signal, b: Signal) -> Signal {
+        self.binary(GateKind::And, a, b)
+    }
+
+    /// OR gate.
+    pub fn or(&mut self, a: Signal, b: Signal) -> Signal {
+        self.binary(GateKind::Or, a, b)
+    }
+
+    /// XOR gate.
+    pub fn xor(&mut self, a: Signal, b: Signal) -> Signal {
+        self.binary(GateKind::Xor, a, b)
+    }
+
+    /// NAND gate.
+    pub fn nand(&mut self, a: Signal, b: Signal) -> Signal {
+        self.binary(GateKind::Nand, a, b)
+    }
+
+    /// NOR gate.
+    pub fn nor(&mut self, a: Signal, b: Signal) -> Signal {
+        self.binary(GateKind::Nor, a, b)
+    }
+
+    /// XNOR gate.
+    pub fn xnor(&mut self, a: Signal, b: Signal) -> Signal {
+        self.binary(GateKind::Xnor, a, b)
+    }
+
+    /// n-ary AND (balanced tree).
+    pub fn and_all(&mut self, xs: &[Signal]) -> Signal {
+        self.tree(xs, Self::and, true)
+    }
+
+    /// n-ary OR (balanced tree).
+    pub fn or_all(&mut self, xs: &[Signal]) -> Signal {
+        self.tree(xs, Self::or, false)
+    }
+
+    /// n-ary XOR (balanced tree).
+    pub fn xor_all(&mut self, xs: &[Signal]) -> Signal {
+        self.tree(xs, Self::xor, false)
+    }
+
+    fn tree(&mut self, xs: &[Signal], op: fn(&mut Self, Signal, Signal) -> Signal, empty: bool) -> Signal {
+        match xs.len() {
+            0 => self.constant(empty),
+            1 => xs[0],
+            _ => {
+                let mut layer: Vec<Signal> = xs.to_vec();
+                while layer.len() > 1 {
+                    let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+                    for pair in layer.chunks(2) {
+                        next.push(if pair.len() == 2 { op(self, pair[0], pair[1]) } else { pair[0] });
+                    }
+                    layer = next;
+                }
+                layer[0]
+            }
+        }
+    }
+
+    /// 2:1 mux: `sel ? t : f`.
+    pub fn mux(&mut self, sel: Signal, t: Signal, f: Signal) -> Signal {
+        if t == f {
+            return t;
+        }
+        let nt = self.and(sel, t);
+        let ns = self.not(sel);
+        let nf = self.and(ns, f);
+        self.or(nt, nf)
+    }
+
+    /// Half adder: returns (sum, carry).
+    pub fn half_adder(&mut self, a: Signal, b: Signal) -> (Signal, Signal) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    /// Full adder: returns (sum, carry).
+    pub fn full_adder(&mut self, a: Signal, b: Signal, c: Signal) -> (Signal, Signal) {
+        let axb = self.xor(a, b);
+        let sum = self.xor(axb, c);
+        let t1 = self.and(axb, c);
+        let t2 = self.and(a, b);
+        let carry = self.or(t1, t2);
+        (sum, carry)
+    }
+
+    /// Ripple-carry addition of two little-endian bit vectors (padded to the
+    /// longer length). Returns `max(len)+1` sum bits.
+    pub fn ripple_add(&mut self, a: &[Signal], b: &[Signal]) -> Vec<Signal> {
+        let n = a.len().max(b.len());
+        let zero = self.constant(false);
+        let mut sum = Vec::with_capacity(n + 1);
+        let mut carry = zero;
+        for i in 0..n {
+            let x = a.get(i).copied().unwrap_or(zero);
+            let y = b.get(i).copied().unwrap_or(zero);
+            let (s, c) = self.full_adder(x, y, carry);
+            sum.push(s);
+            carry = c;
+        }
+        sum.push(carry);
+        sum
+    }
+
+    /// Carry-save (Wallace) reduction of a column matrix down to two rows,
+    /// then a final ripple add. `columns[w]` holds the bits of weight `w`.
+    /// Returns the little-endian sum bits.
+    pub fn reduce_columns(&mut self, columns: &mut Vec<Vec<Signal>>) -> Vec<Signal> {
+        // Wallace: apply full/half adders per column until every column has
+        // at most 2 bits.
+        loop {
+            let max_h = columns.iter().map(|c| c.len()).max().unwrap_or(0);
+            if max_h <= 2 {
+                break;
+            }
+            let mut next: Vec<Vec<Signal>> = vec![Vec::new(); columns.len() + 1];
+            for w in 0..columns.len() {
+                let col = std::mem::take(&mut columns[w]);
+                let mut i = 0;
+                while col.len() - i >= 3 {
+                    let (s, c) = self.full_adder(col[i], col[i + 1], col[i + 2]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    i += 3;
+                }
+                if col.len() - i == 2 {
+                    let (s, c) = self.half_adder(col[i], col[i + 1]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                } else if col.len() - i == 1 {
+                    next[w].push(col[i]);
+                }
+            }
+            while next.last().is_some_and(|c| c.is_empty()) {
+                next.pop();
+            }
+            *columns = next;
+        }
+        // Final two-row carry-propagate add.
+        let zero = self.constant(false);
+        let mut row_a = Vec::with_capacity(columns.len());
+        let mut row_b = Vec::with_capacity(columns.len());
+        for col in columns.iter() {
+            row_a.push(col.first().copied().unwrap_or(zero));
+            row_b.push(col.get(1).copied().unwrap_or(zero));
+        }
+        self.ripple_add(&row_a, &row_b)
+    }
+
+    /// Mark a signal as the next output bit.
+    pub fn output(&mut self, s: Signal) {
+        self.outputs.push(s);
+    }
+
+    /// Mark a little-endian vector of signals as the outputs.
+    pub fn output_vec(&mut self, ss: &[Signal]) {
+        self.outputs.extend_from_slice(ss);
+    }
+
+    /// Finalize into a [`Netlist`] (dead logic pruned).
+    pub fn finish(self, name: &str) -> Netlist {
+        let mut n = Netlist {
+            gates: self.gates,
+            num_inputs: self.num_inputs,
+            outputs: self.outputs,
+            name: name.to_string(),
+            output_signed: false,
+        };
+        n.prune_dead();
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustively check an n-input netlist against a reference closure.
+    fn check_exhaustive(n: &Netlist, bits: usize, f: impl Fn(u64) -> u64) {
+        for input in 0..(1u64 << bits) {
+            assert_eq!(n.eval_word(input), f(input), "input={input:#b}");
+        }
+    }
+
+    #[test]
+    fn full_adder_truth_table() {
+        let mut b = NetBuilder::new(3);
+        let (x, y, c) = (b.input(0), b.input(1), b.input(2));
+        let (s, co) = b.full_adder(x, y, c);
+        b.output(s);
+        b.output(co);
+        let n = b.finish("fa");
+        check_exhaustive(&n, 3, |i| {
+            let ones = (i & 1) + ((i >> 1) & 1) + ((i >> 2) & 1);
+            ones // sum bit | carry bit << 1 == popcount as 2-bit number
+        });
+    }
+
+    #[test]
+    fn ripple_add_4bit() {
+        let mut b = NetBuilder::new(8);
+        let a: Vec<_> = (0..4).map(|i| b.input(i)).collect();
+        let c: Vec<_> = (4..8).map(|i| b.input(i)).collect();
+        let s = b.ripple_add(&a, &c);
+        b.output_vec(&s);
+        let n = b.finish("add4");
+        check_exhaustive(&n, 8, |i| {
+            let x = i & 0xF;
+            let y = (i >> 4) & 0xF;
+            x + y
+        });
+    }
+
+    #[test]
+    fn reduce_columns_sums_bits() {
+        // Sum of 5 single-weight bits = popcount (3-bit result).
+        let mut b = NetBuilder::new(5);
+        let mut cols = vec![(0..5).map(|i| b.input(i)).collect::<Vec<_>>()];
+        let s = b.reduce_columns(&mut cols);
+        b.output_vec(&s);
+        let n = b.finish("pop5");
+        check_exhaustive(&n, 5, |i| i.count_ones() as u64);
+    }
+
+    #[test]
+    fn mux_selects() {
+        let mut b = NetBuilder::new(3);
+        let (sel, t, f) = (b.input(0), b.input(1), b.input(2));
+        let m = b.mux(sel, t, f);
+        b.output(m);
+        let n = b.finish("mux");
+        check_exhaustive(&n, 3, |i| {
+            let sel = i & 1;
+            let t = (i >> 1) & 1;
+            let f = (i >> 2) & 1;
+            if sel == 1 { t } else { f }
+        });
+    }
+
+    #[test]
+    fn constant_folding_shrinks() {
+        let mut b = NetBuilder::new(1);
+        let x = b.input(0);
+        let zero = b.constant(false);
+        let dead = b.and(x, zero); // folds to const 0
+        let o = b.or(dead, x); // folds to x
+        b.output(o);
+        let n = b.finish("fold");
+        assert_eq!(n.gate_count(), 0, "everything folded away");
+        check_exhaustive(&n, 1, |i| i & 1);
+    }
+
+    #[test]
+    fn cse_dedups() {
+        let mut b = NetBuilder::new(2);
+        let (x, y) = (b.input(0), b.input(1));
+        let a1 = b.and(x, y);
+        let a2 = b.and(y, x); // commutative dup
+        assert_eq!(a1, a2);
+        let o = b.or(a1, a2); // x op x -> x
+        assert_eq!(o, a1);
+    }
+
+    #[test]
+    fn double_negation_cancels() {
+        let mut b = NetBuilder::new(1);
+        let x = b.input(0);
+        let nx = b.not(x);
+        let nnx = b.not(nx);
+        assert_eq!(nnx, x);
+    }
+
+    #[test]
+    fn nary_ops() {
+        let mut b = NetBuilder::new(4);
+        let xs: Vec<_> = (0..4).map(|i| b.input(i)).collect();
+        let a = b.and_all(&xs);
+        let o = b.or_all(&xs);
+        let x = b.xor_all(&xs);
+        b.output(a);
+        b.output(o);
+        b.output(x);
+        let n = b.finish("nary");
+        check_exhaustive(&n, 4, |i| {
+            let bits = i & 0xF;
+            let and = (bits == 0xF) as u64;
+            let or = (bits != 0) as u64;
+            let xor = (bits.count_ones() as u64) & 1;
+            and | (or << 1) | (xor << 2)
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Gate and signal definitions for the netlist IR.
+
+/// Index of a signal (node output) in a [`crate::logic::Netlist`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Signal(pub u32);
+
+impl Signal {
+    /// Raw index.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The primitive cell set. Two-input cells only; wider functions are
+/// composed by the builder. This matches what a 65nm standard-cell mapper
+/// or an FPGA technology mapper consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    /// Primary input; payload = input bit position.
+    Input(u16),
+    /// Constant 0 or 1.
+    Const(bool),
+    Not,
+    And,
+    Or,
+    Xor,
+    Nand,
+    Nor,
+    Xnor,
+}
+
+impl GateKind {
+    /// Number of data inputs this cell consumes.
+    pub fn arity(self) -> usize {
+        match self {
+            GateKind::Input(_) | GateKind::Const(_) => 0,
+            GateKind::Not => 1,
+            _ => 2,
+        }
+    }
+
+    /// Human-readable cell name (used in reports and the FPGA mapper).
+    pub fn name(self) -> &'static str {
+        match self {
+            GateKind::Input(_) => "input",
+            GateKind::Const(_) => "const",
+            GateKind::Not => "INV",
+            GateKind::And => "AND2",
+            GateKind::Or => "OR2",
+            GateKind::Xor => "XOR2",
+            GateKind::Nand => "NAND2",
+            GateKind::Nor => "NOR2",
+            GateKind::Xnor => "XNOR2",
+        }
+    }
+}
+
+/// One node: a cell and its input signals (`b` unused for unary cells,
+/// both unused for sources).
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub a: Signal,
+    pub b: Signal,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_kind() {
+        assert_eq!(GateKind::Input(3).arity(), 0);
+        assert_eq!(GateKind::Const(true).arity(), 0);
+        assert_eq!(GateKind::Not.arity(), 1);
+        for k in [GateKind::And, GateKind::Or, GateKind::Xor, GateKind::Nand, GateKind::Nor, GateKind::Xnor] {
+            assert_eq!(k.arity(), 2, "{k:?}");
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Gate-level logic substrate.
+//!
+//! Every multiplier in this repository is materialized as a [`Netlist`] of
+//! 2-input gates (AND/OR/XOR/NAND/NOR/XNOR) plus NOT and constants — the
+//! same primitive set a standard-cell mapper would target. The netlist is
+//! evaluated 64 operand-pairs at a time ([`sim`]), so the exhaustive
+//! 256x256 LUT of an 8x8 multiplier costs 1024 block evaluations.
+
+pub mod builder;
+pub mod gate;
+pub mod netlist;
+pub mod sim;
+
+pub use builder::NetBuilder;
+pub use gate::{Gate, GateKind, Signal};
+pub use netlist::Netlist;
+pub use sim::Simulator;

@@ -1,0 +1,222 @@
+//! The netlist container.
+//!
+//! Nodes are stored in construction order and may only reference earlier
+//! nodes (the builder enforces this), so the vector order *is* a
+//! topological order — evaluation and timing analysis are single passes.
+
+use super::gate::{Gate, GateKind, Signal};
+
+/// A combinational gate network with named primary inputs (bit positions)
+/// and an ordered list of output signals (LSB first).
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub(crate) gates: Vec<Gate>,
+    pub(crate) num_inputs: usize,
+    pub(crate) outputs: Vec<Signal>,
+    /// Optional human-readable name, used in cost reports.
+    pub name: String,
+    /// When true, the output word is two's-complement (LUT generation
+    /// sign-extends from the output width). Multipliers whose approximation
+    /// can go negative (e.g. OU's linear planes) set this.
+    pub output_signed: bool,
+}
+
+impl Netlist {
+    /// All nodes (inputs, constants, gates) in topological order.
+    pub fn nodes(&self) -> &[Gate] {
+        &self.gates
+    }
+
+    /// Number of primary input bits.
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    /// Output signals, LSB first.
+    pub fn outputs(&self) -> &[Signal] {
+        &self.outputs
+    }
+
+    /// Number of output bits.
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Count of *logic* cells (excludes inputs and constants).
+    pub fn gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| !matches!(g.kind, GateKind::Input(_) | GateKind::Const(_)))
+            .count()
+    }
+
+    /// Per-cell-kind counts, for cost reports.
+    pub fn cell_histogram(&self) -> Vec<(&'static str, usize)> {
+        let mut counts: std::collections::BTreeMap<&'static str, usize> = Default::default();
+        for g in &self.gates {
+            if !matches!(g.kind, GateKind::Input(_) | GateKind::Const(_)) {
+                *counts.entry(g.kind.name()).or_insert(0) += 1;
+            }
+        }
+        counts.into_iter().collect()
+    }
+
+    /// Logic depth (levels) of each node; inputs and constants are level 0.
+    pub fn levels(&self) -> Vec<u32> {
+        let mut lv = vec![0u32; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            lv[i] = match g.kind.arity() {
+                0 => 0,
+                1 => lv[g.a.idx()] + 1,
+                _ => lv[g.a.idx()].max(lv[g.b.idx()]) + 1,
+            };
+        }
+        lv
+    }
+
+    /// Maximum logic depth over the outputs.
+    pub fn depth(&self) -> u32 {
+        let lv = self.levels();
+        self.outputs.iter().map(|s| lv[s.idx()]).max().unwrap_or(0)
+    }
+
+    /// Fanout count per node (number of gate inputs each signal drives,
+    /// plus 1 for each time it is a primary output).
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.gates.len()];
+        for g in &self.gates {
+            match g.kind.arity() {
+                1 => fo[g.a.idx()] += 1,
+                2 => {
+                    fo[g.a.idx()] += 1;
+                    fo[g.b.idx()] += 1;
+                }
+                _ => {}
+            }
+        }
+        for s in &self.outputs {
+            fo[s.idx()] += 1;
+        }
+        fo
+    }
+
+    /// Drop gates that reach no output (dead-code elimination). Returns the
+    /// number of removed logic cells. Keeps all primary inputs so input
+    /// indexing is stable.
+    pub fn prune_dead(&mut self) -> usize {
+        let n = self.gates.len();
+        let mut live = vec![false; n];
+        let mut stack: Vec<usize> = self.outputs.iter().map(|s| s.idx()).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            let g = self.gates[i];
+            match g.kind.arity() {
+                1 => stack.push(g.a.idx()),
+                2 => {
+                    stack.push(g.a.idx());
+                    stack.push(g.b.idx());
+                }
+                _ => {}
+            }
+        }
+        // Inputs stay live regardless.
+        for (i, g) in self.gates.iter().enumerate() {
+            if matches!(g.kind, GateKind::Input(_)) {
+                live[i] = true;
+            }
+        }
+        let removed = self
+            .gates
+            .iter()
+            .enumerate()
+            .filter(|(i, g)| !live[*i] && !matches!(g.kind, GateKind::Input(_) | GateKind::Const(_)))
+            .count();
+        // Remap.
+        let mut new_idx = vec![u32::MAX; n];
+        let mut new_gates = Vec::with_capacity(n);
+        for (i, g) in self.gates.iter().enumerate() {
+            if live[i] {
+                let mut g = *g;
+                if g.kind.arity() >= 1 {
+                    g.a = Signal(new_idx[g.a.idx()]);
+                }
+                if g.kind.arity() >= 2 {
+                    g.b = Signal(new_idx[g.b.idx()]);
+                }
+                new_idx[i] = new_gates.len() as u32;
+                new_gates.push(g);
+            }
+        }
+        for s in &mut self.outputs {
+            *s = Signal(new_idx[s.idx()]);
+        }
+        self.gates = new_gates;
+        removed
+    }
+
+    /// Evaluate the netlist on a single (multi-bit) input word. Input bit
+    /// `i` of the word feeds `Input(i)`. Returns the output bits packed
+    /// LSB-first into a u64. Convenience wrapper over the 64-wide simulator.
+    pub fn eval_word(&self, input: u64) -> u64 {
+        let sim = super::sim::Simulator::new(self);
+        sim.eval_single(input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::logic::NetBuilder;
+
+    #[test]
+    fn depth_and_counts() {
+        let mut b = NetBuilder::new(2);
+        let x = b.input(0);
+        let y = b.input(1);
+        let s = b.xor(x, y);
+        let c = b.and(x, y);
+        b.output(s);
+        b.output(c);
+        let n = b.finish("ha");
+        assert_eq!(n.gate_count(), 2);
+        assert_eq!(n.depth(), 1);
+        assert_eq!(n.num_outputs(), 2);
+    }
+
+    #[test]
+    fn prune_removes_dead_logic() {
+        let mut b = NetBuilder::new(2);
+        let x = b.input(0);
+        let y = b.input(1);
+        let _dead = b.and(x, y);
+        let live = b.xor(x, y);
+        b.output(live);
+        // finish() prunes, so the dead AND is already gone.
+        let mut n = b.finish("t");
+        assert_eq!(n.gate_count(), 1);
+        let removed = n.prune_dead();
+        assert_eq!(removed, 0);
+        assert_eq!(n.gate_count(), 1);
+        // Still evaluates correctly.
+        assert_eq!(n.eval_word(0b01), 1);
+        assert_eq!(n.eval_word(0b11), 0);
+    }
+
+    #[test]
+    fn eval_word_half_adder() {
+        let mut b = NetBuilder::new(2);
+        let x = b.input(0);
+        let y = b.input(1);
+        let s = b.xor(x, y);
+        let c = b.and(x, y);
+        b.output(s);
+        b.output(c);
+        let n = b.finish("ha");
+        assert_eq!(n.eval_word(0b00), 0b00);
+        assert_eq!(n.eval_word(0b01), 0b01);
+        assert_eq!(n.eval_word(0b10), 0b01);
+        assert_eq!(n.eval_word(0b11), 0b10);
+    }
+}

@@ -1,0 +1,207 @@
+//! 64-wide bit-parallel netlist simulation.
+//!
+//! Each signal is simulated as a `u64` lane vector: one evaluation pass
+//! computes the netlist on 64 independent input words. Exhausting an 8x8
+//! multiplier's 65 536 operand pairs therefore costs 1 024 passes — this
+//! is the hot path behind LUT generation and switching-activity power
+//! estimation (see EXPERIMENTS.md §Perf).
+
+use super::gate::GateKind;
+use super::netlist::Netlist;
+
+/// Reusable simulator (owns the per-signal lane buffer).
+pub struct Simulator<'a> {
+    net: &'a Netlist,
+    lanes: Vec<u64>,
+}
+
+impl<'a> Simulator<'a> {
+    /// New simulator for a netlist.
+    pub fn new(net: &'a Netlist) -> Self {
+        Self {
+            net,
+            lanes: vec![0; net.nodes().len()],
+        }
+    }
+
+    /// Evaluate 64 input words at once. `inputs[i]` packs bit `i` of each of
+    /// the 64 words (bit-sliced layout): lane `j` of `inputs[i]` is input
+    /// bit `i` of word `j`. Returns the bit-sliced outputs likewise.
+    pub fn eval64(&mut self, inputs: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(inputs.len(), self.net.num_inputs());
+        let gates = self.net.nodes();
+        for (i, g) in gates.iter().enumerate() {
+            self.lanes[i] = match g.kind {
+                GateKind::Input(bit) => inputs[bit as usize],
+                GateKind::Const(v) => {
+                    if v {
+                        u64::MAX
+                    } else {
+                        0
+                    }
+                }
+                GateKind::Not => !self.lanes[g.a.idx()],
+                GateKind::And => self.lanes[g.a.idx()] & self.lanes[g.b.idx()],
+                GateKind::Or => self.lanes[g.a.idx()] | self.lanes[g.b.idx()],
+                GateKind::Xor => self.lanes[g.a.idx()] ^ self.lanes[g.b.idx()],
+                GateKind::Nand => !(self.lanes[g.a.idx()] & self.lanes[g.b.idx()]),
+                GateKind::Nor => !(self.lanes[g.a.idx()] | self.lanes[g.b.idx()]),
+                GateKind::Xnor => !(self.lanes[g.a.idx()] ^ self.lanes[g.b.idx()]),
+            };
+        }
+        self.net
+            .outputs()
+            .iter()
+            .map(|s| self.lanes[s.idx()])
+            .collect()
+    }
+
+    /// Evaluate a single input word; returns the output bits packed
+    /// LSB-first.
+    pub fn eval_single(mut self, input: u64) -> u64 {
+        let n_in = self.net.num_inputs();
+        let inputs: Vec<u64> = (0..n_in)
+            .map(|i| if (input >> i) & 1 == 1 { u64::MAX } else { 0 })
+            .collect();
+        let outs = self.eval64(&inputs);
+        let mut word = 0u64;
+        for (i, lane) in outs.iter().enumerate() {
+            word |= (lane & 1) << i;
+        }
+        word
+    }
+
+    /// Evaluate a batch of arbitrary input words (not necessarily 64),
+    /// returning one output word per input word.
+    pub fn eval_words(&mut self, words: &[u64]) -> Vec<u64> {
+        let n_in = self.net.num_inputs();
+        let n_out = self.net.num_outputs();
+        let mut out = Vec::with_capacity(words.len());
+        let mut sliced = vec![0u64; n_in];
+        for chunk in words.chunks(64) {
+            for s in sliced.iter_mut() {
+                *s = 0;
+            }
+            for (lane, &w) in chunk.iter().enumerate() {
+                for (i, s) in sliced.iter_mut().enumerate() {
+                    *s |= ((w >> i) & 1) << lane;
+                }
+            }
+            let outs = self.eval64(&sliced);
+            for lane in 0..chunk.len() {
+                let mut word = 0u64;
+                for (i, o) in outs.iter().enumerate().take(n_out) {
+                    word |= ((o >> lane) & 1) << i;
+                }
+                out.push(word);
+            }
+        }
+        out
+    }
+
+    /// Count gate output toggles between consecutive evaluations of the
+    /// given input words — the switching-activity estimate behind dynamic
+    /// power. Returns (total toggles across all logic cells, toggles per
+    /// cell index) over `words.len() - 1` transitions.
+    pub fn toggle_counts(&mut self, words: &[u64]) -> (u64, Vec<u64>) {
+        let gates = self.net.nodes();
+        let n_in = self.net.num_inputs();
+        let mut per_gate = vec![0u64; gates.len()];
+        let mut prev: Option<Vec<u64>> = None;
+        let mut sliced = vec![0u64; n_in];
+        // Evaluate in 64-word blocks; toggles are counted between adjacent
+        // lanes within a block and across block boundaries.
+        for chunk in words.chunks(64) {
+            for s in sliced.iter_mut() {
+                *s = 0;
+            }
+            for (lane, &w) in chunk.iter().enumerate() {
+                for (i, s) in sliced.iter_mut().enumerate() {
+                    *s |= ((w >> i) & 1) << lane;
+                }
+            }
+            self.eval64(&sliced);
+            for (gi, g) in gates.iter().enumerate() {
+                if matches!(g.kind, GateKind::Input(_) | GateKind::Const(_)) {
+                    continue;
+                }
+                let v = self.lanes[gi];
+                // Toggles between lane j and lane j+1: bits of (v ^ (v>>1)).
+                let within = (v ^ (v >> 1)) & !(1u64 << 63).wrapping_sub(0); // all 63 adjacent pairs
+                let mask = if chunk.len() == 64 {
+                    u64::MAX >> 1
+                } else {
+                    (1u64 << (chunk.len().saturating_sub(1))) - 1
+                };
+                per_gate[gi] += (within & mask).count_ones() as u64;
+                if let Some(p) = &prev {
+                    // Boundary: last lane of previous block vs lane 0.
+                    let last = (p[gi] >> 63) & 1;
+                    let first = v & 1;
+                    per_gate[gi] += (last ^ first) & 1;
+                }
+            }
+            prev = Some(self.lanes.clone());
+        }
+        let total = per_gate.iter().sum();
+        (total, per_gate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::NetBuilder;
+
+    fn adder4() -> Netlist {
+        let mut b = NetBuilder::new(8);
+        let a: Vec<_> = (0..4).map(|i| b.input(i)).collect();
+        let c: Vec<_> = (4..8).map(|i| b.input(i)).collect();
+        let s = b.ripple_add(&a, &c);
+        b.output_vec(&s);
+        b.finish("add4")
+    }
+
+    #[test]
+    fn eval_words_matches_eval_single() {
+        let n = adder4();
+        let words: Vec<u64> = (0..256).collect();
+        let mut sim = Simulator::new(&n);
+        let outs = sim.eval_words(&words);
+        for (&w, &o) in words.iter().zip(&outs) {
+            assert_eq!(o, (w & 0xF) + ((w >> 4) & 0xF));
+        }
+    }
+
+    #[test]
+    fn eval_words_partial_chunk() {
+        let n = adder4();
+        let words: Vec<u64> = (0..70).collect(); // crosses a 64-lane boundary
+        let mut sim = Simulator::new(&n);
+        let outs = sim.eval_words(&words);
+        assert_eq!(outs.len(), 70);
+        assert_eq!(outs[69], (69 & 0xF) + ((69 >> 4) & 0xF));
+    }
+
+    #[test]
+    fn toggle_counts_zero_for_constant_input() {
+        let n = adder4();
+        let mut sim = Simulator::new(&n);
+        let words = vec![0b0011_0101u64; 100];
+        let (total, _) = sim.toggle_counts(&words);
+        assert_eq!(total, 0);
+    }
+
+    #[test]
+    fn toggle_counts_positive_for_alternating() {
+        let n = adder4();
+        let mut sim = Simulator::new(&n);
+        let words: Vec<u64> = (0..100).map(|i| if i % 2 == 0 { 0x00 } else { 0xFF }).collect();
+        let (total, per_gate) = sim.toggle_counts(&words);
+        assert!(total > 0);
+        assert_eq!(per_gate.len(), n.nodes().len());
+        // Every logic gate that toggles at all toggles on ~every transition.
+        let max = per_gate.iter().max().copied().unwrap();
+        assert_eq!(max, 99);
+    }
+}

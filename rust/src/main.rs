@@ -1,0 +1,382 @@
+//! `heam` — the command-line entry point of the L3 coordinator.
+//!
+//! Subcommands:
+//!
+//! * `gen-data`   — generate the synthetic datasets into `artifacts/data/`
+//!   (rust is the source of truth; python training reads the same files).
+//! * `optimize`   — run the paper's GA + fine-tune pipeline on extracted
+//!   distributions and emit the HEAM design, netlist report and LUT.
+//! * `eval`       — evaluate a trained model's accuracy under a chosen
+//!   multiplier (the ApproxFlow path).
+//! * `luts`       — dump the LUTs of every multiplier in the zoo to
+//!   `artifacts/luts/` (serving artifacts).
+//! * `report`     — print the standalone multiplier cost table (Table I
+//!   hardware columns).
+//! * `serve`      — run the serving coordinator on an AOT-compiled model
+//!   (PJRT runtime + dynamic batcher); see `examples/serve_lenet.rs` for
+//!   the library API.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use heam::coordinator::server::{ServeConfig, Server};
+use heam::mult::{Lut, MultKind};
+use heam::nn::multiplier::Multiplier;
+use heam::opt::{self, DistSet, GaConfig};
+use heam::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "gen-data" => gen_data(rest),
+        "optimize" => optimize(rest),
+        "eval" => eval(rest),
+        "luts" => luts(rest),
+        "report" => report(rest),
+        "serve" => serve(rest),
+        "nonlinear" => nonlinear(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "heam — HEAM approximate-multiplier system (paper reproduction)\n\n\
+         Usage: heam <subcommand> [options]\n\n\
+         Subcommands:\n\
+           gen-data   generate synthetic datasets into artifacts/data/\n\
+           optimize   run the GA + fine-tune optimization pipeline\n\
+           eval       evaluate a trained model under a multiplier\n\
+           luts       dump every multiplier's LUT to artifacts/luts/\n\
+           report     print the standalone multiplier cost table\n\
+           serve      serve an AOT-compiled model via the PJRT runtime\n\
+           nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\n\
+         Run `heam <subcommand> --help` for options."
+    );
+}
+
+fn nonlinear(argv: &[String]) -> Result<()> {
+    use heam::opt::nonlinear::{optimize, Nonlinearity};
+    let args = Args::new(
+        "heam nonlinear",
+        "Optimize a piecewise-linear Sigmoid/Softmax-exp unit against a distribution (paper §V)",
+    )
+    .opt("kind", "sigmoid", "sigmoid | softmax-exp")
+    .opt("segments", "8", "number of PWL segments")
+    .opt("dist", "artifacts/dist/digits.json", "distribution JSON (aggregate input histogram)")
+    .flag("uniform", "optimize for the uniform distribution instead")
+    .parse(argv)?;
+    let kind = match args.get("kind") {
+        "sigmoid" => Nonlinearity::Sigmoid,
+        "softmax-exp" => Nonlinearity::SoftmaxExp,
+        other => bail!("unknown kind '{other}'"),
+    };
+    let px = if args.is_set("uniform") {
+        opt::Dist256::uniform()
+    } else {
+        match DistSet::load(args.get("dist")) {
+            Ok(ds) => ds.aggregate().0,
+            Err(e) => {
+                println!("warning: {e:#}; using the synthetic Fig.1-shaped distribution");
+                DistSet::synthetic_lenet_like().aggregate().0
+            }
+        }
+    };
+    let k: usize = args.get_as("segments")?;
+    let unit = optimize(kind, &px, k);
+    println!(
+        "{:?} unit, {} segments, ROM {} bits, weighted MSE {:.4e}",
+        kind,
+        unit.segments.len(),
+        unit.rom_bits(),
+        unit.weighted_error(&px)
+    );
+    for s in &unit.segments {
+        println!(
+            "  seg @code {:>3}: intercept {:>9.5}, slope {:>9.6}/code",
+            s.start,
+            s.intercept_q as f64 / 65536.0,
+            s.slope_q as f64 / 65536.0
+        );
+    }
+    // Show the generalization story: error of this unit vs one optimized
+    // for uniform, both measured on the application distribution.
+    let generic = optimize(kind, &opt::Dist256::uniform(), k);
+    println!(
+        "vs uniform-optimized unit on this distribution: {:.4e} (tuned) vs {:.4e} (generic)",
+        unit.weighted_error(&px),
+        generic.weighted_error(&px)
+    );
+    Ok(())
+}
+
+fn gen_data(argv: &[String]) -> Result<()> {
+    let args = Args::new("heam gen-data", "Generate the synthetic datasets")
+        .opt("out", "artifacts/data", "output directory")
+        .opt("train", "8000", "training samples per image dataset")
+        .opt("test", "2000", "test samples per image dataset")
+        .opt("nodes", "1400", "graph nodes for the CORA substitute")
+        .opt("seed", "20220521", "master seed")
+        .parse(argv)?;
+    let out: String = args.get("out").to_string();
+    let train: usize = args.get_as("train")?;
+    let test: usize = args.get_as("test")?;
+    let nodes: usize = args.get_as("nodes")?;
+    let seed: u64 = args.get_as("seed")?;
+    std::fs::create_dir_all(&out)?;
+
+    let digits = heam::data::digits::generate(train, test, seed);
+    digits.save(format!("{out}/digits.htb"))?;
+    println!("wrote {out}/digits.htb ({train} train / {test} test)");
+
+    let fashion = heam::data::fashion::generate(train, test, seed + 1);
+    fashion.save(format!("{out}/fashion.htb"))?;
+    println!("wrote {out}/fashion.htb");
+
+    let cifar = heam::data::cifar::generate(train, test, seed + 2);
+    cifar.save(format!("{out}/cifar.htb"))?;
+    println!("wrote {out}/cifar.htb");
+
+    let cora = heam::data::cora::generate(nodes, 512, 7, seed + 3);
+    cora.save(format!("{out}/cora.htb"))?;
+    println!("wrote {out}/cora.htb ({nodes} nodes)");
+    Ok(())
+}
+
+fn optimize(argv: &[String]) -> Result<()> {
+    let args = Args::new(
+        "heam optimize",
+        "Run the paper's optimization pipeline: GA on Eq.6 + fine-tune",
+    )
+    .opt("dist", "artifacts/dist/digits.json", "distribution JSON (from training)")
+    .opt("out", "artifacts/heam", "output directory")
+    .opt("population", "48", "GA population")
+    .opt("generations", "120", "GA generations")
+    .opt("lambda1", "3000", "Cons term-count weight")
+    .opt("lambda2", "30", "Cons column-stacking weight")
+    .opt("rows", "4", "compressed PP rows")
+    .opt("target-rows", "2", "fine-tune packed-row target")
+    .opt("seed", "1212884289", "GA seed")
+    .flag("uniform", "ignore the distribution file (Mul2 ablation)")
+    .parse(argv)?;
+
+    let (px, py) = if args.is_set("uniform") {
+        let u = opt::Dist256::uniform();
+        (u.clone(), u)
+    } else {
+        match DistSet::load(args.get("dist")) {
+            Ok(ds) => {
+                println!("loaded distributions from {}", args.get("dist"));
+                ds.aggregate()
+            }
+            Err(e) => {
+                println!(
+                    "warning: {e:#}; falling back to the synthetic Fig.1-shaped distributions"
+                );
+                DistSet::synthetic_lenet_like().aggregate()
+            }
+        }
+    };
+    let space = opt::genome::GenomeSpace::new(8, args.get_as("rows")?);
+    let objective = opt::Objective::new(
+        space,
+        &px,
+        &py,
+        args.get_as("lambda1")?,
+        args.get_as("lambda2")?,
+    );
+    let config = GaConfig {
+        population: args.get_as("population")?,
+        generations: args.get_as("generations")?,
+        seed: args.get_as("seed")?,
+        ..Default::default()
+    };
+    println!(
+        "GA: pop {} gens {} genes {}",
+        config.population,
+        config.generations,
+        objective.space.len()
+    );
+    let result = opt::ga::run(&objective, &config);
+    println!(
+        "GA done: fitness {:.4e} after {} evaluations",
+        result.best_fitness, result.evaluations
+    );
+    let design = result.best.to_design(&objective.space);
+    println!("{}", design.render());
+
+    let ft = opt::finetune::run(
+        &design,
+        &px,
+        &py,
+        &opt::finetune::FinetuneConfig {
+            target_rows: args.get_as("target-rows")?,
+            mu: 0.0,
+        },
+    );
+    println!(
+        "fine-tune: rows {} -> {}, weighted error {:.4e} -> {:.4e}",
+        ft.rows_before, ft.rows_after, ft.error_before, ft.error_after
+    );
+    let final_design = ft.design;
+    println!("{}", final_design.render());
+
+    let out = args.get("out");
+    std::fs::create_dir_all(out)?;
+    // Netlist + LUT + cost report.
+    let net = final_design.build_netlist();
+    let lut = Lut::from_netlist(&net);
+    lut.save(format!("{out}/heam_lut.htb"))?;
+    let asic = heam::cost::asic::analyze_default(&net);
+    let fpga = heam::cost::fpga::map_default(&net);
+    let report = format!(
+        "design:\n{}\ncells {} area {:.2} um2, latency {:.3} ns, power {:.2} uW, {} LUT6s\n",
+        final_design.render(),
+        asic.cells,
+        asic.area_um2,
+        asic.latency_ns,
+        asic.power_uw,
+        fpga.luts,
+    );
+    std::fs::write(format!("{out}/heam_report.txt"), &report)?;
+    print!("{report}");
+    println!("wrote {out}/heam_lut.htb and {out}/heam_report.txt");
+    Ok(())
+}
+
+fn eval(argv: &[String]) -> Result<()> {
+    let args = Args::new("heam eval", "Evaluate a trained model under a multiplier")
+        .opt("weights", "artifacts/weights/digits.htb", "weight bundle")
+        .opt("data", "artifacts/data/digits.htb", "dataset bundle")
+        .opt(
+            "mult",
+            "exact",
+            "multiplier: exact|heam|kmap|cr6|cr7|ac|ou1|ou3|wallace|<lut path>",
+        )
+        .opt("limit", "2000", "max test images")
+        .opt("dump-dist", "", "write observed distributions to this JSON path")
+        .parse(argv)?;
+    let mul = multiplier_by_name(args.get("mult"))?;
+    let ds = heam::data::ImageDataset::load(args.get("data"), "eval")?;
+    let graph = heam::nn::lenet::load(args.get("weights"))?;
+    let mut stats = heam::nn::stats::StatsCollector::new();
+    let want_stats = !args.get("dump-dist").is_empty();
+    if want_stats {
+        graph.record_weights(&mut stats);
+    }
+    let acc = heam::nn::lenet::accuracy(
+        &graph,
+        &ds.test_x,
+        &ds.test_y,
+        (ds.channels, ds.height, ds.width),
+        &mul,
+        args.get_as("limit")?,
+        want_stats.then_some(&mut stats),
+    )?;
+    println!(
+        "accuracy[{}] on {} = {:.2}%",
+        mul.label(),
+        args.get("data"),
+        acc * 100.0
+    );
+    if want_stats {
+        let dist = stats.to_dist_set("lenet");
+        dist.save(args.get("dump-dist"))?;
+        println!("wrote {}", args.get("dump-dist"));
+    }
+    Ok(())
+}
+
+fn luts(argv: &[String]) -> Result<()> {
+    let args = Args::new("heam luts", "Dump every multiplier's LUT")
+        .opt("out", "artifacts/luts", "output directory")
+        .parse(argv)?;
+    let out = args.get("out");
+    std::fs::create_dir_all(out)?;
+    for kind in MultKind::ALL {
+        let lut = kind.lut();
+        let file = format!(
+            "{out}/{}.htb",
+            kind.label().to_lowercase().replace([' ', '(', ')', '.'], "")
+        );
+        lut.save(&file)?;
+        println!("wrote {file}");
+    }
+    Ok(())
+}
+
+fn report(argv: &[String]) -> Result<()> {
+    let _args = Args::new("heam report", "Standalone multiplier cost table").parse(argv)?;
+    println!("{}", heam::bench::table1::hardware_table());
+    Ok(())
+}
+
+fn serve(argv: &[String]) -> Result<()> {
+    let args = Args::new("heam serve", "Serve an AOT-compiled LeNet via PJRT")
+        .opt("model", "artifacts/lenet_digits.hlo.txt", "HLO text artifact")
+        .opt("lut", "", "approximate-multiplier LUT (empty = exact)")
+        .opt("data", "artifacts/data/digits.htb", "dataset for the demo workload")
+        .opt("requests", "256", "demo requests to issue")
+        .opt("batch", "16", "max dynamic batch")
+        .opt("wait-us", "2000", "batcher wait budget (us)")
+        .parse(argv)?;
+    let lut = if args.get("lut").is_empty() {
+        Lut::exact()
+    } else {
+        Lut::load(args.get("lut"))?
+    };
+    let config = ServeConfig {
+        max_batch: args.get_as("batch")?,
+        max_wait_us: args.get_as("wait-us")?,
+        workers: 1,
+    };
+    let server = Server::start(args.get("model"), Arc::new(lut), config)
+        .context("starting PJRT server")?;
+    let ds = heam::data::ImageDataset::load(args.get("data"), "serve")?;
+    let n: usize = args.get_as("requests")?;
+    let report = heam::coordinator::drive_demo(&server, &ds, n)?;
+    println!("{report}");
+    server.shutdown();
+    Ok(())
+}
+
+/// Parse a multiplier spec (zoo name or LUT path).
+fn multiplier_by_name(name: &str) -> Result<Multiplier> {
+    let kind = match name {
+        "exact" => return Ok(Multiplier::Exact),
+        "heam" => MultKind::Heam,
+        "kmap" => MultKind::KMap,
+        "cr6" => MultKind::CrC6,
+        "cr7" => MultKind::CrC7,
+        "ac" => MultKind::Ac,
+        "ou1" => MultKind::OuL1,
+        "ou3" => MultKind::OuL3,
+        "wallace" => MultKind::Wallace,
+        path => {
+            let lut = Lut::load(path).with_context(|| format!("loading LUT '{path}'"))?;
+            return Ok(Multiplier::Lut(Arc::new(lut)));
+        }
+    };
+    Ok(Multiplier::Lut(Arc::new(kind.lut())))
+}

@@ -1,0 +1,144 @@
+//! AC multiplier — Momeni, Han, Montuschi, Lombardi, "Design and analysis
+//! of approximate compressors for multiplication" (IEEE TC 2015),
+//! reference \[12\] of the paper.
+//!
+//! An exact 4-2 compressor takes four bits plus carry-in and emits
+//! sum/carry/cout. The approximate compressor used here (behaviourally
+//! equivalent to the paper's Design 2 usage) drops the carry-in/cout pair
+//! entirely and approximates the 4-bit sum with two outputs:
+//!
+//!   carry = (x1 AND x2) OR (x3 AND x4)
+//!   sum   = (x1 OR  x2) AND (x3 OR  x4) OR (x1 AND x2) ... simplified to
+//!   sum   = (x1 XOR x2) OR (x3 XOR x4)
+//!
+//! so the compressor output `2*carry + sum` deviates for the all-ones and
+//! sparse patterns. Applying it across *all* columns (the paper's Design-2
+//! evaluation that yields the large-error/small-area point in Table I)
+//! gives a very small multiplier with substantial error — matching the
+//! paper's AC row (smallest area, 18.28% MNIST accuracy).
+
+use crate::logic::{NetBuilder, Netlist, Signal};
+
+use super::pp::PpMatrix;
+
+/// The approximate 4-2 compressor. Input: 4 bits of one column.
+/// Output: (sum at weight w, carry at weight w+1).
+pub fn approx_compressor(b: &mut NetBuilder, x: [Signal; 4]) -> (Signal, Signal) {
+    let a12 = b.and(x[0], x[1]);
+    let a34 = b.and(x[2], x[3]);
+    let carry = b.or(a12, a34);
+    let x12 = b.xor(x[0], x[1]);
+    let x34 = b.xor(x[2], x[3]);
+    let sum = b.or(x12, x34);
+    (sum, carry)
+}
+
+/// Build the n-by-n AC multiplier: repeatedly compress every column with
+/// approximate 4-2 compressors (and exact half/full adders for 2-3 bit
+/// remainders) until height <= 2, then one exact carry-propagate add.
+pub fn build(bits: usize) -> Netlist {
+    let mut b = NetBuilder::new(2 * bits);
+    let m = PpMatrix::generate(&mut b, bits);
+    let mut cols = m.columns();
+    loop {
+        let max_h = cols.iter().map(|c| c.len()).max().unwrap_or(0);
+        if max_h <= 2 {
+            break;
+        }
+        let mut next: Vec<Vec<Signal>> = vec![Vec::new(); cols.len() + 1];
+        for w in 0..cols.len() {
+            let col = std::mem::take(&mut cols[w]);
+            let mut i = 0;
+            while col.len() - i >= 4 {
+                let (s, c) = approx_compressor(&mut b, [col[i], col[i + 1], col[i + 2], col[i + 3]]);
+                next[w].push(s);
+                next[w + 1].push(c);
+                i += 4;
+            }
+            if col.len() - i == 3 {
+                let (s, c) = b.full_adder(col[i], col[i + 1], col[i + 2]);
+                next[w].push(s);
+                next[w + 1].push(c);
+            } else if col.len() - i == 2 {
+                let (s, c) = b.half_adder(col[i], col[i + 1]);
+                next[w].push(s);
+                next[w + 1].push(c);
+            } else if col.len() - i == 1 {
+                next[w].push(col[i]);
+            }
+        }
+        while next.last().is_some_and(|c| c.is_empty()) {
+            next.pop();
+        }
+        cols = next;
+    }
+    let zero = b.constant(false);
+    let mut row_a = Vec::with_capacity(cols.len());
+    let mut row_b = Vec::with_capacity(cols.len());
+    for col in &cols {
+        row_a.push(col.first().copied().unwrap_or(zero));
+        row_b.push(col.get(1).copied().unwrap_or(zero));
+    }
+    let sum = b.ripple_add(&row_a, &row_b);
+    let mut out: Vec<Signal> = sum.into_iter().take(2 * bits).collect();
+    while out.len() < 2 * bits {
+        out.push(zero);
+    }
+    b.output_vec(&out);
+    b.finish(&format!("ac{bits}x{bits}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::mult::{pack_xy, wallace};
+
+    #[test]
+    fn compressor_truth_table_known_points() {
+        // Standalone compressor: count-of-ones approximations.
+        let mut b = NetBuilder::new(4);
+        let xs = [b.input(0), b.input(1), b.input(2), b.input(3)];
+        let (s, c) = approx_compressor(&mut b, xs);
+        b.output(s);
+        b.output(c);
+        let n = b.finish("comp");
+        // 0000 -> 0; exact 0. Correct.
+        assert_eq!(n.eval_word(0b0000), 0);
+        // 0001 -> sum=1 carry=0 = 1; exact 1. Correct.
+        assert_eq!(n.eval_word(0b0001), 0b01);
+        // 0011 -> sum=0|0 wait x12 = 1^1 = 0, x34 = 0 -> sum=0; carry=1 -> 2; exact 2. Correct.
+        assert_eq!(n.eval_word(0b0011), 0b10);
+        // 1111 -> sum=0, carry=1 -> 2; exact 4. Approximate (underestimates).
+        assert_eq!(n.eval_word(0b1111), 0b10);
+        // 0111 -> x12=0 (11), x34=1 (01): sum=1; carry = 1|0=1 -> 3; exact 3. Correct.
+        assert_eq!(n.eval_word(0b0111), 0b11);
+    }
+
+    #[test]
+    fn smallest_area_largest_error() {
+        let ac = build(8);
+        let w = wallace::build(8);
+        assert!(ac.gate_count() < w.gate_count(), "AC should be smaller than Wallace");
+        // And it must have substantial error (paper: avg err 3.25e9).
+        let mut sim = Simulator::new(&ac);
+        let words: Vec<u64> = (0..65536u64).map(|i| pack_xy(i & 0xFF, i >> 8, 8)).collect();
+        let outs = sim.eval_words(&words);
+        let mut sq = 0f64;
+        for i in 0..65536u64 {
+            let (x, y) = (i & 0xFF, i >> 8);
+            let d = outs[i as usize] as f64 - (x * y) as f64;
+            sq += d * d;
+        }
+        let avg = sq / 65536.0;
+        assert!(avg > 1e6, "AC average squared error {avg} should be large");
+    }
+
+    #[test]
+    fn zero_times_anything_is_zero() {
+        let ac = build(8);
+        for y in 0..256u64 {
+            assert_eq!(ac.eval_word(pack_xy(0, y, 8)), 0, "0*{y}");
+        }
+    }
+}

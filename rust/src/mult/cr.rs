@@ -1,0 +1,160 @@
+//! CR multiplier — Liu, Han, Lombardi, "A low-power, high-performance
+//! approximate multiplier with configurable partial error recovery"
+//! (DATE 2014), reference \[13\] of the paper.
+//!
+//! Structure: the partial products are accumulated with *approximate
+//! adders* whose carry never propagates more than one position — each bit
+//! computes `sum_i = a_i XOR b_i XOR carry_in_i` approximated as
+//! `sum_i = (a_i XOR b_i) OR c_{i-1}^{gen}` with `c_i^{gen} = a_i AND b_i`,
+//! i.e. the generate signal of the previous bit is folded in with an OR and
+//! no chain exists. This makes every adder O(1) depth but drops carries.
+//!
+//! Error recovery (the "C.k" configuration): the k most-significant
+//! positions of every approximate adder instead use an exact full-adder
+//! chain seeded by the approximate region's top generate signal, recovering
+//! most of the magnitude error at a small cost — C.7 recovers one more
+//! column than C.6 and is correspondingly more accurate (paper Table I/II).
+
+use crate::logic::{NetBuilder, Netlist, Signal};
+
+use super::pp::PpMatrix;
+
+/// One approximate two-row addition over `width` bits: low `width - k`
+/// positions use the chain-free approximation, the top `k` use exact
+/// ripple. Returns `width + 1` bits.
+fn approx_add(b: &mut NetBuilder, a: &[Signal], c: &[Signal], k: usize) -> Vec<Signal> {
+    let width = a.len().max(c.len());
+    let zero = b.constant(false);
+    let at = |v: &[Signal], i: usize| v.get(i).copied().unwrap_or(zero);
+    let split = width.saturating_sub(k);
+    let mut out = Vec::with_capacity(width + 1);
+    // Approximate region: sum_i = (a_i ^ b_i) | gen_{i-1}; no carry chain.
+    let mut prev_gen = zero;
+    for i in 0..split {
+        let (ai, ci) = (at(a, i), at(c, i));
+        let x = b.xor(ai, ci);
+        let s = b.or(x, prev_gen);
+        out.push(s);
+        prev_gen = b.and(ai, ci);
+    }
+    // Exact region: ripple seeded by the last approximate generate.
+    let mut carry = prev_gen;
+    for i in split..width {
+        let (ai, ci) = (at(a, i), at(c, i));
+        let (s, cy) = b.full_adder(ai, ci, carry);
+        out.push(s);
+        carry = cy;
+    }
+    out.push(carry);
+    out
+}
+
+/// Build the n-by-n CR multiplier with a k-bit error-recovery region.
+pub fn build(bits: usize, k: usize) -> Netlist {
+    let mut b = NetBuilder::new(2 * bits);
+    let m = PpMatrix::generate(&mut b, bits);
+    // Align each PP row to absolute weights (row i shifted left by i).
+    let zero = b.constant(false);
+    let mut rows: Vec<Vec<Signal>> = m
+        .rows
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut v = vec![zero; i];
+            v.extend(row.iter().map(|p| p.sig));
+            v
+        })
+        .collect();
+    // Binary tree of approximate additions.
+    while rows.len() > 1 {
+        let mut next = Vec::with_capacity(rows.len().div_ceil(2));
+        let mut iter = rows.chunks(2);
+        for pair in &mut iter {
+            if pair.len() == 2 {
+                next.push(approx_add(&mut b, &pair[0], &pair[1], k));
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        rows = next;
+    }
+    let result = &rows[0];
+    let n_out = 2 * bits;
+    let mut out: Vec<Signal> = result.iter().copied().take(n_out).collect();
+    while out.len() < n_out {
+        out.push(zero);
+    }
+    b.output_vec(&out);
+    b.finish(&format!("cr{bits}x{bits}_c{k}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::mult::{pack_xy, wallace};
+
+    fn mean_rel_err(n: &Netlist) -> f64 {
+        let mut sim = Simulator::new(n);
+        let words: Vec<u64> = (0..65536u64).map(|i| pack_xy(i & 0xFF, i >> 8, 8)).collect();
+        let outs = sim.eval_words(&words);
+        let mut total = 0.0;
+        let mut count = 0u64;
+        for i in 0..65536u64 {
+            let (x, y) = (i & 0xFF, i >> 8);
+            if x * y == 0 {
+                continue;
+            }
+            let approx = outs[i as usize] as f64;
+            total += (approx - (x * y) as f64).abs() / (x * y) as f64;
+            count += 1;
+        }
+        total / count as f64
+    }
+
+    #[test]
+    fn c7_more_accurate_than_c6() {
+        let e6 = mean_rel_err(&build(8, 6));
+        let e7 = mean_rel_err(&build(8, 7));
+        assert!(e7 < e6, "C.7 err {e7} !< C.6 err {e6}");
+    }
+
+    #[test]
+    fn full_recovery_wide_is_nearly_exact() {
+        // With k >= 2n the adders are fully exact ripple adders.
+        let n = build(8, 16);
+        for (x, y) in [(0u64, 0u64), (255, 255), (17, 200), (128, 128), (3, 7)] {
+            assert_eq!(n.eval_word(pack_xy(x, y, 8)), x * y, "{x}*{y}");
+        }
+    }
+
+    #[test]
+    fn approximate_region_errs_but_bounded() {
+        let n = build(8, 7);
+        let mut worst: f64 = 0.0;
+        for x in (0..256u64).step_by(7) {
+            for y in (0..256u64).step_by(11) {
+                let approx = n.eval_word(pack_xy(x, y, 8)) as f64;
+                let exact = (x * y) as f64;
+                if exact > 0.0 {
+                    worst = worst.max((approx - exact).abs() / exact.max(1.0));
+                }
+            }
+        }
+        assert!(worst > 0.0, "C.7 must be approximate somewhere");
+        assert!(worst < 1.0, "relative error should stay below 100% (got {worst})");
+    }
+
+    #[test]
+    fn faster_than_wallace() {
+        // The headline claim of CR: much shallower carry structure.
+        let cr = build(8, 6);
+        let w = wallace::build(8);
+        assert!(
+            cr.depth() < w.depth(),
+            "cr depth {} !< wallace depth {}",
+            cr.depth(),
+            w.depth()
+        );
+    }
+}

@@ -1,0 +1,389 @@
+//! HEAM — the paper's compressed-partial-product approximate multiplier.
+//!
+//! Following §II.B of the paper: the first `compressed_rows` partial-product
+//! rows of the n-by-n multiplier are split into weight columns; each column
+//! is *replaced* by zero or more **compressed terms**, each a single logic
+//! operation (AND / OR / XOR) over the column's bits. The remaining rows
+//! flow into the accumulation untouched. Which terms exist is the
+//! optimization variable θ (Eq. 4): dropping a column saves gates but
+//! loses its count, an OR keeps "at least one bit set", an XOR keeps the
+//! parity (the exact sum LSB), an AND keeps only the all-ones case.
+//!
+//! The fine-tuning pass of §II.C can merge two terms of the same column
+//! with an OR to cut the number of compressed rows; a merged term is a
+//! [`Term`] with more than one base op.
+//!
+//! The design is both *behaviourally evaluable* (fast path for the GA
+//! objective — no gates involved) and *materializable* as a gate netlist
+//! (for cost analysis and LUT generation). Tests pin the two views
+//! together exhaustively.
+
+use crate::logic::{NetBuilder, Netlist, Signal};
+
+use super::pp::{column_height, PpMatrix};
+
+/// A base compression op over one column's bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BaseOp {
+    /// Single-bit column passed through unchanged (the paper applies no
+    /// logic op to 1-bit columns).
+    Pass,
+    And,
+    Or,
+    Xor,
+}
+
+impl BaseOp {
+    /// Evaluate over the bits of a column (given as a bool slice).
+    #[inline]
+    pub fn eval(self, bits_set: usize, total: usize) -> bool {
+        match self {
+            BaseOp::Pass => {
+                debug_assert!(total == 1);
+                bits_set == 1
+            }
+            BaseOp::And => total > 0 && bits_set == total,
+            BaseOp::Or => bits_set > 0,
+            BaseOp::Xor => bits_set % 2 == 1,
+        }
+    }
+
+    /// Short label used in design dumps (Fig. 4 style).
+    pub fn label(self) -> &'static str {
+        match self {
+            BaseOp::Pass => ".",
+            BaseOp::And => "&",
+            BaseOp::Or => "|",
+            BaseOp::Xor => "^",
+        }
+    }
+}
+
+/// One compressed term: a single base op, or several base ops OR-merged by
+/// the fine-tuning pass (§II.C).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Term {
+    pub ops: Vec<BaseOp>,
+}
+
+impl Term {
+    /// A plain single-op term.
+    pub fn single(op: BaseOp) -> Self {
+        Self { ops: vec![op] }
+    }
+
+    /// Evaluate: OR over the base-op values.
+    #[inline]
+    pub fn eval(&self, bits_set: usize, total: usize) -> bool {
+        self.ops.iter().any(|op| op.eval(bits_set, total))
+    }
+}
+
+/// A complete HEAM design: which terms exist on each column of the
+/// compressed region.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeamDesign {
+    /// Operand width (8 for the paper's experiments).
+    pub bits: usize,
+    /// Number of leading PP rows that are compressed (paper: 4).
+    pub compressed_rows: usize,
+    /// `cols[w]` = the compressed terms at weight `w`. Columns beyond the
+    /// compressed region's reach must be empty.
+    pub cols: Vec<Vec<Term>>,
+}
+
+impl HeamDesign {
+    /// An empty design (all compressed-region columns dropped).
+    pub fn empty(bits: usize, compressed_rows: usize) -> Self {
+        Self {
+            bits,
+            compressed_rows,
+            cols: vec![Vec::new(); bits + compressed_rows - 1],
+        }
+    }
+
+    /// Height (bit count) of compressed column `w`.
+    pub fn col_height(&self, w: usize) -> usize {
+        column_height(self.bits, 0..self.compressed_rows, w)
+    }
+
+    /// Number of compressed partial-product rows after packing: the
+    /// maximum number of terms on any column (Fig. 3(b)'s row count).
+    pub fn packed_rows(&self) -> usize {
+        self.cols.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    /// Total number of compressed terms (the first `Cons` component).
+    pub fn term_count(&self) -> usize {
+        self.cols.iter().map(|c| c.len()).sum()
+    }
+
+    /// Behavioral evaluation of `f(x, y)` per Eq. 4: exact sum of the
+    /// uncompressed rows plus the selected terms at their weights.
+    pub fn eval(&self, x: u32, y: u32) -> i64 {
+        let mut acc: i64 = 0;
+        // Uncompressed rows contribute exactly.
+        for i in self.compressed_rows..self.bits {
+            if (y >> i) & 1 == 1 {
+                acc += (x as i64) << i;
+            }
+        }
+        // Compressed columns.
+        for (w, terms) in self.cols.iter().enumerate() {
+            if terms.is_empty() {
+                continue;
+            }
+            let (set, total) = self.column_bits(x, y, w);
+            for t in terms {
+                if t.eval(set, total) {
+                    acc += 1i64 << w;
+                }
+            }
+        }
+        acc
+    }
+
+    /// (number of set bits, column height) of compressed column `w` for
+    /// operands (x, y).
+    #[inline]
+    pub fn column_bits(&self, x: u32, y: u32, w: usize) -> (usize, usize) {
+        let mut set = 0;
+        let mut total = 0;
+        let lo = w.saturating_sub(self.bits - 1);
+        let hi = self.compressed_rows.min(w + 1);
+        for i in lo..hi {
+            let j = w - i;
+            total += 1;
+            if (x >> j) & 1 == 1 && (y >> i) & 1 == 1 {
+                set += 1;
+            }
+        }
+        (set, total)
+    }
+
+    /// Materialize as a gate netlist: compressed terms become the actual
+    /// AND/OR/XOR trees, then everything is Wallace-reduced together with
+    /// the uncompressed rows.
+    pub fn build_netlist(&self) -> Netlist {
+        let bits = self.bits;
+        let mut b = NetBuilder::new(2 * bits);
+        let m = PpMatrix::generate(&mut b, bits);
+        let mut columns: Vec<Vec<Signal>> = vec![Vec::new(); 2 * bits];
+        // Uncompressed rows flow through.
+        for i in self.compressed_rows..bits {
+            for bit in &m.rows[i] {
+                columns[bit.weight].push(bit.sig);
+            }
+        }
+        // Compressed region: build each term.
+        let comp_cols = m.columns_of_rows(0..self.compressed_rows);
+        for (w, terms) in self.cols.iter().enumerate() {
+            if terms.is_empty() {
+                continue;
+            }
+            let sigs: Vec<Signal> = comp_cols[w].iter().map(|p| p.sig).collect();
+            for term in terms {
+                let mut parts = Vec::with_capacity(term.ops.len());
+                for op in &term.ops {
+                    let s = match op {
+                        BaseOp::Pass => {
+                            assert_eq!(sigs.len(), 1, "Pass on multi-bit column {w}");
+                            sigs[0]
+                        }
+                        BaseOp::And => b.and_all(&sigs),
+                        BaseOp::Or => b.or_all(&sigs),
+                        BaseOp::Xor => b.xor_all(&sigs),
+                    };
+                    parts.push(s);
+                }
+                let sig = b.or_all(&parts);
+                columns[w].push(sig);
+            }
+        }
+        let sum = b.reduce_columns(&mut columns);
+        let n_out = 2 * bits;
+        let zero = b.constant(false);
+        let mut out: Vec<Signal> = sum.into_iter().take(n_out).collect();
+        while out.len() < n_out {
+            out.push(zero);
+        }
+        b.output_vec(&out);
+        b.finish(&format!("heam{bits}x{bits}_r{}", self.compressed_rows))
+    }
+
+    /// Fig. 4-style text rendering of the compressed region.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "HEAM {0}x{0}, compressed rows 0..{1}, packed rows {2}, terms {3}\n",
+            self.bits,
+            self.compressed_rows,
+            self.packed_rows(),
+            self.term_count()
+        );
+        for (w, terms) in self.cols.iter().enumerate() {
+            if self.col_height(w) == 0 {
+                continue;
+            }
+            let ops: Vec<String> = terms
+                .iter()
+                .map(|t| {
+                    if t.ops.len() == 1 {
+                        t.ops[0].label().to_string()
+                    } else {
+                        format!(
+                            "merge({})",
+                            t.ops.iter().map(|o| o.label()).collect::<Vec<_>>().join(",")
+                        )
+                    }
+                })
+                .collect();
+            s.push_str(&format!(
+                "  col {w:2} (h={}): [{}]\n",
+                self.col_height(w),
+                ops.join(" ")
+            ));
+        }
+        s
+    }
+}
+
+/// The committed HEAM design used by [`crate::mult::MultKind::Heam`] —
+/// the output of the GA + fine-tune pipeline (`heam optimize`, default
+/// seeds) on the operand distributions extracted from the quantized LeNet
+/// trained on the digits (MNIST-substitute) set: the analogue of the
+/// paper's Fig. 4(c). Regenerate with
+/// `cargo run --release --example optimize_multiplier`; see EXPERIMENTS.md.
+///
+/// Structure the optimizer discovered: with activations massed at 0 and
+/// weights at the 128 zero-point, the low compressed columns (0-5)
+/// contribute almost nothing to the distribution-weighted error and are
+/// *dropped entirely*; columns 6-8 keep a cheap OR ("any bit set");
+/// column 9 keeps AND + OR (carry + any); the 1-bit column 10 passes
+/// through. At x = 0 every term evaluates false, so HEAM is exact on the
+/// distribution mode — the §II.A punchline.
+pub fn reference_design() -> HeamDesign {
+    let mut d = HeamDesign::empty(8, 4);
+    for w in 6..=8 {
+        d.cols[w] = vec![Term::single(BaseOp::Or)];
+    }
+    d.cols[9] = vec![Term::single(BaseOp::And), Term::single(BaseOp::Or)];
+    d.cols[10] = vec![Term::single(BaseOp::Pass)];
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::mult::pack_xy;
+
+    #[test]
+    fn netlist_matches_behavioral_exhaustive() {
+        let d = reference_design();
+        let n = d.build_netlist();
+        let mut sim = Simulator::new(&n);
+        let words: Vec<u64> = (0..65536u64).map(|i| pack_xy(i & 0xFF, i >> 8, 8)).collect();
+        let outs = sim.eval_words(&words);
+        for i in 0..65536u64 {
+            let (x, y) = ((i & 0xFF) as u32, (i >> 8) as u32);
+            let expected = d.eval(x, y);
+            // The netlist truncates to 16 bits; behavioral f of the
+            // reference design never exceeds that.
+            assert_eq!(outs[i as usize] as i64, expected, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn exact_at_zero_activation() {
+        // At x = 0, every PP bit is 0, so every term evaluates false: HEAM
+        // is exact on the distribution mode (this is the paper's §II.A
+        // punchline vs. OU's f1).
+        let d = reference_design();
+        for y in 0..256u32 {
+            assert_eq!(d.eval(0, y), 0, "0*{y}");
+        }
+    }
+
+    #[test]
+    fn full_design_with_sum_carry_everywhere_is_closer() {
+        // A design keeping XOR+AND on every multi-bit column must have
+        // lower total error than one dropping every column.
+        let mut full = HeamDesign::empty(8, 4);
+        let dropped = HeamDesign::empty(8, 4);
+        for w in 0..11 {
+            let h = full.col_height(w);
+            if h == 1 {
+                full.cols[w] = vec![Term::single(BaseOp::Pass)];
+            } else if h >= 2 {
+                full.cols[w] = vec![Term::single(BaseOp::Xor), Term::single(BaseOp::And)];
+            }
+        }
+        let err = |d: &HeamDesign| -> f64 {
+            let mut sq = 0.0;
+            for x in 0..256u32 {
+                for y in 0..256u32 {
+                    let delta = (d.eval(x, y) - (x as i64 * y as i64)) as f64;
+                    sq += delta * delta;
+                }
+            }
+            sq
+        };
+        assert!(err(&full) < err(&dropped) / 2.0);
+        let _ = dropped.packed_rows();
+    }
+
+    #[test]
+    fn packed_rows_counts_max_terms() {
+        let d = reference_design();
+        assert_eq!(d.packed_rows(), 2);
+        let e = HeamDesign::empty(8, 4);
+        assert_eq!(e.packed_rows(), 0);
+    }
+
+    #[test]
+    fn merged_term_is_or_of_parts() {
+        let mut d = HeamDesign::empty(8, 4);
+        d.cols[5] = vec![Term {
+            ops: vec![BaseOp::Xor, BaseOp::And],
+        }];
+        // Column 5 with rows 0..4: bits (i, j=5-i) for i in 1..4... compute
+        // via behavioral vs netlist equivalence on a sample.
+        let n = d.build_netlist();
+        for (x, y) in [(0u32, 0u32), (255, 255), (37, 201), (128, 64), (9, 250)] {
+            let got = n.eval_word(pack_xy(x as u64, y as u64, 8)) as i64;
+            assert_eq!(got, d.eval(x, y), "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn column_bits_heights() {
+        let d = HeamDesign::empty(8, 4);
+        // Heights for rows 0..4 of an 8x8: w=0 ->1, w=1 ->2, w=2 ->3,
+        // w=3..=7 ->4, w=8 ->3, w=9 ->2, w=10 ->1, w>=11 -> 0.
+        let expect = [1, 2, 3, 4, 4, 4, 4, 4, 3, 2, 1];
+        for (w, &e) in expect.iter().enumerate() {
+            assert_eq!(d.col_height(w), e, "w={w}");
+        }
+        assert_eq!(d.col_height(11), 0);
+    }
+
+    #[test]
+    fn render_contains_all_columns() {
+        let r = reference_design().render();
+        assert!(r.contains("col  0"));
+        assert!(r.contains("col 10"));
+    }
+
+    #[test]
+    fn reference_cheaper_than_wallace() {
+        let heam = reference_design().build_netlist();
+        let wallace = crate::mult::wallace::build(8);
+        assert!(
+            heam.gate_count() < wallace.gate_count(),
+            "heam {} !< wallace {}",
+            heam.gate_count(),
+            wallace.gate_count()
+        );
+        assert!(heam.depth() <= wallace.depth());
+    }
+}

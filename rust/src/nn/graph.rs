@@ -1,0 +1,256 @@
+//! The ApproxFlow DAG (§II.D).
+//!
+//! Models are directed acyclic graphs of named nodes; running a node
+//! computes its transitive dependencies automatically and memoizes values,
+//! mirroring the paper's toolbox ("when a node in the DAG is run, the
+//! dependencies of the node will be computed automatically"). Inference is
+//! `graph.run(output, feeds)`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::multiplier::Multiplier;
+use super::ops::{maxpool2, QConv2d, QDense};
+use super::quant::QuantParams;
+use super::stats::StatsCollector;
+use super::tensor::Tensor;
+
+/// A value flowing through the DAG.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Float tensor (images in, logits out).
+    F32(Tensor<f32>),
+    /// Quantized code tensor.
+    U8(Tensor<u8>),
+}
+
+impl Value {
+    /// As f32 tensor.
+    pub fn as_f32(&self) -> Result<&Tensor<f32>> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    /// As u8 tensor.
+    pub fn as_u8(&self) -> Result<&Tensor<u8>> {
+        match self {
+            Value::U8(t) => Ok(t),
+            _ => bail!("expected u8 value"),
+        }
+    }
+}
+
+/// Node operation.
+pub enum Op {
+    /// Graph input (fed externally).
+    Input,
+    /// Quantize an f32 tensor to codes.
+    Quantize(QuantParams),
+    /// Quantized convolution.
+    Conv(Box<QConv2d>),
+    /// Quantized dense layer (u8 output).
+    Dense(Box<QDense>),
+    /// Quantized dense layer producing f32 logits.
+    DenseLogits(Box<QDense>),
+    /// 2x2 max pool.
+    MaxPool2,
+    /// Flatten [C,H,W] codes to [C*H*W].
+    Flatten,
+}
+
+/// One DAG node.
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+}
+
+/// The DAG.
+#[derive(Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node; inputs are names of earlier nodes.
+    pub fn add(&mut self, name: &str, op: Op, inputs: &[&str]) -> Result<usize> {
+        let input_ids: Vec<usize> = inputs
+            .iter()
+            .map(|n| {
+                self.by_name
+                    .get(*n)
+                    .copied()
+                    .ok_or_else(|| anyhow!("unknown input node '{n}'"))
+            })
+            .collect::<Result<_>>()?;
+        let id = self.nodes.len();
+        if self.by_name.insert(name.to_string(), id).is_some() {
+            bail!("duplicate node name '{name}'");
+        }
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs: input_ids,
+        });
+        Ok(id)
+    }
+
+    /// Node id by name.
+    pub fn id(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no node '{name}'"))
+    }
+
+    /// Run the graph to produce `output`, feeding input nodes from `feeds`.
+    /// Dependencies are resolved and memoized automatically.
+    pub fn run(
+        &self,
+        output: &str,
+        feeds: &BTreeMap<String, Value>,
+        mul: &Multiplier,
+        mut stats: Option<&mut StatsCollector>,
+    ) -> Result<Value> {
+        let target = self.id(output)?;
+        let mut memo: Vec<Option<Value>> = (0..self.nodes.len()).map(|_| None).collect();
+        // Nodes only reference earlier nodes, so a forward sweep up to the
+        // target suffices; skip nodes the target doesn't need.
+        let mut needed = vec![false; self.nodes.len()];
+        needed[target] = true;
+        for i in (0..=target).rev() {
+            if needed[i] {
+                for &d in &self.nodes[i].inputs {
+                    needed[d] = true;
+                }
+            }
+        }
+        for i in 0..=target {
+            if !needed[i] {
+                continue;
+            }
+            let node = &self.nodes[i];
+            let value = match &node.op {
+                Op::Input => feeds
+                    .get(&node.name)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("missing feed for input '{}'", node.name))?,
+                Op::Quantize(q) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_f32()?;
+                    Value::U8(q.quantize_tensor(x))
+                }
+                Op::Conv(layer) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    Value::U8(layer.forward(x, mul, stats.as_deref_mut()))
+                }
+                Op::Dense(layer) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    let out = layer.forward(&x.data, mul, stats.as_deref_mut());
+                    let n = out.len();
+                    Value::U8(Tensor::new(vec![n], out))
+                }
+                Op::DenseLogits(layer) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    let out = layer.forward_f32(&x.data, mul, stats.as_deref_mut());
+                    let n = out.len();
+                    Value::F32(Tensor::new(vec![n], out))
+                }
+                Op::MaxPool2 => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    Value::U8(maxpool2(x))
+                }
+                Op::Flatten => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    let n = x.len();
+                    Value::U8(x.clone().reshape(vec![n]))
+                }
+            };
+            memo[i] = Some(value);
+        }
+        Ok(memo[target].take().unwrap())
+    }
+
+    /// Register every layer's weight histogram with a collector.
+    pub fn record_weights(&self, stats: &mut StatsCollector) {
+        for node in &self.nodes {
+            match &node.op {
+                Op::Conv(l) => l.record_weights(stats),
+                Op::Dense(l) | Op::DenseLogits(l) => l.record_weights(stats),
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new();
+        g.add("image", Op::Input, &[]).unwrap();
+        g.add(
+            "q",
+            Op::Quantize(QuantParams { scale: 1.0 / 255.0, zero_point: 0 }),
+            &["image"],
+        )
+        .unwrap();
+        g.add("flat", Op::Flatten, &["q"]).unwrap();
+        let dense = QDense {
+            name: "fc".into(),
+            w: Tensor::new(vec![2, 4], vec![200, 0, 0, 0, 0, 200, 0, 0]),
+            bias: vec![0, 0],
+            x_q: QuantParams { scale: 1.0 / 255.0, zero_point: 0 },
+            w_q: QuantParams { scale: 0.01, zero_point: 0 },
+            out_q: QuantParams { scale: 0.01, zero_point: 0 },
+            relu: false,
+        };
+        g.add("logits", Op::DenseLogits(Box::new(dense)), &["flat"]).unwrap();
+        g
+    }
+
+    #[test]
+    fn runs_dependencies_automatically() {
+        let g = tiny_graph();
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "image".to_string(),
+            Value::F32(Tensor::new(vec![1, 2, 2], vec![1.0, 0.0, 0.0, 0.0])),
+        );
+        let out = g.run("logits", &feeds, &Multiplier::Exact, None).unwrap();
+        let logits = out.as_f32().unwrap();
+        // First unit sees pixel 0 (=1.0 -> code 255) with weight code 200
+        // (w = 2.0): logit ~ 2.0.
+        assert!(logits.data[0] > 1.5, "{:?}", logits.data);
+        assert!(logits.data[1].abs() < 0.2, "{:?}", logits.data);
+    }
+
+    #[test]
+    fn missing_feed_errors() {
+        let g = tiny_graph();
+        let feeds = BTreeMap::new();
+        assert!(g.run("logits", &feeds, &Multiplier::Exact, None).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut g = Graph::new();
+        g.add("a", Op::Input, &[]).unwrap();
+        assert!(g.add("a", Op::Input, &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_input_rejected() {
+        let mut g = Graph::new();
+        assert!(g.add("x", Op::Flatten, &["nope"]).is_err());
+    }
+}

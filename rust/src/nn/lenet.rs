@@ -1,0 +1,266 @@
+//! Quantized LeNet (the paper's DNN for MNIST / FashionMNIST / CIFAR-10,
+//! with ReLU activations per §III.A) assembled as an ApproxFlow DAG.
+//!
+//! conv1(5x5, 6) → relu → pool → conv2(5x5, 16) → relu → pool →
+//! fc1(120) → relu → fc2(84) → relu → fc3(10) logits.
+//!
+//! Weights and quantization parameters come from the python training
+//! pipeline as a tensor bundle (`artifacts/weights/<dataset>.htb`); the
+//! schema is documented on [`load_graph`]. Input images are f32 in [0,1]
+//! (CHW); the graph quantizes with conv1's input parameters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::tensor_io::Bundle;
+
+use super::graph::{Graph, Op, Value};
+use super::multiplier::Multiplier;
+use super::ops::{QConv2d, QDense};
+use super::quant::QuantParams;
+use super::stats::StatsCollector;
+use super::tensor::Tensor;
+
+/// Read the quantization parameter pair `<layer>.<kind>_{scale,zp}`.
+fn qparams(b: &Bundle, layer: &str, kind: &str) -> Result<QuantParams> {
+    let scale = b.get(&format!("{layer}.{kind}_scale"))?.as_f32()?[0];
+    let zp = b.get(&format!("{layer}.{kind}_zp"))?.as_i32()?[0];
+    Ok(QuantParams { scale, zero_point: zp })
+}
+
+/// Load a conv layer from the bundle.
+fn load_conv(b: &Bundle, name: &str, relu: bool) -> Result<QConv2d> {
+    let w = b.get(&format!("{name}.w"))?;
+    anyhow::ensure!(w.shape.len() == 4, "{name}.w must be 4D, got {:?}", w.shape);
+    Ok(QConv2d {
+        name: name.to_string(),
+        w: Tensor::new(w.shape.clone(), w.as_u8()?.to_vec()),
+        bias: b.get(&format!("{name}.bias"))?.as_i64()?,
+        x_q: qparams(b, name, "x")?,
+        w_q: qparams(b, name, "w")?,
+        out_q: qparams(b, name, "out")?,
+        relu,
+    })
+}
+
+/// Load a dense layer from the bundle.
+fn load_dense(b: &Bundle, name: &str, relu: bool) -> Result<QDense> {
+    let w = b.get(&format!("{name}.w"))?;
+    anyhow::ensure!(w.shape.len() == 2, "{name}.w must be 2D, got {:?}", w.shape);
+    Ok(QDense {
+        name: name.to_string(),
+        w: Tensor::new(w.shape.clone(), w.as_u8()?.to_vec()),
+        bias: b.get(&format!("{name}.bias"))?.as_i64()?,
+        x_q: qparams(b, name, "x")?,
+        w_q: qparams(b, name, "w")?,
+        out_q: qparams(b, name, "out")?,
+        relu,
+    })
+}
+
+/// Assemble the LeNet DAG from a weight bundle.
+///
+/// Bundle schema (per layer `conv1, conv2, fc1, fc2, fc3`):
+/// `<L>.w` (u8 codes), `<L>.bias` (i64, accumulator units),
+/// `<L>.{x,w,out}_scale` (f32\[1\]), `<L>.{x,w,out}_zp` (i32\[1\]).
+pub fn load_graph(bundle: &Bundle) -> Result<Graph> {
+    let mut g = Graph::new();
+    g.add("image", Op::Input, &[])?;
+    let conv1 = load_conv(bundle, "conv1", true).context("conv1")?;
+    g.add("quant", Op::Quantize(conv1.x_q), &["image"])?;
+    g.add("conv1", Op::Conv(Box::new(conv1)), &["quant"])?;
+    g.add("pool1", Op::MaxPool2, &["conv1"])?;
+    let conv2 = load_conv(bundle, "conv2", true).context("conv2")?;
+    g.add("conv2", Op::Conv(Box::new(conv2)), &["pool1"])?;
+    g.add("pool2", Op::MaxPool2, &["conv2"])?;
+    g.add("flatten", Op::Flatten, &["pool2"])?;
+    g.add(
+        "fc1",
+        Op::Dense(Box::new(load_dense(bundle, "fc1", true).context("fc1")?)),
+        &["flatten"],
+    )?;
+    g.add(
+        "fc2",
+        Op::Dense(Box::new(load_dense(bundle, "fc2", true).context("fc2")?)),
+        &["fc1"],
+    )?;
+    g.add(
+        "fc3",
+        Op::DenseLogits(Box::new(load_dense(bundle, "fc3", false).context("fc3")?)),
+        &["fc2"],
+    )?;
+    Ok(g)
+}
+
+/// Load from a file path.
+pub fn load(path: impl AsRef<Path>) -> Result<Graph> {
+    let bundle = Bundle::load(&path)?;
+    load_graph(&bundle).with_context(|| format!("loading LeNet from {}", path.as_ref().display()))
+}
+
+/// Classify one image (f32 CHW in [0,1]); returns (class, logits).
+pub fn classify(
+    graph: &Graph,
+    image: &[f32],
+    shape: (usize, usize, usize),
+    mul: &Multiplier,
+    stats: Option<&mut StatsCollector>,
+) -> Result<(usize, Vec<f32>)> {
+    let (c, h, w) = shape;
+    let mut feeds = BTreeMap::new();
+    feeds.insert(
+        "image".to_string(),
+        Value::F32(Tensor::new(vec![c, h, w], image.to_vec())),
+    );
+    let out = graph.run("fc3", &feeds, mul, stats)?;
+    let logits = out.as_f32()?.data.clone();
+    Ok((super::ops::argmax(&logits), logits))
+}
+
+/// Accuracy over (a prefix of) a dataset split.
+pub fn accuracy(
+    graph: &Graph,
+    xs: &[f32],
+    ys: &[u8],
+    shape: (usize, usize, usize),
+    mul: &Multiplier,
+    limit: usize,
+    mut stats: Option<&mut StatsCollector>,
+) -> Result<f64> {
+    let (c, h, w) = shape;
+    let sz = c * h * w;
+    let n = ys.len().min(limit);
+    anyhow::ensure!(n > 0, "empty evaluation set");
+    let mut correct = 0usize;
+    for i in 0..n {
+        let (pred, _) = classify(
+            graph,
+            &xs[i * sz..(i + 1) * sz],
+            shape,
+            mul,
+            stats.as_deref_mut(),
+        )?;
+        if pred == ys[i] as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Build a LeNet bundle with random (untrained) weights for the given
+/// input geometry — used by tests and the HLO-parity integration check.
+pub fn random_bundle(channels: usize, hw: usize, seed: u64) -> Bundle {
+    use crate::util::prng::Rng;
+    use crate::util::tensor_io::Tensor as IoTensor;
+    let mut rng = Rng::new(seed);
+    let mut b = Bundle::new();
+    // Feature-map geometry after each stage.
+    let c1 = hw - 4; // conv1 5x5 valid
+    let p1 = c1 / 2;
+    let c2 = p1 - 4;
+    let p2 = c2 / 2;
+    let flat = 16 * p2 * p2;
+    let dims: Vec<(&str, Vec<usize>)> = vec![
+        ("conv1", vec![6, channels, 5, 5]),
+        ("conv2", vec![16, 6, 5, 5]),
+        ("fc1", vec![120, flat]),
+        ("fc2", vec![84, 120]),
+        ("fc3", vec![10, 84]),
+    ];
+    for (name, shape) in dims {
+        let n: usize = shape.iter().product();
+        let w: Vec<u8> = (0..n)
+            .map(|_| (128.0 + rng.normal() * 20.0).clamp(0.0, 255.0) as u8)
+            .collect();
+        b.insert(&format!("{name}.w"), IoTensor::from_u8(shape.clone(), &w));
+        let outs = shape[0];
+        b.insert(
+            &format!("{name}.bias"),
+            IoTensor::from_i64(vec![outs], &vec![0i64; outs]),
+        );
+        for (kind, scale, zp) in [
+            ("x", 1.0f32 / 255.0, 0i32),
+            ("w", 0.004, 128),
+            ("out", 1.0 / 255.0, 0),
+        ] {
+            b.insert(
+                &format!("{name}.{kind}_scale"),
+                IoTensor::from_f32(vec![1], &[scale]),
+            );
+            b.insert(&format!("{name}.{kind}_zp"), IoTensor::from_i32(vec![1], &[zp]));
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_lenet_runs_28() {
+        let bundle = random_bundle(1, 28, 1);
+        let g = load_graph(&bundle).unwrap();
+        let img = vec![0.5f32; 28 * 28];
+        let (pred, logits) = classify(&g, &img, (1, 28, 28), &Multiplier::Exact, None).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(pred < 10);
+    }
+
+    #[test]
+    fn random_lenet_runs_32_rgb() {
+        let bundle = random_bundle(3, 32, 2);
+        let g = load_graph(&bundle).unwrap();
+        let img = vec![0.5f32; 3 * 32 * 32];
+        let (_, logits) = classify(&g, &img, (3, 32, 32), &Multiplier::Exact, None).unwrap();
+        assert_eq!(logits.len(), 10);
+    }
+
+    #[test]
+    fn stats_cover_all_five_layers() {
+        let bundle = random_bundle(1, 28, 3);
+        let g = load_graph(&bundle).unwrap();
+        let mut stats = StatsCollector::new();
+        g.record_weights(&mut stats);
+        let img = vec![0.3f32; 28 * 28];
+        let _ = classify(&g, &img, (1, 28, 28), &Multiplier::Exact, Some(&mut stats)).unwrap();
+        let names = stats.layer_names();
+        for l in ["conv1", "conv2", "fc1", "fc2", "fc3"] {
+            assert!(names.contains(&l.to_string()), "missing {l}: {names:?}");
+        }
+        let ds = stats.to_dist_set("lenet");
+        assert_eq!(ds.layers.len(), 5);
+    }
+
+    #[test]
+    fn accuracy_on_random_weights_is_chance_level() {
+        let bundle = random_bundle(1, 28, 4);
+        let g = load_graph(&bundle).unwrap();
+        let ds = crate::data::digits::generate(40, 0, 9);
+        let acc = accuracy(
+            &g,
+            &ds.train_x,
+            &ds.train_y,
+            (1, 28, 28),
+            &Multiplier::Exact,
+            40,
+            None,
+        )
+        .unwrap();
+        // Untrained: accuracy should be far from perfect (chance-ish).
+        assert!(acc < 0.6, "untrained accuracy {acc}");
+    }
+
+    #[test]
+    fn missing_tensor_is_a_clean_error() {
+        let mut bundle = random_bundle(1, 28, 5);
+        bundle.tensors.remove("fc2.w");
+        let err = match load_graph(&bundle) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("expected an error for the missing tensor"),
+        };
+        assert!(err.contains("fc2"), "{err}");
+    }
+}

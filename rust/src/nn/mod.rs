@@ -1,0 +1,27 @@
+//! ApproxFlow — the paper's DNN evaluation toolbox (§II.D), as a rust
+//! inference engine.
+//!
+//! DNNs are directed acyclic graphs ([`graph`]) of quantized operators
+//! ([`ops`]) over 8-bit tensors ([`tensor`], [`quant`] — the Jacob et al.
+//! affine scheme the paper follows). Every multiplication goes through a
+//! pluggable [`multiplier::Multiplier`]: the exact product or a 256x256
+//! LUT of an approximate design — exactly how the paper's toolbox
+//! evaluates accuracy under approximate multiplication.
+//!
+//! [`stats`] captures per-layer operand histograms during forward passes
+//! (Fig. 1) — the distributions the optimizer consumes. [`lenet`] and
+//! [`gcn`] build the two model architectures of the paper's evaluation;
+//! weights come from the python training pipeline via tensor bundles.
+
+pub mod gcn;
+pub mod graph;
+pub mod lenet;
+pub mod multiplier;
+pub mod ops;
+pub mod quant;
+pub mod stats;
+pub mod tensor;
+
+pub use multiplier::Multiplier;
+pub use quant::QuantParams;
+pub use tensor::Tensor;

@@ -1,0 +1,443 @@
+//! Quantized operators.
+//!
+//! Integer arithmetic follows Jacob et al.: with `x = sx (qx - zx)` and
+//! `w = sw (qw - zw)`, a dot product is
+//!
+//! ```text
+//! Σ x·w = sx sw [ Σ qx qw  −  zw Σ qx  −  zx Σ qw  +  N zx zw ]
+//! ```
+//!
+//! and the engine replaces `Σ qx qw` with `Σ mul(qx, qw)` where `mul` is
+//! the pluggable (possibly approximate) multiplier — precisely the paper's
+//! evaluation semantics. Accumulation is i64; requantization multiplies by
+//! `M = sx sw / so` in f32 and re-centers on the output zero point.
+
+use super::multiplier::Multiplier;
+use super::quant::QuantParams;
+use super::stats::StatsCollector;
+use super::tensor::Tensor;
+
+/// A quantized 2D convolution layer (valid padding, stride 1, NCHW).
+#[derive(Clone, Debug)]
+pub struct QConv2d {
+    pub name: String,
+    /// Weights codes [OC, C, KH, KW].
+    pub w: Tensor<u8>,
+    /// Bias in accumulator units (already divided by sx*sw).
+    pub bias: Vec<i64>,
+    pub x_q: QuantParams,
+    pub w_q: QuantParams,
+    pub out_q: QuantParams,
+    /// Fold ReLU into requantization.
+    pub relu: bool,
+}
+
+impl QConv2d {
+    /// Forward on a single image [C, H, W] of codes.
+    pub fn forward(
+        &self,
+        x: &Tensor<u8>,
+        mul: &Multiplier,
+        stats: Option<&mut StatsCollector>,
+    ) -> Tensor<u8> {
+        let (oc, c, kh, kw) = (self.w.dim(0), self.w.dim(1), self.w.dim(2), self.w.dim(3));
+        let (ic, h, w) = (x.dim(0), x.dim(1), x.dim(2));
+        assert_eq!(c, ic, "{}: channel mismatch", self.name);
+        let (oh, ow) = (h - kh + 1, w - kw + 1);
+        let zx = self.x_q.zero_point as i64;
+        let zw = self.w_q.zero_point as i64;
+        let n = (c * kh * kw) as i64;
+        let m = (self.x_q.scale as f64 * self.w_q.scale as f64 / self.out_q.scale as f64) as f32;
+        let zo = self.out_q.zero_point;
+
+        // Per-output-channel weight sums (for the zx correction).
+        let ksz = c * kh * kw;
+        let w_sums: Vec<i64> = (0..oc)
+            .map(|o| {
+                self.w.data[o * ksz..(o + 1) * ksz]
+                    .iter()
+                    .map(|&v| v as i64)
+                    .sum()
+            })
+            .collect();
+
+        let mut out = Tensor::zeros(vec![oc, oh, ow]);
+        // Gather the input window once per output position; reuse across
+        // output channels (the hot path: OC x OH x OW x KSZ MACs).
+        let mut window = vec![0u8; ksz];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut wi = 0;
+                let mut x_sum: i64 = 0;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        let row = ci * h * w + (oy + ky) * w + ox;
+                        for kx in 0..kw {
+                            let code = x.data[row + kx];
+                            window[wi] = code;
+                            x_sum += code as i64;
+                            wi += 1;
+                        }
+                    }
+                }
+                for o in 0..oc {
+                    let wrow = &self.w.data[o * ksz..(o + 1) * ksz];
+                    let prod = mul.dot(&window, wrow);
+                    let acc = prod - zw * x_sum - zx * w_sums[o] + n * zx * zw + self.bias[o];
+                    let code = requant(acc, m, zo, self.relu);
+                    out.data[o * oh * ow + oy * ow + ox] = code;
+                }
+            }
+        }
+        if let Some(s) = stats {
+            // The paper histograms the raw layer inputs (not re-weighted by
+            // how many windows read each pixel).
+            s.record_inputs(&self.name, &x.data);
+            s.record_mults(&self.name, (oc * oh * ow * ksz) as u64);
+        }
+        out
+    }
+
+    /// Register this layer's weight histogram with a collector.
+    pub fn record_weights(&self, stats: &mut StatsCollector) {
+        stats.record_weights(&self.name, &self.w.data);
+    }
+}
+
+/// A quantized fully-connected layer.
+#[derive(Clone, Debug)]
+pub struct QDense {
+    pub name: String,
+    /// Weight codes [OUT, IN].
+    pub w: Tensor<u8>,
+    pub bias: Vec<i64>,
+    pub x_q: QuantParams,
+    pub w_q: QuantParams,
+    pub out_q: QuantParams,
+    pub relu: bool,
+}
+
+impl QDense {
+    /// Forward on a flat input of codes [IN].
+    pub fn forward(
+        &self,
+        x: &[u8],
+        mul: &Multiplier,
+        mut stats: Option<&mut StatsCollector>,
+    ) -> Vec<u8> {
+        let (out_n, in_n) = (self.w.dim(0), self.w.dim(1));
+        assert_eq!(x.len(), in_n, "{}: input size mismatch", self.name);
+        let zx = self.x_q.zero_point as i64;
+        let zw = self.w_q.zero_point as i64;
+        let n = in_n as i64;
+        let m = (self.x_q.scale as f64 * self.w_q.scale as f64 / self.out_q.scale as f64) as f32;
+        let zo = self.out_q.zero_point;
+        let x_sum: i64 = x.iter().map(|&v| v as i64).sum();
+        let mut out = vec![0u8; out_n];
+        for o in 0..out_n {
+            let wrow = &self.w.data[o * in_n..(o + 1) * in_n];
+            let w_sum: i64 = wrow.iter().map(|&v| v as i64).sum();
+            let prod = mul.dot(x, wrow);
+            let acc = prod - zw * x_sum - zx * w_sum + n * zx * zw + self.bias[o];
+            out[o] = requant(acc, m, zo, self.relu);
+        }
+        if let Some(s) = stats.as_deref_mut() {
+            s.record_inputs(&self.name, x);
+            s.record_mults(&self.name, (out_n * in_n) as u64);
+        }
+        out
+    }
+
+    /// Dequantized (f32) forward — used for the final logits layer.
+    pub fn forward_f32(
+        &self,
+        x: &[u8],
+        mul: &Multiplier,
+        mut stats: Option<&mut StatsCollector>,
+    ) -> Vec<f32> {
+        let (out_n, in_n) = (self.w.dim(0), self.w.dim(1));
+        assert_eq!(x.len(), in_n, "{}: input size mismatch", self.name);
+        let zx = self.x_q.zero_point as i64;
+        let zw = self.w_q.zero_point as i64;
+        let n = in_n as i64;
+        let s_acc = self.x_q.scale * self.w_q.scale;
+        let x_sum: i64 = x.iter().map(|&v| v as i64).sum();
+        let mut out = vec![0f32; out_n];
+        for o in 0..out_n {
+            let wrow = &self.w.data[o * in_n..(o + 1) * in_n];
+            let w_sum: i64 = wrow.iter().map(|&v| v as i64).sum();
+            let prod = mul.dot(x, wrow);
+            let acc = prod - zw * x_sum - zx * w_sum + n * zx * zw + self.bias[o];
+            out[o] = acc as f32 * s_acc;
+        }
+        if let Some(s) = stats.as_deref_mut() {
+            s.record_inputs(&self.name, x);
+            s.record_mults(&self.name, (out_n * in_n) as u64);
+        }
+        out
+    }
+
+    /// Register this layer's weight histogram.
+    pub fn record_weights(&self, stats: &mut StatsCollector) {
+        stats.record_weights(&self.name, &self.w.data);
+    }
+}
+
+/// Requantize an accumulator to a u8 code.
+#[inline(always)]
+pub fn requant(acc: i64, m: f32, zo: i32, relu: bool) -> u8 {
+    let v = (acc as f32 * m).round() as i32 + zo;
+    let v = if relu { v.max(zo) } else { v };
+    v.clamp(0, 255) as u8
+}
+
+/// 2x2 max pooling with stride 2 on codes (monotone in the dequantized
+/// value since codes share one scale).
+pub fn maxpool2(x: &Tensor<u8>) -> Tensor<u8> {
+    let (c, h, w) = (x.dim(0), x.dim(1), x.dim(2));
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(vec![c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = 0u8;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let v = x.data[ci * h * w + (oy * 2 + dy) * w + ox * 2 + dx];
+                        best = best.max(v);
+                    }
+                }
+                out.data[ci * oh * ow + oy * ow + ox] = best;
+            }
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over f32 logits.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - max).exp()).collect();
+    let total: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / total).collect()
+}
+
+/// Index of the maximum logit.
+pub fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Quantized matrix multiply: X [N, K] codes times W [K, M] codes into
+/// f32 reals (used by the GCN, whose adjacency propagation is f32).
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_f32(
+    x: &Tensor<u8>,
+    w: &Tensor<u8>,
+    x_q: QuantParams,
+    w_q: QuantParams,
+    mul: &Multiplier,
+    stats: Option<&mut StatsCollector>,
+    layer: &str,
+) -> Tensor<f32> {
+    let (n, k) = (x.dim(0), x.dim(1));
+    let (k2, m_dim) = (w.dim(0), w.dim(1));
+    assert_eq!(k, k2, "{layer}: inner-dim mismatch");
+    let zx = x_q.zero_point as i64;
+    let zw = w_q.zero_point as i64;
+    let s_acc = x_q.scale * w_q.scale;
+    // Column sums of W.
+    let mut w_sums = vec![0i64; m_dim];
+    for r in 0..k {
+        for c in 0..m_dim {
+            w_sums[c] += w.data[r * m_dim + c] as i64;
+        }
+    }
+    // Transpose W for row-major dot products.
+    let mut wt = vec![0u8; k * m_dim];
+    for r in 0..k {
+        for c in 0..m_dim {
+            wt[c * k + r] = w.data[r * m_dim + c];
+        }
+    }
+    let mut out = Tensor::zeros(vec![n, m_dim]);
+    for i in 0..n {
+        let xrow = &x.data[i * k..(i + 1) * k];
+        let x_sum: i64 = xrow.iter().map(|&v| v as i64).sum();
+        for j in 0..m_dim {
+            let prod = mul.dot(xrow, &wt[j * k..(j + 1) * k]);
+            let acc = prod - zw * x_sum - zx * w_sums[j] + (k as i64) * zx * zw;
+            out.data[i * m_dim + j] = acc as f32 * s_acc;
+        }
+    }
+    if let Some(s) = stats {
+        s.record_inputs(layer, &x.data);
+        s.record_weights(layer, &w.data);
+        s.record_mults(layer, (n * k * m_dim) as u64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(scale: f32, zp: i32) -> QuantParams {
+        QuantParams { scale, zero_point: zp }
+    }
+
+    /// Float reference conv for a tiny case.
+    fn conv_ref(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        c: usize,
+        h: usize,
+        wd: usize,
+        oc: usize,
+        k: usize,
+        relu: bool,
+    ) -> Vec<f32> {
+        let (oh, ow) = (h - k + 1, wd - k + 1);
+        let mut out = vec![0.0; oc * oh * ow];
+        for o in 0..oc {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = b[o];
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                acc += x[ci * h * wd + (oy + ky) * wd + ox + kx]
+                                    * w[o * c * k * k + ci * k * k + ky * k + kx];
+                            }
+                        }
+                    }
+                    out[o * oh * ow + oy * ow + ox] = if relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn qconv_tracks_float_reference() {
+        // Small random conv; the quantized output must dequantize to the
+        // float reference within a few quantization steps.
+        let mut rng = crate::util::prng::Rng::new(11);
+        let (c, h, w, oc, k) = (2usize, 8usize, 8usize, 3usize, 3usize);
+        let xf: Vec<f32> = (0..c * h * w).map(|_| rng.f32()).collect();
+        let wf: Vec<f32> = (0..oc * c * k * k).map(|_| (rng.f32() - 0.5) * 0.6).collect();
+        let bf: Vec<f32> = (0..oc).map(|_| (rng.f32() - 0.5) * 0.2).collect();
+        let x_q = q(1.0 / 255.0, 0);
+        let w_q = QuantParams::calibrate(-0.3, 0.3);
+        let reference = conv_ref(&xf, &wf, &bf, c, h, w, oc, k, true);
+        let out_hi = reference.iter().fold(0.0f32, |a, &b| a.max(b));
+        let out_q = QuantParams::calibrate(0.0, out_hi.max(0.1));
+        let layer = QConv2d {
+            name: "t".into(),
+            w: Tensor::new(vec![oc, c, k, k], wf.iter().map(|&v| w_q.quantize(v)).collect()),
+            bias: bf
+                .iter()
+                .map(|&b| (b / (x_q.scale * w_q.scale)).round() as i64)
+                .collect(),
+            x_q,
+            w_q,
+            out_q,
+            relu: true,
+        };
+        let x_codes = Tensor::new(vec![c, h, w], xf.iter().map(|&v| x_q.quantize(v)).collect());
+        let out = layer.forward(&x_codes, &Multiplier::Exact, None);
+        for (i, (&code, &expect)) in out.data.iter().zip(&reference).enumerate() {
+            let got = out_q.dequantize(code);
+            assert!(
+                (got - expect).abs() < out_q.scale * 4.0 + 0.02,
+                "i={i} got {got} expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn qdense_exact_vs_wallace_lut_identical() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let (in_n, out_n) = (32usize, 8usize);
+        let layer = QDense {
+            name: "fc".into(),
+            w: Tensor::new(
+                vec![out_n, in_n],
+                (0..out_n * in_n).map(|_| rng.below(256) as u8).collect(),
+            ),
+            bias: vec![0; out_n],
+            x_q: q(0.01, 3),
+            w_q: q(0.005, 128),
+            out_q: q(0.05, 10),
+            relu: false,
+        };
+        let x: Vec<u8> = (0..in_n).map(|_| rng.below(256) as u8).collect();
+        let exact = layer.forward(&x, &Multiplier::Exact, None);
+        let lut = Multiplier::Lut(std::sync::Arc::new(crate::mult::MultKind::Wallace.lut()));
+        let via_lut = layer.forward(&x, &lut, None);
+        assert_eq!(exact, via_lut);
+    }
+
+    #[test]
+    fn maxpool_halves() {
+        let x = Tensor::new(vec![1, 4, 4], (0..16).map(|v| v as u8).collect());
+        let p = maxpool2(&x);
+        assert_eq!(p.shape, vec![1, 2, 2]);
+        assert_eq!(p.data, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let s = softmax(&[1.0, 2.0, 3.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn qmatmul_matches_float() {
+        let mut rng = crate::util::prng::Rng::new(8);
+        let (n, k, m_dim) = (4usize, 16usize, 5usize);
+        let xf: Vec<f32> = (0..n * k).map(|_| rng.f32()).collect();
+        let wf: Vec<f32> = (0..k * m_dim).map(|_| (rng.f32() - 0.5) * 0.4).collect();
+        let x_q = QuantParams::calibrate(0.0, 1.0);
+        let w_q = QuantParams::calibrate(-0.2, 0.2);
+        let x = Tensor::new(vec![n, k], xf.iter().map(|&v| x_q.quantize(v)).collect());
+        let w = Tensor::new(vec![k, m_dim], wf.iter().map(|&v| w_q.quantize(v)).collect());
+        let out = qmatmul_f32(&x, &w, x_q, w_q, &Multiplier::Exact, None, "t");
+        for i in 0..n {
+            for j in 0..m_dim {
+                let mut expect = 0.0;
+                for r in 0..k {
+                    expect += xf[i * k + r] * wf[r * m_dim + j];
+                }
+                let got = out.data[i * m_dim + j];
+                assert!((got - expect).abs() < 0.05, "({i},{j}) {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_are_recorded() {
+        let layer = QDense {
+            name: "fc".into(),
+            w: Tensor::new(vec![2, 4], vec![128; 8]),
+            bias: vec![0, 0],
+            x_q: q(0.01, 0),
+            w_q: q(0.01, 128),
+            out_q: q(0.01, 0),
+            relu: false,
+        };
+        let mut stats = StatsCollector::new();
+        layer.record_weights(&mut stats);
+        let _ = layer.forward(&[1, 2, 3, 4], &Multiplier::Exact, Some(&mut stats));
+        let s = stats.layer("fc").unwrap();
+        assert_eq!(s.mults, 8);
+        assert_eq!(s.w_counts[128], 8);
+        assert_eq!(s.x_counts[1], 1);
+    }
+}

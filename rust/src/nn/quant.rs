@@ -1,0 +1,114 @@
+//! Affine 8-bit quantization (Jacob et al., CVPR 2018 — reference \[27\]
+//! of the paper): `real = scale * (code - zero_point)` with u8 codes.
+
+use super::tensor::Tensor;
+
+/// Quantization parameters of one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Choose parameters covering `[lo, hi]` (asymmetric, u8 range),
+    /// always including 0 in the representable range (required so ReLU's
+    /// zero and zero padding are exactly representable).
+    pub fn calibrate(lo: f32, hi: f32) -> Self {
+        let lo = lo.min(0.0);
+        let hi = hi.max(f32::EPSILON);
+        let scale = (hi - lo) / 255.0;
+        let zero_point = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+        Self { scale, zero_point }
+    }
+
+    /// Quantize one value.
+    #[inline]
+    pub fn quantize(&self, v: f32) -> u8 {
+        ((v / self.scale).round() as i32 + self.zero_point).clamp(0, 255) as u8
+    }
+
+    /// Dequantize one code.
+    #[inline]
+    pub fn dequantize(&self, code: u8) -> f32 {
+        self.scale * (code as i32 - self.zero_point) as f32
+    }
+
+    /// Quantize a float tensor.
+    pub fn quantize_tensor(&self, t: &Tensor<f32>) -> Tensor<u8> {
+        Tensor::new(t.shape.clone(), t.data.iter().map(|&v| self.quantize(v)).collect())
+    }
+
+    /// Dequantize a code tensor.
+    pub fn dequantize_tensor(&self, t: &Tensor<u8>) -> Tensor<f32> {
+        Tensor::new(t.shape.clone(), t.data.iter().map(|&c| self.dequantize(c)).collect())
+    }
+}
+
+/// Calibrate from observed values.
+pub fn calibrate_from(values: &[f32]) -> QuantParams {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return QuantParams { scale: 1.0 / 255.0, zero_point: 0 };
+    }
+    QuantParams::calibrate(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let q = QuantParams::calibrate(-2.0, 6.0);
+        for v in [-2.0f32, -0.5, 0.0, 1.2345, 5.999] {
+            let code = q.quantize(v);
+            let back = q.dequantize(code);
+            assert!((back - v).abs() <= q.scale * 0.51, "v={v} back={back}");
+        }
+    }
+
+    #[test]
+    fn zero_is_exact() {
+        // The affine scheme must represent 0 exactly (Jacob et al. §2.1).
+        for (lo, hi) in [(-1.0f32, 1.0f32), (0.0, 4.0), (-3.0, 0.5)] {
+            let q = QuantParams::calibrate(lo, hi);
+            assert_eq!(q.dequantize(q.quantize(0.0)), 0.0, "({lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn relu_like_range_gets_zero_zp() {
+        let q = QuantParams::calibrate(0.0, 8.0);
+        assert_eq!(q.zero_point, 0);
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.quantize(8.0), 255);
+    }
+
+    #[test]
+    fn weight_like_range_centers() {
+        // Symmetric weights land the zero point near 128 — the Fig. 1(b)
+        // shape.
+        let q = QuantParams::calibrate(-0.5, 0.5);
+        assert!((q.zero_point - 128).abs() <= 1, "zp = {}", q.zero_point);
+    }
+
+    #[test]
+    fn calibrate_from_samples() {
+        let q = calibrate_from(&[0.1, -0.2, 3.0]);
+        assert!(q.scale > 0.0);
+        assert_eq!(q.quantize(3.0), 255);
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let q = QuantParams::calibrate(0.0, 1.0);
+        assert_eq!(q.quantize(99.0), 255);
+        assert_eq!(q.quantize(-99.0), 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-layer operand statistics capture (Fig. 1 of the paper).
+//!
+//! During a forward pass the engine can record histograms of the u8
+//! activation codes each layer consumes; weight histograms are static.
+//! The result converts into [`crate::opt::DistSet`] — the input of the
+//! optimization method.
+
+use std::collections::BTreeMap;
+
+use crate::opt::distributions::{Dist256, DistSet, LayerDist};
+
+/// Accumulates operand histograms per layer.
+#[derive(Clone, Debug, Default)]
+pub struct StatsCollector {
+    layers: BTreeMap<String, LayerStats>,
+}
+
+/// Histogram pair + multiplication count of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub x_counts: [u64; 256],
+    pub w_counts: [u64; 256],
+    pub mults: u64,
+}
+
+impl Default for LayerStats {
+    fn default() -> Self {
+        Self {
+            x_counts: [0; 256],
+            w_counts: [0; 256],
+            mults: 0,
+        }
+    }
+}
+
+impl StatsCollector {
+    /// New empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the weights of a layer (once).
+    pub fn record_weights(&mut self, layer: &str, codes: &[u8]) {
+        let s = self.layers.entry(layer.to_string()).or_default();
+        for &c in codes {
+            s.w_counts[c as usize] += 1;
+        }
+    }
+
+    /// Record activation codes flowing into a layer.
+    pub fn record_inputs(&mut self, layer: &str, codes: &[u8]) {
+        let s = self.layers.entry(layer.to_string()).or_default();
+        for &c in codes {
+            s.x_counts[c as usize] += 1;
+        }
+    }
+
+    /// Record the multiplication count a layer performed.
+    pub fn record_mults(&mut self, layer: &str, count: u64) {
+        self.layers.entry(layer.to_string()).or_default().mults += count;
+    }
+
+    /// Layer names seen so far.
+    pub fn layer_names(&self) -> Vec<String> {
+        self.layers.keys().cloned().collect()
+    }
+
+    /// Raw stats of a layer.
+    pub fn layer(&self, name: &str) -> Option<&LayerStats> {
+        self.layers.get(name)
+    }
+
+    /// Convert to a [`DistSet`] (layers with empty histograms are skipped).
+    pub fn to_dist_set(&self, model: &str) -> DistSet {
+        let mut layers = Vec::new();
+        for (name, s) in &self.layers {
+            let xf: Vec<f64> = s.x_counts.iter().map(|&c| c as f64).collect();
+            let wf: Vec<f64> = s.w_counts.iter().map(|&c| c as f64).collect();
+            let (Ok(x), Ok(y)) = (Dist256::from_counts(&xf), Dist256::from_counts(&wf)) else {
+                continue;
+            };
+            layers.push(LayerDist {
+                name: name.clone(),
+                x,
+                y,
+                mults: s.mults.max(1),
+            });
+        }
+        DistSet {
+            model: model.to_string(),
+            layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_and_converts() {
+        let mut c = StatsCollector::new();
+        c.record_weights("fc1", &[128, 128, 130]);
+        c.record_inputs("fc1", &[0, 0, 0, 5]);
+        c.record_mults("fc1", 12);
+        let ds = c.to_dist_set("test");
+        assert_eq!(ds.layers.len(), 1);
+        let l = &ds.layers[0];
+        assert_eq!(l.mults, 12);
+        assert_eq!(l.x.mode(), 0);
+        assert_eq!(l.y.mode(), 128);
+    }
+
+    #[test]
+    fn empty_layers_skipped() {
+        let mut c = StatsCollector::new();
+        c.record_mults("ghost", 5); // no histograms
+        let ds = c.to_dist_set("test");
+        assert!(ds.layers.is_empty());
+    }
+
+    #[test]
+    fn accumulates_across_calls() {
+        let mut c = StatsCollector::new();
+        c.record_inputs("l", &[7]);
+        c.record_inputs("l", &[7, 7]);
+        assert_eq!(c.layer("l").unwrap().x_counts[7], 3);
+    }
+}

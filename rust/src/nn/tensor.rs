@@ -1,0 +1,71 @@
+//! Minimal dense tensor (ndarray is absent from the offline snapshot).
+
+/// A dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Clone + Default> Tensor<T> {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape,
+            data: vec![T::default(); n],
+        }
+    }
+
+    /// From parts (checks the element count).
+    pub fn new(shape: Vec<usize>, data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs {} elements",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Dimension i.
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_reshape() {
+        let t: Tensor<f32> = Tensor::zeros(vec![2, 3]);
+        assert_eq!(t.len(), 6);
+        let t = t.reshape(vec![3, 2]);
+        assert_eq!(t.dim(0), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        let _ = Tensor::new(vec![2, 2], vec![1.0f32; 3]);
+    }
+}

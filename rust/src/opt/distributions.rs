@@ -1,0 +1,282 @@
+//! Operand probability distributions (Fig. 1 of the paper).
+//!
+//! The paper extracts 256-bin histograms of the quantized inputs (x) and
+//! weights (y) of every DNN layer, then optimizes one multiplier against
+//! the aggregate. The python training pipeline exports the same histograms
+//! (`artifacts/dist/<model>.json`); [`DistSet::load`] reads them and
+//! [`DistSet::aggregate`] combines layers weighted by how many
+//! multiplications each layer actually performs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Value};
+
+/// A normalized 256-bin probability distribution over u8 operand codes.
+#[derive(Clone, Debug)]
+pub struct Dist256 {
+    pub p: [f64; 256],
+}
+
+impl Dist256 {
+    /// Uniform distribution.
+    pub fn uniform() -> Self {
+        Self { p: [1.0 / 256.0; 256] }
+    }
+
+    /// From raw counts (normalizes; errors if all-zero).
+    pub fn from_counts(counts: &[f64]) -> Result<Self> {
+        anyhow::ensure!(counts.len() == 256, "need 256 bins, got {}", counts.len());
+        let total: f64 = counts.iter().sum();
+        anyhow::ensure!(total > 0.0, "empty histogram");
+        anyhow::ensure!(counts.iter().all(|&c| c >= 0.0), "negative count");
+        let mut p = [0.0; 256];
+        for (i, &c) in counts.iter().enumerate() {
+            p[i] = c / total;
+        }
+        Ok(Self { p })
+    }
+
+    /// From observed u8 samples.
+    pub fn from_samples(samples: &[u8]) -> Result<Self> {
+        let mut counts = [0.0f64; 256];
+        for &s in samples {
+            counts[s as usize] += 1.0;
+        }
+        Self::from_counts(&counts)
+    }
+
+    /// Most probable code.
+    pub fn mode(&self) -> u8 {
+        self.p
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u8)
+            .unwrap()
+    }
+
+    /// Expectation.
+    pub fn mean(&self) -> f64 {
+        self.p.iter().enumerate().map(|(i, &p)| i as f64 * p).sum()
+    }
+
+    /// Mix another distribution in with the given weight.
+    pub fn mix(&mut self, other: &Dist256, weight: f64) {
+        for i in 0..256 {
+            self.p[i] += other.p[i] * weight;
+        }
+    }
+
+    /// Renormalize to sum 1 (after mixing).
+    pub fn normalize(&mut self) {
+        let total: f64 = self.p.iter().sum();
+        if total > 0.0 {
+            for v in self.p.iter_mut() {
+                *v /= total;
+            }
+        }
+    }
+}
+
+/// Distributions of one DNN layer: inputs (x operand) and weights (y).
+#[derive(Clone, Debug)]
+pub struct LayerDist {
+    pub name: String,
+    pub x: Dist256,
+    pub y: Dist256,
+    /// Number of multiplications this layer performs per inference —
+    /// the aggregation weight.
+    pub mults: u64,
+}
+
+/// All layers of a model.
+#[derive(Clone, Debug)]
+pub struct DistSet {
+    pub model: String,
+    pub layers: Vec<LayerDist>,
+}
+
+impl DistSet {
+    /// Aggregate operand distributions across layers, weighted by each
+    /// layer's multiplication count — the distributions the paper's Eq. 6
+    /// actually optimizes against.
+    pub fn aggregate(&self) -> (Dist256, Dist256) {
+        let mut x = Dist256 { p: [0.0; 256] };
+        let mut y = Dist256 { p: [0.0; 256] };
+        let total: f64 = self.layers.iter().map(|l| l.mults as f64).sum();
+        for l in &self.layers {
+            let w = if total > 0.0 { l.mults as f64 / total } else { 1.0 };
+            x.mix(&l.x, w);
+            y.mix(&l.y, w);
+        }
+        x.normalize();
+        y.normalize();
+        (x, y)
+    }
+
+    /// Look up a layer by name.
+    pub fn layer(&self, name: &str) -> Result<&LayerDist> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow!("no layer '{name}' in distribution set"))
+    }
+
+    /// Serialize to the shared JSON schema.
+    pub fn to_json(&self) -> String {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Value::obj(vec![
+                    ("name", Value::Str(l.name.clone())),
+                    ("mults", Value::Int(l.mults as i64)),
+                    ("x", Value::f64_arr(&l.x.p)),
+                    ("y", Value::f64_arr(&l.y.p)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("layers", Value::Arr(layers)),
+        ])
+        .to_json()
+    }
+
+    /// Parse from the shared JSON schema (written by
+    /// `python/compile/train.py` or [`DistSet::to_json`]).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let model = v
+            .require("model")?
+            .as_str()
+            .ok_or_else(|| anyhow!("model must be a string"))?
+            .to_string();
+        let mut layers = Vec::new();
+        for l in v.require("layers")?.as_arr().ok_or_else(|| anyhow!("layers must be an array"))? {
+            let name = l
+                .require("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("layer name must be a string"))?
+                .to_string();
+            let mults = l.require("mults")?.as_i64().unwrap_or(1) as u64;
+            let xs = l.require("x")?.to_f64_vec()?;
+            let ys = l.require("y")?.to_f64_vec()?;
+            layers.push(LayerDist {
+                name,
+                x: Dist256::from_counts(&xs)?,
+                y: Dist256::from_counts(&ys)?,
+                mults,
+            });
+        }
+        Ok(Self { model, layers })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// A synthetic stand-in matching the paper's Fig. 1 qualitative shape
+    /// (inputs concentrated near 0 after ReLU, weights near the zero-point
+    /// 128): used by unit tests and as a fallback when the python export
+    /// has not been generated yet.
+    pub fn synthetic_lenet_like() -> Self {
+        let mut xs = [0.0f64; 256];
+        for (i, v) in xs.iter_mut().enumerate() {
+            // Heavy mass at 0 (ReLU), exponential tail.
+            *v = if i == 0 { 40.0 } else { (-(i as f64) / 24.0).exp() };
+        }
+        let mut ys = [0.0f64; 256];
+        for (i, v) in ys.iter_mut().enumerate() {
+            // Near-Gaussian around the zero-point 128.
+            let d = (i as f64 - 128.0) / 14.0;
+            *v = (-0.5 * d * d).exp();
+        }
+        let x = Dist256::from_counts(&xs).unwrap();
+        let y = Dist256::from_counts(&ys).unwrap();
+        DistSet {
+            model: "synthetic-lenet".into(),
+            layers: vec![LayerDist {
+                name: "all".into(),
+                x,
+                y,
+                mults: 1,
+            }],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_samples_normalizes() {
+        let d = Dist256::from_samples(&[0, 0, 0, 128, 255]).unwrap();
+        assert!((d.p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(d.mode(), 0);
+        assert!((d.p[0] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_rejected() {
+        assert!(Dist256::from_counts(&[0.0; 256]).is_err());
+        assert!(Dist256::from_counts(&[1.0; 128]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ds = DistSet::synthetic_lenet_like();
+        let parsed = DistSet::from_json(&ds.to_json()).unwrap();
+        assert_eq!(parsed.model, ds.model);
+        assert_eq!(parsed.layers.len(), 1);
+        let (a, b) = (&parsed.layers[0].x.p, &ds.layers[0].x.p);
+        for i in 0..256 {
+            assert!((a[i] - b[i]).abs() < 1e-9, "bin {i}");
+        }
+    }
+
+    #[test]
+    fn aggregate_weights_by_mults() {
+        let mut low = [0.0; 256];
+        low[0] = 1.0;
+        let mut high = [0.0; 256];
+        high[255] = 1.0;
+        let mk = |c: &[f64; 256]| Dist256::from_counts(c).unwrap();
+        let ds = DistSet {
+            model: "t".into(),
+            layers: vec![
+                LayerDist { name: "a".into(), x: mk(&low), y: mk(&low), mults: 3 },
+                LayerDist { name: "b".into(), x: mk(&high), y: mk(&high), mults: 1 },
+            ],
+        };
+        let (x, _) = ds.aggregate();
+        assert!((x.p[0] - 0.75).abs() < 1e-12);
+        assert!((x.p[255] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_shape_matches_fig1() {
+        // Inputs concentrated at 0, weights around 128 — the Fig. 1 shape.
+        let ds = DistSet::synthetic_lenet_like();
+        let (x, y) = ds.aggregate();
+        assert_eq!(x.mode(), 0);
+        assert_eq!(y.mode(), 128);
+        assert!(x.p[0] > 0.2);
+        assert!(y.mean() > 120.0 && y.mean() < 136.0);
+    }
+}

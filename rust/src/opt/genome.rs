@@ -1,0 +1,207 @@
+//! The θ encoding (Eq. 4): one bit per candidate compressed term.
+//!
+//! For an n-bit multiplier with R compressed rows there are `n + R - 1`
+//! active columns. A 1-bit column has a single candidate (the bit itself,
+//! [`BaseOp::Pass`] — the paper applies no logic op to singleton columns);
+//! a multi-bit column offers AND, OR and XOR candidates. θ_k = 1 keeps
+//! candidate k in the compressed partial-product matrix.
+
+use crate::mult::heam::{BaseOp, HeamDesign, Term};
+use crate::mult::pp::column_height;
+use crate::util::prng::Rng;
+
+/// One candidate compressed term.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    /// Column weight.
+    pub col: usize,
+    pub op: BaseOp,
+}
+
+/// The candidate space for a (bits, compressed_rows) configuration.
+#[derive(Clone, Debug)]
+pub struct GenomeSpace {
+    pub bits: usize,
+    pub compressed_rows: usize,
+    pub candidates: Vec<Candidate>,
+}
+
+impl GenomeSpace {
+    /// Enumerate candidates in column order.
+    pub fn new(bits: usize, compressed_rows: usize) -> Self {
+        let mut candidates = Vec::new();
+        for col in 0..(bits + compressed_rows - 1) {
+            let h = column_height(bits, 0..compressed_rows, col);
+            match h {
+                0 => {}
+                1 => candidates.push(Candidate { col, op: BaseOp::Pass }),
+                _ => {
+                    for op in [BaseOp::And, BaseOp::Or, BaseOp::Xor] {
+                        candidates.push(Candidate { col, op });
+                    }
+                }
+            }
+        }
+        Self { bits, compressed_rows, candidates }
+    }
+
+    /// Number of genes.
+    pub fn len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    /// True when the space has no candidates (degenerate config).
+    pub fn is_empty(&self) -> bool {
+        self.candidates.is_empty()
+    }
+}
+
+/// A θ assignment over a [`GenomeSpace`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Genome {
+    pub genes: Vec<bool>,
+}
+
+impl Genome {
+    /// All-zero genome (every compressed column dropped).
+    pub fn zeros(space: &GenomeSpace) -> Self {
+        Self { genes: vec![false; space.len()] }
+    }
+
+    /// The "keep everything reasonable" seed: Pass on singles, XOR+AND on
+    /// multi-bit columns (sum + carry of the exact column sum). Seeding the
+    /// GA population with it speeds convergence markedly.
+    pub fn seeded(space: &GenomeSpace) -> Self {
+        let genes = space
+            .candidates
+            .iter()
+            .map(|c| matches!(c.op, BaseOp::Pass | BaseOp::Xor | BaseOp::And))
+            .collect();
+        Self { genes }
+    }
+
+    /// Uniformly random genome with inclusion probability `p`.
+    pub fn random(space: &GenomeSpace, rng: &mut Rng, p: f64) -> Self {
+        Self {
+            genes: (0..space.len()).map(|_| rng.chance(p)).collect(),
+        }
+    }
+
+    /// Number of selected terms.
+    pub fn count(&self) -> usize {
+        self.genes.iter().filter(|&&g| g).count()
+    }
+
+    /// Per-column selected-term counts (the `n_l` of Eq. 5).
+    pub fn per_column_counts(&self, space: &GenomeSpace) -> Vec<usize> {
+        let ncols = space.bits + space.compressed_rows - 1;
+        let mut counts = vec![0usize; ncols];
+        for (gene, cand) in self.genes.iter().zip(&space.candidates) {
+            if *gene {
+                counts[cand.col] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Materialize as a [`HeamDesign`].
+    pub fn to_design(&self, space: &GenomeSpace) -> HeamDesign {
+        let mut d = HeamDesign::empty(space.bits, space.compressed_rows);
+        for (gene, cand) in self.genes.iter().zip(&space.candidates) {
+            if *gene {
+                d.cols[cand.col].push(Term::single(cand.op));
+            }
+        }
+        d
+    }
+
+    /// Uniform crossover.
+    pub fn crossover(&self, other: &Genome, rng: &mut Rng) -> Genome {
+        Genome {
+            genes: self
+                .genes
+                .iter()
+                .zip(&other.genes)
+                .map(|(&a, &b)| if rng.chance(0.5) { a } else { b })
+                .collect(),
+        }
+    }
+
+    /// Per-gene flip mutation.
+    pub fn mutate(&mut self, rng: &mut Rng, rate: f64) {
+        for g in self.genes.iter_mut() {
+            if rng.chance(rate) {
+                *g = !*g;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_size_for_paper_config() {
+        // 8x8, 4 compressed rows: columns 0..=10 with heights
+        // 1,2,3,4,4,4,4,4,3,2,1 -> 2 singles + 9 multi-bit columns x 3 ops.
+        let s = GenomeSpace::new(8, 4);
+        assert_eq!(s.len(), 2 + 9 * 3);
+    }
+
+    #[test]
+    fn fig3_config_4x4_3rows() {
+        // Fig. 3: 4x4 with first 3 rows compressed -> 6 columns, heights
+        // 1,2,3,3,2,1 -> 2 singles + 4 multi x 3.
+        let s = GenomeSpace::new(4, 3);
+        assert_eq!(s.len(), 2 + 4 * 3);
+    }
+
+    #[test]
+    fn design_roundtrip() {
+        let s = GenomeSpace::new(8, 4);
+        let g = Genome::seeded(&s);
+        let d = g.to_design(&s);
+        assert_eq!(d.term_count(), g.count());
+        // Singles pass, multi-bit columns keep XOR+AND.
+        assert_eq!(d.cols[0].len(), 1);
+        assert_eq!(d.cols[5].len(), 2);
+    }
+
+    #[test]
+    fn per_column_counts_match_design() {
+        let s = GenomeSpace::new(8, 4);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let g = Genome::random(&s, &mut rng, 0.5);
+            let counts = g.per_column_counts(&s);
+            let d = g.to_design(&s);
+            for (w, c) in counts.iter().enumerate() {
+                assert_eq!(d.cols[w].len(), *c, "col {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_flips_some_genes() {
+        let s = GenomeSpace::new(8, 4);
+        let mut rng = Rng::new(7);
+        let base = Genome::zeros(&s);
+        let mut m = base.clone();
+        m.mutate(&mut rng, 0.5);
+        assert_ne!(m, base);
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let s = GenomeSpace::new(8, 4);
+        let mut rng = Rng::new(9);
+        let a = Genome::zeros(&s);
+        let b = Genome {
+            genes: vec![true; s.len()],
+        };
+        let c = a.crossover(&b, &mut rng);
+        let ones = c.count();
+        assert!(ones > 0 && ones < s.len(), "child should mix: {ones}");
+    }
+}

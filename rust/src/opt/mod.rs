@@ -1,0 +1,31 @@
+//! The paper's optimization method (§II): application-specific approximate
+//! multiplier design driven by operand probability distributions.
+//!
+//! * [`distributions`] — 256-bin operand histograms per DNN layer
+//!   (Fig. 1), loadable from the python training export.
+//! * [`objective`] — Eq. 3–6: distribution-weighted expected squared error
+//!   `E(x,y|θ)` plus the `Cons(θ)` term-count / column-stacking penalty,
+//!   evaluated over the precomputed candidate-term bitplanes (the GA's
+//!   hot path).
+//! * [`genome`] — the θ encoding: one bit per (column, op) candidate over
+//!   the compressed partial-product region.
+//! * [`ga`] — the mixed-integer genetic algorithm (MATLAB GA substitute):
+//!   tournament selection, uniform crossover, per-gene mutation, elitism.
+//! * [`finetune`] — §II.C: OR-merging compressed terms to cut the number
+//!   of compressed partial-product rows (Fig. 4(b) → Fig. 4(c)).
+//! * [`linear_fit`] — the §II.A / Fig. 2 demonstration: weighted
+//!   least-squares linear-form multipliers f1 (uniform) and f2
+//!   (distribution-weighted) over the bases {1, x, y, x^2, y^2}.
+
+pub mod distributions;
+pub mod finetune;
+pub mod ga;
+pub mod genome;
+pub mod linear_fit;
+pub mod nonlinear;
+pub mod objective;
+
+pub use distributions::{Dist256, DistSet, LayerDist};
+pub use ga::{GaConfig, GaResult};
+pub use genome::Genome;
+pub use objective::Objective;

@@ -1,0 +1,272 @@
+//! Application-specific approximate **nonlinear units** — the paper's §V
+//! ("the proposed optimization method is promising to be adapted for
+//! Sigmoid and Softmax functions"), implemented with the same machinery:
+//! minimize the distribution-weighted expected squared error of a
+//! hardware-friendly approximation against the exact function.
+//!
+//! The design space is a segmented piecewise-linear unit on u8 input
+//! codes: `K` segments with power-of-two-width spacing; each segment
+//! holds an (intercept, slope) pair quantized to fixed point. Hardware
+//! cost = coefficient ROM (2K entries) + one small multiplier + adder —
+//! the standard PWL activation-unit topology. The optimizer chooses the
+//! segment boundaries by dynamic programming on the weighted error,
+//! which is the natural analogue of Eq. 6 for a 1-D unit (exhaustive DP
+//! replaces the GA because the space is small enough to solve optimally).
+
+use crate::opt::distributions::Dist256;
+
+/// The exact function being approximated, on dequantized inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Nonlinearity {
+    /// Logistic sigmoid over a [-8, 8) input range.
+    Sigmoid,
+    /// exp(x) over [-8, 0) — the softmax numerator kernel (softmax is
+    /// exp + normalize; the exp is the hardware-relevant part).
+    SoftmaxExp,
+}
+
+impl Nonlinearity {
+    /// Input range represented by codes 0..=255.
+    pub fn range(self) -> (f64, f64) {
+        match self {
+            Nonlinearity::Sigmoid => (-8.0, 8.0),
+            Nonlinearity::SoftmaxExp => (-8.0, 0.0),
+        }
+    }
+
+    /// Exact value at a code.
+    pub fn exact(self, code: u8) -> f64 {
+        let (lo, hi) = self.range();
+        let x = lo + (hi - lo) * code as f64 / 255.0;
+        match self {
+            Nonlinearity::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Nonlinearity::SoftmaxExp => x.exp(),
+        }
+    }
+}
+
+/// One optimized segment.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// First input code of the segment (inclusive).
+    pub start: u8,
+    /// Fixed-point intercept and slope (Q8.16 and Q0.16 respectively).
+    pub intercept_q: i32,
+    pub slope_q: i32,
+}
+
+/// The optimized piecewise-linear unit.
+#[derive(Clone, Debug)]
+pub struct PwlUnit {
+    pub kind: Nonlinearity,
+    pub segments: Vec<Segment>,
+}
+
+const FRAC_BITS: u32 = 16;
+
+impl PwlUnit {
+    /// Evaluate at a code (fixed-point arithmetic, as the hardware would).
+    pub fn eval(&self, code: u8) -> f64 {
+        let seg = match self
+            .segments
+            .binary_search_by(|s| s.start.cmp(&code))
+        {
+            Ok(i) => &self.segments[i],
+            Err(0) => &self.segments[0],
+            Err(i) => &self.segments[i - 1],
+        };
+        let dx = (code - seg.start) as i64;
+        let q = seg.intercept_q as i64 + seg.slope_q as i64 * dx;
+        q as f64 / (1u64 << FRAC_BITS) as f64
+    }
+
+    /// Distribution-weighted mean squared error (the Eq. 3 analogue).
+    pub fn weighted_error(&self, px: &Dist256) -> f64 {
+        (0..256u32)
+            .map(|c| {
+                let d = self.eval(c as u8) - self.kind.exact(c as u8);
+                d * d * px.p[c as usize]
+            })
+            .sum()
+    }
+
+    /// Coefficient-ROM bits (hardware-cost proxy: 2 coefficients x 32 b
+    /// per segment).
+    pub fn rom_bits(&self) -> usize {
+        self.segments.len() * 64
+    }
+}
+
+/// Weighted least-squares line fit of `kind` over codes [start, end).
+fn fit_segment(kind: Nonlinearity, px: &Dist256, start: usize, end: usize) -> (f64, f64, f64) {
+    // Returns (intercept at `start`, slope per code, weighted sq err).
+    let (mut sw, mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for c in start..end {
+        // Small floor weight keeps unobserved codes from degenerating the
+        // fit (the unit must stay sane off-distribution).
+        let w = px.p[c] + 1e-9;
+        let x = (c - start) as f64;
+        let y = kind.exact(c as u8);
+        sw += w;
+        sx += w * x;
+        sy += w * y;
+        sxx += w * x * x;
+        sxy += w * x * y;
+    }
+    let denom = sw * sxx - sx * sx;
+    let slope = if denom.abs() < 1e-18 { 0.0 } else { (sw * sxy - sx * sy) / denom };
+    let intercept = (sy - slope * sx) / sw;
+    let mut err = 0.0;
+    for c in start..end {
+        let d = intercept + slope * (c - start) as f64 - kind.exact(c as u8);
+        err += d * d * px.p[c];
+    }
+    (intercept, slope, err)
+}
+
+/// Optimize a K-segment unit against the operand distribution by dynamic
+/// programming over segment boundaries (optimal for this space — the 1-D
+/// analogue of Eq. 6's search).
+pub fn optimize(kind: Nonlinearity, px: &Dist256, k: usize) -> PwlUnit {
+    assert!((1..=64).contains(&k));
+    // err[s][e): cache of single-segment fits on demand.
+    // dp[j][e] = best error covering [0, e) with j segments.
+    let n = 256usize;
+    let mut fit_cache = vec![vec![None::<(f64, f64, f64)>; n + 1]; n];
+    let mut fit = |s: usize, e: usize, cache: &mut Vec<Vec<Option<(f64, f64, f64)>>>| {
+        if cache[s][e].is_none() {
+            cache[s][e] = Some(fit_segment(kind, px, s, e));
+        }
+        cache[s][e].unwrap()
+    };
+    const INF: f64 = f64::INFINITY;
+    let mut dp = vec![vec![INF; n + 1]; k + 1];
+    let mut parent = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    // Candidate boundaries restricted to multiples of 8 (the hardware
+    // decodes the segment index from the top bits) plus the endpoints.
+    let cuts: Vec<usize> = (0..=n).filter(|&c| c % 8 == 0).collect();
+    for j in 1..=k {
+        for &e in &cuts {
+            if e == 0 {
+                continue;
+            }
+            for &s in &cuts {
+                if s >= e || dp[j - 1][s] == INF {
+                    continue;
+                }
+                let (_, _, err) = fit(s, e, &mut fit_cache);
+                let total = dp[j - 1][s] + err;
+                if total < dp[j][e] {
+                    dp[j][e] = total;
+                    parent[j][e] = s;
+                }
+            }
+        }
+    }
+    // Walk back the boundaries.
+    let mut bounds = vec![n];
+    let mut e = n;
+    for j in (1..=k).rev() {
+        e = parent[j][e];
+        bounds.push(e);
+    }
+    bounds.reverse();
+    debug_assert_eq!(bounds[0], 0);
+    let mut segments = Vec::with_capacity(k);
+    for win in bounds.windows(2) {
+        let (s, e) = (win[0], win[1]);
+        if s == e {
+            continue;
+        }
+        let (intercept, slope, _) = fit(s, e, &mut fit_cache);
+        segments.push(Segment {
+            start: s as u8,
+            intercept_q: (intercept * (1u64 << FRAC_BITS) as f64).round() as i32,
+            slope_q: (slope * (1u64 << FRAC_BITS) as f64).round() as i32,
+        });
+    }
+    PwlUnit { kind, segments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::distributions::DistSet;
+
+    fn gaussian_dist(center: f64, sigma: f64) -> Dist256 {
+        let mut c = [0.0f64; 256];
+        for (i, v) in c.iter_mut().enumerate() {
+            let d = (i as f64 - center) / sigma;
+            *v = (-0.5 * d * d).exp();
+        }
+        Dist256::from_counts(&c).unwrap()
+    }
+
+    #[test]
+    fn more_segments_never_hurt() {
+        let px = gaussian_dist(128.0, 30.0);
+        let e4 = optimize(Nonlinearity::Sigmoid, &px, 4).weighted_error(&px);
+        let e8 = optimize(Nonlinearity::Sigmoid, &px, 8).weighted_error(&px);
+        let e16 = optimize(Nonlinearity::Sigmoid, &px, 16).weighted_error(&px);
+        assert!(e8 <= e4 + 1e-12, "{e8} vs {e4}");
+        assert!(e16 <= e8 + 1e-12, "{e16} vs {e8}");
+        assert!(e16 < 1e-4, "16-segment sigmoid should be tight: {e16}");
+    }
+
+    #[test]
+    fn distribution_weighting_helps_where_mass_is() {
+        // A unit optimized for mass near code 40 must beat the
+        // uniform-optimized unit *on that distribution* (the §II.A story
+        // for nonlinear units).
+        let px = gaussian_dist(40.0, 10.0);
+        let uni = Dist256::uniform();
+        let tuned = optimize(Nonlinearity::Sigmoid, &px, 4);
+        let generic = optimize(Nonlinearity::Sigmoid, &uni, 4);
+        let e_tuned = tuned.weighted_error(&px);
+        let e_generic = generic.weighted_error(&px);
+        assert!(
+            e_tuned <= e_generic,
+            "tuned {e_tuned:.3e} !<= generic {e_generic:.3e}"
+        );
+    }
+
+    #[test]
+    fn softmax_exp_unit_is_accurate_on_negative_logits() {
+        // Softmax inputs after max-subtraction are <= 0; the unit covers
+        // [-8, 0).
+        let (px, _) = DistSet::synthetic_lenet_like().aggregate();
+        let unit = optimize(Nonlinearity::SoftmaxExp, &px, 8);
+        for c in (0..256).step_by(17) {
+            let got = unit.eval(c as u8);
+            let want = Nonlinearity::SoftmaxExp.exact(c as u8);
+            assert!((got - want).abs() < 0.05, "code {c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn eval_is_monotone_for_sigmoid_segments() {
+        // Within the fitted unit, sigmoid approximation should be
+        // (weakly) monotone over codes — slopes are nonnegative.
+        let px = gaussian_dist(128.0, 50.0);
+        let unit = optimize(Nonlinearity::Sigmoid, &px, 8);
+        for s in &unit.segments {
+            assert!(s.slope_q >= 0, "negative sigmoid slope: {s:?}");
+        }
+        let mut prev = unit.eval(0);
+        for c in 1..=255u8 {
+            let v = unit.eval(c);
+            assert!(v >= prev - 1e-3, "non-monotone at {c}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn rom_cost_scales_with_segments() {
+        let px = Dist256::uniform();
+        let u4 = optimize(Nonlinearity::Sigmoid, &px, 4);
+        let u16 = optimize(Nonlinearity::Sigmoid, &px, 16);
+        assert!(u16.rom_bits() > u4.rom_bits());
+        assert_eq!(u4.rom_bits(), u4.segments.len() * 64);
+    }
+}

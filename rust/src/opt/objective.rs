@@ -1,0 +1,283 @@
+//! The optimization objective (Eq. 3–6).
+//!
+//! `E(x,y|θ) = Σ_ij (x_i y_j − f(x_i, y_j | θ))² p(x_i) p(y_j)` with
+//! `f = sum_uncompressed + Σ_k θ_k L_k 2^{c_k}` (Eq. 4), plus the
+//! constraint term `Cons(θ) = λ1 Σ θ_k + λ2 Σ_l 10^{n_l}` (Eq. 5).
+//!
+//! The evaluator precomputes, once per (space, distribution):
+//!   * `w[i]`   — the pair weight `p(x) p(y)` over all 65 536 pairs,
+//!   * `d0[i]`  — `x*y − sum_uncompressed` (the residual a genome must
+//!                approximate),
+//!   * `contrib[k][i]` — candidate k's value `L_k(x,y) << c_k` packed as a
+//!                bitplane (u64 per 64 pairs),
+//! so a genome evaluation is a sparse accumulate + weighted squared sum.
+//! This is the GA hot path; see EXPERIMENTS.md §Perf.
+
+use crate::mult::pp::column_height;
+
+use super::distributions::Dist256;
+use super::genome::{Genome, GenomeSpace};
+
+/// Precomputed objective evaluator.
+pub struct Objective {
+    pub space: GenomeSpace,
+    /// λ1: per-term penalty (Eq. 5).
+    pub lambda1: f64,
+    /// λ2: per-column 10^n_l penalty (Eq. 5).
+    pub lambda2: f64,
+    /// Pair weights p(x)p(y), dense over x*256+y.
+    weights: Vec<f64>,
+    /// Residual x*y - sum_uncompressed per pair.
+    d0: Vec<i32>,
+    /// Candidate bitplanes: contrib[k][b] packs pairs b*64..b*64+63.
+    /// Dense planes (>50% set — e.g. OR terms) are stored *complemented*
+    /// with `inverted[k] = true`: the evaluator then adds `amount` to a
+    /// per-genome base and subtracts on the (sparse) complement bits,
+    /// halving the popcount-loop work (§Perf iteration 1).
+    planes: Vec<Vec<u64>>,
+    inverted: Vec<bool>,
+    /// Candidate column weights (1 << col).
+    amounts: Vec<i32>,
+}
+
+impl Objective {
+    /// Build the evaluator for a genome space under operand distributions.
+    ///
+    /// Pairs with exactly zero probability mass contribute nothing to
+    /// Eq. 3, so the evaluator is built over the *compacted* nonzero-pair
+    /// list (real extracted distributions leave many codes unobserved —
+    /// §Perf iteration 2). Bitplanes are re-indexed to the compact list.
+    pub fn new(space: GenomeSpace, px: &Dist256, py: &Dist256, lambda1: f64, lambda2: f64) -> Self {
+        let bits = space.bits;
+        let rows = space.compressed_rows;
+        let n = 1usize << bits;
+        // Compact (x, y) enumeration over nonzero-weight pairs.
+        let mut pairs: Vec<(u16, u16)> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        let mut d0: Vec<i32> = Vec::new();
+        for x in 0..n {
+            if px.p[x] == 0.0 {
+                continue;
+            }
+            for y in 0..n {
+                let w = px.p[x] * py.p[y];
+                if w == 0.0 {
+                    continue;
+                }
+                pairs.push((x as u16, y as u16));
+                weights.push(w);
+                // Uncompressed rows: y bits rows..bits contribute exactly.
+                let mut unc: i64 = 0;
+                for r in rows..bits {
+                    if (y >> r) & 1 == 1 {
+                        unc += (x as i64) << r;
+                    }
+                }
+                d0.push((x as i64 * y as i64 - unc) as i32);
+            }
+        }
+        let total = pairs.len();
+        let blocks = total.div_ceil(64).max(1);
+        let mut planes = Vec::with_capacity(space.candidates.len());
+        let mut inverted = Vec::with_capacity(space.candidates.len());
+        let mut amounts = Vec::with_capacity(space.candidates.len());
+        for cand in &space.candidates {
+            let mut plane = vec![0u64; blocks];
+            let h = column_height(bits, 0..rows, cand.col);
+            let mut ones = 0usize;
+            for (i, &(x, y)) in pairs.iter().enumerate() {
+                let set = column_set_bits(bits, rows, cand.col, x as u32, y as u32);
+                if cand.op.eval(set, h) {
+                    plane[i / 64] |= 1u64 << (i % 64);
+                    ones += 1;
+                }
+            }
+            // Store dense planes complemented (see field docs).
+            let inv = ones * 2 > total;
+            if inv {
+                let full_blocks = total / 64;
+                for w in plane.iter_mut().take(full_blocks) {
+                    *w = !*w;
+                }
+                if total % 64 != 0 {
+                    plane[full_blocks] = !plane[full_blocks] & ((1u64 << (total % 64)) - 1);
+                }
+            }
+            inverted.push(inv);
+            planes.push(plane);
+            amounts.push(1i32 << cand.col);
+        }
+        Self {
+            space,
+            lambda1,
+            lambda2,
+            weights,
+            d0,
+            planes,
+            inverted,
+            amounts,
+        }
+    }
+
+    /// Eq. 3: the distribution-weighted expected squared error of a genome.
+    pub fn error(&self, genome: &Genome) -> f64 {
+        let total = self.d0.len();
+        // Base offset: inverted (dense) candidates contribute `amount`
+        // everywhere; their stored (sparse) complement bits subtract it.
+        let mut base = 0i32;
+        // Accumulate the selected-term sum per pair.
+        let mut f = vec![0i32; total];
+        for (k, gene) in genome.genes.iter().enumerate() {
+            if !*gene {
+                continue;
+            }
+            let amount = if self.inverted[k] {
+                base += self.amounts[k];
+                -self.amounts[k]
+            } else {
+                self.amounts[k]
+            };
+            for (b, &word) in self.planes[k].iter().enumerate() {
+                let mut m = word;
+                while m != 0 {
+                    let t = m.trailing_zeros() as usize;
+                    f[b * 64 + t] += amount;
+                    m &= m - 1;
+                }
+            }
+        }
+        let mut err = 0.0f64;
+        for i in 0..total {
+            let d = (self.d0[i] - base - f[i]) as f64;
+            err += d * d * self.weights[i];
+        }
+        err
+    }
+
+    /// Eq. 5: the constraint term.
+    pub fn cons(&self, genome: &Genome) -> f64 {
+        let counts = genome.per_column_counts(&self.space);
+        let term_count = genome.count() as f64;
+        let stack: f64 = counts.iter().map(|&n| 10f64.powi(n as i32)).sum();
+        self.lambda1 * term_count + self.lambda2 * stack
+    }
+
+    /// Eq. 6: the full objective.
+    pub fn fitness(&self, genome: &Genome) -> f64 {
+        self.error(genome) + self.cons(genome)
+    }
+
+    /// The error of the *exact* multiplier restricted to this genome space
+    /// (keeping XOR+AND+... cannot be exact in general; this returns the
+    /// residual magnitude scale used for diagnostics): E of the all-zero
+    /// genome, i.e. dropping the whole compressed region.
+    pub fn error_dropping_all(&self) -> f64 {
+        let mut err = 0.0;
+        for i in 0..self.d0.len() {
+            let d = self.d0[i] as f64;
+            err += d * d * self.weights[i];
+        }
+        err
+    }
+}
+
+/// Number of set PP bits in compressed column `col` for operands (x, y).
+#[inline]
+fn column_set_bits(bits: usize, rows: usize, col: usize, x: u32, y: u32) -> usize {
+    let lo = col.saturating_sub(bits - 1);
+    let hi = rows.min(col + 1);
+    let mut set = 0;
+    for i in lo..hi {
+        let j = col - i;
+        if (x >> j) & 1 == 1 && (y >> i) & 1 == 1 {
+            set += 1;
+        }
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::distributions::DistSet;
+
+    fn mk_objective(l1: f64, l2: f64) -> Objective {
+        let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+        Objective::new(GenomeSpace::new(8, 4), &px, &py, l1, l2)
+    }
+
+    #[test]
+    fn error_matches_design_eval() {
+        // The bitplane fast path must agree with HeamDesign::eval + Lut
+        // weighting exactly.
+        let obj = mk_objective(0.0, 0.0);
+        let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+        let mut rng = crate::util::prng::Rng::new(5);
+        for _ in 0..5 {
+            let g = Genome::random(&obj.space, &mut rng, 0.4);
+            let d = g.to_design(&obj.space);
+            let mut slow = 0.0;
+            for x in 0..256u32 {
+                for y in 0..256u32 {
+                    let delta = (x as i64 * y as i64 - d.eval(x, y)) as f64;
+                    slow += delta * delta * px.p[x as usize] * py.p[y as usize];
+                }
+            }
+            let fast = obj.error(&g);
+            assert!(
+                (fast - slow).abs() <= 1e-6 * slow.max(1.0),
+                "fast {fast} vs slow {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn cons_counts_terms_and_stacking() {
+        let obj = mk_objective(2.0, 1.0);
+        let g = Genome::seeded(&obj.space);
+        // seeded: 2 passes + 9 columns x 2 ops = 20 terms; columns: 2 cols
+        // with 1 term (10^1) + 9 cols with 2 (10^2) = 2*10 + 9*100 = 920.
+        assert_eq!(g.count(), 20);
+        let c = obj.cons(&g);
+        assert!((c - (2.0 * 20.0 + 920.0)).abs() < 1e-9, "cons {c}");
+    }
+
+    #[test]
+    fn zero_genome_error_is_residual() {
+        let obj = mk_objective(0.0, 0.0);
+        let g = Genome::zeros(&obj.space);
+        assert_eq!(obj.error(&g), obj.error_dropping_all());
+        assert!(obj.error(&g) > 0.0);
+    }
+
+    #[test]
+    fn seeded_genome_beats_zero_under_uniform() {
+        // Under a uniform distribution the compressed region matters and
+        // the XOR+AND seed must beat dropping everything by a wide margin.
+        // (Under the concentrated LeNet-like distribution the gap nearly
+        // vanishes — the weight mass at 128 is carried by the uncompressed
+        // row 7 — which is exactly the application-specific effect the
+        // paper exploits.)
+        let u = Dist256::uniform();
+        let obj = Objective::new(GenomeSpace::new(8, 4), &u, &u, 0.0, 0.0);
+        let seeded = Genome::seeded(&obj.space);
+        let zero = Genome::zeros(&obj.space);
+        let (es, ez) = (obj.error(&seeded), obj.error(&zero));
+        assert!(es < ez / 3.0, "seeded {es} vs zero {ez}");
+    }
+
+    #[test]
+    fn uniform_vs_weighted_error_differ() {
+        let space = GenomeSpace::new(8, 4);
+        let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+        let u = Dist256::uniform();
+        let weighted = Objective::new(space.clone(), &px, &py, 0.0, 0.0);
+        let uniform = Objective::new(space, &u, &u, 0.0, 0.0);
+        let g = Genome::seeded(&weighted.space);
+        // Same genome, different measure.
+        assert!(weighted.error(&g) != uniform.error(&g));
+        // The concentrated distribution (mass near x=0 where everything is
+        // exact) must see a smaller weighted error.
+        assert!(weighted.error(&g) < uniform.error(&g));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute AOT-compiled XLA computations.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX model to **HLO text**
+//! (jax >= 0.5 serialized protos carry 64-bit instruction ids that the
+//! published xla crate's XLA 0.5.1 rejects; the text parser reassigns ids,
+//! so text is the interchange format — see /opt/xla-example/README.md).
+//! This module compiles the text once on a CPU PJRT client and executes it
+//! from the serving hot path. Python never runs at request time.
+
+pub mod model;
+
+pub use model::{Model, Runtime};

@@ -1,0 +1,136 @@
+//! The PJRT client wrapper and compiled-model handle.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU in this environment).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Model> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Model {
+            exe,
+            name: path.display().to_string(),
+        })
+    }
+}
+
+/// One compiled executable.
+pub struct Model {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// An input tensor for [`Model::execute`].
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+impl Model {
+    /// Execute with f32 inputs; returns the flattened f32 outputs of the
+    /// (single-element) result tuple, plus their dimensions.
+    ///
+    /// The AOT convention (see `python/compile/aot.py`): every exported
+    /// computation takes f32 tensors and returns a 1-tuple of one f32
+    /// tensor — quantization happens inside the graph, and LUT values fit
+    /// f32 exactly (|v| < 2^24).
+    pub fn execute(&self, inputs: &[Input]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(inp.data);
+                Ok(lit.reshape(inp.dims).context("reshaping input literal")?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let inner = out.to_tuple1().context("unwrapping result tuple")?;
+        let shape = inner.array_shape().context("result shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let values = inner.to_vec::<f32>().context("downloading result")?;
+        Ok((values, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests against a known-good HLO artifact. The reference
+    //! artifact from /opt/xla-example is used when the repo artifacts have
+    //! not been built yet; tests are skipped (not failed) if neither
+    //! exists so `cargo test` passes on a fresh checkout.
+
+    use super::*;
+
+    fn reference_hlo() -> Option<std::path::PathBuf> {
+        for p in [
+            "artifacts/test_matmul.hlo.txt",
+            "/tmp/fn_hlo.txt",
+        ] {
+            let path = std::path::PathBuf::from(p);
+            if path.exists() {
+                return Some(path);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn execute_reference_artifact() {
+        let Some(path) = reference_hlo() else {
+            eprintln!("skipping: no HLO artifact available (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let model = rt.load_hlo_text(&path).unwrap();
+        // The reference computation is fn(x, y) = (x @ y + 2,) over
+        // f32[2,2].
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let y = [1f32, 1.0, 1.0, 1.0];
+        let (out, dims) = model
+            .execute(&[
+                Input { data: &x, dims: &[2, 2] },
+                Input { data: &y, dims: &[2, 2] },
+            ])
+            .unwrap();
+        assert_eq!(dims, vec![2, 2]);
+        assert_eq!(out, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn missing_file_is_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/model.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! Tiny declarative CLI argument parser (clap is absent from the offline
+//! registry snapshot). Supports `--flag`, `--key value`, `--key=value`,
+//! positionals, and generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative command-line parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// New parser with a program name and a one-line description.
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Self {
+            program: program.to_string(),
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// Declare a `--key value` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Declare a required `--key value` option.
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{}\n\nUsage: {} [options]\n\nOptions:\n", self.about, self.program);
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("  --{} <value>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{left:<28} {}{default}\n", o.help));
+        }
+        s.push_str("  --help                     show this message\n");
+        s
+    }
+
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse(mut self, argv: &[String]) -> Result<Self> {
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.insert(o.name, d.clone());
+            }
+            if !o.takes_value {
+                self.flags.insert(o.name, false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .cloned();
+                match opt {
+                    Some(o) if o.takes_value => {
+                        let val = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                if i >= argv.len() {
+                                    bail!("option --{key} requires a value");
+                                }
+                                argv[i].clone()
+                            }
+                        };
+                        self.values.insert(o.name, val);
+                    }
+                    Some(o) => {
+                        if inline_val.is_some() {
+                            bail!("flag --{key} does not take a value");
+                        }
+                        self.flags.insert(o.name, true);
+                    }
+                    None => bail!("unknown option --{key}\n\n{}", self.help_text()),
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.takes_value && !self.values.contains_key(o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, self.help_text());
+            }
+        }
+        Ok(self)
+    }
+
+    /// String value of an option.
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    /// Parse an option as any FromStr type.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .parse::<T>()
+            .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}"))
+    }
+
+    /// Boolean flag state.
+    pub fn is_set(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    /// Positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t", "test")
+            .opt("alpha", "1.5", "alpha value")
+            .opt("name", "x", "a name")
+            .flag("verbose", "verbosity")
+            .parse(&argv(&["--alpha", "2.5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_as::<f64>("alpha").unwrap(), 2.5);
+        assert_eq!(a.get("name"), "x");
+        assert!(a.is_set("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t", "test")
+            .opt("k", "0", "k")
+            .parse(&argv(&["--k=7"]))
+            .unwrap();
+        assert_eq!(a.get_as::<i64>("k").unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "test").parse(&argv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let r = Args::new("t", "test")
+            .opt_required("must", "required one")
+            .parse(&argv(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::new("t", "test")
+            .opt("k", "0", "k")
+            .parse(&argv(&["foo", "--k", "2", "bar"]))
+            .unwrap();
+        assert_eq!(a.positionals(), &["foo".to_string(), "bar".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::new("t", "test").opt("k", "0", "k").parse(&argv(&["--k"]));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! Offline-crate substitutes: the registry snapshot in this build
+//! environment only contains the `xla` crate's dependency closure, so the
+//! usual ecosystem crates (rand, serde, clap, proptest, criterion) are
+//! reimplemented here at the scale this project needs.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod tensor_io;
+
+/// Format a float with a fixed number of significant-ish decimals for the
+/// markdown tables (`1234.5678 -> "1234.57"`).
+pub fn fmt_f64(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Simple stderr logger with a global verbosity toggle.
+pub mod logging {
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    static LEVEL: AtomicU8 = AtomicU8::new(1); // 0 = quiet, 1 = info, 2 = debug
+
+    /// Set the global log level (0 = quiet, 1 = info, 2 = debug).
+    pub fn set_level(level: u8) {
+        LEVEL.store(level, Ordering::Relaxed);
+    }
+
+    /// Current log level.
+    pub fn level() -> u8 {
+        LEVEL.load(Ordering::Relaxed)
+    }
+
+    /// Log at info level.
+    #[macro_export]
+    macro_rules! info {
+        ($($arg:tt)*) => {
+            if $crate::util::logging::level() >= 1 {
+                eprintln!("[heam] {}", format!($($arg)*));
+            }
+        };
+    }
+
+    /// Log at debug level.
+    #[macro_export]
+    macro_rules! debug {
+        ($($arg:tt)*) => {
+            if $crate::util::logging::level() >= 2 {
+                eprintln!("[heam:debug] {}", format!($($arg)*));
+            }
+        };
+    }
+}

@@ -1,0 +1,223 @@
+//! Mini property-based testing framework (proptest is absent from the
+//! offline registry snapshot).
+//!
+//! A property is a closure over a [`Gen`] source; [`check`] runs it for a
+//! configurable number of seeded cases and, on failure, re-runs with a
+//! binary-search-style shrink over the generator's size budget to report a
+//! small counterexample seed.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries are built outside the workspace and miss
+//! // the libxla_extension rpath; the same code runs in unit tests.)
+//! use heam::util::propcheck::{check, Config};
+//!
+//! check(Config::default().cases(200), "add commutes", |g| {
+//!     let a = g.i64_range(-1000, 1000);
+//!     let b = g.i64_range(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Value source handed to properties. Wraps the PRNG with a size budget so
+/// shrinking can reduce magnitudes.
+pub struct Gen {
+    rng: Rng,
+    /// Size budget in [0, 1]; generators scale their ranges by it.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Construct a generator directly (useful for reproducing a failure
+    /// from the seed/size printed by [`check`]).
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Integer in `[lo, hi]`, range scaled toward `lo` by the size budget.
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = ((hi - lo) as f64 * self.size).round() as i64;
+        self.rng.range_inclusive(lo, lo + span.max(0))
+    }
+
+    /// usize in `[lo, hi]`.
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_range(lo as i64, hi as i64) as usize
+    }
+
+    /// u8 across the full (size-scaled) range.
+    pub fn u8(&mut self) -> u8 {
+        self.i64_range(0, 255) as u8
+    }
+
+    /// bool.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo) * self.size.max(0.01)
+    }
+
+    /// Vec of u8 with length in `[0, max_len]`.
+    pub fn u8_vec(&mut self, max_len: usize) -> Vec<u8> {
+        let len = self.usize_range(0, max_len);
+        (0..len).map(|_| self.u8()).collect()
+    }
+
+    /// Vec of f64 in [lo, hi) with length in `[min_len, max_len]`.
+    pub fn f64_vec(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = self.usize_range(min_len, max_len);
+        (0..len).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Access the underlying RNG for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property-check configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0x41435348 }
+    }
+}
+
+impl Config {
+    /// Builder: number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Builder: base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` for `config.cases` seeded cases. Panics (failing the test)
+/// with the smallest failing size budget found if any case fails.
+pub fn check<F>(config: Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    for case in 0..config.cases {
+        let seed = config.seed.wrapping_add(case as u64);
+        // Grow sizes over the run so early cases are small already.
+        let size = ((case + 1) as f64 / config.cases as f64).min(1.0);
+        if run_one(&prop, seed, size).is_err() {
+            // Shrink: find the smallest size budget that still fails
+            // for this seed.
+            let mut lo = 0.0f64;
+            let mut hi = size;
+            for _ in 0..16 {
+                let mid = (lo + hi) / 2.0;
+                if run_one(&prop, seed, mid).is_err() {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            // Re-run the minimal failure uncaught so the real panic (with
+            // its message and location) propagates to the test harness.
+            eprintln!(
+                "[propcheck] property '{name}' failed: seed={seed} size={hi:.4} \
+                 (re-run: Gen::new({seed}, {hi:.4}))"
+            );
+            let mut g = Gen::new(seed, hi);
+            prop(&mut g);
+            unreachable!("property failed under catch_unwind but passed uncaught");
+        }
+    }
+}
+
+fn run_one<F>(prop: &F, seed: u64, size: f64) -> Result<(), ()>
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, size);
+        prop(&mut g);
+    });
+    match result {
+        Ok(()) => Ok(()),
+        Err(_) => Err(()),
+    }
+}
+
+/// Like [`check`] but silences panic output during exploration (panics
+/// inside failing cases would otherwise spam stderr before the shrink).
+pub fn check_quiet<F>(config: Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        check(config, name, &prop);
+    }));
+    std::panic::set_hook(prev);
+    if let Err(e) = outcome {
+        std::panic::resume_unwind(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(64), "reverse twice", |g| {
+            let xs = g.u8_vec(32);
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_fails() {
+        check_quiet(Config::default().cases(64), "always false for big", |g| {
+            let v = g.i64_range(0, 1000);
+            assert!(v < 500, "v={v}");
+        });
+    }
+
+    #[test]
+    fn sizes_scale_ranges() {
+        // With a tiny size budget the generated values must stay near lo.
+        let mut g = Gen::new(99, 0.01);
+        for _ in 0..100 {
+            let v = g.i64_range(0, 1_000_000);
+            assert!(v <= 10_000, "v={v}");
+        }
+        // With full budget the range is fully reachable.
+        let mut g = Gen::new(99, 1.0);
+        let max = (0..1000).map(|_| g.i64_range(0, 1_000_000)).max().unwrap();
+        assert!(max > 500_000);
+    }
+}

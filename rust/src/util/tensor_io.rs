@@ -1,0 +1,338 @@
+//! Tensor-bundle binary IO shared with the python build path.
+//!
+//! `python/compile/tensor_io.py` writes the same format ("HTB1"): a magic,
+//! a tensor count, then per tensor: name, dtype tag, shape, little-endian
+//! raw data. This is the interchange for trained weights, quantization
+//! parameters, datasets, and LUTs — kept deliberately trivial so both
+//! sides stay bit-exact.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"HTB1";
+
+/// Element type of a stored tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+    I64,
+}
+
+impl DType {
+    fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U8 => 2,
+            DType::I64 => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            3 => DType::I64,
+            _ => bail!("unknown dtype tag {t}"),
+        })
+    }
+
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+}
+
+/// A named tensor: dtype, shape, raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build from f32 values.
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::F32, shape, data }
+    }
+
+    /// Build from i32 values.
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::I32, shape, data }
+    }
+
+    /// Build from u8 values.
+    pub fn from_u8(shape: Vec<usize>, values: &[u8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Self { dtype: DType::U8, shape, data: values.to_vec() }
+    }
+
+    /// Build from i64 values.
+    pub fn from_i64(shape: Vec<usize>, values: &[i64]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::I64, shape, data }
+    }
+
+    /// Decode as f32 slice.
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, expected F32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decode as i32 slice.
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, expected I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Decode as u8 slice (borrow).
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != DType::U8 {
+            bail!("tensor is {:?}, expected U8", self.dtype);
+        }
+        Ok(&self.data)
+    }
+
+    /// Decode as i64 slice.
+    pub fn as_i64(&self) -> Result<Vec<i64>> {
+        if self.dtype != DType::I64 {
+            bail!("tensor is {:?}, expected I64", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// An ordered map of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Bundle {
+    /// Empty bundle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a tensor.
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    /// Get a tensor or error with its name.
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("bundle missing tensor '{name}'"))
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(t.dtype.tag());
+            out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for d in &t.shape {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("bad tensor-bundle magic {:?}", &magic[..4.min(magic.len())]);
+        }
+        let count = r.u32()? as usize;
+        let mut bundle = Bundle::new();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("tensor name is not UTF-8")?;
+            let dtype = DType::from_tag(r.u8()?)?;
+            let ndim = r.u32()? as usize;
+            if ndim > 16 {
+                bail!("implausible ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let data_len = r.u64()? as usize;
+            let expected = shape.iter().product::<usize>() * dtype.size();
+            if data_len != expected {
+                bail!(
+                    "tensor '{name}': data length {data_len} != shape {shape:?} x {:?}",
+                    dtype
+                );
+            }
+            let data = r.take(data_len)?.to_vec();
+            bundle.insert(&name, Tensor { dtype, shape, data });
+        }
+        Ok(bundle)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated tensor bundle (need {n} bytes at {})", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut b = Bundle::new();
+        b.insert("w", Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]));
+        b.insert("q", Tensor::from_u8(vec![4], &[0, 128, 255, 7]));
+        b.insert("acc", Tensor::from_i32(vec![2], &[-5, 100000]));
+        b.insert("big", Tensor::from_i64(vec![1], &[i64::MIN]));
+        let b2 = Bundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(b2.get("w").unwrap().as_f32().unwrap()[5], 6.5);
+        assert_eq!(b2.get("q").unwrap().as_u8().unwrap(), &[0, 128, 255, 7]);
+        assert_eq!(b2.get("acc").unwrap().as_i32().unwrap(), vec![-5, 100000]);
+        assert_eq!(b2.get("big").unwrap().as_i64().unwrap(), vec![i64::MIN]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("heam_tensor_io_test");
+        let path = dir.join("t.htb");
+        let mut b = Bundle::new();
+        b.insert("x", Tensor::from_f32(vec![3], &[1.0, -2.0, 3.0]));
+        b.save(&path).unwrap();
+        let b2 = Bundle::load(&path).unwrap();
+        assert_eq!(b2.get("x").unwrap().as_f32().unwrap(), vec![1.0, -2.0, 3.0]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Bundle::from_bytes(b"nope").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut b = Bundle::new();
+        b.insert("x", Tensor::from_u8(vec![2], &[1, 2]));
+        let mut bytes = b.to_bytes();
+        // Corrupt the data length field: it sits 8 bytes before the payload.
+        let n = bytes.len();
+        bytes[n - 10] = 99;
+        assert!(Bundle::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_on_read() {
+        let t = Tensor::from_u8(vec![1], &[1]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Artifact-dependent end-to-end tests. These exercise the full
+//! python-trained / rust-served pipeline and SKIP (pass with a note)
+//! when `make artifacts` has not been run, so `cargo test` stays green on
+//! a fresh checkout.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use heam::coordinator::server::{ServeConfig, Server};
+use heam::mult::Lut;
+use heam::nn::{lenet, multiplier::Multiplier};
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/weights/digits.htb").exists()
+        && Path::new("artifacts/data/digits.htb").exists()
+}
+
+fn aot_ready() -> bool {
+    Path::new("artifacts/lenet_digits.hlo.txt").exists()
+}
+
+macro_rules! require {
+    ($cond:expr) => {
+        if !$cond {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// The trained quantized model must be highly accurate under the exact
+/// multiplier (the python/rust integer-semantics parity check).
+#[test]
+fn trained_digits_model_accurate_in_rust_engine() {
+    require!(artifacts_ready());
+    let ds = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits").unwrap();
+    let graph = lenet::load("artifacts/weights/digits.htb").unwrap();
+    let acc = lenet::accuracy(
+        &graph,
+        &ds.test_x,
+        &ds.test_y,
+        (ds.channels, ds.height, ds.width),
+        &Multiplier::Exact,
+        200,
+        None,
+    )
+    .unwrap();
+    assert!(acc > 0.95, "exact-multiplier accuracy {acc}");
+}
+
+/// The optimized HEAM LUT must not cost accuracy vs exact (within 1%).
+#[test]
+fn heam_matches_exact_within_one_percent() {
+    require!(artifacts_ready() && Path::new("artifacts/heam/heam_lut.htb").exists());
+    let ds = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits").unwrap();
+    let graph = lenet::load("artifacts/weights/digits.htb").unwrap();
+    let shape = (ds.channels, ds.height, ds.width);
+    let exact = lenet::accuracy(&graph, &ds.test_x, &ds.test_y, shape, &Multiplier::Exact, 300, None).unwrap();
+    let heam_lut = Lut::load("artifacts/heam/heam_lut.htb").unwrap();
+    let heam = lenet::accuracy(
+        &graph,
+        &ds.test_x,
+        &ds.test_y,
+        shape,
+        &Multiplier::Lut(Arc::new(heam_lut)),
+        300,
+        None,
+    )
+    .unwrap();
+    assert!(
+        heam >= exact - 0.01,
+        "HEAM {heam} vs exact {exact} — must be within 1%"
+    );
+}
+
+/// PJRT serving path: predictions agree with the native engine (the same
+/// integer semantics flow through the AOT graph).
+#[test]
+fn pjrt_and_native_predictions_agree() {
+    require!(artifacts_ready() && aot_ready());
+    let ds = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits").unwrap();
+    let lut = Arc::new(Lut::exact());
+    let server = Server::start(
+        "artifacts/lenet_digits.hlo.txt",
+        lut.clone(),
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 500,
+            workers: 1,
+        },
+    )
+    .unwrap();
+    let graph = lenet::load("artifacts/weights/digits.htb").unwrap();
+    let sz = ds.channels * ds.height * ds.width;
+    let mul = Multiplier::Exact;
+    let mut agree = 0;
+    let n = 32;
+    for i in 0..n {
+        let img = &ds.test_x[i * sz..(i + 1) * sz];
+        let pjrt = server.classify(img.to_vec()).unwrap();
+        let (native, _) =
+            lenet::classify(&graph, img, (ds.channels, ds.height, ds.width), &mul, None).unwrap();
+        agree += (pjrt == native) as usize;
+    }
+    // f32 requant rounding can differ on exact ties; allow one.
+    assert!(agree >= n - 1, "parity {agree}/{n}");
+    server.shutdown();
+}
+
+/// The distribution export has the Fig. 1 shape: inputs massed at low
+/// codes, weights near the zero point.
+#[test]
+fn exported_distributions_have_fig1_shape() {
+    require!(Path::new("artifacts/dist/digits.json").exists());
+    let ds = heam::opt::DistSet::load("artifacts/dist/digits.json").unwrap();
+    let (px, py) = ds.aggregate();
+    // Input mass concentrated at small codes.
+    let low_mass: f64 = px.p[..32].iter().sum();
+    assert!(low_mass > 0.5, "low-code input mass {low_mass}");
+    // Weight mode near a central zero point.
+    let mode = py.mode() as i32;
+    assert!((mode - 128).abs() < 48, "weight mode {mode}");
+}
+
+/// Serving with a broken LUT degrades accuracy — proves the LUT input is
+/// live (not constant-folded into the artifact).
+#[test]
+fn lut_input_is_live_in_aot_artifact() {
+    require!(artifacts_ready() && aot_ready());
+    let ds = heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits").unwrap();
+    let sz = ds.channels * ds.height * ds.width;
+    let zero_lut = Arc::new(Lut::from_fn("zero", |_, _| 0));
+    let server = Server::start(
+        "artifacts/lenet_digits.hlo.txt",
+        zero_lut,
+        ServeConfig::default(),
+    )
+    .unwrap();
+    // With all products zeroed the logits collapse; predictions become
+    // degenerate (constant class across very different images).
+    let preds: Vec<usize> = (0..12)
+        .map(|i| server.classify(ds.test_x[i * sz..(i + 1) * sz].to_vec()).unwrap())
+        .collect();
+    let all_same = preds.windows(2).all(|w| w[0] == w[1]);
+    assert!(all_same, "zero LUT should collapse predictions: {preds:?}");
+    server.shutdown();
+}

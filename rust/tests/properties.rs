@@ -1,0 +1,228 @@
+//! Property-based tests (propcheck) over the core invariants:
+//! genome/netlist equivalence, simulator consistency, JSON round-trips,
+//! quantization semantics, cost-model monotonicity, and LUT algebra.
+
+use heam::logic::{NetBuilder, Simulator};
+use heam::mult::heam::HeamDesign;
+use heam::mult::{pack_xy, Lut};
+use heam::nn::quant::QuantParams;
+use heam::opt::genome::{Genome, GenomeSpace};
+use heam::util::json::{self, Value};
+use heam::util::propcheck::{check, Config};
+
+/// Any genome's materialized netlist computes exactly its behavioral
+/// evaluation (sampled operand pairs; the committed design is checked
+/// exhaustively in unit tests).
+#[test]
+fn genome_netlist_equals_behavioral() {
+    let space = GenomeSpace::new(8, 4);
+    check(Config::default().cases(12).seed(1), "genome equivalence", |g| {
+        let genome = Genome::random(&space, g.rng(), 0.5);
+        let design = genome.to_design(&space);
+        let net = design.build_netlist();
+        let mut sim = Simulator::new(&net);
+        let words: Vec<u64> = (0..64)
+            .map(|_| {
+                let x = g.rng().below(256) as u64;
+                let y = g.rng().below(256) as u64;
+                pack_xy(x, y, 8)
+            })
+            .collect();
+        let outs = sim.eval_words(&words);
+        for (&w, &o) in words.iter().zip(&outs) {
+            let (x, y) = ((w & 0xFF) as u32, ((w >> 8) & 0xFF) as u32);
+            assert_eq!(o as i64, design.eval(x, y), "x={x} y={y}");
+        }
+    });
+}
+
+/// eval_words on a batch equals eval_word one at a time for arbitrary
+/// random netlists (built from random gate soups).
+#[test]
+fn simulator_batch_equals_single() {
+    check(Config::default().cases(24).seed(2), "sim batch=single", |g| {
+        let n_in = g.usize_range(2, 10);
+        let mut b = NetBuilder::new(n_in);
+        let mut sigs: Vec<_> = (0..n_in).map(|i| b.input(i)).collect();
+        for _ in 0..g.usize_range(1, 40) {
+            let x = *g.choose(&sigs);
+            let y = *g.choose(&sigs);
+            let s = match g.usize_range(0, 3) {
+                0 => b.and(x, y),
+                1 => b.or(x, y),
+                2 => b.xor(x, y),
+                _ => b.not(x),
+            };
+            sigs.push(s);
+        }
+        let outs: Vec<_> = (0..g.usize_range(1, 4)).map(|_| *g.choose(&sigs)).collect();
+        b.output_vec(&outs);
+        let net = b.finish("soup");
+        let words: Vec<u64> = (0..g.usize_range(1, 100))
+            .map(|_| g.rng().next_u64() & ((1 << n_in) - 1))
+            .collect();
+        let mut sim = Simulator::new(&net);
+        let batch = sim.eval_words(&words);
+        for (&w, &o) in words.iter().zip(&batch) {
+            assert_eq!(o, net.eval_word(w));
+        }
+    });
+}
+
+/// JSON round-trip: serialize(parse(serialize(v))) is stable for random
+/// value trees.
+#[test]
+fn json_roundtrip_random_trees() {
+    fn random_value(g: &mut heam::util::propcheck::Gen, depth: usize) -> Value {
+        match if depth == 0 { g.usize_range(0, 3) } else { g.usize_range(0, 5) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Int(g.i64_range(-1_000_000, 1_000_000)),
+            3 => {
+                let s: String = (0..g.usize_range(0, 8))
+                    .map(|_| *g.choose(&['a', 'ß', '"', '\\', '\n', '7', '✓']))
+                    .collect();
+                Value::Str(s)
+            }
+            4 => Value::Arr(
+                (0..g.usize_range(0, 4))
+                    .map(|_| random_value(g, depth - 1))
+                    .collect(),
+            ),
+            _ => Value::Obj(
+                (0..g.usize_range(0, 4))
+                    .map(|i| (format!("k{i}"), random_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(Config::default().cases(64).seed(3), "json roundtrip", |g| {
+        let v = random_value(g, 3);
+        let s1 = v.to_json();
+        let parsed = json::parse(&s1).expect("parse own output");
+        assert_eq!(parsed, v);
+        assert_eq!(parsed.to_json(), s1);
+    });
+}
+
+/// Quantize/dequantize round-trip error is bounded by half a step, and
+/// codes saturate cleanly outside the calibrated range.
+#[test]
+fn quant_roundtrip_bounded() {
+    check(Config::default().cases(128).seed(4), "quant roundtrip", |g| {
+        let lo = g.f64_range(-8.0, -0.01) as f32;
+        let hi = g.f64_range(0.01, 8.0) as f32;
+        let q = QuantParams::calibrate(lo, hi);
+        let v = (g.f64_range(0.0, 1.0) as f32) * (hi - lo) + lo;
+        let back = q.dequantize(q.quantize(v));
+        assert!(
+            (back - v).abs() <= q.scale * 0.51,
+            "v={v} back={back} scale={}",
+            q.scale
+        );
+        assert_eq!(q.quantize(hi + 100.0), 255);
+        assert_eq!(q.quantize(lo - 100.0), 0);
+    });
+}
+
+/// Adding terms to a design never increases the all-dropped residual's
+/// *cost-model area ordering*: more terms means at least as much area.
+#[test]
+fn area_monotone_in_terms() {
+    let space = GenomeSpace::new(8, 4);
+    check(Config::default().cases(8).seed(5), "area monotone", |g| {
+        let mut small = Genome::random(&space, g.rng(), 0.25);
+        let mut big = small.clone();
+        // big = small with extra genes switched on.
+        for gene in big.genes.iter_mut() {
+            if !*gene && g.bool() {
+                *gene = true;
+            }
+        }
+        // Ensure strict superset; if identical, flip one off in small.
+        if big == small {
+            if let Some(first_on) = small.genes.iter().position(|&x| x) {
+                small.genes[first_on] = false;
+            } else {
+                return; // empty genome; trivially fine
+            }
+        }
+        let a_small = heam::cost::asic::analyze_default(&small.to_design(&space).build_netlist());
+        let a_big = heam::cost::asic::analyze_default(&big.to_design(&space).build_netlist());
+        assert!(
+            a_big.area_um2 >= a_small.area_um2 - 1e-9,
+            "superset design must not shrink: {} vs {}",
+            a_big.area_um2,
+            a_small.area_um2
+        );
+    });
+}
+
+/// LUT algebra: weighted error is linear in the distribution mixture —
+/// E[mix(p, q)] == mix(E[p], E[q]) for the same LUT.
+#[test]
+fn weighted_error_linear_in_distribution() {
+    use heam::opt::distributions::Dist256;
+    let lut = Lut::from_fn("t", |x, y| (x as i64 * y as i64) - (x as i64));
+    check(Config::default().cases(32).seed(6), "error linearity", |g| {
+        let mk = |g: &mut heam::util::propcheck::Gen| {
+            let mut c = [0.0f64; 256];
+            for v in c.iter_mut() {
+                *v = g.f64_range(0.0, 1.0);
+            }
+            c[0] += 1e-6;
+            Dist256::from_counts(&c).unwrap()
+        };
+        let pa = mk(g);
+        let pb = mk(g);
+        let py = mk(g);
+        let t = g.f64_range(0.0, 1.0);
+        let mut mixed = Dist256 { p: [0.0; 256] };
+        for i in 0..256 {
+            mixed.p[i] = t * pa.p[i] + (1.0 - t) * pb.p[i];
+        }
+        let lhs = lut.avg_sq_error_weighted(&mixed.p, &py.p);
+        let rhs = t * lut.avg_sq_error_weighted(&pa.p, &py.p)
+            + (1.0 - t) * lut.avg_sq_error_weighted(&pb.p, &py.p);
+        assert!(
+            (lhs - rhs).abs() <= 1e-6 * rhs.abs().max(1.0),
+            "lhs {lhs} rhs {rhs}"
+        );
+    });
+}
+
+/// Tensor-bundle IO round-trips arbitrary contents.
+#[test]
+fn bundle_roundtrip_random() {
+    use heam::util::tensor_io::{Bundle, Tensor};
+    check(Config::default().cases(32).seed(7), "bundle roundtrip", |g| {
+        let mut b = Bundle::new();
+        let n_tensors = g.usize_range(0, 5);
+        for i in 0..n_tensors {
+            let len = g.usize_range(0, 64);
+            match g.usize_range(0, 2) {
+                0 => {
+                    let vals: Vec<f32> = (0..len).map(|_| g.f64_range(-10.0, 10.0) as f32).collect();
+                    b.insert(&format!("t{i}"), Tensor::from_f32(vec![len], &vals));
+                }
+                1 => {
+                    let vals: Vec<u8> = (0..len).map(|_| g.u8()).collect();
+                    b.insert(&format!("t{i}"), Tensor::from_u8(vec![len], &vals));
+                }
+                _ => {
+                    let vals: Vec<i32> = (0..len)
+                        .map(|_| g.i64_range(-1_000_000, 1_000_000) as i32)
+                        .collect();
+                    b.insert(&format!("t{i}"), Tensor::from_i32(vec![len], &vals));
+                }
+            }
+        }
+        let b2 = Bundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(b2.tensors.len(), n_tensors);
+        for (name, t) in &b.tensors {
+            let t2 = b2.get(name).unwrap();
+            assert_eq!(t.data, t2.data);
+            assert_eq!(t.shape, t2.shape);
+        }
+    });
+}

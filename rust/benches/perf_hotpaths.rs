@@ -5,29 +5,62 @@
 //!   (65 536 pairs).
 //! * GA objective evaluation — one genome fitness over the precomputed
 //!   bitplanes.
-//! * ApproxFlow conv hot loop — one LeNet conv2 layer forward.
-//! * LUT-dot primitive — the MAC inner loop.
+//! * ApproxFlow conv hot loop — one LeNet conv2 layer forward, naive
+//!   reference vs the im2col + LUT-GEMM core (asserted byte-identical
+//!   before timing).
+//! * LUT-dot primitive — the MAC inner loop, 256 KiB i32 table vs the
+//!   cache-compact 16-bit table.
+//! * Whole-graph forward — naive `Graph::run` vs the prepared plan, plus
+//!   batch fan-out over 1 and 4 workers.
 //! * Switching-activity power estimation — 4096-vector toggle counting.
+//!
+//! Every measurement is also appended to `BENCH_hotpaths.json`
+//! (op, ns_per_iter, img_per_s where meaningful) so future PRs have a
+//! perf trajectory to regress against.
 //!
 //! Run: `cargo bench --bench perf_hotpaths`
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use heam::bench::harness::bench_print;
+use heam::bench::harness::{bench_print, Measurement};
 use heam::logic::Simulator;
 use heam::mult::{Lut, MultKind};
+use heam::nn::gemm::{dot_raw, Kernel, PreparedConv, Scratch};
+use heam::nn::graph::Value as GraphValue;
 use heam::nn::multiplier::Multiplier;
 use heam::nn::ops::QConv2d;
 use heam::nn::quant::QuantParams;
 use heam::nn::tensor::Tensor;
 use heam::opt::{self, DistSet};
+use heam::util::json::Value;
 use heam::util::prng::Rng;
 
+/// One emitted record: op name, median ns/iter, optional images/second.
+struct Record {
+    op: String,
+    ns: f64,
+    img_per_s: Option<f64>,
+}
+
+/// Time a closure, print the line, and record it for the JSON trajectory.
+fn timed(records: &mut Vec<Record>, name: &str, f: &mut dyn FnMut()) -> Measurement {
+    let m = bench_print(name, f);
+    records.push(Record {
+        op: name.to_string(),
+        ns: m.ns(),
+        img_per_s: None,
+    });
+    m
+}
+
 fn main() {
+    let mut records: Vec<Record> = Vec::new();
+
     let wallace = MultKind::Wallace.build();
 
     // 1. Exhaustive LUT generation.
-    bench_print("lut_from_netlist (wallace 8x8, 65536 pairs)", || {
+    timed(&mut records, "lut_from_netlist (wallace 8x8, 65536 pairs)", &mut || {
         std::hint::black_box(Lut::from_netlist(&wallace));
     });
 
@@ -37,19 +70,20 @@ fn main() {
     let (px, py) = DistSet::synthetic_lenet_like().aggregate();
     let objective = opt::Objective::new(opt::genome::GenomeSpace::new(8, 4), &px, &py, 3000.0, 30.0);
     let genome = opt::Genome::seeded(&objective.space);
-    bench_print("ga_objective_fitness (synthetic dist, dense)", || {
+    timed(&mut records, "ga_objective_fitness (synthetic dist, dense)", &mut || {
         std::hint::black_box(objective.fitness(&genome));
     });
     if let Ok(real) = DistSet::load("artifacts/dist/digits.json") {
         let (px, py) = real.aggregate();
         let obj = opt::Objective::new(opt::genome::GenomeSpace::new(8, 4), &px, &py, 3000.0, 30.0);
         let genome = opt::Genome::seeded(&obj.space);
-        bench_print("ga_objective_fitness (extracted dist, compacted)", || {
+        timed(&mut records, "ga_objective_fitness (extracted dist, compacted)", &mut || {
             std::hint::black_box(obj.fitness(&genome));
         });
     }
 
-    // 3. Conv hot loop: LeNet conv2 geometry (6x12x12 -> 16 @ 5x5).
+    // 3. Conv hot loop: LeNet conv2 geometry (6x12x12 -> 16 @ 5x5),
+    //    naive reference vs the im2col + LUT-GEMM core.
     let mut rng = Rng::new(42);
     let conv = QConv2d {
         name: "conv2".into(),
@@ -62,38 +96,124 @@ fn main() {
         w_q: QuantParams { scale: 0.004, zero_point: 128 },
         out_q: QuantParams { scale: 0.02, zero_point: 0 },
         relu: true,
+        w_sums_cache: Default::default(),
     };
     let x = Tensor::new(
         vec![6, 12, 12],
         (0..6 * 144).map(|_| rng.below(256) as u8).collect(),
     );
-    let heam_mul = Multiplier::Lut(Arc::new(MultKind::Heam.lut()));
-    bench_print("qconv2d_forward (conv2 geometry, LUT mult)", || {
+    let heam_lut = Arc::new(MultKind::Heam.lut());
+    let heam_mul = Multiplier::Lut(heam_lut.clone());
+    let prepared_conv = PreparedConv::new(&conv);
+    let heam_kernel = Kernel::prepare(&heam_mul);
+    let exact_kernel = Kernel::Exact;
+    let mut scratch = Scratch::default();
+    // Guard: the GEMM path must be byte-identical before it is worth
+    // timing.
+    assert_eq!(
+        conv.forward(&x, &heam_mul, None),
+        prepared_conv.forward(&x, &heam_kernel, &mut scratch),
+        "naive vs GEMM conv outputs diverged (LUT)"
+    );
+    assert_eq!(
+        conv.forward(&x, &Multiplier::Exact, None),
+        prepared_conv.forward(&x, &exact_kernel, &mut scratch),
+        "naive vs GEMM conv outputs diverged (exact)"
+    );
+    let naive_lut = timed(&mut records, "qconv2d_forward (conv2 geometry, LUT mult)", &mut || {
         std::hint::black_box(conv.forward(&x, &heam_mul, None));
     });
-    bench_print("qconv2d_forward (conv2 geometry, exact mult)", || {
+    timed(&mut records, "qconv2d_forward (conv2 geometry, exact mult)", &mut || {
         std::hint::black_box(conv.forward(&x, &Multiplier::Exact, None));
     });
+    let gemm_lut = timed(&mut records, "gemm_conv2d_forward (conv2 geometry, LUT mult)", &mut || {
+        std::hint::black_box(prepared_conv.forward(&x, &heam_kernel, &mut scratch));
+    });
+    timed(&mut records, "gemm_conv2d_forward (conv2 geometry, exact mult)", &mut || {
+        std::hint::black_box(prepared_conv.forward(&x, &exact_kernel, &mut scratch));
+    });
+    println!(
+        "  -> conv2 LUT speedup (naive / gemm): {:.2}x",
+        naive_lut.ns() / gemm_lut.ns()
+    );
 
-    // 4. The dot primitive.
+    // 4. The dot primitive: full-width table walk vs the compact 16-bit
+    //    transposed table.
     let xs: Vec<u8> = (0..1024).map(|_| rng.below(256) as u8).collect();
     let ys: Vec<u8> = (0..1024).map(|_| rng.below(256) as u8).collect();
-    bench_print("lut_dot_1024", || {
+    timed(&mut records, "lut_dot_1024 (i32 table)", &mut || {
         std::hint::black_box(heam_mul.dot(&xs, &ys));
     });
+    assert_eq!(
+        heam_mul.dot(&xs, &ys),
+        dot_raw(&heam_kernel, &xs, &ys),
+        "compact dot decode drifted"
+    );
+    timed(&mut records, "lut_dot_1024 (compact 16-bit table)", &mut || {
+        std::hint::black_box(dot_raw(&heam_kernel, &xs, &ys));
+    });
 
-    // 5. Power estimation (toggle counting).
+    // 5. Whole-graph forward: naive DAG walk vs the prepared plan, then
+    //    batch fan-out. Random weights, digits geometry.
+    let bundle = heam::nn::lenet::random_bundle(1, 28, 7);
+    let graph = heam::nn::lenet::load_graph(&bundle).unwrap();
+    let prepared = graph.prepare(&heam_mul);
+    let img: Vec<f32> = (0..28 * 28).map(|_| rng.f32()).collect();
+    timed(&mut records, "lenet_forward (naive graph walk, LUT mult)", &mut || {
+        std::hint::black_box(
+            heam::nn::lenet::classify(&graph, &img, (1, 28, 28), &heam_mul, None).unwrap(),
+        );
+    });
+    timed(&mut records, "lenet_forward (prepared LUT-GEMM plan)", &mut || {
+        std::hint::black_box(
+            heam::nn::lenet::classify_prepared(&prepared, &img, (1, 28, 28), &mut scratch)
+                .unwrap(),
+        );
+    });
+
+    // Batch scaling: 32 images through forward_batch on 1 vs 4 workers.
+    let batch_n = 32usize;
+    let feeds: Vec<BTreeMap<String, GraphValue>> = (0..batch_n)
+        .map(|_| {
+            let data: Vec<f32> = (0..28 * 28).map(|_| rng.f32()).collect();
+            let mut f = BTreeMap::new();
+            f.insert(
+                "image".to_string(),
+                GraphValue::F32(Tensor::new(vec![1, 28, 28], data)),
+            );
+            f
+        })
+        .collect();
+    for workers in [1usize, 4] {
+        let name = format!("lenet_forward_batch ({batch_n} images, {workers} workers)");
+        let t0 = std::time::Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            std::hint::black_box(prepared.run_batch("fc3", &feeds, workers).unwrap());
+        }
+        let dt = t0.elapsed();
+        let per_img = dt / (reps * batch_n) as u32;
+        let img_s = (reps * batch_n) as f64 / dt.as_secs_f64();
+        println!("{name:<44} {per_img:>12.3?}/img = {img_s:.1} img/s");
+        records.push(Record {
+            op: name,
+            ns: per_img.as_nanos() as f64,
+            img_per_s: Some(img_s),
+        });
+    }
+
+    // 6. Power estimation (toggle counting).
     let words: Vec<u64> = {
         let mut r = Rng::new(7);
         (0..4096).map(|_| r.next_u64() & 0xFFFF).collect()
     };
-    bench_print("toggle_counts (wallace, 4096 vectors)", || {
+    timed(&mut records, "toggle_counts (wallace, 4096 vectors)", &mut || {
         let mut sim = Simulator::new(&wallace);
         std::hint::black_box(sim.toggle_counts(&words));
     });
 
-    // 6. Full eval throughput context: images/second for LeNet-digits if
-    //    artifacts exist.
+    // 7. Full eval throughput context: images/second for LeNet-digits if
+    //    artifacts exist (runs the batched LUT-GEMM accuracy path).
     if let (Ok(ds), Ok(graph)) = (
         heam::data::ImageDataset::load("artifacts/data/digits.htb", "digits"),
         heam::nn::lenet::load("artifacts/weights/digits.htb"),
@@ -111,9 +231,36 @@ fn main() {
         )
         .unwrap();
         let dt = t0.elapsed();
-        println!(
-            "lenet_eval_throughput: {n} images in {dt:?} = {:.1} img/s",
-            n as f64 / dt.as_secs_f64()
-        );
+        let img_s = n as f64 / dt.as_secs_f64();
+        println!("lenet_eval_throughput: {n} images in {dt:?} = {img_s:.1} img/s");
+        records.push(Record {
+            op: "lenet_eval_throughput".to_string(),
+            ns: dt.as_nanos() as f64 / n as f64,
+            img_per_s: Some(img_s),
+        });
+    }
+
+    // Emit the machine-readable trajectory.
+    let entries: Vec<Value> = records
+        .iter()
+        .map(|r| {
+            let mut pairs = vec![
+                ("op", Value::Str(r.op.clone())),
+                ("ns_per_iter", Value::Num(r.ns)),
+            ];
+            if let Some(t) = r.img_per_s {
+                pairs.push(("img_per_s", Value::Num(t)));
+            }
+            Value::obj(pairs)
+        })
+        .collect();
+    let root = Value::obj(vec![
+        ("bench", Value::Str("perf_hotpaths".to_string())),
+        ("records", Value::Arr(entries)),
+    ]);
+    let path = "BENCH_hotpaths.json";
+    match std::fs::write(path, root.to_json()) {
+        Ok(()) => println!("wrote {path} ({} records)", records.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::mult::Lut;
+use crate::nn::gemm::{PreparedGraph, Scratch};
 use crate::nn::graph::Graph;
 use crate::nn::multiplier::Multiplier;
 use crate::nn::ops::argmax;
@@ -22,8 +23,9 @@ use super::metrics::{Metrics, Snapshot};
 pub struct ServeConfig {
     pub max_batch: usize,
     pub max_wait_us: u64,
-    /// Worker threads (PJRT CPU: 1 device — keep 1; native backend can
-    /// use more).
+    /// Worker threads pulling batches from the shared queue (PJRT CPU:
+    /// forced to 1, one device; the native backend fans out across this
+    /// many threads over one shared prepared graph).
     pub workers: usize,
 }
 
@@ -53,11 +55,13 @@ enum Backend {
         aot_batch: usize,
         image_dims: (usize, usize, usize),
     },
-    /// Native ApproxFlow engine.
+    /// Native ApproxFlow engine: the prepared (im2col + LUT-GEMM) plan,
+    /// shareable read-only across the worker pool, plus this worker's own
+    /// scratch buffers (grown once, reused across batches).
     Native {
-        graph: Graph,
-        mul: Multiplier,
+        prepared: Arc<PreparedGraph>,
         image_dims: (usize, usize, usize),
+        scratch: Scratch,
     },
 }
 
@@ -71,7 +75,7 @@ impl Backend {
     }
 
     /// Classify a batch of images (flattened back-to-back).
-    fn execute(&self, images: &[f32], count: usize) -> Result<Vec<usize>> {
+    fn execute(&mut self, images: &[f32], count: usize) -> Result<Vec<usize>> {
         match self {
             Backend::Pjrt {
                 model,
@@ -84,8 +88,8 @@ impl Backend {
                     count <= *aot_batch,
                     "batch {count} exceeds artifact batch {aot_batch}"
                 );
-                let sz = c * h * w;
-                let mut padded = vec![0f32; aot_batch * sz];
+                let sz = *c * *h * *w;
+                let mut padded = vec![0f32; *aot_batch * sz];
                 padded[..count * sz].copy_from_slice(&images[..count * sz]);
                 let (logits, dims) = model.execute(&[
                     Input {
@@ -107,19 +111,19 @@ impl Backend {
                     .collect())
             }
             Backend::Native {
-                graph,
-                mul,
+                prepared,
                 image_dims,
+                scratch,
             } => {
-                let sz = self.image_size();
+                let (c, h, w) = *image_dims;
+                let sz = c * h * w;
                 let mut preds = Vec::with_capacity(count);
                 for i in 0..count {
-                    let (pred, _) = crate::nn::lenet::classify(
-                        graph,
+                    let (pred, _) = crate::nn::lenet::classify_prepared(
+                        prepared,
                         &images[i * sz..(i + 1) * sz],
                         *image_dims,
-                        mul,
-                        None,
+                        scratch,
                     )?;
                     preds.push(pred);
                 }
@@ -182,7 +186,10 @@ impl Server {
         )
     }
 
-    /// Start with the native ApproxFlow backend (no artifact needed).
+    /// Start with the native ApproxFlow backend (no artifact needed). The
+    /// graph is prepared once (im2col + LUT-GEMM plan) and shared
+    /// read-only across `config.workers` threads pulling batches from the
+    /// common queue.
     pub fn start_native(
         graph: Graph,
         mul: Multiplier,
@@ -190,14 +197,21 @@ impl Server {
         config: ServeConfig,
     ) -> Self {
         let (c, h, w) = image_dims;
-        let mut cfg = config;
-        cfg.workers = 1; // a single Graph serves one worker
-        Self::spawn_pool(
-            vec![Box::new(move || Ok(Backend::Native { graph, mul, image_dims }))],
-            c * h * w,
-            cfg,
-        )
-        .expect("native backend construction is infallible")
+        let prepared = Arc::new(graph.prepare(&mul));
+        let makers: Vec<BackendFactory> = (0..config.workers.max(1))
+            .map(|_| {
+                let prepared = prepared.clone();
+                Box::new(move || {
+                    Ok(Backend::Native {
+                        prepared,
+                        image_dims,
+                        scratch: Scratch::default(),
+                    })
+                }) as BackendFactory
+            })
+            .collect();
+        Self::spawn_pool(makers, c * h * w, config)
+            .expect("native backend construction is infallible")
     }
 
     /// Start a native worker *pool*: `config.workers` threads, each with
@@ -216,7 +230,11 @@ impl Server {
                 let f = factory.clone();
                 Box::new(move || {
                     let (graph, mul) = f()?;
-                    Ok(Backend::Native { graph, mul, image_dims })
+                    Ok(Backend::Native {
+                        prepared: Arc::new(graph.prepare(&mul)),
+                        image_dims,
+                        scratch: Scratch::default(),
+                    })
                 }) as BackendFactory
             })
             .collect();
@@ -252,7 +270,7 @@ impl Server {
             let ready = ready_tx.clone();
             let jobs = job_rx.clone();
             handles.push(std::thread::spawn(move || {
-                let backend = match make_backend() {
+                let mut backend = match make_backend() {
                     Ok(b) => {
                         let _ = ready.send(Ok(()));
                         b
@@ -446,6 +464,44 @@ mod tests {
         assert_eq!(m.requests, 12);
         // All workers share one weight seed -> identical inputs give
         // identical outputs regardless of which worker served them.
+        let a = server.classify(vec![0.25; 28 * 28]).unwrap();
+        let b = server.classify(vec![0.25; 28 * 28]).unwrap();
+        assert_eq!(a, b);
+        server.shutdown();
+    }
+
+    #[test]
+    fn start_native_fans_out_across_workers() {
+        // One graph, prepared once, shared by 3 workers pulling from the
+        // common batch queue.
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let server = Server::start_native(
+            graph,
+            Multiplier::Exact,
+            (1, 28, 28),
+            ServeConfig {
+                max_batch: 2,
+                max_wait_us: 200,
+                workers: 3,
+            },
+        );
+        let preds: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..12)
+                .map(|i| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let img = vec![(i as f32) / 12.0; 28 * 28];
+                        server.classify(img).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(preds.len(), 12);
+        assert!(preds.iter().all(|&p| p < 10));
+        // Shared prepared graph -> identical inputs give identical outputs
+        // regardless of the serving worker.
         let a = server.classify(vec![0.25; 28 * 28]).unwrap();
         let b = server.classify(vec![0.25; 28 * 28]).unwrap();
         assert_eq!(a, b);

@@ -23,6 +23,11 @@
 //!   OR-merge fine-tuning pass.
 //! * [`nn`] — ApproxFlow: a DAG-based quantized (8-bit, Jacob et al. scheme)
 //!   inference engine with pluggable multiplication (exact or LUT).
+//!   `nn::gemm` layers a batched im2col + LUT-GEMM serving core on top:
+//!   cache-compact (16-bit) transposed multiplier tables, per-layer
+//!   invariants prepared at graph-load time, fixed-point requantization,
+//!   and `Graph::forward_batch` fanning images across a scoped thread
+//!   pool — byte-identical to the naive operator loops by construction.
 //! * [`data`] — synthetic dataset substitutes for MNIST / FashionMNIST /
 //!   CIFAR-10 / CORA (no network access in the build environment).
 //! * [`accel`] — DNN-accelerator module models (TASU, Systolic Cube,
@@ -31,7 +36,9 @@
 //!   produced by `python/compile/aot.py` and execute them.
 //! * [`coordinator`] — the L3 serving layer: request router, dynamic
 //!   batcher, worker dispatch and metrics (threads + channels; the offline
-//!   crate snapshot has no tokio).
+//!   crate snapshot has no tokio). The native backend shares one prepared
+//!   LUT-GEMM plan across a `workers`-sized thread pool pulling batches
+//!   from a common queue.
 //! * [`bench`] — regeneration harness for every table and figure in the
 //!   paper's evaluation section.
 //! * [`util`] — offline-crate substitutes: PRNG, mini-JSON, tensor-bundle

@@ -12,9 +12,10 @@
 //!   `artifacts/luts/` (serving artifacts).
 //! * `report`     — print the standalone multiplier cost table (Table I
 //!   hardware columns).
-//! * `serve`      — run the serving coordinator on an AOT-compiled model
-//!   (PJRT runtime + dynamic batcher); see `examples/serve_lenet.rs` for
-//!   the library API.
+//! * `serve`      — run the serving coordinator: PJRT runtime on an
+//!   AOT-compiled model, or (`--native`) the in-process batched LUT-GEMM
+//!   engine with a `--workers` thread pool; see `examples/serve_lenet.rs`
+//!   for the library API.
 
 use std::sync::Arc;
 
@@ -70,7 +71,7 @@ fn print_usage() {
            eval       evaluate a trained model under a multiplier\n\
            luts       dump every multiplier's LUT to artifacts/luts/\n\
            report     print the standalone multiplier cost table\n\
-           serve      serve an AOT-compiled model via the PJRT runtime\n\
+           serve      serve a model (PJRT runtime, or --native LUT-GEMM pool)\n\
            nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\n\
          Run `heam <subcommand> --help` for options."
     );
@@ -333,14 +334,20 @@ fn report(argv: &[String]) -> Result<()> {
 }
 
 fn serve(argv: &[String]) -> Result<()> {
-    let args = Args::new("heam serve", "Serve an AOT-compiled LeNet via PJRT")
-        .opt("model", "artifacts/lenet_digits.hlo.txt", "HLO text artifact")
-        .opt("lut", "", "approximate-multiplier LUT (empty = exact)")
-        .opt("data", "artifacts/data/digits.htb", "dataset for the demo workload")
-        .opt("requests", "256", "demo requests to issue")
-        .opt("batch", "16", "max dynamic batch")
-        .opt("wait-us", "2000", "batcher wait budget (us)")
-        .parse(argv)?;
+    let args = Args::new(
+        "heam serve",
+        "Serve a LeNet: PJRT (AOT artifact) or the native LUT-GEMM engine",
+    )
+    .opt("model", "artifacts/lenet_digits.hlo.txt", "HLO text artifact (PJRT backend)")
+    .opt("weights", "artifacts/weights/digits.htb", "weight bundle (native backend)")
+    .opt("lut", "", "approximate-multiplier LUT (empty = exact)")
+    .opt("data", "artifacts/data/digits.htb", "dataset for the demo workload")
+    .opt("requests", "256", "demo requests to issue")
+    .opt("batch", "16", "max dynamic batch")
+    .opt("wait-us", "2000", "batcher wait budget (us)")
+    .opt("workers", "4", "native worker threads (PJRT always uses 1)")
+    .flag("native", "serve through the native batched LUT-GEMM engine")
+    .parse(argv)?;
     let lut = if args.get("lut").is_empty() {
         Lut::exact()
     } else {
@@ -349,11 +356,21 @@ fn serve(argv: &[String]) -> Result<()> {
     let config = ServeConfig {
         max_batch: args.get_as("batch")?,
         max_wait_us: args.get_as("wait-us")?,
-        workers: 1,
+        workers: args.get_as("workers")?,
     };
-    let server = Server::start(args.get("model"), Arc::new(lut), config)
-        .context("starting PJRT server")?;
     let ds = heam::data::ImageDataset::load(args.get("data"), "serve")?;
+    let server = if args.is_set("native") {
+        let graph = heam::nn::lenet::load(args.get("weights"))?;
+        Server::start_native(
+            graph,
+            Multiplier::Lut(Arc::new(lut)),
+            (ds.channels, ds.height, ds.width),
+            config,
+        )
+    } else {
+        Server::start(args.get("model"), Arc::new(lut), config)
+            .context("starting PJRT server (hint: pass --native for the in-process engine)")?
+    };
     let n: usize = args.get_as("requests")?;
     let report = heam::coordinator::drive_demo(&server, &ds, n)?;
     println!("{report}");

@@ -133,6 +133,43 @@ impl Lut {
         worst
     }
 
+    /// Cache-compact representation: 16-bit entries whenever the table's
+    /// value range allows (128 KiB instead of 256 KiB — half the cache
+    /// footprint in the LUT-GEMM hot loop), i32 fallback otherwise.
+    ///
+    /// Every multiplier reproduced in this crate compacts: unsigned
+    /// designs (Wallace, KMap, AC, CR) have products in [0, 65535] and the
+    /// signed ones (OU) span less than 2^16 between minimum and maximum,
+    /// which the biased-u16 form covers exactly. Decoding is lossless in
+    /// all three modes — [`CompactLut::get`] equals [`Lut::get`] bit for
+    /// bit on every operand pair.
+    pub fn compact(&self) -> CompactLut {
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for &v in &self.values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let data = if lo >= i16::MIN as i32 && hi <= i16::MAX as i32 {
+            CompactData::I16(self.values.iter().map(|&v| v as i16).collect())
+        } else if hi as i64 - lo as i64 <= u16::MAX as i64 {
+            CompactData::U16 {
+                entries: self
+                    .values
+                    .iter()
+                    .map(|&v| (v as i64 - lo as i64) as u16)
+                    .collect(),
+                bias: lo,
+            }
+        } else {
+            CompactData::I32(self.values.clone())
+        };
+        CompactLut {
+            name: self.name.clone(),
+            data,
+        }
+    }
+
     /// Save as a tensor bundle (shape [256, 256] i32, name "lut").
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut b = Bundle::new();
@@ -149,6 +186,52 @@ impl Lut {
             values: t.as_i32()?,
             name: path.as_ref().display().to_string(),
         })
+    }
+}
+
+/// Backing storage of a [`CompactLut`].
+#[derive(Clone)]
+pub enum CompactData {
+    /// `value = entry` (signed tables that fit i16 directly).
+    I16(Vec<i16>),
+    /// `value = entry + bias` with `bias` the table minimum (any table
+    /// whose value range spans at most 65535; exact tables store bias 0).
+    U16 { entries: Vec<u16>, bias: i32 },
+    /// Full-width fallback for ranges wider than 2^16.
+    I32(Vec<i32>),
+}
+
+/// Cache-compact 256x256 multiplication table (see [`Lut::compact`]).
+#[derive(Clone)]
+pub struct CompactLut {
+    pub name: String,
+    pub data: CompactData,
+}
+
+impl CompactLut {
+    /// Table entry — decodes to exactly [`Lut::get`]'s value.
+    #[inline(always)]
+    pub fn get(&self, x: u8, y: u8) -> i32 {
+        let i = ((x as usize) << 8) | y as usize;
+        match &self.data {
+            CompactData::I16(v) => v[i] as i32,
+            CompactData::U16 { entries, bias } => entries[i] as i32 + bias,
+            CompactData::I32(v) => v[i],
+        }
+    }
+
+    /// Bytes of table storage.
+    pub fn bytes(&self) -> usize {
+        match &self.data {
+            CompactData::I16(v) => v.len() * 2,
+            CompactData::U16 { entries, .. } => entries.len() * 2,
+            CompactData::I32(v) => v.len() * 4,
+        }
+    }
+
+    /// True when the 16-bit (half-footprint) representation applies.
+    pub fn is_narrow(&self) -> bool {
+        !matches!(self.data, CompactData::I32(_))
     }
 }
 
@@ -193,6 +276,42 @@ mod tests {
         assert_eq!(lut.avg_sq_error_weighted(&px, &py), 0.0);
         // Uniform error is nonzero.
         assert!(lut.avg_sq_error_uniform() > 0.0);
+    }
+
+    #[test]
+    fn compact_is_lossless_and_narrow_for_exact() {
+        let lut = Lut::exact();
+        let c = lut.compact();
+        assert!(c.is_narrow(), "exact products fit biased u16");
+        assert_eq!(c.bytes(), 65536 * 2);
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                assert_eq!(c.get(x as u8, y as u8), lut.get(x as u8, y as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn compact_signed_small_range_uses_i16() {
+        let lut = Lut::from_fn("small-signed", |x, y| ((x as i64 - y as i64) * 7) % 1000);
+        let c = lut.compact();
+        assert!(matches!(c.data, CompactData::I16(_)));
+        for x in (0..256).step_by(7) {
+            for y in (0..256).step_by(11) {
+                assert_eq!(c.get(x as u8, y as u8), lut.get(x as u8, y as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn compact_wide_range_falls_back_to_i32() {
+        let lut = Lut::from_fn("wide", |x, y| x as i64 * y as i64 * 31 - 1_000_000);
+        let c = lut.compact();
+        assert!(!c.is_narrow());
+        assert_eq!(c.bytes(), 65536 * 4);
+        for (x, y) in [(0u8, 0u8), (255, 255), (13, 200)] {
+            assert_eq!(c.get(x, y), lut.get(x, y));
+        }
     }
 
     #[test]

@@ -8,12 +8,14 @@
 //! multiplier workload — documented in DESIGN.md §2).
 
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{Context, Result};
 
 use crate::data::GraphDataset;
 use crate::util::tensor_io::Bundle;
 
+use super::gemm::{Kernel, PreparedMatmul, Scratch};
 use super::multiplier::Multiplier;
 use super::ops::qmatmul_f32;
 use super::quant::QuantParams;
@@ -74,6 +76,17 @@ pub struct QGcnLayer {
     pub w_q: QuantParams,
     /// Output quantization (layer 0 only; the final layer emits f32).
     pub out_q: Option<QuantParams>,
+    /// Lazily-prepared matmul: transposed weights + column sums, hoisted
+    /// out of the per-call path (`qmatmul_f32` re-derives both each call).
+    pub prepared_cache: OnceLock<PreparedMatmul>,
+}
+
+impl QGcnLayer {
+    /// The prepared (transposed, summed) form, built once per layer.
+    pub fn prepared(&self) -> &PreparedMatmul {
+        self.prepared_cache
+            .get_or_init(|| PreparedMatmul::new(&self.name, &self.w, self.x_q, self.w_q))
+    }
 }
 
 /// The two-layer model.
@@ -100,6 +113,7 @@ impl QGcn {
                 x_q: qp(name, "x")?,
                 w_q: qp(name, "w")?,
                 out_q: if has_out { Some(qp(name, "out")?) } else { None },
+                prepared_cache: OnceLock::new(),
             })
         };
         Ok(Self {
@@ -115,6 +129,14 @@ impl QGcn {
     }
 
     /// Full-graph forward: returns logits [N, classes].
+    ///
+    /// With a stats collector attached this walks the naive `qmatmul_f32`
+    /// reference (stats capture is a calibration workload); without one it
+    /// runs the prepared LUT-GEMM path, which is bit-identical. The
+    /// multiplier kernel is rebuilt per call (cheap next to a full-graph
+    /// matmul, and the multiplier may differ between calls); hot loops
+    /// that pin one multiplier should build a `Kernel` once and call
+    /// [`QGcn::forward_prepared`] directly.
     pub fn forward(
         &self,
         features: &Tensor<f32>,
@@ -122,6 +144,9 @@ impl QGcn {
         mul: &Multiplier,
         mut stats: Option<&mut StatsCollector>,
     ) -> Tensor<f32> {
+        if stats.is_none() {
+            return self.forward_prepared(features, adj, &Kernel::prepare(mul));
+        }
         // Layer 0: quantize features, multiply, propagate, ReLU.
         let x0 = self.layer0.x_q.quantize_tensor(features);
         let xw0 = qmatmul_f32(
@@ -154,6 +179,26 @@ impl QGcn {
             stats.as_deref_mut(),
             &self.layer1.name,
         );
+        adj.matmul(&xw1)
+    }
+
+    /// Forward through the prepared LUT-GEMM path (cached transposed
+    /// weights, blocked kernel); bit-identical to the naive path.
+    pub fn forward_prepared(
+        &self,
+        features: &Tensor<f32>,
+        adj: &NormAdj,
+        kernel: &Kernel,
+    ) -> Tensor<f32> {
+        let mut scratch = Scratch::default();
+        let x0 = self.layer0.x_q.quantize_tensor(features);
+        let xw0 = self.layer0.prepared().forward(&x0, kernel, &mut scratch);
+        let mut h1 = adj.matmul(&xw0);
+        for v in h1.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let h1q = self.layer1.x_q.quantize_tensor(&h1);
+        let xw1 = self.layer1.prepared().forward(&h1q, kernel, &mut scratch);
         adj.matmul(&xw1)
     }
 
@@ -247,6 +292,21 @@ mod tests {
         let model = QGcn::load_bundle(&random_bundle(64, 16, 7, 4)).unwrap();
         let acc = model.accuracy(&g, &g.test_mask, &Multiplier::Exact, None);
         assert!(acc < 0.6, "untrained GCN accuracy {acc}");
+    }
+
+    #[test]
+    fn prepared_path_matches_naive() {
+        let g = crate::data::cora::generate(60, 32, 7, 8);
+        let model = QGcn::load_bundle(&random_bundle(32, 8, 7, 9)).unwrap();
+        let feats = Tensor::new(vec![60, 32], g.features.clone());
+        let adj = NormAdj::build(60, &g.edges);
+        // The stats-carrying call walks the naive qmatmul path; the bare
+        // call walks the prepared LUT-GEMM path. Logits must be
+        // bit-identical.
+        let mut stats = StatsCollector::new();
+        let naive = model.forward(&feats, &adj, &Multiplier::Exact, Some(&mut stats));
+        let fast = model.forward(&feats, &adj, &Multiplier::Exact, None);
+        assert_eq!(naive.data, fast.data);
     }
 
     #[test]

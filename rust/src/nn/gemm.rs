@@ -1,0 +1,847 @@
+//! Batched im2col + LUT-GEMM inference core.
+//!
+//! The naive operator loops in [`super::ops`] walk the 256 KiB i32 LUT
+//! with one *random* table access per MAC — on LeNet's conv2 geometry
+//! that is 153 600 L2-latency-bound loads per image, which is why LUT
+//! evaluation dominates approximate-multiplier research pipelines
+//! (torchapprox, agn-approx, ApproxFlow itself). This module restructures
+//! the hot path three ways:
+//!
+//! 1. **im2col, k-major.** Each conv lowers its input once per call into a
+//!    `[KSZ][OH*OW]` patch matrix (kernel-position-major), so the GEMM
+//!    inner loop streams contiguous patch strips instead of re-gathering
+//!    windows per output position.
+//! 2. **Transposed, cache-compact tables.** The multiplier LUT is stored
+//!    16-bit ([`Lut::compact`]) and *weight-major*: `t[y*256 + x]`. For a
+//!    fixed weight byte `y` the inner loop reads one 512-byte table row
+//!    across a whole patch strip — every lookup after the first eight hits
+//!    L1, where the naive path takes an L2-latency miss per MAC. The
+//!    16-bit entries are chunk-accumulated in i32 lanes (auto-vectorizable)
+//!    and widened to i64 every `K_CHUNK` steps, which cannot overflow by
+//!    construction.
+//! 3. **Prepared-layer cache.** Per-layer invariants — weight sums,
+//!    fixed-point requant multipliers, transposed GCN weights — are
+//!    computed once at [`Graph::prepare`] time, not per forward call.
+//!
+//! **Bit-exactness contract.** Every path here computes the *same integer
+//! sums* as the naive reference (integer addition is associative, the
+//! compact-table decode is lossless, and [`Requant`] is shared), so codes
+//! are byte-identical for `Multiplier::Exact` and every LUT — property
+//! tests in `rust/tests/gemm_parity.rs` enforce this.
+//!
+//! [`Graph::forward_batch`] fans a batch of images across a scoped
+//! `std::thread` pool, one prepared graph shared by all workers (it is
+//! immutable after construction), one [`Scratch`] per worker.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::mult::lut::{CompactData, Lut};
+
+use super::graph::{Graph, Op, Value};
+use super::multiplier::Multiplier;
+use super::ops::{maxpool2, QConv2d, QDense, Requant};
+use super::quant::QuantParams;
+use super::tensor::Tensor;
+
+/// Patch-strip width: i32 accumulator tile held in registers / L1.
+const N_BLOCK: usize = 128;
+
+/// k-chunk bound for 16-bit entry accumulation in i32 lanes:
+/// 2^14 * (2^16 - 1) < 2^30, so a chunk can never overflow.
+const K_CHUNK: usize = 16384;
+
+/// The inner-loop multiplication kernel, prepared once per graph.
+pub enum Kernel {
+    /// Exact `x * y` (no table).
+    Exact,
+    /// Transposed 16-bit table with additive bias:
+    /// `mul(x, y) = t[(y << 8) | x] as i64 + bias`.
+    Narrow { t: Vec<u16>, bias: i64 },
+    /// Transposed full-width fallback (value ranges wider than 2^16).
+    Wide { t: Vec<i32> },
+}
+
+fn transpose256<T: Copy + Default>(src: &[T]) -> Vec<T> {
+    let mut dst = vec![T::default(); 65536];
+    for x in 0..256usize {
+        for y in 0..256usize {
+            dst[(y << 8) | x] = src[(x << 8) | y];
+        }
+    }
+    dst
+}
+
+impl Kernel {
+    /// Build the kernel for a pluggable multiplier.
+    pub fn prepare(mul: &Multiplier) -> Self {
+        match mul {
+            Multiplier::Exact => Kernel::Exact,
+            Multiplier::Lut(lut) => Kernel::from_lut(lut),
+        }
+    }
+
+    /// Compact + transpose a LUT into the kernel layout.
+    pub fn from_lut(lut: &Lut) -> Self {
+        match lut.compact().data {
+            CompactData::I16(v) => {
+                // Re-bias i16 entries into u16 so one Narrow loop serves
+                // both compact modes: value = entry - 32768.
+                let unsigned: Vec<u16> =
+                    v.iter().map(|&e| (e as i32 + 32768) as u16).collect();
+                Kernel::Narrow {
+                    t: transpose256(&unsigned),
+                    bias: -32768,
+                }
+            }
+            CompactData::U16 { entries, bias } => Kernel::Narrow {
+                t: transpose256(&entries),
+                bias: bias as i64,
+            },
+            CompactData::I32(v) => Kernel::Wide { t: transpose256(&v) },
+        }
+    }
+
+    /// Human-readable label (diagnostics).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Exact => "exact",
+            Kernel::Narrow { .. } => "lut16",
+            Kernel::Wide { .. } => "lut32",
+        }
+    }
+}
+
+/// Reusable per-worker buffers (im2col matrix, patch sums, raw GEMM
+/// output). They grow to the largest layer once and are reused across
+/// calls, keeping the steady-state hot path allocation-free.
+#[derive(Default)]
+pub struct Scratch {
+    xt: Vec<u8>,
+    x_sums: Vec<i64>,
+    raw: Vec<i64>,
+}
+
+/// `raw[mi*n + p] = Σ_k mul(xt[k*n + p], w[mi*k + k])` — the code-domain
+/// GEMM over a k-major patch matrix `xt` ([K][N]) and row-major weights
+/// ([M][K]), blocked over patch strips.
+pub fn gemm_raw(
+    kernel: &Kernel,
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+) {
+    debug_assert_eq!(xt.len(), k * n);
+    debug_assert_eq!(wrows.len(), m * k);
+    debug_assert_eq!(raw.len(), m * n);
+    match kernel {
+        Kernel::Exact => {
+            gemm_blocked_i32(xt, n, k, wrows, m, raw, 0, |y| y as i32, |y, xv| y * xv as i32)
+        }
+        Kernel::Narrow { t, bias } => gemm_blocked_i32(
+            xt,
+            n,
+            k,
+            wrows,
+            m,
+            raw,
+            k as i64 * *bias,
+            // One 512-byte table row serves a whole strip; the fixed-size
+            // array view makes the u8 index provably in-bounds, so the
+            // inner loop is check-free.
+            |y| {
+                let row: &[u16; 256] =
+                    t[y as usize * 256..y as usize * 256 + 256].try_into().unwrap();
+                row
+            },
+            |row, xv| row[xv as usize] as i32,
+        ),
+        Kernel::Wide { t } => gemm_wide(t, xt, n, k, wrows, m, raw),
+    }
+}
+
+/// Strip-blocked skeleton shared by the kernels whose per-element terms
+/// fit i32 (exact products and 16-bit table entries): K_CHUNK terms are
+/// accumulated in i32 lanes, widened to i64 between chunks, and `kbias`
+/// (the Narrow table's `k * bias` decode term) is folded in on writeout.
+/// `mk_row` turns a weight byte into whatever the inner loop needs — a
+/// table row, or the widened byte itself.
+#[inline(always)]
+fn gemm_blocked_i32<Row, MkRow, Term>(
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+    kbias: i64,
+    mk_row: MkRow,
+    term: Term,
+) where
+    Row: Copy,
+    MkRow: Fn(u8) -> Row,
+    Term: Fn(Row, u8) -> i32,
+{
+    let mut nb = 0;
+    while nb < n {
+        let nw = N_BLOCK.min(n - nb);
+        for mi in 0..m {
+            let wrow = &wrows[mi * k..(mi + 1) * k];
+            let mut acc64 = [0i64; N_BLOCK];
+            let mut kc = 0;
+            while kc < k {
+                let kend = (kc + K_CHUNK).min(k);
+                let mut acc = [0i32; N_BLOCK];
+                for ki in kc..kend {
+                    let row = mk_row(wrow[ki]);
+                    let xrow = &xt[ki * n + nb..ki * n + nb + nw];
+                    for (a, &xv) in acc[..nw].iter_mut().zip(xrow) {
+                        *a += term(row, xv);
+                    }
+                }
+                for (wide, &lane) in acc64[..nw].iter_mut().zip(&acc[..nw]) {
+                    *wide += lane as i64;
+                }
+                kc = kend;
+            }
+            let out = &mut raw[mi * n + nb..mi * n + nb + nw];
+            for (o, &a) in out.iter_mut().zip(&acc64[..nw]) {
+                *o = a + kbias;
+            }
+        }
+        nb += N_BLOCK;
+    }
+}
+
+fn gemm_wide(t: &[i32], xt: &[u8], n: usize, k: usize, wrows: &[u8], m: usize, raw: &mut [i64]) {
+    let mut nb = 0;
+    while nb < n {
+        let nw = N_BLOCK.min(n - nb);
+        for mi in 0..m {
+            let wrow = &wrows[mi * k..(mi + 1) * k];
+            let mut acc = [0i64; N_BLOCK];
+            for ki in 0..k {
+                let y = wrow[ki] as usize;
+                let row: &[i32; 256] = t[y * 256..y * 256 + 256].try_into().unwrap();
+                let xrow = &xt[ki * n + nb..ki * n + nb + nw];
+                for (a, &xv) in acc[..nw].iter_mut().zip(xrow) {
+                    *a += row[xv as usize] as i64;
+                }
+            }
+            raw[mi * n + nb..mi * n + nb + nw].copy_from_slice(&acc[..nw]);
+        }
+        nb += N_BLOCK;
+    }
+}
+
+/// Code-domain dot product through the kernel (the dense/GEMV primitive;
+/// with a single "patch" the row-pointer trick has no reuse, so this
+/// indexes the transposed table pairwise with four parallel accumulator
+/// chains, like `Multiplier::dot` but over 16-bit entries).
+pub fn dot_raw(kernel: &Kernel, xs: &[u8], ws: &[u8]) -> i64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    match kernel {
+        Kernel::Exact => xs.iter().zip(ws).map(|(&x, &y)| x as i64 * y as i64).sum(),
+        Kernel::Narrow { t, bias } => dot4(t, xs, ws) + xs.len() as i64 * bias,
+        Kernel::Wide { t } => dot4(t, xs, ws),
+    }
+}
+
+/// Four-chain pairwise table walk shared by both transposed-table widths.
+#[inline(always)]
+fn dot4<T: Copy + Into<i64>>(t: &[T], xs: &[u8], ws: &[u8]) -> i64 {
+    let n = xs.len();
+    let at = |i: usize| -> i64 { t[((ws[i] as usize) << 8) | xs[i] as usize].into() };
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    for c in 0..chunks {
+        let i = c * 4;
+        a0 += at(i);
+        a1 += at(i + 1);
+        a2 += at(i + 2);
+        a3 += at(i + 3);
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in chunks * 4..n {
+        acc += at(i);
+    }
+    acc
+}
+
+/// A conv layer with its invariants hoisted out of the call path.
+pub struct PreparedConv {
+    pub name: String,
+    oc: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    /// Weight codes [OC, C*KH*KW] (row-major, the GEMM's M dimension).
+    w: Tensor<u8>,
+    w_sums: Vec<i64>,
+    bias: Vec<i64>,
+    zx: i64,
+    zw: i64,
+    rq: Requant,
+}
+
+impl PreparedConv {
+    /// Capture a layer's invariants.
+    pub fn new(layer: &QConv2d) -> Self {
+        Self {
+            name: layer.name.clone(),
+            oc: layer.w.dim(0),
+            c: layer.w.dim(1),
+            kh: layer.w.dim(2),
+            kw: layer.w.dim(3),
+            w: layer.w.clone(),
+            w_sums: layer.w_sums().to_vec(),
+            bias: layer.bias.clone(),
+            zx: layer.x_q.zero_point as i64,
+            zw: layer.w_q.zero_point as i64,
+            rq: Requant::for_layer(layer.x_q, layer.w_q, layer.out_q, layer.relu),
+        }
+    }
+
+    /// im2col + LUT-GEMM forward on one image [C, H, W] of codes;
+    /// byte-identical to `QConv2d::forward`.
+    pub fn forward(&self, x: &Tensor<u8>, kernel: &Kernel, scratch: &mut Scratch) -> Tensor<u8> {
+        let (c, h, w) = (x.dim(0), x.dim(1), x.dim(2));
+        assert_eq!(c, self.c, "{}: channel mismatch", self.name);
+        let (oh, ow) = (h - self.kh + 1, w - self.kw + 1);
+        let np = oh * ow;
+        let ksz = self.c * self.kh * self.kw;
+
+        // im2col, k-major: row ki holds kernel position (ci, ky, kx)
+        // across all patches. Stride-1 valid conv makes each (ki, oy)
+        // strip a contiguous copy from the input row.
+        let xt = &mut scratch.xt;
+        xt.clear();
+        xt.resize(ksz * np, 0);
+        for ci in 0..c {
+            for ky in 0..self.kh {
+                for kx in 0..self.kw {
+                    let ki = (ci * self.kh + ky) * self.kw + kx;
+                    for oy in 0..oh {
+                        let src = ci * h * w + (oy + ky) * w + kx;
+                        let dst = ki * np + oy * ow;
+                        xt[dst..dst + ow].copy_from_slice(&x.data[src..src + ow]);
+                    }
+                }
+            }
+        }
+
+        // Per-patch operand sums (the zw correction), streamed k-major.
+        let x_sums = &mut scratch.x_sums;
+        x_sums.clear();
+        x_sums.resize(np, 0);
+        for ki in 0..ksz {
+            let row = &xt[ki * np..(ki + 1) * np];
+            for (s, &v) in x_sums.iter_mut().zip(row) {
+                *s += v as i64;
+            }
+        }
+
+        let raw = &mut scratch.raw;
+        raw.clear();
+        raw.resize(self.oc * np, 0);
+        gemm_raw(kernel, xt, np, ksz, &self.w.data, self.oc, raw);
+
+        let nzz = ksz as i64 * self.zx * self.zw;
+        let mut out = Tensor::zeros(vec![self.oc, oh, ow]);
+        for o in 0..self.oc {
+            let corr = nzz + self.bias[o] - self.zx * self.w_sums[o];
+            let rawrow = &raw[o * np..(o + 1) * np];
+            let outrow = &mut out.data[o * np..(o + 1) * np];
+            for ((code, &r), &xs) in outrow.iter_mut().zip(rawrow).zip(x_sums.iter()) {
+                *code = self.rq.apply(r - self.zw * xs + corr);
+            }
+        }
+        out
+    }
+}
+
+/// A dense layer with its invariants hoisted out of the call path.
+pub struct PreparedDense {
+    pub name: String,
+    out_n: usize,
+    in_n: usize,
+    w: Tensor<u8>,
+    w_sums: Vec<i64>,
+    bias: Vec<i64>,
+    zx: i64,
+    zw: i64,
+    rq: Requant,
+    s_acc: f32,
+}
+
+impl PreparedDense {
+    /// Capture a layer's invariants.
+    pub fn new(layer: &QDense) -> Self {
+        Self {
+            name: layer.name.clone(),
+            out_n: layer.w.dim(0),
+            in_n: layer.w.dim(1),
+            w: layer.w.clone(),
+            w_sums: layer.w_sums().to_vec(),
+            bias: layer.bias.clone(),
+            zx: layer.x_q.zero_point as i64,
+            zw: layer.w_q.zero_point as i64,
+            rq: Requant::for_layer(layer.x_q, layer.w_q, layer.out_q, layer.relu),
+            s_acc: layer.x_q.scale * layer.w_q.scale,
+        }
+    }
+
+    fn accs<'a>(&'a self, x: &'a [u8], kernel: &'a Kernel) -> impl Iterator<Item = i64> + 'a {
+        assert_eq!(x.len(), self.in_n, "{}: input size mismatch", self.name);
+        let x_sum: i64 = x.iter().map(|&v| v as i64).sum();
+        let nzz = self.in_n as i64 * self.zx * self.zw;
+        (0..self.out_n).map(move |o| {
+            let wrow = &self.w.data[o * self.in_n..(o + 1) * self.in_n];
+            let raw = dot_raw(kernel, x, wrow);
+            raw - self.zw * x_sum - self.zx * self.w_sums[o] + nzz + self.bias[o]
+        })
+    }
+
+    /// Forward to u8 codes; byte-identical to `QDense::forward`.
+    pub fn forward_codes(&self, x: &[u8], kernel: &Kernel) -> Vec<u8> {
+        self.accs(x, kernel).map(|acc| self.rq.apply(acc)).collect()
+    }
+
+    /// Forward to f32 logits; bit-identical to `QDense::forward_f32`.
+    pub fn forward_logits(&self, x: &[u8], kernel: &Kernel) -> Vec<f32> {
+        self.accs(x, kernel).map(|acc| acc as f32 * self.s_acc).collect()
+    }
+}
+
+/// A quantized matmul (GCN layer) with the weight transpose and column
+/// sums hoisted out of the call path — `qmatmul_f32` re-derives both on
+/// every call.
+#[derive(Clone, Debug)]
+pub struct PreparedMatmul {
+    pub name: String,
+    k: usize,
+    m_dim: usize,
+    /// W transposed to [M, K] once at prepare time.
+    wt: Vec<u8>,
+    w_sums: Vec<i64>,
+    zx: i64,
+    zw: i64,
+    s_acc: f32,
+}
+
+impl PreparedMatmul {
+    /// Capture a layer's invariants from W [K, M].
+    pub fn new(name: &str, w: &Tensor<u8>, x_q: QuantParams, w_q: QuantParams) -> Self {
+        let (k, m_dim) = (w.dim(0), w.dim(1));
+        let mut wt = vec![0u8; k * m_dim];
+        for r in 0..k {
+            for c in 0..m_dim {
+                wt[c * k + r] = w.data[r * m_dim + c];
+            }
+        }
+        // Column sums of W == row sums of the transpose.
+        let w_sums = super::ops::row_sums(&wt, m_dim, k);
+        Self {
+            name: name.to_string(),
+            k,
+            m_dim,
+            wt,
+            w_sums,
+            zx: x_q.zero_point as i64,
+            zw: w_q.zero_point as i64,
+            s_acc: x_q.scale * w_q.scale,
+        }
+    }
+
+    /// X [N, K] codes -> f32 reals [N, M]; bit-identical to `qmatmul_f32`.
+    pub fn forward(&self, x: &Tensor<u8>, kernel: &Kernel, scratch: &mut Scratch) -> Tensor<f32> {
+        let (n, k) = (x.dim(0), x.dim(1));
+        assert_eq!(k, self.k, "{}: inner-dim mismatch", self.name);
+
+        // Transpose X to k-major for the strip kernel.
+        let xt = &mut scratch.xt;
+        xt.clear();
+        xt.resize(k * n, 0);
+        for i in 0..n {
+            let xrow = &x.data[i * k..(i + 1) * k];
+            for (r, &v) in xrow.iter().enumerate() {
+                xt[r * n + i] = v;
+            }
+        }
+        let x_sums = &mut scratch.x_sums;
+        x_sums.clear();
+        x_sums.extend(
+            x.data
+                .chunks_exact(k)
+                .map(|row| row.iter().map(|&v| v as i64).sum::<i64>()),
+        );
+
+        let raw = &mut scratch.raw;
+        raw.clear();
+        raw.resize(self.m_dim * n, 0);
+        gemm_raw(kernel, xt, n, k, &self.wt, self.m_dim, raw);
+
+        let kzz = k as i64 * self.zx * self.zw;
+        let mut out = Tensor::zeros(vec![n, self.m_dim]);
+        for j in 0..self.m_dim {
+            let corr = kzz - self.zx * self.w_sums[j];
+            let rawrow = &raw[j * n..(j + 1) * n];
+            for i in 0..n {
+                let acc = rawrow[i] - self.zw * x_sums[i] + corr;
+                out.data[i * self.m_dim + j] = acc as f32 * self.s_acc;
+            }
+        }
+        out
+    }
+}
+
+/// A prepared node mirrors one graph node with its layer invariants baked.
+enum PreparedOp {
+    Input,
+    Quantize(QuantParams),
+    Conv(PreparedConv),
+    Dense(PreparedDense),
+    DenseLogits(PreparedDense),
+    MaxPool2,
+    Flatten,
+}
+
+struct PreparedNode {
+    name: String,
+    op: PreparedOp,
+    inputs: Vec<usize>,
+}
+
+/// An immutable, `Sync` execution plan: the graph with per-layer
+/// invariants and the multiplier kernel prepared once. Shareable across
+/// worker threads by reference; per-thread mutable state lives in
+/// [`Scratch`].
+///
+/// Stats collection stays on the naive [`Graph::run`] path (it is a
+/// calibration workload, not a serving one).
+pub struct PreparedGraph {
+    nodes: Vec<PreparedNode>,
+    by_name: BTreeMap<String, usize>,
+    kernel: Kernel,
+}
+
+impl PreparedGraph {
+    /// Prepare a graph for a multiplier.
+    pub fn new(graph: &Graph, mul: &Multiplier) -> Self {
+        let nodes: Vec<PreparedNode> = graph
+            .nodes
+            .iter()
+            .map(|node| {
+                let op = match &node.op {
+                    Op::Input => PreparedOp::Input,
+                    Op::Quantize(q) => PreparedOp::Quantize(*q),
+                    Op::Conv(l) => PreparedOp::Conv(PreparedConv::new(l)),
+                    Op::Dense(l) => PreparedOp::Dense(PreparedDense::new(l)),
+                    Op::DenseLogits(l) => PreparedOp::DenseLogits(PreparedDense::new(l)),
+                    Op::MaxPool2 => PreparedOp::MaxPool2,
+                    Op::Flatten => PreparedOp::Flatten,
+                };
+                PreparedNode {
+                    name: node.name.clone(),
+                    op,
+                    inputs: node.inputs.clone(),
+                }
+            })
+            .collect();
+        let by_name = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.clone(), i))
+            .collect();
+        Self {
+            nodes,
+            by_name,
+            kernel: Kernel::prepare(mul),
+        }
+    }
+
+    /// The prepared multiplier kernel.
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    /// Node id by name.
+    pub fn id(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no node '{name}'"))
+    }
+
+    /// Run to `output` with the same memoized-dependency semantics as
+    /// [`Graph::run`]; results are byte-identical to the naive path.
+    pub fn run(
+        &self,
+        output: &str,
+        feeds: &BTreeMap<String, Value>,
+        scratch: &mut Scratch,
+    ) -> Result<Value> {
+        let target = self.id(output)?;
+        let mut memo: Vec<Option<Value>> = (0..self.nodes.len()).map(|_| None).collect();
+        let edges: Vec<&[usize]> = self.nodes.iter().map(|n| n.inputs.as_slice()).collect();
+        let needed = super::graph::needed_mask(&edges, target);
+        for i in 0..=target {
+            if !needed[i] {
+                continue;
+            }
+            let node = &self.nodes[i];
+            let value = match &node.op {
+                PreparedOp::Input => feeds
+                    .get(&node.name)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("missing feed for input '{}'", node.name))?,
+                PreparedOp::Quantize(q) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_f32()?;
+                    Value::U8(q.quantize_tensor(x))
+                }
+                PreparedOp::Conv(layer) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    Value::U8(layer.forward(x, &self.kernel, scratch))
+                }
+                PreparedOp::Dense(layer) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    let out = layer.forward_codes(&x.data, &self.kernel);
+                    let n = out.len();
+                    Value::U8(Tensor::new(vec![n], out))
+                }
+                PreparedOp::DenseLogits(layer) => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    let out = layer.forward_logits(&x.data, &self.kernel);
+                    let n = out.len();
+                    Value::F32(Tensor::new(vec![n], out))
+                }
+                PreparedOp::MaxPool2 => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    Value::U8(maxpool2(x))
+                }
+                PreparedOp::Flatten => {
+                    let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
+                    let n = x.len();
+                    Value::U8(x.clone().reshape(vec![n]))
+                }
+            };
+            memo[i] = Some(value);
+        }
+        Ok(memo[target].take().unwrap())
+    }
+
+    /// Run a batch of independent feeds, fanning across `workers` scoped
+    /// threads (each with its own [`Scratch`]); results keep input order.
+    pub fn run_batch(
+        &self,
+        output: &str,
+        feeds: &[BTreeMap<String, Value>],
+        workers: usize,
+    ) -> Result<Vec<Value>> {
+        let workers = workers.max(1).min(feeds.len().max(1));
+        if workers == 1 {
+            let mut scratch = Scratch::default();
+            return feeds
+                .iter()
+                .map(|f| self.run(output, f, &mut scratch))
+                .collect();
+        }
+        let chunk = feeds.len().div_ceil(workers);
+        let results: Vec<Result<Vec<Value>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = feeds
+                .chunks(chunk)
+                .map(|part| {
+                    s.spawn(move || {
+                        let mut scratch = Scratch::default();
+                        part.iter()
+                            .map(|f| self.run(output, f, &mut scratch))
+                            .collect::<Result<Vec<Value>>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("batch worker panicked"))
+                .collect()
+        });
+        let mut out = Vec::with_capacity(feeds.len());
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+}
+
+impl Graph {
+    /// Build the prepared (im2col + LUT-GEMM) execution plan for a
+    /// multiplier. Amortize this over many calls — preparation compacts
+    /// and transposes the 256x256 table and snapshots layer invariants.
+    pub fn prepare(&self, mul: &Multiplier) -> PreparedGraph {
+        PreparedGraph::new(self, mul)
+    }
+
+    /// Batched forward: prepare once, then fan `feeds` across `workers`
+    /// threads. Byte-identical to calling [`Graph::run`] per feed.
+    pub fn forward_batch(
+        &self,
+        output: &str,
+        feeds: &[BTreeMap<String, Value>],
+        mul: &Multiplier,
+        workers: usize,
+    ) -> Result<Vec<Value>> {
+        self.prepare(mul).run_batch(output, feeds, workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::mult::MultKind;
+    use crate::util::prng::Rng;
+
+    fn rand_conv(rng: &mut Rng, oc: usize, c: usize, kh: usize, kw: usize) -> QConv2d {
+        QConv2d {
+            name: "t".into(),
+            w: Tensor::new(
+                vec![oc, c, kh, kw],
+                (0..oc * c * kh * kw).map(|_| rng.below(256) as u8).collect(),
+            ),
+            bias: (0..oc).map(|_| rng.range_inclusive(-500, 500)).collect(),
+            x_q: QuantParams { scale: 0.02, zero_point: 7 },
+            w_q: QuantParams { scale: 0.004, zero_point: 131 },
+            out_q: QuantParams { scale: 0.05, zero_point: 3 },
+            relu: true,
+            w_sums_cache: Default::default(),
+        }
+    }
+
+    #[test]
+    fn conv_gemm_matches_naive_exact_and_lut() {
+        let mut rng = Rng::new(5);
+        let layer = rand_conv(&mut rng, 4, 2, 3, 3);
+        let x = Tensor::new(
+            vec![2, 7, 8],
+            (0..2 * 7 * 8).map(|_| rng.below(256) as u8).collect(),
+        );
+        let prepared = PreparedConv::new(&layer);
+        let mut scratch = Scratch::default();
+        for mul in [
+            Multiplier::Exact,
+            Multiplier::Lut(Arc::new(MultKind::Wallace.lut())),
+        ] {
+            let naive = layer.forward(&x, &mul, None);
+            let kernel = Kernel::prepare(&mul);
+            let fast = prepared.forward(&x, &kernel, &mut scratch);
+            assert_eq!(naive, fast, "kernel {}", kernel.label());
+        }
+    }
+
+    #[test]
+    fn dense_gemv_matches_naive() {
+        let mut rng = Rng::new(6);
+        let layer = QDense {
+            name: "fc".into(),
+            w: Tensor::new(vec![5, 37], (0..5 * 37).map(|_| rng.below(256) as u8).collect()),
+            bias: (0..5).map(|_| rng.range_inclusive(-100, 100)).collect(),
+            x_q: QuantParams { scale: 0.01, zero_point: 4 },
+            w_q: QuantParams { scale: 0.006, zero_point: 120 },
+            out_q: QuantParams { scale: 0.03, zero_point: 9 },
+            relu: false,
+            w_sums_cache: Default::default(),
+        };
+        let x: Vec<u8> = (0..37).map(|_| rng.below(256) as u8).collect();
+        let prepared = PreparedDense::new(&layer);
+        let mul = Multiplier::Lut(Arc::new(Lut::exact()));
+        let kernel = Kernel::prepare(&mul);
+        assert_eq!(layer.forward(&x, &mul, None), prepared.forward_codes(&x, &kernel));
+        assert_eq!(
+            layer.forward_f32(&x, &mul, None),
+            prepared.forward_logits(&x, &kernel)
+        );
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(7);
+        let (n, k, m_dim) = (9usize, 21usize, 6usize);
+        let x = Tensor::new(vec![n, k], (0..n * k).map(|_| rng.below(256) as u8).collect());
+        let w = Tensor::new(
+            vec![k, m_dim],
+            (0..k * m_dim).map(|_| rng.below(256) as u8).collect(),
+        );
+        let x_q = QuantParams { scale: 0.015, zero_point: 2 };
+        let w_q = QuantParams { scale: 0.007, zero_point: 126 };
+        let mul = Multiplier::Exact;
+        let naive = super::super::ops::qmatmul_f32(&x, &w, x_q, w_q, &mul, None, "t");
+        let prepared = PreparedMatmul::new("t", &w, x_q, w_q);
+        let mut scratch = Scratch::default();
+        let fast = prepared.forward(&x, &Kernel::prepare(&mul), &mut scratch);
+        assert_eq!(naive, fast);
+    }
+
+    #[test]
+    fn batch_equals_serial_and_any_worker_count() {
+        // hw=20 is the smallest comfortable LeNet geometry: 20 -> conv1 16
+        // -> pool 8 -> conv2 4 -> pool 2 -> flatten 64.
+        let bundle = crate::nn::lenet::random_bundle(1, 20, 9);
+        let graph = crate::nn::lenet::load_graph(&bundle).unwrap();
+        let mul = Multiplier::Exact;
+        let mut rng = Rng::new(11);
+        let feeds: Vec<BTreeMap<String, Value>> = (0..6)
+            .map(|_| {
+                let img: Vec<f32> = (0..20 * 20).map(|_| rng.f32()).collect();
+                let mut f = BTreeMap::new();
+                f.insert(
+                    "image".to_string(),
+                    Value::F32(Tensor::new(vec![1, 20, 20], img)),
+                );
+                f
+            })
+            .collect();
+        let serial: Vec<Vec<f32>> = feeds
+            .iter()
+            .map(|f| {
+                graph
+                    .run("fc3", f, &mul, None)
+                    .unwrap()
+                    .as_f32()
+                    .unwrap()
+                    .data
+                    .clone()
+            })
+            .collect();
+        for workers in [1usize, 2, 3] {
+            let batched = graph.forward_batch("fc3", &feeds, &mul, workers).unwrap();
+            assert_eq!(batched.len(), feeds.len());
+            for (b, s) in batched.iter().zip(&serial) {
+                assert_eq!(&b.as_f32().unwrap().data, s, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn strip_blocking_covers_ragged_sizes() {
+        // n deliberately not a multiple of N_BLOCK, k not of 4.
+        let kernel = Kernel::from_lut(&Lut::exact());
+        let (n, k, m) = (N_BLOCK + 37, 13usize, 3usize);
+        let mut rng = Rng::new(13);
+        let xt: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let mut raw = vec![0i64; m * n];
+        gemm_raw(&kernel, &xt, n, k, &w, m, &mut raw);
+        for mi in 0..m {
+            for p in 0..n {
+                let expect: i64 = (0..k)
+                    .map(|ki| xt[ki * n + p] as i64 * w[mi * k + ki] as i64)
+                    .sum();
+                assert_eq!(raw[mi * n + p], expect, "({mi},{p})");
+            }
+        }
+    }
+}

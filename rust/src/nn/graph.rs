@@ -4,7 +4,10 @@
 //! computes its transitive dependencies automatically and memoizes values,
 //! mirroring the paper's toolbox ("when a node in the DAG is run, the
 //! dependencies of the node will be computed automatically"). Inference is
-//! `graph.run(output, feeds)`.
+//! `graph.run(output, feeds)` for the stats-capable reference path, or
+//! `graph.prepare(mul)` / `graph.forward_batch(..)` (defined in
+//! [`super::gemm`]) for the batched im2col + LUT-GEMM serving path —
+//! byte-identical outputs, prepared-layer caches, multi-threaded fan-out.
 
 use std::collections::BTreeMap;
 
@@ -75,6 +78,23 @@ pub struct Graph {
     by_name: BTreeMap<String, usize>,
 }
 
+/// Dependency mask for a forward sweep: `mask[i]` is true when node `i`
+/// is needed to produce `target`. Nodes only reference earlier nodes, so
+/// one reverse pass suffices. Shared by the naive walker here and the
+/// prepared walker in [`super::gemm`].
+pub(crate) fn needed_mask(edges: &[&[usize]], target: usize) -> Vec<bool> {
+    let mut needed = vec![false; edges.len()];
+    needed[target] = true;
+    for i in (0..=target).rev() {
+        if needed[i] {
+            for &d in edges[i] {
+                needed[d] = true;
+            }
+        }
+    }
+    needed
+}
+
 impl Graph {
     /// Empty graph.
     pub fn new() -> Self {
@@ -123,17 +143,9 @@ impl Graph {
     ) -> Result<Value> {
         let target = self.id(output)?;
         let mut memo: Vec<Option<Value>> = (0..self.nodes.len()).map(|_| None).collect();
-        // Nodes only reference earlier nodes, so a forward sweep up to the
-        // target suffices; skip nodes the target doesn't need.
-        let mut needed = vec![false; self.nodes.len()];
-        needed[target] = true;
-        for i in (0..=target).rev() {
-            if needed[i] {
-                for &d in &self.nodes[i].inputs {
-                    needed[d] = true;
-                }
-            }
-        }
+        // Forward sweep up to the target; skip nodes it doesn't need.
+        let edges: Vec<&[usize]> = self.nodes.iter().map(|n| n.inputs.as_slice()).collect();
+        let needed = needed_mask(&edges, target);
         for i in 0..=target {
             if !needed[i] {
                 continue;
@@ -213,6 +225,7 @@ mod tests {
             w_q: QuantParams { scale: 0.01, zero_point: 0 },
             out_q: QuantParams { scale: 0.01, zero_point: 0 },
             relu: false,
+            w_sums_cache: Default::default(),
         };
         g.add("logits", Op::DenseLogits(Box::new(dense)), &["flat"]).unwrap();
         g

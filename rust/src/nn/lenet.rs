@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::util::tensor_io::Bundle;
 
+use super::gemm::{PreparedGraph, Scratch};
 use super::graph::{Graph, Op, Value};
 use super::multiplier::Multiplier;
 use super::ops::{QConv2d, QDense};
@@ -42,6 +43,7 @@ fn load_conv(b: &Bundle, name: &str, relu: bool) -> Result<QConv2d> {
         w_q: qparams(b, name, "w")?,
         out_q: qparams(b, name, "out")?,
         relu,
+        w_sums_cache: Default::default(),
     })
 }
 
@@ -57,6 +59,7 @@ fn load_dense(b: &Bundle, name: &str, relu: bool) -> Result<QDense> {
         w_q: qparams(b, name, "w")?,
         out_q: qparams(b, name, "out")?,
         relu,
+        w_sums_cache: Default::default(),
     })
 }
 
@@ -100,6 +103,17 @@ pub fn load(path: impl AsRef<Path>) -> Result<Graph> {
     load_graph(&bundle).with_context(|| format!("loading LeNet from {}", path.as_ref().display()))
 }
 
+/// Build the feed map for one image.
+fn image_feed(image: &[f32], shape: (usize, usize, usize)) -> BTreeMap<String, Value> {
+    let (c, h, w) = shape;
+    let mut feeds = BTreeMap::new();
+    feeds.insert(
+        "image".to_string(),
+        Value::F32(Tensor::new(vec![c, h, w], image.to_vec())),
+    );
+    feeds
+}
+
 /// Classify one image (f32 CHW in [0,1]); returns (class, logits).
 pub fn classify(
     graph: &Graph,
@@ -108,18 +122,59 @@ pub fn classify(
     mul: &Multiplier,
     stats: Option<&mut StatsCollector>,
 ) -> Result<(usize, Vec<f32>)> {
-    let (c, h, w) = shape;
-    let mut feeds = BTreeMap::new();
-    feeds.insert(
-        "image".to_string(),
-        Value::F32(Tensor::new(vec![c, h, w], image.to_vec())),
-    );
+    let feeds = image_feed(image, shape);
     let out = graph.run("fc3", &feeds, mul, stats)?;
     let logits = out.as_f32()?.data.clone();
     Ok((super::ops::argmax(&logits), logits))
 }
 
+/// Classify one image through a prepared (LUT-GEMM) graph — the serving
+/// hot path; byte-identical to [`classify`].
+pub fn classify_prepared(
+    prepared: &PreparedGraph,
+    image: &[f32],
+    shape: (usize, usize, usize),
+    scratch: &mut Scratch,
+) -> Result<(usize, Vec<f32>)> {
+    let feeds = image_feed(image, shape);
+    let out = prepared.run("fc3", &feeds, scratch)?;
+    let logits = out.as_f32()?.data.clone();
+    Ok((super::ops::argmax(&logits), logits))
+}
+
+/// Classify a batch of images (flattened back-to-back), fanning across
+/// `workers` threads through one prepared graph. Returns (class, logits)
+/// per image, in input order.
+pub fn classify_batch(
+    graph: &Graph,
+    images: &[f32],
+    shape: (usize, usize, usize),
+    mul: &Multiplier,
+    workers: usize,
+) -> Result<Vec<(usize, Vec<f32>)>> {
+    let (c, h, w) = shape;
+    let sz = c * h * w;
+    anyhow::ensure!(
+        sz > 0 && images.len() % sz == 0,
+        "image buffer of {} values is not a multiple of {sz}",
+        images.len()
+    );
+    let feeds: Vec<BTreeMap<String, Value>> =
+        images.chunks_exact(sz).map(|img| image_feed(img, shape)).collect();
+    let outs = graph.forward_batch("fc3", &feeds, mul, workers)?;
+    outs.into_iter()
+        .map(|v| {
+            let logits = v.as_f32()?.data.clone();
+            Ok((super::ops::argmax(&logits), logits))
+        })
+        .collect()
+}
+
 /// Accuracy over (a prefix of) a dataset split.
+///
+/// With a stats collector attached this walks the naive reference path
+/// (stats capture is a calibration workload); without one it runs the
+/// prepared LUT-GEMM engine, which produces byte-identical predictions.
 pub fn accuracy(
     graph: &Graph,
     xs: &[f32],
@@ -133,6 +188,9 @@ pub fn accuracy(
     let sz = c * h * w;
     let n = ys.len().min(limit);
     anyhow::ensure!(n > 0, "empty evaluation set");
+    if stats.is_none() {
+        return accuracy_batched(graph, xs, ys, shape, mul, limit, 1);
+    }
     let mut correct = 0usize;
     for i in 0..n {
         let (pred, _) = classify(
@@ -146,6 +204,29 @@ pub fn accuracy(
             correct += 1;
         }
     }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Accuracy through the batched LUT-GEMM path with a worker pool.
+pub fn accuracy_batched(
+    graph: &Graph,
+    xs: &[f32],
+    ys: &[u8],
+    shape: (usize, usize, usize),
+    mul: &Multiplier,
+    limit: usize,
+    workers: usize,
+) -> Result<f64> {
+    let (c, h, w) = shape;
+    let sz = c * h * w;
+    let n = ys.len().min(limit);
+    anyhow::ensure!(n > 0, "empty evaluation set");
+    let preds = classify_batch(graph, &xs[..n * sz], shape, mul, workers)?;
+    let correct = preds
+        .iter()
+        .zip(ys)
+        .filter(|((pred, _), &y)| *pred == y as usize)
+        .count();
     Ok(correct as f64 / n as f64)
 }
 
@@ -251,6 +332,29 @@ mod tests {
         .unwrap();
         // Untrained: accuracy should be far from perfect (chance-ish).
         assert!(acc < 0.6, "untrained accuracy {acc}");
+    }
+
+    #[test]
+    fn batched_classify_matches_serial() {
+        let bundle = random_bundle(1, 28, 6);
+        let g = load_graph(&bundle).unwrap();
+        let mut rng = crate::util::prng::Rng::new(2);
+        let sz = 28 * 28;
+        let images: Vec<f32> = (0..4 * sz).map(|_| rng.f32()).collect();
+        let batched = classify_batch(&g, &images, (1, 28, 28), &Multiplier::Exact, 2).unwrap();
+        assert_eq!(batched.len(), 4);
+        for i in 0..4 {
+            let (pred, logits) = classify(
+                &g,
+                &images[i * sz..(i + 1) * sz],
+                (1, 28, 28),
+                &Multiplier::Exact,
+                None,
+            )
+            .unwrap();
+            assert_eq!(batched[i].0, pred, "image {i}");
+            assert_eq!(batched[i].1, logits, "image {i}");
+        }
     }
 
     #[test]

@@ -12,8 +12,15 @@
 //! (Fig. 1) — the distributions the optimizer consumes. [`lenet`] and
 //! [`gcn`] build the two model architectures of the paper's evaluation;
 //! weights come from the python training pipeline via tensor bundles.
+//!
+//! [`gemm`] is the serving-grade hot path: a batched im2col + LUT-GEMM
+//! core over cache-compact transposed tables with per-layer invariants
+//! prepared at graph-load time. It is byte-identical to the naive operator
+//! loops (enforced by property tests) and backs `Graph::forward_batch`,
+//! the batched accuracy sweeps, and the coordinator's native workers.
 
 pub mod gcn;
+pub mod gemm;
 pub mod graph;
 pub mod lenet;
 pub mod multiplier;

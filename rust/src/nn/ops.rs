@@ -10,12 +10,111 @@
 //! and the engine replaces `Σ qx qw` with `Σ mul(qx, qw)` where `mul` is
 //! the pluggable (possibly approximate) multiplier — precisely the paper's
 //! evaluation semantics. Accumulation is i64; requantization multiplies by
-//! `M = sx sw / so` in f32 and re-centers on the output zero point.
+//! the fixed-point form of `M = sx sw / so` ([`Requant`]: i64 multiply +
+//! rounding right-shift — deterministic, exact to the last integer bit,
+//! and shared verbatim by the naive reference loops here and the
+//! [`super::gemm`] LUT-GEMM core, which is what makes the two paths
+//! byte-identical) and re-centers on the output zero point.
+//!
+//! Per-output-channel weight sums (the `zx Σ qw` correction term) are
+//! layer invariants; they are computed once per layer and memoized in a
+//! `OnceLock` instead of being rebuilt on every forward call.
+
+use std::sync::OnceLock;
 
 use super::multiplier::Multiplier;
 use super::quant::QuantParams;
 use super::stats::StatsCollector;
 use super::tensor::Tensor;
+
+/// Fixed-point requantization: `round(acc * M) + zo` computed as an i64
+/// multiply plus a rounding right-shift (round half away from zero), with
+/// `M = mult * 2^-shift` and `mult` a 31-bit significand. This is the
+/// Jacob et al. / gemmlowp scheme: deterministic across platforms and free
+/// of the f32 precision loss the old `acc as f32 * m` form suffered for
+/// accumulators above 2^24.
+#[derive(Clone, Copy, Debug)]
+pub struct Requant {
+    /// 31-bit fixed-point significand of M.
+    pub mult: i64,
+    /// Right-shift applied after the multiply.
+    pub shift: u32,
+    /// Output zero point.
+    pub zo: i32,
+    /// Fold ReLU into the clamp (floor at `zo`).
+    pub relu: bool,
+}
+
+impl Requant {
+    /// Build from the real-valued scale `m = sx*sw/so`.
+    pub fn new(m: f64, zo: i32, relu: bool) -> Self {
+        assert!(m.is_finite() && m > 0.0, "requant scale must be positive, got {m}");
+        // Normalize m = frac * 2^exp with frac in [0.5, 1). Doubling and
+        // halving are exact in f64, so this loop is lossless.
+        let mut frac = m;
+        let mut exp = 0i32;
+        while frac < 0.5 {
+            frac *= 2.0;
+            exp -= 1;
+        }
+        while frac >= 1.0 {
+            frac *= 0.5;
+            exp += 1;
+        }
+        let mut mult = (frac * (1i64 << 31) as f64).round() as i64;
+        if mult == 1i64 << 31 {
+            mult >>= 1;
+            exp += 1;
+        }
+        let mut shift = 31 - exp;
+        // Degenerate scales: keep the shift in [0, 62] so the rounding
+        // offset below stays a valid i64; trade significand bits instead.
+        while shift > 62 {
+            mult = (mult + 1) >> 1;
+            shift -= 1;
+        }
+        while shift < 0 && mult <= i64::MAX / 2 {
+            mult <<= 1;
+            shift += 1;
+        }
+        Self {
+            mult,
+            shift: shift.max(0) as u32,
+            zo,
+            relu,
+        }
+    }
+
+    /// Build for a layer: `M = x.scale * w.scale / out.scale`, zero point
+    /// and ReLU from the output side.
+    pub fn for_layer(x_q: QuantParams, w_q: QuantParams, out_q: QuantParams, relu: bool) -> Self {
+        let m = x_q.scale as f64 * w_q.scale as f64 / out_q.scale as f64;
+        Self::new(m, out_q.zero_point, relu)
+    }
+
+    /// Requantize an accumulator to a u8 code.
+    #[inline(always)]
+    pub fn apply(&self, acc: i64) -> u8 {
+        // The widening to i128 makes the multiply overflow-free for every
+        // representable accumulator (|acc| * mult < 2^63 only holds for
+        // |acc| < 2^32; layers are unbounded in principle).
+        let prod = acc as i128 * self.mult as i128;
+        let scaled = if self.shift == 0 {
+            prod
+        } else {
+            let half = 1i128 << (self.shift - 1);
+            if prod >= 0 {
+                (prod + half) >> self.shift
+            } else {
+                -((-prod + half) >> self.shift)
+            }
+        };
+        let v = scaled.clamp(i64::MIN as i128, i64::MAX as i128) as i64;
+        let v = v.saturating_add(self.zo as i64);
+        let v = if self.relu { v.max(self.zo as i64) } else { v };
+        v.clamp(0, 255) as u8
+    }
+}
 
 /// A quantized 2D convolution layer (valid padding, stride 1, NCHW).
 #[derive(Clone, Debug)]
@@ -30,9 +129,20 @@ pub struct QConv2d {
     pub out_q: QuantParams,
     /// Fold ReLU into requantization.
     pub relu: bool,
+    /// Lazily-computed per-output-channel weight sums (layer invariant).
+    pub w_sums_cache: OnceLock<Vec<i64>>,
 }
 
 impl QConv2d {
+    /// Per-output-channel weight sums (for the zx correction), computed
+    /// once per layer and cached.
+    pub fn w_sums(&self) -> &[i64] {
+        self.w_sums_cache.get_or_init(|| {
+            let ksz = self.w.dim(1) * self.w.dim(2) * self.w.dim(3);
+            row_sums(&self.w.data, self.w.dim(0), ksz)
+        })
+    }
+
     /// Forward on a single image [C, H, W] of codes.
     pub fn forward(
         &self,
@@ -47,19 +157,9 @@ impl QConv2d {
         let zx = self.x_q.zero_point as i64;
         let zw = self.w_q.zero_point as i64;
         let n = (c * kh * kw) as i64;
-        let m = (self.x_q.scale as f64 * self.w_q.scale as f64 / self.out_q.scale as f64) as f32;
-        let zo = self.out_q.zero_point;
-
-        // Per-output-channel weight sums (for the zx correction).
+        let rq = Requant::for_layer(self.x_q, self.w_q, self.out_q, self.relu);
         let ksz = c * kh * kw;
-        let w_sums: Vec<i64> = (0..oc)
-            .map(|o| {
-                self.w.data[o * ksz..(o + 1) * ksz]
-                    .iter()
-                    .map(|&v| v as i64)
-                    .sum()
-            })
-            .collect();
+        let w_sums = self.w_sums();
 
         let mut out = Tensor::zeros(vec![oc, oh, ow]);
         // Gather the input window once per output position; reuse across
@@ -84,8 +184,7 @@ impl QConv2d {
                     let wrow = &self.w.data[o * ksz..(o + 1) * ksz];
                     let prod = mul.dot(&window, wrow);
                     let acc = prod - zw * x_sum - zx * w_sums[o] + n * zx * zw + self.bias[o];
-                    let code = requant(acc, m, zo, self.relu);
-                    out.data[o * oh * ow + oy * ow + ox] = code;
+                    out.data[o * oh * ow + oy * ow + ox] = rq.apply(acc);
                 }
             }
         }
@@ -115,9 +214,18 @@ pub struct QDense {
     pub w_q: QuantParams,
     pub out_q: QuantParams,
     pub relu: bool,
+    /// Lazily-computed per-row weight sums (layer invariant).
+    pub w_sums_cache: OnceLock<Vec<i64>>,
 }
 
 impl QDense {
+    /// Per-row weight sums, computed once per layer and cached (they were
+    /// recomputed on every inference call before the prepared-layer cache).
+    pub fn w_sums(&self) -> &[i64] {
+        self.w_sums_cache
+            .get_or_init(|| row_sums(&self.w.data, self.w.dim(0), self.w.dim(1)))
+    }
+
     /// Forward on a flat input of codes [IN].
     pub fn forward(
         &self,
@@ -130,16 +238,15 @@ impl QDense {
         let zx = self.x_q.zero_point as i64;
         let zw = self.w_q.zero_point as i64;
         let n = in_n as i64;
-        let m = (self.x_q.scale as f64 * self.w_q.scale as f64 / self.out_q.scale as f64) as f32;
-        let zo = self.out_q.zero_point;
+        let rq = Requant::for_layer(self.x_q, self.w_q, self.out_q, self.relu);
         let x_sum: i64 = x.iter().map(|&v| v as i64).sum();
+        let w_sums = self.w_sums();
         let mut out = vec![0u8; out_n];
         for o in 0..out_n {
             let wrow = &self.w.data[o * in_n..(o + 1) * in_n];
-            let w_sum: i64 = wrow.iter().map(|&v| v as i64).sum();
             let prod = mul.dot(x, wrow);
-            let acc = prod - zw * x_sum - zx * w_sum + n * zx * zw + self.bias[o];
-            out[o] = requant(acc, m, zo, self.relu);
+            let acc = prod - zw * x_sum - zx * w_sums[o] + n * zx * zw + self.bias[o];
+            out[o] = rq.apply(acc);
         }
         if let Some(s) = stats.as_deref_mut() {
             s.record_inputs(&self.name, x);
@@ -162,12 +269,12 @@ impl QDense {
         let n = in_n as i64;
         let s_acc = self.x_q.scale * self.w_q.scale;
         let x_sum: i64 = x.iter().map(|&v| v as i64).sum();
+        let w_sums = self.w_sums();
         let mut out = vec![0f32; out_n];
         for o in 0..out_n {
             let wrow = &self.w.data[o * in_n..(o + 1) * in_n];
-            let w_sum: i64 = wrow.iter().map(|&v| v as i64).sum();
             let prod = mul.dot(x, wrow);
-            let acc = prod - zw * x_sum - zx * w_sum + n * zx * zw + self.bias[o];
+            let acc = prod - zw * x_sum - zx * w_sums[o] + n * zx * zw + self.bias[o];
             out[o] = acc as f32 * s_acc;
         }
         if let Some(s) = stats.as_deref_mut() {
@@ -183,12 +290,13 @@ impl QDense {
     }
 }
 
-/// Requantize an accumulator to a u8 code.
-#[inline(always)]
-pub fn requant(acc: i64, m: f32, zo: i32, relu: bool) -> u8 {
-    let v = (acc as f32 * m).round() as i32 + zo;
-    let v = if relu { v.max(zo) } else { v };
-    v.clamp(0, 255) as u8
+/// Per-row sums of a row-major u8 code matrix, widened to i64 — the
+/// layer-invariant `Σ qw` correction term shared by conv, dense and the
+/// prepared matmul.
+pub fn row_sums(data: &[u8], rows: usize, cols: usize) -> Vec<i64> {
+    (0..rows)
+        .map(|r| data[r * cols..(r + 1) * cols].iter().map(|&v| v as i64).sum())
+        .collect()
 }
 
 /// 2x2 max pooling with stride 2 on codes (monotone in the dequantized
@@ -233,6 +341,12 @@ pub fn argmax(v: &[f32]) -> usize {
 
 /// Quantized matrix multiply: X [N, K] codes times W [K, M] codes into
 /// f32 reals (used by the GCN, whose adjacency propagation is f32).
+///
+/// This is the stats-capable reference path; it re-derives the transposed
+/// weights and column sums on every call. Steady-state inference should go
+/// through [`super::gemm::PreparedMatmul`], which hoists both into the
+/// prepared-layer cache and runs the blocked LUT-GEMM kernel (the GCN does
+/// so automatically when no stats collector is attached).
 #[allow(clippy::too_many_arguments)]
 pub fn qmatmul_f32(
     x: &Tensor<u8>,
@@ -347,6 +461,7 @@ mod tests {
             w_q,
             out_q,
             relu: true,
+            w_sums_cache: OnceLock::new(),
         };
         let x_codes = Tensor::new(vec![c, h, w], xf.iter().map(|&v| x_q.quantize(v)).collect());
         let out = layer.forward(&x_codes, &Multiplier::Exact, None);
@@ -374,12 +489,82 @@ mod tests {
             w_q: q(0.005, 128),
             out_q: q(0.05, 10),
             relu: false,
+            w_sums_cache: OnceLock::new(),
         };
         let x: Vec<u8> = (0..in_n).map(|_| rng.below(256) as u8).collect();
         let exact = layer.forward(&x, &Multiplier::Exact, None);
         let lut = Multiplier::Lut(std::sync::Arc::new(crate::mult::MultKind::Wallace.lut()));
         let via_lut = layer.forward(&x, &lut, None);
         assert_eq!(exact, via_lut);
+    }
+
+    #[test]
+    fn requant_fixed_point_tracks_real_scale() {
+        // The fixed-point form must agree with the real-valued rounding to
+        // within one output code across magnitudes well past 2^24 (where
+        // the old f32 form lost integer precision).
+        let mut rng = crate::util::prng::Rng::new(17);
+        for _ in 0..500 {
+            let m = 2e-6 + rng.f64() * 0.2;
+            let zo = rng.below(200) as i32;
+            let acc = rng.range_inclusive(-(1 << 40), 1 << 40);
+            let rq = Requant::new(m, zo, false);
+            let got = rq.apply(acc) as i64;
+            let real = ((acc as f64 * m).round() as i64 + zo as i64).clamp(0, 255);
+            assert!(
+                (got - real).abs() <= 1,
+                "m={m} acc={acc} got {got} real {real}"
+            );
+        }
+    }
+
+    #[test]
+    fn requant_exact_for_power_of_two_scales() {
+        // Powers of two are exactly representable: results must match the
+        // real computation bit-for-bit (round half away from zero).
+        let rq = Requant::new(1.0 / 64.0, 10, false);
+        for acc in [-1000i64, -96, -32, -31, 0, 31, 32, 96, 640, 10_000] {
+            let real = ((acc as f64 / 64.0).round() as i64 + 10).clamp(0, 255);
+            assert_eq!(rq.apply(acc) as i64, real, "acc={acc}");
+        }
+    }
+
+    #[test]
+    fn requant_is_deterministic_above_f32_precision() {
+        // Above 2^24 consecutive integers stop being representable in
+        // f32; the fixed-point path must keep resolving single-step
+        // accumulator differences exactly. With M = 1/64 and the zero
+        // point pulling the result into code range, acc = 2^26 + 64k must
+        // map to code k for every k.
+        let rq = Requant::new(1.0 / 64.0, -(1 << 20), false);
+        for k in [0i64, 1, 2, 100, 254, 255] {
+            assert_eq!(rq.apply((1 << 26) + 64 * k) as i64, k, "k={k}");
+        }
+        // An exact half step rounds away from zero.
+        assert_eq!(rq.apply((1 << 26) + 32), 1);
+        assert_eq!(rq.apply((1 << 26) + 31), 0);
+        // Far outside the code range the result saturates cleanly.
+        assert_eq!(rq.apply(1 << 40), 255);
+        assert_eq!(rq.apply(-(1 << 40)), 0);
+    }
+
+    #[test]
+    fn w_sums_cached_once_and_correct() {
+        let layer = QDense {
+            name: "fc".into(),
+            w: Tensor::new(vec![2, 3], vec![1, 2, 3, 10, 20, 30]),
+            bias: vec![0, 0],
+            x_q: q(0.01, 0),
+            w_q: q(0.01, 0),
+            out_q: q(0.01, 0),
+            relu: false,
+            w_sums_cache: OnceLock::new(),
+        };
+        assert_eq!(layer.w_sums(), &[6, 60]);
+        // Second call returns the same cached slice.
+        let p1 = layer.w_sums().as_ptr();
+        let p2 = layer.w_sums().as_ptr();
+        assert_eq!(p1, p2);
     }
 
     #[test]
@@ -431,6 +616,7 @@ mod tests {
             w_q: q(0.01, 128),
             out_q: q(0.01, 0),
             relu: false,
+            w_sums_cache: OnceLock::new(),
         };
         let mut stats = StatsCollector::new();
         layer.record_weights(&mut stats);

@@ -1,50 +1,11 @@
 //! The PJRT client wrapper and compiled-model handle.
-
-use std::path::Path;
-
-use anyhow::{Context, Result};
-
-/// A PJRT client (CPU in this environment).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
-    }
-
-    /// Platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO **text** artifact and compile it.
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Model> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-UTF8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let computation = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&computation)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Model {
-            exe,
-            name: path.display().to_string(),
-        })
-    }
-}
-
-/// One compiled executable.
-pub struct Model {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+//!
+//! The real implementation rides on the external `xla` crate, which the
+//! offline registry snapshot does not carry — it is compiled only under
+//! the `pjrt` cargo feature (see Cargo.toml). Without the feature this
+//! module provides an API-identical stub whose constructor reports PJRT
+//! as unavailable, so the coordinator falls back to the native ApproxFlow
+//! backend and the rest of the crate builds unchanged.
 
 /// An input tensor for [`Model::execute`].
 pub struct Input<'a> {
@@ -52,39 +13,139 @@ pub struct Input<'a> {
     pub dims: &'a [i64],
 }
 
-impl Model {
-    /// Execute with f32 inputs; returns the flattened f32 outputs of the
-    /// (single-element) result tuple, plus their dimensions.
-    ///
-    /// The AOT convention (see `python/compile/aot.py`): every exported
-    /// computation takes f32 tensors and returns a 1-tuple of one f32
-    /// tensor — quantization happens inside the graph, and LUT values fit
-    /// f32 exactly (|v| < 2^24).
-    pub fn execute(&self, inputs: &[Input]) -> Result<(Vec<f32>, Vec<usize>)> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| -> Result<xla::Literal> {
-                let lit = xla::Literal::vec1(inp.data);
-                Ok(lit.reshape(inp.dims).context("reshaping input literal")?)
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    use super::Input;
+
+    /// A PJRT client (CPU in this environment).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO **text** artifact and compile it.
+        pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Model> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-UTF8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let computation = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&computation)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Model {
+                exe,
+                name: path.display().to_string(),
             })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let inner = out.to_tuple1().context("unwrapping result tuple")?;
-        let shape = inner.array_shape().context("result shape")?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let values = inner.to_vec::<f32>().context("downloading result")?;
-        Ok((values, dims))
+        }
+    }
+
+    /// One compiled executable.
+    pub struct Model {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Model {
+        /// Execute with f32 inputs; returns the flattened f32 outputs of the
+        /// (single-element) result tuple, plus their dimensions.
+        ///
+        /// The AOT convention (see `python/compile/aot.py`): every exported
+        /// computation takes f32 tensors and returns a 1-tuple of one f32
+        /// tensor — quantization happens inside the graph, and LUT values fit
+        /// f32 exactly (|v| < 2^24).
+        pub fn execute(&self, inputs: &[Input]) -> Result<(Vec<f32>, Vec<usize>)> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|inp| -> Result<xla::Literal> {
+                    let lit = xla::Literal::vec1(inp.data);
+                    Ok(lit.reshape(inp.dims).context("reshaping input literal")?)
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let inner = out.to_tuple1().context("unwrapping result tuple")?;
+            let shape = inner.array_shape().context("result shape")?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let values = inner.to_vec::<f32>().context("downloading result")?;
+            Ok((values, dims))
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::Input;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `pjrt` cargo \
+                               feature (the external `xla` crate is absent from the offline \
+                               snapshot); use the native ApproxFlow backend instead";
+
+    /// Stub PJRT client: construction always fails with a clear message.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        /// Always errors — PJRT is compiled out.
+        pub fn cpu() -> Result<Self> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        /// Platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Unreachable in practice (no `Runtime` can be constructed).
+        pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Model> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Stub compiled-model handle.
+    pub struct Model {
+        pub name: String,
+    }
+
+    impl Model {
+        /// Unreachable in practice (no `Model` can be constructed).
+        pub fn execute(&self, _inputs: &[Input]) -> Result<(Vec<f32>, Vec<usize>)> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+}
+
+pub use imp::{Model, Runtime};
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     //! Runtime tests against a known-good HLO artifact. The reference
     //! artifact from /opt/xla-example is used when the repo artifacts have
@@ -132,5 +193,19 @@ mod tests {
     fn missing_file_is_clean_error() {
         let rt = Runtime::cpu().unwrap();
         assert!(rt.load_hlo_text("/nonexistent/model.hlo.txt").is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable_cleanly() {
+        let err = match Runtime::cpu() {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("stub Runtime must not construct"),
+        };
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

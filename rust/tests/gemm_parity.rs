@@ -1,0 +1,228 @@
+//! Naive-vs-GEMM bit-exactness property suite.
+//!
+//! The im2col + LUT-GEMM core (`nn::gemm`) reorders integer summation,
+//! compacts the multiplier table to 16 bits, and hoists layer invariants —
+//! none of which may change a single output code. These properties drive
+//! random shapes, batch sizes, zero points, scales, biases, and
+//! multipliers (exact, the Wallace-tree LUT, HEAM, and the signed OU L.1
+//! design) through both paths and demand byte-identical codes / bit-
+//! identical logits, plus the compact-table vs i32-table equivalence.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use heam::mult::{Lut, MultKind};
+use heam::nn::gemm::{dot_raw, Kernel, PreparedConv, PreparedDense, PreparedMatmul, Scratch};
+use heam::nn::graph::Value;
+use heam::nn::multiplier::Multiplier;
+use heam::nn::ops::{qmatmul_f32, QConv2d, QDense};
+use heam::nn::quant::QuantParams;
+use heam::nn::tensor::Tensor;
+use heam::util::propcheck::{check, Config, Gen};
+
+/// The multiplier set the paper's pipeline actually exercises: exact, an
+/// exact LUT (Wallace tree), the HEAM design, and a *signed* LUT (OU L.1
+/// goes negative) so the i16/biased-u16 compact modes are both covered.
+fn multipliers() -> Vec<Multiplier> {
+    vec![
+        Multiplier::Exact,
+        Multiplier::Lut(Arc::new(MultKind::Wallace.lut())),
+        Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+        Multiplier::Lut(Arc::new(MultKind::OuL1.lut())),
+    ]
+}
+
+fn gen_quant(g: &mut Gen) -> QuantParams {
+    QuantParams {
+        scale: g.f64_range(1e-3, 0.05) as f32,
+        zero_point: g.i64_range(0, 255) as i32,
+    }
+}
+
+fn gen_codes(g: &mut Gen, n: usize) -> Vec<u8> {
+    (0..n).map(|_| g.u8()).collect()
+}
+
+#[test]
+fn conv_gemm_bit_exact_over_shapes_and_multipliers() {
+    let muls = multipliers();
+    check(Config::default().cases(20).seed(101), "conv naive==gemm", |g| {
+        let c = g.usize_range(1, 3);
+        let kh = g.usize_range(1, 3);
+        let kw = g.usize_range(1, 3);
+        let h = kh + g.usize_range(0, 5);
+        let w = kw + g.usize_range(0, 5);
+        let oc = g.usize_range(1, 4);
+        let layer = QConv2d {
+            name: "p".into(),
+            w: Tensor::new(vec![oc, c, kh, kw], gen_codes(g, oc * c * kh * kw)),
+            bias: (0..oc).map(|_| g.i64_range(-2000, 2000)).collect(),
+            x_q: gen_quant(g),
+            w_q: gen_quant(g),
+            out_q: gen_quant(g),
+            relu: g.bool(),
+            w_sums_cache: Default::default(),
+        };
+        let x = Tensor::new(vec![c, h, w], gen_codes(g, c * h * w));
+        let prepared = PreparedConv::new(&layer);
+        let mut scratch = Scratch::default();
+        for mul in &muls {
+            let naive = layer.forward(&x, mul, None);
+            let fast = prepared.forward(&x, &Kernel::prepare(mul), &mut scratch);
+            assert_eq!(naive, fast, "mul={} shape c={c} {h}x{w} k={kh}x{kw} oc={oc}", mul.label());
+        }
+    });
+}
+
+#[test]
+fn dense_gemv_bit_exact_over_shapes_and_multipliers() {
+    let muls = multipliers();
+    check(Config::default().cases(24).seed(102), "dense naive==gemm", |g| {
+        let in_n = g.usize_range(1, 64);
+        let out_n = g.usize_range(1, 8);
+        let layer = QDense {
+            name: "p".into(),
+            w: Tensor::new(vec![out_n, in_n], gen_codes(g, out_n * in_n)),
+            bias: (0..out_n).map(|_| g.i64_range(-2000, 2000)).collect(),
+            x_q: gen_quant(g),
+            w_q: gen_quant(g),
+            out_q: gen_quant(g),
+            relu: g.bool(),
+            w_sums_cache: Default::default(),
+        };
+        let x = gen_codes(g, in_n);
+        let prepared = PreparedDense::new(&layer);
+        for mul in &muls {
+            let kernel = Kernel::prepare(mul);
+            assert_eq!(
+                layer.forward(&x, mul, None),
+                prepared.forward_codes(&x, &kernel),
+                "codes, mul={}",
+                mul.label()
+            );
+            // f32 logits must be bit-identical too (same integer acc, same
+            // final f32 expression).
+            assert_eq!(
+                layer.forward_f32(&x, mul, None),
+                prepared.forward_logits(&x, &kernel),
+                "logits, mul={}",
+                mul.label()
+            );
+        }
+    });
+}
+
+#[test]
+fn matmul_bit_exact_over_shapes_and_multipliers() {
+    let muls = multipliers();
+    check(Config::default().cases(16).seed(103), "matmul naive==gemm", |g| {
+        let n = g.usize_range(1, 20);
+        let k = g.usize_range(1, 24);
+        let m = g.usize_range(1, 7);
+        let x = Tensor::new(vec![n, k], gen_codes(g, n * k));
+        let w = Tensor::new(vec![k, m], gen_codes(g, k * m));
+        let x_q = gen_quant(g);
+        let w_q = gen_quant(g);
+        let prepared = PreparedMatmul::new("p", &w, x_q, w_q);
+        let mut scratch = Scratch::default();
+        for mul in &muls {
+            let naive = qmatmul_f32(&x, &w, x_q, w_q, mul, None, "p");
+            let fast = prepared.forward(&x, &Kernel::prepare(mul), &mut scratch);
+            assert_eq!(naive, fast, "mul={} n={n} k={k} m={m}", mul.label());
+        }
+    });
+}
+
+#[test]
+fn forward_batch_bit_exact_any_batch_size_and_worker_count() {
+    // Whole-graph parity: a random LeNet, random batch sizes, random
+    // worker counts — threaded fan-out must be invisible in the output.
+    let bundle = heam::nn::lenet::random_bundle(1, 20, 77);
+    let graph = heam::nn::lenet::load_graph(&bundle).unwrap();
+    let muls = [
+        Multiplier::Exact,
+        Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+    ];
+    check(Config::default().cases(6).seed(104), "batch==serial", |g| {
+        let batch = g.usize_range(1, 5);
+        let workers = g.usize_range(1, 4);
+        let feeds: Vec<BTreeMap<String, Value>> = (0..batch)
+            .map(|_| {
+                let img: Vec<f32> =
+                    (0..20 * 20).map(|_| g.f64_range(0.0, 1.0) as f32).collect();
+                let mut f = BTreeMap::new();
+                f.insert(
+                    "image".to_string(),
+                    Value::F32(Tensor::new(vec![1, 20, 20], img)),
+                );
+                f
+            })
+            .collect();
+        for mul in &muls {
+            let serial: Vec<Vec<f32>> = feeds
+                .iter()
+                .map(|f| {
+                    graph
+                        .run("fc3", f, mul, None)
+                        .unwrap()
+                        .as_f32()
+                        .unwrap()
+                        .data
+                        .clone()
+                })
+                .collect();
+            let batched = graph.forward_batch("fc3", &feeds, mul, workers).unwrap();
+            for (b, s) in batched.iter().zip(&serial) {
+                assert_eq!(
+                    &b.as_f32().unwrap().data,
+                    s,
+                    "mul={} batch={batch} workers={workers}",
+                    mul.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn compact_lut_equals_full_table_for_the_zoo() {
+    // The 16-bit compact representation must decode to the i32 table bit
+    // for bit on every operand pair, for every multiplier the paper
+    // compares (this is the satellite i16-vs-i32 equivalence check).
+    for kind in [MultKind::Wallace, MultKind::Heam, MultKind::OuL1, MultKind::CrC6] {
+        let lut = kind.lut();
+        let compact = lut.compact();
+        assert!(
+            compact.is_narrow(),
+            "{:?} should compact to 16-bit (range fits)",
+            kind
+        );
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                assert_eq!(
+                    compact.get(x as u8, y as u8),
+                    lut.get(x as u8, y as u8),
+                    "{kind:?} ({x},{y})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_kernel_decodes_like_the_multiplier() {
+    // dot_raw over the transposed kernel table == Multiplier::dot over the
+    // original orientation, including a wide-range synthetic table that
+    // forces the i32 fallback.
+    let mut g = Gen::new(9, 1.0);
+    let xs = gen_codes(&mut g, 333);
+    let ys = gen_codes(&mut g, 333);
+    for mul in multipliers() {
+        let kernel = Kernel::prepare(&mul);
+        assert_eq!(mul.dot(&xs, &ys), dot_raw(&kernel, &xs, &ys), "{}", mul.label());
+    }
+    let wide = Lut::from_fn("wide", |x, y| x as i64 * y as i64 * 40 - 2_000_000);
+    let mul = Multiplier::Lut(Arc::new(wide));
+    let kernel = Kernel::prepare(&mul);
+    assert_eq!(mul.dot(&xs, &ys), dot_raw(&kernel, &xs, &ys), "wide i32 fallback");
+}

@@ -1,0 +1,200 @@
+//! Offline stand-in for the `anyhow` error-handling crate.
+//!
+//! The build environment has no registry access, so this vendored path
+//! dependency provides the API subset the workspace actually uses:
+//! [`Error`], [`Result`], the [`Context`] trait (on `Result` and
+//! `Option`), and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror anyhow where they are observable here:
+//!
+//! * `Display` prints the outermost context only; the alternate form
+//!   (`{:#}`) prints the whole chain joined by `": "`.
+//! * `Debug` (what `unwrap()` shows) prints the outermost message plus a
+//!   `Caused by:` list.
+//! * Any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`, capturing its `source()` chain.
+
+use std::fmt;
+
+/// A context-carrying error. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From` below stays coherent —
+/// exactly the trick the real anyhow uses.
+pub struct Error {
+    /// Outermost context first; the last entry is the root cause.
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(&self.frames[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.frames[0])?;
+        if self.frames.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Self { frames }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment on fallible values.
+pub trait Context<T> {
+    /// Attach a context message to the error.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e = Error::msg("root").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.context("while exploding").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while exploding: boom");
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(v: i32) -> Result<i32> {
+            ensure!(v >= 0, "negative: {v}");
+            if v > 100 {
+                bail!("too big");
+            }
+            Err(anyhow!("just {} because", v))
+        }
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(200).unwrap_err()), "too big");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "just 5 because");
+    }
+}

@@ -1,15 +1,37 @@
 //! The paper's headline pipeline, end to end:
 //!
-//!   distributions (trained quantized LeNet) → GA on Eq. 6 → fine-tune
-//!   (OR-merge) → netlist → cost report → LUT → accuracy evaluation vs
-//!   every baseline multiplier.
+//!   distributions (trained quantized LeNet) → island GA on Eq. 6 →
+//!   fine-tune (OR-merge) → netlist → cost report → LUT → accuracy
+//!   evaluation vs every baseline multiplier.
 //!
 //! This is the Table I "HEAM column" generator. With artifacts present it
 //! uses the real extracted distributions and the trained model; without
 //! them it falls back to the synthetic Fig.1-shaped distributions and
 //! skips the accuracy section.
 //!
-//! Run: `cargo run --release --example optimize_multiplier`
+//! # Quickstart
+//!
+//! ```text
+//! cargo run --release --example optimize_multiplier
+//! ```
+//!
+//! The search runs 4 islands with fitness evaluation sharded across all
+//! cores; for a fixed seed the optimized design is byte-identical at any
+//! thread count. The equivalent CLI invocation exposes the knobs:
+//!
+//! ```text
+//! heam optimize --islands 4 --threads 0 \
+//!     --checkpoint artifacts/heam/ga_checkpoint.json
+//! ```
+//!
+//! * `--islands N`   — GA islands with ring migration of elites
+//! * `--threads N`   — fitness-eval worker threads (0 = all cores;
+//!                     changes wall-clock only, never the result)
+//! * `--checkpoint P`— JSON checkpoint: written every migration epoch,
+//!                     resumed automatically when the file exists
+//!
+//! A long search interrupted at generation G and re-launched with the
+//! same flags reproduces the uninterrupted run bit-for-bit.
 
 use std::sync::Arc;
 
@@ -35,15 +57,25 @@ fn main() -> anyhow::Result<()> {
         py.mode()
     );
 
-    // 2. GA.
+    // 2. Island GA (fitness sharded across all cores; the result is
+    //    thread-count-independent for a fixed seed).
     let space = opt::genome::GenomeSpace::new(8, 4);
     let objective = opt::Objective::new(space, &px, &py, 3000.0, 30.0);
     let config = GaConfig {
         population: 48,
         generations: 120,
+        islands: 4,
+        threads: 0, // all cores
         ..Default::default()
     };
-    println!("GA: {} genes, pop {}, {} generations ...", objective.space.len(), config.population, config.generations);
+    println!(
+        "GA: {} genes, pop {}, {} generations, {} islands, {} eval threads ...",
+        objective.space.len(),
+        config.population,
+        config.generations,
+        config.islands,
+        opt::resolve_threads(config.threads)
+    );
     let result = opt::ga::run(&objective, &config);
     println!("GA best fitness {:.4e} ({} evals)", result.best_fitness, result.evaluations);
     let ga_design = result.best.to_design(&objective.space);

@@ -1,0 +1,11 @@
+"""Make `compile` importable no matter where pytest is launched from.
+
+The CI gate runs `python -m pytest python/tests -q` from the repo root;
+without this shim the `compile` package only resolves when the cwd is
+`python/`.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

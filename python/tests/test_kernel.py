@@ -4,6 +4,8 @@ over shapes/tilings/LUT contents with hypothesis."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.lut_matmul import lut_matmul, vmem_footprint_bytes

@@ -1,6 +1,9 @@
 """Quantization helpers: python/rust semantic parity properties."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.quant import QuantParams, calibrate, calibrate_from, requant

@@ -1,6 +1,7 @@
-//! Fig. 4 + §II.C regeneration: the GA on Eq. 6 over the 8x8 compressed
-//! partial-product space, the fine-tune (OR-merge) pass, and the
-//! Mul1-vs-Mul2 ablation (with vs without distribution weighting).
+//! Fig. 4 + §II.C regeneration: the island GA on Eq. 6 over the 8x8
+//! compressed partial-product space, the fine-tune (OR-merge) pass, and
+//! the Mul1-vs-Mul2 ablation (with vs without distribution weighting).
+//! Convergence is reported per island and merged.
 //!
 //! Run: `cargo bench --bench fig4_optimization`
 
@@ -14,13 +15,25 @@ fn main() {
         DistSet::synthetic_lenet_like()
     });
     let (px, py) = ds.aggregate();
+    let islands = 4;
+    let threads = 0; // all cores (opt::resolve_threads semantics)
 
-    println!("== GA + fine-tune with the application distributions (Mul1) ==");
-    let f = figs::fig4(&px, &py, 32, 40);
+    println!("== island GA + fine-tune with the application distributions (Mul1) ==");
     println!(
-        "convergence (best fitness by generation, every 5th): {:?}",
+        "   ({islands} islands, {} eval threads; result is thread-count-independent)",
+        heam::opt::resolve_threads(threads)
+    );
+    let f = figs::fig4(&px, &py, 32, 40, islands, threads);
+    println!(
+        "merged convergence (best fitness by generation, every 5th): {:?}",
         f.history.iter().step_by(5).map(|v| *v as i64).collect::<Vec<_>>()
     );
+    for (k, h) in f.island_histories.iter().enumerate() {
+        println!(
+            "  island {k} convergence (every 5th): {:?}",
+            h.iter().step_by(5).map(|v| *v as i64).collect::<Vec<_>>()
+        );
+    }
     println!("GA design (Fig. 4b analogue):\n{}", f.ga_design);
     println!(
         "fine-tuned design (Fig. 4c analogue, rows {} -> {}):\n{}",
@@ -31,7 +44,7 @@ fn main() {
 
     println!("== same pipeline without distributions (Mul2 ablation) ==");
     let u = Dist256::uniform();
-    let g = figs::fig4(&u, &u, 32, 40);
+    let g = figs::fig4(&u, &u, 32, 40, islands, threads);
     let mul2_lut = Lut::from_fn("mul2", |x, y| g.design.eval(x, y));
     let mul2_err = mul2_lut.avg_sq_error_weighted(&px.p, &py.p);
     println!("Mul2 design:\n{}", g.final_design);

@@ -4,7 +4,8 @@
 //! * LUT generation — exhaustive 64-wide bit-parallel netlist simulation
 //!   (65 536 pairs).
 //! * GA objective evaluation — one genome fitness over the precomputed
-//!   bitplanes.
+//!   bitplanes — and whole-search throughput of the island GA at 1 vs 4
+//!   eval threads (emitted as `ga_evals_per_sec`).
 //! * ApproxFlow conv hot loop — one LeNet conv2 layer forward, naive
 //!   reference vs the im2col + LUT-GEMM core (asserted byte-identical
 //!   before timing).
@@ -36,11 +37,13 @@ use heam::opt::{self, DistSet};
 use heam::util::json::Value;
 use heam::util::prng::Rng;
 
-/// One emitted record: op name, median ns/iter, optional images/second.
+/// One emitted record: op name, median ns/iter, optional images/second,
+/// optional GA genome evaluations/second.
 struct Record {
     op: String,
     ns: f64,
     img_per_s: Option<f64>,
+    ga_evals_per_sec: Option<f64>,
 }
 
 /// Time a closure, print the line, and record it for the JSON trajectory.
@@ -50,6 +53,7 @@ fn timed(records: &mut Vec<Record>, name: &str, f: &mut dyn FnMut()) -> Measurem
         op: name.to_string(),
         ns: m.ns(),
         img_per_s: None,
+        ga_evals_per_sec: None,
     });
     m
 }
@@ -80,6 +84,66 @@ fn main() {
         timed(&mut records, "ga_objective_fitness (extracted dist, compacted)", &mut || {
             std::hint::black_box(obj.fitness(&genome));
         });
+    }
+
+    // 2b. Whole-search throughput: the island GA end to end, 1 thread vs
+    //     4 threads on the same pinned config. The determinism contract
+    //     means both runs produce the same best genome — asserted before
+    //     the numbers are trusted. Emits `ga_evals_per_sec` so the
+    //     trajectory file tracks optimizer scaling PR-over-PR.
+    {
+        let ga_cfg = |threads: usize| opt::GaConfig {
+            population: 32,
+            generations: 10,
+            islands: 4,
+            threads,
+            migration_interval: 5,
+            ..Default::default()
+        };
+        let mut baseline: Option<heam::opt::GaResult> = None;
+        let mut baseline_eps = 0.0;
+        for threads in [1usize, 4] {
+            let reps = 3;
+            let t0 = std::time::Instant::now();
+            let mut evals = 0usize;
+            let mut last: Option<heam::opt::GaResult> = None;
+            for _ in 0..reps {
+                let r = opt::ga::run(&objective, &ga_cfg(threads));
+                evals += r.evaluations;
+                last = Some(r);
+            }
+            let dt = t0.elapsed();
+            let last = last.unwrap();
+            let eps = evals as f64 / dt.as_secs_f64();
+            let name = format!("ga_island_search (pop 32, 4 islands, {threads} threads)");
+            println!("{name:<44} {eps:>12.1} genome evals/s");
+            match &baseline {
+                None => {
+                    baseline_eps = eps;
+                    baseline = Some(last);
+                }
+                Some(base) => {
+                    // The determinism contract: the full result — genome,
+                    // not just its fitness — is thread-count-independent.
+                    assert_eq!(
+                        last.best, base.best,
+                        "island GA best genome drifted with thread count"
+                    );
+                    assert_eq!(
+                        last.best_fitness.to_bits(),
+                        base.best_fitness.to_bits(),
+                        "island GA best fitness drifted with thread count"
+                    );
+                    println!("  -> GA eval speedup ({threads} threads / 1 thread): {:.2}x", eps / baseline_eps);
+                }
+            }
+            records.push(Record {
+                op: name,
+                ns: dt.as_nanos() as f64 / evals as f64,
+                img_per_s: None,
+                ga_evals_per_sec: Some(eps),
+            });
+        }
     }
 
     // 3. Conv hot loop: LeNet conv2 geometry (6x12x12 -> 16 @ 5x5),
@@ -199,6 +263,7 @@ fn main() {
             op: name,
             ns: per_img.as_nanos() as f64,
             img_per_s: Some(img_s),
+            ga_evals_per_sec: None,
         });
     }
 
@@ -237,6 +302,7 @@ fn main() {
             op: "lenet_eval_throughput".to_string(),
             ns: dt.as_nanos() as f64 / n as f64,
             img_per_s: Some(img_s),
+            ga_evals_per_sec: None,
         });
     }
 
@@ -250,6 +316,9 @@ fn main() {
             ];
             if let Some(t) = r.img_per_s {
                 pairs.push(("img_per_s", Value::Num(t)));
+            }
+            if let Some(t) = r.ga_evals_per_sec {
+                pairs.push(("ga_evals_per_sec", Value::Num(t)));
             }
             Value::obj(pairs)
         })

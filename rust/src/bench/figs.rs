@@ -90,7 +90,10 @@ pub fn fig2(px: &Dist256, py: &Dist256) -> Result<String> {
 
 /// Fig. 4 result bundle.
 pub struct Fig4 {
+    /// Merged best-per-generation convergence (min across islands).
     pub history: Vec<f64>,
+    /// Per-island convergence histories (one entry when `islands == 1`).
+    pub island_histories: Vec<Vec<f64>>,
     pub ga_design: String,
     pub final_design: String,
     pub design: crate::mult::heam::HeamDesign,
@@ -98,15 +101,24 @@ pub struct Fig4 {
     pub rows_after: usize,
 }
 
-/// Fig. 4: run the full optimization pipeline (GA + fine-tune) at reduced
-/// scale (configurable) and return the artifacts.
+/// Fig. 4: run the full optimization pipeline (island GA + fine-tune) at
+/// reduced scale (configurable) and return the artifacts. `islands` and
+/// `threads` shape the parallel search only — for a given seed the result
+/// is independent of `threads` (see `opt::ga`).
 ///
 /// The `Cons(θ)` weights are scaled relative to the objective's own error
 /// magnitude (`E` of the all-dropped genome) so that designs optimized
 /// under *different* distributions end up with comparable hardware
 /// budgets — the premise of the paper's §II.C Mul1-vs-Mul2 comparison
 /// ("Mul1 and Mul2 have comparable hardware costs").
-pub fn fig4(px: &Dist256, py: &Dist256, population: usize, generations: usize) -> Fig4 {
+pub fn fig4(
+    px: &Dist256,
+    py: &Dist256,
+    population: usize,
+    generations: usize,
+    islands: usize,
+    threads: usize,
+) -> Fig4 {
     let space = GenomeSpace::new(8, 4);
     let probe = Objective::new(space.clone(), px, py, 0.0, 0.0);
     let scale = probe.error_dropping_all();
@@ -114,6 +126,8 @@ pub fn fig4(px: &Dist256, py: &Dist256, population: usize, generations: usize) -
     let config = GaConfig {
         population,
         generations,
+        islands,
+        threads,
         ..Default::default()
     };
     let result = ga::run(&obj, &config);
@@ -126,6 +140,7 @@ pub fn fig4(px: &Dist256, py: &Dist256, population: usize, generations: usize) -
     );
     Fig4 {
         history: result.history,
+        island_histories: result.island_histories,
         ga_design: design.render(),
         final_design: ft.design.render(),
         rows_before: ft.rows_before,
@@ -158,9 +173,21 @@ mod tests {
     #[test]
     fn fig4_pipeline_small() {
         let (px, py) = DistSet::synthetic_lenet_like().aggregate();
-        let f = fig4(&px, &py, 8, 4);
+        let f = fig4(&px, &py, 8, 4, 1, 1);
         assert!(!f.history.is_empty());
+        assert_eq!(f.island_histories.len(), 1);
         assert!(f.rows_after <= 2);
         assert!(f.final_design.contains("HEAM 8x8"));
+    }
+
+    #[test]
+    fn fig4_pipeline_islands() {
+        let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+        let f = fig4(&px, &py, 16, 4, 2, 2);
+        assert_eq!(f.island_histories.len(), 2);
+        assert_eq!(f.history.len(), 5);
+        for h in &f.island_histories {
+            assert_eq!(h.len(), f.history.len());
+        }
     }
 }

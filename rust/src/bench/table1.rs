@@ -38,6 +38,17 @@ pub fn lut_for(kind: MultKind) -> Lut {
     }
 }
 
+/// MED / NMED / MRED per multiplier — the uniform-measure error-distance
+/// rows of the hardware table, exposed separately so the exhaustive
+/// brute-force regression test (`rust/tests/metrics.rs`) can pin the
+/// reporter to the `mult/` ground truth.
+pub fn error_metric_rows() -> Vec<(MultKind, crate::mult::ErrorMetrics)> {
+    MultKind::ALL
+        .iter()
+        .map(|&kind| (kind, lut_for(kind).error_metrics()))
+        .collect()
+}
+
 /// Hardware-only table (no trained weights needed): area / power /
 /// latency / average error columns.
 pub fn hardware_table() -> String {
@@ -52,6 +63,9 @@ pub fn hardware_table() -> String {
     let mut powers = Vec::new();
     let mut lats = Vec::new();
     let mut errs = Vec::new();
+    let mut meds = Vec::new();
+    let mut nmeds = Vec::new();
+    let mut mreds = Vec::new();
     let mut luts = Vec::new();
     // The distribution-weighted average error uses the same aggregate
     // distributions the optimizer saw (falls back to the synthetic Fig.1
@@ -75,6 +89,10 @@ pub fn hardware_table() -> String {
         lats.push(a.latency_ns);
         let lut = lut_for(kind);
         errs.push(lut.avg_sq_error_weighted(&px.p, &py.p) / 1e7);
+        let m = lut.error_metrics();
+        meds.push(m.med);
+        nmeds.push(m.nmed * 1e3);
+        mreds.push(m.mred * 1e2);
         luts.push(fpga::map_default(&net).luts as f64);
     }
     let with_margin = |vals: &[f64], decimals: usize| -> Vec<String> {
@@ -88,6 +106,9 @@ pub fn hardware_table() -> String {
     table.row("Power (uW)", with_margin(&powers, 2));
     table.row("Latency (ns)", with_margin(&lats, 2));
     table.row("Avg Err (x1e7)", with_margin(&errs, 2));
+    table.row("MED", with_margin(&meds, 2));
+    table.row("NMED (x1e-3)", with_margin(&nmeds, 3));
+    table.row("MRED (x1e-2)", with_margin(&mreds, 3));
     table.row("LUT6s (FPGA)", with_margin(&luts, 0));
     table.to_markdown()
 }
@@ -144,7 +165,24 @@ mod tests {
         assert!(md.contains("HEAM"));
         assert!(md.contains("Wallace"));
         assert!(md.contains("Area"));
+        assert!(md.contains("MED"));
+        assert!(md.contains("MRED"));
         assert!(md.lines().count() > 6);
+    }
+
+    #[test]
+    fn error_metric_rows_cover_the_zoo() {
+        let rows = error_metric_rows();
+        assert_eq!(rows.len(), MultKind::ALL.len());
+        // Wallace is exact: all three metrics are zero. Approximate
+        // designs must report nonzero distances.
+        for (kind, m) in &rows {
+            if *kind == MultKind::Wallace {
+                assert_eq!((m.med, m.nmed, m.mred), (0.0, 0.0, 0.0));
+            } else {
+                assert!(m.med > 0.0, "{kind:?} MED");
+            }
+        }
     }
 
     #[test]

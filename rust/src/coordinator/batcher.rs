@@ -8,13 +8,25 @@ use std::time::{Duration, Instant};
 /// pulling until `max_batch` items are held or `max_wait` has elapsed
 /// since the first item arrived. Returns `None` when the channel closed
 /// with nothing pending.
+///
+/// Edge-case contract (exercised in the tests below):
+/// * `max_batch == 0` is clamped to 1 — a zero cap must neither hang nor
+///   return empty batches forever (which would spin the caller);
+/// * `max_wait == ZERO` returns the first item immediately, without
+///   arming a timeout;
+/// * a channel disconnected mid-batch yields the partial batch; the
+///   *next* call returns `None`.
 pub fn collect_batch<T>(
     rx: &Receiver<T>,
     max_batch: usize,
     max_wait: Duration,
 ) -> Option<Vec<T>> {
+    let max_batch = max_batch.max(1);
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
+    if max_batch == 1 || max_wait.is_zero() {
+        return Some(batch);
+    }
     let deadline = Instant::now() + max_wait;
     while batch.len() < max_batch {
         let now = Instant::now();
@@ -63,6 +75,55 @@ mod tests {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
         assert!(collect_batch(&rx, 4, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn zero_max_batch_neither_hangs_nor_panics() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let t0 = Instant::now();
+        // Clamped to a cap of 1: one item per call, no waiting on more.
+        let batch = collect_batch(&rx, 0, Duration::from_secs(5)).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait out the deadline");
+        assert_eq!(collect_batch(&rx, 0, Duration::from_secs(5)).unwrap(), vec![2]);
+        drop(tx);
+        assert!(collect_batch(&rx, 0, Duration::from_secs(5)).is_none());
+    }
+
+    #[test]
+    fn zero_wait_returns_first_item_immediately() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(9).unwrap();
+        tx.send(10).unwrap();
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 8, Duration::ZERO).unwrap();
+        assert_eq!(batch, vec![9]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        // The queued item is still there for the next call.
+        assert_eq!(collect_batch(&rx, 8, Duration::ZERO).unwrap(), vec![10]);
+    }
+
+    #[test]
+    fn disconnect_mid_batch_returns_partial() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            tx.send(2).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            // Dropping tx disconnects while collect_batch is mid-wait.
+        });
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 16, Duration::from_secs(10)).unwrap();
+        producer.join().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "disconnect must end the batch early, not wait out the deadline"
+        );
+        assert!(collect_batch(&rx, 16, Duration::from_secs(10)).is_none());
     }
 
     #[test]

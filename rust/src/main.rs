@@ -179,6 +179,10 @@ fn optimize(argv: &[String]) -> Result<()> {
     .opt("rows", "4", "compressed PP rows")
     .opt("target-rows", "2", "fine-tune packed-row target")
     .opt("seed", "1212884289", "GA seed")
+    .opt("islands", "4", "GA islands (ring migration of elites)")
+    .opt("threads", "0", "fitness-eval threads (0 = all cores; any value gives identical results)")
+    .opt("migration-interval", "10", "generations between island migrations / checkpoints")
+    .opt("checkpoint", "", "checkpoint JSON path: resume if present, write during the search")
     .flag("uniform", "ignore the distribution file (Mul2 ablation)")
     .parse(argv)?;
 
@@ -211,15 +215,29 @@ fn optimize(argv: &[String]) -> Result<()> {
         population: args.get_as("population")?,
         generations: args.get_as("generations")?,
         seed: args.get_as("seed")?,
+        islands: args.get_as("islands")?,
+        threads: args.get_as("threads")?,
+        migration_interval: args.get_as("migration-interval")?,
         ..Default::default()
     };
     println!(
-        "GA: pop {} gens {} genes {}",
+        "GA: pop {} gens {} genes {} islands {} threads {}",
         config.population,
         config.generations,
-        objective.space.len()
+        objective.space.len(),
+        config.islands,
+        opt::resolve_threads(config.threads)
     );
-    let result = opt::ga::run(&objective, &config);
+    let result = match args.get_nonempty("checkpoint") {
+        Some(path) => {
+            let path = std::path::Path::new(path);
+            if path.exists() {
+                println!("resuming from checkpoint {}", path.display());
+            }
+            opt::ga::run_with_checkpoint(&objective, &config, path)?
+        }
+        None => opt::ga::run(&objective, &config),
+    };
     println!(
         "GA done: fitness {:.4e} after {} evaluations",
         result.best_fitness, result.evaluations

@@ -121,6 +121,39 @@ impl Lut {
         total / (sx * sy)
     }
 
+    /// The standard approximate-arithmetic error-distance metrics,
+    /// computed exhaustively over all 65 536 operand pairs in one pass:
+    ///
+    /// * **MED**  — mean error distance, `mean |f(x,y) − x·y|`;
+    /// * **NMED** — MED normalized by the maximum exact product
+    ///   (255 · 255 = 65 025);
+    /// * **MRED** — mean relative error distance,
+    ///   `mean |f(x,y) − x·y| / (x·y)` over the pairs with `x·y ≠ 0`
+    ///   (the usual convention: zero-product pairs are excluded rather
+    ///   than divided by zero).
+    pub fn error_metrics(&self) -> ErrorMetrics {
+        let mut abs_sum = 0.0f64;
+        let mut rel_sum = 0.0f64;
+        let mut rel_n = 0usize;
+        for x in 0..256u32 {
+            for y in 0..256u32 {
+                let exact = (x * y) as i64;
+                let d = (self.get(x as u8, y as u8) as i64 - exact).abs() as f64;
+                abs_sum += d;
+                if exact != 0 {
+                    rel_sum += d / exact as f64;
+                    rel_n += 1;
+                }
+            }
+        }
+        let med = abs_sum / 65536.0;
+        ErrorMetrics {
+            med,
+            nmed: med / (255.0 * 255.0),
+            mred: rel_sum / rel_n as f64,
+        }
+    }
+
     /// Maximum absolute error over the full space.
     pub fn max_abs_error(&self) -> i64 {
         let mut worst = 0i64;
@@ -187,6 +220,14 @@ impl Lut {
             name: path.as_ref().display().to_string(),
         })
     }
+}
+
+/// Exhaustive error-distance metrics of a LUT (see [`Lut::error_metrics`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorMetrics {
+    pub med: f64,
+    pub nmed: f64,
+    pub mred: f64,
 }
 
 /// Backing storage of a [`CompactLut`].
@@ -312,6 +353,32 @@ mod tests {
         for (x, y) in [(0u8, 0u8), (255, 255), (13, 200)] {
             assert_eq!(c.get(x, y), lut.get(x, y));
         }
+    }
+
+    #[test]
+    fn exact_lut_has_zero_metrics() {
+        let m = Lut::exact().error_metrics();
+        assert_eq!(m.med, 0.0);
+        assert_eq!(m.nmed, 0.0);
+        assert_eq!(m.mred, 0.0);
+    }
+
+    #[test]
+    fn metrics_of_constant_offset_are_analytic() {
+        // f(x,y) = xy + 3: |err| = 3 everywhere, so MED = 3 exactly,
+        // NMED = 3/65025, MRED = 3 * mean(1/xy) over nonzero products.
+        let lut = Lut::from_fn("off3", |x, y| x as i64 * y as i64 + 3);
+        let m = lut.error_metrics();
+        assert_eq!(m.med, 3.0);
+        assert!((m.nmed - 3.0 / 65025.0).abs() < 1e-15);
+        let mut inv_sum = 0.0f64;
+        for x in 1..256u32 {
+            for y in 1..256u32 {
+                inv_sum += 1.0 / (x * y) as f64;
+            }
+        }
+        let expect = 3.0 * inv_sum / (255.0 * 255.0);
+        assert!((m.mred - expect).abs() <= 1e-12 * expect, "{} vs {expect}", m.mred);
     }
 
     #[test]

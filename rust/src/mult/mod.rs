@@ -30,7 +30,7 @@ pub mod ou;
 pub mod pp;
 pub mod wallace;
 
-pub use lut::Lut;
+pub use lut::{ErrorMetrics, Lut};
 
 use crate::logic::Netlist;
 

@@ -1,10 +1,36 @@
-//! Mixed-integer genetic algorithm (the MATLAB `ga` substitute of §II.C).
+//! Island-model mixed-integer genetic algorithm (the MATLAB `ga`
+//! substitute of §II.C, parallelized).
 //!
-//! Standard generational GA over binary θ genomes: tournament selection,
-//! uniform crossover, per-gene mutation, elitism, plus a seeded individual
-//! (the XOR+AND "sum/carry" design) to anchor the search. Deterministic
-//! given the seed.
+//! The population is split across K islands that evolve independently —
+//! tournament selection, uniform crossover, per-gene mutation, elitism —
+//! with a ring migration of elites every [`GaConfig::migration_interval`]
+//! generations. Island 0 is anchored with the seeded XOR+AND "sum/carry"
+//! design (and the all-dropped genome) exactly like the original
+//! single-population GA.
+//!
+//! **Determinism contract.** For a fixed seed the result is byte-identical
+//! for *any* thread count:
+//!
+//! * each island draws from its own [`Rng`] stream derived from the master
+//!   seed via [`Rng::derive`] (consecutive SplitMix64 outputs), so stream
+//!   content never depends on scheduling;
+//! * breeding runs island-by-island on the calling thread (it is RNG-bound
+//!   and cheap); only fitness evaluation — the 65 536-pair bitplane
+//!   accumulate in [`Objective`] — fans out, through
+//!   [`Objective::fitness_batch`]'s ordered chunked reduction;
+//! * migration and elitism rank with stable sorts and use no randomness.
+//!
+//! Long searches checkpoint to JSON ([`run_with_checkpoint`]): population
+//! bit strings, per-island RNG state, fitness and history round-trip
+//! losslessly through `util::json` (f64 via shortest-roundtrip display,
+//! u64 RNG words as hex strings), so an interrupted search resumes
+//! bit-for-bit.
 
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
 use crate::util::prng::Rng;
 
 use super::genome::Genome;
@@ -13,15 +39,29 @@ use super::objective::Objective;
 /// GA hyperparameters.
 #[derive(Clone, Debug)]
 pub struct GaConfig {
+    /// Total population, split as evenly as possible across islands.
     pub population: usize,
     pub generations: usize,
     pub tournament: usize,
     pub crossover_rate: f64,
     pub mutation_rate: f64,
+    /// Elites copied unchanged into the next generation, per island.
     pub elitism: usize,
     pub seed: u64,
-    /// Include the seeded XOR+AND genome in the initial population.
+    /// Include the seeded XOR+AND genome in island 0's initial population.
     pub seed_individual: bool,
+    /// Number of islands; capped so every island holds at least 4
+    /// individuals. 1 recovers the classic single-population GA.
+    pub islands: usize,
+    /// Fitness-evaluation worker threads; `0` = one per available core
+    /// (see [`super::objective::resolve_threads`]). Changes wall-clock
+    /// only, never the result (see the module docs).
+    pub threads: usize,
+    /// Generations between ring migrations (and between checkpoint
+    /// writes); `0` disables migration.
+    pub migration_interval: usize,
+    /// Elites each island sends to its ring successor at a migration.
+    pub migrants: usize,
 }
 
 impl Default for GaConfig {
@@ -35,6 +75,10 @@ impl Default for GaConfig {
             elitism: 2,
             seed: 0x48454D41, // "HEAM"
             seed_individual: true,
+            islands: 1,
+            threads: 1,
+            migration_interval: 10,
+            migrants: 2,
         }
     }
 }
@@ -44,66 +88,273 @@ impl Default for GaConfig {
 pub struct GaResult {
     pub best: Genome,
     pub best_fitness: f64,
-    /// Best fitness per generation (Fig. 4 bench plots convergence).
+    /// Best fitness per generation across all islands (Fig. 4 bench plots
+    /// convergence); length `generations + 1`.
     pub history: Vec<f64>,
+    /// Per-island convergence histories (same length as `history`).
+    pub island_histories: Vec<Vec<f64>>,
     pub evaluations: usize,
+}
+
+/// One island's self-contained evolution state.
+struct Island {
+    rng: Rng,
+    population: Vec<Genome>,
+    fitness: Vec<f64>,
+    history: Vec<f64>,
+}
+
+/// Mid-search state: everything a checkpoint must capture.
+struct GaState {
+    /// Generations completed (== per-island history length).
+    generation: usize,
+    evaluations: usize,
+    islands: Vec<Island>,
+}
+
+const CHECKPOINT_FORMAT: &str = "heam-ga-checkpoint-v1";
+
+/// Effective island count: at least 1, and small enough that every island
+/// holds >= 4 individuals (an island needs room for elites *and* offspring).
+fn effective_islands(config: &GaConfig) -> usize {
+    (config.population / 4).max(1).min(config.islands.max(1))
+}
+
+/// Per-island population sizes (total preserved, remainder spread over the
+/// leading islands).
+fn island_sizes(config: &GaConfig) -> Vec<usize> {
+    let k = effective_islands(config);
+    let base = config.population / k;
+    let rem = config.population % k;
+    (0..k).map(|i| base + usize::from(i < rem)).collect()
 }
 
 /// Run the GA against an [`Objective`].
 pub fn run(obj: &Objective, config: &GaConfig) -> GaResult {
-    let mut rng = Rng::new(config.seed);
-    let mut population: Vec<Genome> = Vec::with_capacity(config.population);
-    if config.seed_individual {
-        population.push(Genome::seeded(&obj.space));
-        population.push(Genome::zeros(&obj.space));
-    }
-    while population.len() < config.population {
-        let p = rng.f64() * 0.6;
-        population.push(Genome::random(&obj.space, &mut rng, p));
-    }
-    let mut fitness: Vec<f64> = population.iter().map(|g| obj.fitness(g)).collect();
-    let mut evaluations = population.len();
-    let mut history = Vec::with_capacity(config.generations);
+    let mut state = init_state(obj, config);
+    evolve(obj, config, &mut state, None);
+    finalize(config, state)
+}
 
-    for _gen in 0..config.generations {
-        // Rank for elitism.
-        let mut order: Vec<usize> = (0..population.len()).collect();
-        order.sort_by(|&a, &b| fitness[a].partial_cmp(&fitness[b]).unwrap());
-        history.push(fitness[order[0]]);
+/// [`run`] with JSON checkpointing: if `path` exists the search resumes
+/// from it (validating that the seed, population, island layout and every
+/// trajectory-shaping hyperparameter match — only `generations` and
+/// `threads` may differ, the former to extend the horizon, the latter
+/// because it never affects the result);
+/// the state is re-written every [`GaConfig::migration_interval`]
+/// generations and when the final generation completes, so an interrupted
+/// process can pick up where it left off and reproduce the uninterrupted
+/// run bit-for-bit.
+pub fn run_with_checkpoint(obj: &Objective, config: &GaConfig, path: &Path) -> Result<GaResult> {
+    let mut state = if path.exists() {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading GA checkpoint {}", path.display()))?;
+        state_from_json(obj, config, &json::parse(&text)?)
+            .with_context(|| format!("resuming GA checkpoint {}", path.display()))?
+    } else {
+        init_state(obj, config)
+    };
+    evolve(obj, config, &mut state, Some(path));
+    Ok(finalize(config, state))
+}
 
-        let mut next: Vec<Genome> = order
-            .iter()
-            .take(config.elitism)
-            .map(|&i| population[i].clone())
-            .collect();
-        while next.len() < config.population {
-            let a = tournament(&fitness, config.tournament, &mut rng);
-            let mut child = if rng.chance(config.crossover_rate) {
-                let b = tournament(&fitness, config.tournament, &mut rng);
-                population[a].crossover(&population[b], &mut rng)
-            } else {
-                population[a].clone()
-            };
-            child.mutate(&mut rng, config.mutation_rate);
-            next.push(child);
+/// Build the generation-0 state: per-island derived RNG streams, anchored
+/// island 0, initial fitness evaluated through the sharded batch path.
+fn init_state(obj: &Objective, config: &GaConfig) -> GaState {
+    let sizes = island_sizes(config);
+    let mut islands: Vec<Island> = Vec::with_capacity(sizes.len());
+    let mut all: Vec<Genome> = Vec::with_capacity(config.population);
+    for (i, &size) in sizes.iter().enumerate() {
+        let mut rng = Rng::derive(config.seed, i as u64);
+        let mut population: Vec<Genome> = Vec::with_capacity(size);
+        if i == 0 && config.seed_individual && size >= 2 {
+            population.push(Genome::seeded(&obj.space));
+            population.push(Genome::zeros(&obj.space));
         }
-        population = next;
-        fitness = population.iter().map(|g| obj.fitness(g)).collect();
-        evaluations += population.len();
+        while population.len() < size {
+            let p = rng.f64() * 0.6;
+            population.push(Genome::random(&obj.space, &mut rng, p));
+        }
+        all.extend(population.iter().cloned());
+        islands.push(Island {
+            rng,
+            population,
+            fitness: Vec::new(),
+            history: Vec::new(),
+        });
     }
+    let fits = obj.fitness_batch(&all, config.threads);
+    let evaluations = fits.len();
+    let mut it = fits.into_iter();
+    for island in &mut islands {
+        island.fitness = it.by_ref().take(island.population.len()).collect();
+    }
+    GaState {
+        generation: 0,
+        evaluations,
+        islands,
+    }
+}
 
-    let (best_idx, best_fitness) = fitness
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, &f)| (i, f))
-        .unwrap();
-    history.push(best_fitness);
+/// Advance the state to `config.generations`, optionally checkpointing.
+fn evolve(obj: &Objective, config: &GaConfig, state: &mut GaState, checkpoint: Option<&Path>) {
+    let interval = config.migration_interval;
+    for gen in state.generation..config.generations {
+        // 1. Record the per-island convergence point for this generation.
+        for island in &mut state.islands {
+            let best = island
+                .fitness
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
+            island.history.push(best);
+        }
+
+        // 2. Breed every island's next generation on the calling thread
+        //    (RNG-bound, cheap) into one flat offspring batch.
+        let mut offspring: Vec<Genome> = Vec::with_capacity(config.population);
+        for island in &mut state.islands {
+            breed_into(island, config, &mut offspring);
+        }
+
+        // 3. Shard the expensive part — fitness — across the pool, with
+        //    results returned in input order.
+        let fits = obj.fitness_batch(&offspring, config.threads);
+        state.evaluations += fits.len();
+
+        // 4. Scatter the flat batch back into the islands.
+        let mut gi = offspring.into_iter();
+        let mut fi = fits.into_iter();
+        for island in &mut state.islands {
+            let n = island.population.len();
+            island.population = gi.by_ref().take(n).collect();
+            island.fitness = fi.by_ref().take(n).collect();
+        }
+
+        state.generation = gen + 1;
+
+        // 5. Ring migration of elites at epoch boundaries (deterministic:
+        //    stable ranking, no RNG). Runs even when this is the final
+        //    generation: migration never displaces an island's best, so
+        //    the global optimum is unaffected, and applying it
+        //    unconditionally keeps the trajectory identical no matter at
+        //    which generation a checkpointed run was truncated and
+        //    resumed.
+        if interval > 0 && state.generation % interval == 0 {
+            migrate_ring(&mut state.islands, config.migrants);
+        }
+
+        // 6. Periodic + final checkpoint.
+        if let Some(path) = checkpoint {
+            let due = (interval > 0 && state.generation % interval == 0)
+                || state.generation == config.generations;
+            if due {
+                if let Err(e) = write_checkpoint(path, state, config) {
+                    eprintln!("warning: GA checkpoint write failed: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+/// Produce one island's next generation (elites + tournament offspring),
+/// appending to the flat batch.
+fn breed_into(island: &mut Island, config: &GaConfig, out: &mut Vec<Genome>) {
+    let size = island.population.len();
+    let mut order: Vec<usize> = (0..size).collect();
+    order.sort_by(|&a, &b| island.fitness[a].partial_cmp(&island.fitness[b]).unwrap());
+    let elites = config.elitism.min(size);
+    out.extend(order.iter().take(elites).map(|&i| island.population[i].clone()));
+    let rng = &mut island.rng;
+    for _ in elites..size {
+        let a = tournament(&island.fitness, config.tournament, rng);
+        let mut child = if rng.chance(config.crossover_rate) {
+            let b = tournament(&island.fitness, config.tournament, rng);
+            island.population[a].crossover(&island.population[b], rng)
+        } else {
+            island.population[a].clone()
+        };
+        child.mutate(rng, config.mutation_rate);
+        out.push(child);
+    }
+}
+
+/// Ring migration: island i sends clones of its `migrants` best to island
+/// (i+1) % K, which replaces its `migrants` worst. Donor selections are
+/// taken from the pre-migration snapshot so the exchange is symmetric and
+/// order-independent. Fitness travels with the genome (it is a pure
+/// function of the genome), so no re-evaluation is needed.
+fn migrate_ring(islands: &mut [Island], migrants: usize) {
+    let k = islands.len();
+    if k < 2 || migrants == 0 {
+        return;
+    }
+    // Snapshot each island's elites before any replacement happens.
+    let mut parcels: Vec<Vec<(Genome, f64)>> = Vec::with_capacity(k);
+    for island in islands.iter() {
+        let m = migrants.min(island.population.len());
+        let mut order: Vec<usize> = (0..island.population.len()).collect();
+        order.sort_by(|&a, &b| island.fitness[a].partial_cmp(&island.fitness[b]).unwrap());
+        parcels.push(
+            order
+                .iter()
+                .take(m)
+                .map(|&i| (island.population[i].clone(), island.fitness[i]))
+                .collect(),
+        );
+    }
+    for (src, parcel) in parcels.into_iter().enumerate() {
+        let dst = (src + 1) % k;
+        let island = &mut islands[dst];
+        let mut order: Vec<usize> = (0..island.population.len()).collect();
+        // Worst first.
+        order.sort_by(|&a, &b| island.fitness[b].partial_cmp(&island.fitness[a]).unwrap());
+        // Never overwrite the destination's best slot (the last entry of
+        // the worst-first order): the "migration never displaces an
+        // island's best" invariant is what makes running migration on the
+        // final generation safe, even with `migrants >= island size`.
+        let keep = island.population.len().saturating_sub(1);
+        for ((genome, fit), &slot) in parcel.into_iter().take(keep).zip(&order) {
+            island.population[slot] = genome;
+            island.fitness[slot] = fit;
+        }
+    }
+}
+
+/// Close the histories and extract the global winner.
+fn finalize(config: &GaConfig, mut state: GaState) -> GaResult {
+    let mut best: Option<(usize, usize, f64)> = None; // (island, index, fitness)
+    for (k, island) in state.islands.iter_mut().enumerate() {
+        let (idx, fit) = island
+            .fitness
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, &f)| (i, f))
+            .expect("island population is never empty");
+        island.history.push(fit);
+        if best.map_or(true, |(_, _, bf)| fit < bf) {
+            best = Some((k, idx, fit));
+        }
+    }
+    let (bk, bi, best_fitness) = best.expect("at least one island");
+    let island_histories: Vec<Vec<f64>> =
+        state.islands.iter().map(|i| i.history.clone()).collect();
+    let len = config.generations + 1;
+    let history: Vec<f64> = (0..len)
+        .map(|g| {
+            island_histories
+                .iter()
+                .map(|h| h[g])
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
     GaResult {
-        best: population[best_idx].clone(),
+        best: state.islands[bk].population[bi].clone(),
         best_fitness,
         history,
-        evaluations,
+        island_histories,
+        evaluations: state.evaluations,
     }
 }
 
@@ -116,6 +367,175 @@ fn tournament(fitness: &[f64], k: usize, rng: &mut Rng) -> usize {
         }
     }
     best
+}
+
+/// Serialize the mid-search state (see the module docs for the format
+/// guarantees) and write it atomically (temp file + rename).
+fn write_checkpoint(path: &Path, state: &GaState, config: &GaConfig) -> Result<()> {
+    let islands: Vec<Value> = state
+        .islands
+        .iter()
+        .map(|island| {
+            Value::obj(vec![
+                ("rng", Value::u64_hex_arr(&island.rng.state())),
+                (
+                    "population",
+                    Value::Arr(
+                        island
+                            .population
+                            .iter()
+                            .map(|g| Value::Str(g.to_bit_string()))
+                            .collect(),
+                    ),
+                ),
+                ("fitness", Value::f64_arr(&island.fitness)),
+                ("history", Value::f64_arr(&island.history)),
+            ])
+        })
+        .collect();
+    let root = Value::obj(vec![
+        ("format", Value::Str(CHECKPOINT_FORMAT.to_string())),
+        ("seed", Value::u64_hex_arr(&[config.seed])),
+        ("population", Value::Int(config.population as i64)),
+        // Every hyperparameter that shapes the search trajectory travels
+        // with the checkpoint, so a resume with different knobs is
+        // rejected instead of silently diverging from the bit-for-bit
+        // contract. `generations` is deliberately absent: extending or
+        // truncating the horizon is the legitimate resume use case.
+        ("hyper", Value::obj(vec![
+            ("tournament", Value::Int(config.tournament as i64)),
+            ("crossover_rate", Value::Num(config.crossover_rate)),
+            ("mutation_rate", Value::Num(config.mutation_rate)),
+            ("elitism", Value::Int(config.elitism as i64)),
+            ("seed_individual", Value::Bool(config.seed_individual)),
+            ("islands", Value::Int(config.islands as i64)),
+            ("migration_interval", Value::Int(config.migration_interval as i64)),
+            ("migrants", Value::Int(config.migrants as i64)),
+        ])),
+        ("generation", Value::Int(state.generation as i64)),
+        ("evaluations", Value::Int(state.evaluations as i64)),
+        ("islands", Value::Arr(islands)),
+    ]);
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, root.to_json())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Rebuild a [`GaState`] from checkpoint JSON, validating it against the
+/// objective's genome space and the resuming config.
+fn state_from_json(obj: &Objective, config: &GaConfig, v: &Value) -> Result<GaState> {
+    let format = v.require("format")?.as_str().unwrap_or_default();
+    anyhow::ensure!(
+        format == CHECKPOINT_FORMAT,
+        "unknown checkpoint format '{format}'"
+    );
+    let seed = v.require("seed")?.to_u64_hex_vec()?;
+    anyhow::ensure!(
+        seed.len() == 1 && seed[0] == config.seed,
+        "checkpoint seed {:?} does not match config seed {}",
+        seed,
+        config.seed
+    );
+    let population = v.require_usize("population")?;
+    anyhow::ensure!(
+        population == config.population,
+        "checkpoint population {population} does not match config {}",
+        config.population
+    );
+    let hyper = v.require("hyper")?;
+    let check_usize = |key: &str, want: usize| -> Result<()> {
+        let got = hyper.require_usize(key)?;
+        anyhow::ensure!(
+            got == want,
+            "checkpoint {key} {got} does not match config {want} — \
+             resuming with different hyperparameters would silently diverge"
+        );
+        Ok(())
+    };
+    check_usize("tournament", config.tournament)?;
+    check_usize("elitism", config.elitism)?;
+    check_usize("islands", config.islands)?;
+    check_usize("migration_interval", config.migration_interval)?;
+    check_usize("migrants", config.migrants)?;
+    let check_f64 = |key: &str, want: f64| -> Result<()> {
+        let got = hyper.require(key)?.as_f64().unwrap_or(f64::NAN);
+        anyhow::ensure!(
+            got.to_bits() == want.to_bits(),
+            "checkpoint {key} {got} does not match config {want}"
+        );
+        Ok(())
+    };
+    check_f64("crossover_rate", config.crossover_rate)?;
+    check_f64("mutation_rate", config.mutation_rate)?;
+    let seeded = matches!(hyper.require("seed_individual")?, Value::Bool(true));
+    anyhow::ensure!(
+        seeded == config.seed_individual,
+        "checkpoint seed_individual {seeded} does not match config {}",
+        config.seed_individual
+    );
+    let generation = v.require_usize("generation")?;
+    anyhow::ensure!(
+        generation <= config.generations,
+        "checkpoint is {generation} generations in, config asks for only {}",
+        config.generations
+    );
+    let sizes = island_sizes(config);
+    let raw = v.require("islands")?.as_arr().unwrap_or_default();
+    anyhow::ensure!(
+        raw.len() == sizes.len(),
+        "checkpoint has {} islands, config implies {}",
+        raw.len(),
+        sizes.len()
+    );
+    let mut islands = Vec::with_capacity(raw.len());
+    for (k, (iv, &size)) in raw.iter().zip(&sizes).enumerate() {
+        let rng_words = iv.require("rng")?.to_u64_hex_vec()?;
+        anyhow::ensure!(rng_words.len() == 4, "island {k}: bad RNG state length");
+        let rng = Rng::from_state([rng_words[0], rng_words[1], rng_words[2], rng_words[3]]);
+        let pop_raw = iv.require("population")?.as_arr().unwrap_or_default();
+        anyhow::ensure!(
+            pop_raw.len() == size,
+            "island {k}: checkpoint population {} != expected {size}",
+            pop_raw.len()
+        );
+        let population = pop_raw
+            .iter()
+            .map(|g| {
+                Genome::from_bit_string(
+                    &obj.space,
+                    g.as_str().unwrap_or_default(),
+                )
+            })
+            .collect::<Result<Vec<Genome>>>()
+            .with_context(|| format!("island {k} genomes"))?;
+        let fitness = iv.require("fitness")?.to_f64_vec()?;
+        anyhow::ensure!(
+            fitness.len() == size,
+            "island {k}: fitness length {} != population {size}",
+            fitness.len()
+        );
+        let history = iv.require("history")?.to_f64_vec()?;
+        anyhow::ensure!(
+            history.len() == generation,
+            "island {k}: history length {} != generation {generation}",
+            history.len()
+        );
+        islands.push(Island {
+            rng,
+            population,
+            fitness,
+            history,
+        });
+    }
+    Ok(GaState {
+        generation,
+        evaluations: v.require_usize("evaluations")?,
+        islands,
+    })
 }
 
 #[cfg(test)]
@@ -169,11 +589,95 @@ mod tests {
 
     #[test]
     fn history_is_monotone_nonincreasing() {
-        // With elitism the per-generation best never regresses.
+        // With elitism (and migration replacing only the worst) neither the
+        // per-island nor the merged best ever regresses.
         let obj = small_objective();
-        let r = run(&obj, &small_config());
+        let cfg = GaConfig {
+            population: 24,
+            generations: 15,
+            islands: 3,
+            migration_interval: 4,
+            ..Default::default()
+        };
+        let r = run(&obj, &cfg);
         for w in r.history.windows(2) {
             assert!(w[1] <= w[0] + 1e-9, "regression: {} -> {}", w[0], w[1]);
         }
+        for h in &r.island_histories {
+            assert_eq!(h.len(), r.history.len());
+            for w in h.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9, "island regression: {} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn islands_cover_population_and_evaluations() {
+        let obj = small_objective();
+        let cfg = GaConfig {
+            population: 26, // uneven split across 4 islands: 7,7,6,6
+            generations: 6,
+            islands: 4,
+            threads: 2,
+            migration_interval: 2,
+            ..Default::default()
+        };
+        let r = run(&obj, &cfg);
+        assert_eq!(r.evaluations, 26 * 7);
+        assert_eq!(r.island_histories.len(), 4);
+        // The merged history is the pointwise min of the island histories.
+        for (g, &m) in r.history.iter().enumerate() {
+            let min = r
+                .island_histories
+                .iter()
+                .map(|h| h[g])
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(m.to_bits(), min.to_bits());
+        }
+    }
+
+    #[test]
+    fn migration_never_displaces_an_island_best() {
+        // migrants >= island size: replacement must stop short of the
+        // best slot, so every island's history stays monotone.
+        let obj = small_objective();
+        let cfg = GaConfig {
+            population: 8,
+            generations: 4,
+            islands: 2, // 4 individuals per island
+            migrants: 4,
+            migration_interval: 1,
+            ..Default::default()
+        };
+        let r = run(&obj, &cfg);
+        for h in &r.island_histories {
+            for w in h.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9, "island best regressed: {} -> {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn island_count_is_capped_by_population() {
+        // 8 individuals cannot fill 8 islands of >= 4: expect 2 islands.
+        let cfg = GaConfig {
+            population: 8,
+            islands: 8,
+            ..Default::default()
+        };
+        assert_eq!(effective_islands(&cfg), 2);
+        assert_eq!(island_sizes(&cfg), vec![4, 4]);
+        // And the degenerate population still runs.
+        let obj = small_objective();
+        let r = run(
+            &obj,
+            &GaConfig {
+                population: 8,
+                generations: 3,
+                islands: 8,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.evaluations, 8 * 4);
     }
 }

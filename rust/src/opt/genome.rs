@@ -135,6 +135,31 @@ impl Genome {
             }
         }
     }
+
+    /// Serialize as a '0'/'1' string (checkpoint format).
+    pub fn to_bit_string(&self) -> String {
+        self.genes.iter().map(|&g| if g { '1' } else { '0' }).collect()
+    }
+
+    /// Parse a [`Genome::to_bit_string`] form, validating the length
+    /// against the genome space.
+    pub fn from_bit_string(space: &GenomeSpace, s: &str) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            s.len() == space.len(),
+            "genome bit string has {} genes, space expects {}",
+            s.len(),
+            space.len()
+        );
+        let genes = s
+            .chars()
+            .map(|c| match c {
+                '0' => Ok(false),
+                '1' => Ok(true),
+                other => anyhow::bail!("invalid genome bit '{other}'"),
+            })
+            .collect::<anyhow::Result<Vec<bool>>>()?;
+        Ok(Self { genes })
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +215,20 @@ mod tests {
         let mut m = base.clone();
         m.mutate(&mut rng, 0.5);
         assert_ne!(m, base);
+    }
+
+    #[test]
+    fn bit_string_roundtrip() {
+        let s = GenomeSpace::new(8, 4);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let g = Genome::random(&s, &mut rng, 0.5);
+            let text = g.to_bit_string();
+            assert_eq!(text.len(), s.len());
+            assert_eq!(Genome::from_bit_string(&s, &text).unwrap(), g);
+        }
+        assert!(Genome::from_bit_string(&s, "01").is_err());
+        assert!(Genome::from_bit_string(&s, &"x".repeat(s.len())).is_err());
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //!   hot path).
 //! * [`genome`] — the θ encoding: one bit per (column, op) candidate over
 //!   the compressed partial-product region.
-//! * [`ga`] — the mixed-integer genetic algorithm (MATLAB GA substitute):
-//!   tournament selection, uniform crossover, per-gene mutation, elitism.
+//! * [`ga`] — the island-model mixed-integer genetic algorithm (MATLAB GA
+//!   substitute): per-island tournament selection, uniform crossover,
+//!   per-gene mutation and elitism; ring migration of elites; fitness
+//!   sharded across a scoped thread pool with thread-count-independent
+//!   determinism; JSON checkpoint/resume for long searches.
 //! * [`finetune`] — §II.C: OR-merging compressed terms to cut the number
 //!   of compressed partial-product rows (Fig. 4(b) → Fig. 4(c)).
 //! * [`linear_fit`] — the §II.A / Fig. 2 demonstration: weighted
@@ -28,4 +31,4 @@ pub mod objective;
 pub use distributions::{Dist256, DistSet, LayerDist};
 pub use ga::{GaConfig, GaResult};
 pub use genome::Genome;
-pub use objective::Objective;
+pub use objective::{resolve_threads, Objective};

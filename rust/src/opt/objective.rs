@@ -121,12 +121,21 @@ impl Objective {
 
     /// Eq. 3: the distribution-weighted expected squared error of a genome.
     pub fn error(&self, genome: &Genome) -> f64 {
+        self.error_with_scratch(genome, &mut Vec::new())
+    }
+
+    /// [`Objective::error`] with a caller-owned accumulator buffer. The GA
+    /// evaluates tens of thousands of genomes per search; reusing the
+    /// per-pair sum vector keeps the hot path allocation-free.
+    pub fn error_with_scratch(&self, genome: &Genome, scratch: &mut Vec<i32>) -> f64 {
         let total = self.d0.len();
         // Base offset: inverted (dense) candidates contribute `amount`
         // everywhere; their stored (sparse) complement bits subtract it.
         let mut base = 0i32;
         // Accumulate the selected-term sum per pair.
-        let mut f = vec![0i32; total];
+        scratch.clear();
+        scratch.resize(total, 0);
+        let f = scratch;
         for (k, gene) in genome.genes.iter().enumerate() {
             if !*gene {
                 continue;
@@ -167,6 +176,47 @@ impl Objective {
         self.error(genome) + self.cons(genome)
     }
 
+    /// [`Objective::fitness`] with a reusable accumulator buffer.
+    pub fn fitness_with_scratch(&self, genome: &Genome, scratch: &mut Vec<i32>) -> f64 {
+        self.error_with_scratch(genome, scratch) + self.cons(genome)
+    }
+
+    /// Evaluate a genome batch, fanning contiguous chunks across up to
+    /// `threads` scoped workers (`0` = one per available core, via
+    /// [`resolve_threads`]).
+    ///
+    /// Each genome's fitness is computed independently (no cross-genome
+    /// accumulation) and results are written back in input order, chunk by
+    /// chunk, so the returned vector is bit-identical for every `threads`
+    /// value — the ordered reduction the island GA's determinism contract
+    /// rests on. `threads == 1` evaluates inline without spawning.
+    pub fn fitness_batch(&self, genomes: &[Genome], threads: usize) -> Vec<f64> {
+        let threads = resolve_threads(threads).min(genomes.len().max(1));
+        if threads == 1 {
+            let mut scratch = Vec::new();
+            return genomes
+                .iter()
+                .map(|g| self.fitness_with_scratch(g, &mut scratch))
+                .collect();
+        }
+        let chunk = genomes.len().div_ceil(threads);
+        let per_chunk: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = genomes
+                .chunks(chunk)
+                .map(|part| {
+                    s.spawn(move || {
+                        let mut scratch = Vec::new();
+                        part.iter()
+                            .map(|g| self.fitness_with_scratch(g, &mut scratch))
+                            .collect::<Vec<f64>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        per_chunk.into_iter().flatten().collect()
+    }
+
     /// The error of the *exact* multiplier restricted to this genome space
     /// (keeping XOR+AND+... cannot be exact in general; this returns the
     /// residual magnitude scale used for diagnostics): E of the all-zero
@@ -178,6 +228,18 @@ impl Objective {
             err += d * d * self.weights[i];
         }
         err
+    }
+}
+
+/// Canonical meaning of a thread-count knob across the optimizer: `0`
+/// means one worker per available core, any other value is taken as-is.
+/// Shared by [`Objective::fitness_batch`] and the CLI/bench display
+/// paths so "0 = all cores" cannot drift between layers.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
     }
 }
 
@@ -229,6 +291,32 @@ mod tests {
                 "fast {fast} vs slow {slow}"
             );
         }
+    }
+
+    #[test]
+    fn fitness_batch_matches_serial_for_any_thread_count() {
+        let obj = mk_objective(3000.0, 30.0);
+        let mut rng = crate::util::prng::Rng::new(17);
+        let genomes: Vec<Genome> = (0..13)
+            .map(|_| Genome::random(&obj.space, &mut rng, 0.4))
+            .collect();
+        let serial: Vec<f64> = genomes.iter().map(|g| obj.fitness(g)).collect();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let batch = obj.fitness_batch(&genomes, threads);
+            assert_eq!(batch.len(), serial.len());
+            for (i, (a, b)) in batch.iter().zip(&serial).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "genome {i}, {threads} threads");
+            }
+        }
+        // Degenerate inputs must not panic.
+        assert!(obj.fitness_batch(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn resolve_threads_semantics() {
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+        assert!(resolve_threads(0) >= 1, "0 must expand to at least one core");
     }
 
     #[test]

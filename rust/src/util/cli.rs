@@ -168,6 +168,13 @@ impl Args {
             .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}"))
     }
 
+    /// Value of an option whose empty-string default means "unset"
+    /// (e.g. optional paths like `--checkpoint`).
+    pub fn get_nonempty(&self, name: &str) -> Option<&str> {
+        let v = self.get(name);
+        (!v.is_empty()).then_some(v)
+    }
+
     /// Boolean flag state.
     pub fn is_set(&self, name: &str) -> bool {
         *self
@@ -224,6 +231,17 @@ mod tests {
             .opt_required("must", "required one")
             .parse(&argv(&[]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn nonempty_treats_empty_default_as_unset() {
+        let a = Args::new("t", "test")
+            .opt("path", "", "optional path")
+            .opt("other", "", "another")
+            .parse(&argv(&["--path", "x.json"]))
+            .unwrap();
+        assert_eq!(a.get_nonempty("path"), Some("x.json"));
+        assert_eq!(a.get_nonempty("other"), None);
     }
 
     #[test]

@@ -142,6 +142,35 @@ impl Value {
             .map(|v| v.as_f64().ok_or_else(|| anyhow!("expected number in array")))
             .collect()
     }
+
+    /// Build an array of u64s as zero-padded hex strings. JSON integers
+    /// are i64 here, so full-width u64 values (e.g. PRNG state words)
+    /// travel as `"%016x"` strings instead — lossless and readable.
+    pub fn u64_hex_arr(xs: &[u64]) -> Value {
+        Value::Arr(
+            xs.iter()
+                .map(|&x| Value::Str(format!("{x:016x}")))
+                .collect(),
+        )
+    }
+
+    /// Extract a Vec<u64> from a [`Value::u64_hex_arr`]-shaped array.
+    pub fn to_u64_hex_vec(&self) -> Result<Vec<u64>> {
+        let arr = self.as_arr().ok_or_else(|| anyhow!("expected JSON array"))?;
+        arr.iter()
+            .map(|v| {
+                let s = v.as_str().ok_or_else(|| anyhow!("expected hex string in array"))?;
+                u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad hex u64 '{s}': {e}"))
+            })
+            .collect()
+    }
+
+    /// Field access as usize (checkpoint counters).
+    pub fn require_usize(&self, key: &str) -> Result<usize> {
+        let v = self.require(key)?;
+        let i = v.as_i64().ok_or_else(|| anyhow!("JSON key '{key}' is not an integer"))?;
+        usize::try_from(i).map_err(|_| anyhow!("JSON key '{key}' is negative: {i}"))
+    }
 }
 
 fn write_escaped(out: &mut String, s: &str) {
@@ -418,5 +447,21 @@ mod tests {
     fn f64_vec_helper() {
         let v = parse("[1, 2.5, 3]").unwrap();
         assert_eq!(v.to_f64_vec().unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn u64_hex_roundtrip_full_width() {
+        let xs = [0u64, 1, u64::MAX, 0x9E3779B97F4A7C15];
+        let v = Value::u64_hex_arr(&xs);
+        let rt = parse(&v.to_json()).unwrap();
+        assert_eq!(rt.to_u64_hex_vec().unwrap(), xs.to_vec());
+    }
+
+    #[test]
+    fn require_usize_rejects_negative() {
+        let v = parse(r#"{"n": 7, "bad": -1}"#).unwrap();
+        assert_eq!(v.require_usize("n").unwrap(), 7);
+        assert!(v.require_usize("bad").is_err());
+        assert!(v.require_usize("absent").is_err());
     }
 }

@@ -1,0 +1,78 @@
+//! Exhaustive error-metric regression: MED / NMED / MRED computed by
+//! brute force over all 65 536 operand pairs must match the values the
+//! Table I reporter (`bench/table1.rs`) emits. This pins the bench
+//! reporter to the `mult/` ground truth — if either the metric
+//! implementation or a multiplier netlist drifts, this fails loudly.
+
+use heam::bench::table1;
+use heam::mult::MultKind;
+
+/// Reporter-independent brute force: plain integer loops over the LUT,
+/// no shared helper with `Lut::error_metrics`.
+fn brute_force(lut: &heam::mult::Lut) -> (f64, f64, f64) {
+    let mut abs_sum = 0.0f64;
+    let mut rel_sum = 0.0f64;
+    let mut rel_n = 0u32;
+    for x in 0..=255u32 {
+        for y in 0..=255u32 {
+            let exact = (x * y) as i64;
+            let approx = lut.get(x as u8, y as u8) as i64;
+            let d = (approx - exact).unsigned_abs() as f64;
+            abs_sum += d;
+            if exact > 0 {
+                rel_sum += d / exact as f64;
+                rel_n += 1;
+            }
+        }
+    }
+    let med = abs_sum / 65536.0;
+    (med, med / 65025.0, rel_sum / rel_n as f64)
+}
+
+/// Every multiplier in the zoo: the reporter's MED/NMED/MRED equal the
+/// brute-force values bit for bit (same summation order, so exact
+/// equality is the correct assertion — any tolerance would mask drift).
+#[test]
+fn table1_error_metrics_match_brute_force_exhaustively() {
+    let rows = table1::error_metric_rows();
+    assert_eq!(rows.len(), MultKind::ALL.len());
+    for (kind, reported) in rows {
+        let lut = table1::lut_for(kind);
+        let (med, nmed, mred) = brute_force(&lut);
+        assert_eq!(reported.med.to_bits(), med.to_bits(), "{kind:?} MED drifted");
+        assert_eq!(reported.nmed.to_bits(), nmed.to_bits(), "{kind:?} NMED drifted");
+        assert_eq!(reported.mred.to_bits(), mred.to_bits(), "{kind:?} MRED drifted");
+    }
+}
+
+/// Ground-truth anchor for the committed HEAM design: the netlist-derived
+/// LUT must agree with the behavioral model on every pair, so the metrics
+/// computed from either representation coincide exactly.
+#[test]
+fn heam_netlist_metrics_match_behavioral_ground_truth() {
+    let netlist_lut = MultKind::Heam.lut();
+    let design = heam::mult::heam::reference_design();
+    let behavioral = heam::mult::Lut::from_fn("heam-behav", |x, y| design.eval(x, y));
+    for x in 0..=255u32 {
+        for y in 0..=255u32 {
+            assert_eq!(
+                netlist_lut.get(x as u8, y as u8),
+                behavioral.get(x as u8, y as u8),
+                "netlist vs behavioral at ({x}, {y})"
+            );
+        }
+    }
+    let a = netlist_lut.error_metrics();
+    let b = behavioral.error_metrics();
+    assert_eq!(a.med.to_bits(), b.med.to_bits());
+    assert_eq!(a.nmed.to_bits(), b.nmed.to_bits());
+    assert_eq!(a.mred.to_bits(), b.mred.to_bits());
+}
+
+/// The exact (Wallace) column must report exactly zero on all three
+/// metrics — the reporter must not manufacture error where there is none.
+#[test]
+fn wallace_reports_zero_error_distances() {
+    let (med, nmed, mred) = brute_force(&table1::lut_for(MultKind::Wallace));
+    assert_eq!((med, nmed, mred), (0.0, 0.0, 0.0));
+}

@@ -6,9 +6,144 @@ use heam::logic::{NetBuilder, Simulator};
 use heam::mult::heam::HeamDesign;
 use heam::mult::{pack_xy, Lut};
 use heam::nn::quant::QuantParams;
+use heam::opt::distributions::DistSet;
 use heam::opt::genome::{Genome, GenomeSpace};
+use heam::opt::{ga, GaConfig, Objective};
 use heam::util::json::{self, Value};
 use heam::util::propcheck::{check, Config};
+
+/// A small, artifact-free objective shared by the GA regression tests.
+fn ga_objective() -> Objective {
+    let (px, py) = DistSet::synthetic_lenet_like().aggregate();
+    Objective::new(GenomeSpace::new(8, 4), &px, &py, 3000.0, 30.0)
+}
+
+/// Byte-level equality of two GA results (best genome, fitness, merged and
+/// per-island histories) — `f64` compared via `to_bits` so "close enough"
+/// can never mask a determinism regression.
+fn assert_ga_results_identical(a: &ga::GaResult, b: &ga::GaResult, context: &str) {
+    assert_eq!(a.best, b.best, "{context}: best genome");
+    assert_eq!(
+        a.best_fitness.to_bits(),
+        b.best_fitness.to_bits(),
+        "{context}: best fitness"
+    );
+    assert_eq!(a.evaluations, b.evaluations, "{context}: evaluations");
+    let bits = |h: &[f64]| h.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.history), bits(&b.history), "{context}: merged history");
+    assert_eq!(
+        a.island_histories.len(),
+        b.island_histories.len(),
+        "{context}: island count"
+    );
+    for (k, (ha, hb)) in a.island_histories.iter().zip(&b.island_histories).enumerate() {
+        assert_eq!(bits(ha), bits(hb), "{context}: island {k} history");
+    }
+}
+
+/// GA determinism regression: for a pinned config (both single-island and
+/// 4-island), the same seed yields identical best genome and fitness
+/// history at 1, 2 and 8 evaluation threads.
+#[test]
+fn ga_identical_across_thread_counts() {
+    let obj = ga_objective();
+    for islands in [1usize, 4] {
+        let mk = |threads: usize| GaConfig {
+            population: 24,
+            generations: 10,
+            islands,
+            threads,
+            migration_interval: 3,
+            ..Default::default()
+        };
+        let baseline = ga::run(&obj, &mk(1));
+        assert_eq!(
+            baseline.island_histories.len(),
+            islands,
+            "pinned island count must be honored"
+        );
+        for threads in [2usize, 8] {
+            let r = ga::run(&obj, &mk(threads));
+            assert_ga_results_identical(
+                &r,
+                &baseline,
+                &format!("islands={islands} threads={threads}"),
+            );
+        }
+    }
+}
+
+/// Checkpoint/resume: a search interrupted at generation G and resumed
+/// reproduces the uninterrupted run bit-for-bit — even when every phase
+/// runs with a different thread count.
+#[test]
+fn ga_checkpoint_resume_reproduces_uninterrupted_run() {
+    let obj = ga_objective();
+    let full = GaConfig {
+        population: 20,
+        generations: 12,
+        islands: 2,
+        threads: 1,
+        migration_interval: 4,
+        ..Default::default()
+    };
+    let uninterrupted = ga::run(&obj, &full);
+
+    let dir = std::env::temp_dir().join("heam_ga_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ga_checkpoint.json");
+    let _ = std::fs::remove_file(&path);
+
+    // "Interrupted" run: stops after 7 generations, leaving a checkpoint
+    // (written at completion of the truncated run).
+    let partial = GaConfig {
+        generations: 7,
+        threads: 2,
+        ..full.clone()
+    };
+    let halfway = ga::run_with_checkpoint(&obj, &partial, &path).unwrap();
+    assert!(path.exists(), "truncated run must leave a checkpoint behind");
+    // The truncated run's trajectory is a prefix of the uninterrupted one.
+    for (g, (a, b)) in halfway.history[..7]
+        .iter()
+        .zip(&uninterrupted.history[..7])
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "prefix history at generation {g}");
+    }
+
+    // Resume with the full-length config (and yet another thread count).
+    let resumed = ga::run_with_checkpoint(
+        &obj,
+        &GaConfig { threads: 8, ..full.clone() },
+        &path,
+    )
+    .unwrap();
+    assert_ga_results_identical(&resumed, &uninterrupted, "resumed vs uninterrupted");
+
+    // Interrupting exactly on a migration boundary (generation 8 with
+    // interval 4) must resume identically too — the regression that
+    // motivated running migration unconditionally at epoch ends.
+    let _ = std::fs::remove_file(&path);
+    let at_boundary = GaConfig { generations: 8, ..full.clone() };
+    let _ = ga::run_with_checkpoint(&obj, &at_boundary, &path).unwrap();
+    let resumed2 = ga::run_with_checkpoint(&obj, &full, &path).unwrap();
+    assert_ga_results_identical(&resumed2, &uninterrupted, "boundary resume");
+
+    // A checkpoint from a different seed — or different trajectory-shaping
+    // hyperparameters — must be rejected, not silently continued.
+    let err = ga::run_with_checkpoint(&obj, &GaConfig { seed: 7, ..full.clone() }, &path);
+    assert!(err.is_err(), "mismatched seed must fail to resume");
+    let err = ga::run_with_checkpoint(
+        &obj,
+        &GaConfig { migration_interval: 5, ..full.clone() },
+        &path,
+    );
+    assert!(err.is_err(), "mismatched migration interval must fail to resume");
+    let err = ga::run_with_checkpoint(&obj, &GaConfig { mutation_rate: 0.5, ..full }, &path);
+    assert!(err.is_err(), "mismatched mutation rate must fail to resume");
+    let _ = std::fs::remove_dir_all(dir);
+}
 
 /// Any genome's materialized netlist computes exactly its behavioral
 /// evaluation (sampled operand pairs; the committed design is checked

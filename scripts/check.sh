@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
+#
+#   scripts/check.sh            # rust build + rust tests + python tests
+#   scripts/check.sh --rust     # rust only
+#   scripts/check.sh --python   # python only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+run_rust=1
+run_python=1
+case "${1:-}" in
+  --rust) run_python=0 ;;
+  --python) run_rust=0 ;;
+  "") ;;
+  *) echo "usage: scripts/check.sh [--rust|--python]" >&2; exit 2 ;;
+esac
+
+skipped=""
+if [ "$run_rust" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    echo "== cargo build --release =="
+    cargo build --release
+    echo "== cargo test -q =="
+    cargo test -q
+  else
+    echo "!! cargo not found — rust gate skipped (install rustup or run in CI)" >&2
+    skipped="rust"
+  fi
+fi
+
+if [ "$run_python" = 1 ]; then
+  if command -v python3 >/dev/null 2>&1; then PY=python3; else PY=python; fi
+  echo "== $PY -m pytest python/tests -q =="
+  "$PY" -m pytest python/tests -q
+fi
+
+if [ -n "$skipped" ]; then
+  echo "tier-1 gate PARTIAL: $skipped gate skipped — do NOT treat this as a full pass" >&2
+  exit 1
+fi
+echo "tier-1 gate OK"

@@ -8,7 +8,9 @@
 //!
 //! The native engine runs the batched im2col + LUT-GEMM core and is
 //! driven twice — one worker, then `HEAM_WORKERS` workers — so the run
-//! also reports the coordinator's batch-scaling behaviour. When the PJRT
+//! also reports the coordinator's batch-scaling behaviour. A final
+//! section hosts exact + HEAM variants side by side behind the
+//! multi-model gateway and replays a seeded open-loop trace against it. When the PJRT
 //! runtime or the trained artifacts are missing (fresh checkout, or a
 //! build without the `pjrt` feature), those sections degrade gracefully:
 //! PJRT is skipped and the native engine falls back to synthetic data and
@@ -22,6 +24,8 @@
 use std::sync::Arc;
 
 use heam::coordinator::drive_demo;
+use heam::coordinator::loadgen::{self, LoadgenConfig, Mode};
+use heam::coordinator::registry::ModelRegistry;
 use heam::coordinator::server::{ServeConfig, Server};
 use heam::mult::{Lut, MultKind};
 use heam::nn::{lenet, multiplier::Multiplier};
@@ -61,6 +65,7 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             max_wait_us: 2000,
             workers: 1,
+            ..Default::default()
         },
     );
     let pjrt = match pjrt {
@@ -87,6 +92,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch,
                 max_wait_us: 2000,
                 workers: n_workers,
+                ..Default::default()
             },
         );
         let report = drive_demo(&native, &ds, requests)?;
@@ -96,6 +102,43 @@ fn main() -> anyhow::Result<()> {
             break;
         }
     }
+
+    // --- multi-model gateway: exact + HEAM variants side by side, one
+    // bounded queue each, driven by the seeded open-loop load generator
+    // (the accuracy/throughput trade the gateway exists for) ---
+    println!("\n== multi-model gateway (exact + heam), seeded open-loop load ==");
+    let dims = (ds.channels, ds.height, ds.width);
+    let gateway_graph = load_graph()?;
+    let mut registry = ModelRegistry::new();
+    registry.register("exact", &gateway_graph, &Multiplier::Exact, dims)?;
+    registry.register(
+        "heam",
+        &gateway_graph,
+        &Multiplier::Lut(Arc::new(heam_lut.clone())),
+        dims,
+    )?;
+    let gateway = Server::start_gateway(
+        registry,
+        ServeConfig {
+            max_batch,
+            max_wait_us: 2000,
+            workers,
+            queue_depth: 64,
+        },
+    )?;
+    let report = loadgen::run(
+        &gateway,
+        &LoadgenConfig {
+            seed: 20220521,
+            requests: requests.min(512),
+            mode: Mode::Open { rate_rps: 2000.0 },
+            mix: vec![("exact".to_string(), 1.0), ("heam".to_string(), 1.0)],
+            burst: None,
+        },
+    )?;
+    gateway.shutdown();
+    print!("{}", report.render());
+    anyhow::ensure!(report.dropped == 0, "gateway dropped admitted requests");
 
     // --- prediction parity on a sample (needs the PJRT path AND the
     // trained weight bundle — random-weight fallback predictions would

@@ -122,6 +122,7 @@ fn main() {
                         max_batch: batch,
                         max_wait_us: wait,
                         workers: 1,
+                        ..Default::default()
                     },
                 );
                 let t0 = Instant::now();

@@ -1,0 +1,156 @@
+//! §Serving-under-load benchmark: drive the multi-model gateway with the
+//! deterministic trace-driven load generator and record the resulting
+//! latency/throughput/rejection profile in `BENCH_serving.json`.
+//!
+//! Three phases over one 2-model gateway (exact + HEAM variants of the
+//! same LeNet, random weights unless trained artifacts exist):
+//!
+//! 1. **Open loop, sustainable rate** — Poisson arrivals the pool can
+//!    absorb; measures steady-state p50/p99 and batching behaviour.
+//! 2. **Open loop, saturating with bursts** — arrivals far above
+//!    capacity against small bounded queues; measures admission-control
+//!    shedding (rejections) while the drain guarantee keeps every
+//!    admitted request answered.
+//! 3. **Closed loop** — blocking clients; measures saturation
+//!    throughput.
+//!
+//! The JSON written is the *last* phase list (all three reports), so the
+//! perf trajectory tracks each regime PR-over-PR.
+//!
+//! Run: `cargo bench --bench serving_load`
+
+use std::sync::Arc;
+
+use heam::coordinator::loadgen::{self, BurstConfig, LoadgenConfig, Mode};
+use heam::coordinator::registry::ModelRegistry;
+use heam::coordinator::server::{ServeConfig, Server};
+use heam::mult::MultKind;
+use heam::nn::lenet;
+use heam::nn::multiplier::Multiplier;
+use heam::util::json::Value;
+
+fn gateway(queue_depth: usize, workers: usize) -> Server {
+    let graph = lenet::load("artifacts/weights/digits.htb")
+        .or_else(|_| lenet::load_graph(&lenet::random_bundle(1, 28, 42)))
+        .expect("graph");
+    let mut registry = ModelRegistry::new();
+    registry
+        .register("exact", &graph, &Multiplier::Exact, (1, 28, 28))
+        .unwrap();
+    registry
+        .register(
+            "heam",
+            &graph,
+            &Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+            (1, 28, 28),
+        )
+        .unwrap();
+    Server::start_gateway(
+        registry,
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 1000,
+            workers,
+            queue_depth,
+        },
+    )
+    .unwrap()
+}
+
+fn mix() -> Vec<(String, f64)> {
+    vec![("exact".to_string(), 1.0), ("heam".to_string(), 1.0)]
+}
+
+fn main() {
+    let mut reports = Vec::new();
+
+    // 1. Sustainable open-loop rate.
+    {
+        let server = gateway(256, 2);
+        let report = loadgen::run(
+            &server,
+            &LoadgenConfig {
+                seed: 1,
+                requests: 1024,
+                mode: Mode::Open { rate_rps: 1500.0 },
+                mix: mix(),
+                burst: None,
+            },
+        )
+        .unwrap();
+        server.shutdown();
+        println!("-- open loop, sustainable rate --\n{}", report.render());
+        assert_eq!(report.dropped, 0, "drain guarantee violated");
+        reports.push(("open_sustainable", report));
+    }
+
+    // 2. Saturating open loop with burst phases against tiny queues:
+    //    admission control must shed load, not grow memory.
+    {
+        let server = gateway(8, 2);
+        let report = loadgen::run(
+            &server,
+            &LoadgenConfig {
+                seed: 2,
+                requests: 2048,
+                mode: Mode::Open { rate_rps: 20_000.0 },
+                mix: mix(),
+                burst: Some(BurstConfig {
+                    period_ms: 50,
+                    burst_ms: 20,
+                    factor: 4.0,
+                }),
+            },
+        )
+        .unwrap();
+        server.shutdown();
+        println!("-- open loop, saturating + bursts --\n{}", report.render());
+        assert_eq!(report.dropped, 0, "drain guarantee violated");
+        assert!(
+            report.rejected > 0,
+            "saturating load against depth-8 queues must shed requests"
+        );
+        reports.push(("open_saturating_burst", report));
+    }
+
+    // 3. Closed loop saturation throughput.
+    {
+        let server = gateway(256, 2);
+        let report = loadgen::run(
+            &server,
+            &LoadgenConfig {
+                seed: 3,
+                requests: 1024,
+                mode: Mode::Closed { clients: 8 },
+                mix: mix(),
+                burst: None,
+            },
+        )
+        .unwrap();
+        server.shutdown();
+        println!("-- closed loop, 8 clients --\n{}", report.render());
+        assert_eq!(report.dropped, 0, "drain guarantee violated");
+        reports.push(("closed_saturation", report));
+    }
+
+    let phases: Vec<Value> = reports
+        .iter()
+        .map(|(phase, r)| {
+            let mut obj = match r.to_json() {
+                Value::Obj(o) => o,
+                _ => unreachable!("LoadReport::to_json returns an object"),
+            };
+            obj.insert("phase".to_string(), Value::Str(phase.to_string()));
+            Value::Obj(obj)
+        })
+        .collect();
+    let root = Value::obj(vec![
+        ("bench", Value::Str("serving_load".to_string())),
+        ("phases", Value::Arr(phases)),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, root.to_json()) {
+        Ok(()) => println!("wrote {path} ({} phases)", reports.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,7 +1,7 @@
 //! Dynamic batching: coalesce queued requests under a size cap and a wait
 //! budget (the vLLM-router-style policy, scaled to this workload).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Collect a batch from a channel: blocks for the first item, then keeps
@@ -37,6 +37,27 @@ pub fn collect_batch<T>(
             Ok(item) => batch.push(item),
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Greedy (backpressure) variant of [`collect_batch`]: blocks for the
+/// first item, then drains only *immediately available* items up to
+/// `max_batch` — no timer is ever armed. The gateway's per-model batcher
+/// switches to this policy when the admission gauge shows a saturated
+/// queue: under overload a full batch is already waiting, so padding the
+/// batch window with a wait would only add latency while the bounded
+/// queue rejects new arrivals. Returns `None` when the channel closed
+/// with nothing pending (same contract as [`collect_batch`]).
+pub fn collect_batch_greedy<T>(rx: &Receiver<T>, max_batch: usize) -> Option<Vec<T>> {
+    let max_batch = max_batch.max(1);
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
         }
     }
     Some(batch)
@@ -124,6 +145,37 @@ mod tests {
             "disconnect must end the batch early, not wait out the deadline"
         );
         assert!(collect_batch(&rx, 16, Duration::from_secs(10)).is_none());
+    }
+
+    #[test]
+    fn greedy_fills_from_deep_queue_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let t0 = Instant::now();
+        assert_eq!(collect_batch_greedy(&rx, 4).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(collect_batch_greedy(&rx, 4).unwrap(), vec![4, 5, 6, 7]);
+        assert!(t0.elapsed() < Duration::from_millis(500), "must not arm a timer");
+    }
+
+    #[test]
+    fn greedy_returns_partial_batch_immediately() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(collect_batch_greedy(&rx, 16).unwrap(), vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn greedy_none_on_closed_empty_channel() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        tx.send(5).unwrap();
+        drop(tx);
+        assert_eq!(collect_batch_greedy(&rx, 0).unwrap(), vec![5]);
+        assert!(collect_batch_greedy(&rx, 4).is_none());
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! Deterministic trace-driven load generation for the serving gateway.
+//!
+//! Two client models, both seeded through [`crate::util::prng`] so the
+//! same seed replays a byte-identical trace:
+//!
+//! * **Open loop** — Poisson arrivals at a target rate, independent of
+//!   completions (the "millions of users" model: traffic does not slow
+//!   down because the server is busy). Optional burst phases multiply
+//!   the rate during periodic windows. Overload therefore *must* be shed
+//!   at admission — this is the workload that exercises the bounded
+//!   queues.
+//! * **Closed loop** — K client threads issuing requests back to back
+//!   (each client waits for its response before sending the next), the
+//!   classic saturation-throughput harness.
+//!
+//! The trace (arrival offsets, model choices, per-request image seeds)
+//! is generated *up front* as pure data: determinism lives in the trace,
+//! wall-clock jitter only affects when events fire, never what they are.
+//! [`trace_fingerprint`] hashes the full event stream so two runs can be
+//! compared with one line of shell. Results aggregate into a
+//! [`LoadReport`] (per-model p50/p99 latency, throughput, rejections,
+//! mean batch size) that serializes into `BENCH_serving.json`.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Value;
+use crate::util::prng::Rng;
+
+use super::metrics::Snapshot;
+use super::server::{Server, Submission};
+
+/// Client model: how requests are issued.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mode {
+    /// Poisson arrivals at `rate_rps` requests/second, fire-and-forget.
+    Open { rate_rps: f64 },
+    /// `clients` threads, each blocking on its previous response.
+    Closed { clients: usize },
+}
+
+/// Periodic burst phases for the open-loop generator: for the first
+/// `burst_ms` of every `period_ms` window the arrival rate is multiplied
+/// by `factor`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BurstConfig {
+    pub period_ms: u64,
+    pub burst_ms: u64,
+    pub factor: f64,
+}
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Master seed: the entire trace derives from it.
+    pub seed: u64,
+    /// Total requests to issue (split across clients in closed loop).
+    pub requests: usize,
+    pub mode: Mode,
+    /// Model mix: (registered model name, weight). Weights need not be
+    /// normalized.
+    pub mix: Vec<(String, f64)>,
+    /// Open-loop burst phases (ignored in closed loop).
+    pub burst: Option<BurstConfig>,
+}
+
+/// One trace event. `at_us` is the arrival offset from run start (0 and
+/// unused in closed loop, where client c's events are issued in order by
+/// that client). `model` indexes `LoadgenConfig::mix`. `image_seed`
+/// deterministically generates the request's input tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub at_us: u64,
+    pub client: usize,
+    pub model: usize,
+    pub image_seed: u64,
+}
+
+/// Generate the full request trace for a configuration. Pure function of
+/// the config: equal configs yield equal traces, which is the replay
+/// guarantee `heam loadgen --seed S` builds on.
+pub fn generate_trace(cfg: &LoadgenConfig) -> Result<Vec<TraceEvent>> {
+    if cfg.mix.is_empty() {
+        bail!("loadgen mix must name at least one model");
+    }
+    if cfg.mix.iter().any(|(_, w)| !w.is_finite() || *w < 0.0)
+        || cfg.mix.iter().map(|(_, w)| w).sum::<f64>() <= 0.0
+    {
+        bail!("loadgen mix weights must be non-negative with a positive sum");
+    }
+    let weights: Vec<f64> = cfg.mix.iter().map(|(_, w)| *w).collect();
+    match cfg.mode {
+        Mode::Open { rate_rps } => {
+            if !(rate_rps.is_finite() && rate_rps > 0.0) {
+                bail!("open-loop rate must be positive, got {rate_rps}");
+            }
+            if let Some(b) = &cfg.burst {
+                if b.period_ms == 0 || b.burst_ms > b.period_ms || b.factor <= 0.0 {
+                    bail!("burst config needs period > 0, burst <= period, factor > 0");
+                }
+            }
+            let mut rng = Rng::derive(cfg.seed, 0);
+            let mut t_us = 0f64;
+            let mut events = Vec::with_capacity(cfg.requests);
+            for _ in 0..cfg.requests {
+                let rate = match &cfg.burst {
+                    Some(b) => {
+                        let in_window = (t_us as u64 / 1000) % b.period_ms < b.burst_ms;
+                        if in_window {
+                            rate_rps * b.factor
+                        } else {
+                            rate_rps
+                        }
+                    }
+                    None => rate_rps,
+                };
+                // Exponential interarrival; 1-U keeps ln's argument in
+                // (0, 1] so the draw is always finite.
+                let dt_s = -(1.0 - rng.f64()).ln() / rate;
+                t_us += dt_s * 1e6;
+                events.push(TraceEvent {
+                    at_us: t_us as u64,
+                    client: 0,
+                    model: rng.weighted(&weights),
+                    image_seed: rng.next_u64(),
+                });
+            }
+            Ok(events)
+        }
+        Mode::Closed { clients } => {
+            let clients = clients.max(1);
+            let mut events = Vec::with_capacity(cfg.requests);
+            for c in 0..clients {
+                // Per-client derived streams: client c's sequence does
+                // not depend on the other clients or on scheduling.
+                let mut rng = Rng::derive(cfg.seed, 1 + c as u64);
+                let n = cfg.requests / clients + usize::from(c < cfg.requests % clients);
+                for _ in 0..n {
+                    events.push(TraceEvent {
+                        at_us: 0,
+                        client: c,
+                        model: rng.weighted(&weights),
+                        image_seed: rng.next_u64(),
+                    });
+                }
+            }
+            Ok(events)
+        }
+    }
+}
+
+/// FNV-1a over the full event stream: the replay identity of a trace.
+pub fn trace_fingerprint(events: &[TraceEvent]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for e in events {
+        eat(e.at_us);
+        eat(e.client as u64);
+        eat(e.model as u64);
+        eat(e.image_seed);
+    }
+    h
+}
+
+/// Deterministic synthetic input for one request.
+fn image_for(seed: u64, size: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..size).map(|_| rng.f32()).collect()
+}
+
+/// Per-model results.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub name: String,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_batch: f64,
+}
+
+/// Aggregate results of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub seed: u64,
+    pub mode: String,
+    pub fingerprint: u64,
+    pub wall_s: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Requests that neither completed nor were shed at admission:
+    /// admitted-but-failed waits plus hard submission errors (worker
+    /// died, shutdown raced the run). The gateway's drain guarantee
+    /// makes this 0 in every healthy run.
+    pub dropped: u64,
+    pub throughput_rps: f64,
+    pub per_model: Vec<ModelReport>,
+}
+
+impl LoadReport {
+    /// The deterministic identity line: every field here is a pure
+    /// function of (seed, config), so two runs with the same seed print
+    /// identical lines — the contract the CI smoke greps for.
+    pub fn trace_line(&self) -> String {
+        let mix: Vec<String> = self
+            .per_model
+            .iter()
+            .map(|m| format!("{}={}", m.name, m.submitted))
+            .collect();
+        format!(
+            "trace fingerprint {:#018x} mode {} submitted {} per-model [{}]",
+            self.fingerprint,
+            self.mode,
+            self.submitted,
+            mix.join(", ")
+        )
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{}\nwall {:.2}s — {:.1} req/s completed, {} rejected, dropped: {}\n",
+            self.trace_line(),
+            self.wall_s,
+            self.throughput_rps,
+            self.rejected,
+            self.dropped
+        );
+        for m in &self.per_model {
+            s.push_str(&format!(
+                "  {:<12} submitted {:>6}  completed {:>6}  rejected {:>6}  \
+                 p50 {:.2}ms  p99 {:.2}ms  mean batch {:.2}\n",
+                m.name,
+                m.submitted,
+                m.completed,
+                m.rejected,
+                m.p50_us as f64 / 1000.0,
+                m.p99_us as f64 / 1000.0,
+                m.mean_batch
+            ));
+        }
+        s
+    }
+
+    /// Serialize for `BENCH_serving.json`.
+    pub fn to_json(&self) -> Value {
+        let models: Vec<Value> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                Value::obj(vec![
+                    ("name", Value::Str(m.name.clone())),
+                    ("submitted", Value::Int(m.submitted as i64)),
+                    ("completed", Value::Int(m.completed as i64)),
+                    ("rejected", Value::Int(m.rejected as i64)),
+                    ("p50_us", Value::Int(m.p50_us as i64)),
+                    ("p99_us", Value::Int(m.p99_us as i64)),
+                    ("mean_batch", Value::Num(m.mean_batch)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("bench", Value::Str("serving_load".to_string())),
+            ("seed", Value::Int(self.seed as i64)),
+            ("mode", Value::Str(self.mode.clone())),
+            ("fingerprint", Value::Str(format!("{:#018x}", self.fingerprint))),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("submitted", Value::Int(self.submitted as i64)),
+            ("completed", Value::Int(self.completed as i64)),
+            ("rejected", Value::Int(self.rejected as i64)),
+            ("dropped", Value::Int(self.dropped as i64)),
+            ("throughput_rps", Value::Num(self.throughput_rps)),
+            ("models", Value::Arr(models)),
+        ])
+    }
+}
+
+/// Snapshot the server's per-lane metrics across a run so the report —
+/// counters *and* the latency histogram / batch stats — only reflects
+/// this run's traffic even on a reused (e.g. warmed-up) server.
+struct LaneBaseline {
+    name: String,
+    base: Snapshot,
+}
+
+/// Drive a full load-generation run against a server and aggregate the
+/// results. The trace is generated, fingerprinted, then replayed; server
+/// metrics provide latency percentiles and batch sizes, client-side
+/// accounting provides the submitted/completed/rejected/dropped totals.
+pub fn run(server: &Server, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    for (name, _) in &cfg.mix {
+        server.image_size(name)?; // fail fast on unknown models
+    }
+    let events = generate_trace(cfg)?;
+    let fingerprint = trace_fingerprint(&events);
+    let baselines: Vec<LaneBaseline> = cfg
+        .mix
+        .iter()
+        .map(|(name, _)| LaneBaseline {
+            name: name.clone(),
+            base: server.model_metrics(name).expect("validated above"),
+        })
+        .collect();
+    let sizes: Vec<usize> = cfg
+        .mix
+        .iter()
+        .map(|(name, _)| server.image_size(name).expect("validated above"))
+        .collect();
+
+    let t0 = Instant::now();
+    let (completed, client_rejected, failures) = match cfg.mode {
+        Mode::Open { .. } => run_open(server, cfg, &events, &sizes),
+        Mode::Closed { .. } => run_closed(server, cfg, &events, &sizes),
+    };
+    debug_assert_eq!(completed + client_rejected + failures, events.len() as u64);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let submitted = events.len() as u64;
+    let per_model: Vec<ModelReport> = baselines
+        .iter()
+        .enumerate()
+        .map(|(i, lane)| {
+            let s = server
+                .model_metrics(&lane.name)
+                .expect("validated above")
+                .delta_since(&lane.base);
+            let model_submitted =
+                events.iter().filter(|e| e.model == i).count() as u64;
+            ModelReport {
+                name: lane.name.clone(),
+                submitted: model_submitted,
+                completed: s.requests,
+                rejected: s.rejected,
+                p50_us: s.latency_percentile_us(0.50),
+                p99_us: s.latency_percentile_us(0.99),
+                mean_batch: s.mean_batch(),
+            }
+        })
+        .collect();
+    Ok(LoadReport {
+        seed: cfg.seed,
+        mode: match cfg.mode {
+            Mode::Open { .. } => "open".to_string(),
+            Mode::Closed { .. } => "closed".to_string(),
+        },
+        fingerprint,
+        wall_s,
+        submitted,
+        completed,
+        rejected: client_rejected,
+        // Everything neither completed nor shed at admission: failed
+        // waits plus hard submit errors. Equals `failures` by
+        // construction (each event lands in exactly one bucket); the
+        // subtraction keeps the three counters self-consistent.
+        dropped: submitted - completed - client_rejected,
+        throughput_rps: completed as f64 / wall_s,
+        per_model,
+    })
+}
+
+/// Open loop: one dispatcher thread paces submissions along the trace's
+/// arrival offsets (falling behind never skips events — standard
+/// open-loop semantics); a collector thread awaits every admitted
+/// response so the dispatcher is never blocked by a slow batch.
+fn run_open(
+    server: &Server,
+    cfg: &LoadgenConfig,
+    events: &[TraceEvent],
+    sizes: &[usize],
+) -> (u64, u64, u64) {
+    std::thread::scope(|scope| {
+        let (done_tx, done_rx) = mpsc::channel::<super::server::Pending>();
+        let collector = scope.spawn(move || {
+            let mut ok = 0u64;
+            let mut failed = 0u64;
+            while let Ok(p) = done_rx.recv() {
+                match p.wait() {
+                    Ok(_) => ok += 1,
+                    Err(_) => failed += 1,
+                }
+            }
+            (ok, failed)
+        });
+        let start = Instant::now();
+        let mut rejected = 0u64;
+        let mut hard_failed = 0u64;
+        for ev in events {
+            let target = Duration::from_micros(ev.at_us);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            let image = image_for(ev.image_seed, sizes[ev.model]);
+            // Load shedding (Rejected) is an expected regime; a hard
+            // submit error (worker died, shutdown) is not — keeping them
+            // separate makes `dropped` catch broken-server runs instead
+            // of disguising them as rejections.
+            match server.try_submit(&cfg.mix[ev.model].0, image) {
+                Ok(Submission::Admitted(pending)) => {
+                    let _ = done_tx.send(pending);
+                }
+                Ok(Submission::Rejected) => rejected += 1,
+                Err(_) => hard_failed += 1,
+            }
+        }
+        drop(done_tx);
+        let (ok, failed) = collector.join().expect("collector thread");
+        (ok, rejected, failed + hard_failed)
+    })
+}
+
+/// Closed loop: each trace client replays its own event subsequence
+/// serially, blocking on every response.
+fn run_closed(
+    server: &Server,
+    cfg: &LoadgenConfig,
+    events: &[TraceEvent],
+    sizes: &[usize],
+) -> (u64, u64, u64) {
+    let clients = match cfg.mode {
+        Mode::Closed { clients } => clients.max(1),
+        Mode::Open { .. } => unreachable!("run_closed requires closed mode"),
+    };
+    let totals: Vec<(u64, u64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let events = &*events;
+                scope.spawn(move || {
+                    let mut ok = 0u64;
+                    let mut rejected = 0u64;
+                    let mut failed = 0u64;
+                    for ev in events.iter().filter(|e| e.client == c) {
+                        let image = image_for(ev.image_seed, sizes[ev.model]);
+                        // try_submit + wait so admission shedding, hard
+                        // submit errors and post-admission failures are
+                        // counted separately.
+                        match server.try_submit(&cfg.mix[ev.model].0, image) {
+                            Ok(Submission::Admitted(p)) => match p.wait() {
+                                Ok(_) => ok += 1,
+                                Err(_) => failed += 1,
+                            },
+                            Ok(Submission::Rejected) => rejected += 1,
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (ok, rejected, failed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client")).collect()
+    });
+    let ok = totals.iter().map(|t| t.0).sum();
+    let rejected = totals.iter().map(|t| t.1).sum();
+    let failed = totals.iter().map(|t| t.2).sum();
+    (ok, rejected, failed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn open_cfg(seed: u64) -> LoadgenConfig {
+        LoadgenConfig {
+            seed,
+            requests: 200,
+            mode: Mode::Open { rate_rps: 5000.0 },
+            mix: vec![("a".into(), 1.0), ("b".into(), 3.0)],
+            burst: None,
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_for_a_seed() {
+        let a = generate_trace(&open_cfg(7)).unwrap();
+        let b = generate_trace(&open_cfg(7)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(trace_fingerprint(&a), trace_fingerprint(&b));
+        let c = generate_trace(&open_cfg(8)).unwrap();
+        assert_ne!(trace_fingerprint(&a), trace_fingerprint(&c));
+    }
+
+    #[test]
+    fn open_trace_arrivals_are_monotone_and_mix_weighted() {
+        let events = generate_trace(&open_cfg(42)).unwrap();
+        assert_eq!(events.len(), 200);
+        for w in events.windows(2) {
+            assert!(w[0].at_us <= w[1].at_us, "arrivals must be monotone");
+        }
+        let b_count = events.iter().filter(|e| e.model == 1).count();
+        // Weight 3-vs-1 mix: model b should dominate (binomial, p=0.75).
+        assert!(b_count > 100, "weighted mix ignored: {b_count}/200 for b");
+    }
+
+    #[test]
+    fn closed_trace_partitions_requests_across_clients() {
+        let cfg = LoadgenConfig {
+            seed: 3,
+            requests: 103,
+            mode: Mode::Closed { clients: 4 },
+            mix: vec![("m".into(), 1.0)],
+            burst: None,
+        };
+        let events = generate_trace(&cfg).unwrap();
+        assert_eq!(events.len(), 103);
+        for c in 0..4 {
+            let n = events.iter().filter(|e| e.client == c).count();
+            assert!(n == 25 || n == 26, "client {c} got {n}");
+        }
+    }
+
+    #[test]
+    fn burst_phases_compress_interarrivals() {
+        let base = LoadgenConfig {
+            seed: 11,
+            requests: 400,
+            mode: Mode::Open { rate_rps: 1000.0 },
+            mix: vec![("m".into(), 1.0)],
+            burst: None,
+        };
+        let steady = generate_trace(&base).unwrap();
+        let bursty = generate_trace(&LoadgenConfig {
+            burst: Some(BurstConfig {
+                period_ms: 100,
+                burst_ms: 50,
+                factor: 10.0,
+            }),
+            ..base
+        })
+        .unwrap();
+        // Same request count in strictly less simulated time.
+        assert!(
+            bursty.last().unwrap().at_us < steady.last().unwrap().at_us,
+            "burst windows must accelerate arrivals"
+        );
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        let mut cfg = open_cfg(1);
+        cfg.mix.clear();
+        assert!(generate_trace(&cfg).is_err());
+        let mut cfg = open_cfg(1);
+        cfg.mix = vec![("m".into(), 0.0)];
+        assert!(generate_trace(&cfg).is_err());
+        let mut cfg = open_cfg(1);
+        cfg.mode = Mode::Open { rate_rps: 0.0 };
+        assert!(generate_trace(&cfg).is_err());
+        let mut cfg = open_cfg(1);
+        cfg.burst = Some(BurstConfig { period_ms: 0, burst_ms: 0, factor: 2.0 });
+        assert!(generate_trace(&cfg).is_err());
+    }
+
+    #[test]
+    fn images_are_deterministic_per_seed() {
+        assert_eq!(image_for(9, 16), image_for(9, 16));
+        assert_ne!(image_for(9, 16), image_for(10, 16));
+    }
+}

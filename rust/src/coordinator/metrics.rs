@@ -1,4 +1,6 @@
-//! Serving metrics: request/batch counters and a latency histogram.
+//! Serving metrics: request/batch/rejection counters and a latency
+//! histogram, kept per model lane by the gateway and mergeable into one
+//! aggregate view.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -9,6 +11,8 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub execute_us: AtomicU64,
+    /// Requests refused at admission (bounded queue full).
+    pub rejected: AtomicU64,
     /// Log2-bucketed latency histogram (microseconds), buckets 0..=24.
     latency_buckets: [AtomicU64; 25],
 }
@@ -20,6 +24,7 @@ pub struct Snapshot {
     pub batches: u64,
     pub batched_items: u64,
     pub execute_us: u64,
+    pub rejected: u64,
     pub latency_buckets: Vec<u64>,
 }
 
@@ -38,6 +43,11 @@ impl Metrics {
         self.execute_us.fetch_add(execute_us, Ordering::Relaxed);
     }
 
+    /// Record one request refused at admission.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters.
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
@@ -45,6 +55,7 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
             execute_us: self.execute_us.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
             latency_buckets: self
                 .latency_buckets
                 .iter()
@@ -55,6 +66,54 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// An all-zero snapshot (the identity of [`Snapshot::merge`]).
+    pub fn zero() -> Self {
+        Snapshot {
+            requests: 0,
+            batches: 0,
+            batched_items: 0,
+            execute_us: 0,
+            rejected: 0,
+            latency_buckets: vec![0; 25],
+        }
+    }
+
+    /// Fold another lane's counters into this one (gateway-wide view).
+    pub fn merge(mut self, other: &Snapshot) -> Self {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.batched_items += other.batched_items;
+        self.execute_us += other.execute_us;
+        self.rejected += other.rejected;
+        if self.latency_buckets.len() < other.latency_buckets.len() {
+            self.latency_buckets.resize(other.latency_buckets.len(), 0);
+        }
+        for (a, &b) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
+            *a += b;
+        }
+        self
+    }
+
+    /// The counters accumulated since `base` was snapped from the same
+    /// `Metrics` (all counters are monotonic, so pointwise subtraction is
+    /// exact). This is how the load generator isolates one run's latency
+    /// histogram and batch stats on a reused server.
+    pub fn delta_since(&self, base: &Snapshot) -> Snapshot {
+        Snapshot {
+            requests: self.requests - base.requests,
+            batches: self.batches - base.batches,
+            batched_items: self.batched_items - base.batched_items,
+            execute_us: self.execute_us - base.execute_us,
+            rejected: self.rejected - base.rejected,
+            latency_buckets: self
+                .latency_buckets
+                .iter()
+                .zip(&base.latency_buckets)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
     /// Mean items per executed batch.
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
@@ -64,22 +123,32 @@ impl Snapshot {
         }
     }
 
-    /// Approximate latency percentile from the log2 histogram (upper bucket
-    /// bound, microseconds).
+    /// Approximate latency percentile from the log2 histogram, reported as
+    /// the *inclusive upper bound* of the bucket holding the p-quantile:
+    /// bucket `i` covers `[2^i, 2^(i+1) - 1]` µs, so a 1 µs latency
+    /// reports 1 (not 2, as the pre-fix `1 << (i + 1)` exclusive bound
+    /// did). The last bucket (24) is open-ended — it absorbs everything
+    /// ≥ 2^24 µs (~16.8 s) — so it reports its lower bound 2^24 as a
+    /// saturation marker rather than inventing an upper bound.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
         let total: u64 = self.latency_buckets.iter().sum();
         if total == 0 {
             return 0;
         }
-        let target = (total as f64 * p).ceil() as u64;
+        let target = ((total as f64 * p).ceil() as u64).clamp(1, total);
+        let last = self.latency_buckets.len() - 1;
         let mut seen = 0;
         for (i, &c) in self.latency_buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return 1u64 << (i + 1);
+                return if i == last {
+                    1u64 << last
+                } else {
+                    (1u64 << (i + 1)) - 1
+                };
             }
         }
-        1u64 << 25
+        unreachable!("seen == total >= target");
     }
 }
 
@@ -93,10 +162,12 @@ mod tests {
         m.record_request(100);
         m.record_request(200);
         m.record_batch(2, 500);
+        m.record_rejected();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.batched_items, 2);
+        assert_eq!(s.rejected, 1);
         assert_eq!(s.mean_batch(), 2.0);
     }
 
@@ -104,14 +175,47 @@ mod tests {
     fn percentile_tracks_magnitude() {
         let m = Metrics::default();
         for _ in 0..99 {
-            m.record_request(100); // bucket ~6 (64-127)
+            m.record_request(100); // bucket 6 (64..=127)
         }
         m.record_request(1_000_000); // slow outlier
         let s = m.snapshot();
         let p50 = s.latency_percentile_us(0.5);
         let p999 = s.latency_percentile_us(0.999);
-        assert!(p50 <= 256, "p50 {p50}");
+        assert_eq!(p50, 127, "p50 must report bucket 6's inclusive bound");
         assert!(p999 >= 512_000, "p999 {p999}");
+    }
+
+    /// Exact power-of-two boundary latencies land in the right bucket and
+    /// report that bucket's inclusive upper bound — the regression the
+    /// old exclusive `1 << (i + 1)` bound failed.
+    #[test]
+    fn percentile_bounds_are_inclusive_at_powers_of_two() {
+        // 1 µs is bucket 0 ([1, 1]): must report 1, not 2.
+        let m = Metrics::default();
+        m.record_request(1);
+        assert_eq!(m.snapshot().latency_percentile_us(1.0), 1);
+
+        // 2 µs is bucket 1 ([2, 3]): inclusive bound 3, not 4.
+        let m = Metrics::default();
+        m.record_request(2);
+        assert_eq!(m.snapshot().latency_percentile_us(1.0), 3);
+
+        // 2^24 µs saturates into the open-ended last bucket, which
+        // reports its lower bound 2^24 — the old code said 2^25.
+        let m = Metrics::default();
+        m.record_request(1 << 24);
+        assert_eq!(m.snapshot().latency_percentile_us(1.0), 1 << 24);
+        // ...and so does anything larger.
+        let m = Metrics::default();
+        m.record_request(u64::MAX);
+        assert_eq!(m.snapshot().latency_percentile_us(1.0), 1 << 24);
+    }
+
+    #[test]
+    fn zero_latency_counts_as_one_microsecond() {
+        let m = Metrics::default();
+        m.record_request(0);
+        assert_eq!(m.snapshot().latency_percentile_us(0.5), 1);
     }
 
     #[test]
@@ -119,5 +223,50 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.latency_percentile_us(0.9), 0);
         assert_eq!(s.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn p_zero_reports_first_occupied_bucket() {
+        let m = Metrics::default();
+        m.record_request(100); // bucket 6
+        assert_eq!(m.snapshot().latency_percentile_us(0.0), 127);
+    }
+
+    #[test]
+    fn delta_since_isolates_a_window() {
+        let m = Metrics::default();
+        m.record_request(100); // warmup traffic, bucket 6
+        m.record_batch(4, 50);
+        let base = m.snapshot();
+        m.record_request(1_000_000); // measured run, bucket 19
+        m.record_batch(1, 500);
+        m.record_rejected();
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(d.requests, 1);
+        assert_eq!(d.batches, 1);
+        assert_eq!(d.batched_items, 1);
+        assert_eq!(d.execute_us, 500);
+        assert_eq!(d.rejected, 1);
+        // The warmup's bucket-6 sample must not pollute the window's
+        // percentiles.
+        assert!(d.latency_percentile_us(0.5) >= 512_000);
+        assert_eq!(d.mean_batch(), 1.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_buckets() {
+        let a = Metrics::default();
+        a.record_request(1);
+        a.record_batch(3, 10);
+        let b = Metrics::default();
+        b.record_request(1_000_000);
+        b.record_rejected();
+        let merged = Snapshot::zero().merge(&a.snapshot()).merge(&b.snapshot());
+        assert_eq!(merged.requests, 2);
+        assert_eq!(merged.batches, 1);
+        assert_eq!(merged.batched_items, 3);
+        assert_eq!(merged.rejected, 1);
+        assert_eq!(merged.latency_percentile_us(0.25), 1);
+        assert!(merged.latency_percentile_us(0.99) >= 512_000);
     }
 }

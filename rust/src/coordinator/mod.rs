@@ -1,15 +1,24 @@
-//! The L3 serving coordinator: request router, dynamic batcher, worker
-//! dispatch and metrics.
+//! The L3 serving coordinator: a multi-model gateway (request router,
+//! bounded per-model admission queues, dynamic batchers, shared worker
+//! pool, per-lane metrics) plus a deterministic trace-driven load
+//! generator.
 //!
 //! Built on threads + channels (the offline crate snapshot has no tokio).
-//! Clients submit single images; the batcher coalesces them (size- or
-//! timeout-bound) into one PJRT execution — or one native ApproxFlow pass
-//! when no AOT artifact is available. The approximate-multiplier LUT is an
-//! *input tensor* of the AOT model, so swapping multipliers at serve time
-//! is a tensor swap, not a recompile (see DESIGN.md §6).
+//! Clients submit single images to a named model; the model's batcher
+//! coalesces them (size- or timeout-bound, greedy under backpressure)
+//! into one PJRT execution — or one native ApproxFlow pass when no AOT
+//! artifact is available. The approximate-multiplier LUT is baked into
+//! each registered variant's prepared plan (or injected as an *input
+//! tensor* on the AOT path), so a gateway hosts several multiplier
+//! variants of one network side by side and routes per request — the
+//! accuracy/throughput trading Spantidi et al. and Zervakis et al.
+//! motivate. `loadgen` replays seeded open-/closed-loop traffic against
+//! the gateway and writes `BENCH_serving.json`.
 
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
+pub mod registry;
 pub mod server;
 
 use anyhow::Result;

@@ -1,0 +1,173 @@
+//! The model registry: the set of prepared (model, multiplier) variants a
+//! gateway serves concurrently.
+//!
+//! Spantidi et al. and Zervakis et al. both motivate serving *multiple*
+//! approximate-multiplier variants side by side — accuracy traded for
+//! energy/throughput per request class. The registry is the static half
+//! of that story: each entry is a [`ModelHandle`] (prepared plan + input
+//! geometry) keyed by a unique routing name; `Server::start_gateway`
+//! turns the registry into per-model admission queues over one shared
+//! worker pool.
+
+use anyhow::{bail, Result};
+
+use crate::nn::gemm::Scratch;
+use crate::nn::graph::{Graph, ModelHandle};
+use crate::nn::multiplier::Multiplier;
+
+/// An ordered collection of uniquely-named model variants. Order is
+/// preserved: lane indices in the gateway match registration order, and
+/// the first entry is the default model for single-model APIs.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelHandle>,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an already-prepared handle. Names must be unique — the
+    /// gateway routes requests by name.
+    ///
+    /// Registration runs one zero-image probe classification — the exact
+    /// call the serving workers will make — so an `image_dims` that does
+    /// not match the graph (or a graph the native backend cannot serve)
+    /// fails *here*, at construction time, instead of panicking a worker
+    /// mid-batch and breaking the gateway's drain guarantee.
+    pub fn register_handle(&mut self, handle: ModelHandle) -> Result<()> {
+        if handle.name.is_empty() {
+            bail!("model name must not be empty");
+        }
+        if self.entries.iter().any(|e| e.name == handle.name) {
+            bail!("duplicate model name '{}'", handle.name);
+        }
+        // The forward-pass layers assert on geometry mismatches rather
+        // than returning errors, so the probe is run under catch_unwind.
+        let probe = vec![0f32; handle.image_size()];
+        let dims = handle.image_dims;
+        let prepared = handle.prepared.clone();
+        let probed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let mut scratch = Scratch::default();
+            crate::nn::lenet::classify_prepared(&prepared, &probe, dims, &mut scratch)
+                .map(|_| ())
+        }));
+        match probed {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                return Err(
+                    e.context(format!("model '{}' failed its registration probe", handle.name))
+                )
+            }
+            Err(_) => bail!(
+                "model '{}': image_dims {:?} do not match the graph (probe panicked)",
+                handle.name,
+                handle.image_dims
+            ),
+        }
+        self.entries.push(handle);
+        Ok(())
+    }
+
+    /// Prepare `graph` for `mul` and register it under `name`.
+    pub fn register(
+        &mut self,
+        name: &str,
+        graph: &Graph,
+        mul: &Multiplier,
+        image_dims: (usize, usize, usize),
+    ) -> Result<()> {
+        self.register_handle(graph.prepare_handle(name, mul, image_dims))
+    }
+
+    /// Registered names, in registration (= lane) order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Handle by name.
+    pub fn get(&self, name: &str) -> Option<&ModelHandle> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Consume the registry into its handles (gateway construction).
+    pub fn into_handles(self) -> Vec<ModelHandle> {
+        self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::lenet;
+
+    fn tiny_graph() -> Graph {
+        let bundle = lenet::random_bundle(1, 20, 3);
+        lenet::load_graph(&bundle).unwrap()
+    }
+
+    #[test]
+    fn registers_and_looks_up_in_order() {
+        let g = tiny_graph();
+        let mut reg = ModelRegistry::new();
+        reg.register("exact", &g, &Multiplier::Exact, (1, 20, 20)).unwrap();
+        reg.register(
+            "wallace",
+            &g,
+            &Multiplier::Lut(std::sync::Arc::new(crate::mult::MultKind::Wallace.lut())),
+            (1, 20, 20),
+        )
+        .unwrap();
+        assert_eq!(reg.names(), vec!["exact", "wallace"]);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get("wallace").unwrap().image_size(), 400);
+        assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn mismatched_image_dims_rejected_at_registration() {
+        let g = tiny_graph(); // expects 1x20x20 input
+        let mut reg = ModelRegistry::new();
+        // Wrong channel count: the conv layer's channel assert fires.
+        assert!(reg.register("bad-c", &g, &Multiplier::Exact, (3, 20, 20)).is_err());
+        // Image smaller than the kernel: output-size arithmetic panics.
+        assert!(reg.register("bad-hw", &g, &Multiplier::Exact, (1, 4, 4)).is_err());
+        assert!(reg.is_empty(), "failed probes must not register");
+    }
+
+    #[test]
+    fn duplicate_and_empty_names_rejected() {
+        let g = tiny_graph();
+        let mut reg = ModelRegistry::new();
+        reg.register("m", &g, &Multiplier::Exact, (1, 20, 20)).unwrap();
+        assert!(reg.register("m", &g, &Multiplier::Exact, (1, 20, 20)).is_err());
+        assert!(reg.register("", &g, &Multiplier::Exact, (1, 20, 20)).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn shared_handle_does_not_reprepare() {
+        let g = tiny_graph();
+        let handle = g.prepare_handle("m", &Multiplier::Exact, (1, 20, 20));
+        let clone = handle.clone();
+        assert!(std::sync::Arc::ptr_eq(&handle.prepared, &clone.prepared));
+        let mut reg = ModelRegistry::new();
+        reg.register_handle(handle).unwrap();
+        assert!(std::sync::Arc::ptr_eq(
+            &reg.get("m").unwrap().prepared,
+            &clone.prepared
+        ));
+    }
+}

@@ -1,32 +1,51 @@
-//! The serving loop: a request channel, a batching worker, and two
-//! execution backends — the PJRT runtime (AOT artifact) or the native
-//! ApproxFlow engine (no artifact required; also the parity reference).
+//! The serving gateway: per-model bounded admission queues, per-model
+//! dynamic batchers, and one shared worker pool executing on two
+//! backends — the PJRT runtime (AOT artifact) or the native ApproxFlow
+//! engine (no artifact required; also the parity reference).
+//!
+//! Lifecycle of a request: `submit` looks up the model lane and
+//! `try_send`s onto that lane's *bounded* queue — a full queue rejects
+//! with an error immediately (admission control; the pre-gateway server
+//! queued without bound). The lane's batcher coalesces admitted requests
+//! (size/wait-bound via `collect_batch`, switching to the greedy no-wait
+//! policy while the admission gauge shows saturation) and hands `(lane,
+//! batch)` jobs to the shared worker pool. Workers hold one backend per
+//! model and respond through each request's channel. `shutdown` closes
+//! the admission queues, then drains: batchers flush every admitted
+//! request into jobs, workers complete every job, and only then do the
+//! threads exit — no admitted request is ever dropped.
 
-use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::mult::Lut;
 use crate::nn::gemm::{PreparedGraph, Scratch};
-use crate::nn::graph::Graph;
+use crate::nn::graph::{Graph, ModelHandle};
 use crate::nn::multiplier::Multiplier;
 use crate::nn::ops::argmax;
 use crate::runtime::{model::Input, Model, Runtime};
 
-use super::batcher::collect_batch;
+use super::batcher::{collect_batch, collect_batch_greedy};
 use super::metrics::{Metrics, Snapshot};
+use super::registry::ModelRegistry;
 
-/// Batching/serving configuration.
+/// Batching/serving configuration (per model lane).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub max_batch: usize,
     pub max_wait_us: u64,
-    /// Worker threads pulling batches from the shared queue (PJRT CPU:
+    /// Worker threads pulling batch jobs from the shared queue (PJRT CPU:
     /// forced to 1, one device; the native backend fans out across this
-    /// many threads over one shared prepared graph).
+    /// many threads, each holding one backend per registered model).
     pub workers: usize,
+    /// Bounded admission-queue depth per model. A full queue rejects new
+    /// submissions with an error instead of growing without bound.
+    pub queue_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -35,6 +54,7 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_wait_us: 2000,
             workers: 1,
+            queue_depth: 256,
         }
     }
 }
@@ -45,7 +65,7 @@ struct Request {
     submitted: Instant,
 }
 
-/// Execution backend.
+/// Execution backend for one (worker, model) pair.
 enum Backend {
     /// AOT artifact via PJRT. Fixed-batch executable: requests are padded
     /// to `aot_batch`.
@@ -133,15 +153,65 @@ impl Backend {
     }
 }
 
-/// Boxed backend constructor run inside each worker thread.
-type BackendFactory = Box<dyn FnOnce() -> Result<Backend> + Send + 'static>;
+/// Backend constructor, run inside each worker thread once per model.
+type BackendFactory = Arc<dyn Fn() -> Result<Backend> + Send + Sync>;
 
-/// A running server.
-pub struct Server {
-    tx: Mutex<Option<Sender<Request>>>,
-    metrics: Arc<Metrics>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+/// One model lane handed to the gateway spawner.
+struct LaneSpec {
+    name: String,
     image_size: usize,
+    factory: BackendFactory,
+}
+
+/// Client-visible per-lane state.
+struct Lane {
+    name: String,
+    image_size: usize,
+    metrics: Arc<Metrics>,
+    /// Admitted-but-not-yet-batched gauge (backpressure signal for the
+    /// lane's batcher). i64 so the submit-side increment and batcher-side
+    /// decrement can interleave without underflow.
+    depth: Arc<AtomicI64>,
+    queue_depth: usize,
+}
+
+/// A response in flight: hold it and [`Pending::wait`] for the result.
+pub struct Pending {
+    rx: Receiver<Result<usize>>,
+}
+
+/// Outcome of a non-blocking [`Server::try_submit`]: either the request
+/// was admitted (a response is now guaranteed) or the bounded queue shed
+/// it. Hard failures (unknown model, wrong image size, server shut down)
+/// are `Err` on the outer `Result` — load shedding is an expected
+/// operating regime, not an error of the same kind.
+pub enum Submission {
+    Admitted(Pending),
+    /// The lane's bounded queue was full; the rejection was counted in
+    /// that lane's metrics.
+    Rejected,
+}
+
+impl Pending {
+    /// Block until the gateway answers. An error here means the request
+    /// failed *after* admission (backend error) — the drain guarantee
+    /// ensures the channel is always answered, never dropped.
+    pub fn wait(self) -> Result<usize> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+}
+
+/// A running multi-model gateway.
+pub struct Server {
+    /// Admission senders, one per lane; `None` after shutdown. RwLock so
+    /// concurrent submissions (read) never serialize on one another —
+    /// only shutdown takes the write lock.
+    txs: RwLock<Option<Vec<SyncSender<Request>>>>,
+    lanes: Vec<Lane>,
+    by_name: BTreeMap<String, usize>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Server {
@@ -152,7 +222,7 @@ impl Server {
     ///
     /// The PJRT handles are not `Send`, so the client, compilation and
     /// execution all live on the worker thread; startup errors are
-    /// reported back synchronously.
+    /// reported back synchronously. Single lane named `"default"`.
     pub fn start(model_path: &str, lut: Arc<Lut>, config: ServeConfig) -> Result<Self> {
         let meta_path = format!("{model_path}.meta.json");
         let meta_text = std::fs::read_to_string(&meta_path)
@@ -170,54 +240,48 @@ impl Server {
         let mut cfg = config;
         cfg.max_batch = cfg.max_batch.min(b);
         cfg.workers = 1; // one PJRT CPU device
-        Self::spawn_pool(
-            vec![Box::new(move || -> Result<Backend> {
-                let runtime = Runtime::cpu()?;
-                let model = runtime.load_hlo_text(&path)?;
-                Ok(Backend::Pjrt {
-                    model,
-                    lut_f32,
-                    aot_batch: b,
-                    image_dims: (c, h, w),
-                })
-            })],
-            c * h * w,
-            cfg,
+        Self::spawn_gateway(
+            vec![LaneSpec {
+                name: "default".to_string(),
+                image_size: c * h * w,
+                factory: Arc::new(move || -> Result<Backend> {
+                    let runtime = Runtime::cpu()?;
+                    let model = runtime.load_hlo_text(&path)?;
+                    Ok(Backend::Pjrt {
+                        model,
+                        lut_f32: lut_f32.clone(),
+                        aot_batch: b,
+                        image_dims: (c, h, w),
+                    })
+                }),
+            }],
+            &cfg,
         )
     }
 
     /// Start with the native ApproxFlow backend (no artifact needed). The
     /// graph is prepared once (im2col + LUT-GEMM plan) and shared
-    /// read-only across `config.workers` threads pulling batches from the
-    /// common queue.
+    /// read-only across `config.workers` threads pulling batch jobs from
+    /// the common queue. Single lane named `"default"`.
     pub fn start_native(
         graph: Graph,
         mul: Multiplier,
         image_dims: (usize, usize, usize),
         config: ServeConfig,
     ) -> Self {
-        let (c, h, w) = image_dims;
-        let prepared = Arc::new(graph.prepare(&mul));
-        let makers: Vec<BackendFactory> = (0..config.workers.max(1))
-            .map(|_| {
-                let prepared = prepared.clone();
-                Box::new(move || {
-                    Ok(Backend::Native {
-                        prepared,
-                        image_dims,
-                        scratch: Scratch::default(),
-                    })
-                }) as BackendFactory
-            })
-            .collect();
-        Self::spawn_pool(makers, c * h * w, config)
+        let handle = graph.prepare_handle("default", &mul, image_dims);
+        let mut registry = ModelRegistry::new();
+        registry
+            .register_handle(handle)
+            .expect("registering the native model (image_dims must match the graph)");
+        Self::start_gateway(registry, config)
             .expect("native backend construction is infallible")
     }
 
     /// Start a native worker *pool*: `config.workers` threads, each with
     /// its own engine built by `factory` (e.g. reloading the same weight
     /// bundle). Batches are pulled from a shared queue — the dispatch
-    /// layer of the coordinator.
+    /// layer of the coordinator. Single lane named `"default"`.
     pub fn start_native_pool(
         factory: impl Fn() -> Result<(Graph, Multiplier)> + Send + Sync + 'static,
         image_dims: (usize, usize, usize),
@@ -225,69 +289,149 @@ impl Server {
     ) -> Result<Self> {
         let (c, h, w) = image_dims;
         let factory = Arc::new(factory);
-        let makers: Vec<BackendFactory> = (0..config.workers.max(1))
-            .map(|_| {
-                let f = factory.clone();
-                Box::new(move || {
-                    let (graph, mul) = f()?;
+        Self::spawn_gateway(
+            vec![LaneSpec {
+                name: "default".to_string(),
+                image_size: c * h * w,
+                factory: Arc::new(move || -> Result<Backend> {
+                    let (graph, mul) = factory()?;
                     Ok(Backend::Native {
                         prepared: Arc::new(graph.prepare(&mul)),
                         image_dims,
                         scratch: Scratch::default(),
                     })
-                }) as BackendFactory
-            })
-            .collect();
-        Self::spawn_pool(makers, c * h * w, config)
+                }),
+            }],
+            &config,
+        )
     }
 
-    fn spawn_pool(
-        makers: Vec<BackendFactory>,
-        image_size: usize,
-        config: ServeConfig,
-    ) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let metrics = Arc::new(Metrics::default());
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let n_workers = makers.len();
-        // Batcher thread: coalesces requests into jobs.
-        let (job_tx, job_rx) = mpsc::channel::<Vec<Request>>();
+    /// Start a multi-model gateway: every registered variant gets its own
+    /// bounded admission queue and batcher; `config.workers` threads
+    /// share the execution pool, each holding one native backend per
+    /// model (prepared plans are shared by `Arc`, so per-worker state is
+    /// just scratch buffers).
+    pub fn start_gateway(registry: ModelRegistry, config: ServeConfig) -> Result<Self> {
+        anyhow::ensure!(!registry.is_empty(), "gateway needs at least one model");
+        let lanes = registry
+            .into_handles()
+            .into_iter()
+            .map(|handle: ModelHandle| {
+                let image_size = handle.image_size();
+                let ModelHandle {
+                    name,
+                    prepared,
+                    image_dims,
+                } = handle;
+                LaneSpec {
+                    name,
+                    image_size,
+                    factory: Arc::new(move || -> Result<Backend> {
+                        Ok(Backend::Native {
+                            prepared: prepared.clone(),
+                            image_dims,
+                            scratch: Scratch::default(),
+                        })
+                    }),
+                }
+            })
+            .collect();
+        Self::spawn_gateway(lanes, &config)
+    }
+
+    fn spawn_gateway(specs: Vec<LaneSpec>, config: &ServeConfig) -> Result<Self> {
+        let n_workers = config.workers.max(1);
+        let queue_depth = config.queue_depth.max(1);
+        let max_batch = config.max_batch.max(1);
+        let wait = Duration::from_micros(config.max_wait_us);
+
+        // Shared job queue: (lane, batch) pairs. Bounded to the worker
+        // count so a saturated pool *backpressures the batchers* — they
+        // block here, the per-lane admission queues fill, and overflow
+        // is rejected at `submit`. An unbounded job queue would quietly
+        // re-grow the very unbounded buffer admission control removed.
+        let (job_tx, job_rx) = mpsc::sync_channel::<(usize, Vec<Request>)>(n_workers);
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let batcher = {
-            let wait = Duration::from_micros(config.max_wait_us);
-            let max_batch = config.max_batch;
-            std::thread::spawn(move || {
-                while let Some(batch) = collect_batch(&rx, max_batch, wait) {
-                    if job_tx.send(batch).is_err() {
+
+        let mut txs = Vec::with_capacity(specs.len());
+        let mut lanes = Vec::with_capacity(specs.len());
+        let mut by_name = BTreeMap::new();
+        let mut threads = Vec::new();
+
+        // One bounded queue + batcher per lane.
+        for (idx, spec) in specs.iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
+            let metrics = Arc::new(Metrics::default());
+            let depth = Arc::new(AtomicI64::new(0));
+            if by_name.insert(spec.name.clone(), idx).is_some() {
+                anyhow::bail!("duplicate model name '{}'", spec.name);
+            }
+            txs.push(tx);
+            lanes.push(Lane {
+                name: spec.name.clone(),
+                image_size: spec.image_size,
+                metrics,
+                depth: depth.clone(),
+                queue_depth,
+            });
+            let jobs = job_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                loop {
+                    // Backpressure-aware policy: when the admission gauge
+                    // shows a full batch already queued, skip the batch
+                    // window entirely — waiting would only add latency
+                    // while the bounded queue rejects new arrivals.
+                    let saturated = depth.load(Ordering::Relaxed) >= max_batch as i64;
+                    let batch = if saturated {
+                        collect_batch_greedy(&rx, max_batch)
+                    } else {
+                        collect_batch(&rx, max_batch, wait)
+                    };
+                    let Some(batch) = batch else { break };
+                    depth.fetch_sub(batch.len() as i64, Ordering::Relaxed);
+                    if jobs.send((idx, batch)).is_err() {
                         break;
                     }
                 }
-            })
-        };
-        let mut handles = vec![batcher];
-        for make_backend in makers {
-            let m = metrics.clone();
+            }));
+        }
+        drop(job_tx); // workers exit when every batcher has drained
+
+        // The shared worker pool: each worker builds one backend per lane
+        // on its own thread (PJRT handles are not Send), reports
+        // readiness, then serves jobs for any lane.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let factories: Arc<Vec<BackendFactory>> =
+            Arc::new(specs.iter().map(|s| s.factory.clone()).collect());
+        let lane_metrics: Arc<Vec<Arc<Metrics>>> =
+            Arc::new(lanes.iter().map(|l| l.metrics.clone()).collect());
+        for _ in 0..n_workers {
             let ready = ready_tx.clone();
             let jobs = job_rx.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut backend = match make_backend() {
-                    Ok(b) => {
-                        let _ = ready.send(Ok(()));
-                        b
+            let factories = factories.clone();
+            let metrics = lane_metrics.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut backends = Vec::with_capacity(factories.len());
+                for make in factories.iter() {
+                    match make() {
+                        Ok(b) => backends.push(b),
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
                     }
-                    Err(e) => {
-                        let _ = ready.send(Err(e));
-                        return;
-                    }
-                };
-                let image_size = backend.image_size();
+                }
+                let _ = ready.send(Ok(()));
                 loop {
                     // Pull the next batch job (work-sharing across the pool).
-                    let batch = match jobs.lock().unwrap().recv() {
-                        Ok(b) => b,
+                    let (lane, batch) = match jobs.lock().unwrap().recv() {
+                        Ok(j) => j,
                         Err(_) => break,
                     };
+                    let backend = &mut backends[lane];
+                    let m = &metrics[lane];
                     let count = batch.len();
+                    let image_size = backend.image_size();
                     let mut flat = Vec::with_capacity(count * image_size);
                     for r in &batch {
                         flat.extend_from_slice(&r.image);
@@ -313,53 +457,131 @@ impl Server {
             }));
         }
         drop(ready_tx);
-        // Wait for every backend to come up (or fail).
+        // Wait for every worker to come up (or fail). On failure, close
+        // the admission queues so batchers and surviving workers unwind,
+        // then join everything — no threads are leaked.
         for _ in 0..n_workers {
-            ready_rx
+            let up = ready_rx
                 .recv()
-                .map_err(|_| anyhow!("server worker died during startup"))??;
+                .map_err(|_| anyhow!("server worker died during startup"));
+            if let Err(e) = up.and_then(|r| r) {
+                drop(txs);
+                for h in threads {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
         }
         Ok(Self {
-            tx: Mutex::new(Some(tx)),
-            metrics,
-            workers: Mutex::new(handles),
-            image_size,
+            txs: RwLock::new(Some(txs)),
+            lanes,
+            by_name,
+            threads: Mutex::new(threads),
         })
     }
 
-    /// Classify one image (blocking).
-    pub fn classify(&self, image: Vec<f32>) -> Result<usize> {
+    /// Registered model names, in lane order (lane 0 is the default).
+    pub fn model_names(&self) -> Vec<&str> {
+        self.lanes.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// Expected flattened input size for a model.
+    pub fn image_size(&self, model: &str) -> Result<usize> {
+        Ok(self.lanes[self.lane_idx(model)?].image_size)
+    }
+
+    fn lane_idx(&self, model: &str) -> Result<usize> {
+        self.by_name
+            .get(model)
+            .copied()
+            .ok_or_else(|| anyhow!("no model '{model}' (have: {:?})", self.model_names()))
+    }
+
+    /// Submit one image to a model without blocking on the result.
+    /// Admission control happens here: a full bounded queue sheds the
+    /// request (`Ok(Submission::Rejected)`, counted in that lane's
+    /// metrics) instead of queueing without bound. Hard failures —
+    /// unknown model, wrong image size, server shut down — are `Err`.
+    /// An `Admitted` submission is guaranteed a response, even across
+    /// [`Server::shutdown`].
+    pub fn try_submit(&self, model: &str, image: Vec<f32>) -> Result<Submission> {
+        let idx = self.lane_idx(model)?;
+        let lane = &self.lanes[idx];
         anyhow::ensure!(
-            image.len() == self.image_size,
+            image.len() == lane.image_size,
             "image has {} values, expected {}",
             image.len(),
-            self.image_size
+            lane.image_size
         );
         let (resp_tx, resp_rx) = mpsc::channel();
-        {
-            let guard = self.tx.lock().unwrap();
-            let tx = guard.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
-            tx.send(Request {
-                image,
-                resp: resp_tx,
-                submitted: Instant::now(),
-            })
-            .map_err(|_| anyhow!("server worker exited"))?;
+        let guard = self.txs.read().unwrap();
+        let txs = guard.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
+        // Gauge up before the send so the batcher can never observe a
+        // queued item without a matching increment; undo on rejection.
+        lane.depth.fetch_add(1, Ordering::Relaxed);
+        match txs[idx].try_send(Request {
+            image,
+            resp: resp_tx,
+            submitted: Instant::now(),
+        }) {
+            Ok(()) => Ok(Submission::Admitted(Pending { rx: resp_rx })),
+            Err(TrySendError::Full(_)) => {
+                lane.depth.fetch_sub(1, Ordering::Relaxed);
+                lane.metrics.record_rejected();
+                Ok(Submission::Rejected)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                lane.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(anyhow!("server worker exited"))
+            }
         }
-        resp_rx.recv().map_err(|_| anyhow!("server dropped the request"))?
     }
 
-    /// Metrics snapshot.
+    /// [`Server::try_submit`] with load shedding folded into the error:
+    /// convenient for callers that treat a shed request like any other
+    /// failure.
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<Pending> {
+        match self.try_submit(model, image)? {
+            Submission::Admitted(p) => Ok(p),
+            Submission::Rejected => {
+                let depth = self.lanes[self.lane_idx(model)?].queue_depth;
+                Err(anyhow!(
+                    "model '{model}': admission queue full ({depth} pending)"
+                ))
+            }
+        }
+    }
+
+    /// Classify one image on a named model (blocking).
+    pub fn classify_model(&self, model: &str, image: Vec<f32>) -> Result<usize> {
+        self.submit(model, image)?.wait()
+    }
+
+    /// Classify one image on the default model (blocking).
+    pub fn classify(&self, image: Vec<f32>) -> Result<usize> {
+        self.classify_model(&self.lanes[0].name, image)
+    }
+
+    /// Merged metrics snapshot across every model lane.
     pub fn metrics_snapshot(&self) -> Snapshot {
-        self.metrics.snapshot()
+        self.lanes
+            .iter()
+            .fold(Snapshot::zero(), |acc, l| acc.merge(&l.metrics.snapshot()))
     }
 
-    /// Stop accepting requests and join the worker.
+    /// Metrics snapshot of one model lane.
+    pub fn model_metrics(&self, model: &str) -> Result<Snapshot> {
+        Ok(self.lanes[self.lane_idx(model)?].metrics.snapshot())
+    }
+
+    /// Stop accepting requests, drain everything already admitted, and
+    /// join all threads. Every request admitted before this call still
+    /// receives its response; submissions after it fail cleanly.
     pub fn shutdown(&self) {
         let handles: Vec<_> = {
-            let mut tx = self.tx.lock().unwrap();
-            tx.take(); // close the channel
-            self.workers.lock().unwrap().drain(..).collect()
+            let mut txs = self.txs.write().unwrap();
+            txs.take(); // close every admission queue
+            self.threads.lock().unwrap().drain(..).collect()
         };
         for h in handles {
             let _ = h.join();
@@ -376,6 +598,7 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mult::MultKind;
     use crate::nn::lenet;
 
     fn native_server(max_batch: usize, wait_us: u64) -> Server {
@@ -389,8 +612,24 @@ mod tests {
                 max_batch,
                 max_wait_us: wait_us,
                 workers: 1,
+                ..Default::default()
             },
         )
+    }
+
+    fn two_model_gateway(config: ServeConfig) -> Server {
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.register("exact", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+        reg.register(
+            "wallace",
+            &graph,
+            &Multiplier::Lut(Arc::new(MultKind::Wallace.lut())),
+            (1, 28, 28),
+        )
+        .unwrap();
+        Server::start_gateway(reg, config).unwrap()
     }
 
     #[test]
@@ -412,6 +651,7 @@ mod tests {
         assert!(results.iter().all(|&p| p < 10));
         let m = server.metrics_snapshot();
         assert_eq!(m.requests, 16);
+        assert_eq!(m.rejected, 0);
         assert!(m.batches <= 16);
         assert!(m.mean_batch() >= 1.0);
         server.shutdown();
@@ -444,6 +684,7 @@ mod tests {
                 max_batch: 2,
                 max_wait_us: 200,
                 workers: 3,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -484,6 +725,7 @@ mod tests {
                 max_batch: 2,
                 max_wait_us: 200,
                 workers: 3,
+                ..Default::default()
             },
         );
         let preds: Vec<usize> = std::thread::scope(|s| {
@@ -540,5 +782,91 @@ mod tests {
             m.mean_batch()
         );
         server.shutdown();
+    }
+
+    #[test]
+    fn gateway_routes_by_model_name() {
+        let server = two_model_gateway(ServeConfig {
+            max_batch: 4,
+            max_wait_us: 500,
+            workers: 2,
+            ..Default::default()
+        });
+        assert_eq!(server.model_names(), vec!["exact", "wallace"]);
+        assert_eq!(server.image_size("exact").unwrap(), 28 * 28);
+        let img = vec![0.4; 28 * 28];
+        let a = server.classify_model("exact", img.clone()).unwrap();
+        let b = server.classify_model("wallace", img.clone()).unwrap();
+        assert!(a < 10 && b < 10);
+        assert!(server.classify_model("nope", img).is_err());
+        // Per-lane metrics saw exactly their own traffic.
+        assert_eq!(server.model_metrics("exact").unwrap().requests, 1);
+        assert_eq!(server.model_metrics("wallace").unwrap().requests, 1);
+        assert_eq!(server.metrics_snapshot().requests, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn full_queue_rejects_with_error_and_counts() {
+        // Tiny queue, one worker: stuff the lane far beyond its bound
+        // from one thread; overflow must reject immediately (not block,
+        // not queue), and every *admitted* request must still complete.
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let server = Server::start_native(
+            graph,
+            Multiplier::Exact,
+            (1, 28, 28),
+            ServeConfig {
+                max_batch: 2,
+                max_wait_us: 200,
+                workers: 1,
+                queue_depth: 2,
+            },
+        );
+        let mut pending = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..64 {
+            match server.submit("default", vec![0.3; 28 * 28]) {
+                Ok(p) => pending.push(p),
+                Err(_) => rejected += 1,
+            }
+        }
+        let admitted = pending.len();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let m = server.metrics_snapshot();
+        assert_eq!(m.requests as usize, admitted);
+        assert_eq!(m.rejected as usize, rejected);
+        assert!(
+            rejected > 0,
+            "64 instant submissions into a depth-2 queue must overflow"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_all_admitted_requests() {
+        let server = two_model_gateway(ServeConfig {
+            max_batch: 4,
+            max_wait_us: 5000,
+            workers: 1,
+            ..Default::default()
+        });
+        let names = ["exact", "wallace"];
+        let pending: Vec<Pending> = (0..24)
+            .map(|i| {
+                server
+                    .submit(names[i % 2], vec![(i as f32) / 24.0; 28 * 28])
+                    .unwrap()
+            })
+            .collect();
+        server.shutdown(); // must drain, not drop
+        for p in pending {
+            assert!(p.wait().is_ok(), "admitted request dropped at shutdown");
+        }
+        assert_eq!(server.metrics_snapshot().requests, 24);
+        assert!(server.submit("exact", vec![0.0; 28 * 28]).is_err());
     }
 }

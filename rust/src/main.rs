@@ -16,6 +16,10 @@
 //!   AOT-compiled model, or (`--native`) the in-process batched LUT-GEMM
 //!   engine with a `--workers` thread pool; see `examples/serve_lenet.rs`
 //!   for the library API.
+//! * `loadgen`    — replay seeded open-/closed-loop traffic against a
+//!   multi-model gateway (one prepared variant per `--mix` entry) and
+//!   write latency/throughput/rejection results to `BENCH_serving.json`.
+//!   The same `--seed` replays a byte-identical trace.
 
 use std::sync::Arc;
 
@@ -52,6 +56,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "luts" => luts(rest),
         "report" => report(rest),
         "serve" => serve(rest),
+        "loadgen" => loadgen(rest),
         "nonlinear" => nonlinear(rest),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -72,6 +77,7 @@ fn print_usage() {
            luts       dump every multiplier's LUT to artifacts/luts/\n\
            report     print the standalone multiplier cost table\n\
            serve      serve a model (PJRT runtime, or --native LUT-GEMM pool)\n\
+           loadgen    replay seeded traffic against a multi-model gateway\n\
            nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\n\
          Run `heam <subcommand> --help` for options."
     );
@@ -364,6 +370,7 @@ fn serve(argv: &[String]) -> Result<()> {
     .opt("batch", "16", "max dynamic batch")
     .opt("wait-us", "2000", "batcher wait budget (us)")
     .opt("workers", "4", "native worker threads (PJRT always uses 1)")
+    .opt("queue-depth", "256", "bounded admission queue (full = reject)")
     .flag("native", "serve through the native batched LUT-GEMM engine")
     .parse(argv)?;
     let lut = if args.get("lut").is_empty() {
@@ -375,6 +382,7 @@ fn serve(argv: &[String]) -> Result<()> {
         max_batch: args.get_as("batch")?,
         max_wait_us: args.get_as("wait-us")?,
         workers: args.get_as("workers")?,
+        queue_depth: args.get_as("queue-depth")?,
     };
     let ds = heam::data::ImageDataset::load(args.get("data"), "serve")?;
     let server = if args.is_set("native") {
@@ -393,6 +401,96 @@ fn serve(argv: &[String]) -> Result<()> {
     let report = heam::coordinator::drive_demo(&server, &ds, n)?;
     println!("{report}");
     server.shutdown();
+    Ok(())
+}
+
+fn loadgen(argv: &[String]) -> Result<()> {
+    use heam::coordinator::loadgen::{self, BurstConfig, LoadgenConfig, Mode};
+    use heam::coordinator::registry::ModelRegistry;
+    let args = Args::new(
+        "heam loadgen",
+        "Replay seeded open-/closed-loop traffic against a multi-model gateway",
+    )
+    .opt("seed", "7", "trace seed (same seed = byte-identical trace)")
+    .opt("requests", "512", "total requests to issue")
+    .opt("mode", "open", "open (Poisson arrivals) | closed (blocking clients)")
+    .opt("rate", "2000", "open-loop arrival rate (req/s)")
+    .opt("clients", "4", "closed-loop client threads")
+    .opt(
+        "mix",
+        "exact=1,heam=1",
+        "model mix: <mult>=<weight>,... (zoo names or LUT paths)",
+    )
+    .opt("weights", "artifacts/weights/digits.htb", "weight bundle (random fallback)")
+    .opt("channels", "1", "input channels")
+    .opt("hw", "28", "input height = width")
+    .opt("queue-depth", "64", "bounded admission queue per model (full = reject)")
+    .opt("batch", "16", "max dynamic batch")
+    .opt("wait-us", "2000", "batcher wait budget (us)")
+    .opt("workers", "2", "worker threads (shared across all models)")
+    .opt("burst-period-ms", "0", "open-loop burst period (0 = steady rate)")
+    .opt("burst-ms", "0", "burst window inside each period (ms)")
+    .opt("burst-factor", "4", "rate multiplier inside burst windows")
+    .opt("out", "BENCH_serving.json", "report JSON path (empty = don't write)")
+    .parse(argv)?;
+
+    let mix = args.get_kv_list("mix")?;
+    anyhow::ensure!(!mix.is_empty(), "--mix must name at least one multiplier");
+    let (c, hw): (usize, usize) = (args.get_as("channels")?, args.get_as("hw")?);
+    let dims = (c, hw, hw);
+    let graph = match heam::nn::lenet::load(args.get("weights")) {
+        Ok(g) => g,
+        Err(_) => {
+            println!("(no weight artifact — serving random weights)");
+            heam::nn::lenet::load_graph(&heam::nn::lenet::random_bundle(c, hw, 42))?
+        }
+    };
+    let mut registry = ModelRegistry::new();
+    for (name, _) in &mix {
+        let mul = multiplier_by_name(name)?;
+        registry.register(name, &graph, &mul, dims)?;
+    }
+    let server = Server::start_gateway(
+        registry,
+        ServeConfig {
+            max_batch: args.get_as("batch")?,
+            max_wait_us: args.get_as("wait-us")?,
+            workers: args.get_as("workers")?,
+            queue_depth: args.get_as("queue-depth")?,
+        },
+    )?;
+
+    let burst_period: u64 = args.get_as("burst-period-ms")?;
+    let cfg = LoadgenConfig {
+        seed: args.get_as("seed")?,
+        requests: args.get_as("requests")?,
+        mode: match args.get("mode") {
+            "open" => Mode::Open { rate_rps: args.get_as("rate")? },
+            "closed" => Mode::Closed { clients: args.get_as("clients")? },
+            other => bail!("unknown mode '{other}' (open | closed)"),
+        },
+        mix,
+        burst: (burst_period > 0).then(|| {
+            Ok::<_, anyhow::Error>(BurstConfig {
+                period_ms: burst_period,
+                burst_ms: args.get_as("burst-ms")?,
+                factor: args.get_as("burst-factor")?,
+            })
+        })
+        .transpose()?,
+    };
+    let report = loadgen::run(&server, &cfg)?;
+    server.shutdown();
+    print!("{}", report.render());
+    if let Some(out) = args.get_nonempty("out") {
+        std::fs::write(out, report.to_json().to_json())?;
+        println!("wrote {out}");
+    }
+    anyhow::ensure!(
+        report.dropped == 0,
+        "{} admitted requests were dropped — the drain guarantee is broken",
+        report.dropped
+    );
     Ok(())
 }
 

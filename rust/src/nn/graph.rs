@@ -201,6 +201,46 @@ impl Graph {
             }
         }
     }
+
+    /// Prepare this graph for `mul` and wrap it in a named, shareable
+    /// [`ModelHandle`] — the unit the serving gateway's `ModelRegistry`
+    /// hosts. The handle owns the prepared plan behind an `Arc`, so
+    /// registering the same variant with several servers (or cloning it
+    /// across worker pools) never re-runs preparation.
+    pub fn prepare_handle(
+        &self,
+        name: &str,
+        mul: &Multiplier,
+        image_dims: (usize, usize, usize),
+    ) -> ModelHandle {
+        ModelHandle {
+            name: name.to_string(),
+            prepared: std::sync::Arc::new(self.prepare(mul)),
+            image_dims,
+        }
+    }
+}
+
+/// A named, immutable handle to a prepared (im2col + LUT-GEMM) execution
+/// plan plus the input geometry it expects. This is the currency of the
+/// multi-model serving layer: one handle per (model, multiplier) variant,
+/// cheaply cloneable, shareable read-only across worker threads.
+#[derive(Clone)]
+pub struct ModelHandle {
+    /// Registry/routing name (e.g. `"lenet-heam"`).
+    pub name: String,
+    /// The prepared plan (weights + compact multiplier tables baked in).
+    pub prepared: std::sync::Arc<super::gemm::PreparedGraph>,
+    /// Expected input geometry (channels, height, width).
+    pub image_dims: (usize, usize, usize),
+}
+
+impl ModelHandle {
+    /// Flattened input size in f32 values.
+    pub fn image_size(&self) -> usize {
+        let (c, h, w) = self.image_dims;
+        c * h * w
+    }
 }
 
 #[cfg(test)]

@@ -175,6 +175,25 @@ impl Args {
         (!v.is_empty()).then_some(v)
     }
 
+    /// Parse an option as a `key=weight,key2=weight2` list; a bare `key`
+    /// (no `=`) gets weight 1. This is the model-mix syntax of
+    /// `heam loadgen --mix exact=1,heam=3`.
+    pub fn get_kv_list(&self, name: &str) -> Result<Vec<(String, f64)>> {
+        let mut out = Vec::new();
+        for part in self.get(name).split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match part.split_once('=') {
+                Some((k, v)) => {
+                    let w: f64 = v.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad weight '{v}' for '{k}' in --{name}: {e}")
+                    })?;
+                    out.push((k.trim().to_string(), w));
+                }
+                None => out.push((part.to_string(), 1.0)),
+            }
+        }
+        Ok(out)
+    }
+
     /// Boolean flag state.
     pub fn is_set(&self, name: &str) -> bool {
         *self
@@ -257,5 +276,29 @@ mod tests {
     fn missing_value_errors() {
         let r = Args::new("t", "test").opt("k", "0", "k").parse(&argv(&["--k"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn kv_list_parses_weights_and_defaults() {
+        let a = Args::new("t", "test")
+            .opt("mix", "", "model mix")
+            .parse(&argv(&["--mix", "exact=1, heam=2.5 ,wallace"]))
+            .unwrap();
+        assert_eq!(
+            a.get_kv_list("mix").unwrap(),
+            vec![
+                ("exact".to_string(), 1.0),
+                ("heam".to_string(), 2.5),
+                ("wallace".to_string(), 1.0)
+            ]
+        );
+        // Empty input -> empty list; bad weights -> error.
+        let b = Args::new("t", "test").opt("mix", "", "m").parse(&argv(&[])).unwrap();
+        assert!(b.get_kv_list("mix").unwrap().is_empty());
+        let c = Args::new("t", "test")
+            .opt("mix", "", "m")
+            .parse(&argv(&["--mix", "x=notanumber"]))
+            .unwrap();
+        assert!(c.get_kv_list("mix").is_err());
     }
 }

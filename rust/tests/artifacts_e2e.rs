@@ -90,6 +90,7 @@ fn pjrt_and_native_predictions_agree() {
             max_batch: 8,
             max_wait_us: 500,
             workers: 1,
+            ..Default::default()
         },
     )
     .unwrap();

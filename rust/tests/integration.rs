@@ -180,6 +180,7 @@ fn coordinator_request_response_invariant() {
                 max_batch,
                 max_wait_us: wait,
                 workers: 1,
+                ..Default::default()
             },
         );
         let preds: Vec<usize> = std::thread::scope(|s| {

@@ -1,10 +1,12 @@
 //! Property-based tests (propcheck) over the core invariants:
 //! genome/netlist equivalence, simulator consistency, JSON round-trips,
-//! quantization semantics, cost-model monotonicity, and LUT algebra.
+//! quantization/requantization semantics, cost-model monotonicity, and
+//! LUT algebra.
 
 use heam::logic::{NetBuilder, Simulator};
 use heam::mult::heam::HeamDesign;
 use heam::mult::{pack_xy, Lut};
+use heam::nn::ops::Requant;
 use heam::nn::quant::QuantParams;
 use heam::opt::distributions::DistSet;
 use heam::opt::genome::{Genome, GenomeSpace};
@@ -258,6 +260,82 @@ fn quant_roundtrip_bounded() {
         assert_eq!(q.quantize(hi + 100.0), 255);
         assert_eq!(q.quantize(lo - 100.0), 0);
     });
+}
+
+/// f64 reference for the fixed-point requantizer: `round(acc * m) + zo`,
+/// ReLU floor, u8 clamp — the real-valued semantics `Requant`
+/// approximates with a 31-bit significand and a rounding right-shift.
+fn requant_reference(m: f64, zo: i32, relu: bool, acc: i64) -> u8 {
+    let v = (acc as f64 * m).round() + zo as f64;
+    let v = if relu { v.max(zo as f64) } else { v };
+    v.clamp(0.0, 255.0) as u8
+}
+
+/// The fixed-point rescale matches the f64 reference within 1 ulp (one
+/// output code) across sign and overflow edge cases, including the i32
+/// accumulator extremes and just beyond them. Both sides round half away
+/// from zero, so the only admissible divergence is the last bit of the
+/// 31-bit significand.
+#[test]
+fn requant_matches_f64_reference_within_one_ulp() {
+    check(Config::default().cases(200).seed(8), "requant vs f64", |g| {
+        // m = mant * 2^exp spans ~2^-31 .. 2^9: far beyond any scale a
+        // real layer produces, in both directions.
+        let exp = g.i64_range(-30, 8) as i32;
+        let mant = g.f64_range(0.5, 2.0);
+        let m = mant * (exp as f64).exp2();
+        let zo = g.i64_range(0, 255) as i32;
+        let relu = g.bool();
+        let rq = Requant::new(m, zo, relu);
+        let mut accs = vec![
+            0i64,
+            1,
+            -1,
+            255,
+            -255,
+            i32::MAX as i64,
+            i32::MIN as i64,
+            i32::MAX as i64 + 1,
+            i32::MIN as i64 - 1,
+        ];
+        for _ in 0..32 {
+            accs.push(g.rng().range_inclusive(i32::MIN as i64, i32::MAX as i64));
+        }
+        for &acc in &accs {
+            let got = rq.apply(acc) as i64;
+            let want = requant_reference(m, zo, relu, acc) as i64;
+            assert!(
+                (got - want).abs() <= 1,
+                "m={m} zo={zo} relu={relu} acc={acc}: fixed {got} vs f64 {want}"
+            );
+        }
+    });
+}
+
+/// Degenerate scales — zero, negative, and the infinity a zero output
+/// scale denominator produces in `for_layer` — are rejected loudly, not
+/// silently folded into garbage shifts.
+#[test]
+fn requant_rejects_degenerate_scales() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    for m in [0.0, -0.25, f64::INFINITY, f64::NAN] {
+        assert!(
+            catch_unwind(AssertUnwindSafe(|| Requant::new(m, 0, false))).is_err(),
+            "m={m} must be rejected"
+        );
+    }
+    let q = |scale, zero_point| QuantParams { scale, zero_point };
+    // out.scale == 0 => M = sx*sw/0 = inf.
+    assert!(
+        catch_unwind(AssertUnwindSafe(|| Requant::for_layer(
+            q(0.02, 0),
+            q(0.004, 128),
+            q(0.0, 0),
+            false
+        )))
+        .is_err(),
+        "zero output-scale denominator must be rejected"
+    );
 }
 
 /// Adding terms to a design never increases the all-dropped residual's

@@ -1,0 +1,238 @@
+//! Serving-gateway integration suite: graceful-shutdown stress, metrics
+//! concurrency, and the bounded-queue soak test driven by the
+//! deterministic load generator.
+
+use std::sync::Arc;
+
+use heam::coordinator::loadgen::{self, generate_trace, trace_fingerprint, LoadgenConfig, Mode};
+use heam::coordinator::metrics::Metrics;
+use heam::coordinator::registry::ModelRegistry;
+use heam::coordinator::server::{Pending, ServeConfig, Server};
+use heam::mult::MultKind;
+use heam::nn::lenet;
+use heam::nn::multiplier::Multiplier;
+
+fn two_model_gateway(config: ServeConfig) -> Server {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    let graph = lenet::load_graph(&bundle).unwrap();
+    let mut registry = ModelRegistry::new();
+    registry.register("exact", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+    registry
+        .register(
+            "heam",
+            &graph,
+            &Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+            (1, 28, 28),
+        )
+        .unwrap();
+    Server::start_gateway(registry, config).unwrap()
+}
+
+fn mix() -> Vec<(String, f64)> {
+    vec![("exact".to_string(), 1.0), ("heam".to_string(), 1.0)]
+}
+
+/// Graceful-shutdown stress: many client threads hammer a small worker
+/// pool while the main thread shuts the server down mid-flight. Every
+/// *admitted* request must receive a response (no hangs, no drops);
+/// submissions racing or following the shutdown must fail cleanly, never
+/// block.
+#[test]
+fn shutdown_stress_answers_every_admitted_request() {
+    let server = two_model_gateway(ServeConfig {
+        max_batch: 4,
+        max_wait_us: 1000,
+        workers: 2,
+        queue_depth: 64,
+    });
+    let names = ["exact", "heam"];
+    let clients = 16usize;
+    let per_client = 12usize;
+    let outcomes: Vec<(usize, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let server = &server;
+                s.spawn(move || {
+                    // Submit everything first so shutdown lands between
+                    // admission and response for plenty of requests...
+                    let mut pending: Vec<Pending> = Vec::new();
+                    let mut refused = 0usize;
+                    for i in 0..per_client {
+                        let img = vec![((c * per_client + i) % 11) as f32 * 0.09; 28 * 28];
+                        match server.submit(names[(c + i) % 2], img) {
+                            Ok(p) => pending.push(p),
+                            Err(_) => refused += 1, // queue full or shut down: clean failure
+                        }
+                    }
+                    // ...then every admitted one must resolve Ok.
+                    let mut answered = 0usize;
+                    for p in pending {
+                        p.wait().expect("admitted request must be answered");
+                        answered += 1;
+                    }
+                    (answered, refused)
+                })
+            })
+            .collect();
+        // Shut down while clients are mid-submission/mid-wait.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        server.shutdown();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let answered: usize = outcomes.iter().map(|o| o.0).sum();
+    let refused: usize = outcomes.iter().map(|o| o.1).sum();
+    assert_eq!(answered + refused, clients * per_client, "no request unaccounted");
+    // The server's own ledger agrees with the clients'.
+    let m = server.metrics_snapshot();
+    assert_eq!(m.requests as usize, answered, "server answered what clients saw");
+    // Post-shutdown submissions fail cleanly and quickly.
+    assert!(server.submit("exact", vec![0.0; 28 * 28]).is_err());
+    assert!(server.classify(vec![0.0; 28 * 28]).is_err());
+    server.shutdown(); // idempotent
+}
+
+/// Metrics concurrency: hammer `record_request`/`record_batch`/
+/// `record_rejected` from many threads; the snapshot totals must equal
+/// the per-thread sums exactly. Catches torn or lost updates if the
+/// atomics' orderings are ever weakened incorrectly.
+#[test]
+fn metrics_concurrent_updates_are_lossless() {
+    let m = Metrics::default();
+    let threads = 8usize;
+    let per_thread = 5000usize;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let m = &m;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    // Latencies sweep every histogram bucket, including
+                    // the saturated top one.
+                    let latency = 1u64 << ((t * per_thread + i) % 26);
+                    m.record_request(latency);
+                    m.record_batch(3, 10);
+                    if i % 4 == 0 {
+                        m.record_rejected();
+                    }
+                }
+            });
+        }
+    });
+    let total = (threads * per_thread) as u64;
+    let s = m.snapshot();
+    assert_eq!(s.requests, total);
+    assert_eq!(s.batches, total);
+    assert_eq!(s.batched_items, 3 * total);
+    assert_eq!(s.execute_us, 10 * total);
+    assert_eq!(s.rejected, threads as u64 * per_thread.div_ceil(4) as u64);
+    assert_eq!(
+        s.latency_buckets.iter().sum::<u64>(),
+        total,
+        "histogram must hold every recorded request"
+    );
+}
+
+/// The acceptance soak: saturating open-loop load against small bounded
+/// queues. Memory stays bounded by construction (admission rejects when
+/// the queue is full); the test pins the observable halves of that
+/// contract — rejections are counted, and every admitted request
+/// completes (dropped == 0).
+#[test]
+fn soak_bounded_queue_sheds_load_without_dropping() {
+    let queue_depth = 4usize;
+    let server = two_model_gateway(ServeConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        workers: 1,
+        queue_depth,
+    });
+    let cfg = LoadgenConfig {
+        seed: 99,
+        requests: 512,
+        // Far beyond a single worker's LeNet throughput: the queues must
+        // overflow and shed.
+        mode: Mode::Open { rate_rps: 200_000.0 },
+        mix: mix(),
+        burst: None,
+    };
+    let report = loadgen::run(&server, &cfg).unwrap();
+    server.shutdown();
+    assert_eq!(report.submitted, 512);
+    assert_eq!(report.dropped, 0, "admitted requests must all complete");
+    assert!(
+        report.rejected > 0,
+        "saturating load against depth-{queue_depth} queues must reject"
+    );
+    assert_eq!(
+        report.completed + report.rejected,
+        report.submitted,
+        "every request is either completed or rejected"
+    );
+    // Server-side ledger agrees with the client-side one.
+    let m = server.metrics_snapshot();
+    assert_eq!(m.requests, report.completed);
+    assert_eq!(m.rejected, report.rejected);
+}
+
+/// Replay determinism: the same seed generates byte-identical traces
+/// (events and fingerprint); different seeds diverge. This is the
+/// trace-level half of the `heam loadgen --seed S` contract — the
+/// runtime half (identical counters) is exercised by the CI smoke in
+/// scripts/check.sh.
+#[test]
+fn loadgen_trace_replays_identically_per_seed() {
+    for mode in [Mode::Open { rate_rps: 3000.0 }, Mode::Closed { clients: 3 }] {
+        let cfg = |seed| LoadgenConfig {
+            seed,
+            requests: 300,
+            mode: mode.clone(),
+            mix: mix(),
+            burst: None,
+        };
+        let a = generate_trace(&cfg(5)).unwrap();
+        let b = generate_trace(&cfg(5)).unwrap();
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        assert_eq!(trace_fingerprint(&a), trace_fingerprint(&b));
+        assert_ne!(
+            trace_fingerprint(&a),
+            trace_fingerprint(&generate_trace(&cfg(6)).unwrap()),
+            "different seeds must diverge"
+        );
+    }
+}
+
+/// End-to-end closed-loop run on the 2-model gateway: all requests
+/// complete (a closed loop with queue_depth >= clients never overflows),
+/// both lanes see traffic, and the report's aggregates are consistent.
+#[test]
+fn closed_loop_gateway_run_is_fully_served() {
+    let server = two_model_gateway(ServeConfig {
+        max_batch: 8,
+        max_wait_us: 1000,
+        workers: 2,
+        queue_depth: 64,
+    });
+    let report = loadgen::run(
+        &server,
+        &LoadgenConfig {
+            seed: 17,
+            requests: 128,
+            mode: Mode::Closed { clients: 4 },
+            mix: mix(),
+            burst: None,
+        },
+    )
+    .unwrap();
+    server.shutdown();
+    assert_eq!(report.submitted, 128);
+    assert_eq!(report.completed, 128);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.dropped, 0);
+    for m in &report.per_model {
+        assert!(m.submitted > 0, "mix must route traffic to {}", m.name);
+        assert_eq!(m.submitted, m.completed);
+        assert!(m.p50_us > 0 && m.p99_us >= m.p50_us);
+        assert!(m.mean_batch >= 1.0);
+    }
+    let per_model_sum: u64 = report.per_model.iter().map(|m| m.submitted).sum();
+    assert_eq!(per_model_sum, report.submitted);
+}

@@ -1,20 +1,58 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
 #
-#   scripts/check.sh            # rust build + rust tests + python tests
-#   scripts/check.sh --rust     # rust only
+#   scripts/check.sh            # rust build + rust tests + loadgen smoke + python tests
+#   scripts/check.sh --rust     # rust only (includes the loadgen smoke)
 #   scripts/check.sh --python   # python only
+#   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 run_rust=1
 run_python=1
+run_loadgen=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0 ;;
+  --python) run_rust=0; run_loadgen=0 ;;
+  --loadgen) run_rust=0; run_python=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen]" >&2; exit 2 ;;
 esac
+
+# Deterministic serving smoke: a short fixed-seed open-loop soak, run
+# twice. The trace line (fingerprint + request counts) must be identical
+# across runs, and no admitted request may be dropped. queue-depth is
+# kept above --requests so rejections are impossible and *every* counter
+# is deterministic.
+loadgen_smoke() {
+  echo "== loadgen determinism smoke =="
+  local bin=target/release/heam
+  # Unconditional: a stale binary must never validate old code (no-op
+  # when the build is already fresh).
+  cargo build --release
+  local out_a out_b
+  out_a=$("$bin" loadgen --seed 7 --requests 600 --rate 1200 --mix exact=1,heam=1 \
+          --queue-depth 1024 --workers 2 --out /tmp/heam_loadgen_a.json)
+  out_b=$("$bin" loadgen --seed 7 --requests 600 --rate 1200 --mix exact=1,heam=1 \
+          --queue-depth 1024 --workers 2 --out /tmp/heam_loadgen_b.json)
+  local line_a line_b
+  line_a=$(printf '%s\n' "$out_a" | grep '^trace fingerprint')
+  line_b=$(printf '%s\n' "$out_b" | grep '^trace fingerprint')
+  if [ "$line_a" != "$line_b" ]; then
+    echo "!! loadgen traces diverged across identical seeds:" >&2
+    echo "   run A: $line_a" >&2
+    echo "   run B: $line_b" >&2
+    exit 1
+  fi
+  for out in "$out_a" "$out_b"; do
+    if ! printf '%s\n' "$out" | grep -q 'dropped: 0'; then
+      echo "!! loadgen dropped admitted requests:" >&2
+      printf '%s\n' "$out" >&2
+      exit 1
+    fi
+  done
+  echo "loadgen smoke OK: $line_a"
+}
 
 skipped=""
 if [ "$run_rust" = 1 ]; then
@@ -26,6 +64,16 @@ if [ "$run_rust" = 1 ]; then
   else
     echo "!! cargo not found — rust gate skipped (install rustup or run in CI)" >&2
     skipped="rust"
+    run_loadgen=0
+  fi
+fi
+
+if [ "$run_loadgen" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    loadgen_smoke
+  else
+    echo "!! cargo not found — loadgen smoke skipped" >&2
+    skipped="${skipped:+$skipped,}loadgen"
   fi
 fi
 

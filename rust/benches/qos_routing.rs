@@ -1,0 +1,201 @@
+//! §QoS-routing benchmark: drive the closed-loop accuracy/throughput
+//! controller with the seeded class-trace replay and record the split
+//! trajectory in `BENCH_qos.json`.
+//!
+//! Three phases over one 3-variant family gateway (exact / HEAM / OU-L3
+//! variants of the same LeNet, random weights unless trained artifacts
+//! exist):
+//!
+//! 1. **Steady headroom** — arrivals far below virtual capacity; the
+//!    controller must hold every class on the exact variant (zero
+//!    decisions — the hysteresis dead band at rest).
+//! 2. **Saturating burst** — a 300 ms burst at 10x the steady rate
+//!    opens the trace; the low-priority class must serve >= 50% of its
+//!    burst traffic on approximate tiers (the acceptance criterion,
+//!    asserted here) while the pinned class never leaves exact, and the
+//!    controller must restore the exact variant once the burst passes.
+//! 3. **Replay** — phase 2 re-run from the same seed on a fresh router;
+//!    the deterministic `qos trace` line must be byte-identical.
+//!
+//! Run: `cargo bench --bench qos_routing`
+
+use std::sync::Arc;
+
+use heam::coordinator::loadgen::BurstConfig;
+use heam::coordinator::qos::replay;
+use heam::coordinator::qos::{
+    ControllerConfig, QosPolicy, QosRouter, QosRunConfig, RequestClass, SimConfig,
+};
+use heam::coordinator::registry::ModelRegistry;
+use heam::coordinator::server::{ServeConfig, Server};
+use heam::mult::MultKind;
+use heam::nn::lenet;
+use heam::nn::multiplier::Multiplier;
+use heam::util::json::Value;
+
+fn policy() -> QosPolicy {
+    QosPolicy {
+        classes: vec![
+            RequestClass {
+                name: "hi".into(),
+                priority: 0,
+                max_p99_us: 25_000,
+                min_accuracy_tier: 0,
+                weight: 1.0,
+            },
+            RequestClass {
+                name: "lo".into(),
+                priority: 1,
+                max_p99_us: 60_000,
+                min_accuracy_tier: 2,
+                weight: 3.0,
+            },
+        ],
+        ctl: ControllerConfig { interval_us: 20_000, ..Default::default() },
+    }
+}
+
+fn gateway_and_router() -> (Server, QosRouter) {
+    let graph = lenet::load("artifacts/weights/digits.htb")
+        .or_else(|_| lenet::load_graph(&lenet::random_bundle(1, 28, 42)))
+        .expect("graph");
+    let mut reg = ModelRegistry::new();
+    let family = reg
+        .register_family(
+            "lenet",
+            &graph,
+            &[
+                ("exact".to_string(), Multiplier::Exact),
+                (
+                    "heam".to_string(),
+                    Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+                ),
+                (
+                    "ou3".to_string(),
+                    Multiplier::Lut(Arc::new(MultKind::OuL3.lut())),
+                ),
+            ],
+            (1, 28, 28),
+        )
+        .unwrap();
+    let server = Server::start_gateway(
+        reg,
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 1000,
+            workers: 2,
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+    let router = QosRouter::new(family, policy()).unwrap();
+    (server, router)
+}
+
+fn burst_cfg() -> QosRunConfig {
+    QosRunConfig {
+        seed: 7,
+        requests: 8000,
+        rate_rps: 2000.0,
+        burst: Some(BurstConfig {
+            period_ms: 60_000,
+            burst_ms: 300,
+            factor: 10.0,
+        }),
+        sim: SimConfig::default(),
+    }
+}
+
+fn main() {
+    let mut phases: Vec<(&str, Value)> = Vec::new();
+
+    // 1. Steady headroom: the controller holds.
+    {
+        let (server, router) = gateway_and_router();
+        let report = replay::run(
+            &server,
+            &router,
+            &QosRunConfig {
+                seed: 7,
+                requests: 2000,
+                rate_rps: 2000.0,
+                burst: None,
+                sim: SimConfig::default(),
+            },
+        )
+        .unwrap();
+        println!("-- steady headroom --\n{}", report.render());
+        assert!(
+            report.decisions.is_empty(),
+            "steady headroom must not trigger decisions: {:?}",
+            report.decisions
+        );
+        phases.push(("steady_headroom", report.to_json(&router)));
+        server.shutdown();
+    }
+
+    // 2. Saturating burst: shift >= 50% of low-priority burst traffic
+    //    to approximate tiers, then restore.
+    let line_a = {
+        let (server, router) = gateway_and_router();
+        let report = replay::run(&server, &router, &burst_cfg()).unwrap();
+        println!("-- saturating burst --\n{}", report.render());
+        let hi = &report.per_class[0];
+        let lo = &report.per_class[1];
+        assert_eq!(
+            hi.approx_fraction, 0.0,
+            "the tier-0-pinned class must never be served approximate"
+        );
+        assert!(
+            lo.burst_approx_fraction() >= 0.5,
+            "acceptance: >= 50% of low-priority burst traffic on approximate \
+             variants, got {:.1}%",
+            100.0 * lo.burst_approx_fraction()
+        );
+        assert!(
+            report.levels_final.iter().all(|&l| l == 0),
+            "the controller must restore the exact variant after the burst \
+             (final levels {:?})",
+            report.levels_final
+        );
+        assert!(report.restore_tick.is_some());
+        phases.push(("saturating_burst", report.to_json(&router)));
+        server.shutdown();
+        report.trace_line()
+    };
+
+    // 3. Replay determinism: same seed, fresh router — identical line.
+    {
+        let (server, router) = gateway_and_router();
+        let report = replay::run(&server, &router, &burst_cfg()).unwrap();
+        let line_b = report.trace_line();
+        assert_eq!(
+            line_a, line_b,
+            "the qos trace line must replay byte-identically from one seed"
+        );
+        println!("-- replay determinism OK --\n{line_b}");
+        phases.push(("replay", report.to_json(&router)));
+        server.shutdown();
+    }
+
+    let phases: Vec<Value> = phases
+        .into_iter()
+        .map(|(phase, v)| {
+            let mut obj = match v {
+                Value::Obj(o) => o,
+                _ => unreachable!("QosReport::to_json returns an object"),
+            };
+            obj.insert("phase".to_string(), Value::Str(phase.to_string()));
+            Value::Obj(obj)
+        })
+        .collect();
+    let root = Value::obj(vec![
+        ("bench", Value::Str("qos_routing".to_string())),
+        ("phases", Value::Arr(phases)),
+    ]);
+    let path = "BENCH_qos.json";
+    match std::fs::write(path, root.to_json()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

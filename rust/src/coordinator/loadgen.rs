@@ -51,6 +51,25 @@ pub struct BurstConfig {
     pub factor: f64,
 }
 
+impl BurstConfig {
+    /// True when a virtual-time offset falls inside a burst window (the
+    /// first `burst_ms` of every `period_ms`). Trace generation and the
+    /// QoS replay's burst-shift accounting share this one predicate, so
+    /// the ≥50%-shift acceptance metric can never drift from the
+    /// windows the trace was actually generated with.
+    pub fn contains_us(&self, at_us: u64) -> bool {
+        (at_us / 1000) % self.period_ms < self.burst_ms
+    }
+
+    /// Sanity-check the phase shape (also guards the modulo above).
+    pub fn validate(&self) -> Result<()> {
+        if self.period_ms == 0 || self.burst_ms > self.period_ms || self.factor <= 0.0 {
+            bail!("burst config needs period > 0, burst <= period, factor > 0");
+        }
+        Ok(())
+    }
+}
+
 /// Load-generator configuration.
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
@@ -78,6 +97,35 @@ pub struct TraceEvent {
     pub image_seed: u64,
 }
 
+/// The seeded open-loop arrival engine shared by [`generate_trace`] and
+/// [`generate_class_trace`]: Poisson arrivals at `rate_rps` (burst
+/// windows multiply the rate), one event per request built by `make`
+/// from the derived stream *after* the interarrival draw — both trace
+/// kinds therefore sample the same arrival process from the same seed.
+fn open_loop_events<T>(
+    seed: u64,
+    requests: usize,
+    rate_rps: f64,
+    burst: Option<&BurstConfig>,
+    mut make: impl FnMut(&mut Rng, u64) -> T,
+) -> Vec<T> {
+    let mut rng = Rng::derive(seed, 0);
+    let mut t_us = 0f64;
+    let mut events = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let rate = match burst {
+            Some(b) if b.contains_us(t_us as u64) => rate_rps * b.factor,
+            _ => rate_rps,
+        };
+        // Exponential interarrival; 1-U keeps ln's argument in (0, 1]
+        // so the draw is always finite.
+        let dt_s = -(1.0 - rng.f64()).ln() / rate;
+        t_us += dt_s * 1e6;
+        events.push(make(&mut rng, t_us as u64));
+    }
+    events
+}
+
 /// Generate the full request trace for a configuration. Pure function of
 /// the config: equal configs yield equal traces, which is the replay
 /// guarantee `heam loadgen --seed S` builds on.
@@ -97,37 +145,20 @@ pub fn generate_trace(cfg: &LoadgenConfig) -> Result<Vec<TraceEvent>> {
                 bail!("open-loop rate must be positive, got {rate_rps}");
             }
             if let Some(b) = &cfg.burst {
-                if b.period_ms == 0 || b.burst_ms > b.period_ms || b.factor <= 0.0 {
-                    bail!("burst config needs period > 0, burst <= period, factor > 0");
-                }
+                b.validate()?;
             }
-            let mut rng = Rng::derive(cfg.seed, 0);
-            let mut t_us = 0f64;
-            let mut events = Vec::with_capacity(cfg.requests);
-            for _ in 0..cfg.requests {
-                let rate = match &cfg.burst {
-                    Some(b) => {
-                        let in_window = (t_us as u64 / 1000) % b.period_ms < b.burst_ms;
-                        if in_window {
-                            rate_rps * b.factor
-                        } else {
-                            rate_rps
-                        }
-                    }
-                    None => rate_rps,
-                };
-                // Exponential interarrival; 1-U keeps ln's argument in
-                // (0, 1] so the draw is always finite.
-                let dt_s = -(1.0 - rng.f64()).ln() / rate;
-                t_us += dt_s * 1e6;
-                events.push(TraceEvent {
-                    at_us: t_us as u64,
+            Ok(open_loop_events(
+                cfg.seed,
+                cfg.requests,
+                rate_rps,
+                cfg.burst.as_ref(),
+                |rng, at_us| TraceEvent {
+                    at_us,
                     client: 0,
                     model: rng.weighted(&weights),
                     image_seed: rng.next_u64(),
-                });
-            }
-            Ok(events)
+                },
+            ))
         }
         Mode::Closed { clients } => {
             let clients = clients.max(1);
@@ -151,26 +182,75 @@ pub fn generate_trace(cfg: &LoadgenConfig) -> Result<Vec<TraceEvent>> {
     }
 }
 
-/// FNV-1a over the full event stream: the replay identity of a trace.
-pub fn trace_fingerprint(events: &[TraceEvent]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    let mut eat = |v: u64| {
-        for b in v.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
-    for e in events {
-        eat(e.at_us);
-        eat(e.client as u64);
-        eat(e.model as u64);
-        eat(e.image_seed);
-    }
-    h
+/// One event of a class-annotated open-loop trace — the input of the
+/// QoS routing replay (`heam loadgen --classes`). Unlike [`TraceEvent`],
+/// the *model* is not part of the trace: the QoS router chooses the
+/// variant at submission time from the class's current split, so the
+/// trace only fixes arrivals, class draws and image seeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassTraceEvent {
+    /// Arrival offset from run start (virtual time).
+    pub at_us: u64,
+    /// Index into the policy's class list.
+    pub class: usize,
+    /// Deterministic generator seed for the request's input tensor.
+    pub image_seed: u64,
 }
 
-/// Deterministic synthetic input for one request.
-fn image_for(seed: u64, size: usize) -> Vec<f32> {
+/// Generate a class-annotated open-loop trace: Poisson arrivals at
+/// `rate_rps` (with optional burst phases), class drawn per event from
+/// `weights`. Pure function of the arguments — the same inputs replay a
+/// byte-identical event stream, which is what makes the QoS decision
+/// trace reproducible end to end.
+pub fn generate_class_trace(
+    seed: u64,
+    requests: usize,
+    rate_rps: f64,
+    burst: Option<&BurstConfig>,
+    weights: &[f64],
+) -> Result<Vec<ClassTraceEvent>> {
+    if weights.is_empty() {
+        bail!("class trace needs at least one request class");
+    }
+    if weights.iter().any(|w| !(w.is_finite() && *w > 0.0)) {
+        bail!("class weights must all be positive and finite, got {weights:?}");
+    }
+    if !(rate_rps.is_finite() && rate_rps > 0.0) {
+        bail!("open-loop rate must be positive, got {rate_rps}");
+    }
+    if let Some(b) = burst {
+        b.validate()?;
+    }
+    Ok(open_loop_events(seed, requests, rate_rps, burst, |rng, at_us| {
+        ClassTraceEvent {
+            at_us,
+            class: rng.weighted(weights),
+            image_seed: rng.next_u64(),
+        }
+    }))
+}
+
+/// FNV-1a over a class trace (see [`trace_fingerprint`]).
+pub fn class_trace_fingerprint(events: &[ClassTraceEvent]) -> u64 {
+    crate::util::hash::fnv1a_u64(
+        events
+            .iter()
+            .flat_map(|e| [e.at_us, e.class as u64, e.image_seed]),
+    )
+}
+
+/// FNV-1a over the full event stream: the replay identity of a trace.
+pub fn trace_fingerprint(events: &[TraceEvent]) -> u64 {
+    crate::util::hash::fnv1a_u64(
+        events
+            .iter()
+            .flat_map(|e| [e.at_us, e.client as u64, e.model as u64, e.image_seed]),
+    )
+}
+
+/// Deterministic synthetic input for one request (shared with the QoS
+/// replay harness, which generates images from the same trace seeds).
+pub(crate) fn image_for(seed: u64, size: usize) -> Vec<f32> {
     let mut rng = Rng::new(seed);
     (0..size).map(|_| rng.f32()).collect()
 }
@@ -563,5 +643,29 @@ mod tests {
     fn images_are_deterministic_per_seed() {
         assert_eq!(image_for(9, 16), image_for(9, 16));
         assert_ne!(image_for(9, 16), image_for(10, 16));
+    }
+
+    #[test]
+    fn class_trace_is_deterministic_and_weighted() {
+        let gen = |seed| generate_class_trace(seed, 400, 5000.0, None, &[1.0, 3.0]).unwrap();
+        let a = gen(7);
+        assert_eq!(a, gen(7));
+        assert_eq!(class_trace_fingerprint(&a), class_trace_fingerprint(&gen(7)));
+        assert_ne!(class_trace_fingerprint(&a), class_trace_fingerprint(&gen(8)));
+        for w in a.windows(2) {
+            assert!(w[0].at_us <= w[1].at_us, "arrivals must be monotone");
+        }
+        let heavy = a.iter().filter(|e| e.class == 1).count();
+        assert!(heavy > 200, "3:1 class mix ignored: {heavy}/400");
+    }
+
+    #[test]
+    fn class_trace_rejects_degenerate_inputs() {
+        assert!(generate_class_trace(1, 10, 1000.0, None, &[]).is_err());
+        assert!(generate_class_trace(1, 10, 1000.0, None, &[1.0, 0.0]).is_err());
+        assert!(generate_class_trace(1, 10, 1000.0, None, &[1.0, -2.0]).is_err());
+        assert!(generate_class_trace(1, 10, 0.0, None, &[1.0]).is_err());
+        let bad = BurstConfig { period_ms: 10, burst_ms: 20, factor: 2.0 };
+        assert!(generate_class_trace(1, 10, 1000.0, Some(&bad), &[1.0]).is_err());
     }
 }

@@ -25,6 +25,14 @@ pub struct Snapshot {
     pub batched_items: u64,
     pub execute_us: u64,
     pub rejected: u64,
+    /// Admitted-but-not-yet-batched depth at snapshot time. Unlike the
+    /// other fields this is a *gauge*, not a monotonic counter: the
+    /// server injects the lane's live admission gauge when it snapshots,
+    /// [`Snapshot::merge`] sums it across lanes, and
+    /// [`Snapshot::delta_since`] keeps the current value (a gauge has no
+    /// meaningful difference). The QoS controller reads it as the
+    /// backpressure signal alongside p99 and the rejection rate.
+    pub queue: i64,
     pub latency_buckets: Vec<u64>,
 }
 
@@ -56,6 +64,7 @@ impl Metrics {
             batched_items: self.batched_items.load(Ordering::Relaxed),
             execute_us: self.execute_us.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            queue: 0,
             latency_buckets: self
                 .latency_buckets
                 .iter()
@@ -74,6 +83,7 @@ impl Snapshot {
             batched_items: 0,
             execute_us: 0,
             rejected: 0,
+            queue: 0,
             latency_buckets: vec![0; 25],
         }
     }
@@ -85,6 +95,7 @@ impl Snapshot {
         self.batched_items += other.batched_items;
         self.execute_us += other.execute_us;
         self.rejected += other.rejected;
+        self.queue += other.queue;
         if self.latency_buckets.len() < other.latency_buckets.len() {
             self.latency_buckets.resize(other.latency_buckets.len(), 0);
         }
@@ -105,6 +116,9 @@ impl Snapshot {
             batched_items: self.batched_items - base.batched_items,
             execute_us: self.execute_us - base.execute_us,
             rejected: self.rejected - base.rejected,
+            // Gauge semantics: the window "delta" of a level is its
+            // current value, not a subtraction against the baseline.
+            queue: self.queue,
             latency_buckets: self
                 .latency_buckets
                 .iter()
@@ -251,6 +265,21 @@ mod tests {
         // percentiles.
         assert!(d.latency_percentile_us(0.5) >= 512_000);
         assert_eq!(d.mean_batch(), 1.0);
+    }
+
+    #[test]
+    fn queue_gauge_merges_by_sum_and_deltas_by_current_value() {
+        let mut a = Metrics::default().snapshot();
+        a.queue = 5;
+        let mut b = Metrics::default().snapshot();
+        b.queue = 7;
+        let merged = Snapshot::zero().merge(&a).merge(&b);
+        assert_eq!(merged.queue, 12, "gateway-wide gauge is the lane sum");
+        // delta_since keeps the *current* level: a gauge has no
+        // meaningful difference against a baseline.
+        let mut base = Metrics::default().snapshot();
+        base.queue = 100;
+        assert_eq!(a.delta_since(&base).queue, 5);
     }
 
     #[test]

@@ -14,10 +14,18 @@
 //! accuracy/throughput trading Spantidi et al. and Zervakis et al.
 //! motivate. `loadgen` replays seeded open-/closed-loop traffic against
 //! the gateway and writes `BENCH_serving.json`.
+//!
+//! The [`qos`] subsystem is the control plane on top: variant families
+//! ordered by accuracy tier, per-request-class SLOs, and a closed-loop
+//! controller that shifts each class's traffic split toward cheaper
+//! variants when latency SLOs degrade and back when headroom returns
+//! (`heam serve --qos-policy`, `heam loadgen --classes`,
+//! `BENCH_qos.json`).
 
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
+pub mod qos;
 pub mod registry;
 pub mod server;
 
@@ -25,7 +33,8 @@ use anyhow::Result;
 
 use crate::data::ImageDataset;
 
-use self::server::Server;
+use self::qos::QosRouter;
+use self::server::{Server, Submission};
 
 /// Drive a demo workload against a running server from several client
 /// threads; returns a human-readable latency/throughput/accuracy report.
@@ -89,4 +98,109 @@ pub fn drive_demo(server: &Server, ds: &ImageDataset, requests: usize) -> Result
         m.batches,
         m.mean_batch(),
     ))
+}
+
+/// Drive a class-tagged demo workload through the QoS router from
+/// several client threads (requests round-robin across the policy's
+/// classes); returns a per-class latency/accuracy/tier-mix report plus
+/// the controller's final split levels. Pair with
+/// [`qos::spawn_live`] to close the loop on live metrics — this is the
+/// `heam serve --qos-policy` workload.
+pub fn drive_demo_qos(
+    server: &Server,
+    router: &QosRouter,
+    ds: &ImageDataset,
+    requests: usize,
+) -> Result<String> {
+    let policy = router.policy();
+    let n_classes = policy.classes.len();
+    let n_tiers = router.family().len();
+    let clients = 4usize;
+    let sz = ds.channels * ds.height * ds.width;
+    let n_test = ds.test_len().min(requests.max(1));
+    let started = std::time::Instant::now();
+    // Per thread: (class, tier, correct, latency_us) per completed
+    // request, plus shed/failed tallies — a saturated gateway (the
+    // regime QoS exists for) must be distinguishable from a broken one.
+    type DemoOutcome = (Vec<(usize, usize, bool, u128)>, usize, usize);
+    let outcomes: Vec<DemoOutcome> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let router = &*router;
+            let server = &*server;
+            let test_x = &ds.test_x;
+            let test_y = &ds.test_y;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                let mut rejected = 0usize;
+                let mut failed = 0usize;
+                let mut i = c;
+                while i < requests {
+                    let idx = i % n_test;
+                    let class = i % n_classes;
+                    let image = test_x[idx * sz..(idx + 1) * sz].to_vec();
+                    let t0 = std::time::Instant::now();
+                    match router.submit(server, class, image) {
+                        Ok((tier, Submission::Admitted(p))) => match p.wait() {
+                            Ok(pred) => out.push((
+                                class,
+                                tier,
+                                pred == test_y[idx] as usize,
+                                t0.elapsed().as_micros(),
+                            )),
+                            Err(_) => failed += 1,
+                        },
+                        Ok((_, Submission::Rejected)) => rejected += 1,
+                        Err(_) => failed += 1,
+                    }
+                    i += clients;
+                }
+                (out, rejected, failed)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("qos demo client thread"))
+            .collect()
+    });
+    let wall = started.elapsed();
+    let rejected: usize = outcomes.iter().map(|o| o.1).sum();
+    let failed: usize = outcomes.iter().map(|o| o.2).sum();
+    let results: Vec<(usize, usize, bool, u128)> =
+        outcomes.into_iter().flat_map(|o| o.0).collect();
+    let mut s = format!(
+        "qos demo: {} completed ({rejected} rejected, {failed} failed) in {:.2}s — \
+         {:.1} req/s, final levels {:?}, {} decisions\n",
+        results.len(),
+        wall.as_secs_f64(),
+        results.len() as f64 / wall.as_secs_f64(),
+        router.levels(),
+        router.decisions().len(),
+    );
+    for (ci, class) in policy.classes.iter().enumerate() {
+        let of_class: Vec<_> = results.iter().filter(|r| r.0 == ci).collect();
+        if of_class.is_empty() {
+            s.push_str(&format!("  {:<10} (no completed requests)\n", class.name));
+            continue;
+        }
+        let mut lats: Vec<u128> = of_class.iter().map(|r| r.3).collect();
+        lats.sort_unstable();
+        let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize] as f64 / 1000.0;
+        let correct = of_class.iter().filter(|r| r.2).count();
+        let mut by_tier = vec![0usize; n_tiers];
+        for r in &of_class {
+            by_tier[r.1] += 1;
+        }
+        let tiers: Vec<String> = by_tier.iter().map(|n| n.to_string()).collect();
+        s.push_str(&format!(
+            "  {:<10} n {:>5}  acc {:.2}%  p50 {:.2}ms  p99 {:.2}ms  by-tier [{}]\n",
+            class.name,
+            of_class.len(),
+            100.0 * correct as f64 / of_class.len() as f64,
+            pct(0.50),
+            pct(0.99),
+            tiers.join(", "),
+        ));
+    }
+    Ok(s)
 }

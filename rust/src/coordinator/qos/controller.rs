@@ -1,0 +1,410 @@
+//! The closed-loop accuracy/throughput controller.
+//!
+//! Pure decision core: [`Controller::tick`] consumes one per-tier
+//! observation vector (p99, rejection delta, queue gauge — exactly the
+//! [`Snapshot`](crate::coordinator::metrics::Snapshot) delta fields) and
+//! deterministically updates each class's *split level*, a fixed-point
+//! position on the family's accuracy axis measured in milli-tiers:
+//! level 0 routes everything to the exact variant, level 1500 splits
+//! 50/50 between tiers 1 and 2. Because the state transition is a pure
+//! function of (observations, previous state), the decision sequence —
+//! and therefore [`Controller::decision_fingerprint`] — is byte-identical
+//! whenever the observation stream is, which is what the deterministic
+//! replay harness and the worker-count-independence suite build on.
+//!
+//! Hysteresis has two halves:
+//!
+//! * **Debounce** — a class must breach (or clear) for `degrade_ticks`
+//!   (`recover_ticks`) *consecutive* ticks before the first shift; once
+//!   the streak is established the controller keeps shifting one step
+//!   per tick while the condition persists.
+//! * **Dead band** — "breaching" is p99 above the SLO (or rejections /
+//!   queue above `queue_high`); "clear" is p99 below
+//!   `recover_frac * SLO` with drained queues and no rejections. Between
+//!   the two edges the controller holds and both streaks reset, so a
+//!   class sitting near its SLO never flaps.
+//!
+//! Under pressure the *least* important breaching class (highest
+//! priority value) is degraded first; on recovery the *most* important
+//! class is restored first — one decision per tick, a graduated
+//! response.
+
+use super::policy::QosPolicy;
+
+/// One tier's observation window (typically a `Snapshot::delta_since`
+/// over the last controller interval, plus the live queue gauge).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneObservation {
+    /// p99 latency over the window, microseconds.
+    pub p99_us: u64,
+    /// Requests shed at admission during the window.
+    pub rejected_delta: u64,
+    /// Admitted-but-unserved queue depth at window end.
+    pub queue: i64,
+}
+
+/// What a decision did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Shift one step toward a more approximate tier.
+    ShiftApprox,
+    /// Shift one step back toward the exact tier.
+    ShiftExact,
+}
+
+/// One entry of the decision trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecisionRecord {
+    /// Tick index (0-based) the decision was taken on.
+    pub tick: u64,
+    /// Class index into the policy's class list.
+    pub class: usize,
+    pub action: Action,
+    /// The class's split level after the shift, in milli-tiers.
+    pub level_milli: u32,
+}
+
+/// Deterministic closed-loop controller state.
+pub struct Controller {
+    policy: QosPolicy,
+    /// Per-class split level in milli-tiers, capped at
+    /// `min_accuracy_tier * 1000`.
+    levels: Vec<u32>,
+    caps: Vec<u32>,
+    degrade_streak: Vec<u32>,
+    recover_streak: Vec<u32>,
+    tick: u64,
+    history: Vec<Vec<u32>>,
+    /// Ticks dropped off the front of `history` by the trace-buffer
+    /// bound: `history[i]` describes tick `history_dropped + i`.
+    history_dropped: u64,
+    decisions: Vec<DecisionRecord>,
+}
+
+impl Controller {
+    /// Fresh controller: every class starts fully on the exact tier.
+    pub fn new(policy: QosPolicy) -> Self {
+        let n = policy.classes.len();
+        let caps = policy
+            .classes
+            .iter()
+            .map(|c| (c.min_accuracy_tier as u32) * 1000)
+            .collect();
+        Self {
+            policy,
+            levels: vec![0; n],
+            caps,
+            degrade_streak: vec![0; n],
+            recover_streak: vec![0; n],
+            tick: 0,
+            history: Vec::new(),
+            history_dropped: 0,
+            decisions: Vec::new(),
+        }
+    }
+
+    /// The tiers a class's current split touches: the floor tier and,
+    /// when the level has a fractional part, the next one.
+    fn touched_tiers(level_milli: u32) -> (usize, Option<usize>) {
+        let lo = (level_milli / 1000) as usize;
+        if level_milli % 1000 == 0 {
+            (lo, None)
+        } else {
+            (lo, Some(lo + 1))
+        }
+    }
+
+    /// One control step over a per-tier observation vector (`obs[t]` is
+    /// family tier `t`). Returns the decision taken this tick, if any.
+    pub fn tick(&mut self, obs: &[LaneObservation]) -> Option<DecisionRecord> {
+        let ctl = self.policy.ctl.clone();
+        // Phase 1: classify every class against its own SLO, looking only
+        // at the tiers its split actually touches.
+        for (c, class) in self.policy.classes.iter().enumerate() {
+            let (lo, hi) = Self::touched_tiers(self.levels[c]);
+            let mut lanes = vec![&obs[lo]];
+            if let Some(hi) = hi {
+                lanes.push(&obs[hi]);
+            }
+            let p99 = lanes.iter().map(|l| l.p99_us).max().unwrap_or(0);
+            let rejected: u64 = lanes.iter().map(|l| l.rejected_delta).sum();
+            let queue_max = lanes.iter().map(|l| l.queue).max().unwrap_or(0);
+            let degraded =
+                p99 > class.max_p99_us || rejected > 0 || queue_max >= ctl.queue_high;
+            let clear = p99 < (class.max_p99_us as f64 * ctl.recover_frac) as u64
+                && rejected == 0
+                && queue_max <= ctl.queue_low;
+            if degraded {
+                self.degrade_streak[c] += 1;
+                self.recover_streak[c] = 0;
+            } else if clear {
+                self.recover_streak[c] += 1;
+                self.degrade_streak[c] = 0;
+            } else {
+                // Inside the hysteresis dead band: hold, reset both.
+                self.degrade_streak[c] = 0;
+                self.recover_streak[c] = 0;
+            }
+        }
+        // Phase 2: at most one decision per tick. Degrading takes
+        // precedence (protect the SLOs), least important class first;
+        // recovery restores the most important class first.
+        let n = self.policy.classes.len();
+        let record = if let Some(c) = (0..n)
+            .filter(|&c| {
+                self.degrade_streak[c] >= ctl.degrade_ticks && self.levels[c] < self.caps[c]
+            })
+            .max_by_key(|&c| (self.policy.classes[c].priority, c))
+        {
+            self.levels[c] = (self.levels[c] + ctl.step_milli).min(self.caps[c]);
+            Some(DecisionRecord {
+                tick: self.tick,
+                class: c,
+                action: Action::ShiftApprox,
+                level_milli: self.levels[c],
+            })
+        } else if let Some(c) = (0..n)
+            .filter(|&c| self.recover_streak[c] >= ctl.recover_ticks && self.levels[c] > 0)
+            .min_by_key(|&c| (self.policy.classes[c].priority, c))
+        {
+            self.levels[c] = self.levels[c].saturating_sub(ctl.step_milli);
+            Some(DecisionRecord {
+                tick: self.tick,
+                class: c,
+                action: Action::ShiftExact,
+                level_milli: self.levels[c],
+            })
+        } else {
+            None
+        };
+        // Live mode ticks for the life of the server; bound the trace
+        // buffers so they cannot grow without limit (at 20 ms ticks the
+        // cap holds ~22 minutes of trajectory). Replay runs sit orders
+        // of magnitude below the cap, so recorded trajectories and
+        // tick-indexed arithmetic (restore_tick) are unaffected; past
+        // the cap the oldest half is dropped and only the recent window
+        // is retained.
+        const MAX_TRACE: usize = 65_536;
+        if self.history.len() >= MAX_TRACE {
+            self.history.drain(..MAX_TRACE / 2);
+            self.history_dropped += (MAX_TRACE / 2) as u64;
+        }
+        if self.decisions.len() >= MAX_TRACE {
+            self.decisions.drain(..MAX_TRACE / 2);
+        }
+        if let Some(r) = record {
+            self.decisions.push(r);
+        }
+        self.history.push(self.levels.clone());
+        self.tick += 1;
+        record
+    }
+
+    /// Current per-class split levels (milli-tiers).
+    pub fn levels(&self) -> &[u32] {
+        &self.levels
+    }
+
+    /// Per-tick copy of the levels — the split trajectory. Entry `i`
+    /// describes tick [`Controller::history_dropped`]` + i` (the two
+    /// differ only once the live-mode trace bound has kicked in).
+    pub fn history(&self) -> &[Vec<u32>] {
+        &self.history
+    }
+
+    /// Ticks dropped off the front of [`Controller::history`] by the
+    /// trace-buffer bound (0 for every bounded replay run).
+    pub fn history_dropped(&self) -> u64 {
+        self.history_dropped
+    }
+
+    /// The decision trace so far.
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.decisions
+    }
+
+    /// Ticks elapsed.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// The policy this controller enforces.
+    pub fn policy(&self) -> &QosPolicy {
+        &self.policy
+    }
+
+    /// FNV-1a over the decision trace — the replay identity of a run.
+    /// Two runs agree here iff they took the same actions on the same
+    /// classes at the same ticks reaching the same levels.
+    pub fn decision_fingerprint(&self) -> u64 {
+        crate::util::hash::fnv1a_u64(self.decisions.iter().flat_map(|d| {
+            [
+                d.tick,
+                d.class as u64,
+                match d.action {
+                    Action::ShiftApprox => 1,
+                    Action::ShiftExact => 2,
+                },
+                d.level_milli as u64,
+            ]
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::qos::policy::{ControllerConfig, RequestClass};
+
+    fn policy(classes: Vec<RequestClass>, ctl: ControllerConfig) -> QosPolicy {
+        QosPolicy { classes, ctl }
+    }
+
+    fn class(name: &str, priority: u32, max_p99_us: u64, tier: usize) -> RequestClass {
+        RequestClass {
+            name: name.to_string(),
+            priority,
+            max_p99_us,
+            min_accuracy_tier: tier,
+            weight: 1.0,
+        }
+    }
+
+    fn calm() -> LaneObservation {
+        LaneObservation { p99_us: 100, rejected_delta: 0, queue: 0 }
+    }
+
+    fn hot() -> LaneObservation {
+        LaneObservation { p99_us: 1_000_000, rejected_delta: 3, queue: 500 }
+    }
+
+    #[test]
+    fn shifts_after_debounce_then_every_tick_until_cap() {
+        let mut c = Controller::new(policy(
+            vec![class("lo", 1, 50_000, 2)],
+            ControllerConfig { degrade_ticks: 2, step_milli: 500, ..Default::default() },
+        ));
+        let obs = vec![hot(), calm(), calm()];
+        assert_eq!(c.tick(&obs), None, "first breach is debounced");
+        let d = c.tick(&obs).expect("second consecutive breach shifts");
+        assert_eq!(d.action, Action::ShiftApprox);
+        assert_eq!(d.level_milli, 500);
+        // Streak persists: one step per tick until the cap.
+        assert_eq!(c.tick(&[hot(), hot(), calm()]).unwrap().level_milli, 1000);
+        assert_eq!(c.tick(&[calm(), hot(), calm()]).unwrap().level_milli, 1500);
+        assert_eq!(c.tick(&[calm(), hot(), hot()]).unwrap().level_milli, 2000);
+        // At the cap there is nothing left to shed.
+        assert_eq!(c.tick(&[calm(), calm(), hot()]), None);
+        assert_eq!(c.levels(), &[2000]);
+        assert_eq!(c.history().len(), 6);
+    }
+
+    #[test]
+    fn dead_band_holds_and_resets_streaks() {
+        let slo = 50_000u64;
+        let mut c = Controller::new(policy(
+            vec![class("lo", 1, slo, 2)],
+            ControllerConfig {
+                degrade_ticks: 2,
+                recover_frac: 0.5,
+                ..Default::default()
+            },
+        ));
+        let breach = LaneObservation { p99_us: slo + 1, ..calm() };
+        // In-band: above the recover edge, below the SLO.
+        let band = LaneObservation { p99_us: slo - 1, ..calm() };
+        assert_eq!(c.tick(&[breach, calm(), calm()]), None);
+        assert_eq!(c.tick(&[band, calm(), calm()]), None, "band tick holds");
+        // The band tick reset the streak: one more breach is debounced
+        // again instead of shifting.
+        assert_eq!(c.tick(&[breach, calm(), calm()]), None);
+        assert_eq!(c.levels(), &[0]);
+    }
+
+    #[test]
+    fn recovers_after_clear_streak_and_only_then() {
+        let mut c = Controller::new(policy(
+            vec![class("lo", 1, 50_000, 1)],
+            ControllerConfig {
+                degrade_ticks: 1,
+                recover_ticks: 3,
+                step_milli: 1000,
+                ..Default::default()
+            },
+        ));
+        assert_eq!(c.tick(&[hot(), calm()]).unwrap().level_milli, 1000);
+        // Clear ticks 1 and 2: debounced.
+        assert_eq!(c.tick(&[calm(), calm()]), None);
+        assert_eq!(c.tick(&[calm(), calm()]), None);
+        let d = c.tick(&[calm(), calm()]).expect("third clear tick restores");
+        assert_eq!(d.action, Action::ShiftExact);
+        assert_eq!(d.level_milli, 0);
+    }
+
+    #[test]
+    fn exact_pinned_class_never_shifts_and_low_priority_goes_first() {
+        let mut c = Controller::new(policy(
+            vec![class("hi", 0, 25_000, 0), class("lo", 1, 50_000, 2)],
+            ControllerConfig { degrade_ticks: 1, ..Default::default() },
+        ));
+        // Both classes breach on the shared exact lane; only `lo` can
+        // move, and it must be picked first anyway (least important).
+        let obs = vec![hot(), calm(), calm()];
+        let d = c.tick(&obs).unwrap();
+        assert_eq!(c.policy().classes[d.class].name, "lo");
+        for _ in 0..10 {
+            c.tick(&obs);
+        }
+        assert_eq!(c.levels()[0], 0, "tier-0-pinned class must never move");
+        assert!(c.levels()[1] > 0);
+    }
+
+    #[test]
+    fn restoration_prefers_the_most_important_class() {
+        let mut c = Controller::new(policy(
+            vec![class("a", 0, 50_000, 2), class("b", 1, 50_000, 2)],
+            ControllerConfig {
+                degrade_ticks: 1,
+                recover_ticks: 1,
+                step_milli: 1000,
+                ..Default::default()
+            },
+        ));
+        // Degrade both (one per tick: b first, then a). After b's shift
+        // its lane (tier 1) is calm, so only a keeps breaching.
+        let d1 = c.tick(&[hot(), calm(), calm()]).unwrap();
+        assert_eq!(c.policy().classes[d1.class].name, "b");
+        let d2 = c.tick(&[hot(), calm(), calm()]).unwrap();
+        assert_eq!(c.policy().classes[d2.class].name, "a");
+        // Both now on tier 1; recovery restores `a` (priority 0) first.
+        let d3 = c.tick(&[calm(), calm(), calm()]).unwrap();
+        assert_eq!(d3.action, Action::ShiftExact);
+        assert_eq!(c.policy().classes[d3.class].name, "a");
+    }
+
+    #[test]
+    fn fingerprint_is_a_pure_function_of_the_decision_trace() {
+        let run = || {
+            let mut c = Controller::new(policy(
+                vec![class("lo", 1, 50_000, 2)],
+                ControllerConfig { degrade_ticks: 1, ..Default::default() },
+            ));
+            for i in 0..20 {
+                let o = if i < 8 { hot() } else { calm() };
+                c.tick(&[o, o, o]);
+            }
+            (c.decision_fingerprint(), c.history().to_vec())
+        };
+        let (fa, ha) = run();
+        let (fb, hb) = run();
+        assert_eq!(fa, fb);
+        assert_eq!(ha, hb);
+        // An empty trace hashes to the FNV offset basis, distinct from
+        // any non-empty trace produced above.
+        let empty = Controller::new(policy(
+            vec![class("lo", 1, 50_000, 2)],
+            ControllerConfig::default(),
+        ));
+        assert_ne!(empty.decision_fingerprint(), fa);
+    }
+}

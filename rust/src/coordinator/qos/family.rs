@@ -1,0 +1,186 @@
+//! Variant families: the accuracy axis the QoS router steers along.
+//!
+//! A *family* is a set of registered (model, multiplier) variants of the
+//! same network, ordered by approximation level. The ordering key is the
+//! baked multiplier's exhaustive NMED ([`crate::mult::ErrorMetrics`],
+//! carried on every [`ModelHandle`] since preparation): tier 0 is the
+//! most exact member (an `exact` variant reports NMED 0.0 and always
+//! anchors the family), higher tiers are progressively more approximate
+//! — the positive/negative-multiplier spectrum Spantidi/Zervakis steer
+//! traffic across. Ties are broken by name so tier assignment is a pure
+//! function of the member set, never of registration order.
+
+use anyhow::{bail, Result};
+
+use crate::nn::graph::ModelHandle;
+
+/// One member of a family: a routable lane plus its accuracy standing.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// Registry/routing name (the gateway lane to submit to).
+    pub name: String,
+    /// Accuracy tier: 0 = most exact, `len() - 1` = most approximate.
+    pub tier: usize,
+    /// The ordering key (exhaustive NMED of the baked multiplier).
+    pub nmed: f64,
+    /// Multiplier label for reports and the decision trace.
+    pub mul_label: String,
+}
+
+/// An ordered family of variants of one network.
+#[derive(Clone, Debug)]
+pub struct VariantFamily {
+    /// The network the members share (reporting only).
+    pub network: String,
+    variants: Vec<Variant>,
+}
+
+impl VariantFamily {
+    /// Build a family from prepared handles, ordering members by
+    /// ascending NMED (ties by name). All handles must share the input
+    /// geometry — members are interchangeable per request, so a geometry
+    /// mismatch would make routing decisions change request semantics.
+    pub fn from_handles(network: &str, handles: &[&ModelHandle]) -> Result<Self> {
+        if handles.is_empty() {
+            bail!("variant family '{network}' needs at least one member");
+        }
+        let dims = handles[0].image_dims;
+        for h in handles {
+            if h.image_dims != dims {
+                bail!(
+                    "variant family '{network}': member '{}' has image_dims {:?}, \
+                     expected {:?} — family members must be interchangeable",
+                    h.name,
+                    h.image_dims,
+                    dims
+                );
+            }
+        }
+        let mut members: Vec<(f64, String, String)> = handles
+            .iter()
+            .map(|h| (h.accuracy.nmed, h.name.clone(), h.mul_label.clone()))
+            .collect();
+        for (nmed, name, _) in &members {
+            if !nmed.is_finite() {
+                bail!("variant family '{network}': member '{name}' has non-finite NMED");
+            }
+        }
+        members.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("finite NMEDs are totally ordered")
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        let mut seen = std::collections::BTreeSet::new();
+        let variants: Vec<Variant> = members
+            .into_iter()
+            .enumerate()
+            .map(|(tier, (nmed, name, mul_label))| Variant { name, tier, nmed, mul_label })
+            .collect();
+        for v in &variants {
+            if !seen.insert(v.name.clone()) {
+                bail!("variant family '{network}': duplicate member '{}'", v.name);
+            }
+        }
+        Ok(Self {
+            network: network.to_string(),
+            variants,
+        })
+    }
+
+    /// Number of tiers.
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// True when the family has no members (never constructible via
+    /// [`VariantFamily::from_handles`], which requires one).
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// Highest (most approximate) tier index.
+    pub fn max_tier(&self) -> usize {
+        self.variants.len() - 1
+    }
+
+    /// Member at an accuracy tier.
+    pub fn variant(&self, tier: usize) -> &Variant {
+        &self.variants[tier]
+    }
+
+    /// All members in tier order.
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Routing names in tier order.
+    pub fn names(&self) -> Vec<&str> {
+        self.variants.iter().map(|v| v.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::mult::MultKind;
+    use crate::nn::lenet;
+    use crate::nn::multiplier::Multiplier;
+
+    fn handles() -> Vec<ModelHandle> {
+        let bundle = lenet::random_bundle(1, 20, 3);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        vec![
+            graph.prepare_handle(
+                "heam",
+                &Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+                (1, 20, 20),
+            ),
+            graph.prepare_handle("exact", &Multiplier::Exact, (1, 20, 20)),
+            graph.prepare_handle(
+                "ou3",
+                &Multiplier::Lut(Arc::new(MultKind::OuL3.lut())),
+                (1, 20, 20),
+            ),
+        ]
+    }
+
+    #[test]
+    fn orders_by_nmed_with_exact_at_tier_zero() {
+        let hs = handles();
+        let refs: Vec<&ModelHandle> = hs.iter().collect();
+        let fam = VariantFamily::from_handles("lenet", &refs).unwrap();
+        assert_eq!(fam.len(), 3);
+        // Registration order was heam, exact, ou3 — the family must
+        // reorder by accuracy, independent of it.
+        assert_eq!(fam.variant(0).name, "exact");
+        assert_eq!(fam.variant(0).nmed, 0.0);
+        for w in fam.variants().windows(2) {
+            assert!(
+                w[0].nmed <= w[1].nmed,
+                "tiers must be ordered by NMED: {} ({}) vs {} ({})",
+                w[0].name,
+                w[0].nmed,
+                w[1].name,
+                w[1].nmed
+            );
+        }
+        assert_eq!(fam.max_tier(), 2);
+        for (i, v) in fam.variants().iter().enumerate() {
+            assert_eq!(v.tier, i);
+        }
+    }
+
+    #[test]
+    fn empty_and_mismatched_families_rejected() {
+        assert!(VariantFamily::from_handles("lenet", &[]).is_err());
+        let bundle = lenet::random_bundle(1, 20, 3);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let a = graph.prepare_handle("a", &Multiplier::Exact, (1, 20, 20));
+        let b = graph.prepare_handle("b", &Multiplier::Exact, (1, 24, 24));
+        assert!(VariantFamily::from_handles("lenet", &[&a, &b]).is_err());
+        let dup = graph.prepare_handle("a", &Multiplier::Exact, (1, 20, 20));
+        assert!(VariantFamily::from_handles("lenet", &[&a, &dup]).is_err());
+    }
+}

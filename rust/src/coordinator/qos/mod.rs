@@ -1,0 +1,42 @@
+//! QoS-aware adaptive routing: the control plane over the multi-model
+//! gateway.
+//!
+//! The gateway (PR 3) hosts several (model, multiplier) variants side by
+//! side but routes purely by name. This subsystem exploits the core
+//! accuracy-vs-efficiency trade of HEAM *at serving time*, the closed
+//! loop Spantidi/Zervakis ("Positive/Negative Approximate Multipliers
+//! for DNN Accelerators") and Zervakis et al. ("Leveraging Highly
+//! Approximated Multipliers in DNN Inference") motivate: steer traffic
+//! between exact and highly-approximate variants under a quality
+//! constraint, recovering most of the efficiency win with negligible
+//! accuracy loss.
+//!
+//! Layers, bottom up:
+//!
+//! * [`family`] — variant families: registered variants of one network
+//!   ordered by accuracy tier (exhaustive NMED from
+//!   [`Lut::error_metrics`](crate::mult::Lut::error_metrics), carried on
+//!   every prepared [`ModelHandle`](crate::nn::graph::ModelHandle)).
+//! * [`policy`] — request classes (`priority`, `max_p99_us`,
+//!   `min_accuracy_tier`) and the controller's hysteresis parameters.
+//! * [`controller`] — the pure closed-loop decision core: per-tier
+//!   snapshot deltas in, per-class split levels and a deterministic,
+//!   fingerprintable decision trace out.
+//! * [`router`] — deterministic weighted-round-robin routing of
+//!   class-tagged submissions onto gateway lanes, plus the live
+//!   observation thread (`heam serve --qos-policy`).
+//! * [`replay`] — the seeded virtual-time replay harness
+//!   (`heam loadgen --classes`): byte-identical decision traces at any
+//!   worker count, `BENCH_qos.json`, the CI smoke.
+
+pub mod controller;
+pub mod family;
+pub mod policy;
+pub mod replay;
+pub mod router;
+
+pub use controller::{Action, Controller, DecisionRecord, LaneObservation};
+pub use family::{Variant, VariantFamily};
+pub use policy::{parse_classes, ControllerConfig, QosPolicy, RequestClass};
+pub use replay::{QosReport, QosRunConfig, SimConfig};
+pub use router::{spawn_live, LiveController, QosRouter};

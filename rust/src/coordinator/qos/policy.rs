@@ -1,0 +1,286 @@
+//! QoS policy: request classes with SLOs, and the controller's
+//! hysteresis parameters.
+//!
+//! A [`RequestClass`] names one traffic class (e.g. `premium`, `batch`)
+//! with a priority, a p99 latency SLO, and an accuracy floor expressed
+//! as the most approximate family tier the class tolerates
+//! (`min_accuracy_tier`; 0 pins the class to the exact variant). The
+//! [`ControllerConfig`] sets the closed loop's cadence and hysteresis
+//! bands. Both are parseable from the CLI spec syntax used by
+//! `heam serve --qos-policy` and `heam loadgen --classes`:
+//!
+//! ```text
+//! hi:prio=0,p99_ms=25,tier=0,weight=1;lo:prio=1,p99_ms=60,tier=2,weight=3
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::family::VariantFamily;
+
+/// One traffic class and its service-level objectives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestClass {
+    /// Class name (reports, decision trace).
+    pub name: String,
+    /// Importance: 0 is the most important. Under pressure the
+    /// controller degrades the *least* important breaching class first
+    /// and restores the *most* important recovered class first.
+    pub priority: u32,
+    /// Latency SLO: the class's observed p99 must stay below this.
+    pub max_p99_us: u64,
+    /// Accuracy floor, as the highest (most approximate) family tier
+    /// this class may be routed to. 0 = exact only: such a class is
+    /// never shifted, whatever the load.
+    pub min_accuracy_tier: usize,
+    /// Relative traffic share when generating class traces
+    /// (`heam loadgen --classes`); must be positive.
+    pub weight: f64,
+}
+
+/// Closed-loop controller parameters (hysteresis + cadence).
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Tick period. In live mode this is wall time between observations;
+    /// in trace replay it is *virtual* trace time, which is what makes
+    /// the decision sequence a pure function of (seed, trace, policy).
+    pub interval_us: u64,
+    /// Consecutive breaching ticks before the first shift toward a more
+    /// approximate tier (debounce half of the hysteresis).
+    pub degrade_ticks: u32,
+    /// Consecutive clear ticks before the first shift back toward exact.
+    pub recover_ticks: u32,
+    /// Split shift per decision, in milli-tiers (1000 = one full tier).
+    pub step_milli: u32,
+    /// Lower edge of the hysteresis band: a class only counts as clear
+    /// when its observed p99 is below `recover_frac * max_p99_us` (and
+    /// its lanes show no rejections and a drained queue). Between the
+    /// band edges the controller holds — that dead zone is what prevents
+    /// split flapping.
+    pub recover_frac: f64,
+    /// Queue-gauge watermark that counts as degraded on its own.
+    pub queue_high: i64,
+    /// Queue gauge must be at or below this for a clear tick.
+    pub queue_low: i64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            interval_us: 20_000,
+            degrade_ticks: 2,
+            recover_ticks: 3,
+            step_milli: 500,
+            recover_frac: 0.5,
+            queue_high: 256,
+            queue_low: 16,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// Sanity-check the parameters.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.interval_us > 0, "controller interval must be positive");
+        anyhow::ensure!(self.degrade_ticks > 0, "degrade_ticks must be at least 1");
+        anyhow::ensure!(self.recover_ticks > 0, "recover_ticks must be at least 1");
+        anyhow::ensure!(
+            self.step_milli > 0 && self.step_milli <= 1000,
+            "step_milli must be in 1..=1000 (fractions of one tier)"
+        );
+        anyhow::ensure!(
+            self.recover_frac > 0.0 && self.recover_frac < 1.0,
+            "recover_frac must lie strictly inside (0, 1) — it is the lower \
+             edge of the hysteresis band"
+        );
+        anyhow::ensure!(
+            self.queue_low <= self.queue_high,
+            "queue_low must not exceed queue_high"
+        );
+        Ok(())
+    }
+}
+
+/// A full QoS policy: the classes plus the controller parameters.
+#[derive(Clone, Debug)]
+pub struct QosPolicy {
+    pub classes: Vec<RequestClass>,
+    pub ctl: ControllerConfig,
+}
+
+impl QosPolicy {
+    /// Validate the policy against the family it will steer.
+    pub fn validate(&self, family: &VariantFamily) -> Result<()> {
+        self.ctl.validate()?;
+        if self.classes.is_empty() {
+            bail!("QoS policy needs at least one request class");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &self.classes {
+            if c.name.is_empty() {
+                bail!("request class names must not be empty");
+            }
+            if !seen.insert(&c.name) {
+                bail!("duplicate request class '{}'", c.name);
+            }
+            if c.max_p99_us == 0 {
+                bail!("class '{}': max_p99_us must be positive", c.name);
+            }
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                bail!(
+                    "class '{}': weight must be positive and finite, got {}",
+                    c.name,
+                    c.weight
+                );
+            }
+            if c.min_accuracy_tier > family.max_tier() {
+                bail!(
+                    "class '{}': min_accuracy_tier {} exceeds the family's most \
+                     approximate tier {} ({} variants registered)",
+                    c.name,
+                    c.min_accuracy_tier,
+                    family.max_tier(),
+                    family.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Trace-generation weights, in class order.
+    pub fn weights(&self) -> Vec<f64> {
+        self.classes.iter().map(|c| c.weight).collect()
+    }
+
+    /// Index of a class by name.
+    pub fn class_idx(&self, name: &str) -> Result<usize> {
+        self.classes
+            .iter()
+            .position(|c| c.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no request class '{name}' (have: {:?})",
+                    self.classes.iter().map(|c| c.name.as_str()).collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+/// Parse the CLI class spec: `;`-separated classes, each
+/// `name:key=value,...` with keys `prio` (required), `p99_ms` or
+/// `p99_us` (required), `tier` (default 0) and `weight` (default 1).
+pub fn parse_classes(spec: &str) -> Result<Vec<RequestClass>> {
+    fn num<T: std::str::FromStr>(name: &str, k: &str, v: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        v.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("class '{name}': bad value '{v}' for {k}: {e}"))
+    }
+    let mut classes = Vec::new();
+    for chunk in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, body) = chunk
+            .split_once(':')
+            .with_context(|| format!("class '{chunk}': expected 'name:key=value,...'"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("class '{chunk}': name must not be empty");
+        }
+        let mut priority: Option<u32> = None;
+        let mut max_p99_us: Option<u64> = None;
+        let mut tier = 0usize;
+        let mut weight = 1.0f64;
+        for kv in body.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("class '{name}': expected key=value, got '{kv}'"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "prio" | "priority" => priority = Some(num(name, k, v)?),
+                "p99_ms" => {
+                    let ms: u64 = num(name, k, v)?;
+                    max_p99_us = Some(ms * 1000);
+                }
+                "p99_us" => max_p99_us = Some(num(name, k, v)?),
+                "tier" | "min_tier" => tier = num(name, k, v)?,
+                "weight" => weight = num(name, k, v)?,
+                other => bail!(
+                    "class '{name}': unknown key '{other}' \
+                     (expected prio, p99_ms, p99_us, tier, weight)"
+                ),
+            }
+        }
+        classes.push(RequestClass {
+            name: name.to_string(),
+            priority: priority
+                .with_context(|| format!("class '{name}': missing required key 'prio'"))?,
+            max_p99_us: max_p99_us
+                .with_context(|| format!("class '{name}': missing required key 'p99_ms' (or 'p99_us')"))?,
+            min_accuracy_tier: tier,
+            weight,
+        });
+    }
+    if classes.is_empty() {
+        bail!("class spec is empty — expected 'name:prio=..,p99_ms=..[,tier=..][,weight=..];...'");
+    }
+    Ok(classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_spec() {
+        let cs =
+            parse_classes("hi:prio=0,p99_ms=25,tier=0,weight=1; lo:prio=1,p99_ms=60,tier=2,weight=3")
+                .unwrap();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].name, "hi");
+        assert_eq!(cs[0].priority, 0);
+        assert_eq!(cs[0].max_p99_us, 25_000);
+        assert_eq!(cs[0].min_accuracy_tier, 0);
+        assert_eq!(cs[1].name, "lo");
+        assert_eq!(cs[1].min_accuracy_tier, 2);
+        assert_eq!(cs[1].weight, 3.0);
+    }
+
+    #[test]
+    fn defaults_and_microsecond_form() {
+        let cs = parse_classes("c:prio=2,p99_us=1500").unwrap();
+        assert_eq!(cs[0].max_p99_us, 1500);
+        assert_eq!(cs[0].min_accuracy_tier, 0);
+        assert_eq!(cs[0].weight, 1.0);
+    }
+
+    #[test]
+    fn malformed_specs_error_with_the_class_name() {
+        for (spec, needle) in [
+            ("", "empty"),
+            ("noname", "name:key=value"),
+            ("c:prio=0", "p99_ms"),
+            ("c:p99_ms=10", "prio"),
+            ("c:prio=0,p99_ms=10,bogus=1", "unknown key"),
+            ("c:prio=x,p99_ms=10", "bad value"),
+        ] {
+            let err = parse_classes(spec).expect_err(spec);
+            assert!(
+                format!("{err:#}").contains(needle),
+                "spec '{spec}': error '{err:#}' should mention '{needle}'"
+            );
+        }
+    }
+
+    #[test]
+    fn controller_config_bounds_enforced() {
+        assert!(ControllerConfig::default().validate().is_ok());
+        assert!(ControllerConfig { step_milli: 0, ..Default::default() }.validate().is_err());
+        assert!(ControllerConfig { step_milli: 1500, ..Default::default() }.validate().is_err());
+        assert!(ControllerConfig { recover_frac: 1.0, ..Default::default() }.validate().is_err());
+        assert!(ControllerConfig { interval_us: 0, ..Default::default() }.validate().is_err());
+        assert!(
+            ControllerConfig { queue_low: 9, queue_high: 8, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+    }
+}

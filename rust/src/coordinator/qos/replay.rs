@@ -1,0 +1,549 @@
+//! Deterministic trace replay for the QoS loop — `heam loadgen
+//! --classes`, `cargo bench --bench qos_routing`, and the CI smoke.
+//!
+//! Live QoS serving reacts to wall-clock observations and is therefore
+//! not reproducible run-to-run. The replay harness is: the controller is
+//! driven in *virtual time* along the class trace's arrival offsets, and
+//! its observations come from a deterministic lane model instead of the
+//! wall clock — a shared-pool queueing sketch in which tier `t` costs
+//! `service_us / speedup^t` microseconds of virtual service (the
+//! hardware premise of HEAM: more approximate multipliers are cheaper).
+//! Every routing decision, split level and decision-trace entry is then
+//! a pure function of (seed, trace, policy, sim), byte-identical at any
+//! worker count — while the requests themselves are still really
+//! submitted to the gateway, so the report also carries *measured*
+//! per-class latency percentiles next to the deterministic ledger.
+//!
+//! The deterministic half is printed as the `qos trace …` line
+//! (scripts/check.sh --qos diffs it across two seeded runs) and
+//! serialized into `BENCH_qos.json` together with the split trajectory
+//! and the per-class burst-shift fractions the acceptance criterion
+//! reads.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::json::Value;
+
+use super::super::loadgen::{class_trace_fingerprint, generate_class_trace, image_for, BurstConfig};
+use super::super::metrics::Metrics;
+use super::super::server::{Server, Submission};
+use super::controller::{Action, DecisionRecord, LaneObservation};
+use super::router::QosRouter;
+
+/// The deterministic lane model.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Virtual per-request service cost of tier 0 (µs).
+    pub service_us: u64,
+    /// Per-tier speedup in milli (1500 = each tier is 1.5× cheaper than
+    /// the one before — the accuracy/efficiency trade being exploited).
+    pub speedup_milli: u32,
+    /// Virtual worker count: the shared pool serves
+    /// `workers * interval_us` microseconds of requests per tick.
+    pub workers: u64,
+    /// Virtual per-lane queue bound; backlog beyond it is shed and
+    /// surfaces as the controller's rejection signal.
+    pub queue_depth: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            service_us: 400,
+            speedup_milli: 1500,
+            workers: 2,
+            queue_depth: 512,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Virtual service cost per family tier.
+    fn costs(&self, tiers: usize) -> Vec<u64> {
+        let mut costs = Vec::with_capacity(tiers);
+        let mut c = self.service_us.max(1);
+        for _ in 0..tiers {
+            costs.push(c);
+            c = (c * 1000 / self.speedup_milli as u64).max(1);
+        }
+        costs
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.service_us > 0, "sim service_us must be positive");
+        anyhow::ensure!(
+            self.speedup_milli >= 1000,
+            "sim speedup_milli must be >= 1000 (more approximate tiers \
+             cannot be slower than exact ones)"
+        );
+        anyhow::ensure!(self.workers > 0, "sim workers must be positive");
+        anyhow::ensure!(self.queue_depth > 0, "sim queue_depth must be positive");
+        Ok(())
+    }
+}
+
+/// Replay-run configuration: the class trace plus the lane model.
+#[derive(Clone, Debug)]
+pub struct QosRunConfig {
+    pub seed: u64,
+    pub requests: usize,
+    pub rate_rps: f64,
+    pub burst: Option<BurstConfig>,
+    pub sim: SimConfig,
+}
+
+/// Per-class results: the deterministic routing ledger plus measured
+/// latencies.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    pub name: String,
+    /// Deterministic: trace events of this class.
+    pub submitted: u64,
+    /// Deterministic: events routed per family tier.
+    pub served_by_tier: Vec<u64>,
+    /// Deterministic: fraction routed to any tier > 0.
+    pub approx_fraction: f64,
+    /// Deterministic: events arriving inside burst windows, and how many
+    /// of those went to an approximate tier — the acceptance metric.
+    pub burst_submitted: u64,
+    pub burst_approx: u64,
+    /// Measured: really completed / shed by the gateway.
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    /// Measured end-to-end percentiles (client side), µs.
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl ClassReport {
+    /// Fraction of this class's burst-window traffic served by an
+    /// approximate tier (0 when the trace has no burst windows).
+    pub fn burst_approx_fraction(&self) -> f64 {
+        if self.burst_submitted == 0 {
+            0.0
+        } else {
+            self.burst_approx as f64 / self.burst_submitted as f64
+        }
+    }
+}
+
+/// Results of one QoS replay run.
+#[derive(Clone, Debug)]
+pub struct QosReport {
+    pub seed: u64,
+    pub trace_fingerprint: u64,
+    pub decision_fingerprint: u64,
+    /// Controller ticks fired while events flowed / during the drain
+    /// tail after the last event.
+    pub event_ticks: u64,
+    pub drain_ticks: u64,
+    pub interval_us: u64,
+    pub per_class: Vec<ClassReport>,
+    /// One level vector per tick (milli-tiers) — the split trajectory.
+    pub split_history: Vec<Vec<u32>>,
+    pub decisions: Vec<DecisionRecord>,
+    /// Final per-class levels; all-zero means the controller restored
+    /// the exact variant by the end of the run.
+    pub levels_final: Vec<u32>,
+    /// First tick from which every class stayed on the exact variant for
+    /// the rest of the run (None if the run ends shifted).
+    pub restore_tick: Option<u64>,
+    pub wall_s: f64,
+}
+
+impl QosReport {
+    /// The deterministic identity line: every field is a pure function
+    /// of (seed, trace, policy, sim) — two runs with the same seed must
+    /// print identical lines, which is exactly what the CI smoke diffs.
+    pub fn trace_line(&self) -> String {
+        let shifts: Vec<String> = self
+            .per_class
+            .iter()
+            .map(|c| format!("{}={:.3}", c.name, c.burst_approx_fraction()))
+            .collect();
+        let finals: Vec<String> = self
+            .per_class
+            .iter()
+            .zip(&self.levels_final)
+            .map(|(c, l)| format!("{}={l}", c.name))
+            .collect();
+        format!(
+            "qos trace {:#018x} decisions {:#018x} ticks {}+{} burst-shift [{}] final [{}]",
+            self.trace_fingerprint,
+            self.decision_fingerprint,
+            self.event_ticks,
+            self.drain_ticks,
+            shifts.join(", "),
+            finals.join(", ")
+        )
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{}\nwall {:.2}s — {} decisions over {} ticks (restore tick: {})\n",
+            self.trace_line(),
+            self.wall_s,
+            self.decisions.len(),
+            self.event_ticks + self.drain_ticks,
+            self.restore_tick
+                .map(|t| t.to_string())
+                .unwrap_or_else(|| "none".to_string()),
+        );
+        for c in &self.per_class {
+            let tiers: Vec<String> =
+                c.served_by_tier.iter().map(|n| n.to_string()).collect();
+            s.push_str(&format!(
+                "  {:<10} submitted {:>6}  by-tier [{}]  approx {:.1}%  \
+                 burst-approx {:.1}%  completed {:>6}  rejected {:>6}  \
+                 p50 {:.2}ms  p99 {:.2}ms\n",
+                c.name,
+                c.submitted,
+                tiers.join(", "),
+                100.0 * c.approx_fraction,
+                100.0 * c.burst_approx_fraction(),
+                c.completed,
+                c.rejected,
+                c.p50_us as f64 / 1000.0,
+                c.p99_us as f64 / 1000.0,
+            ));
+        }
+        s
+    }
+
+    /// Serialize for `BENCH_qos.json`.
+    pub fn to_json(&self, router: &QosRouter) -> Value {
+        let policy = router.policy();
+        let classes: Vec<Value> = self
+            .per_class
+            .iter()
+            .zip(&policy.classes)
+            .map(|(c, spec)| {
+                Value::obj(vec![
+                    ("name", Value::Str(c.name.clone())),
+                    ("priority", Value::Int(spec.priority as i64)),
+                    ("max_p99_us", Value::Int(spec.max_p99_us as i64)),
+                    ("min_accuracy_tier", Value::Int(spec.min_accuracy_tier as i64)),
+                    ("submitted", Value::Int(c.submitted as i64)),
+                    (
+                        "served_by_tier",
+                        Value::Arr(
+                            c.served_by_tier.iter().map(|&n| Value::Int(n as i64)).collect(),
+                        ),
+                    ),
+                    ("approx_fraction", Value::Num(c.approx_fraction)),
+                    ("burst_submitted", Value::Int(c.burst_submitted as i64)),
+                    ("burst_approx", Value::Int(c.burst_approx as i64)),
+                    ("burst_approx_fraction", Value::Num(c.burst_approx_fraction())),
+                    ("completed", Value::Int(c.completed as i64)),
+                    ("rejected", Value::Int(c.rejected as i64)),
+                    ("failed", Value::Int(c.failed as i64)),
+                    ("p50_us", Value::Int(c.p50_us as i64)),
+                    ("p99_us", Value::Int(c.p99_us as i64)),
+                ])
+            })
+            .collect();
+        let family: Vec<Value> = router
+            .family()
+            .variants()
+            .iter()
+            .map(|v| {
+                Value::obj(vec![
+                    ("name", Value::Str(v.name.clone())),
+                    ("tier", Value::Int(v.tier as i64)),
+                    ("nmed", Value::Num(v.nmed)),
+                    ("multiplier", Value::Str(v.mul_label.clone())),
+                ])
+            })
+            .collect();
+        let history: Vec<Value> = self
+            .split_history
+            .iter()
+            .map(|levels| {
+                Value::Arr(levels.iter().map(|&l| Value::Int(l as i64)).collect())
+            })
+            .collect();
+        let decisions: Vec<Value> = self
+            .decisions
+            .iter()
+            .map(|d| {
+                Value::obj(vec![
+                    ("tick", Value::Int(d.tick as i64)),
+                    ("class", Value::Int(d.class as i64)),
+                    (
+                        "action",
+                        Value::Str(
+                            match d.action {
+                                Action::ShiftApprox => "shift_approx",
+                                Action::ShiftExact => "shift_exact",
+                            }
+                            .to_string(),
+                        ),
+                    ),
+                    ("level_milli", Value::Int(d.level_milli as i64)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("bench", Value::Str("qos_routing".to_string())),
+            ("seed", Value::Int(self.seed as i64)),
+            (
+                "trace_fingerprint",
+                Value::Str(format!("{:#018x}", self.trace_fingerprint)),
+            ),
+            (
+                "decision_fingerprint",
+                Value::Str(format!("{:#018x}", self.decision_fingerprint)),
+            ),
+            ("interval_us", Value::Int(self.interval_us as i64)),
+            ("event_ticks", Value::Int(self.event_ticks as i64)),
+            ("drain_ticks", Value::Int(self.drain_ticks as i64)),
+            (
+                "restore_tick",
+                self.restore_tick.map(|t| Value::Int(t as i64)).unwrap_or(Value::Null),
+            ),
+            (
+                "levels_final",
+                Value::Arr(self.levels_final.iter().map(|&l| Value::Int(l as i64)).collect()),
+            ),
+            ("wall_s", Value::Num(self.wall_s)),
+            ("family", Value::Arr(family)),
+            ("classes", Value::Arr(classes)),
+            ("split_history", Value::Arr(history)),
+            ("decisions", Value::Arr(decisions)),
+        ])
+    }
+}
+
+/// Shared-pool queueing sketch: one tick of virtual service.
+struct LaneSim {
+    costs: Vec<u64>,
+    backlog: Vec<u64>,
+    arrivals: Vec<u64>,
+    shed: Vec<u64>,
+    budget_per_tick: u64,
+    queue_depth: u64,
+}
+
+impl LaneSim {
+    fn new(sim: &SimConfig, tiers: usize, interval_us: u64) -> Self {
+        Self {
+            costs: sim.costs(tiers),
+            backlog: vec![0; tiers],
+            arrivals: vec![0; tiers],
+            shed: vec![0; tiers],
+            budget_per_tick: sim.workers * interval_us,
+            queue_depth: sim.queue_depth,
+        }
+    }
+
+    fn arrive(&mut self, tier: usize) {
+        self.arrivals[tier] += 1;
+    }
+
+    fn idle(&self) -> bool {
+        self.backlog.iter().all(|&b| b == 0) && self.arrivals.iter().all(|&a| a == 0)
+    }
+
+    /// Advance one controller interval: absorb the window's arrivals,
+    /// serve round-robin from the shared budget, shed overflow, and
+    /// report per-tier observations (latency proxy = FIFO drain time of
+    /// a new arrival on that lane).
+    fn tick(&mut self) -> Vec<LaneObservation> {
+        let n = self.costs.len();
+        for t in 0..n {
+            self.backlog[t] += self.arrivals[t];
+            self.arrivals[t] = 0;
+        }
+        let mut budget = self.budget_per_tick;
+        loop {
+            let mut served_any = false;
+            for t in 0..n {
+                if self.backlog[t] > 0 && budget >= self.costs[t] {
+                    self.backlog[t] -= 1;
+                    budget -= self.costs[t];
+                    served_any = true;
+                }
+            }
+            if !served_any {
+                break;
+            }
+        }
+        (0..n)
+            .map(|t| {
+                if self.backlog[t] > self.queue_depth {
+                    self.shed[t] += self.backlog[t] - self.queue_depth;
+                    self.backlog[t] = self.queue_depth;
+                }
+                LaneObservation {
+                    p99_us: (self.backlog[t] + 1) * self.costs[t],
+                    rejected_delta: std::mem::take(&mut self.shed[t]),
+                    queue: self.backlog[t] as i64,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Replay a seeded class trace against a live gateway through the QoS
+/// router, driving the controller from the deterministic lane model.
+/// The router must be freshly constructed (its decision trace starts at
+/// tick 0).
+pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<QosReport> {
+    cfg.sim.validate()?;
+    let policy = router.policy();
+    let n_classes = policy.classes.len();
+    let n_tiers = router.family().len();
+    let events = generate_class_trace(
+        cfg.seed,
+        cfg.requests,
+        cfg.rate_rps,
+        cfg.burst.as_ref(),
+        &policy.weights(),
+    )?;
+    let trace_fp = class_trace_fingerprint(&events);
+    let image_size = server.image_size(&router.family().variant(0).name)?;
+    let interval = policy.ctl.interval_us;
+    let in_burst = |at_us: u64| cfg.burst.as_ref().is_some_and(|b| b.contains_us(at_us));
+
+    let mut sim = LaneSim::new(&cfg.sim, n_tiers, interval);
+    let mut submitted = vec![0u64; n_classes];
+    let mut served_by_tier = vec![vec![0u64; n_tiers]; n_classes];
+    let mut burst_submitted = vec![0u64; n_classes];
+    let mut burst_approx = vec![0u64; n_classes];
+    let mut rejected = vec![0u64; n_classes];
+    let mut event_ticks = 0u64;
+    let mut drain_ticks = 0u64;
+
+    let t0 = Instant::now();
+    let (class_metrics, wait_failed) = std::thread::scope(|scope| -> Result<_> {
+        let (done_tx, done_rx) = mpsc::channel::<(usize, super::super::server::Pending)>();
+        let collector = scope.spawn(move || {
+            let metrics: Vec<Metrics> = (0..n_classes).map(|_| Metrics::default()).collect();
+            let mut wait_failed = vec![0u64; n_classes];
+            while let Ok((class, pending)) = done_rx.recv() {
+                // The latency is the worker's admission→fulfillment
+                // measurement, so this single FIFO collector cannot
+                // inflate one class's percentiles with head-of-line
+                // waiting on another's slower lane.
+                match pending.wait_with_latency() {
+                    Ok((_, latency_us)) => metrics[class].record_request(latency_us),
+                    Err(_) => wait_failed[class] += 1,
+                }
+            }
+            (metrics, wait_failed)
+        });
+        let start = Instant::now();
+        let mut next_tick_us = interval;
+        for ev in &events {
+            // Virtual time drives the controller: fire every tick due
+            // before this arrival, regardless of wall-clock slip.
+            while ev.at_us >= next_tick_us {
+                router.tick(&sim.tick());
+                event_ticks += 1;
+                next_tick_us += interval;
+            }
+            let target = Duration::from_micros(ev.at_us);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            let image = image_for(ev.image_seed, image_size);
+            let (tier, sub) = router.submit(server, ev.class, image)?;
+            sim.arrive(tier);
+            submitted[ev.class] += 1;
+            served_by_tier[ev.class][tier] += 1;
+            if in_burst(ev.at_us) {
+                burst_submitted[ev.class] += 1;
+                if tier > 0 {
+                    burst_approx[ev.class] += 1;
+                }
+            }
+            match sub {
+                Submission::Admitted(p) => {
+                    let _ = done_tx.send((ev.class, p));
+                }
+                Submission::Rejected => rejected[ev.class] += 1,
+            }
+        }
+        // Drain tail: keep ticking until the virtual backlog is gone and
+        // every class is back on the exact variant (bounded — a policy
+        // that cannot restore, e.g. under a persistent breach, must not
+        // loop forever).
+        while drain_ticks < 2000
+            && !(sim.idle() && router.levels().iter().all(|&l| l == 0))
+        {
+            router.tick(&sim.tick());
+            drain_ticks += 1;
+        }
+        drop(done_tx);
+        Ok(collector.join().expect("qos replay collector thread"))
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let split_history = router.history();
+    let levels_final = router.levels();
+    // First tick from which every class stayed exact to the end.
+    // `history_dropped` keeps tick indexing correct even if an extreme
+    // run outgrew the controller's trace bound (entry i is tick
+    // dropped + i; when the restoration predates the retained window the
+    // offset itself is the conservative answer).
+    let history_offset = router.history_dropped();
+    let restore_tick = if levels_final.iter().all(|&l| l == 0) {
+        Some(
+            split_history
+                .iter()
+                .rposition(|levels| levels.iter().any(|&l| l > 0))
+                .map(|i| history_offset + i as u64 + 1)
+                .unwrap_or(history_offset),
+        )
+    } else {
+        None
+    };
+
+    let per_class: Vec<ClassReport> = policy
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(c, spec)| {
+            let snap = class_metrics[c].snapshot();
+            let approx: u64 = served_by_tier[c][1..].iter().sum();
+            ClassReport {
+                name: spec.name.clone(),
+                submitted: submitted[c],
+                served_by_tier: served_by_tier[c].clone(),
+                approx_fraction: if submitted[c] == 0 {
+                    0.0
+                } else {
+                    approx as f64 / submitted[c] as f64
+                },
+                burst_submitted: burst_submitted[c],
+                burst_approx: burst_approx[c],
+                completed: snap.requests,
+                rejected: rejected[c],
+                failed: wait_failed[c],
+                p50_us: snap.latency_percentile_us(0.50),
+                p99_us: snap.latency_percentile_us(0.99),
+            }
+        })
+        .collect();
+
+    Ok(QosReport {
+        seed: cfg.seed,
+        trace_fingerprint: trace_fp,
+        decision_fingerprint: router.decision_fingerprint(),
+        event_ticks,
+        drain_ticks,
+        interval_us: interval,
+        per_class,
+        split_history,
+        decisions: router.decisions(),
+        levels_final,
+        restore_tick,
+        wall_s,
+    })
+}

@@ -1,0 +1,316 @@
+//! The QoS-aware router: submits class-tagged requests to the gateway
+//! lane the controller's current split selects.
+//!
+//! Splitting is deterministic weighted round-robin, not sampling: a
+//! class at level 250 carries a per-class credit accumulator that routes
+//! exactly 1 request in 4 to the next tier, in a fixed pattern. With a
+//! single dispatcher (the open-loop load generator, the replay harness)
+//! the routed tier sequence is therefore a pure function of the decision
+//! history — no RNG, no wall clock.
+//!
+//! Two ways to drive the loop:
+//!
+//! * **Live** — [`spawn_live`] starts a controller thread that wakes
+//!   every `interval_us`, reads real per-lane
+//!   [`Snapshot`](crate::coordinator::metrics::Snapshot) deltas (p99,
+//!   rejection delta, queue gauge) from the server, and ticks. This is
+//!   `heam serve --qos-policy`.
+//! * **Replayed** — the caller ticks manually with observations from the
+//!   deterministic lane model ([`super::replay`]); nothing here depends
+//!   on timing or worker count.
+
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::super::metrics::Snapshot;
+use super::super::server::{Server, Submission};
+use super::controller::{Controller, DecisionRecord, LaneObservation};
+use super::family::VariantFamily;
+use super::policy::QosPolicy;
+
+struct RouterState {
+    ctl: Controller,
+    /// Per-class WRR credit accumulator (milli-tier units).
+    acc: Vec<u32>,
+}
+
+/// Class-aware router over a variant family.
+pub struct QosRouter {
+    family: VariantFamily,
+    state: Mutex<RouterState>,
+}
+
+impl QosRouter {
+    /// Build a router; the policy is validated against the family.
+    pub fn new(family: VariantFamily, policy: QosPolicy) -> Result<Self> {
+        policy.validate(&family)?;
+        let n = policy.classes.len();
+        Ok(Self {
+            family,
+            state: Mutex::new(RouterState {
+                ctl: Controller::new(policy),
+                acc: vec![0; n],
+            }),
+        })
+    }
+
+    /// The family this router steers.
+    pub fn family(&self) -> &VariantFamily {
+        &self.family
+    }
+
+    /// Pick the tier for the next request of `class` and advance the
+    /// class's WRR credit. Never exceeds the class's accuracy floor —
+    /// the controller clamps levels at `min_accuracy_tier * 1000`.
+    pub fn route(&self, class: usize) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let level = st.ctl.levels()[class];
+        let lo = (level / 1000) as usize;
+        let frac = level % 1000;
+        if frac == 0 {
+            return lo;
+        }
+        st.acc[class] += frac;
+        if st.acc[class] >= 1000 {
+            st.acc[class] -= 1000;
+            lo + 1
+        } else {
+            lo
+        }
+    }
+
+    /// Route one image for `class` and submit it to the matching gateway
+    /// lane. Returns the tier served alongside the admission outcome.
+    pub fn submit(
+        &self,
+        server: &Server,
+        class: usize,
+        image: Vec<f32>,
+    ) -> Result<(usize, Submission)> {
+        let tier = self.route(class);
+        let sub = server.try_submit(&self.family.variant(tier).name, image)?;
+        Ok((tier, sub))
+    }
+
+    /// Apply one controller tick over per-tier observations. A decision
+    /// resets the affected class's WRR credit, so every split level
+    /// starts from the same (exact-first) routing pattern — leftover
+    /// credit from a previous level must not skew the next one.
+    pub fn tick(&self, obs: &[LaneObservation]) -> Option<DecisionRecord> {
+        let mut st = self.state.lock().unwrap();
+        let decision = st.ctl.tick(obs);
+        if let Some(d) = decision {
+            st.acc[d.class] = 0;
+        }
+        decision
+    }
+
+    /// Read real per-lane observations from the server — `Snapshot`
+    /// deltas since the previous tick plus the live queue gauge — and
+    /// advance `prev` to the new baselines. `prev` must hold one
+    /// baseline per family tier (see [`QosRouter::baselines`]).
+    pub fn observe(&self, server: &Server, prev: &mut [Snapshot]) -> Result<Vec<LaneObservation>> {
+        let mut obs = Vec::with_capacity(self.family.len());
+        for (tier, base) in prev.iter_mut().enumerate() {
+            let snap = server.model_metrics(&self.family.variant(tier).name)?;
+            let delta = snap.delta_since(base);
+            obs.push(LaneObservation {
+                p99_us: delta.latency_percentile_us(0.99),
+                rejected_delta: delta.rejected,
+                queue: snap.queue,
+            });
+            *base = snap;
+        }
+        Ok(obs)
+    }
+
+    /// Initial observation baselines for [`QosRouter::observe`].
+    pub fn baselines(&self, server: &Server) -> Result<Vec<Snapshot>> {
+        self.family
+            .names()
+            .iter()
+            .map(|n| server.model_metrics(n))
+            .collect()
+    }
+
+    /// Current per-class split levels (milli-tiers).
+    pub fn levels(&self) -> Vec<u32> {
+        self.state.lock().unwrap().ctl.levels().to_vec()
+    }
+
+    /// The split trajectory (one level vector per tick). Entry `i`
+    /// describes tick [`QosRouter::history_dropped`]` + i`.
+    pub fn history(&self) -> Vec<Vec<u32>> {
+        self.state.lock().unwrap().ctl.history().to_vec()
+    }
+
+    /// Ticks dropped off the front of the trajectory by the live-mode
+    /// trace bound (0 for bounded replay runs).
+    pub fn history_dropped(&self) -> u64 {
+        self.state.lock().unwrap().ctl.history_dropped()
+    }
+
+    /// The decision trace so far.
+    pub fn decisions(&self) -> Vec<DecisionRecord> {
+        self.state.lock().unwrap().ctl.decisions().to_vec()
+    }
+
+    /// Replay identity of the decision trace.
+    pub fn decision_fingerprint(&self) -> u64 {
+        self.state.lock().unwrap().ctl.decision_fingerprint()
+    }
+
+    /// Ticks elapsed.
+    pub fn ticks(&self) -> u64 {
+        self.state.lock().unwrap().ctl.ticks()
+    }
+
+    /// The policy (classes + controller parameters).
+    pub fn policy(&self) -> QosPolicy {
+        self.state.lock().unwrap().ctl.policy().clone()
+    }
+}
+
+/// Handle to a live controller thread; stop it explicitly or let drop
+/// do it.
+pub struct LiveController {
+    /// Dropping the sender wakes the loop immediately — stopping never
+    /// waits out the tick interval.
+    stop: Option<mpsc::Sender<()>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LiveController {
+    /// Signal the loop and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        drop(self.stop.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LiveController {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Start the live closed loop: a thread that wakes every
+/// `policy.ctl.interval_us`, reads per-lane snapshot deltas from the
+/// server, and ticks the router's controller. Wall-clock scheduling
+/// makes live runs non-reproducible by nature — the deterministic story
+/// is the replay harness, which drives the same controller from virtual
+/// time.
+pub fn spawn_live(router: Arc<QosRouter>, server: Arc<Server>) -> Result<LiveController> {
+    let interval = Duration::from_micros(router.policy().ctl.interval_us);
+    let mut prev = router.baselines(&server)?;
+    let (stop_tx, stop_rx) = mpsc::channel::<()>();
+    let handle = std::thread::spawn(move || {
+        loop {
+            // The interval wait doubles as the stop signal: the handle
+            // dropping its sender disconnects the channel and wakes the
+            // loop immediately, however long the interval is.
+            match stop_rx.recv_timeout(interval) {
+                Err(RecvTimeoutError::Timeout) => {}
+                Ok(()) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+            match router.observe(&server, &mut prev) {
+                Ok(obs) => {
+                    router.tick(&obs);
+                }
+                // Lane lookups only fail if the server is gone; exit.
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(LiveController { stop: Some(stop_tx), handle: Some(handle) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::qos::policy::{ControllerConfig, RequestClass};
+    use crate::nn::lenet;
+    use crate::nn::multiplier::Multiplier;
+
+    fn family() -> VariantFamily {
+        let bundle = lenet::random_bundle(1, 20, 3);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let exact = graph.prepare_handle("exact", &Multiplier::Exact, (1, 20, 20));
+        let heam = graph.prepare_handle(
+            "heam",
+            &Multiplier::Lut(std::sync::Arc::new(crate::mult::MultKind::Heam.lut())),
+            (1, 20, 20),
+        );
+        VariantFamily::from_handles("lenet", &[&exact, &heam]).unwrap()
+    }
+
+    fn one_class_policy(tier: usize) -> QosPolicy {
+        QosPolicy {
+            classes: vec![RequestClass {
+                name: "c".into(),
+                priority: 0,
+                max_p99_us: 50_000,
+                min_accuracy_tier: tier,
+                weight: 1.0,
+            }],
+            ctl: ControllerConfig { degrade_ticks: 1, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn wrr_split_is_exact_over_a_credit_cycle() {
+        let router = QosRouter::new(family(), one_class_policy(1)).unwrap();
+        // Shift to level 500 manually: one hot tick.
+        let hot = LaneObservation { p99_us: 1_000_000, rejected_delta: 1, queue: 999 };
+        let calm = LaneObservation::default();
+        router.tick(&[hot, calm]);
+        assert_eq!(router.levels(), vec![500]);
+        // 1000 requests at 500/1000 credit: exactly half to each tier,
+        // in a deterministic alternating pattern.
+        let tiers: Vec<usize> = (0..1000).map(|_| router.route(0)).collect();
+        assert_eq!(tiers.iter().filter(|&&t| t == 1).count(), 500);
+        assert_eq!(tiers[0], 0);
+        assert_eq!(tiers[1], 1);
+        // Level 0 routes everything to the exact tier.
+        let router = QosRouter::new(family(), one_class_policy(1)).unwrap();
+        assert!((0..100).all(|_| router.route(0) == 0));
+    }
+
+    #[test]
+    fn wrr_credit_resets_on_level_transitions() {
+        let router = QosRouter::new(family(), one_class_policy(1)).unwrap();
+        let hot = LaneObservation { p99_us: 1_000_000, rejected_delta: 1, queue: 999 };
+        let calm = LaneObservation::default();
+        router.tick(&[hot, calm]);
+        assert_eq!(router.levels(), vec![500]);
+        // Leave stale fractional credit behind (one route = acc 500)...
+        assert_eq!(router.route(0), 0);
+        // ...recover to level 0 (default recover_ticks = 3)...
+        for _ in 0..3 {
+            router.tick(&[calm, calm]);
+        }
+        assert_eq!(router.levels(), vec![0]);
+        // ...and degrade again: the fresh split must start exact-first,
+        // not inherit the old cycle's half-spent credit.
+        router.tick(&[hot, calm]);
+        assert_eq!(router.levels(), vec![500]);
+        assert_eq!(router.route(0), 0, "stale WRR credit must not leak across levels");
+    }
+
+    #[test]
+    fn policy_family_mismatch_rejected() {
+        // min_accuracy_tier beyond the family's last tier must fail at
+        // construction, not at routing time.
+        assert!(QosRouter::new(family(), one_class_policy(5)).is_err());
+        assert!(QosRouter::new(family(), one_class_policy(1)).is_ok());
+    }
+}

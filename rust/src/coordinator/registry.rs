@@ -9,11 +9,13 @@
 //! turns the registry into per-model admission queues over one shared
 //! worker pool.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::nn::gemm::Scratch;
 use crate::nn::graph::{Graph, ModelHandle};
 use crate::nn::multiplier::Multiplier;
+
+use super::qos::family::VariantFamily;
 
 /// An ordered collection of uniquely-named model variants. Order is
 /// preserved: lane indices in the gateway match registration order, and
@@ -80,6 +82,48 @@ impl ModelRegistry {
         image_dims: (usize, usize, usize),
     ) -> Result<()> {
         self.register_handle(graph.prepare_handle(name, mul, image_dims))
+    }
+
+    /// Register a whole variant family of one network — one prepared
+    /// variant per (name, multiplier) pair, all sharing the graph and
+    /// input geometry — and return the accuracy-ordered
+    /// [`VariantFamily`] the QoS router steers. Tier order comes from
+    /// each multiplier's exhaustive NMED, not from the argument order.
+    ///
+    /// All-or-nothing: members are probed and the family built in a
+    /// staging registry first, so a failure on the third variant does
+    /// not leave the first two behind as orphaned routable lanes.
+    pub fn register_family(
+        &mut self,
+        network: &str,
+        graph: &Graph,
+        variants: &[(String, Multiplier)],
+        image_dims: (usize, usize, usize),
+    ) -> Result<VariantFamily> {
+        let mut staged = ModelRegistry::new();
+        for (name, mul) in variants {
+            if self.entries.iter().any(|e| e.name == *name) {
+                bail!("duplicate model name '{name}'");
+            }
+            staged.register(name, graph, mul, image_dims)?;
+        }
+        let names: Vec<String> = variants.iter().map(|(n, _)| n.clone()).collect();
+        let family = staged.family(network, &names)?;
+        self.entries.extend(staged.entries);
+        Ok(family)
+    }
+
+    /// Build the accuracy-ordered family of already-registered members.
+    pub fn family(&self, network: &str, members: &[String]) -> Result<VariantFamily> {
+        let handles: Vec<&ModelHandle> = members
+            .iter()
+            .map(|n| {
+                self.get(n).ok_or_else(|| {
+                    anyhow!("family '{network}': no registered model '{n}' (have: {:?})", self.names())
+                })
+            })
+            .collect::<Result<_>>()?;
+        VariantFamily::from_handles(network, &handles)
     }
 
     /// Registered names, in registration (= lane) order.
@@ -155,6 +199,63 @@ mod tests {
         assert!(reg.register("m", &g, &Multiplier::Exact, (1, 20, 20)).is_err());
         assert!(reg.register("", &g, &Multiplier::Exact, (1, 20, 20)).is_err());
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn family_registration_orders_by_accuracy_not_argument_order() {
+        let g = tiny_graph();
+        let mut reg = ModelRegistry::new();
+        let fam = reg
+            .register_family(
+                "lenet",
+                &g,
+                &[
+                    (
+                        "heam".to_string(),
+                        Multiplier::Lut(std::sync::Arc::new(crate::mult::MultKind::Heam.lut())),
+                    ),
+                    ("exact".to_string(), Multiplier::Exact),
+                ],
+                (1, 20, 20),
+            )
+            .unwrap();
+        // Both members are routable lanes...
+        assert_eq!(reg.names(), vec!["heam", "exact"]);
+        // ...but the family is accuracy-ordered: exact anchors tier 0.
+        assert_eq!(fam.variant(0).name, "exact");
+        assert_eq!(fam.variant(1).name, "heam");
+        assert!(fam.variant(1).nmed > 0.0);
+        // Unknown members fail with the registered names in the message.
+        assert!(reg.family("lenet", &["nope".to_string()]).is_err());
+    }
+
+    #[test]
+    fn failed_family_registration_leaves_registry_untouched() {
+        let g = tiny_graph();
+        let mut reg = ModelRegistry::new();
+        reg.register("taken", &g, &Multiplier::Exact, (1, 20, 20)).unwrap();
+        // Second member collides with an existing model: nothing from
+        // the family — including the valid first member — may land.
+        let err = reg.register_family(
+            "lenet",
+            &g,
+            &[
+                ("fresh".to_string(), Multiplier::Exact),
+                ("taken".to_string(), Multiplier::Exact),
+            ],
+            (1, 20, 20),
+        );
+        assert!(err.is_err());
+        assert_eq!(reg.names(), vec!["taken"], "failed family must not half-register");
+        // A corrected retry then succeeds cleanly.
+        reg.register_family(
+            "lenet",
+            &g,
+            &[("fresh".to_string(), Multiplier::Exact)],
+            (1, 20, 20),
+        )
+        .unwrap();
+        assert_eq!(reg.names(), vec!["taken", "fresh"]);
     }
 
     #[test]

@@ -59,9 +59,40 @@ impl Default for ServeConfig {
     }
 }
 
+impl ServeConfig {
+    /// Reject degenerate configurations at construction time with a
+    /// descriptive error, instead of silently clamping (the pre-fix
+    /// behavior) or exhibiting degenerate runtime behavior: a zero-depth
+    /// admission queue would shed every request, and a zero-worker pool
+    /// would admit requests nothing ever serves.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.queue_depth > 0,
+            "ServeConfig: queue_depth must be at least 1 — a zero-depth \
+             admission queue rejects every request"
+        );
+        anyhow::ensure!(
+            self.workers > 0,
+            "ServeConfig: workers must be at least 1 — a zero-worker pool \
+             would admit requests that are never served"
+        );
+        anyhow::ensure!(
+            self.max_batch > 0,
+            "ServeConfig: max_batch must be at least 1 — a zero-size batch \
+             can carry no request"
+        );
+        Ok(())
+    }
+}
+
 struct Request {
     image: Vec<f32>,
-    resp: Sender<Result<usize>>,
+    /// Fulfilled with (prediction, end-to-end latency in µs). The
+    /// latency is measured by the *worker* at fulfillment — the same
+    /// value recorded into the lane histogram — so clients reading it
+    /// through [`Pending::wait_with_latency`] see true completion time
+    /// even if they dequeue responses long after they were produced.
+    resp: Sender<Result<(usize, u64)>>,
     submitted: Instant,
 }
 
@@ -177,7 +208,7 @@ struct Lane {
 
 /// A response in flight: hold it and [`Pending::wait`] for the result.
 pub struct Pending {
-    rx: Receiver<Result<usize>>,
+    rx: Receiver<Result<(usize, u64)>>,
 }
 
 /// Outcome of a non-blocking [`Server::try_submit`]: either the request
@@ -197,6 +228,16 @@ impl Pending {
     /// failed *after* admission (backend error) — the drain guarantee
     /// ensures the channel is always answered, never dropped.
     pub fn wait(self) -> Result<usize> {
+        Ok(self.wait_with_latency()?.0)
+    }
+
+    /// Like [`Pending::wait`], additionally returning the request's
+    /// end-to-end latency (admission → fulfillment, µs) as measured by
+    /// the serving worker. Use this when responses are collected from a
+    /// queue: `Instant`-based measurement around the collecting `recv`
+    /// would fold head-of-line waiting on *other* requests into this
+    /// one's latency.
+    pub fn wait_with_latency(self) -> Result<(usize, u64)> {
         self.rx
             .recv()
             .map_err(|_| anyhow!("server dropped the request"))?
@@ -275,7 +316,7 @@ impl Server {
             .register_handle(handle)
             .expect("registering the native model (image_dims must match the graph)");
         Self::start_gateway(registry, config)
-            .expect("native backend construction is infallible")
+            .expect("native gateway construction (requires a valid ServeConfig)")
     }
 
     /// Start a native worker *pool*: `config.workers` threads, each with
@@ -322,6 +363,7 @@ impl Server {
                     name,
                     prepared,
                     image_dims,
+                    ..
                 } = handle;
                 LaneSpec {
                     name,
@@ -340,9 +382,10 @@ impl Server {
     }
 
     fn spawn_gateway(specs: Vec<LaneSpec>, config: &ServeConfig) -> Result<Self> {
-        let n_workers = config.workers.max(1);
-        let queue_depth = config.queue_depth.max(1);
-        let max_batch = config.max_batch.max(1);
+        config.validate()?;
+        let n_workers = config.workers;
+        let queue_depth = config.queue_depth;
+        let max_batch = config.max_batch;
         let wait = Duration::from_micros(config.max_wait_us);
 
         // Shared job queue: (lane, batch) pairs. Bounded to the worker
@@ -442,8 +485,9 @@ impl Server {
                     match preds {
                         Ok(preds) => {
                             for (req, pred) in batch.into_iter().zip(preds) {
-                                m.record_request(req.submitted.elapsed().as_micros() as u64);
-                                let _ = req.resp.send(Ok(pred));
+                                let latency_us = req.submitted.elapsed().as_micros() as u64;
+                                m.record_request(latency_us);
+                                let _ = req.resp.send(Ok((pred, latency_us)));
                             }
                         }
                         Err(e) => {
@@ -562,16 +606,30 @@ impl Server {
         self.classify_model(&self.lanes[0].name, image)
     }
 
-    /// Merged metrics snapshot across every model lane.
+    /// Merged metrics snapshot across every model lane (queue gauges are
+    /// summed).
     pub fn metrics_snapshot(&self) -> Snapshot {
         self.lanes
             .iter()
-            .fold(Snapshot::zero(), |acc, l| acc.merge(&l.metrics.snapshot()))
+            .fold(Snapshot::zero(), |acc, l| acc.merge(&Self::lane_snapshot(l)))
     }
 
-    /// Metrics snapshot of one model lane.
+    /// Metrics snapshot of one model lane, with the lane's live
+    /// admission gauge injected into [`Snapshot::queue`].
     pub fn model_metrics(&self, model: &str) -> Result<Snapshot> {
-        Ok(self.lanes[self.lane_idx(model)?].metrics.snapshot())
+        Ok(Self::lane_snapshot(&self.lanes[self.lane_idx(model)?]))
+    }
+
+    fn lane_snapshot(lane: &Lane) -> Snapshot {
+        let mut s = lane.metrics.snapshot();
+        s.queue = lane.depth.load(Ordering::Relaxed);
+        s
+    }
+
+    /// Live admitted-but-unbatched depth of one model lane — the
+    /// backpressure gauge the QoS controller reads between snapshots.
+    pub fn queue_gauge(&self, model: &str) -> Result<i64> {
+        Ok(self.lanes[self.lane_idx(model)?].depth.load(Ordering::Relaxed))
     }
 
     /// Stop accepting requests, drain everything already admitted, and
@@ -654,6 +712,52 @@ mod tests {
         assert_eq!(m.rejected, 0);
         assert!(m.batches <= 16);
         assert!(m.mean_batch() >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_queue_depth_rejected_at_construction() {
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.register("m", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+        let err = Server::start_gateway(
+            reg,
+            ServeConfig { queue_depth: 0, ..Default::default() },
+        )
+        .expect_err("queue_depth == 0 must be rejected");
+        assert!(
+            format!("{err:#}").contains("queue_depth"),
+            "error must name the offending field: {err:#}"
+        );
+    }
+
+    #[test]
+    fn zero_workers_rejected_at_construction() {
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.register("m", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+        let err = Server::start_gateway(
+            reg,
+            ServeConfig { workers: 0, ..Default::default() },
+        )
+        .expect_err("workers == 0 must be rejected");
+        assert!(
+            format!("{err:#}").contains("workers"),
+            "error must name the offending field: {err:#}"
+        );
+        // The default config stays valid, and validate() is pure.
+        assert!(ServeConfig::default().validate().is_ok());
+        assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn queue_gauge_visible_through_snapshots() {
+        let server = native_server(4, 100);
+        assert_eq!(server.queue_gauge("default").unwrap(), 0);
+        assert!(server.queue_gauge("nope").is_err());
+        assert_eq!(server.model_metrics("default").unwrap().queue, 0);
         server.shutdown();
     }
 

@@ -15,11 +15,14 @@
 //! * `serve`      — run the serving coordinator: PJRT runtime on an
 //!   AOT-compiled model, or (`--native`) the in-process batched LUT-GEMM
 //!   engine with a `--workers` thread pool; see `examples/serve_lenet.rs`
-//!   for the library API.
+//!   for the library API. `--qos-policy` serves a `--family` of
+//!   multiplier variants behind the closed-loop QoS router instead.
 //! * `loadgen`    — replay seeded open-/closed-loop traffic against a
 //!   multi-model gateway (one prepared variant per `--mix` entry) and
 //!   write latency/throughput/rejection results to `BENCH_serving.json`.
-//!   The same `--seed` replays a byte-identical trace.
+//!   The same `--seed` replays a byte-identical trace. With `--classes`
+//!   the trace is class-tagged and replayed through the QoS router in
+//!   deterministic virtual time, writing `BENCH_qos.json`.
 
 use std::sync::Arc;
 
@@ -371,20 +374,63 @@ fn serve(argv: &[String]) -> Result<()> {
     .opt("wait-us", "2000", "batcher wait budget (us)")
     .opt("workers", "4", "native worker threads (PJRT always uses 1)")
     .opt("queue-depth", "256", "bounded admission queue (full = reject)")
+    .opt(
+        "qos-policy",
+        "",
+        "request classes 'name:prio=..,p99_ms=..[,tier=..][,weight=..];...' — \
+         serve a variant family behind the closed-loop QoS router (needs --native)",
+    )
+    .opt("family", "exact,heam", "variant family for --qos-policy (zoo names or LUT paths)")
+    .opt("qos-interval-ms", "20", "live QoS controller tick period (ms)")
     .flag("native", "serve through the native batched LUT-GEMM engine")
     .parse(argv)?;
-    let lut = if args.get("lut").is_empty() {
-        Lut::exact()
-    } else {
-        Lut::load(args.get("lut"))?
-    };
     let config = ServeConfig {
         max_batch: args.get_as("batch")?,
         max_wait_us: args.get_as("wait-us")?,
         workers: args.get_as("workers")?,
         queue_depth: args.get_as("queue-depth")?,
     };
+    // Fail with a clean CLI error here — the infallible-signature
+    // `start_native` below would otherwise turn a bad flag into a panic.
+    config.validate()?;
     let ds = heam::data::ImageDataset::load(args.get("data"), "serve")?;
+    let n: usize = args.get_as("requests")?;
+
+    if let Some(spec) = args.get_nonempty("qos-policy") {
+        use heam::coordinator::qos::{self, ControllerConfig, QosPolicy, QosRouter};
+        anyhow::ensure!(
+            args.is_set("native"),
+            "--qos-policy serves a native variant family (pass --native; the \
+             PJRT path hosts a single artifact)"
+        );
+        let graph = heam::nn::lenet::load(args.get("weights"))?;
+        let (registry, family) =
+            register_family_arg(args.get("family"), &graph, (ds.channels, ds.height, ds.width))?;
+        let interval_ms: u64 = args.get_as("qos-interval-ms")?;
+        let policy = QosPolicy {
+            classes: qos::parse_classes(spec)?,
+            // A zero interval is rejected by the policy validation in
+            // QosRouter::new — no silent clamping.
+            ctl: ControllerConfig {
+                interval_us: interval_ms * 1000,
+                ..Default::default()
+            },
+        };
+        let server = Arc::new(Server::start_gateway(registry, config)?);
+        let router = Arc::new(QosRouter::new(family, policy)?);
+        let live = qos::spawn_live(router.clone(), server.clone())?;
+        let report = heam::coordinator::drive_demo_qos(&server, &router, &ds, n)?;
+        live.stop();
+        println!("{report}");
+        server.shutdown();
+        return Ok(());
+    }
+
+    let lut = if args.get("lut").is_empty() {
+        Lut::exact()
+    } else {
+        Lut::load(args.get("lut"))?
+    };
     let server = if args.is_set("native") {
         let graph = heam::nn::lenet::load(args.get("weights"))?;
         Server::start_native(
@@ -397,7 +443,6 @@ fn serve(argv: &[String]) -> Result<()> {
         Server::start(args.get("model"), Arc::new(lut), config)
             .context("starting PJRT server (hint: pass --native for the in-process engine)")?
     };
-    let n: usize = args.get_as("requests")?;
     let report = heam::coordinator::drive_demo(&server, &ds, n)?;
     println!("{report}");
     server.shutdown();
@@ -431,8 +476,30 @@ fn loadgen(argv: &[String]) -> Result<()> {
     .opt("burst-period-ms", "0", "open-loop burst period (0 = steady rate)")
     .opt("burst-ms", "0", "burst window inside each period (ms)")
     .opt("burst-factor", "4", "rate multiplier inside burst windows")
-    .opt("out", "BENCH_serving.json", "report JSON path (empty = don't write)")
+    .opt("out", "BENCH_serving.json", "report JSON path (empty = don't write; QoS runs default to BENCH_qos.json)")
+    .opt(
+        "classes",
+        "",
+        "QoS mode: request classes 'name:prio=..,p99_ms=..[,tier=..][,weight=..];...' \
+         replayed through the closed-loop router over --family",
+    )
+    .opt("family", "exact,heam,ou3", "variant family for --classes (zoo names or LUT paths)")
+    .opt("qos-interval-ms", "20", "QoS controller tick period, virtual ms of trace time")
+    .opt("sim-service-us", "400", "deterministic lane model: tier-0 service cost (us)")
+    .opt("sim-speedup-milli", "1500", "lane model: per-tier speedup, milli (1500 = 1.5x)")
+    .opt("sim-workers", "2", "lane model: virtual worker count")
+    .opt("sim-queue-depth", "512", "lane model: virtual per-lane queue bound")
+    .opt(
+        "expect-shift",
+        "0",
+        "assert the least-important class served at least this burst fraction \
+         approximate AND the exact variant was restored (0 = no assertion)",
+    )
     .parse(argv)?;
+
+    if args.get_nonempty("classes").is_some() {
+        return loadgen_qos(&args);
+    }
 
     let mix = args.get_kv_list("mix")?;
     anyhow::ensure!(!mix.is_empty(), "--mix must name at least one multiplier");
@@ -494,6 +561,143 @@ fn loadgen(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shared by `serve --qos-policy` and `loadgen --classes`: parse a
+/// `--family` list (zoo names or LUT paths), register every variant as
+/// one accuracy-ordered family, and echo the resulting tier order.
+fn register_family_arg(
+    spec: &str,
+    graph: &heam::nn::graph::Graph,
+    dims: (usize, usize, usize),
+) -> Result<(
+    heam::coordinator::registry::ModelRegistry,
+    heam::coordinator::qos::VariantFamily,
+)> {
+    let variants: Vec<(String, Multiplier)> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|name| Ok((name.to_string(), multiplier_by_name(name)?)))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        variants.len() >= 2,
+        "--family needs at least two variants to trade accuracy against throughput"
+    );
+    let mut registry = heam::coordinator::registry::ModelRegistry::new();
+    let family = registry.register_family("lenet", graph, &variants, dims)?;
+    println!("qos family (accuracy order): {:?}", family.names());
+    Ok((registry, family))
+}
+
+/// `heam loadgen --classes …`: replay a seeded class trace through the
+/// QoS router over a variant-family gateway, driving the closed-loop
+/// controller in virtual time (deterministic: the same seed reproduces
+/// the identical `qos trace …` line), and write `BENCH_qos.json`.
+fn loadgen_qos(args: &Args) -> Result<()> {
+    use heam::coordinator::loadgen::BurstConfig;
+    use heam::coordinator::qos::{
+        self, ControllerConfig, QosPolicy, QosRouter, QosRunConfig, SimConfig,
+    };
+
+    let classes = qos::parse_classes(args.get("classes"))?;
+    let (c, hw): (usize, usize) = (args.get_as("channels")?, args.get_as("hw")?);
+    let dims = (c, hw, hw);
+    let graph = match heam::nn::lenet::load(args.get("weights")) {
+        Ok(g) => g,
+        Err(_) => {
+            println!("(no weight artifact — serving random weights)");
+            heam::nn::lenet::load_graph(&heam::nn::lenet::random_bundle(c, hw, 42))?
+        }
+    };
+    let (registry, family) = register_family_arg(args.get("family"), &graph, dims)?;
+    let server = Server::start_gateway(
+        registry,
+        ServeConfig {
+            max_batch: args.get_as("batch")?,
+            max_wait_us: args.get_as("wait-us")?,
+            workers: args.get_as("workers")?,
+            queue_depth: args.get_as("queue-depth")?,
+        },
+    )?;
+    let interval_ms: u64 = args.get_as("qos-interval-ms")?;
+    let router = QosRouter::new(
+        family,
+        QosPolicy {
+            classes,
+            // A zero interval is rejected by the policy validation in
+            // QosRouter::new — no silent clamping.
+            ctl: ControllerConfig {
+                interval_us: interval_ms * 1000,
+                ..Default::default()
+            },
+        },
+    )?;
+    let burst_period: u64 = args.get_as("burst-period-ms")?;
+    let cfg = QosRunConfig {
+        seed: args.get_as("seed")?,
+        requests: args.get_as("requests")?,
+        rate_rps: args.get_as("rate")?,
+        burst: (burst_period > 0)
+            .then(|| {
+                Ok::<_, anyhow::Error>(BurstConfig {
+                    period_ms: burst_period,
+                    burst_ms: args.get_as("burst-ms")?,
+                    factor: args.get_as("burst-factor")?,
+                })
+            })
+            .transpose()?,
+        sim: SimConfig {
+            service_us: args.get_as("sim-service-us")?,
+            speedup_milli: args.get_as("sim-speedup-milli")?,
+            workers: args.get_as("sim-workers")?,
+            queue_depth: args.get_as("sim-queue-depth")?,
+        },
+    };
+    let report = qos::replay::run(&server, &router, &cfg)?;
+    server.shutdown();
+    print!("{}", report.render());
+    // The option's *default* names the classic serving report; a QoS run
+    // that didn't say --out writes its own file instead. An explicit
+    // --out — even one naming the default — is honored as given.
+    let out = if args.provided("out") { args.get("out") } else { "BENCH_qos.json" };
+    if !out.is_empty() {
+        std::fs::write(out, report.to_json(&router).to_json())?;
+        println!("wrote {out}");
+    }
+    let expect: f64 = args.get_as("expect-shift")?;
+    if expect > 0.0 {
+        let policy = router.policy();
+        let (idx, least) = policy
+            .classes
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, c)| (c.priority, *i))
+            .expect("policy has at least one class");
+        let frac = report.per_class[idx].burst_approx_fraction();
+        anyhow::ensure!(
+            frac >= expect,
+            "expected class '{}' to serve >= {:.0}% of its burst traffic on an \
+             approximate variant, got {:.1}%",
+            least.name,
+            expect * 100.0,
+            frac * 100.0
+        );
+        anyhow::ensure!(
+            report.levels_final.iter().all(|&l| l == 0),
+            "controller did not restore the exact variant after the burst \
+             (final levels {:?})",
+            report.levels_final
+        );
+        println!(
+            "qos shift check OK: '{}' burst approximate fraction {:.1}% >= {:.0}%, \
+             exact variant restored",
+            least.name,
+            frac * 100.0,
+            expect * 100.0
+        );
+    }
+    Ok(())
+}
+
 /// Parse a multiplier spec (zoo name or LUT path).
 fn multiplier_by_name(name: &str) -> Result<Multiplier> {
     let kind = match name {
@@ -507,6 +711,16 @@ fn multiplier_by_name(name: &str) -> Result<Multiplier> {
         "ou3" => MultKind::OuL3,
         "wallace" => MultKind::Wallace,
         path => {
+            // Only fall through to the LUT-file path when the file
+            // exists — a typo'd zoo name used to surface as an opaque
+            // bundle-loading error.
+            if !std::path::Path::new(path).exists() {
+                bail!(
+                    "unknown multiplier '{path}': not a zoo name \
+                     (exact, heam, kmap, cr6, cr7, ac, ou1, ou3, wallace) \
+                     and no LUT file of that name exists"
+                );
+            }
             let lut = Lut::load(path).with_context(|| format!("loading LUT '{path}'"))?;
             return Ok(Multiplier::Lut(Arc::new(lut)));
         }

@@ -230,6 +230,16 @@ pub struct ErrorMetrics {
     pub mred: f64,
 }
 
+impl ErrorMetrics {
+    /// The metrics of an exact multiplier (all error distances zero).
+    /// This is the tier-0 anchor of the QoS accuracy ordering: variant
+    /// families sort their members by NMED, and only a genuinely exact
+    /// table reports 0.0 here.
+    pub fn exact() -> Self {
+        ErrorMetrics { med: 0.0, nmed: 0.0, mred: 0.0 }
+    }
+}
+
 /// Backing storage of a [`CompactLut`].
 #[derive(Clone)]
 pub enum CompactData {
@@ -361,6 +371,10 @@ mod tests {
         assert_eq!(m.med, 0.0);
         assert_eq!(m.nmed, 0.0);
         assert_eq!(m.mred, 0.0);
+        assert_eq!(m, ErrorMetrics::exact());
+        // Any nonzero error anywhere departs from the exact anchor.
+        let off = Lut::from_fn("off1", |x, y| x as i64 * y as i64 + 1);
+        assert_ne!(off.error_metrics(), ErrorMetrics::exact());
     }
 
     #[test]

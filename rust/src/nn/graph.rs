@@ -217,6 +217,8 @@ impl Graph {
             name: name.to_string(),
             prepared: std::sync::Arc::new(self.prepare(mul)),
             image_dims,
+            mul_label: mul.label(),
+            accuracy: mul.error_metrics(),
         }
     }
 }
@@ -233,6 +235,13 @@ pub struct ModelHandle {
     pub prepared: std::sync::Arc<super::gemm::PreparedGraph>,
     /// Expected input geometry (channels, height, width).
     pub image_dims: (usize, usize, usize),
+    /// Label of the multiplier baked into the plan (reports / tracing).
+    pub mul_label: String,
+    /// Accuracy-tier metadata: the baked multiplier's exhaustive error
+    /// metrics, measured once at preparation. The QoS layer orders a
+    /// variant family by `accuracy.nmed` (exact = 0.0 = tier 0) and
+    /// steers per-class traffic along that axis.
+    pub accuracy: crate::mult::ErrorMetrics,
 }
 
 impl ModelHandle {

@@ -36,6 +36,19 @@ impl Multiplier {
         }
     }
 
+    /// Exhaustive error-distance metrics of this multiplier (MED / NMED /
+    /// MRED over all 65 536 operand pairs). `Exact` is zero by
+    /// definition; a LUT is measured against the exact product. This is
+    /// the accuracy-tier metadata the QoS layer orders variant families
+    /// by — computed once at `Graph::prepare_handle` time, never on the
+    /// serving hot path.
+    pub fn error_metrics(&self) -> crate::mult::ErrorMetrics {
+        match self {
+            Multiplier::Exact => crate::mult::ErrorMetrics::exact(),
+            Multiplier::Lut(lut) => lut.error_metrics(),
+        }
+    }
+
     /// Dot product over code slices (the inner-loop primitive; kept here
     /// so the LUT branch is hoisted out of the element loop).
     ///

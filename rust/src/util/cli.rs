@@ -23,6 +23,10 @@ pub struct Args {
     opts: Vec<Opt>,
     values: BTreeMap<&'static str, String>,
     flags: BTreeMap<&'static str, bool>,
+    /// Options the command line actually named (vs. defaults), so
+    /// callers can tell an explicit `--out <default-value>` from an
+    /// untouched default.
+    provided: std::collections::BTreeSet<&'static str>,
     positionals: Vec<String>,
 }
 
@@ -129,12 +133,14 @@ impl Args {
                             }
                         };
                         self.values.insert(o.name, val);
+                        self.provided.insert(o.name);
                     }
                     Some(o) => {
                         if inline_val.is_some() {
                             bail!("flag --{key} does not take a value");
                         }
                         self.flags.insert(o.name, true);
+                        self.provided.insert(o.name);
                     }
                     None => bail!("unknown option --{key}\n\n{}", self.help_text()),
                 }
@@ -178,20 +184,44 @@ impl Args {
     /// Parse an option as a `key=weight,key2=weight2` list; a bare `key`
     /// (no `=`) gets weight 1. This is the model-mix syntax of
     /// `heam loadgen --mix exact=1,heam=3`.
+    ///
+    /// Weights must be positive and finite: a zero or negative weight
+    /// used to slip through and silently produce an empty or skewed
+    /// trace downstream (the entry got a lane but drew no — or
+    /// nonsensical — traffic), so it is rejected here with the entry
+    /// named. Duplicate keys are rejected for the same reason: the
+    /// duplicate's weight silently displaced nothing and registration
+    /// failed later with a less direct message.
     pub fn get_kv_list(&self, name: &str) -> Result<Vec<(String, f64)>> {
-        let mut out = Vec::new();
+        let mut out: Vec<(String, f64)> = Vec::new();
         for part in self.get(name).split(',').map(str::trim).filter(|s| !s.is_empty()) {
-            match part.split_once('=') {
+            let (key, w) = match part.split_once('=') {
                 Some((k, v)) => {
                     let w: f64 = v.trim().parse().map_err(|e| {
                         anyhow::anyhow!("bad weight '{v}' for '{k}' in --{name}: {e}")
                     })?;
-                    out.push((k.trim().to_string(), w));
+                    (k.trim().to_string(), w)
                 }
-                None => out.push((part.to_string(), 1.0)),
+                None => (part.to_string(), 1.0),
+            };
+            if !(w.is_finite() && w > 0.0) {
+                bail!(
+                    "weight for '{key}' in --{name} must be positive and finite, got {w} \
+                     (drop the entry instead of zeroing it)"
+                );
             }
+            if out.iter().any(|(k, _)| *k == key) {
+                bail!("duplicate entry '{key}' in --{name}");
+            }
+            out.push((key, w));
         }
         Ok(out)
+    }
+
+    /// True when the command line named this option explicitly (its
+    /// value may still equal the default).
+    pub fn provided(&self, name: &str) -> bool {
+        self.provided.contains(name)
     }
 
     /// Boolean flag state.
@@ -300,5 +330,43 @@ mod tests {
             .parse(&argv(&["--mix", "x=notanumber"]))
             .unwrap();
         assert!(c.get_kv_list("mix").is_err());
+    }
+
+    #[test]
+    fn provided_distinguishes_explicit_values_from_defaults() {
+        let a = Args::new("t", "test")
+            .opt("out", "default.json", "output")
+            .opt("seed", "7", "seed")
+            .flag("verbose", "v")
+            .parse(&argv(&["--out", "default.json", "--verbose"]))
+            .unwrap();
+        // Explicitly passing the default value still counts as provided.
+        assert!(a.provided("out"));
+        assert!(a.provided("verbose"));
+        assert!(!a.provided("seed"));
+    }
+
+    #[test]
+    fn kv_list_rejects_nonpositive_weights_and_duplicates() {
+        let parse = |mix: &str| {
+            Args::new("t", "test")
+                .opt("mix", "", "m")
+                .parse(&argv(&["--mix", mix]))
+                .unwrap()
+                .get_kv_list("mix")
+        };
+        // Zero and negative weights used to silently produce an empty or
+        // skewed trace; now they fail fast, naming the entry.
+        for bad in ["exact=0", "exact=1,heam=0", "heam=-2", "heam=inf", "heam=nan"] {
+            let err = parse(bad).expect_err(bad);
+            assert!(
+                format!("{err:#}").contains("--mix"),
+                "'{bad}': {err:#} should name the option"
+            );
+        }
+        let err = parse("exact=1,heam=0").unwrap_err();
+        assert!(format!("{err:#}").contains("heam"), "{err:#} should name the entry");
+        assert!(parse("exact=1,exact=2").is_err(), "duplicate keys rejected");
+        assert!(parse("exact=0.5,heam=2").is_ok());
     }
 }

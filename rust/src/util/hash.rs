@@ -1,0 +1,37 @@
+//! Deterministic hashing for replay identities.
+//!
+//! Every fingerprint that identifies a replayable run — load-generator
+//! traces, QoS class traces, QoS decision traces — folds its event
+//! stream through this one FNV-1a implementation, so the scheme can
+//! never drift apart between producers (which a silent divergence would
+//! turn into "same seed, different fingerprint" bug reports).
+
+/// FNV-1a over a stream of `u64` words, each folded little-endian byte
+/// by byte. The empty stream hashes to the FNV offset basis.
+pub fn fnv1a_u64(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in words {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stream_is_the_offset_basis() {
+        assert_eq!(fnv1a_u64([]), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn sensitive_to_value_and_order() {
+        assert_eq!(fnv1a_u64([1, 2, 3]), fnv1a_u64([1, 2, 3]));
+        assert_ne!(fnv1a_u64([1, 2, 3]), fnv1a_u64([3, 2, 1]));
+        assert_ne!(fnv1a_u64([0]), fnv1a_u64([]));
+    }
+}

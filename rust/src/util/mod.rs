@@ -4,6 +4,7 @@
 //! reimplemented here at the scale this project needs.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

@@ -1,22 +1,25 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
 #
-#   scripts/check.sh            # rust build + rust tests + loadgen smoke + python tests
-#   scripts/check.sh --rust     # rust only (includes the loadgen smoke)
+#   scripts/check.sh            # rust build + rust tests + loadgen/qos smokes + python tests
+#   scripts/check.sh --rust     # rust only (includes both smokes)
 #   scripts/check.sh --python   # python only
 #   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
+#   scripts/check.sh --qos      # QoS routing smoke only (builds if needed)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 run_rust=1
 run_python=1
 run_loadgen=1
+run_qos=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0; run_loadgen=0 ;;
-  --loadgen) run_rust=0; run_python=0 ;;
+  --python) run_rust=0; run_loadgen=0; run_qos=0 ;;
+  --loadgen) run_rust=0; run_python=0; run_qos=0 ;;
+  --qos) run_rust=0; run_python=0; run_loadgen=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos]" >&2; exit 2 ;;
 esac
 
 # Deterministic serving smoke: a short fixed-seed open-loop soak, run
@@ -54,6 +57,49 @@ loadgen_smoke() {
   echo "loadgen smoke OK: $line_a"
 }
 
+# Fixed-seed QoS routing smoke: a saturating 300ms burst opens the class
+# trace, then a steady tail. Run twice:
+#   * the deterministic `qos trace` line (trace + decision fingerprints,
+#     split trajectory summary, burst-shift fractions) must be identical
+#     across runs — the controller is driven in virtual trace time, so
+#     worker scheduling cannot leak into the decisions;
+#   * --expect-shift 0.5 makes the binary itself assert that the
+#     low-priority class served >= 50% of its burst traffic on a more
+#     approximate variant AND that the exact variant was restored after
+#     the burst (the acceptance criterion of the QoS subsystem).
+qos_smoke() {
+  echo "== qos routing smoke =="
+  local bin=target/release/heam
+  cargo build --release
+  local classes='hi:prio=0,p99_ms=25,tier=0,weight=1;lo:prio=1,p99_ms=60,tier=2,weight=3'
+  local out_a out_b
+  out_a=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 7 --requests 8000 --rate 2000 \
+          --burst-period-ms 60000 --burst-ms 300 --burst-factor 10 \
+          --qos-interval-ms 20 --expect-shift 0.5 --out /tmp/heam_qos_a.json)
+  out_b=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 7 --requests 8000 --rate 2000 \
+          --burst-period-ms 60000 --burst-ms 300 --burst-factor 10 \
+          --qos-interval-ms 20 --expect-shift 0.5 --out /tmp/heam_qos_b.json)
+  local line_a line_b
+  line_a=$(printf '%s\n' "$out_a" | grep '^qos trace')
+  line_b=$(printf '%s\n' "$out_b" | grep '^qos trace')
+  if [ "$line_a" != "$line_b" ]; then
+    echo "!! qos decision traces diverged across identical seeds:" >&2
+    echo "   run A: $line_a" >&2
+    echo "   run B: $line_b" >&2
+    exit 1
+  fi
+  for out in "$out_a" "$out_b"; do
+    if ! printf '%s\n' "$out" | grep -q 'qos shift check OK'; then
+      echo "!! qos burst shift / restore assertion did not pass:" >&2
+      printf '%s\n' "$out" >&2
+      exit 1
+    fi
+  done
+  echo "qos smoke OK: $line_a"
+}
+
 skipped=""
 if [ "$run_rust" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
@@ -65,6 +111,7 @@ if [ "$run_rust" = 1 ]; then
     echo "!! cargo not found — rust gate skipped (install rustup or run in CI)" >&2
     skipped="rust"
     run_loadgen=0
+    run_qos=0
   fi
 fi
 
@@ -74,6 +121,15 @@ if [ "$run_loadgen" = 1 ]; then
   else
     echo "!! cargo not found — loadgen smoke skipped" >&2
     skipped="${skipped:+$skipped,}loadgen"
+  fi
+fi
+
+if [ "$run_qos" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    qos_smoke
+  else
+    echo "!! cargo not found — qos smoke skipped" >&2
+    skipped="${skipped:+$skipped,}qos"
   fi
 fi
 

@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
                 workers: n_workers,
                 ..Default::default()
             },
-        );
+        )?;
         let report = drive_demo(&native, &ds, requests)?;
         println!("{report}");
         native.shutdown();

@@ -124,7 +124,8 @@ fn main() {
                         workers: 1,
                         ..Default::default()
                     },
-                );
+                )
+                .expect("native server construction");
                 let t0 = Instant::now();
                 let report = heam::coordinator::drive_demo(&server, &data, 256).unwrap();
                 let elapsed = t0.elapsed().as_secs_f64();

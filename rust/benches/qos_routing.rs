@@ -78,16 +78,16 @@ fn gateway_and_router() -> (Server, QosRouter) {
             (1, 28, 28),
         )
         .unwrap();
-    let server = Server::start_gateway(
-        reg,
-        ServeConfig {
-            max_batch: 16,
-            max_wait_us: 1000,
-            workers: 2,
-            queue_depth: 64,
-        },
-    )
-    .unwrap();
+    let config = ServeConfig {
+        max_batch: 16,
+        max_wait_us: 1000,
+        workers: 2,
+        queue_depth: 64,
+    };
+    // Router submissions carry the class index; give the gateway the
+    // policy's per-class reserved queue shares.
+    let shares = policy().lane_shares(config.queue_depth).unwrap();
+    let server = Server::start_gateway_with_classes(reg, config, shares).unwrap();
     let router = QosRouter::new(family, policy()).unwrap();
     (server, router)
 }
@@ -161,19 +161,25 @@ fn main() {
         assert!(report.restore_tick.is_some());
         phases.push(("saturating_burst", report.to_json(&router)));
         server.shutdown();
-        report.trace_line()
+        (report.trace_line(), report.sched_line())
     };
 
-    // 3. Replay determinism: same seed, fresh router — identical line.
+    // 3. Replay determinism: same seed, fresh router — identical qos
+    //    and sched trace lines.
     {
         let (server, router) = gateway_and_router();
         let report = replay::run(&server, &router, &burst_cfg()).unwrap();
         let line_b = report.trace_line();
         assert_eq!(
-            line_a, line_b,
+            line_a.0, line_b,
             "the qos trace line must replay byte-identically from one seed"
         );
-        println!("-- replay determinism OK --\n{line_b}");
+        assert_eq!(
+            line_a.1,
+            report.sched_line(),
+            "the sched trace line must replay byte-identically from one seed"
+        );
+        println!("-- replay determinism OK --\n{line_b}\n{}", report.sched_line());
         phases.push(("replay", report.to_json(&router)));
         server.shutdown();
     }

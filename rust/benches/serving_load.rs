@@ -133,6 +133,54 @@ fn main() {
         reports.push(("closed_saturation", report));
     }
 
+    // 4. Shared scheduler across many lanes: one scheduling loop feeds
+    //    four variant lanes at once (the thread-per-lane batcher this
+    //    replaced would have needed four); open-loop traffic spread over
+    //    every lane must complete with no lane starved.
+    {
+        let graph = lenet::load("artifacts/weights/digits.htb")
+            .or_else(|_| lenet::load_graph(&lenet::random_bundle(1, 28, 42)))
+            .expect("graph");
+        let mut registry = ModelRegistry::new();
+        let four: Vec<(&str, Multiplier)> = vec![
+            ("exact", Multiplier::Exact),
+            ("heam", Multiplier::Lut(Arc::new(MultKind::Heam.lut()))),
+            ("ou3", Multiplier::Lut(Arc::new(MultKind::OuL3.lut()))),
+            ("wallace", Multiplier::Lut(Arc::new(MultKind::Wallace.lut()))),
+        ];
+        for (name, mul) in &four {
+            registry.register(name, &graph, mul, (1, 28, 28)).unwrap();
+        }
+        let server = Server::start_gateway(
+            registry,
+            ServeConfig {
+                max_batch: 16,
+                max_wait_us: 1000,
+                workers: 2,
+                queue_depth: 256,
+            },
+        )
+        .unwrap();
+        let report = loadgen::run(
+            &server,
+            &LoadgenConfig {
+                seed: 4,
+                requests: 1024,
+                mode: Mode::Open { rate_rps: 1500.0 },
+                mix: four.iter().map(|(n, _)| (n.to_string(), 1.0)).collect(),
+                burst: None,
+            },
+        )
+        .unwrap();
+        server.shutdown();
+        println!("-- shared scheduler, 4 lanes --\n{}", report.render());
+        assert_eq!(report.dropped, 0, "drain guarantee violated");
+        for m in &report.per_model {
+            assert!(m.completed > 0, "lane {} starved under the shared scheduler", m.name);
+        }
+        reports.push(("shared_scheduler_4_lanes", report));
+    }
+
     let phases: Vec<Value> = reports
         .iter()
         .map(|(phase, r)| {

@@ -1,192 +1,396 @@
-//! Dynamic batching: coalesce queued requests under a size cap and a wait
-//! budget (the vLLM-router-style policy, scaled to this workload).
+//! Pull-based scheduling primitives for the shared-pool scheduler.
+//!
+//! Until PR 5 every model lane ran its own batcher thread that *pushed*
+//! `(lane, batch)` jobs at the worker pool. The gateway now runs one
+//! scheduling loop over all lanes, and this module holds its pure,
+//! deterministic core — everything here is plain data manipulation with
+//! no threads, channels or clocks, so the policy is unit-testable in
+//! isolation:
+//!
+//! * [`ClassQueues`] — one lane's admission queue, partitioned by
+//!   request class. Each class holds a *reserved share* of the lane's
+//!   bounded depth ([`LaneShare`]); when the queue is full, an arrival
+//!   whose class is still under its share may **preempt** (reject the
+//!   oldest of) the least-important class that has overrun its own
+//!   share. This is what keeps a burst of low-priority traffic from
+//!   starving the class the QoS controller is trying to protect.
+//! * [`ClassQueues::pick`] — the pull-based batch policy: drain up to
+//!   `max_batch` items in class-priority-then-FIFO order.
+//! * [`DrrPicker`] — the lane selector: strict class priority first
+//!   (the most important queued class anywhere wins), then deficit
+//!   round robin among the tied lanes so no lane starves within a
+//!   priority level.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
-use std::time::{Duration, Instant};
+use std::collections::VecDeque;
 
-/// Collect a batch from a channel: blocks for the first item, then keeps
-/// pulling until `max_batch` items are held or `max_wait` has elapsed
-/// since the first item arrived. Returns `None` when the channel closed
-/// with nothing pending.
-///
-/// Edge-case contract (exercised in the tests below):
-/// * `max_batch == 0` is clamped to 1 — a zero cap must neither hang nor
-///   return empty batches forever (which would spin the caller);
-/// * `max_wait == ZERO` returns the first item immediately, without
-///   arming a timeout;
-/// * a channel disconnected mid-batch yields the partial batch; the
-///   *next* call returns `None`.
-pub fn collect_batch<T>(
-    rx: &Receiver<T>,
-    max_batch: usize,
-    max_wait: Duration,
-) -> Option<Vec<T>> {
-    let max_batch = max_batch.max(1);
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    if max_batch == 1 || max_wait.is_zero() {
-        return Some(batch);
-    }
-    let deadline = Instant::now() + max_wait;
-    while batch.len() < max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    Some(batch)
+/// One request class's admission share of a lane queue: its scheduling
+/// priority (0 = most important) and the number of queue slots reserved
+/// for it. Classes may exceed their reserved share while the queue has
+/// free space — the share only matters under contention, when it bounds
+/// what preemption can take back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneShare {
+    pub priority: u32,
+    pub reserved: usize,
 }
 
-/// Greedy (backpressure) variant of [`collect_batch`]: blocks for the
-/// first item, then drains only *immediately available* items up to
-/// `max_batch` — no timer is ever armed. The gateway's per-model batcher
-/// switches to this policy when the admission gauge shows a saturated
-/// queue: under overload a full batch is already waiting, so padding the
-/// batch window with a wait would only add latency while the bounded
-/// queue rejects new arrivals. Returns `None` when the channel closed
-/// with nothing pending (same contract as [`collect_batch`]).
-pub fn collect_batch_greedy<T>(rx: &Receiver<T>, max_batch: usize) -> Option<Vec<T>> {
-    let max_batch = max_batch.max(1);
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    while batch.len() < max_batch {
-        match rx.try_recv() {
-            Ok(item) => batch.push(item),
-            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+impl LaneShare {
+    /// The classless default: one class owning the whole queue.
+    pub fn single(queue_depth: usize) -> Vec<LaneShare> {
+        vec![LaneShare { priority: 0, reserved: queue_depth }]
+    }
+}
+
+/// Outcome of [`ClassQueues::admit`].
+#[derive(Debug)]
+pub enum Admit<T> {
+    /// The item was queued.
+    Admitted,
+    /// The queue was full and the arrival had no preemption claim.
+    Rejected,
+    /// The arrival was queued by displacing the *oldest* item of an
+    /// over-share, lower-priority class — the displaced item is handed
+    /// back so the caller can answer (and count) it.
+    Preempted { class: usize, item: T },
+}
+
+/// One lane's bounded admission queue, partitioned per request class
+/// (FIFO within a class).
+pub struct ClassQueues<T> {
+    shares: Vec<LaneShare>,
+    /// Class indices in service order: priority ascending, then index.
+    order: Vec<usize>,
+    queues: Vec<VecDeque<T>>,
+    len: usize,
+    depth: usize,
+}
+
+impl<T> ClassQueues<T> {
+    /// A queue bounded at `depth` with one sub-queue per class.
+    pub fn new(depth: usize, shares: &[LaneShare]) -> Self {
+        assert!(!shares.is_empty(), "a lane needs at least one class");
+        let mut order: Vec<usize> = (0..shares.len()).collect();
+        order.sort_by_key(|&c| (shares[c].priority, c));
+        Self {
+            shares: shares.to_vec(),
+            order,
+            queues: shares.iter().map(|_| VecDeque::new()).collect(),
+            len: 0,
+            depth,
         }
     }
-    Some(batch)
+
+    /// Items queued across all classes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Items queued for one class.
+    pub fn class_len(&self, class: usize) -> usize {
+        self.queues[class].len()
+    }
+
+    /// Admission with per-class reserved shares. While the queue has
+    /// free space every class may queue (even beyond its share). At the
+    /// bound, an arrival still under its reserved share claims a slot by
+    /// preempting the oldest item of the least-important strictly-lower
+    /// -priority class that has overrun its own share; otherwise the
+    /// arrival is rejected.
+    pub fn admit(&mut self, class: usize, item: T) -> Admit<T> {
+        if self.len < self.depth {
+            self.queues[class].push_back(item);
+            self.len += 1;
+            return Admit::Admitted;
+        }
+        if self.queues[class].len() >= self.shares[class].reserved {
+            return Admit::Rejected;
+        }
+        let victim = (0..self.shares.len())
+            .filter(|&v| {
+                self.shares[v].priority > self.shares[class].priority
+                    && self.queues[v].len() > self.shares[v].reserved
+            })
+            .max_by_key(|&v| (self.shares[v].priority, v));
+        match victim {
+            Some(v) => {
+                let old = self.queues[v].pop_front().expect("victim class is non-empty");
+                self.queues[class].push_back(item);
+                Admit::Preempted { class: v, item: old }
+            }
+            None => Admit::Rejected,
+        }
+    }
+
+    /// Priority of the most important queued class (None when empty) —
+    /// the lane's key in the scheduler's strict-priority comparison.
+    pub fn best_priority(&self) -> Option<u32> {
+        self.order
+            .iter()
+            .find(|&&c| !self.queues[c].is_empty())
+            .map(|&c| self.shares[c].priority)
+    }
+
+    /// Pull one batch: up to `max_batch` items in class-priority-then-
+    /// FIFO order. The pull-based successor of the old channel-draining
+    /// `collect_batch`.
+    pub fn pick(&mut self, max_batch: usize) -> Vec<T> {
+        let max_batch = max_batch.max(1);
+        let mut batch = Vec::new();
+        for &c in &self.order {
+            while batch.len() < max_batch {
+                match self.queues[c].pop_front() {
+                    Some(item) => batch.push(item),
+                    None => break,
+                }
+            }
+            if batch.len() >= max_batch {
+                break;
+            }
+        }
+        self.len -= batch.len();
+        batch
+    }
+
+    /// The oldest queued item of every non-empty class (each class is
+    /// FIFO, so the lane-wide oldest is the minimum over these) — what
+    /// the scheduler's batch-window deadline is computed from.
+    pub fn fronts(&self) -> impl Iterator<Item = &T> {
+        self.queues.iter().filter_map(|q| q.front())
+    }
+}
+
+/// Deficit-round-robin lane selector under strict class priority.
+///
+/// `pick` considers only *ready* lanes (the caller decides readiness:
+/// non-empty plus a full batch or an expired wait window). The most
+/// important queued class wins outright; among lanes tied at that
+/// priority the richest credit balance is served (ties to the lowest
+/// index), and when every tied lane has exhausted its credit each is
+/// replenished by one `quantum` — the round boundary of classic DRR.
+/// [`charge`] debits the dispatched batch size, so a lane that just
+/// sent a large batch yields to its peers before being served again,
+/// while a lane sending small batches earns proportionally more turns.
+/// Credits stay bounded in `(-quantum, quantum]` and lanes that are not
+/// ready forfeit theirs, so an idle lane cannot hoard a claim.
+///
+/// [`charge`]: DrrPicker::charge
+pub struct DrrPicker {
+    credits: Vec<i64>,
+    quantum: i64,
+}
+
+impl DrrPicker {
+    /// A selector over `lanes` lanes; `quantum` is the round-replenish
+    /// credit, normally the scheduler's `max_batch`.
+    pub fn new(lanes: usize, quantum: usize) -> Self {
+        Self {
+            credits: vec![0; lanes],
+            quantum: quantum.max(1) as i64,
+        }
+    }
+
+    /// Choose the next lane to serve. `ready[i]` carries lane `i`'s
+    /// best queued class priority, or `None` when the lane has nothing
+    /// ripe. Returns `None` iff no lane is ready. Deterministic: a pure
+    /// function of the call history and the `ready` vectors.
+    pub fn pick(&mut self, ready: &[Option<u32>]) -> Option<usize> {
+        debug_assert_eq!(ready.len(), self.credits.len());
+        let best = *ready.iter().flatten().min()?;
+        for (i, r) in ready.iter().enumerate() {
+            if r.is_none() {
+                self.credits[i] = 0;
+            }
+        }
+        let candidates: Vec<usize> = (0..ready.len())
+            .filter(|&i| ready[i] == Some(best))
+            .collect();
+        // Round boundary: everyone in the tier is out of credit.
+        while candidates.iter().all(|&i| self.credits[i] <= 0) {
+            for &i in &candidates {
+                self.credits[i] += self.quantum;
+            }
+        }
+        candidates
+            .into_iter()
+            .max_by(|&a, &b| self.credits[a].cmp(&self.credits[b]).then(b.cmp(&a)))
+    }
+
+    /// Debit a dispatched batch from the chosen lane's credit.
+    pub fn charge(&mut self, lane: usize, cost: usize) {
+        self.credits[lane] -= cost as i64;
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+
+    fn shares(spec: &[(u32, usize)]) -> Vec<LaneShare> {
+        spec.iter()
+            .map(|&(priority, reserved)| LaneShare { priority, reserved })
+            .collect()
+    }
 
     #[test]
-    fn fills_to_max_when_queue_is_deep() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
+    fn admits_freely_while_space_remains() {
+        // lo may overrun its share of 2 as long as the queue has room.
+        let mut q = ClassQueues::new(4, &shares(&[(0, 2), (1, 2)]));
+        for i in 0..4 {
+            assert!(matches!(q.admit(1, i), Admit::Admitted));
         }
-        let batch = collect_batch(&rx, 4, Duration::from_millis(50)).unwrap();
-        assert_eq!(batch, vec![0, 1, 2, 3]);
-        let batch = collect_batch(&rx, 4, Duration::from_millis(50)).unwrap();
-        assert_eq!(batch, vec![4, 5, 6, 7]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.class_len(1), 4);
     }
 
+    /// The preemption contract, exactly: a saturated low-priority queue
+    /// sheds precisely its over-share items (oldest first) as
+    /// high-priority arrivals land, and not one more.
     #[test]
-    fn times_out_with_partial_batch() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
-        let t0 = Instant::now();
-        let batch = collect_batch(&rx, 8, Duration::from_millis(20)).unwrap();
-        assert_eq!(batch, vec![1]);
-        assert!(t0.elapsed() >= Duration::from_millis(18));
-        drop(tx);
-    }
-
-    #[test]
-    fn returns_none_on_closed_empty_channel() {
-        let (tx, rx) = mpsc::channel::<u32>();
-        drop(tx);
-        assert!(collect_batch(&rx, 4, Duration::from_millis(10)).is_none());
-    }
-
-    #[test]
-    fn zero_max_batch_neither_hangs_nor_panics() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
-        let t0 = Instant::now();
-        // Clamped to a cap of 1: one item per call, no waiting on more.
-        let batch = collect_batch(&rx, 0, Duration::from_secs(5)).unwrap();
-        assert_eq!(batch, vec![1]);
-        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait out the deadline");
-        assert_eq!(collect_batch(&rx, 0, Duration::from_secs(5)).unwrap(), vec![2]);
-        drop(tx);
-        assert!(collect_batch(&rx, 0, Duration::from_secs(5)).is_none());
-    }
-
-    #[test]
-    fn zero_wait_returns_first_item_immediately() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(9).unwrap();
-        tx.send(10).unwrap();
-        let t0 = Instant::now();
-        let batch = collect_batch(&rx, 8, Duration::ZERO).unwrap();
-        assert_eq!(batch, vec![9]);
-        assert!(t0.elapsed() < Duration::from_millis(500));
-        // The queued item is still there for the next call.
-        assert_eq!(collect_batch(&rx, 8, Duration::ZERO).unwrap(), vec![10]);
-    }
-
-    #[test]
-    fn disconnect_mid_batch_returns_partial() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
-        let producer = std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(20));
-            tx.send(2).unwrap();
-            std::thread::sleep(Duration::from_millis(20));
-            // Dropping tx disconnects while collect_batch is mid-wait.
-        });
-        let t0 = Instant::now();
-        let batch = collect_batch(&rx, 16, Duration::from_secs(10)).unwrap();
-        producer.join().unwrap();
-        assert_eq!(batch, vec![1, 2]);
-        assert!(
-            t0.elapsed() < Duration::from_secs(5),
-            "disconnect must end the batch early, not wait out the deadline"
-        );
-        assert!(collect_batch(&rx, 16, Duration::from_secs(10)).is_none());
-    }
-
-    #[test]
-    fn greedy_fills_from_deep_queue_without_waiting() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
+    fn preemption_sheds_exactly_the_over_share_oldest_first() {
+        // depth 8 = hi reserved 6 + lo reserved 2.
+        let mut q = ClassQueues::new(8, &shares(&[(0, 6), (1, 2)]));
+        for i in 0..8 {
+            assert!(matches!(q.admit(1, i), Admit::Admitted), "lo {i} fills free space");
         }
-        let t0 = Instant::now();
-        assert_eq!(collect_batch_greedy(&rx, 4).unwrap(), vec![0, 1, 2, 3]);
-        assert_eq!(collect_batch_greedy(&rx, 4).unwrap(), vec![4, 5, 6, 7]);
-        assert!(t0.elapsed() < Duration::from_millis(500), "must not arm a timer");
+        // lo is 6 over its share of 2: exactly 6 hi arrivals preempt,
+        // displacing lo's oldest items in order...
+        for k in 0..6 {
+            match q.admit(0, 100 + k) {
+                Admit::Preempted { class, item } => {
+                    assert_eq!(class, 1);
+                    assert_eq!(item, k, "preemption must reject the oldest first");
+                }
+                other => panic!("hi arrival {k} should preempt, got {other:?}"),
+            }
+        }
+        assert_eq!(q.class_len(1), 2, "lo keeps its reserved share");
+        assert_eq!(q.class_len(0), 6);
+        // ...and the 7th is rejected: hi has consumed its own share.
+        assert!(matches!(q.admit(0, 999), Admit::Rejected));
+        // lo arrivals at the bound are plain rejections (no one below
+        // them to preempt).
+        assert!(matches!(q.admit(1, 999), Admit::Rejected));
+        assert_eq!(q.len(), 8);
     }
 
     #[test]
-    fn greedy_returns_partial_batch_immediately() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
-        let t0 = Instant::now();
-        assert_eq!(collect_batch_greedy(&rx, 16).unwrap(), vec![1, 2]);
-        assert!(t0.elapsed() < Duration::from_millis(500));
+    fn preemption_needs_a_strictly_lower_priority_victim() {
+        // Two classes at the same priority: no preemption between them.
+        let mut q = ClassQueues::new(2, &shares(&[(1, 1), (1, 1)]));
+        assert!(matches!(q.admit(1, 1), Admit::Admitted));
+        assert!(matches!(q.admit(1, 2), Admit::Admitted));
+        assert!(matches!(q.admit(0, 3), Admit::Rejected));
+        // And a victim must be over its own share: here lo holds exactly
+        // its reserved slot, so hi cannot take it.
+        let mut q = ClassQueues::new(2, &shares(&[(0, 1), (1, 1)]));
+        assert!(matches!(q.admit(0, 1), Admit::Admitted));
+        assert!(matches!(q.admit(1, 2), Admit::Admitted));
+        assert!(matches!(q.admit(0, 3), Admit::Rejected));
     }
 
     #[test]
-    fn greedy_none_on_closed_empty_channel() {
-        let (tx, rx) = mpsc::channel::<u32>();
-        tx.send(5).unwrap();
-        drop(tx);
-        assert_eq!(collect_batch_greedy(&rx, 0).unwrap(), vec![5]);
-        assert!(collect_batch_greedy(&rx, 4).is_none());
+    fn preemption_takes_the_least_important_victim() {
+        // Three classes; mid and lo both over their shares — a hi
+        // arrival must displace lo (the least important), not mid.
+        let mut q = ClassQueues::new(4, &shares(&[(0, 2), (1, 1), (2, 1)]));
+        assert!(matches!(q.admit(1, 10), Admit::Admitted));
+        assert!(matches!(q.admit(1, 11), Admit::Admitted));
+        assert!(matches!(q.admit(2, 20), Admit::Admitted));
+        assert!(matches!(q.admit(2, 21), Admit::Admitted));
+        match q.admit(0, 1) {
+            Admit::Preempted { class, item } => {
+                assert_eq!(class, 2);
+                assert_eq!(item, 20);
+            }
+            other => panic!("expected preemption of class 2, got {other:?}"),
+        }
     }
 
     #[test]
-    fn drains_before_deadline_when_producer_closes() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(7).unwrap();
-        tx.send(8).unwrap();
-        drop(tx);
-        let t0 = Instant::now();
-        let batch = collect_batch(&rx, 16, Duration::from_secs(5)).unwrap();
-        assert_eq!(batch, vec![7, 8]);
-        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait out the deadline");
+    fn pick_drains_priority_then_fifo() {
+        let mut q = ClassQueues::new(8, &shares(&[(1, 4), (0, 4)]));
+        // Interleaved arrivals: class 0 (prio 1) and class 1 (prio 0).
+        q.admit(0, 10);
+        q.admit(1, 20);
+        q.admit(0, 11);
+        q.admit(1, 21);
+        // Class 1 is more important: its items drain first, FIFO within.
+        assert_eq!(q.pick(3), vec![20, 21, 10]);
+        assert_eq!(q.pick(3), vec![11]);
+        assert!(q.is_empty());
+        assert_eq!(q.pick(3), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn pick_zero_max_batch_is_clamped_to_one() {
+        let mut q = ClassQueues::new(4, &LaneShare::single(4));
+        q.admit(0, 7);
+        q.admit(0, 8);
+        assert_eq!(q.pick(0), vec![7], "a zero cap must not return empty forever");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn best_priority_and_fronts_track_contents() {
+        let mut q = ClassQueues::new(8, &shares(&[(2, 2), (0, 2), (1, 2)]));
+        assert_eq!(q.best_priority(), None);
+        q.admit(0, 1);
+        assert_eq!(q.best_priority(), Some(2));
+        q.admit(2, 2);
+        assert_eq!(q.best_priority(), Some(1));
+        q.admit(1, 3);
+        assert_eq!(q.best_priority(), Some(0));
+        let fronts: Vec<i32> = q.fronts().copied().collect();
+        assert_eq!(fronts, vec![1, 3, 2], "one front per non-empty class");
+    }
+
+    #[test]
+    fn drr_alternates_between_equal_priority_lanes() {
+        let mut drr = DrrPicker::new(2, 4);
+        let ready = vec![Some(0u32), Some(0u32)];
+        let mut picks = Vec::new();
+        for _ in 0..6 {
+            let lane = drr.pick(&ready).unwrap();
+            drr.charge(lane, 4);
+            picks.push(lane);
+        }
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1], "equal backlog must alternate");
+    }
+
+    #[test]
+    fn drr_small_batches_earn_more_turns() {
+        // Lane 0 sends full batches (4), lane 1 tiny ones (1): lane 1
+        // must be served at least as often, never starved.
+        let mut drr = DrrPicker::new(2, 4);
+        let ready = vec![Some(0u32), Some(0u32)];
+        let mut served = [0usize; 2];
+        for _ in 0..12 {
+            let lane = drr.pick(&ready).unwrap();
+            drr.charge(lane, if lane == 0 { 4 } else { 1 });
+            served[lane] += 1;
+        }
+        assert!(served[1] >= served[0], "cheap lane must not starve: {served:?}");
+        assert!(served[0] > 0, "expensive lane must still be served: {served:?}");
+    }
+
+    #[test]
+    fn drr_strict_priority_wins_and_idle_lanes_lose_credit() {
+        let mut drr = DrrPicker::new(3, 4);
+        // Lane 2 holds the most important class: it wins outright.
+        for _ in 0..4 {
+            let lane = drr.pick(&[Some(1), None, Some(0)]).unwrap();
+            assert_eq!(lane, 2);
+            drr.charge(lane, 4);
+        }
+        // Lane 2 goes quiet: the waiting priority-1 lane is served next.
+        assert_eq!(drr.pick(&[Some(1), None, None]), Some(0));
+        drr.charge(0, 4);
+        // Nothing ready: no pick.
+        assert_eq!(drr.pick(&[None, None, None]), None);
     }
 }

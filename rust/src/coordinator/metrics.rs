@@ -1,20 +1,34 @@
-//! Serving metrics: request/batch/rejection counters and a latency
-//! histogram, kept per model lane by the gateway and mergeable into one
-//! aggregate view.
+//! Serving metrics: request/batch/rejection/preemption counters and a
+//! latency histogram, kept per model lane by the gateway and mergeable
+//! into one aggregate view. Shed and preempt counters are additionally
+//! kept *per request class* — the per-class admission control of the
+//! shared scheduler is invisible without them.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Lock-free metrics shared between the batcher, workers and clients.
-#[derive(Default)]
+/// Lock-free metrics shared between the scheduler, workers and clients.
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub execute_us: AtomicU64,
-    /// Requests refused at admission (bounded queue full).
+    /// Requests refused at admission (bounded queue full), all classes.
     pub rejected: AtomicU64,
+    /// Admitted requests later displaced by a higher-priority arrival
+    /// under per-class admission control, all classes.
+    pub preempted: AtomicU64,
+    /// Per-class splits of the two shed counters above.
+    class_rejected: Vec<AtomicU64>,
+    class_preempted: Vec<AtomicU64>,
     /// Log2-bucketed latency histogram (microseconds), buckets 0..=24.
     latency_buckets: [AtomicU64; 25],
+}
+
+impl Default for Metrics {
+    /// Single-class metrics (the classless gateway constructors).
+    fn default() -> Self {
+        Self::with_classes(1)
+    }
 }
 
 /// A point-in-time copy of the counters.
@@ -25,6 +39,12 @@ pub struct Snapshot {
     pub batched_items: u64,
     pub execute_us: u64,
     pub rejected: u64,
+    pub preempted: u64,
+    /// Per-class splits of `rejected` / `preempted` (index = request
+    /// class). [`Snapshot::merge`] sums them element-wise, padding the
+    /// shorter vector.
+    pub class_rejected: Vec<u64>,
+    pub class_preempted: Vec<u64>,
     /// Admitted-but-not-yet-batched depth at snapshot time. Unlike the
     /// other fields this is a *gauge*, not a monotonic counter: the
     /// server injects the lane's live admission gauge when it snapshots,
@@ -37,6 +57,23 @@ pub struct Snapshot {
 }
 
 impl Metrics {
+    /// Metrics for a lane serving `classes` request classes (clamped to
+    /// at least one).
+    pub fn with_classes(classes: usize) -> Self {
+        let classes = classes.max(1);
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            execute_us: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            preempted: AtomicU64::new(0),
+            class_rejected: (0..classes).map(|_| AtomicU64::new(0)).collect(),
+            class_preempted: (0..classes).map(|_| AtomicU64::new(0)).collect(),
+            latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
     /// Record one completed request's end-to-end latency.
     pub fn record_request(&self, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
@@ -51,9 +88,19 @@ impl Metrics {
         self.execute_us.fetch_add(execute_us, Ordering::Relaxed);
     }
 
-    /// Record one request refused at admission.
-    pub fn record_rejected(&self) {
+    /// Record one request of `class` refused at admission.
+    pub fn record_rejected(&self, class: usize) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        let last = self.class_rejected.len() - 1;
+        self.class_rejected[class.min(last)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one queued request of `class` displaced by a
+    /// higher-priority arrival.
+    pub fn record_preempted(&self, class: usize) {
+        self.preempted.fetch_add(1, Ordering::Relaxed);
+        let last = self.class_preempted.len() - 1;
+        self.class_preempted[class.min(last)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Snapshot all counters.
@@ -64,6 +111,17 @@ impl Metrics {
             batched_items: self.batched_items.load(Ordering::Relaxed),
             execute_us: self.execute_us.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            preempted: self.preempted.load(Ordering::Relaxed),
+            class_rejected: self
+                .class_rejected
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            class_preempted: self
+                .class_preempted
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
             queue: 0,
             latency_buckets: self
                 .latency_buckets
@@ -83,8 +141,20 @@ impl Snapshot {
             batched_items: 0,
             execute_us: 0,
             rejected: 0,
+            preempted: 0,
+            class_rejected: Vec::new(),
+            class_preempted: Vec::new(),
             queue: 0,
             latency_buckets: vec![0; 25],
+        }
+    }
+
+    fn add_padded(into: &mut Vec<u64>, other: &[u64]) {
+        if into.len() < other.len() {
+            into.resize(other.len(), 0);
+        }
+        for (a, &b) in into.iter_mut().zip(other) {
+            *a += b;
         }
     }
 
@@ -95,13 +165,11 @@ impl Snapshot {
         self.batched_items += other.batched_items;
         self.execute_us += other.execute_us;
         self.rejected += other.rejected;
+        self.preempted += other.preempted;
         self.queue += other.queue;
-        if self.latency_buckets.len() < other.latency_buckets.len() {
-            self.latency_buckets.resize(other.latency_buckets.len(), 0);
-        }
-        for (a, &b) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
-            *a += b;
-        }
+        Self::add_padded(&mut self.class_rejected, &other.class_rejected);
+        Self::add_padded(&mut self.class_preempted, &other.class_preempted);
+        Self::add_padded(&mut self.latency_buckets, &other.latency_buckets);
         self
     }
 
@@ -110,12 +178,21 @@ impl Snapshot {
     /// exact). This is how the load generator isolates one run's latency
     /// histogram and batch stats on a reused server.
     pub fn delta_since(&self, base: &Snapshot) -> Snapshot {
+        let sub_padded = |a: &[u64], b: &[u64]| -> Vec<u64> {
+            a.iter()
+                .enumerate()
+                .map(|(i, &v)| v - b.get(i).copied().unwrap_or(0))
+                .collect()
+        };
         Snapshot {
             requests: self.requests - base.requests,
             batches: self.batches - base.batches,
             batched_items: self.batched_items - base.batched_items,
             execute_us: self.execute_us - base.execute_us,
             rejected: self.rejected - base.rejected,
+            preempted: self.preempted - base.preempted,
+            class_rejected: sub_padded(&self.class_rejected, &base.class_rejected),
+            class_preempted: sub_padded(&self.class_preempted, &base.class_preempted),
             // Gauge semantics: the window "delta" of a level is its
             // current value, not a subtraction against the baseline.
             queue: self.queue,
@@ -176,13 +253,51 @@ mod tests {
         m.record_request(100);
         m.record_request(200);
         m.record_batch(2, 500);
-        m.record_rejected();
+        m.record_rejected(0);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.batched_items, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.preempted, 0);
         assert_eq!(s.mean_batch(), 2.0);
+    }
+
+    #[test]
+    fn per_class_shed_and_preempt_counters_split_the_totals() {
+        let m = Metrics::with_classes(3);
+        m.record_rejected(0);
+        m.record_rejected(2);
+        m.record_rejected(2);
+        m.record_preempted(1);
+        // Out-of-range classes clamp into the last bucket instead of
+        // panicking a serving thread.
+        m.record_preempted(9);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 3);
+        assert_eq!(s.preempted, 2);
+        assert_eq!(s.class_rejected, vec![1, 0, 2]);
+        assert_eq!(s.class_preempted, vec![0, 1, 1]);
+        // The class splits always sum to the totals.
+        assert_eq!(s.class_rejected.iter().sum::<u64>(), s.rejected);
+        assert_eq!(s.class_preempted.iter().sum::<u64>(), s.preempted);
+        // Merge pads shorter vectors (single-class lanes merged into a
+        // gateway-wide view alongside multi-class ones).
+        let single = Metrics::default();
+        single.record_rejected(0);
+        single.record_preempted(0);
+        let merged = Snapshot::zero().merge(&s).merge(&single.snapshot());
+        assert_eq!(merged.class_rejected, vec![2, 0, 2]);
+        assert_eq!(merged.class_preempted, vec![1, 1, 1]);
+        assert_eq!(merged.rejected, 4);
+        assert_eq!(merged.preempted, 3);
+        // delta_since subtracts the class splits pointwise.
+        let base = s.clone();
+        m.record_rejected(2);
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(d.rejected, 1);
+        assert_eq!(d.class_rejected, vec![0, 0, 1]);
+        assert_eq!(d.class_preempted, vec![0, 0, 0]);
     }
 
     #[test]
@@ -254,7 +369,7 @@ mod tests {
         let base = m.snapshot();
         m.record_request(1_000_000); // measured run, bucket 19
         m.record_batch(1, 500);
-        m.record_rejected();
+        m.record_rejected(0);
         let d = m.snapshot().delta_since(&base);
         assert_eq!(d.requests, 1);
         assert_eq!(d.batches, 1);
@@ -289,7 +404,7 @@ mod tests {
         a.record_batch(3, 10);
         let b = Metrics::default();
         b.record_request(1_000_000);
-        b.record_rejected();
+        b.record_rejected(0);
         let merged = Snapshot::zero().merge(&a.snapshot()).merge(&b.snapshot());
         assert_eq!(merged.requests, 2);
         assert_eq!(merged.batches, 1);

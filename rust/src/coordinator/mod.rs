@@ -1,12 +1,15 @@
 //! The L3 serving coordinator: a multi-model gateway (request router,
-//! bounded per-model admission queues, dynamic batchers, shared worker
-//! pool, per-lane metrics) plus a deterministic trace-driven load
-//! generator.
+//! bounded per-model admission queues with per-class reserved shares,
+//! one shared scheduling loop, shared worker pool, per-lane metrics)
+//! plus a deterministic trace-driven load generator.
 //!
 //! Built on threads + channels (the offline crate snapshot has no tokio).
-//! Clients submit single images to a named model; the model's batcher
-//! coalesces them (size- or timeout-bound, greedy under backpressure)
-//! into one PJRT execution — or one native ApproxFlow pass when no AOT
+//! Clients submit single images to a named model under a request class;
+//! a single scheduler thread owns every lane queue (one loop regardless
+//! of lane count), coalesces requests into batches (size- or
+//! window-bound, greedy under backpressure) by strict class priority
+//! with deficit round robin across lanes, and feeds them into one PJRT
+//! execution — or one native ApproxFlow pass when no AOT
 //! artifact is available. The approximate-multiplier LUT is baked into
 //! each registered variant's prepared plan (or injected as an *input
 //! tensor* on the AOT path), so a gateway hosts several multiplier

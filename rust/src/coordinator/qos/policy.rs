@@ -15,6 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::super::batcher::LaneShare;
 use super::family::VariantFamily;
 
 /// One traffic class and its service-level objectives.
@@ -151,6 +152,59 @@ impl QosPolicy {
         self.classes.iter().map(|c| c.weight).collect()
     }
 
+    /// Apportion one lane's bounded `queue_depth` into per-class
+    /// reserved admission shares for the shared scheduler: every class
+    /// gets at least one slot, and the remaining depth is split by the
+    /// class weights with the largest-remainder method (deterministic;
+    /// remainder ties break to the lower class index). The shares sum
+    /// to exactly `queue_depth`, so whenever a lane queue is full at
+    /// least one class is provably over its share — the invariant the
+    /// preemption path relies on to always find a victim.
+    pub fn lane_shares(&self, queue_depth: usize) -> Result<Vec<LaneShare>> {
+        let n = self.classes.len();
+        if n == 0 {
+            bail!("QoS policy needs at least one request class");
+        }
+        if queue_depth < n {
+            bail!(
+                "queue_depth {queue_depth} cannot reserve at least one admission \
+                 slot for each of the {n} request classes"
+            );
+        }
+        for c in &self.classes {
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                bail!(
+                    "class '{}': weight must be positive and finite, got {}",
+                    c.name,
+                    c.weight
+                );
+            }
+        }
+        let spare = queue_depth - n;
+        let w_sum: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let exact: Vec<f64> = self
+            .classes
+            .iter()
+            .map(|c| spare as f64 * c.weight / w_sum)
+            .collect();
+        let mut extra: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
+        let assigned: usize = extra.iter().sum();
+        let mut by_remainder: Vec<usize> = (0..n).collect();
+        by_remainder.sort_by(|&a, &b| {
+            let (fa, fb) = (exact[a] - exact[a].floor(), exact[b] - exact[b].floor());
+            fb.partial_cmp(&fa).expect("finite remainders").then(a.cmp(&b))
+        });
+        for &c in by_remainder.iter().take(spare.saturating_sub(assigned)) {
+            extra[c] += 1;
+        }
+        Ok(self
+            .classes
+            .iter()
+            .zip(extra)
+            .map(|(c, e)| LaneShare { priority: c.priority, reserved: 1 + e })
+            .collect())
+    }
+
     /// Index of a class by name.
     pub fn class_idx(&self, name: &str) -> Result<usize> {
         self.classes
@@ -268,6 +322,42 @@ mod tests {
                 "spec '{spec}': error '{err:#}' should mention '{needle}'"
             );
         }
+    }
+
+    #[test]
+    fn lane_shares_apportion_by_weight_and_sum_to_the_depth() {
+        let policy = |weights: &[f64]| QosPolicy {
+            classes: weights
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| RequestClass {
+                    name: format!("c{i}"),
+                    priority: i as u32,
+                    max_p99_us: 1000,
+                    min_accuracy_tier: 0,
+                    weight: w,
+                })
+                .collect(),
+            ctl: ControllerConfig::default(),
+        };
+        // 1:3 weights over depth 64: shares track the weights exactly
+        // and carry the class priorities through.
+        let shares = policy(&[1.0, 3.0]).lane_shares(64).unwrap();
+        assert_eq!(shares.iter().map(|s| s.reserved).sum::<usize>(), 64);
+        assert_eq!(shares[0].reserved, 17); // 1 + floor(62/4) = 16, +1 remainder? see below
+        assert_eq!(shares[1].reserved, 47);
+        assert_eq!(shares[0].priority, 0);
+        assert_eq!(shares[1].priority, 1);
+        // Every class keeps at least one slot however lopsided the
+        // weights are, and the sum invariant holds at tiny depths.
+        let shares = policy(&[1000.0, 0.001, 0.001]).lane_shares(4).unwrap();
+        assert_eq!(shares.iter().map(|s| s.reserved).sum::<usize>(), 4);
+        assert!(shares.iter().all(|s| s.reserved >= 1));
+        assert_eq!(shares[0].reserved, 2);
+        // Degenerate inputs fail loudly.
+        assert!(policy(&[1.0, 1.0, 1.0]).lane_shares(2).is_err());
+        assert!(policy(&[1.0, f64::NAN]).lane_shares(8).is_err());
+        assert!(policy(&[]).lane_shares(8).is_err());
     }
 
     #[test]

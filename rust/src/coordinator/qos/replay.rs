@@ -27,8 +27,9 @@ use anyhow::Result;
 
 use crate::util::json::Value;
 
+use super::super::batcher::LaneShare;
 use super::super::loadgen::{class_trace_fingerprint, generate_class_trace, image_for, BurstConfig};
-use super::super::metrics::Metrics;
+use super::super::metrics::{Metrics, Snapshot};
 use super::super::server::{Server, Submission};
 use super::controller::{Action, DecisionRecord, LaneObservation};
 use super::router::QosRouter;
@@ -114,6 +115,12 @@ pub struct ClassReport {
     pub completed: u64,
     pub rejected: u64,
     pub failed: u64,
+    /// Measured: admitted requests of this class the gateway's per-class
+    /// admission control later displaced for a higher-priority arrival
+    /// (summed from the family lanes' metrics; timing-dependent, so
+    /// *not* part of the deterministic trace lines — the deterministic
+    /// analog is [`QosReport::sim_preempted`]).
+    pub preempted: u64,
     /// Measured end-to-end percentiles (client side), µs.
     pub p50_us: u64,
     pub p99_us: u64,
@@ -152,6 +159,15 @@ pub struct QosReport {
     /// First tick from which every class stayed on the exact variant for
     /// the rest of the run (None if the run ends shifted).
     pub restore_tick: Option<u64>,
+    /// Deterministic: per-class reserved share of the virtual per-tier
+    /// queue bound (`QosPolicy::lane_shares` over `sim.queue_depth`).
+    pub reserved: Vec<u64>,
+    /// Deterministic: virtual queue-bound removals per class, split into
+    /// preemptions (displaced under queued higher-priority traffic) and
+    /// plain overflow shedding — the class-queue ledger of the shared
+    /// scheduler model, fingerprinted by [`QosReport::sched_line`].
+    pub sim_preempted: Vec<u64>,
+    pub sim_shed: Vec<u64>,
     pub wall_s: f64,
 }
 
@@ -182,11 +198,43 @@ impl QosReport {
         )
     }
 
+    /// The shared-scheduler identity line: the deterministic per-class
+    /// ledger of the virtual class queues (reserved shares, preemptions,
+    /// overflow sheds) under one FNV fingerprint. Like
+    /// [`QosReport::trace_line`] it is a pure function of (seed, trace,
+    /// policy, sim) — `scripts/check.sh --sched` runs the same seed
+    /// twice and diffs this line.
+    pub fn sched_line(&self) -> String {
+        let per_class = |v: &[u64]| {
+            self.per_class
+                .iter()
+                .zip(v)
+                .map(|(c, n)| format!("{}={n}", c.name))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        let fp = crate::util::hash::fnv1a_u64(
+            self.reserved
+                .iter()
+                .chain(&self.sim_preempted)
+                .chain(&self.sim_shed)
+                .copied()
+                .chain(std::iter::once(self.decision_fingerprint)),
+        );
+        format!(
+            "sched trace {fp:#018x} reserved [{}] preempted [{}] shed [{}]",
+            per_class(&self.reserved),
+            per_class(&self.sim_preempted),
+            per_class(&self.sim_shed),
+        )
+    }
+
     /// Human-readable summary.
     pub fn render(&self) -> String {
         let mut s = format!(
-            "{}\nwall {:.2}s — {} decisions over {} ticks (restore tick: {})\n",
+            "{}\n{}\nwall {:.2}s — {} decisions over {} ticks (restore tick: {})\n",
             self.trace_line(),
+            self.sched_line(),
             self.wall_s,
             self.decisions.len(),
             self.event_ticks + self.drain_ticks,
@@ -200,7 +248,7 @@ impl QosReport {
             s.push_str(&format!(
                 "  {:<10} submitted {:>6}  by-tier [{}]  approx {:.1}%  \
                  burst-approx {:.1}%  completed {:>6}  rejected {:>6}  \
-                 p50 {:.2}ms  p99 {:.2}ms\n",
+                 preempted {:>4}  p50 {:.2}ms  p99 {:.2}ms\n",
                 c.name,
                 c.submitted,
                 tiers.join(", "),
@@ -208,6 +256,7 @@ impl QosReport {
                 100.0 * c.burst_approx_fraction(),
                 c.completed,
                 c.rejected,
+                c.preempted,
                 c.p50_us as f64 / 1000.0,
                 c.p99_us as f64 / 1000.0,
             ));
@@ -242,11 +291,18 @@ impl QosReport {
                     ("completed", Value::Int(c.completed as i64)),
                     ("rejected", Value::Int(c.rejected as i64)),
                     ("failed", Value::Int(c.failed as i64)),
+                    ("preempted", Value::Int(c.preempted as i64)),
                     ("p50_us", Value::Int(c.p50_us as i64)),
                     ("p99_us", Value::Int(c.p99_us as i64)),
                 ])
             })
             .collect();
+        let u64_arr = |v: &[u64]| Value::Arr(v.iter().map(|&n| Value::Int(n as i64)).collect());
+        let sched = Value::obj(vec![
+            ("reserved", u64_arr(&self.reserved)),
+            ("sim_preempted", u64_arr(&self.sim_preempted)),
+            ("sim_shed", u64_arr(&self.sim_shed)),
+        ]);
         let family: Vec<Value> = router
             .family()
             .variants()
@@ -311,6 +367,7 @@ impl QosReport {
                 Value::Arr(self.levels_final.iter().map(|&l| Value::Int(l as i64)).collect()),
             ),
             ("wall_s", Value::Num(self.wall_s)),
+            ("sched", sched),
             ("family", Value::Arr(family)),
             ("classes", Value::Arr(classes)),
             ("split_history", Value::Arr(history)),
@@ -319,52 +376,83 @@ impl QosReport {
     }
 }
 
-/// Shared-pool queueing sketch: one tick of virtual service.
+/// Shared-pool queueing sketch: one tick of virtual service over
+/// class-partitioned lane queues — the deterministic mirror of the
+/// gateway's shared scheduler. Per-tier *totals* (service, overflow,
+/// queue) are what the controller observes; the per-class split of each
+/// tier's backlog additionally models priority-ordered service and the
+/// per-class admission bound, producing the deterministic shed/preempt
+/// ledger the `sched trace` line fingerprints.
 struct LaneSim {
     costs: Vec<u64>,
-    backlog: Vec<u64>,
-    arrivals: Vec<u64>,
+    /// `backlog[tier][class]` — virtual queued requests.
+    backlog: Vec<Vec<u64>>,
+    arrivals: Vec<Vec<u64>>,
+    /// Class priorities and reserved shares of the virtual per-tier
+    /// queue bound (mirroring `QosPolicy::lane_shares`).
+    prios: Vec<u32>,
+    reserved: Vec<u64>,
+    /// Deterministic per-class ledger of queue-bound removals: displaced
+    /// while more important traffic stayed queued (preempted) vs plain
+    /// overflow shedding.
+    preempted: Vec<u64>,
     shed: Vec<u64>,
     budget_per_tick: u64,
     queue_depth: u64,
 }
 
 impl LaneSim {
-    fn new(sim: &SimConfig, tiers: usize, interval_us: u64) -> Self {
+    fn new(sim: &SimConfig, tiers: usize, interval_us: u64, shares: &[LaneShare]) -> Self {
         Self {
             costs: sim.costs(tiers),
-            backlog: vec![0; tiers],
-            arrivals: vec![0; tiers],
-            shed: vec![0; tiers],
+            backlog: vec![vec![0; shares.len()]; tiers],
+            arrivals: vec![vec![0; shares.len()]; tiers],
+            prios: shares.iter().map(|s| s.priority).collect(),
+            reserved: shares.iter().map(|s| s.reserved as u64).collect(),
+            preempted: vec![0; shares.len()],
+            shed: vec![0; shares.len()],
             budget_per_tick: sim.workers * interval_us,
             queue_depth: sim.queue_depth,
         }
     }
 
-    fn arrive(&mut self, tier: usize) {
-        self.arrivals[tier] += 1;
+    fn arrive(&mut self, tier: usize, class: usize) {
+        self.arrivals[tier][class] += 1;
     }
 
     fn idle(&self) -> bool {
-        self.backlog.iter().all(|&b| b == 0) && self.arrivals.iter().all(|&a| a == 0)
+        self.backlog.iter().all(|b| b.iter().all(|&c| c == 0))
+            && self.arrivals.iter().all(|a| a.iter().all(|&c| c == 0))
     }
 
     /// Advance one controller interval: absorb the window's arrivals,
-    /// serve round-robin from the shared budget, shed overflow, and
-    /// report per-tier observations (latency proxy = FIFO drain time of
-    /// a new arrival on that lane).
+    /// serve round-robin across tiers from the shared budget (the most
+    /// important queued class of a tier is served first, like the real
+    /// scheduler's priority-then-FIFO batch pick), trim each tier's
+    /// queue to the bound by removing from the least-important
+    /// over-share class first (the preemption analog), and report
+    /// per-tier observations (latency proxy = FIFO drain time of a new
+    /// arrival on that lane).
     fn tick(&mut self) -> Vec<LaneObservation> {
         let n = self.costs.len();
+        let k = self.prios.len();
         for t in 0..n {
-            self.backlog[t] += self.arrivals[t];
-            self.arrivals[t] = 0;
+            for c in 0..k {
+                self.backlog[t][c] += std::mem::take(&mut self.arrivals[t][c]);
+            }
         }
         let mut budget = self.budget_per_tick;
         loop {
             let mut served_any = false;
             for t in 0..n {
-                if self.backlog[t] > 0 && budget >= self.costs[t] {
-                    self.backlog[t] -= 1;
+                if budget < self.costs[t] {
+                    continue;
+                }
+                let first = (0..k)
+                    .filter(|&c| self.backlog[t][c] > 0)
+                    .min_by_key(|&c| (self.prios[c], c));
+                if let Some(c) = first {
+                    self.backlog[t][c] -= 1;
                     budget -= self.costs[t];
                     served_any = true;
                 }
@@ -375,14 +463,36 @@ impl LaneSim {
         }
         (0..n)
             .map(|t| {
-                if self.backlog[t] > self.queue_depth {
-                    self.shed[t] += self.backlog[t] - self.queue_depth;
-                    self.backlog[t] = self.queue_depth;
+                let mut total: u64 = self.backlog[t].iter().sum();
+                let mut removed = 0u64;
+                while total > self.queue_depth {
+                    // Least-important over-share class loses first; the
+                    // share sum equals the bound, so a victim always
+                    // exists when the queue is over it.
+                    let v = (0..k)
+                        .filter(|&c| self.backlog[t][c] > self.reserved[c])
+                        .max_by_key(|&c| (self.prios[c], c))
+                        .or_else(|| {
+                            (0..k)
+                                .filter(|&c| self.backlog[t][c] > 0)
+                                .max_by_key(|&c| (self.prios[c], c))
+                        })
+                        .expect("over-bound queue is non-empty");
+                    self.backlog[t][v] -= 1;
+                    total -= 1;
+                    removed += 1;
+                    let displaced = (0..k)
+                        .any(|c| self.prios[c] < self.prios[v] && self.backlog[t][c] > 0);
+                    if displaced {
+                        self.preempted[v] += 1;
+                    } else {
+                        self.shed[v] += 1;
+                    }
                 }
                 LaneObservation {
-                    p99_us: (self.backlog[t] + 1) * self.costs[t],
-                    rejected_delta: std::mem::take(&mut self.shed[t]),
-                    queue: self.backlog[t] as i64,
+                    p99_us: (total + 1) * self.costs[t],
+                    rejected_delta: removed,
+                    queue: total as i64,
                 }
             })
             .collect()
@@ -410,7 +520,18 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
     let interval = policy.ctl.interval_us;
     let in_burst = |at_us: u64| cfg.burst.as_ref().is_some_and(|b| b.contains_us(at_us));
 
-    let mut sim = LaneSim::new(&cfg.sim, n_tiers, interval);
+    // The virtual class queues mirror the real scheduler's shares,
+    // apportioned over the *virtual* per-tier queue bound.
+    let shares = policy.lane_shares(cfg.sim.queue_depth.min(usize::MAX as u64) as usize)?;
+    // Baselines over every family lane so the measured per-class
+    // preemption counts isolate this run on a reused server.
+    let lane_base: Vec<Snapshot> = router
+        .family()
+        .names()
+        .iter()
+        .map(|n| server.model_metrics(n))
+        .collect::<Result<_>>()?;
+    let mut sim = LaneSim::new(&cfg.sim, n_tiers, interval, &shares);
     let mut submitted = vec![0u64; n_classes];
     let mut served_by_tier = vec![vec![0u64; n_tiers]; n_classes];
     let mut burst_submitted = vec![0u64; n_classes];
@@ -454,7 +575,7 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
             }
             let image = image_for(ev.image_seed, image_size);
             let (tier, sub) = router.submit(server, ev.class, image)?;
-            sim.arrive(tier);
+            sim.arrive(tier, ev.class);
             submitted[ev.class] += 1;
             served_by_tier[ev.class][tier] += 1;
             if in_burst(ev.at_us) {
@@ -505,6 +626,18 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
         None
     };
 
+    // Measured per-class preemptions: this run's delta of the family
+    // lanes' per-class counters, summed across lanes.
+    let mut measured_preempted = vec![0u64; n_classes];
+    for (name, base) in router.family().names().iter().zip(&lane_base) {
+        let delta = server.model_metrics(name)?.delta_since(base);
+        for (c, &n) in delta.class_preempted.iter().enumerate() {
+            if c < n_classes {
+                measured_preempted[c] += n;
+            }
+        }
+    }
+
     let per_class: Vec<ClassReport> = policy
         .classes
         .iter()
@@ -526,6 +659,7 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
                 completed: snap.requests,
                 rejected: rejected[c],
                 failed: wait_failed[c],
+                preempted: measured_preempted[c],
                 p50_us: snap.latency_percentile_us(0.50),
                 p99_us: snap.latency_percentile_us(0.99),
             }
@@ -544,6 +678,9 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
         decisions: router.decisions(),
         levels_final,
         restore_tick,
+        reserved: shares.iter().map(|s| s.reserved as u64).collect(),
+        sim_preempted: sim.preempted.clone(),
+        sim_shed: sim.shed.clone(),
         wall_s,
     })
 }

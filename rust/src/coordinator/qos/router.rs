@@ -83,7 +83,11 @@ impl QosRouter {
     }
 
     /// Route one image for `class` and submit it to the matching gateway
-    /// lane. Returns the tier served alongside the admission outcome.
+    /// lane *as that class*, so the shared scheduler's per-class
+    /// admission shares and priority ordering apply (the server must be
+    /// built with `Server::start_gateway_with_classes` over this
+    /// policy's `lane_shares`). Returns the tier served alongside the
+    /// admission outcome.
     pub fn submit(
         &self,
         server: &Server,
@@ -91,7 +95,7 @@ impl QosRouter {
         image: Vec<f32>,
     ) -> Result<(usize, Submission)> {
         let tier = self.route(class);
-        let sub = server.try_submit(&self.family.variant(tier).name, image)?;
+        let sub = server.try_submit_class(&self.family.variant(tier).name, class, image)?;
         Ok((tier, sub))
     }
 

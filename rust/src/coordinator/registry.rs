@@ -6,8 +6,9 @@
 //! energy/throughput per request class. The registry is the static half
 //! of that story: each entry is a [`ModelHandle`] (prepared plan + input
 //! geometry) keyed by a unique routing name; `Server::start_gateway`
-//! turns the registry into per-model admission queues over one shared
-//! worker pool.
+//! (or `start_gateway_with_classes`, which adds per-class reserved
+//! admission shares) turns the registry into per-model bounded queues
+//! behind one shared scheduling loop and worker pool.
 
 use anyhow::{anyhow, bail, Result};
 

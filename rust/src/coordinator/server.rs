@@ -1,24 +1,35 @@
-//! The serving gateway: per-model bounded admission queues, per-model
-//! dynamic batchers, and one shared worker pool executing on two
-//! backends — the PJRT runtime (AOT artifact) or the native ApproxFlow
-//! engine (no artifact required; also the parity reference).
+//! The serving gateway: per-model bounded admission queues with
+//! per-class reserved shares, one shared scheduling loop, and one shared
+//! worker pool executing on two backends — the PJRT runtime (AOT
+//! artifact) or the native ApproxFlow engine (no artifact required; also
+//! the parity reference).
 //!
-//! Lifecycle of a request: `submit` looks up the model lane and
-//! `try_send`s onto that lane's *bounded* queue — a full queue rejects
-//! with an error immediately (admission control; the pre-gateway server
-//! queued without bound). The lane's batcher coalesces admitted requests
-//! (size/wait-bound via `collect_batch`, switching to the greedy no-wait
-//! policy while the admission gauge shows saturation) and hands `(lane,
-//! batch)` jobs to the shared worker pool. Workers hold one backend per
-//! model and respond through each request's channel. `shutdown` closes
-//! the admission queues, then drains: batchers flush every admitted
-//! request into jobs, workers complete every job, and only then do the
-//! threads exit — no admitted request is ever dropped.
+//! Lifecycle of a request: `try_submit_class` looks up the model lane
+//! and admits the request into that lane's *bounded* class-partitioned
+//! queue ([`ClassQueues`]) — a full queue either sheds the arrival or,
+//! when the arrival's class is still under its reserved share, preempts
+//! the oldest queued request of an over-share lower-priority class
+//! (admission control; before PR 5 all classes shared the bound
+//! equally, so a low-priority burst could starve the class the QoS
+//! controller protects). A **single scheduler thread** owns every lane
+//! queue — regardless of lane count — and picks the next batch with a
+//! deterministic weighted-priority policy: the most important queued
+//! class anywhere wins, ties between lanes resolve by deficit round
+//! robin ([`DrrPicker`]) so no lane starves, and a lane only becomes
+//! ripe when it holds a full batch, its oldest request has aged past
+//! the batch window, or the gateway is draining. Batches flow through a
+//! worker-count-bounded job pipe (a saturated pool backpressures the
+//! scheduler, the lane queues fill, and overflow is shed at admission),
+//! and workers hold one backend per model and respond through each
+//! request's channel. `shutdown` closes admission, then drains: the
+//! scheduler flushes every admitted request into jobs, workers complete
+//! every job, and only then do the threads exit — no admitted request
+//! is ever dropped (preempted requests *are* answered, with an error).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -30,11 +41,11 @@ use crate::nn::multiplier::Multiplier;
 use crate::nn::ops::argmax;
 use crate::runtime::{model::Input, Model, Runtime};
 
-use super::batcher::{collect_batch, collect_batch_greedy};
+use super::batcher::{Admit, ClassQueues, DrrPicker, LaneShare};
 use super::metrics::{Metrics, Snapshot};
 use super::registry::ModelRegistry;
 
-/// Batching/serving configuration (per model lane).
+/// Batching/serving configuration (shared by every model lane).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub max_batch: usize,
@@ -199,11 +210,24 @@ struct Lane {
     name: String,
     image_size: usize,
     metrics: Arc<Metrics>,
-    /// Admitted-but-not-yet-batched gauge (backpressure signal for the
-    /// lane's batcher). i64 so the submit-side increment and batcher-side
-    /// decrement can interleave without underflow.
+    /// Admitted-but-not-yet-scheduled gauge, mirroring the lane queue's
+    /// length (both are mutated under the scheduler lock, so the gauge
+    /// can be read lock-free by the QoS controller between snapshots).
     depth: Arc<AtomicI64>,
     queue_depth: usize,
+}
+
+/// The shared scheduler's state: every lane's class-partitioned
+/// admission queue behind one mutex, plus the open/draining flag.
+struct SchedState {
+    queues: Vec<ClassQueues<Request>>,
+    open: bool,
+}
+
+struct Sched {
+    state: Mutex<SchedState>,
+    /// Signaled on every admission and on shutdown.
+    work: Condvar,
 }
 
 /// A response in flight: hold it and [`Pending::wait`] for the result.
@@ -225,8 +249,9 @@ pub enum Submission {
 
 impl Pending {
     /// Block until the gateway answers. An error here means the request
-    /// failed *after* admission (backend error) — the drain guarantee
-    /// ensures the channel is always answered, never dropped.
+    /// failed *after* admission (backend error, or preemption by a
+    /// higher-priority arrival) — the drain guarantee ensures the
+    /// channel is always answered, never dropped.
     pub fn wait(self) -> Result<usize> {
         Ok(self.wait_with_latency()?.0)
     }
@@ -246,11 +271,11 @@ impl Pending {
 
 /// A running multi-model gateway.
 pub struct Server {
-    /// Admission senders, one per lane; `None` after shutdown. RwLock so
-    /// concurrent submissions (read) never serialize on one another —
-    /// only shutdown takes the write lock.
-    txs: RwLock<Option<Vec<SyncSender<Request>>>>,
+    sched: Arc<Sched>,
     lanes: Vec<Lane>,
+    /// Per-class admission shares (one entry per request class; single
+    /// classless entry for the plain constructors).
+    shares: Vec<LaneShare>,
     by_name: BTreeMap<String, usize>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -281,6 +306,7 @@ impl Server {
         let mut cfg = config;
         cfg.max_batch = cfg.max_batch.min(b);
         cfg.workers = 1; // one PJRT CPU device
+        let shares = LaneShare::single(cfg.queue_depth);
         Self::spawn_gateway(
             vec![LaneSpec {
                 name: "default".to_string(),
@@ -297,6 +323,7 @@ impl Server {
                 }),
             }],
             &cfg,
+            shares,
         )
     }
 
@@ -304,19 +331,23 @@ impl Server {
     /// graph is prepared once (im2col + LUT-GEMM plan) and shared
     /// read-only across `config.workers` threads pulling batch jobs from
     /// the common queue. Single lane named `"default"`.
+    ///
+    /// Registration (which probes the model with one classification) and
+    /// gateway construction can both fail; the error is propagated —
+    /// before PR 5 this path `expect`ed and panicked the caller on, e.g.,
+    /// `image_dims` that do not match the graph.
     pub fn start_native(
         graph: Graph,
         mul: Multiplier,
         image_dims: (usize, usize, usize),
         config: ServeConfig,
-    ) -> Self {
+    ) -> Result<Self> {
         let handle = graph.prepare_handle("default", &mul, image_dims);
         let mut registry = ModelRegistry::new();
         registry
             .register_handle(handle)
-            .expect("registering the native model (image_dims must match the graph)");
+            .context("registering the native model")?;
         Self::start_gateway(registry, config)
-            .expect("native gateway construction (requires a valid ServeConfig)")
     }
 
     /// Start a native worker *pool*: `config.workers` threads, each with
@@ -330,6 +361,7 @@ impl Server {
     ) -> Result<Self> {
         let (c, h, w) = image_dims;
         let factory = Arc::new(factory);
+        let shares = LaneShare::single(config.queue_depth);
         Self::spawn_gateway(
             vec![LaneSpec {
                 name: "default".to_string(),
@@ -344,15 +376,33 @@ impl Server {
                 }),
             }],
             &config,
+            shares,
         )
     }
 
     /// Start a multi-model gateway: every registered variant gets its own
-    /// bounded admission queue and batcher; `config.workers` threads
-    /// share the execution pool, each holding one native backend per
-    /// model (prepared plans are shared by `Arc`, so per-worker state is
-    /// just scratch buffers).
+    /// bounded admission queue; one scheduler loop feeds
+    /// `config.workers` threads sharing the execution pool, each holding
+    /// one native backend per model (prepared plans are shared by `Arc`,
+    /// so per-worker state is just scratch buffers). All traffic is one
+    /// request class owning each lane's whole queue; see
+    /// [`Server::start_gateway_with_classes`] for per-class admission.
     pub fn start_gateway(registry: ModelRegistry, config: ServeConfig) -> Result<Self> {
+        let shares = LaneShare::single(config.queue_depth);
+        Self::start_gateway_with_classes(registry, config, shares)
+    }
+
+    /// [`Server::start_gateway`] with per-class admission control: each
+    /// [`LaneShare`] names one request class's scheduling priority and
+    /// its reserved share of every lane's `queue_depth` (see
+    /// `QosPolicy::lane_shares` for deriving shares from a QoS policy).
+    /// Submissions then carry a class index via
+    /// [`Server::try_submit_class`].
+    pub fn start_gateway_with_classes(
+        registry: ModelRegistry,
+        config: ServeConfig,
+        shares: Vec<LaneShare>,
+    ) -> Result<Self> {
         anyhow::ensure!(!registry.is_empty(), "gateway needs at least one model");
         let lanes = registry
             .into_handles()
@@ -378,67 +428,174 @@ impl Server {
                 }
             })
             .collect();
-        Self::spawn_gateway(lanes, &config)
+        Self::spawn_gateway(lanes, &config, shares)
     }
 
-    fn spawn_gateway(specs: Vec<LaneSpec>, config: &ServeConfig) -> Result<Self> {
+    fn validate_shares(shares: &[LaneShare], queue_depth: usize) -> Result<()> {
+        anyhow::ensure!(!shares.is_empty(), "gateway needs at least one request class");
+        anyhow::ensure!(
+            shares.iter().all(|s| s.reserved >= 1),
+            "every request class must reserve at least one queue slot"
+        );
+        let reserved: usize = shares.iter().map(|s| s.reserved).sum();
+        anyhow::ensure!(
+            reserved <= queue_depth,
+            "reserved class shares sum to {reserved}, exceeding queue_depth \
+             {queue_depth} — shares must fit inside the bounded queue"
+        );
+        Ok(())
+    }
+
+    fn spawn_gateway(
+        specs: Vec<LaneSpec>,
+        config: &ServeConfig,
+        shares: Vec<LaneShare>,
+    ) -> Result<Self> {
         config.validate()?;
+        Self::validate_shares(&shares, config.queue_depth)?;
         let n_workers = config.workers;
+        let n_classes = shares.len();
         let queue_depth = config.queue_depth;
         let max_batch = config.max_batch;
         let wait = Duration::from_micros(config.max_wait_us);
 
         // Shared job queue: (lane, batch) pairs. Bounded to the worker
-        // count so a saturated pool *backpressures the batchers* — they
-        // block here, the per-lane admission queues fill, and overflow
-        // is rejected at `submit`. An unbounded job queue would quietly
-        // re-grow the very unbounded buffer admission control removed.
+        // count so a saturated pool *backpressures the scheduler* — it
+        // blocks here, the lane admission queues fill, and overflow is
+        // rejected (or preempted) at submission. An unbounded job queue
+        // would quietly re-grow the very buffer admission control
+        // removed.
         let (job_tx, job_rx) = mpsc::sync_channel::<(usize, Vec<Request>)>(n_workers);
         let job_rx = Arc::new(Mutex::new(job_rx));
 
-        let mut txs = Vec::with_capacity(specs.len());
         let mut lanes = Vec::with_capacity(specs.len());
         let mut by_name = BTreeMap::new();
         let mut threads = Vec::new();
 
-        // One bounded queue + batcher per lane.
         for (idx, spec) in specs.iter().enumerate() {
-            let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
-            let metrics = Arc::new(Metrics::default());
-            let depth = Arc::new(AtomicI64::new(0));
             if by_name.insert(spec.name.clone(), idx).is_some() {
                 anyhow::bail!("duplicate model name '{}'", spec.name);
             }
-            txs.push(tx);
             lanes.push(Lane {
                 name: spec.name.clone(),
                 image_size: spec.image_size,
-                metrics,
-                depth: depth.clone(),
+                metrics: Arc::new(Metrics::with_classes(n_classes)),
+                depth: Arc::new(AtomicI64::new(0)),
                 queue_depth,
             });
-            let jobs = job_tx.clone();
+        }
+
+        let sched = Arc::new(Sched {
+            state: Mutex::new(SchedState {
+                queues: specs
+                    .iter()
+                    .map(|_| ClassQueues::new(queue_depth, &shares))
+                    .collect(),
+                open: true,
+            }),
+            work: Condvar::new(),
+        });
+
+        // The one scheduling loop, whatever the lane count: waits for
+        // work, ages lanes toward ripeness (full batch / expired batch
+        // window / drain), picks the next (lane, batch) by strict class
+        // priority + per-lane deficit round robin, and pushes it at the
+        // worker pool. Exits once the gateway is closed and every lane
+        // has drained.
+        {
+            let sched = sched.clone();
+            let depths: Vec<Arc<AtomicI64>> = lanes.iter().map(|l| l.depth.clone()).collect();
+            let n_lanes = specs.len();
             threads.push(std::thread::spawn(move || {
+                let mut drr = DrrPicker::new(n_lanes, max_batch);
                 loop {
-                    // Backpressure-aware policy: when the admission gauge
-                    // shows a full batch already queued, skip the batch
-                    // window entirely — waiting would only add latency
-                    // while the bounded queue rejects new arrivals.
-                    let saturated = depth.load(Ordering::Relaxed) >= max_batch as i64;
-                    let batch = if saturated {
-                        collect_batch_greedy(&rx, max_batch)
-                    } else {
-                        collect_batch(&rx, max_batch, wait)
+                    let picked = {
+                        let mut st = sched.state.lock().unwrap();
+                        loop {
+                            let now = Instant::now();
+                            let ready: Vec<Option<u32>> = st
+                                .queues
+                                .iter()
+                                .map(|q| {
+                                    if q.is_empty() {
+                                        return None;
+                                    }
+                                    let ripe = !st.open
+                                        || wait.is_zero()
+                                        || q.len() >= max_batch
+                                        || q.fronts()
+                                            .map(|r| r.submitted)
+                                            .min()
+                                            .is_some_and(|t| {
+                                                now.saturating_duration_since(t) >= wait
+                                            });
+                                    if ripe { q.best_priority() } else { None }
+                                })
+                                .collect();
+                            if let Some(lane) = drr.pick(&ready) {
+                                let batch = st.queues[lane].pick(max_batch);
+                                drr.charge(lane, batch.len());
+                                depths[lane].fetch_sub(batch.len() as i64, Ordering::Relaxed);
+                                break Some((lane, batch));
+                            }
+                            if st.queues.iter().all(|q| q.is_empty()) {
+                                if !st.open {
+                                    break None; // drained: shut down
+                                }
+                                st = sched.work.wait(st).unwrap();
+                                continue;
+                            }
+                            // Queued but not ripe: sleep until the
+                            // earliest batch-window deadline, or until a
+                            // submission/shutdown signals sooner.
+                            let timeout = st
+                                .queues
+                                .iter()
+                                .flat_map(|q| q.fronts().map(|r| r.submitted))
+                                .min()
+                                .map(|t| (t + wait).saturating_duration_since(now))
+                                .unwrap_or(wait)
+                                .max(Duration::from_micros(1));
+                            st = sched.work.wait_timeout(st, timeout).unwrap().0;
+                        }
                     };
-                    let Some(batch) = batch else { break };
-                    depth.fetch_sub(batch.len() as i64, Ordering::Relaxed);
-                    if jobs.send((idx, batch)).is_err() {
-                        break;
+                    match picked {
+                        Some((lane, batch)) => {
+                            // Sent outside the lock: a saturated pool
+                            // must backpressure the scheduler, never
+                            // block submissions on the state mutex.
+                            if let Err(failed) = job_tx.send((lane, batch)) {
+                                // The worker pool is gone (a worker
+                                // panicked): close the gateway so new
+                                // submissions fail fast, and answer the
+                                // failed batch plus everything still
+                                // queued — an exited pool must surface
+                                // as errors, never as hung waiters.
+                                let mut st = sched.state.lock().unwrap();
+                                st.open = false;
+                                let (_, unsent) = failed.0;
+                                for req in unsent {
+                                    let _ = req
+                                        .resp
+                                        .send(Err(anyhow!("server worker pool exited")));
+                                }
+                                for (i, q) in st.queues.iter_mut().enumerate() {
+                                    let drained = q.pick(usize::MAX);
+                                    depths[i].fetch_sub(drained.len() as i64, Ordering::Relaxed);
+                                    for req in drained {
+                                        let _ = req
+                                            .resp
+                                            .send(Err(anyhow!("server worker pool exited")));
+                                    }
+                                }
+                                break;
+                            }
+                        }
+                        None => break,
                     }
                 }
             }));
         }
-        drop(job_tx); // workers exit when every batcher has drained
 
         // The shared worker pool: each worker builds one backend per lane
         // on its own thread (PJRT handles are not Send), reports
@@ -502,14 +659,15 @@ impl Server {
         }
         drop(ready_tx);
         // Wait for every worker to come up (or fail). On failure, close
-        // the admission queues so batchers and surviving workers unwind,
+        // the gateway so the scheduler and surviving workers unwind,
         // then join everything — no threads are leaked.
         for _ in 0..n_workers {
             let up = ready_rx
                 .recv()
                 .map_err(|_| anyhow!("server worker died during startup"));
             if let Err(e) = up.and_then(|r| r) {
-                drop(txs);
+                sched.state.lock().unwrap().open = false;
+                sched.work.notify_all();
                 for h in threads {
                     let _ = h.join();
                 }
@@ -517,8 +675,9 @@ impl Server {
             }
         }
         Ok(Self {
-            txs: RwLock::new(Some(txs)),
+            sched,
             lanes,
+            shares,
             by_name,
             threads: Mutex::new(threads),
         })
@@ -527,6 +686,12 @@ impl Server {
     /// Registered model names, in lane order (lane 0 is the default).
     pub fn model_names(&self) -> Vec<&str> {
         self.lanes.iter().map(|l| l.name.as_str()).collect()
+    }
+
+    /// The per-class admission shares this gateway enforces (a single
+    /// whole-queue entry for the classless constructors).
+    pub fn class_shares(&self) -> &[LaneShare] {
+        &self.shares
     }
 
     /// Expected flattened input size for a model.
@@ -541,14 +706,29 @@ impl Server {
             .ok_or_else(|| anyhow!("no model '{model}' (have: {:?})", self.model_names()))
     }
 
-    /// Submit one image to a model without blocking on the result.
-    /// Admission control happens here: a full bounded queue sheds the
-    /// request (`Ok(Submission::Rejected)`, counted in that lane's
-    /// metrics) instead of queueing without bound. Hard failures —
-    /// unknown model, wrong image size, server shut down — are `Err`.
-    /// An `Admitted` submission is guaranteed a response, even across
-    /// [`Server::shutdown`].
+    /// Submit one image to a model as request class 0 — see
+    /// [`Server::try_submit_class`].
     pub fn try_submit(&self, model: &str, image: Vec<f32>) -> Result<Submission> {
+        self.try_submit_class(model, 0, image)
+    }
+
+    /// Submit one image to a model under a request class without
+    /// blocking on the result. Admission control happens here: while the
+    /// lane's bounded queue has space every class is admitted; at the
+    /// bound, an arrival still under its class's reserved share preempts
+    /// the oldest queued request of the least-important over-share class
+    /// (which is answered with an error and counted as preempted), and
+    /// anything else is shed (`Ok(Submission::Rejected)`, counted per
+    /// class). Hard failures — unknown model or class, wrong image size,
+    /// server shutting down — are `Err`. An `Admitted` submission is
+    /// guaranteed a response, even across [`Server::shutdown`]; only a
+    /// later preemption can turn that response into an error.
+    pub fn try_submit_class(
+        &self,
+        model: &str,
+        class: usize,
+        image: Vec<f32>,
+    ) -> Result<Submission> {
         let idx = self.lane_idx(model)?;
         let lane = &self.lanes[idx];
         anyhow::ensure!(
@@ -557,26 +737,48 @@ impl Server {
             image.len(),
             lane.image_size
         );
+        anyhow::ensure!(
+            class < self.shares.len(),
+            "request class {class} out of range ({} classes registered)",
+            self.shares.len()
+        );
         let (resp_tx, resp_rx) = mpsc::channel();
-        let guard = self.txs.read().unwrap();
-        let txs = guard.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
-        // Gauge up before the send so the batcher can never observe a
-        // queued item without a matching increment; undo on rejection.
-        lane.depth.fetch_add(1, Ordering::Relaxed);
-        match txs[idx].try_send(Request {
+        let request = Request {
             image,
             resp: resp_tx,
             submitted: Instant::now(),
-        }) {
-            Ok(()) => Ok(Submission::Admitted(Pending { rx: resp_rx })),
-            Err(TrySendError::Full(_)) => {
-                lane.depth.fetch_sub(1, Ordering::Relaxed);
-                lane.metrics.record_rejected();
+        };
+        let outcome = {
+            let mut st = self.sched.state.lock().unwrap();
+            // A submit racing shutdown's queue close gets a graceful
+            // rejection, never a panic or a dropped response channel.
+            if !st.open {
+                return Err(anyhow!("server is shutting down"));
+            }
+            let outcome = st.queues[idx].admit(class, request);
+            if matches!(outcome, Admit::Admitted) {
+                lane.depth.fetch_add(1, Ordering::Relaxed);
+            }
+            outcome
+        };
+        match outcome {
+            Admit::Admitted => {
+                self.sched.work.notify_one();
+                Ok(Submission::Admitted(Pending { rx: resp_rx }))
+            }
+            Admit::Rejected => {
+                lane.metrics.record_rejected(class);
                 Ok(Submission::Rejected)
             }
-            Err(TrySendError::Disconnected(_)) => {
-                lane.depth.fetch_sub(1, Ordering::Relaxed);
-                Err(anyhow!("server worker exited"))
+            Admit::Preempted { class: victim_class, item } => {
+                // The displaced request was admitted once, so it is
+                // answered — with an error naming why.
+                let _ = item.resp.send(Err(anyhow!(
+                    "preempted by a higher-priority request (per-class admission)"
+                )));
+                lane.metrics.record_preempted(victim_class);
+                self.sched.work.notify_one();
+                Ok(Submission::Admitted(Pending { rx: resp_rx }))
             }
         }
     }
@@ -622,25 +824,33 @@ impl Server {
 
     fn lane_snapshot(lane: &Lane) -> Snapshot {
         let mut s = lane.metrics.snapshot();
-        s.queue = lane.depth.load(Ordering::Relaxed);
+        // Clamped at 0: the gauge is read lock-free, so a reader landing
+        // between a scheduler-side decrement and the submit-side
+        // increment it pairs with must never surface a negative depth.
+        s.queue = lane.depth.load(Ordering::Relaxed).max(0);
         s
     }
 
-    /// Live admitted-but-unbatched depth of one model lane — the
+    /// Live admitted-but-unscheduled depth of one model lane — the
     /// backpressure gauge the QoS controller reads between snapshots.
+    /// Clamped at 0 (see [`Server::model_metrics`]).
     pub fn queue_gauge(&self, model: &str) -> Result<i64> {
-        Ok(self.lanes[self.lane_idx(model)?].depth.load(Ordering::Relaxed))
+        Ok(self.lanes[self.lane_idx(model)?]
+            .depth
+            .load(Ordering::Relaxed)
+            .max(0))
     }
 
     /// Stop accepting requests, drain everything already admitted, and
     /// join all threads. Every request admitted before this call still
     /// receives its response; submissions after it fail cleanly.
     pub fn shutdown(&self) {
-        let handles: Vec<_> = {
-            let mut txs = self.txs.write().unwrap();
-            txs.take(); // close every admission queue
-            self.threads.lock().unwrap().drain(..).collect()
-        };
+        {
+            let mut st = self.sched.state.lock().unwrap();
+            st.open = false;
+        }
+        self.sched.work.notify_all();
+        let handles: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -673,6 +883,7 @@ mod tests {
                 ..Default::default()
             },
         )
+        .unwrap()
     }
 
     fn two_model_gateway(config: ServeConfig) -> Server {
@@ -710,9 +921,38 @@ mod tests {
         let m = server.metrics_snapshot();
         assert_eq!(m.requests, 16);
         assert_eq!(m.rejected, 0);
+        assert_eq!(m.preempted, 0);
         assert!(m.batches <= 16);
         assert!(m.mean_batch() >= 1.0);
         server.shutdown();
+    }
+
+    /// Satellite regression: `start_native` used to `expect(...)` on a
+    /// failed registration probe, panicking the caller. Bad input
+    /// geometry must surface as `Err` like every other constructor
+    /// failure.
+    #[test]
+    fn start_native_reports_bad_dims_as_error_not_panic() {
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        // Wrong channel count for the graph: the registration probe
+        // fails; propagate, don't panic.
+        let r = Server::start_native(graph, Multiplier::Exact, (3, 28, 28), ServeConfig::default());
+        let err = format!("{:#}", r.err().expect("mismatched dims must be an Err"));
+        assert!(
+            err.contains("registering the native model"),
+            "error should name the failing stage: {err}"
+        );
+        // An invalid ServeConfig is also an Err on the same path.
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        assert!(Server::start_native(
+            graph,
+            Multiplier::Exact,
+            (1, 28, 28),
+            ServeConfig { queue_depth: 0, ..Default::default() },
+        )
+        .is_err());
     }
 
     #[test]
@@ -750,6 +990,48 @@ mod tests {
         // The default config stays valid, and validate() is pure.
         assert!(ServeConfig::default().validate().is_ok());
         assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn class_shares_validated_at_construction() {
+        let gateway_with = |shares: Vec<LaneShare>| {
+            let bundle = lenet::random_bundle(1, 28, 42);
+            let graph = lenet::load_graph(&bundle).unwrap();
+            let mut reg = ModelRegistry::new();
+            reg.register("m", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+            Server::start_gateway_with_classes(
+                reg,
+                ServeConfig { queue_depth: 8, ..Default::default() },
+                shares,
+            )
+        };
+        // Shares exceeding the queue depth cannot be honored.
+        assert!(gateway_with(vec![
+            LaneShare { priority: 0, reserved: 6 },
+            LaneShare { priority: 1, reserved: 6 },
+        ])
+        .is_err());
+        // A zero reserved share would make the class unpreemptable prey.
+        assert!(gateway_with(vec![
+            LaneShare { priority: 0, reserved: 0 },
+            LaneShare { priority: 1, reserved: 8 },
+        ])
+        .is_err());
+        assert!(gateway_with(Vec::new()).is_err());
+        // A valid two-class split is accepted and visible.
+        let server = gateway_with(vec![
+            LaneShare { priority: 0, reserved: 2 },
+            LaneShare { priority: 1, reserved: 6 },
+        ])
+        .unwrap();
+        assert_eq!(server.class_shares().len(), 2);
+        // Class indices outside the share table are hard errors.
+        assert!(server.try_submit_class("m", 2, vec![0.0; 28 * 28]).is_err());
+        assert!(matches!(
+            server.try_submit_class("m", 1, vec![0.0; 28 * 28]),
+            Ok(Submission::Admitted(_))
+        ));
+        server.shutdown();
     }
 
     #[test]
@@ -818,7 +1100,7 @@ mod tests {
     #[test]
     fn start_native_fans_out_across_workers() {
         // One graph, prepared once, shared by 3 workers pulling from the
-        // common batch queue.
+        // common batch queue fed by the single scheduler.
         let bundle = lenet::random_bundle(1, 28, 42);
         let graph = lenet::load_graph(&bundle).unwrap();
         let server = Server::start_native(
@@ -831,7 +1113,8 @@ mod tests {
                 workers: 3,
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let preds: Vec<usize> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..12)
                 .map(|i| {
@@ -927,7 +1210,8 @@ mod tests {
                 workers: 1,
                 queue_depth: 2,
             },
-        );
+        )
+        .unwrap();
         let mut pending = Vec::new();
         let mut rejected = 0usize;
         for _ in 0..64 {
@@ -943,6 +1227,8 @@ mod tests {
         let m = server.metrics_snapshot();
         assert_eq!(m.requests as usize, admitted);
         assert_eq!(m.rejected as usize, rejected);
+        // A classless gateway has nothing to preempt.
+        assert_eq!(m.preempted, 0);
         assert!(
             rejected > 0,
             "64 instant submissions into a depth-2 queue must overflow"

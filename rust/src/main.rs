@@ -416,7 +416,12 @@ fn serve(argv: &[String]) -> Result<()> {
                 ..Default::default()
             },
         };
-        let server = Arc::new(Server::start_gateway(registry, config)?);
+        // Per-class admission: each class reserves a weight-proportional
+        // share of every lane's bounded queue, and high-priority
+        // arrivals may preempt over-share low-priority queued requests.
+        let shares = policy.lane_shares(config.queue_depth)?;
+        print_shares(&policy, &shares, config.queue_depth);
+        let server = Arc::new(Server::start_gateway_with_classes(registry, config, shares)?);
         let router = Arc::new(QosRouter::new(family, policy)?);
         let live = qos::spawn_live(router.clone(), server.clone())?;
         let report = heam::coordinator::drive_demo_qos(&server, &router, &ds, n)?;
@@ -438,7 +443,7 @@ fn serve(argv: &[String]) -> Result<()> {
             Multiplier::Lut(Arc::new(lut)),
             (ds.channels, ds.height, ds.width),
             config,
-        )
+        )?
     } else {
         Server::start(args.get("model"), Arc::new(lut), config)
             .context("starting PJRT server (hint: pass --native for the in-process engine)")?
@@ -561,6 +566,24 @@ fn loadgen(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Echo the per-class admission shares a QoS gateway will enforce.
+fn print_shares(
+    policy: &heam::coordinator::qos::QosPolicy,
+    shares: &[heam::coordinator::batcher::LaneShare],
+    queue_depth: usize,
+) {
+    let parts: Vec<String> = policy
+        .classes
+        .iter()
+        .zip(shares)
+        .map(|(c, s)| format!("{}={}", c.name, s.reserved))
+        .collect();
+    println!(
+        "per-class admission shares (of each lane's queue_depth {queue_depth}): [{}]",
+        parts.join(", ")
+    );
+}
+
 /// Shared by `serve --qos-policy` and `loadgen --classes`: parse a
 /// `--family` list (zoo names or LUT paths), register every variant as
 /// one accuracy-ordered family, and echo the resulting tier order.
@@ -609,28 +632,29 @@ fn loadgen_qos(args: &Args) -> Result<()> {
         }
     };
     let (registry, family) = register_family_arg(args.get("family"), &graph, dims)?;
-    let server = Server::start_gateway(
-        registry,
-        ServeConfig {
-            max_batch: args.get_as("batch")?,
-            max_wait_us: args.get_as("wait-us")?,
-            workers: args.get_as("workers")?,
-            queue_depth: args.get_as("queue-depth")?,
-        },
-    )?;
+    let config = ServeConfig {
+        max_batch: args.get_as("batch")?,
+        max_wait_us: args.get_as("wait-us")?,
+        workers: args.get_as("workers")?,
+        queue_depth: args.get_as("queue-depth")?,
+    };
     let interval_ms: u64 = args.get_as("qos-interval-ms")?;
-    let router = QosRouter::new(
-        family,
-        QosPolicy {
-            classes,
-            // A zero interval is rejected by the policy validation in
-            // QosRouter::new — no silent clamping.
-            ctl: ControllerConfig {
-                interval_us: interval_ms * 1000,
-                ..Default::default()
-            },
+    let policy = QosPolicy {
+        classes,
+        // A zero interval is rejected by the policy validation in
+        // QosRouter::new — no silent clamping.
+        ctl: ControllerConfig {
+            interval_us: interval_ms * 1000,
+            ..Default::default()
         },
-    )?;
+    };
+    // Class-aware admission on the real gateway: weight-proportional
+    // reserved queue shares with priority preemption, mirrored by the
+    // replay harness's virtual class queues over --sim-queue-depth.
+    let shares = policy.lane_shares(config.queue_depth)?;
+    print_shares(&policy, &shares, config.queue_depth);
+    let server = Server::start_gateway_with_classes(registry, config, shares)?;
+    let router = QosRouter::new(family, policy)?;
     let burst_period: u64 = args.get_as("burst-period-ms")?;
     let cfg = QosRunConfig {
         seed: args.get_as("seed")?,

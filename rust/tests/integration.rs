@@ -182,7 +182,8 @@ fn coordinator_request_response_invariant() {
                 workers: 1,
                 ..Default::default()
             },
-        );
+        )
+        .expect("native server construction");
         let preds: Vec<usize> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..n_req)
                 .map(|i| {

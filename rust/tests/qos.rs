@@ -68,16 +68,16 @@ fn family_gateway(workers: usize) -> (Server, QosRouter) {
         )
         .unwrap();
     assert_eq!(family.variant(0).name, "exact", "exact must anchor tier 0");
-    let server = Server::start_gateway(
-        reg,
-        ServeConfig {
-            max_batch: 8,
-            max_wait_us: 500,
-            workers,
-            queue_depth: 64,
-        },
-    )
-    .unwrap();
+    let config = ServeConfig {
+        max_batch: 8,
+        max_wait_us: 500,
+        workers,
+        queue_depth: 64,
+    };
+    // Class-aware admission: router submissions carry the class index,
+    // so the gateway needs the policy's per-class queue shares.
+    let shares = policy().lane_shares(config.queue_depth).unwrap();
+    let server = Server::start_gateway_with_classes(reg, config, shares).unwrap();
     let router = QosRouter::new(family, policy()).unwrap();
     (server, router)
 }
@@ -144,13 +144,18 @@ fn burst_shifts_low_priority_to_approximate_and_restores() {
 }
 
 /// Satellite: fixed seed + fixed trace => byte-identical decision trace
-/// and split history at any worker count. Real latencies and rejection
-/// counts are timing-dependent and excluded; everything on the
-/// deterministic `qos trace` line must match exactly.
+/// and split history at any worker count — and, since PR 5, a
+/// byte-identical `sched trace` line too: the scheduler's virtual
+/// class-queue ledger (reserved shares, preemptions, sheds) is driven
+/// from the same deterministic lane model, so real worker scheduling
+/// cannot leak into it. Real latencies and rejection counts are
+/// timing-dependent and excluded; everything on the two deterministic
+/// lines must match exactly.
 #[test]
 fn decision_trace_is_byte_identical_at_any_worker_count() {
     let cfg = burst_cfg(1500, 8000.0, 6.0, 60);
     let mut lines = Vec::new();
+    let mut sched_lines = Vec::new();
     let mut histories = Vec::new();
     let mut routings = Vec::new();
     for workers in [1usize, 2, 4] {
@@ -162,6 +167,7 @@ fn decision_trace_is_byte_identical_at_any_worker_count() {
             "scenario must exercise the controller to make the comparison meaningful"
         );
         lines.push(report.trace_line());
+        sched_lines.push(report.sched_line());
         histories.push(report.split_history.clone());
         routings.push(
             report
@@ -170,9 +176,18 @@ fn decision_trace_is_byte_identical_at_any_worker_count() {
                 .map(|c| (c.submitted, c.served_by_tier.clone(), c.burst_approx))
                 .collect::<Vec<_>>(),
         );
+        // The virtual class queues mirror the policy's share split of
+        // the sim queue depth.
+        assert_eq!(
+            report.reserved.iter().sum::<u64>(),
+            cfg.sim.queue_depth,
+            "shares must partition the virtual queue bound exactly"
+        );
     }
     assert_eq!(lines[0], lines[1], "1 vs 2 workers");
     assert_eq!(lines[0], lines[2], "1 vs 4 workers");
+    assert_eq!(sched_lines[0], sched_lines[1], "sched trace, 1 vs 2 workers");
+    assert_eq!(sched_lines[0], sched_lines[2], "sched trace, 1 vs 4 workers");
     assert_eq!(histories[0], histories[1]);
     assert_eq!(histories[0], histories[2]);
     assert_eq!(routings[0], routings[1]);
@@ -229,13 +244,18 @@ fn report_json_carries_the_qos_fields() {
         "decisions",
         "levels_final",
         "restore_tick",
+        "sched",
     ] {
         assert!(json.get(key).is_some(), "BENCH_qos.json must carry '{key}'");
+    }
+    let sched = json.get("sched").unwrap();
+    for key in ["reserved", "sim_preempted", "sim_shed"] {
+        assert!(sched.get(key).is_some(), "sched entry must carry '{key}'");
     }
     let classes = json.get("classes").unwrap().as_arr().unwrap();
     assert_eq!(classes.len(), 2);
     for c in classes {
-        for key in ["name", "served_by_tier", "burst_approx_fraction", "p99_us"] {
+        for key in ["name", "served_by_tier", "burst_approx_fraction", "preempted", "p99_us"] {
             assert!(c.get(key).is_some(), "class entry must carry '{key}'");
         }
     }

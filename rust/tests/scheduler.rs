@@ -1,0 +1,264 @@
+//! Shared-scheduler integration suite: per-class admission control with
+//! preemption on a real gateway, the submit-vs-shutdown race, and
+//! multi-lane service under the single scheduling loop. The exact
+//! preemption arithmetic ("a saturated low-priority queue sheds
+//! precisely its over-share") is pinned deterministically in
+//! `coordinator::batcher`'s unit tests; these tests pin the end-to-end
+//! invariants that survive real thread timing.
+
+use std::sync::Arc;
+
+use heam::coordinator::batcher::LaneShare;
+use heam::coordinator::registry::ModelRegistry;
+use heam::coordinator::server::{Pending, ServeConfig, Server, Submission};
+use heam::mult::MultKind;
+use heam::nn::lenet;
+use heam::nn::multiplier::Multiplier;
+
+fn one_model_gateway(config: ServeConfig, shares: Vec<LaneShare>) -> Server {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    let graph = lenet::load_graph(&bundle).unwrap();
+    let mut reg = ModelRegistry::new();
+    reg.register("m", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+    Server::start_gateway_with_classes(reg, config, shares).unwrap()
+}
+
+/// Preemption on a live gateway: flood the lane with low-priority
+/// traffic until its bounded queue is full, then land high-priority
+/// arrivals. Invariants (robust to worker timing):
+///
+/// * some low-priority queued requests are preempted, and every failed
+///   wait is exactly one counted preemption (nothing else can fail);
+/// * the highest-priority class is never preempted — each of its
+///   admitted requests completes;
+/// * the client-side ledger balances: completed + rejected + failed
+///   equals submissions.
+#[test]
+fn high_priority_arrivals_preempt_saturated_low_priority_queue() {
+    let server = one_model_gateway(
+        ServeConfig {
+            max_batch: 1,
+            max_wait_us: 200,
+            workers: 1,
+            queue_depth: 8,
+        },
+        vec![
+            LaneShare { priority: 0, reserved: 6 }, // hi
+            LaneShare { priority: 1, reserved: 2 }, // lo
+        ],
+    );
+    let img = || vec![0.4f32; 28 * 28];
+    let mut lo_pending: Vec<Pending> = Vec::new();
+    let mut hi_pending: Vec<Pending> = Vec::new();
+    let mut rejected = 0usize;
+    // Tight flood: the single worker needs ~ms per request, the flood
+    // takes ~µs, so the queue is saturated with `lo` when `hi` lands.
+    for _ in 0..60 {
+        match server.try_submit_class("m", 1, img()).unwrap() {
+            Submission::Admitted(p) => lo_pending.push(p),
+            Submission::Rejected => rejected += 1,
+        }
+    }
+    for _ in 0..8 {
+        match server.try_submit_class("m", 0, img()).unwrap() {
+            Submission::Admitted(p) => hi_pending.push(p),
+            Submission::Rejected => rejected += 1,
+        }
+    }
+    let submitted = 68usize;
+    let lo_admitted = lo_pending.len();
+    let hi_admitted = hi_pending.len();
+    assert!(hi_admitted >= 1, "hi must get in, by free slot or preemption");
+    // hi is the most important class: none of its admitted requests can
+    // be preempted, so all must complete.
+    let mut completed = hi_admitted;
+    for p in hi_pending {
+        p.wait().expect("admitted hi request must never be preempted");
+    }
+    let mut failed = 0usize;
+    for p in lo_pending {
+        match p.wait() {
+            Ok(_) => completed += 1,
+            Err(e) => {
+                failed += 1;
+                assert!(
+                    format!("{e:#}").contains("preempted"),
+                    "the only post-admission failure is preemption: {e:#}"
+                );
+            }
+        }
+    }
+    assert_eq!(completed + rejected + failed, submitted, "ledger must balance");
+    let m = server.metrics_snapshot();
+    assert!(m.preempted >= 1, "a saturated lo queue must be preempted by hi");
+    assert_eq!(m.preempted as usize, failed, "every failed wait is one preemption");
+    assert_eq!(m.rejected as usize, rejected);
+    assert_eq!(m.requests as usize, completed);
+    // Per-class attribution: only `lo` (class 1) was preempted, and the
+    // class splits sum to the totals.
+    assert_eq!(m.class_preempted.len(), 2);
+    assert_eq!(m.class_preempted[0], 0, "the top class is never a victim");
+    assert_eq!(m.class_preempted[1], m.preempted);
+    assert_eq!(m.class_rejected.iter().sum::<u64>(), m.rejected);
+    assert!(lo_admitted >= failed, "preempted requests were admitted first");
+    server.shutdown();
+}
+
+/// Satellite regression: a submit racing `shutdown()` must fail with a
+/// graceful "shutting down" error (or land and be drained) — before
+/// PR 5 the submit path could hit a closed channel. Several rounds with
+/// different shutdown timings; every admitted request must be answered,
+/// every error must be the graceful one, and nothing may panic or hang.
+#[test]
+fn submit_racing_shutdown_is_graceful() {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    for round in 0..6u64 {
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.register("exact", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+        reg.register(
+            "heam",
+            &graph,
+            &Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+            (1, 28, 28),
+        )
+        .unwrap();
+        let server = Server::start_gateway(
+            reg,
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 500,
+                workers: 2,
+                queue_depth: 32,
+            },
+        )
+        .unwrap();
+        let names = ["exact", "heam"];
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|c| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let mut pending = Vec::new();
+                        for i in 0..40 {
+                            let img = vec![((c + i) % 9) as f32 * 0.1; 28 * 28];
+                            match server.try_submit(names[(c + i) % 2], img) {
+                                Ok(Submission::Admitted(p)) => pending.push(p),
+                                Ok(Submission::Rejected) => {}
+                                Err(e) => {
+                                    // The race must fail gracefully and
+                                    // descriptively — never panic.
+                                    assert!(
+                                        format!("{e:#}").contains("shutting down"),
+                                        "unexpected submit error: {e:#}"
+                                    );
+                                }
+                            }
+                        }
+                        // Every admitted request is answered across the
+                        // shutdown (the drain guarantee) — a hang here
+                        // fails the test via the harness timeout.
+                        for p in pending {
+                            p.wait().expect("admitted request must be drained");
+                        }
+                    })
+                })
+                .collect();
+            // Vary where the shutdown lands inside the submit storm.
+            std::thread::sleep(std::time::Duration::from_micros(200 * round));
+            server.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // Post-shutdown submissions keep failing gracefully.
+        let err = server.try_submit("exact", vec![0.0; 28 * 28]).unwrap_err();
+        assert!(format!("{err:#}").contains("shutting down"));
+    }
+}
+
+/// One scheduling loop, many lanes: blocking clients hammer four model
+/// lanes of one gateway at once; the deficit-round-robin pick must keep
+/// every lane served (no starvation), with each lane's metrics seeing
+/// exactly its own traffic.
+#[test]
+fn single_scheduler_serves_many_lanes_without_starvation() {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    let graph = lenet::load_graph(&bundle).unwrap();
+    let mut reg = ModelRegistry::new();
+    let muls: Vec<(String, Multiplier)> = vec![
+        ("exact".into(), Multiplier::Exact),
+        ("heam".into(), Multiplier::Lut(Arc::new(MultKind::Heam.lut()))),
+        ("ou3".into(), Multiplier::Lut(Arc::new(MultKind::OuL3.lut()))),
+        ("wallace".into(), Multiplier::Lut(Arc::new(MultKind::Wallace.lut()))),
+    ];
+    for (name, mul) in &muls {
+        reg.register(name, &graph, mul, (1, 28, 28)).unwrap();
+    }
+    let server = Server::start_gateway(
+        reg,
+        ServeConfig {
+            max_batch: 4,
+            max_wait_us: 500,
+            workers: 2,
+            queue_depth: 64,
+        },
+    )
+    .unwrap();
+    let per_lane = 12usize;
+    std::thread::scope(|s| {
+        for (name, _) in &muls {
+            for i in 0..per_lane {
+                let server = &server;
+                let name = name.as_str();
+                s.spawn(move || {
+                    let img = vec![(i % 7) as f32 * 0.11; 28 * 28];
+                    server.classify_model(name, img).unwrap();
+                });
+            }
+        }
+    });
+    for (name, _) in &muls {
+        let m = server.model_metrics(name).unwrap();
+        assert_eq!(
+            m.requests as usize, per_lane,
+            "lane {name} must serve exactly its own traffic"
+        );
+        assert_eq!(m.rejected, 0);
+    }
+    assert_eq!(server.metrics_snapshot().requests as usize, per_lane * muls.len());
+    server.shutdown();
+}
+
+/// Classes are an admission concept, not a routing one: with headroom in
+/// the queue, every class is served identically on the same lane.
+#[test]
+fn classes_share_the_lane_freely_under_headroom() {
+    let server = one_model_gateway(
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 500,
+            workers: 1,
+            queue_depth: 16,
+        },
+        vec![
+            LaneShare { priority: 0, reserved: 4 },
+            LaneShare { priority: 1, reserved: 12 },
+        ],
+    );
+    let mut pending = Vec::new();
+    for i in 0..12 {
+        match server.try_submit_class("m", i % 2, vec![0.3; 28 * 28]).unwrap() {
+            Submission::Admitted(p) => pending.push(p),
+            Submission::Rejected => panic!("a 16-deep queue must admit 12 requests"),
+        }
+    }
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let m = server.metrics_snapshot();
+    assert_eq!(m.requests, 12);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.preempted, 0, "no contention, no preemption");
+    server.shutdown();
+}

@@ -111,7 +111,7 @@ fn metrics_concurrent_updates_are_lossless() {
                     m.record_request(latency);
                     m.record_batch(3, 10);
                     if i % 4 == 0 {
-                        m.record_rejected();
+                        m.record_rejected(0);
                     }
                 }
             });
@@ -129,6 +129,61 @@ fn metrics_concurrent_updates_are_lossless() {
         total,
         "histogram must hold every recorded request"
     );
+    assert!(s.queue >= 0, "snapshot gauge must never be negative: {}", s.queue);
+    assert_eq!(s.class_rejected.iter().sum::<u64>(), s.rejected);
+}
+
+/// Satellite regression: the lane queue gauge is read lock-free while
+/// the scheduler decrements and submitters increment it — a sampler
+/// racing those updates must never observe a negative depth (the server
+/// clamps at 0 in `lane_snapshot` / `queue_gauge`).
+#[test]
+fn queue_gauge_never_negative_under_concurrent_load() {
+    let server = two_model_gateway(ServeConfig {
+        max_batch: 2,
+        max_wait_us: 100,
+        workers: 2,
+        queue_depth: 8,
+    });
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let stop = &stop;
+        let sampler = {
+            let server = &server;
+            s.spawn(move || {
+                let mut samples = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    for model in ["exact", "heam"] {
+                        let g = server.queue_gauge(model).unwrap();
+                        assert!(g >= 0, "queue gauge went negative: {g}");
+                        let q = server.model_metrics(model).unwrap().queue;
+                        assert!(q >= 0, "snapshot queue went negative: {q}");
+                        samples += 1;
+                    }
+                }
+                samples
+            })
+        };
+        let names = ["exact", "heam"];
+        let handles: Vec<_> = (0..4)
+            .map(|c| {
+                let server = &server;
+                s.spawn(move || {
+                    for i in 0..32 {
+                        let img = vec![((c + i) % 9) as f32 * 0.1; 28 * 28];
+                        // Shedding is fine; panics are not.
+                        let _ = server.try_submit(names[(c + i) % 2], img);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        assert!(sampler.join().unwrap() > 0, "sampler must have raced the load");
+    });
+    server.shutdown();
 }
 
 /// The acceptance soak: saturating open-loop load against small bounded

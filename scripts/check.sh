@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
 #
-#   scripts/check.sh            # rust build + rust tests + loadgen/qos smokes + python tests
-#   scripts/check.sh --rust     # rust only (includes both smokes)
+#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched smokes + python tests
+#   scripts/check.sh --rust     # rust only (includes all three smokes)
 #   scripts/check.sh --python   # python only
 #   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
 #   scripts/check.sh --qos      # QoS routing smoke only (builds if needed)
+#   scripts/check.sh --sched    # shared-scheduler smoke only (builds if needed)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,13 +14,15 @@ run_rust=1
 run_python=1
 run_loadgen=1
 run_qos=1
+run_sched=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0; run_loadgen=0; run_qos=0 ;;
-  --loadgen) run_rust=0; run_python=0; run_qos=0 ;;
-  --qos) run_rust=0; run_python=0; run_loadgen=0 ;;
+  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0 ;;
+  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0 ;;
+  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0 ;;
+  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched]" >&2; exit 2 ;;
 esac
 
 # Deterministic serving smoke: a short fixed-seed open-loop soak, run
@@ -100,6 +103,45 @@ qos_smoke() {
   echo "qos smoke OK: $line_a"
 }
 
+# Fixed-seed shared-scheduler smoke: the same saturating class-trace
+# replay, but the diffed artifact is the `sched trace` line — the
+# deterministic per-class ledger of the scheduler's virtual class queues
+# (reserved shares, priority preemptions, overflow sheds) under one FNV
+# fingerprint. The tight virtual queue bound (--sim-queue-depth 256
+# against a 10x burst) guarantees the preemption path actually runs, so
+# the smoke also greps that the low-priority class was preempted or shed
+# at least once.
+sched_smoke() {
+  echo "== shared-scheduler smoke =="
+  local bin=target/release/heam
+  cargo build --release
+  local classes='hi:prio=0,p99_ms=25,tier=0,weight=1;lo:prio=1,p99_ms=60,tier=2,weight=3'
+  local out_a out_b
+  out_a=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 11 --requests 8000 --rate 2000 \
+          --burst-period-ms 60000 --burst-ms 300 --burst-factor 10 \
+          --qos-interval-ms 20 --sim-queue-depth 256 --out /tmp/heam_sched_a.json)
+  out_b=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 11 --requests 8000 --rate 2000 \
+          --burst-period-ms 60000 --burst-ms 300 --burst-factor 10 \
+          --qos-interval-ms 20 --sim-queue-depth 256 --out /tmp/heam_sched_b.json)
+  local line_a line_b
+  line_a=$(printf '%s\n' "$out_a" | grep '^sched trace')
+  line_b=$(printf '%s\n' "$out_b" | grep '^sched trace')
+  if [ "$line_a" != "$line_b" ]; then
+    echo "!! scheduler traces diverged across identical seeds:" >&2
+    echo "   run A: $line_a" >&2
+    echo "   run B: $line_b" >&2
+    exit 1
+  fi
+  if printf '%s\n' "$line_a" | grep -q 'preempted \[hi=0, lo=0\] shed \[hi=0, lo=0\]'; then
+    echo "!! sched smoke exercised neither preemption nor shedding:" >&2
+    echo "   $line_a" >&2
+    exit 1
+  fi
+  echo "sched smoke OK: $line_a"
+}
+
 skipped=""
 if [ "$run_rust" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
@@ -112,6 +154,7 @@ if [ "$run_rust" = 1 ]; then
     skipped="rust"
     run_loadgen=0
     run_qos=0
+    run_sched=0
   fi
 fi
 
@@ -130,6 +173,15 @@ if [ "$run_qos" = 1 ]; then
   else
     echo "!! cargo not found — qos smoke skipped" >&2
     skipped="${skipped:+$skipped,}qos"
+  fi
+fi
+
+if [ "$run_sched" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    sched_smoke
+  else
+    echo "!! cargo not found — sched smoke skipped" >&2
+    skipped="${skipped:+$skipped,}sched"
   fi
 fi
 

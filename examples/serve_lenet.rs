@@ -124,6 +124,7 @@ fn main() -> anyhow::Result<()> {
             max_wait_us: 2000,
             workers,
             queue_depth: 64,
+            ..Default::default()
         },
     )?;
     let report = loadgen::run(
@@ -134,6 +135,7 @@ fn main() -> anyhow::Result<()> {
             mode: Mode::Open { rate_rps: 2000.0 },
             mix: vec![("exact".to_string(), 1.0), ("heam".to_string(), 1.0)],
             burst: None,
+            retry: None,
         },
     )?;
     gateway.shutdown();

@@ -83,6 +83,7 @@ fn gateway_and_router() -> (Server, QosRouter) {
         max_wait_us: 1000,
         workers: 2,
         queue_depth: 64,
+        ..Default::default()
     };
     // Router submissions carry the class index; give the gateway the
     // policy's per-class reserved queue shares.
@@ -103,6 +104,7 @@ fn burst_cfg() -> QosRunConfig {
             factor: 10.0,
         }),
         sim: SimConfig::default(),
+        fault: None,
     }
 }
 
@@ -121,6 +123,7 @@ fn main() {
                 rate_rps: 2000.0,
                 burst: None,
                 sim: SimConfig::default(),
+                fault: None,
             },
         )
         .unwrap();

@@ -52,6 +52,7 @@ fn gateway(queue_depth: usize, workers: usize) -> Server {
             max_wait_us: 1000,
             workers,
             queue_depth,
+            ..Default::default()
         },
     )
     .unwrap()
@@ -75,6 +76,7 @@ fn main() {
                 mode: Mode::Open { rate_rps: 1500.0 },
                 mix: mix(),
                 burst: None,
+                retry: None,
             },
         )
         .unwrap();
@@ -100,6 +102,7 @@ fn main() {
                     burst_ms: 20,
                     factor: 4.0,
                 }),
+                retry: None,
             },
         )
         .unwrap();
@@ -124,6 +127,7 @@ fn main() {
                 mode: Mode::Closed { clients: 8 },
                 mix: mix(),
                 burst: None,
+                retry: None,
             },
         )
         .unwrap();
@@ -158,6 +162,7 @@ fn main() {
                 max_wait_us: 1000,
                 workers: 2,
                 queue_depth: 256,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -169,6 +174,7 @@ fn main() {
                 mode: Mode::Open { rate_rps: 1500.0 },
                 mix: four.iter().map(|(n, _)| (n.to_string(), 1.0)).collect(),
                 burst: None,
+                retry: None,
             },
         )
         .unwrap();

@@ -162,6 +162,28 @@ impl<T> ClassQueues<T> {
     pub fn fronts(&self) -> impl Iterator<Item = &T> {
         self.queues.iter().filter_map(|q| q.front())
     }
+
+    /// Remove every queued item matching `expired` and hand each back
+    /// with its class — the scheduler's deadline sweep: dead requests
+    /// are answered at batch-collection time instead of wasting a
+    /// worker's batch slot. FIFO order within each class is preserved
+    /// for the survivors.
+    pub fn sweep(&mut self, mut expired: impl FnMut(&T) -> bool) -> Vec<(usize, T)> {
+        let mut removed = Vec::new();
+        for (class, q) in self.queues.iter_mut().enumerate() {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for item in q.drain(..) {
+                if expired(&item) {
+                    removed.push((class, item));
+                } else {
+                    kept.push_back(item);
+                }
+            }
+            *q = kept;
+        }
+        self.len -= removed.len();
+        removed
+    }
 }
 
 /// Deficit-round-robin lane selector under strict class priority.
@@ -347,6 +369,33 @@ mod tests {
         assert_eq!(q.best_priority(), Some(0));
         let fronts: Vec<i32> = q.fronts().copied().collect();
         assert_eq!(fronts, vec![1, 3, 2], "one front per non-empty class");
+    }
+
+    #[test]
+    fn sweep_removes_expired_items_and_keeps_fifo_order() {
+        let mut q = ClassQueues::new(8, &shares(&[(0, 4), (1, 4)]));
+        q.admit(0, 10);
+        q.admit(0, 11);
+        q.admit(1, 20);
+        q.admit(1, 21);
+        q.admit(1, 22);
+        // "Expired" = even items, across both classes.
+        let dead = q.sweep(|&item| item % 2 == 0);
+        assert_eq!(dead, vec![(0, 10), (1, 20), (1, 22)]);
+        assert_eq!(q.len(), 2, "sweep must maintain the shared length");
+        assert_eq!(q.class_len(0), 1);
+        assert_eq!(q.class_len(1), 1);
+        // Survivors keep their order and remain pickable.
+        assert_eq!(q.pick(8), vec![11, 21]);
+        assert!(q.is_empty());
+        // Sweeping an empty queue is a no-op.
+        assert!(q.sweep(|_| true).is_empty());
+        // After a sweep the freed slots admit new arrivals again.
+        for i in 0..8 {
+            assert!(matches!(q.admit(i % 2, i), Admit::Admitted));
+        }
+        assert_eq!(q.sweep(|_| true).len(), 8);
+        assert_eq!(q.len(), 0);
     }
 
     #[test]

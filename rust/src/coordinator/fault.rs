@@ -1,0 +1,647 @@
+//! Seeded fault injection and variant health tracking — the chaos half
+//! of the serving gateway's failure-containment story.
+//!
+//! A [`FaultPlan`] is a *pre-drawn*, bounded schedule of faults: worker
+//! panics, stragglers (slow batches), poisoned variant outputs, and
+//! transient admission errors. Everything is drawn up front from a
+//! seeded [`Rng`](crate::util::prng::Rng), so a plan is a pure function
+//! of its [`FaultSpec`] — two processes with the same spec inject the
+//! identical storm, and `scripts/check.sh --chaos` can diff the
+//! resulting `fault trace` line across runs just like the existing
+//! `qos trace` / `sched trace` smokes. The schedule is *bounded*: once
+//! a sequence is exhausted every further draw is a no-fault, which is
+//! what makes "service recovers after the fault window" a provable
+//! invariant rather than a probabilistic one.
+//!
+//! The plan is consumed two ways:
+//!
+//! * **live** — a [`FaultInjector`] shared with the worker pool and the
+//!   admission path hands out the next scheduled fault per execution /
+//!   per submission (lock-free sequence counters). Live faults exercise
+//!   the real containment code (supervision, respawn, typed errors) and
+//!   surface only in *measured* metrics, never in the deterministic
+//!   trace lines;
+//! * **virtual** — the replay harness overlays the plan's
+//!   [`VirtualFault`] events onto the deterministic lane model's
+//!   observations, driving the [`HealthBoard`] circuit breaker in
+//!   virtual time. Every breaker transition is then a pure function of
+//!   (spec, trace, policy, sim) — byte-identical at any worker count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::hash::fnv1a_u64;
+use crate::util::prng::Rng;
+
+/// One scheduled worker-side fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker panics mid-batch (supervision must respawn it and
+    /// answer the batch with a typed `WorkerFailed`).
+    Panic,
+    /// The batch straggles: execution is delayed by
+    /// [`FaultSpec::straggle_us`] before proceeding normally.
+    Straggle,
+    /// The variant output is poisoned: execution fails with an error
+    /// instead of a prediction.
+    Poison,
+}
+
+impl FaultKind {
+    fn code(self) -> u64 {
+        match self {
+            FaultKind::Panic => 1,
+            FaultKind::Straggle => 2,
+            FaultKind::Poison => 3,
+        }
+    }
+}
+
+/// The seeded shape of a fault storm. All rates are per-mille of the
+/// respective injection points; the storm is bounded by `points` /
+/// `admit_points` / `window_ticks`, after which no further faults fire.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub seed: u64,
+    /// Worker-side injection points (one draw per executed batch).
+    pub points: usize,
+    /// Per-mille of exec points that panic / straggle / poison.
+    pub panic_milli: u32,
+    pub straggle_milli: u32,
+    pub poison_milli: u32,
+    /// Injected straggler delay, µs.
+    pub straggle_us: u64,
+    /// Per-mille of admission points that fail with a transient error.
+    pub admit_milli: u32,
+    /// Admission-side injection points (one draw per submission).
+    pub admit_points: usize,
+    /// Virtual fault window for the replay overlay, in controller ticks.
+    pub window_ticks: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            seed: 13,
+            points: 24,
+            panic_milli: 250,
+            straggle_milli: 250,
+            poison_milli: 150,
+            straggle_us: 20_000,
+            admit_milli: 100,
+            admit_points: 64,
+            window_ticks: 8,
+        }
+    }
+}
+
+impl FaultSpec {
+    pub fn validate(&self) -> Result<()> {
+        for (label, milli) in [
+            ("panic", self.panic_milli),
+            ("straggle", self.straggle_milli),
+            ("poison", self.poison_milli),
+            ("admit", self.admit_milli),
+        ] {
+            anyhow::ensure!(milli <= 1000, "fault {label} rate must be <= 1000 per mille");
+        }
+        anyhow::ensure!(
+            self.panic_milli + self.straggle_milli + self.poison_milli <= 1000,
+            "exec fault rates must sum to <= 1000 per mille"
+        );
+        anyhow::ensure!(self.window_ticks >= 1, "fault window_ticks must be >= 1");
+        Ok(())
+    }
+
+    /// Parse a `--fault-plan` flag: a `key=value` list, e.g.
+    /// `seed=13,points=24,panic=250,straggle=250,straggle-us=20000,poison=150,admit=100,admit-points=64,window-ticks=8`.
+    /// Unspecified keys keep their defaults.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut out = Self::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("fault plan entry '{part}' is not key=value"))?;
+            let parse_u64 =
+                |v: &str| v.parse::<u64>().with_context(|| format!("fault plan '{key}={v}'"));
+            match key.trim() {
+                "seed" => out.seed = parse_u64(value)?,
+                "points" => out.points = parse_u64(value)? as usize,
+                "panic" => out.panic_milli = parse_u64(value)? as u32,
+                "straggle" => out.straggle_milli = parse_u64(value)? as u32,
+                "poison" => out.poison_milli = parse_u64(value)? as u32,
+                "straggle-us" => out.straggle_us = parse_u64(value)?,
+                "admit" => out.admit_milli = parse_u64(value)? as u32,
+                "admit-points" => out.admit_points = parse_u64(value)? as usize,
+                "window-ticks" => out.window_ticks = parse_u64(value)?,
+                other => bail!(
+                    "unknown fault plan key '{other}' (seed, points, panic, straggle, \
+                     poison, straggle-us, admit, admit-points, window-ticks)"
+                ),
+            }
+        }
+        out.validate()?;
+        Ok(out)
+    }
+}
+
+/// One virtual fault event for the replay overlay: synthetic failure /
+/// straggler counts added to tier `tier`'s observation at tick `tick`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VirtualFault {
+    pub tick: u64,
+    pub tier: usize,
+    pub failed: u64,
+    pub stragglers: u64,
+}
+
+/// A fully drawn fault schedule — pure data, a deterministic function
+/// of (spec, tiers).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+    /// Per-execution fault draws; `None` = execute normally. Draws past
+    /// the end are no-faults (the storm is bounded).
+    pub exec: Vec<Option<FaultKind>>,
+    /// Per-submission transient-error draws; past the end = no fault.
+    pub admit: Vec<bool>,
+    /// Tick-stamped overlay events for the virtual replay, sorted by
+    /// (tick, tier).
+    pub virtual_events: Vec<VirtualFault>,
+}
+
+impl FaultPlan {
+    /// Draw the full schedule. Each *enabled* fault kind is forced into
+    /// the first exec slots (and tick 1 / tier 0 always carries a
+    /// breaker-tripping virtual burst), so a chaos test with any
+    /// non-zero rate provably exercises every enabled path instead of
+    /// gambling on the seed.
+    pub fn generate(spec: &FaultSpec, tiers: usize) -> Result<Self> {
+        spec.validate()?;
+        let mut exec_rng = Rng::derive(spec.seed, 1);
+        let mut exec: Vec<Option<FaultKind>> = (0..spec.points)
+            .map(|_| {
+                let r = exec_rng.below(1000) as u32;
+                if r < spec.panic_milli {
+                    Some(FaultKind::Panic)
+                } else if r < spec.panic_milli + spec.straggle_milli {
+                    Some(FaultKind::Straggle)
+                } else if r < spec.panic_milli + spec.straggle_milli + spec.poison_milli {
+                    Some(FaultKind::Poison)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let forced: Vec<FaultKind> = [
+            (spec.panic_milli, FaultKind::Panic),
+            (spec.straggle_milli, FaultKind::Straggle),
+            (spec.poison_milli, FaultKind::Poison),
+        ]
+        .into_iter()
+        .filter_map(|(milli, kind)| (milli > 0).then_some(kind))
+        .collect();
+        for (slot, kind) in forced.into_iter().enumerate() {
+            if slot < exec.len() {
+                exec[slot] = Some(kind);
+            }
+        }
+
+        let mut admit_rng = Rng::derive(spec.seed, 2);
+        let mut admit: Vec<bool> = (0..spec.admit_points)
+            .map(|_| (admit_rng.below(1000) as u32) < spec.admit_milli)
+            .collect();
+        if spec.admit_milli > 0 {
+            if let Some(first) = admit.first_mut() {
+                *first = true;
+            }
+        }
+
+        let mut virt_rng = Rng::derive(spec.seed, 3);
+        let mut virtual_events = Vec::new();
+        for tick in 1..=spec.window_ticks {
+            for tier in 0..tiers {
+                if tick == 1 && tier == 0 {
+                    // The forced breaker-tripping burst: guarantees the
+                    // quarantine path fires for any seed.
+                    virtual_events.push(VirtualFault { tick, tier, failed: 4, stragglers: 2 });
+                    continue;
+                }
+                let r = virt_rng.below(1000) as u32;
+                if r < spec.panic_milli + spec.poison_milli {
+                    virtual_events.push(VirtualFault {
+                        tick,
+                        tier,
+                        failed: 1 + virt_rng.below(3) as u64,
+                        stragglers: virt_rng.below(2) as u64,
+                    });
+                }
+            }
+        }
+        Ok(Self { spec: spec.clone(), exec, admit, virtual_events })
+    }
+
+    /// FNV fingerprint of the full drawn schedule (spec included).
+    pub fn fingerprint(&self) -> u64 {
+        let spec = &self.spec;
+        let head = [
+            spec.seed,
+            spec.points as u64,
+            spec.panic_milli as u64,
+            spec.straggle_milli as u64,
+            spec.poison_milli as u64,
+            spec.straggle_us,
+            spec.admit_milli as u64,
+            spec.admit_points as u64,
+            spec.window_ticks,
+        ];
+        let exec = self.exec.iter().map(|f| f.map_or(0, FaultKind::code));
+        let admit = self.admit.iter().map(|&b| b as u64);
+        let virt = self
+            .virtual_events
+            .iter()
+            .flat_map(|v| [v.tick, v.tier as u64, v.failed, v.stragglers]);
+        fnv1a_u64(head.into_iter().chain(exec).chain(admit).chain(virt))
+    }
+
+    /// Scheduled exec faults of one kind (for test/smoke assertions).
+    pub fn scheduled(&self, kind: FaultKind) -> usize {
+        self.exec.iter().filter(|f| **f == Some(kind)).count()
+    }
+}
+
+/// Thread-safe live consumer of a [`FaultPlan`]: workers pull the next
+/// exec fault per batch, the admission path pulls the next transient
+/// error per submission. Sequence counters are atomic, so consumption
+/// order across threads is racy — by design: live injection only feeds
+/// *measured* metrics, never the deterministic trace lines.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    exec_seq: AtomicU64,
+    admit_seq: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: Arc<FaultPlan>) -> Self {
+        Self { plan, exec_seq: AtomicU64::new(0), admit_seq: AtomicU64::new(0) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The next scheduled worker-side fault (`None` once the bounded
+    /// storm is exhausted — and for every draw after that, forever).
+    pub fn next_exec(&self) -> Option<FaultKind> {
+        let i = self.exec_seq.fetch_add(1, Ordering::Relaxed) as usize;
+        self.plan.exec.get(i).copied().flatten()
+    }
+
+    /// The next scheduled transient admission error.
+    pub fn next_admit(&self) -> bool {
+        let i = self.admit_seq.fetch_add(1, Ordering::Relaxed) as usize;
+        self.plan.admit.get(i).copied().unwrap_or(false)
+    }
+
+    /// True once both live schedules are fully consumed: every further
+    /// draw is a no-fault, so service must recover.
+    pub fn exhausted(&self) -> bool {
+        self.exec_seq.load(Ordering::Relaxed) as usize >= self.plan.exec.len()
+            && self.admit_seq.load(Ordering::Relaxed) as usize >= self.plan.admit.len()
+    }
+}
+
+/// Circuit-breaker state of one variant lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: traffic flows.
+    Closed,
+    /// Quarantined: no traffic until `open_ticks` have passed.
+    Open,
+    /// Probing: up to `probe_quota` requests per tick; `probe_ticks`
+    /// clean ticks close the breaker, any failure reopens it.
+    HalfOpen,
+}
+
+impl BreakerState {
+    fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+/// Breaker thresholds. Deltas are per observation tick.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Failed-request delta that trips a Closed breaker.
+    pub trip_failed: u64,
+    /// Straggler delta that trips a Closed breaker.
+    pub trip_stragglers: u64,
+    /// Ticks a breaker stays Open before probing.
+    pub open_ticks: u64,
+    /// Clean HalfOpen ticks required to close.
+    pub probe_ticks: u64,
+    /// Probe submissions allowed per HalfOpen tick.
+    pub probe_quota: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            trip_failed: 2,
+            trip_stragglers: 3,
+            open_ticks: 2,
+            probe_ticks: 2,
+            probe_quota: 4,
+        }
+    }
+}
+
+/// One breaker transition, for the quarantine ledger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HealthEvent {
+    pub tick: u64,
+    pub tier: usize,
+    pub from: BreakerState,
+    pub to: BreakerState,
+}
+
+/// Per-tier circuit breakers over one variant family. Driven from
+/// per-tick (failed, straggler) deltas — virtual ones in the replay
+/// harness, `Snapshot` deltas in the live controller — and consulted by
+/// the router on every submission.
+#[derive(Clone, Debug)]
+pub struct HealthBoard {
+    cfg: BreakerConfig,
+    state: Vec<BreakerState>,
+    /// Tick at which the tier last entered `Open`.
+    opened_at: Vec<u64>,
+    /// Consecutive clean HalfOpen ticks.
+    clean: Vec<u64>,
+    /// Remaining HalfOpen probe quota this tick.
+    probe_left: Vec<u64>,
+    tick: u64,
+    events: Vec<HealthEvent>,
+}
+
+impl HealthBoard {
+    pub fn new(tiers: usize, cfg: BreakerConfig) -> Self {
+        Self {
+            cfg,
+            state: vec![BreakerState::Closed; tiers],
+            opened_at: vec![0; tiers],
+            clean: vec![0; tiers],
+            probe_left: vec![0; tiers],
+            tick: 0,
+            events: Vec::new(),
+        }
+    }
+
+    fn transition(&mut self, tier: usize, to: BreakerState) {
+        let from = self.state[tier];
+        if from == to {
+            return;
+        }
+        self.events.push(HealthEvent { tick: self.tick, tier, from, to });
+        self.state[tier] = to;
+        match to {
+            BreakerState::Open => self.opened_at[tier] = self.tick,
+            BreakerState::HalfOpen => {
+                self.clean[tier] = 0;
+                self.probe_left[tier] = self.cfg.probe_quota;
+            }
+            BreakerState::Closed => {}
+        }
+    }
+
+    /// Advance one tick with per-tier (failed, straggler) deltas.
+    /// Extra/missing entries beyond the family size are ignored.
+    pub fn observe(&mut self, deltas: &[(u64, u64)]) {
+        self.tick += 1;
+        for tier in 0..self.state.len() {
+            let (failed, stragglers) = deltas.get(tier).copied().unwrap_or((0, 0));
+            match self.state[tier] {
+                BreakerState::Closed => {
+                    if failed >= self.cfg.trip_failed || stragglers >= self.cfg.trip_stragglers {
+                        self.transition(tier, BreakerState::Open);
+                    }
+                }
+                BreakerState::Open => {
+                    if self.tick.saturating_sub(self.opened_at[tier]) >= self.cfg.open_ticks {
+                        self.transition(tier, BreakerState::HalfOpen);
+                    }
+                }
+                BreakerState::HalfOpen => {
+                    if failed > 0 || stragglers >= self.cfg.trip_stragglers {
+                        self.transition(tier, BreakerState::Open);
+                    } else {
+                        self.clean[tier] += 1;
+                        if self.clean[tier] >= self.cfg.probe_ticks {
+                            self.transition(tier, BreakerState::Closed);
+                        } else {
+                            self.probe_left[tier] = self.cfg.probe_quota;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submission-time gate: Closed tiers always pass, Open tiers never,
+    /// HalfOpen tiers consume their per-tick probe quota.
+    pub fn allow(&mut self, tier: usize) -> bool {
+        match self.state[tier] {
+            BreakerState::Closed => true,
+            BreakerState::Open => false,
+            BreakerState::HalfOpen => {
+                if self.probe_left[tier] > 0 {
+                    self.probe_left[tier] -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    pub fn state(&self, tier: usize) -> BreakerState {
+        self.state[tier]
+    }
+
+    pub fn all_closed(&self) -> bool {
+        self.state.iter().all(|s| *s == BreakerState::Closed)
+    }
+
+    pub fn events(&self) -> &[HealthEvent] {
+        &self.events
+    }
+
+    /// Transitions into `Open` — the quarantine count.
+    pub fn opened(&self) -> u64 {
+        self.events.iter().filter(|e| e.to == BreakerState::Open).count() as u64
+    }
+
+    /// FNV fingerprint of the transition ledger.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a_u64(self.events.iter().flat_map(|e| {
+            [e.tick, e.tier as u64, e.from.code(), e.to.code()]
+        }))
+    }
+
+    /// The tick of the final close, once every breaker is Closed again
+    /// (None while quarantined, or if nothing ever opened).
+    pub fn recovered_tick(&self) -> Option<u64> {
+        if !self.all_closed() {
+            return None;
+        }
+        self.events
+            .iter()
+            .rev()
+            .find(|e| e.to == BreakerState::Closed)
+            .map(|e| e.tick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_per_seed_and_diverges_across_seeds() {
+        let spec = FaultSpec::default();
+        let a = FaultPlan::generate(&spec, 3).unwrap();
+        let b = FaultPlan::generate(&spec, 3).unwrap();
+        assert_eq!(a.exec, b.exec);
+        assert_eq!(a.admit, b.admit);
+        assert_eq!(a.virtual_events, b.virtual_events);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = FaultPlan::generate(&FaultSpec { seed: 14, ..spec }, 3).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seeds must diverge");
+    }
+
+    #[test]
+    fn every_enabled_kind_is_forced_into_the_schedule() {
+        let plan = FaultPlan::generate(&FaultSpec::default(), 3).unwrap();
+        assert!(plan.scheduled(FaultKind::Panic) >= 1);
+        assert!(plan.scheduled(FaultKind::Straggle) >= 1);
+        assert!(plan.scheduled(FaultKind::Poison) >= 1);
+        assert!(plan.admit.iter().any(|&b| b), "admit faults must be scheduled");
+        // The forced virtual burst trips the default breaker thresholds.
+        let first = plan.virtual_events[0];
+        assert_eq!((first.tick, first.tier), (1, 0));
+        assert!(first.failed >= BreakerConfig::default().trip_failed);
+        // A kind with rate 0 never appears, forced slots included.
+        let calm = FaultPlan::generate(
+            &FaultSpec { panic_milli: 0, ..FaultSpec::default() },
+            3,
+        )
+        .unwrap();
+        assert_eq!(calm.scheduled(FaultKind::Panic), 0);
+    }
+
+    #[test]
+    fn injector_storm_is_bounded() {
+        let spec = FaultSpec { points: 4, admit_points: 4, ..FaultSpec::default() };
+        let injector = FaultInjector::new(Arc::new(FaultPlan::generate(&spec, 2).unwrap()));
+        let fired: usize = (0..4).filter_map(|_| injector.next_exec()).count();
+        assert!(fired >= 1, "forced slots guarantee at least one exec fault");
+        assert!(!injector.exhausted(), "admit draws still pending");
+        for _ in 0..4 {
+            injector.next_admit();
+        }
+        assert!(injector.exhausted());
+        // Past the end: no-faults forever.
+        for _ in 0..32 {
+            assert_eq!(injector.next_exec(), None);
+            assert!(!injector.next_admit());
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        let spec = FaultSpec::parse(
+            "seed=99,points=8,panic=100,straggle=200,poison=0,straggle-us=5000,\
+             admit=50,admit-points=16,window-ticks=4",
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.points, 8);
+        assert_eq!(spec.panic_milli, 100);
+        assert_eq!(spec.straggle_milli, 200);
+        assert_eq!(spec.poison_milli, 0);
+        assert_eq!(spec.straggle_us, 5000);
+        assert_eq!(spec.admit_milli, 50);
+        assert_eq!(spec.admit_points, 16);
+        assert_eq!(spec.window_ticks, 4);
+        // Defaults survive a partial spec.
+        let partial = FaultSpec::parse("seed=7").unwrap();
+        assert_eq!(partial.seed, 7);
+        assert_eq!(partial.points, FaultSpec::default().points);
+        assert!(FaultSpec::parse("bogus-key=1").is_err());
+        assert!(FaultSpec::parse("seed").is_err());
+        assert!(FaultSpec::parse("panic=700,straggle=700").is_err(), "rates must fit 1000");
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let cfg = BreakerConfig::default();
+        let mut hb = HealthBoard::new(2, cfg);
+        assert!(hb.all_closed());
+        assert!(hb.allow(0) && hb.allow(1));
+        // A tripping burst on tier 0 only.
+        hb.observe(&[(cfg.trip_failed, 0), (0, 0)]);
+        assert_eq!(hb.state(0), BreakerState::Open);
+        assert_eq!(hb.state(1), BreakerState::Closed);
+        assert!(!hb.allow(0), "open tier is quarantined");
+        assert!(hb.allow(1));
+        assert_eq!(hb.opened(), 1);
+        // Clean ticks: Open -> HalfOpen after open_ticks.
+        for _ in 0..cfg.open_ticks {
+            hb.observe(&[(0, 0), (0, 0)]);
+        }
+        assert_eq!(hb.state(0), BreakerState::HalfOpen);
+        // Probe quota is consumed per tick.
+        for _ in 0..cfg.probe_quota {
+            assert!(hb.allow(0));
+        }
+        assert!(!hb.allow(0), "probe quota must be exhausted");
+        // probe_ticks clean ticks close it again.
+        for _ in 0..cfg.probe_ticks {
+            hb.observe(&[(0, 0), (0, 0)]);
+        }
+        assert_eq!(hb.state(0), BreakerState::Closed);
+        assert!(hb.all_closed());
+        assert_eq!(hb.recovered_tick(), Some(hb.events().last().unwrap().tick));
+        assert_ne!(hb.fingerprint(), HealthBoard::new(2, cfg).fingerprint());
+    }
+
+    #[test]
+    fn failing_probe_reopens_the_breaker() {
+        let cfg = BreakerConfig::default();
+        let mut hb = HealthBoard::new(1, cfg);
+        hb.observe(&[(cfg.trip_failed, 0)]);
+        for _ in 0..cfg.open_ticks {
+            hb.observe(&[(0, 0)]);
+        }
+        assert_eq!(hb.state(0), BreakerState::HalfOpen);
+        // One failure during the probe phase: straight back to Open.
+        hb.observe(&[(1, 0)]);
+        assert_eq!(hb.state(0), BreakerState::Open);
+        assert_eq!(hb.opened(), 2);
+        assert_eq!(hb.recovered_tick(), None);
+    }
+
+    #[test]
+    fn straggler_deltas_trip_the_breaker_too() {
+        let cfg = BreakerConfig::default();
+        let mut hb = HealthBoard::new(1, cfg);
+        hb.observe(&[(0, cfg.trip_stragglers)]);
+        assert_eq!(hb.state(0), BreakerState::Open);
+    }
+}

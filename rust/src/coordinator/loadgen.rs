@@ -70,6 +70,22 @@ impl BurstConfig {
     }
 }
 
+/// Retry policy for shed or failed submissions: a request answered
+/// `Rejected` at admission, failed with a hard submit error (e.g. an
+/// injected transient registry fault), or answered with a failed wait
+/// (e.g. `WorkerFailed` after a worker panic) is resubmitted up to
+/// `attempts` times. The pause before resubmission `k` is
+/// `backoff_us * 2^k`, jittered into the 50–100% band by a stream
+/// derived from the run seed — deterministic per seed, but never
+/// synchronized into a retry storm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryConfig {
+    /// Maximum resubmissions per request (0 disables retries).
+    pub attempts: u32,
+    /// Base backoff before the first resubmission, microseconds.
+    pub backoff_us: u64,
+}
+
 /// Load-generator configuration.
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
@@ -83,6 +99,8 @@ pub struct LoadgenConfig {
     pub mix: Vec<(String, f64)>,
     /// Open-loop burst phases (ignored in closed loop).
     pub burst: Option<BurstConfig>,
+    /// Retry-with-backoff policy for `Rejected`/failed submissions.
+    pub retry: Option<RetryConfig>,
 }
 
 /// One trace event. `at_us` is the arrival offset from run start (0 and
@@ -282,6 +300,12 @@ pub struct LoadReport {
     /// died, shutdown raced the run). The gateway's drain guarantee
     /// makes this 0 in every healthy run.
     pub dropped: u64,
+    /// Resubmission attempts made under the retry policy (0 without one).
+    pub retried: u64,
+    /// Requests that completed only after at least one resubmission.
+    pub retry_ok: u64,
+    /// Requests whose retry budget ran out without a completion.
+    pub retry_exhausted: u64,
     pub throughput_rps: f64,
     pub per_model: Vec<ModelReport>,
 }
@@ -308,12 +332,16 @@ impl LoadReport {
     /// Human-readable summary.
     pub fn render(&self) -> String {
         let mut s = format!(
-            "{}\nwall {:.2}s — {:.1} req/s completed, {} rejected, dropped: {}\n",
+            "{}\nwall {:.2}s — {:.1} req/s completed, {} rejected, dropped: {}, \
+             retries: {} ({} recovered, {} exhausted)\n",
             self.trace_line(),
             self.wall_s,
             self.throughput_rps,
             self.rejected,
-            self.dropped
+            self.dropped,
+            self.retried,
+            self.retry_ok,
+            self.retry_exhausted
         );
         for m in &self.per_model {
             s.push_str(&format!(
@@ -358,6 +386,14 @@ impl LoadReport {
             ("completed", Value::Int(self.completed as i64)),
             ("rejected", Value::Int(self.rejected as i64)),
             ("dropped", Value::Int(self.dropped as i64)),
+            (
+                "retries",
+                Value::obj(vec![
+                    ("attempts", Value::Int(self.retried as i64)),
+                    ("recovered", Value::Int(self.retry_ok as i64)),
+                    ("exhausted", Value::Int(self.retry_exhausted as i64)),
+                ]),
+            ),
             ("throughput_rps", Value::Num(self.throughput_rps)),
             ("models", Value::Arr(models)),
         ])
@@ -370,6 +406,36 @@ impl LoadReport {
 struct LaneBaseline {
     name: String,
     base: Snapshot,
+}
+
+/// Client-side accounting shared by both loop kinds. Every trace event
+/// lands in exactly one of ok/rejected/failed (its *final* outcome);
+/// the retry counters are attempt-level extras on top.
+#[derive(Clone, Copy, Debug, Default)]
+struct ClientTotals {
+    ok: u64,
+    rejected: u64,
+    failed: u64,
+    retried: u64,
+    retry_ok: u64,
+    retry_exhausted: u64,
+}
+
+/// Jittered exponential backoff before resubmission `attempt`:
+/// `backoff_us * 2^attempt`, scaled into the 50–100% band by the seeded
+/// stream. The shift is clamped so absurd attempt counts saturate
+/// instead of overflowing.
+fn retry_pause(cfg: &RetryConfig, attempt: u32, rng: &mut Rng) -> Duration {
+    let base = cfg.backoff_us.saturating_mul(1u64 << attempt.min(16));
+    let jitter = 0.5 + rng.f64() / 2.0;
+    Duration::from_micros((base as f64 * jitter) as u64)
+}
+
+/// Outcome of one submission attempt (admission + wait collapsed).
+enum TryOutcome {
+    Ok,
+    Shed,
+    Failed,
 }
 
 /// Drive a full load-generation run against a server and aggregate the
@@ -397,11 +463,14 @@ pub fn run(server: &Server, cfg: &LoadgenConfig) -> Result<LoadReport> {
         .collect();
 
     let t0 = Instant::now();
-    let (completed, client_rejected, failures) = match cfg.mode {
+    let totals = match cfg.mode {
         Mode::Open { .. } => run_open(server, cfg, &events, &sizes),
         Mode::Closed { .. } => run_closed(server, cfg, &events, &sizes),
     };
-    debug_assert_eq!(completed + client_rejected + failures, events.len() as u64);
+    debug_assert_eq!(
+        totals.ok + totals.rejected + totals.failed,
+        events.len() as u64
+    );
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
 
     let submitted = events.len() as u64;
@@ -435,14 +504,17 @@ pub fn run(server: &Server, cfg: &LoadgenConfig) -> Result<LoadReport> {
         fingerprint,
         wall_s,
         submitted,
-        completed,
-        rejected: client_rejected,
+        completed: totals.ok,
+        rejected: totals.rejected,
         // Everything neither completed nor shed at admission: failed
-        // waits plus hard submit errors. Equals `failures` by
+        // waits plus hard submit errors. Equals `totals.failed` by
         // construction (each event lands in exactly one bucket); the
         // subtraction keeps the three counters self-consistent.
-        dropped: submitted - completed - client_rejected,
-        throughput_rps: completed as f64 / wall_s,
+        dropped: submitted.saturating_sub(totals.ok + totals.rejected),
+        retried: totals.retried,
+        retry_ok: totals.retry_ok,
+        retry_exhausted: totals.retry_exhausted,
+        throughput_rps: totals.ok as f64 / wall_s,
         per_model,
     })
 }
@@ -451,97 +523,205 @@ pub fn run(server: &Server, cfg: &LoadgenConfig) -> Result<LoadReport> {
 /// arrival offsets (falling behind never skips events — standard
 /// open-loop semantics); a collector thread awaits every admitted
 /// response so the dispatcher is never blocked by a slow batch.
+///
+/// With a retry policy, admission-level outcomes (`Rejected`, hard
+/// submit errors) are resubmitted inline by the dispatcher, and
+/// post-admission failures (`WorkerFailed` waits) are resubmitted in a
+/// bounded synchronous pass after the trace is drained — by then the
+/// fault that killed the original batch has had the whole run to clear.
 fn run_open(
     server: &Server,
     cfg: &LoadgenConfig,
     events: &[TraceEvent],
     sizes: &[usize],
-) -> (u64, u64, u64) {
+) -> ClientTotals {
     std::thread::scope(|scope| {
-        let (done_tx, done_rx) = mpsc::channel::<super::server::Pending>();
+        // Admitted requests travel with enough context (model index,
+        // image seed, retried flag) for the collector to attribute
+        // recoveries and hand failures back for the retry pass.
+        type Tagged = (usize, u64, bool, super::server::Pending);
+        let (done_tx, done_rx) = mpsc::channel::<Tagged>();
         let collector = scope.spawn(move || {
             let mut ok = 0u64;
-            let mut failed = 0u64;
-            while let Ok(p) = done_rx.recv() {
-                match p.wait() {
-                    Ok(_) => ok += 1,
-                    Err(_) => failed += 1,
+            let mut ok_after_retry = 0u64;
+            let mut failed: Vec<(usize, u64)> = Vec::new();
+            while let Ok((model, image_seed, was_retried, p)) = done_rx.recv() {
+                match p.wait_timeout(Duration::from_secs(30)) {
+                    Ok(_) => {
+                        ok += 1;
+                        ok_after_retry += u64::from(was_retried);
+                    }
+                    Err(_) => failed.push((model, image_seed)),
                 }
             }
-            (ok, failed)
+            (ok, ok_after_retry, failed)
         });
+        let budget = cfg.retry.map_or(0, |r| r.attempts);
+        let mut retry_rng = Rng::derive(cfg.seed, 7);
         let start = Instant::now();
-        let mut rejected = 0u64;
-        let mut hard_failed = 0u64;
+        let mut totals = ClientTotals::default();
         for ev in events {
             let target = Duration::from_micros(ev.at_us);
-            let elapsed = start.elapsed();
-            if target > elapsed {
-                std::thread::sleep(target - elapsed);
-            }
-            let image = image_for(ev.image_seed, sizes[ev.model]);
+            std::thread::sleep(target.saturating_sub(start.elapsed()));
             // Load shedding (Rejected) is an expected regime; a hard
-            // submit error (worker died, shutdown) is not — keeping them
-            // separate makes `dropped` catch broken-server runs instead
-            // of disguising them as rejections.
-            match server.try_submit(&cfg.mix[ev.model].0, image) {
-                Ok(Submission::Admitted(pending)) => {
-                    let _ = done_tx.send(pending);
+            // submit error (worker died, shutdown, injected transient
+            // fault) is not — keeping them separate makes `dropped`
+            // catch broken-server runs instead of disguising them as
+            // rejections. Under a retry policy both are resubmitted
+            // after a jittered exponential backoff.
+            let mut attempt = 0u32;
+            loop {
+                let image = image_for(ev.image_seed, sizes[ev.model]);
+                match server.try_submit(&cfg.mix[ev.model].0, image) {
+                    Ok(Submission::Admitted(pending)) => {
+                        let _ =
+                            done_tx.send((ev.model, ev.image_seed, attempt > 0, pending));
+                        break;
+                    }
+                    outcome if attempt < budget => {
+                        let _ = outcome;
+                        let r = cfg.retry.expect("budget > 0 implies a policy");
+                        std::thread::sleep(retry_pause(&r, attempt, &mut retry_rng));
+                        attempt += 1;
+                        totals.retried += 1;
+                    }
+                    Ok(Submission::Rejected) => {
+                        totals.rejected += 1;
+                        totals.retry_exhausted += u64::from(budget > 0);
+                        break;
+                    }
+                    Err(_) => {
+                        totals.failed += 1;
+                        totals.retry_exhausted += u64::from(budget > 0);
+                        break;
+                    }
                 }
-                Ok(Submission::Rejected) => rejected += 1,
-                Err(_) => hard_failed += 1,
             }
         }
         drop(done_tx);
-        let (ok, failed) = collector.join().expect("collector thread");
-        (ok, rejected, failed + hard_failed)
+        let (ok, ok_after_retry, wait_failed) =
+            collector.join().expect("collector thread");
+        totals.ok += ok;
+        totals.retry_ok += ok_after_retry;
+        // Retry pass for post-admission failures (worker panicked
+        // mid-batch, deadline expired, ...): bounded, synchronous.
+        for (model, image_seed) in wait_failed {
+            let mut attempt = 0u32;
+            let recovered = loop {
+                if attempt >= budget {
+                    break false;
+                }
+                let r = cfg.retry.expect("budget > 0 implies a policy");
+                std::thread::sleep(retry_pause(&r, attempt, &mut retry_rng));
+                attempt += 1;
+                totals.retried += 1;
+                let image = image_for(image_seed, sizes[model]);
+                if let Ok(Submission::Admitted(p)) =
+                    server.try_submit(&cfg.mix[model].0, image)
+                {
+                    if p.wait_timeout(Duration::from_secs(30)).is_ok() {
+                        break true;
+                    }
+                }
+            };
+            if recovered {
+                totals.ok += 1;
+                totals.retry_ok += 1;
+            } else {
+                totals.failed += 1;
+                totals.retry_exhausted += u64::from(budget > 0);
+            }
+        }
+        totals
     })
 }
 
 /// Closed loop: each trace client replays its own event subsequence
-/// serially, blocking on every response.
+/// serially, blocking on every response. Retries are inline: a client
+/// that sees `Rejected`, a hard submit error, or a failed wait backs
+/// off (per-client seeded jitter stream) and resubmits up to the
+/// budget before recording the final outcome.
 fn run_closed(
     server: &Server,
     cfg: &LoadgenConfig,
     events: &[TraceEvent],
     sizes: &[usize],
-) -> (u64, u64, u64) {
+) -> ClientTotals {
     let clients = match cfg.mode {
         Mode::Closed { clients } => clients.max(1),
         Mode::Open { .. } => unreachable!("run_closed requires closed mode"),
     };
-    let totals: Vec<(u64, u64, u64)> = std::thread::scope(|scope| {
+    let totals: Vec<ClientTotals> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 let events = &*events;
                 scope.spawn(move || {
-                    let mut ok = 0u64;
-                    let mut rejected = 0u64;
-                    let mut failed = 0u64;
+                    let mut t = ClientTotals::default();
+                    let budget = cfg.retry.map_or(0, |r| r.attempts);
+                    let mut retry_rng = Rng::derive(cfg.seed, 8 + c as u64);
                     for ev in events.iter().filter(|e| e.client == c) {
-                        let image = image_for(ev.image_seed, sizes[ev.model]);
-                        // try_submit + wait so admission shedding, hard
-                        // submit errors and post-admission failures are
-                        // counted separately.
-                        match server.try_submit(&cfg.mix[ev.model].0, image) {
-                            Ok(Submission::Admitted(p)) => match p.wait() {
-                                Ok(_) => ok += 1,
-                                Err(_) => failed += 1,
-                            },
-                            Ok(Submission::Rejected) => rejected += 1,
-                            Err(_) => failed += 1,
+                        let mut attempt = 0u32;
+                        loop {
+                            let image = image_for(ev.image_seed, sizes[ev.model]);
+                            // try_submit + wait so admission shedding,
+                            // hard submit errors and post-admission
+                            // failures are counted separately.
+                            let out = match server.try_submit(&cfg.mix[ev.model].0, image)
+                            {
+                                Ok(Submission::Admitted(p)) => {
+                                    match p.wait_timeout(Duration::from_secs(30)) {
+                                        Ok(_) => TryOutcome::Ok,
+                                        Err(_) => TryOutcome::Failed,
+                                    }
+                                }
+                                Ok(Submission::Rejected) => TryOutcome::Shed,
+                                Err(_) => TryOutcome::Failed,
+                            };
+                            match out {
+                                TryOutcome::Ok => {
+                                    t.ok += 1;
+                                    t.retry_ok += u64::from(attempt > 0);
+                                    break;
+                                }
+                                _ if attempt < budget => {
+                                    let r =
+                                        cfg.retry.expect("budget > 0 implies a policy");
+                                    std::thread::sleep(retry_pause(
+                                        &r,
+                                        attempt,
+                                        &mut retry_rng,
+                                    ));
+                                    attempt += 1;
+                                    t.retried += 1;
+                                }
+                                TryOutcome::Shed => {
+                                    t.rejected += 1;
+                                    t.retry_exhausted += u64::from(budget > 0);
+                                    break;
+                                }
+                                TryOutcome::Failed => {
+                                    t.failed += 1;
+                                    t.retry_exhausted += u64::from(budget > 0);
+                                    break;
+                                }
+                            }
                         }
                     }
-                    (ok, rejected, failed)
+                    t
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("client")).collect()
     });
-    let ok = totals.iter().map(|t| t.0).sum();
-    let rejected = totals.iter().map(|t| t.1).sum();
-    let failed = totals.iter().map(|t| t.2).sum();
-    (ok, rejected, failed)
+    totals.into_iter().fold(ClientTotals::default(), |mut a, t| {
+        a.ok += t.ok;
+        a.rejected += t.rejected;
+        a.failed += t.failed;
+        a.retried += t.retried;
+        a.retry_ok += t.retry_ok;
+        a.retry_exhausted += t.retry_exhausted;
+        a
+    })
 }
 
 #[cfg(test)]
@@ -555,6 +735,7 @@ mod tests {
             mode: Mode::Open { rate_rps: 5000.0 },
             mix: vec![("a".into(), 1.0), ("b".into(), 3.0)],
             burst: None,
+            retry: None,
         }
     }
 
@@ -588,6 +769,7 @@ mod tests {
             mode: Mode::Closed { clients: 4 },
             mix: vec![("m".into(), 1.0)],
             burst: None,
+            retry: None,
         };
         let events = generate_trace(&cfg).unwrap();
         assert_eq!(events.len(), 103);
@@ -605,6 +787,7 @@ mod tests {
             mode: Mode::Open { rate_rps: 1000.0 },
             mix: vec![("m".into(), 1.0)],
             burst: None,
+            retry: None,
         };
         let steady = generate_trace(&base).unwrap();
         let bursty = generate_trace(&LoadgenConfig {
@@ -657,6 +840,32 @@ mod tests {
         }
         let heavy = a.iter().filter(|e| e.class == 1).count();
         assert!(heavy > 200, "3:1 class mix ignored: {heavy}/400");
+    }
+
+    #[test]
+    fn retry_backoff_is_seeded_jittered_and_exponential() {
+        let r = RetryConfig { attempts: 3, backoff_us: 1000 };
+        // Same seed stream → byte-identical pause sequence.
+        let mut a = Rng::derive(9, 7);
+        let mut b = Rng::derive(9, 7);
+        for attempt in 0..3 {
+            assert_eq!(retry_pause(&r, attempt, &mut a), retry_pause(&r, attempt, &mut b));
+        }
+        // Each pause sits in the jitter band [0.5, 1.0] × (base << attempt).
+        let mut rng = Rng::derive(9, 7);
+        for attempt in 0..3u32 {
+            let base = 1000u64 << attempt;
+            let p = retry_pause(&r, attempt, &mut rng).as_micros() as u64;
+            assert!(
+                p >= base / 2 && p <= base,
+                "attempt {attempt}: pause {p}us outside [{}, {base}]us",
+                base / 2
+            );
+        }
+        // The shift clamp keeps absurd attempt counts finite.
+        let mut rng = Rng::derive(9, 7);
+        let big = retry_pause(&r, u32::MAX, &mut rng);
+        assert!(big <= Duration::from_micros(1000u64 << 16));
     }
 
     #[test]

@@ -17,9 +17,20 @@ pub struct Metrics {
     /// Admitted requests later displaced by a higher-priority arrival
     /// under per-class admission control, all classes.
     pub preempted: AtomicU64,
-    /// Per-class splits of the two shed counters above.
+    /// Admitted requests answered with a `WorkerFailed` error (worker
+    /// panic or poisoned execution), all classes.
+    pub failed: AtomicU64,
+    /// Batches whose execution exceeded the straggle threshold — the
+    /// circuit breaker's slow-lane signal.
+    pub stragglers: AtomicU64,
+    /// Admitted requests answered `DeadlineExceeded` before execution,
+    /// all classes.
+    pub deadline_expired: AtomicU64,
+    /// Per-class splits of the shed/failure counters above.
     class_rejected: Vec<AtomicU64>,
     class_preempted: Vec<AtomicU64>,
+    class_failed: Vec<AtomicU64>,
+    class_deadline: Vec<AtomicU64>,
     /// Log2-bucketed latency histogram (microseconds), buckets 0..=24.
     latency_buckets: [AtomicU64; 25],
 }
@@ -40,11 +51,16 @@ pub struct Snapshot {
     pub execute_us: u64,
     pub rejected: u64,
     pub preempted: u64,
-    /// Per-class splits of `rejected` / `preempted` (index = request
-    /// class). [`Snapshot::merge`] sums them element-wise, padding the
-    /// shorter vector.
+    pub failed: u64,
+    pub stragglers: u64,
+    pub deadline_expired: u64,
+    /// Per-class splits of `rejected` / `preempted` / `failed` /
+    /// `deadline_expired` (index = request class). [`Snapshot::merge`]
+    /// sums them element-wise, padding the shorter vector.
     pub class_rejected: Vec<u64>,
     pub class_preempted: Vec<u64>,
+    pub class_failed: Vec<u64>,
+    pub class_deadline: Vec<u64>,
     /// Admitted-but-not-yet-batched depth at snapshot time. Unlike the
     /// other fields this is a *gauge*, not a monotonic counter: the
     /// server injects the lane's live admission gauge when it snapshots,
@@ -68,8 +84,13 @@ impl Metrics {
             execute_us: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             preempted: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            stragglers: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             class_rejected: (0..classes).map(|_| AtomicU64::new(0)).collect(),
             class_preempted: (0..classes).map(|_| AtomicU64::new(0)).collect(),
+            class_failed: (0..classes).map(|_| AtomicU64::new(0)).collect(),
+            class_deadline: (0..classes).map(|_| AtomicU64::new(0)).collect(),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -103,6 +124,27 @@ impl Metrics {
         self.class_preempted[class.min(last)].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one admitted request of `class` answered with a
+    /// `WorkerFailed` error (panicked or poisoned execution).
+    pub fn record_failed(&self, class: usize) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        let last = self.class_failed.len() - 1;
+        self.class_failed[class.min(last)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one straggling batch (execution over the threshold).
+    pub fn record_straggler(&self) {
+        self.stragglers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one admitted request of `class` answered
+    /// `DeadlineExceeded` before execution.
+    pub fn record_deadline(&self, class: usize) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let last = self.class_deadline.len() - 1;
+        self.class_deadline[class.min(last)].fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters.
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
@@ -112,6 +154,9 @@ impl Metrics {
             execute_us: self.execute_us.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             preempted: self.preempted.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            stragglers: self.stragglers.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             class_rejected: self
                 .class_rejected
                 .iter()
@@ -119,6 +164,16 @@ impl Metrics {
                 .collect(),
             class_preempted: self
                 .class_preempted
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            class_failed: self
+                .class_failed
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            class_deadline: self
+                .class_deadline
                 .iter()
                 .map(|c| c.load(Ordering::Relaxed))
                 .collect(),
@@ -142,8 +197,13 @@ impl Snapshot {
             execute_us: 0,
             rejected: 0,
             preempted: 0,
+            failed: 0,
+            stragglers: 0,
+            deadline_expired: 0,
             class_rejected: Vec::new(),
             class_preempted: Vec::new(),
+            class_failed: Vec::new(),
+            class_deadline: Vec::new(),
             queue: 0,
             latency_buckets: vec![0; 25],
         }
@@ -166,9 +226,14 @@ impl Snapshot {
         self.execute_us += other.execute_us;
         self.rejected += other.rejected;
         self.preempted += other.preempted;
+        self.failed += other.failed;
+        self.stragglers += other.stragglers;
+        self.deadline_expired += other.deadline_expired;
         self.queue += other.queue;
         Self::add_padded(&mut self.class_rejected, &other.class_rejected);
         Self::add_padded(&mut self.class_preempted, &other.class_preempted);
+        Self::add_padded(&mut self.class_failed, &other.class_failed);
+        Self::add_padded(&mut self.class_deadline, &other.class_deadline);
         Self::add_padded(&mut self.latency_buckets, &other.latency_buckets);
         self
     }
@@ -191,8 +256,13 @@ impl Snapshot {
             execute_us: self.execute_us - base.execute_us,
             rejected: self.rejected - base.rejected,
             preempted: self.preempted - base.preempted,
+            failed: self.failed - base.failed,
+            stragglers: self.stragglers - base.stragglers,
+            deadline_expired: self.deadline_expired - base.deadline_expired,
             class_rejected: sub_padded(&self.class_rejected, &base.class_rejected),
             class_preempted: sub_padded(&self.class_preempted, &base.class_preempted),
+            class_failed: sub_padded(&self.class_failed, &base.class_failed),
+            class_deadline: sub_padded(&self.class_deadline, &base.class_deadline),
             // Gauge semantics: the window "delta" of a level is its
             // current value, not a subtraction against the baseline.
             queue: self.queue,
@@ -298,6 +368,44 @@ mod tests {
         assert_eq!(d.rejected, 1);
         assert_eq!(d.class_rejected, vec![0, 0, 1]);
         assert_eq!(d.class_preempted, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn failure_and_deadline_counters_split_merge_and_delta() {
+        let m = Metrics::with_classes(2);
+        m.record_failed(0);
+        m.record_failed(1);
+        m.record_failed(7); // clamps into the last class
+        m.record_deadline(1);
+        m.record_straggler();
+        m.record_straggler();
+        let s = m.snapshot();
+        assert_eq!(s.failed, 3);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.stragglers, 2);
+        assert_eq!(s.class_failed, vec![1, 2]);
+        assert_eq!(s.class_deadline, vec![0, 1]);
+        assert_eq!(s.class_failed.iter().sum::<u64>(), s.failed);
+        assert_eq!(s.class_deadline.iter().sum::<u64>(), s.deadline_expired);
+        // Merge pads and sums like the other per-class counters.
+        let single = Metrics::default();
+        single.record_failed(0);
+        single.record_deadline(0);
+        let merged = Snapshot::zero().merge(&s).merge(&single.snapshot());
+        assert_eq!(merged.failed, 4);
+        assert_eq!(merged.deadline_expired, 2);
+        assert_eq!(merged.stragglers, 2);
+        assert_eq!(merged.class_failed, vec![2, 2]);
+        assert_eq!(merged.class_deadline, vec![1, 1]);
+        // delta_since isolates a window.
+        let base = m.snapshot();
+        m.record_failed(1);
+        m.record_straggler();
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(d.failed, 1);
+        assert_eq!(d.stragglers, 1);
+        assert_eq!(d.deadline_expired, 0);
+        assert_eq!(d.class_failed, vec![0, 1]);
     }
 
     #[test]

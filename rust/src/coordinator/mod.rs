@@ -24,8 +24,16 @@
 //! variants when latency SLOs degrade and back when headroom returns
 //! (`heam serve --qos-policy`, `heam loadgen --classes`,
 //! `BENCH_qos.json`).
+//!
+//! The [`fault`] module is the failure-containment layer: a seeded
+//! deterministic fault-injection plan (worker panics, stragglers,
+//! poisoned variant outputs, transient admission errors) plus the
+//! per-tier circuit breaker ([`fault::HealthBoard`]) the router uses to
+//! quarantine sick variants and degrade to the nearest healthy accuracy
+//! tier (`--fault-plan`, `--deadline-ms`, the `fault trace` ledger).
 
 pub mod batcher;
+pub mod fault;
 pub mod loadgen;
 pub mod metrics;
 pub mod qos;
@@ -144,7 +152,9 @@ pub fn drive_demo_qos(
                     let image = test_x[idx * sz..(idx + 1) * sz].to_vec();
                     let t0 = std::time::Instant::now();
                     match router.submit(server, class, image) {
-                        Ok((tier, Submission::Admitted(p))) => match p.wait() {
+                        Ok((tier, Submission::Admitted(p))) => match p
+                            .wait_timeout(std::time::Duration::from_secs(30))
+                        {
                             Ok(pred) => out.push((
                                 class,
                                 tier,

@@ -41,6 +41,13 @@ pub struct LaneObservation {
     pub rejected_delta: u64,
     /// Admitted-but-unserved queue depth at window end.
     pub queue: i64,
+    /// Requests answered with a worker failure during the window — the
+    /// circuit breaker's error-rate signal (the controller itself
+    /// ignores it; see `HealthBoard`).
+    pub failed_delta: u64,
+    /// Straggling batch executions during the window — the breaker's
+    /// slow-path signal.
+    pub straggler_delta: u64,
 }
 
 /// What a decision did.
@@ -271,11 +278,11 @@ mod tests {
     }
 
     fn calm() -> LaneObservation {
-        LaneObservation { p99_us: 100, rejected_delta: 0, queue: 0 }
+        LaneObservation { p99_us: 100, ..Default::default() }
     }
 
     fn hot() -> LaneObservation {
-        LaneObservation { p99_us: 1_000_000, rejected_delta: 3, queue: 500 }
+        LaneObservation { p99_us: 1_000_000, rejected_delta: 3, queue: 500, ..Default::default() }
     }
 
     #[test]

@@ -117,6 +117,36 @@ impl VariantFamily {
     pub fn names(&self) -> Vec<&str> {
         self.variants.iter().map(|v| v.name.as_str()).collect()
     }
+
+    /// Resolve the nearest healthy accuracy tier to `want` that still
+    /// satisfies a class's `min_accuracy_tier` cap (`cap` is the most
+    /// approximate tier the class tolerates; candidates are `0..=cap`).
+    /// Search widens by distance from `want`, preferring the more exact
+    /// neighbor on ties — quarantine must never *reduce* a request's
+    /// accuracy when an equally near more-exact tier is healthy. Returns
+    /// `None` when no qualifying tier is healthy (the request is shed
+    /// rather than served below the class's accuracy floor).
+    pub fn nearest_healthy(
+        &self,
+        want: usize,
+        cap: usize,
+        mut healthy: impl FnMut(usize) -> bool,
+    ) -> Option<usize> {
+        let cap = cap.min(self.max_tier());
+        let want = want.min(cap);
+        for d in 0..=cap {
+            if let Some(lower) = want.checked_sub(d) {
+                if healthy(lower) {
+                    return Some(lower);
+                }
+            }
+            let upper = want + d;
+            if d > 0 && upper <= cap && healthy(upper) {
+                return Some(upper);
+            }
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +200,28 @@ mod tests {
         for (i, v) in fam.variants().iter().enumerate() {
             assert_eq!(v.tier, i);
         }
+    }
+
+    #[test]
+    fn nearest_healthy_prefers_exact_and_respects_the_cap() {
+        let hs = handles();
+        let refs: Vec<&ModelHandle> = hs.iter().collect();
+        let fam = VariantFamily::from_handles("lenet", &refs).unwrap();
+        // All healthy: the wanted tier wins.
+        assert_eq!(fam.nearest_healthy(1, 2, |_| true), Some(1));
+        // Wanted tier quarantined: the more exact neighbor beats the
+        // equally near more approximate one.
+        assert_eq!(fam.nearest_healthy(1, 2, |t| t != 1), Some(0));
+        // Only a more approximate tier is healthy — allowed up to the cap...
+        assert_eq!(fam.nearest_healthy(0, 2, |t| t == 2), Some(2));
+        // ...but never past it: shed instead of violating the accuracy floor.
+        assert_eq!(fam.nearest_healthy(0, 1, |t| t == 2), None);
+        // A tier-0-pinned class sheds the moment tier 0 is quarantined.
+        assert_eq!(fam.nearest_healthy(0, 0, |t| t != 0), None);
+        // Nothing healthy at all.
+        assert_eq!(fam.nearest_healthy(1, 2, |_| false), None);
+        // `want` beyond the cap is clamped before searching.
+        assert_eq!(fam.nearest_healthy(2, 1, |_| true), Some(1));
     }
 
     #[test]

@@ -38,5 +38,5 @@ pub mod router;
 pub use controller::{Action, Controller, DecisionRecord, LaneObservation};
 pub use family::{Variant, VariantFamily};
 pub use policy::{parse_classes, ControllerConfig, QosPolicy, RequestClass};
-pub use replay::{QosReport, QosRunConfig, SimConfig};
+pub use replay::{FaultReport, QosReport, QosRunConfig, SimConfig};
 pub use router::{spawn_live, LiveController, QosRouter};

@@ -28,9 +28,10 @@ use anyhow::Result;
 use crate::util::json::Value;
 
 use super::super::batcher::LaneShare;
+use super::super::fault::{FaultPlan, FaultSpec};
 use super::super::loadgen::{class_trace_fingerprint, generate_class_trace, image_for, BurstConfig};
 use super::super::metrics::{Metrics, Snapshot};
-use super::super::server::{Server, Submission};
+use super::super::server::{ServeError, Server, Submission};
 use super::controller::{Action, DecisionRecord, LaneObservation};
 use super::router::QosRouter;
 
@@ -94,6 +95,12 @@ pub struct QosRunConfig {
     pub rate_rps: f64,
     pub burst: Option<BurstConfig>,
     pub sim: SimConfig,
+    /// Optional fault storm: the plan's virtual events are overlaid on
+    /// the lane model's observations (driving the router's circuit
+    /// breakers in virtual time), and injected transient admission
+    /// errors from a live `FaultInjector` on the server are tallied per
+    /// class. `None` replays faultlessly.
+    pub fault: Option<FaultSpec>,
 }
 
 /// Per-class results: the deterministic routing ledger plus measured
@@ -138,6 +145,51 @@ impl ClassReport {
     }
 }
 
+/// The deterministic fault/containment ledger of a replay run under a
+/// [`FaultSpec`]: every field is a pure function of (spec, trace,
+/// policy, sim) — in particular it is independent of the gateway's
+/// worker count, which is exactly what the chaos suite pins.
+#[derive(Clone, Debug)]
+pub struct FaultReport {
+    /// Fingerprint of the drawn [`FaultPlan`].
+    pub plan_fingerprint: u64,
+    /// Fingerprint of the breaker transition ledger.
+    pub health_fingerprint: u64,
+    /// Quarantines: breaker transitions into Open.
+    pub opened: u64,
+    /// Total breaker transitions.
+    pub events: u64,
+    /// Submissions rerouted around a quarantined tier.
+    pub rerouted: u64,
+    /// Submissions shed because no healthy tier met the class's
+    /// accuracy floor.
+    pub shed: u64,
+    /// Per-class injected transient admission errors.
+    pub admit_faults: Vec<u64>,
+    /// Virtual tick of the final breaker close (None if still open at
+    /// the end of the run — the recovery invariant failed).
+    pub recovered_tick: Option<u64>,
+}
+
+impl FaultReport {
+    /// FNV identity of the whole ledger.
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::hash::fnv1a_u64(
+            [
+                self.plan_fingerprint,
+                self.health_fingerprint,
+                self.opened,
+                self.events,
+                self.rerouted,
+                self.shed,
+                self.recovered_tick.map_or(u64::MAX, |t| t),
+            ]
+            .into_iter()
+            .chain(self.admit_faults.iter().copied()),
+        )
+    }
+}
+
 /// Results of one QoS replay run.
 #[derive(Clone, Debug)]
 pub struct QosReport {
@@ -168,6 +220,9 @@ pub struct QosReport {
     /// scheduler model, fingerprinted by [`QosReport::sched_line`].
     pub sim_preempted: Vec<u64>,
     pub sim_shed: Vec<u64>,
+    /// The fault/containment ledger, present iff the run had a
+    /// [`QosRunConfig::fault`] spec.
+    pub fault: Option<FaultReport>,
     pub wall_s: f64,
 }
 
@@ -229,6 +284,35 @@ impl QosReport {
         )
     }
 
+    /// The fault-containment identity line (None for faultless runs):
+    /// like [`QosReport::trace_line`] it is a pure function of (spec,
+    /// trace, policy, sim) — `scripts/check.sh --chaos` runs the same
+    /// seed twice and diffs this line, and the chaos suite pins it
+    /// byte-identical across worker counts.
+    pub fn fault_line(&self) -> Option<String> {
+        let f = self.fault.as_ref()?;
+        let admits: Vec<String> = self
+            .per_class
+            .iter()
+            .zip(&f.admit_faults)
+            .map(|(c, n)| format!("{}={n}", c.name))
+            .collect();
+        Some(format!(
+            "fault trace {:#018x} plan {:#018x} opened {} events {} rerouted {} \
+             shed {} admit-faults [{}] recovered {}",
+            f.fingerprint(),
+            f.plan_fingerprint,
+            f.opened,
+            f.events,
+            f.rerouted,
+            f.shed,
+            admits.join(", "),
+            f.recovered_tick
+                .map(|t| t.to_string())
+                .unwrap_or_else(|| "none".to_string()),
+        ))
+    }
+
     /// Human-readable summary.
     pub fn render(&self) -> String {
         let mut s = format!(
@@ -242,6 +326,10 @@ impl QosReport {
                 .map(|t| t.to_string())
                 .unwrap_or_else(|| "none".to_string()),
         );
+        if let Some(line) = self.fault_line() {
+            s.push_str(&line);
+            s.push('\n');
+        }
         for c in &self.per_class {
             let tiers: Vec<String> =
                 c.served_by_tier.iter().map(|n| n.to_string()).collect();
@@ -303,6 +391,29 @@ impl QosReport {
             ("sim_preempted", u64_arr(&self.sim_preempted)),
             ("sim_shed", u64_arr(&self.sim_shed)),
         ]);
+        let fault = match &self.fault {
+            None => Value::Null,
+            Some(f) => Value::obj(vec![
+                ("fingerprint", Value::Str(format!("{:#018x}", f.fingerprint()))),
+                (
+                    "plan_fingerprint",
+                    Value::Str(format!("{:#018x}", f.plan_fingerprint)),
+                ),
+                (
+                    "health_fingerprint",
+                    Value::Str(format!("{:#018x}", f.health_fingerprint)),
+                ),
+                ("opened", Value::Int(f.opened as i64)),
+                ("events", Value::Int(f.events as i64)),
+                ("rerouted", Value::Int(f.rerouted as i64)),
+                ("shed", Value::Int(f.shed as i64)),
+                ("admit_faults", u64_arr(&f.admit_faults)),
+                (
+                    "recovered_tick",
+                    f.recovered_tick.map(|t| Value::Int(t as i64)).unwrap_or(Value::Null),
+                ),
+            ]),
+        };
         let family: Vec<Value> = router
             .family()
             .variants()
@@ -368,6 +479,7 @@ impl QosReport {
             ),
             ("wall_s", Value::Num(self.wall_s)),
             ("sched", sched),
+            ("fault", fault),
             ("family", Value::Arr(family)),
             ("classes", Value::Arr(classes)),
             ("split_history", Value::Arr(history)),
@@ -493,6 +605,9 @@ impl LaneSim {
                     p99_us: (total + 1) * self.costs[t],
                     rejected_delta: removed,
                     queue: total as i64,
+                    // Failure/straggler deltas come from the fault
+                    // overlay, not the lane model.
+                    ..Default::default()
                 }
             })
             .collect()
@@ -537,8 +652,29 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
     let mut burst_submitted = vec![0u64; n_classes];
     let mut burst_approx = vec![0u64; n_classes];
     let mut rejected = vec![0u64; n_classes];
+    let mut admit_faults = vec![0u64; n_classes];
     let mut event_ticks = 0u64;
     let mut drain_ticks = 0u64;
+
+    // The virtual half of the fault storm: overlay the plan's events
+    // onto the lane model's observations, so the breaker ledger is a
+    // pure function of (spec, trace, policy, sim) — worker-count
+    // independent by construction.
+    let plan = match &cfg.fault {
+        Some(spec) => Some(FaultPlan::generate(spec, n_tiers)?),
+        None => None,
+    };
+    let overlay = |tick_no: u64, obs: &mut [LaneObservation]| {
+        let Some(plan) = &plan else { return };
+        for v in &plan.virtual_events {
+            if v.tick == tick_no {
+                if let Some(o) = obs.get_mut(v.tier) {
+                    o.failed_delta += v.failed;
+                    o.straggler_delta += v.stragglers;
+                }
+            }
+        }
+    };
 
     let t0 = Instant::now();
     let (class_metrics, wait_failed) = std::thread::scope(|scope| -> Result<_> {
@@ -551,7 +687,7 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
                 // measurement, so this single FIFO collector cannot
                 // inflate one class's percentiles with head-of-line
                 // waiting on another's slower lane.
-                match pending.wait_with_latency() {
+                match pending.wait_with_latency_timeout(Duration::from_secs(30)) {
                     Ok((_, latency_us)) => metrics[class].record_request(latency_us),
                     Err(_) => wait_failed[class] += 1,
                 }
@@ -564,19 +700,33 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
             // Virtual time drives the controller: fire every tick due
             // before this arrival, regardless of wall-clock slip.
             while ev.at_us >= next_tick_us {
-                router.tick(&sim.tick());
+                let mut obs = sim.tick();
                 event_ticks += 1;
+                overlay(event_ticks, &mut obs);
+                router.tick(&obs);
                 next_tick_us += interval;
             }
             let target = Duration::from_micros(ev.at_us);
-            let elapsed = start.elapsed();
-            if target > elapsed {
-                std::thread::sleep(target - elapsed);
-            }
+            std::thread::sleep(target.saturating_sub(start.elapsed()));
             let image = image_for(ev.image_seed, image_size);
-            let (tier, sub) = router.submit(server, ev.class, image)?;
-            sim.arrive(tier, ev.class);
             submitted[ev.class] += 1;
+            let (tier, sub) = match router.submit(server, ev.class, image) {
+                Ok(routed) => routed,
+                // An injected transient admission error fails before
+                // admission: tally it (it belongs to the fault ledger)
+                // and move on. Anything else is a real failure.
+                Err(e)
+                    if matches!(
+                        e.downcast_ref::<ServeError>(),
+                        Some(ServeError::Transient)
+                    ) =>
+                {
+                    admit_faults[ev.class] += 1;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            sim.arrive(tier, ev.class);
             served_by_tier[ev.class][tier] += 1;
             if in_burst(ev.at_us) {
                 burst_submitted[ev.class] += 1;
@@ -591,15 +741,19 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
                 Submission::Rejected => rejected[ev.class] += 1,
             }
         }
-        // Drain tail: keep ticking until the virtual backlog is gone and
-        // every class is back on the exact variant (bounded — a policy
-        // that cannot restore, e.g. under a persistent breach, must not
-        // loop forever).
+        // Drain tail: keep ticking until the virtual backlog is gone,
+        // every class is back on the exact variant, and every breaker
+        // has closed again (bounded — a policy that cannot restore,
+        // e.g. under a persistent breach, must not loop forever).
         while drain_ticks < 2000
-            && !(sim.idle() && router.levels().iter().all(|&l| l == 0))
+            && !(sim.idle()
+                && router.levels().iter().all(|&l| l == 0)
+                && router.health_all_closed())
         {
-            router.tick(&sim.tick());
+            let mut obs = sim.tick();
             drain_ticks += 1;
+            overlay(event_ticks + drain_ticks, &mut obs);
+            router.tick(&obs);
         }
         drop(done_tx);
         Ok(collector.join().expect("qos replay collector thread"))
@@ -666,6 +820,17 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
         })
         .collect();
 
+    let fault = plan.as_ref().map(|p| FaultReport {
+        plan_fingerprint: p.fingerprint(),
+        health_fingerprint: router.health_fingerprint(),
+        opened: router.health_opened(),
+        events: router.health_events().len() as u64,
+        rerouted: router.rerouted(),
+        shed: router.quarantine_shed(),
+        admit_faults: admit_faults.clone(),
+        recovered_tick: router.health_recovered_tick(),
+    });
+
     Ok(QosReport {
         seed: cfg.seed,
         trace_fingerprint: trace_fp,
@@ -681,6 +846,7 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
         reserved: shares.iter().map(|s| s.reserved as u64).collect(),
         sim_preempted: sim.preempted.clone(),
         sim_shed: sim.shed.clone(),
+        fault,
         wall_s,
     })
 }

@@ -25,6 +25,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use super::super::fault::{BreakerConfig, BreakerState, HealthBoard, HealthEvent};
 use super::super::metrics::Snapshot;
 use super::super::server::{Server, Submission};
 use super::controller::{Controller, DecisionRecord, LaneObservation};
@@ -35,6 +36,15 @@ struct RouterState {
     ctl: Controller,
     /// Per-class WRR credit accumulator (milli-tier units).
     acc: Vec<u32>,
+    /// Per-tier circuit breakers: an Open tier is quarantined and
+    /// submissions resolve to the nearest healthy tier instead.
+    health: HealthBoard,
+    /// Submissions served by a different tier than routed, because the
+    /// routed tier was quarantined.
+    rerouted: u64,
+    /// Submissions shed because no healthy tier satisfied the class's
+    /// accuracy floor.
+    quarantine_shed: u64,
 }
 
 /// Class-aware router over a variant family.
@@ -46,13 +56,26 @@ pub struct QosRouter {
 impl QosRouter {
     /// Build a router; the policy is validated against the family.
     pub fn new(family: VariantFamily, policy: QosPolicy) -> Result<Self> {
+        Self::with_breaker(family, policy, BreakerConfig::default())
+    }
+
+    /// [`QosRouter::new`] with explicit circuit-breaker thresholds.
+    pub fn with_breaker(
+        family: VariantFamily,
+        policy: QosPolicy,
+        breaker: BreakerConfig,
+    ) -> Result<Self> {
         policy.validate(&family)?;
         let n = policy.classes.len();
+        let tiers = family.len();
         Ok(Self {
             family,
             state: Mutex::new(RouterState {
                 ctl: Controller::new(policy),
                 acc: vec![0; n],
+                health: HealthBoard::new(tiers, breaker),
+                rerouted: 0,
+                quarantine_shed: 0,
             }),
         })
     }
@@ -82,19 +105,45 @@ impl QosRouter {
         }
     }
 
+    /// Route the next request of `class`, then resolve the routed tier
+    /// against the health board: a quarantined (Open) tier is replaced
+    /// by the nearest healthy tier still satisfying the class's
+    /// `min_accuracy_tier`, preferring the more exact neighbor on ties.
+    /// Returns `(wanted, resolved)`; `resolved` is `None` when no
+    /// qualifying tier is healthy — the request must be shed rather than
+    /// served below the class's accuracy floor.
+    pub fn resolve(&self, class: usize) -> (usize, Option<usize>) {
+        let want = self.route(class);
+        let mut st = self.state.lock().unwrap();
+        let cap = st.ctl.policy().classes[class].min_accuracy_tier;
+        let health = &mut st.health;
+        let resolved = self.family.nearest_healthy(want, cap, |t| health.allow(t));
+        match resolved {
+            Some(t) if t != want => st.rerouted += 1,
+            Some(_) => {}
+            None => st.quarantine_shed += 1,
+        }
+        (want, resolved)
+    }
+
     /// Route one image for `class` and submit it to the matching gateway
     /// lane *as that class*, so the shared scheduler's per-class
     /// admission shares and priority ordering apply (the server must be
     /// built with `Server::start_gateway_with_classes` over this
-    /// policy's `lane_shares`). Returns the tier served alongside the
-    /// admission outcome.
+    /// policy's `lane_shares`). The routed tier is health-resolved first
+    /// (see [`QosRouter::resolve`]); a fully quarantined family sheds
+    /// the request (`Submission::Rejected`) without touching the server.
+    /// Returns the tier served alongside the admission outcome.
     pub fn submit(
         &self,
         server: &Server,
         class: usize,
         image: Vec<f32>,
     ) -> Result<(usize, Submission)> {
-        let tier = self.route(class);
+        let (want, resolved) = self.resolve(class);
+        let Some(tier) = resolved else {
+            return Ok((want, Submission::Rejected));
+        };
         let sub = server.try_submit_class(&self.family.variant(tier).name, class, image)?;
         Ok((tier, sub))
     }
@@ -105,6 +154,11 @@ impl QosRouter {
     /// credit from a previous level must not skew the next one.
     pub fn tick(&self, obs: &[LaneObservation]) -> Option<DecisionRecord> {
         let mut st = self.state.lock().unwrap();
+        // Health first: the breaker must see this window's failure /
+        // straggler deltas before any submission routed after the tick.
+        let deltas: Vec<(u64, u64)> =
+            obs.iter().map(|o| (o.failed_delta, o.straggler_delta)).collect();
+        st.health.observe(&deltas);
         let decision = st.ctl.tick(obs);
         if let Some(d) = decision {
             st.acc[d.class] = 0;
@@ -125,6 +179,8 @@ impl QosRouter {
                 p99_us: delta.latency_percentile_us(0.99),
                 rejected_delta: delta.rejected,
                 queue: snap.queue,
+                failed_delta: delta.failed,
+                straggler_delta: delta.stragglers,
             });
             *base = snap;
         }
@@ -175,6 +231,48 @@ impl QosRouter {
     /// The policy (classes + controller parameters).
     pub fn policy(&self) -> QosPolicy {
         self.state.lock().unwrap().ctl.policy().clone()
+    }
+
+    /// Breaker state of one tier.
+    pub fn health_state(&self, tier: usize) -> BreakerState {
+        self.state.lock().unwrap().health.state(tier)
+    }
+
+    /// True when no tier is quarantined or probing.
+    pub fn health_all_closed(&self) -> bool {
+        self.state.lock().unwrap().health.all_closed()
+    }
+
+    /// The breaker transition ledger so far.
+    pub fn health_events(&self) -> Vec<HealthEvent> {
+        self.state.lock().unwrap().health.events().to_vec()
+    }
+
+    /// Quarantine count: transitions into `Open`.
+    pub fn health_opened(&self) -> u64 {
+        self.state.lock().unwrap().health.opened()
+    }
+
+    /// FNV fingerprint of the breaker transition ledger.
+    pub fn health_fingerprint(&self) -> u64 {
+        self.state.lock().unwrap().health.fingerprint()
+    }
+
+    /// Tick of the final breaker close once every tier is healthy again
+    /// (`None` while quarantined, or if nothing ever opened).
+    pub fn health_recovered_tick(&self) -> Option<u64> {
+        self.state.lock().unwrap().health.recovered_tick()
+    }
+
+    /// Submissions rerouted around a quarantined tier.
+    pub fn rerouted(&self) -> u64 {
+        self.state.lock().unwrap().rerouted
+    }
+
+    /// Submissions shed because no healthy tier satisfied the class's
+    /// accuracy floor.
+    pub fn quarantine_shed(&self) -> u64 {
+        self.state.lock().unwrap().quarantine_shed
     }
 }
 
@@ -274,7 +372,8 @@ mod tests {
     fn wrr_split_is_exact_over_a_credit_cycle() {
         let router = QosRouter::new(family(), one_class_policy(1)).unwrap();
         // Shift to level 500 manually: one hot tick.
-        let hot = LaneObservation { p99_us: 1_000_000, rejected_delta: 1, queue: 999 };
+        let hot =
+            LaneObservation { p99_us: 1_000_000, rejected_delta: 1, queue: 999, ..Default::default() };
         let calm = LaneObservation::default();
         router.tick(&[hot, calm]);
         assert_eq!(router.levels(), vec![500]);
@@ -292,7 +391,8 @@ mod tests {
     #[test]
     fn wrr_credit_resets_on_level_transitions() {
         let router = QosRouter::new(family(), one_class_policy(1)).unwrap();
-        let hot = LaneObservation { p99_us: 1_000_000, rejected_delta: 1, queue: 999 };
+        let hot =
+            LaneObservation { p99_us: 1_000_000, rejected_delta: 1, queue: 999, ..Default::default() };
         let calm = LaneObservation::default();
         router.tick(&[hot, calm]);
         assert_eq!(router.levels(), vec![500]);
@@ -316,5 +416,37 @@ mod tests {
         // construction, not at routing time.
         assert!(QosRouter::new(family(), one_class_policy(5)).is_err());
         assert!(QosRouter::new(family(), one_class_policy(1)).is_ok());
+    }
+
+    #[test]
+    fn quarantined_tier_is_routed_around_then_recovers() {
+        let cfg = BreakerConfig::default();
+        let router = QosRouter::new(family(), one_class_policy(1)).unwrap();
+        // A failure burst on tier 0 only: the breaker opens it.
+        let sick = LaneObservation { failed_delta: cfg.trip_failed, ..Default::default() };
+        let calm = LaneObservation::default();
+        router.tick(&[sick, calm]);
+        assert_eq!(router.health_state(0), BreakerState::Open);
+        assert_eq!(router.health_opened(), 1);
+        // Class routes to tier 0 (level 0) but tier 0 is quarantined:
+        // resolution falls to the nearest healthy tier within the cap.
+        let (want, resolved) = router.resolve(0);
+        assert_eq!(want, 0);
+        assert_eq!(resolved, Some(1));
+        assert_eq!(router.rerouted(), 1);
+        // Clean ticks: Open -> HalfOpen -> Closed; exact service resumes.
+        for _ in 0..(cfg.open_ticks + cfg.probe_ticks) {
+            router.tick(&[calm, calm]);
+        }
+        assert!(router.health_all_closed());
+        assert!(router.health_recovered_tick().is_some());
+        assert_eq!(router.resolve(0), (0, Some(0)));
+        assert_eq!(router.rerouted(), 1, "healthy routing must not count as rerouted");
+        // A tier-0-pinned class sheds while its only tier is open.
+        let pinned = QosRouter::new(family(), one_class_policy(0)).unwrap();
+        pinned.tick(&[sick, calm]);
+        let (_, resolved) = pinned.resolve(0);
+        assert_eq!(resolved, None, "accuracy floor must never be violated");
+        assert_eq!(pinned.quarantine_shed(), 1);
     }
 }

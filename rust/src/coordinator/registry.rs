@@ -137,6 +137,16 @@ impl ModelRegistry {
         self.entries.iter().find(|e| e.name == name)
     }
 
+    /// Remove a registered model by name, returning its handle (or
+    /// `None` if no such model). Later lane indices shift down, so this
+    /// is for pre-gateway composition (e.g. dropping a variant a fault
+    /// plan permanently quarantined before restarting) — a *running*
+    /// gateway's lane order is fixed at `start_gateway` time.
+    pub fn remove(&mut self, name: &str) -> Option<ModelHandle> {
+        let idx = self.entries.iter().position(|e| e.name == name)?;
+        Some(self.entries.remove(idx))
+    }
+
     /// Number of registered models.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -257,6 +267,21 @@ mod tests {
         )
         .unwrap();
         assert_eq!(reg.names(), vec!["taken", "fresh"]);
+    }
+
+    #[test]
+    fn remove_returns_the_handle_and_frees_the_name() {
+        let g = tiny_graph();
+        let mut reg = ModelRegistry::new();
+        reg.register("a", &g, &Multiplier::Exact, (1, 20, 20)).unwrap();
+        reg.register("b", &g, &Multiplier::Exact, (1, 20, 20)).unwrap();
+        assert!(reg.remove("nope").is_none());
+        let h = reg.remove("a").expect("'a' is registered");
+        assert_eq!(h.name, "a");
+        assert_eq!(reg.names(), vec!["b"], "order of the rest is preserved");
+        // The name is free again — re-registration succeeds.
+        reg.register_handle(h).unwrap();
+        assert_eq!(reg.names(), vec!["b", "a"]);
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! is ever dropped (preempted requests *are* answered, with an error).
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -42,8 +43,53 @@ use crate::nn::ops::argmax;
 use crate::runtime::{model::Input, Model, Runtime};
 
 use super::batcher::{Admit, ClassQueues, DrrPicker, LaneShare};
+use super::fault::{FaultInjector, FaultKind};
 use super::metrics::{Metrics, Snapshot};
 use super::registry::ModelRegistry;
+
+/// Typed post-admission failures. Every admitted request is answered —
+/// the drain guarantee — and when the answer is not a prediction it is
+/// one of these, wrapped in `anyhow` (match with
+/// `err.downcast_ref::<ServeError>()`, or on the display string).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The batch's worker panicked or its variant produced a poisoned
+    /// output; the worker was respawned, the batch answered with this.
+    WorkerFailed(String),
+    /// The request's deadline expired before execution (swept by the
+    /// scheduler or caught at the worker).
+    DeadlineExceeded,
+    /// Displaced from a full queue by a higher-priority arrival.
+    Preempted,
+    /// The submission raced [`Server::shutdown`].
+    ShuttingDown,
+    /// Every worker exited; queued requests are failed, not hung.
+    PoolExited,
+    /// Injected transient registry error (fault plan); retryable.
+    Transient,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::WorkerFailed(msg) => {
+                write!(f, "worker failed while executing the batch: {msg}")
+            }
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::Preempted => write!(
+                f,
+                "preempted by a higher-priority request (per-class admission)"
+            ),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::PoolExited => write!(f, "server worker pool exited"),
+            ServeError::Transient => {
+                write!(f, "transient registry error looking up the model lane (injected fault)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Batching/serving configuration (shared by every model lane).
 #[derive(Clone, Debug)]
@@ -57,6 +103,20 @@ pub struct ServeConfig {
     /// Bounded admission-queue depth per model. A full queue rejects new
     /// submissions with an error instead of growing without bound.
     pub queue_depth: usize,
+    /// Optional per-request deadline, stamped at admission. Expired
+    /// requests are answered [`ServeError::DeadlineExceeded`] — swept by
+    /// the scheduler at batch-collection time and re-checked at the
+    /// worker — instead of wasting execution on dead work. `None`
+    /// disables deadlines.
+    pub deadline: Option<Duration>,
+    /// Batch executions whose wall time reaches this many µs are counted
+    /// as stragglers in the lane metrics (the circuit breaker's
+    /// slow-path signal). `0` disables straggler accounting.
+    pub straggle_threshold_us: u64,
+    /// Optional seeded fault injector (chaos testing): draws worker
+    /// panics / stragglers / poisoned outputs around batch execution and
+    /// transient errors at admission. `None` in production.
+    pub fault: Option<Arc<FaultInjector>>,
 }
 
 impl Default for ServeConfig {
@@ -66,6 +126,9 @@ impl Default for ServeConfig {
             max_wait_us: 2000,
             workers: 1,
             queue_depth: 256,
+            deadline: None,
+            straggle_threshold_us: 0,
+            fault: None,
         }
     }
 }
@@ -105,6 +168,29 @@ struct Request {
     /// even if they dequeue responses long after they were produced.
     resp: Sender<Result<(usize, u64)>>,
     submitted: Instant,
+    /// Admission class, carried to execution so failure/deadline
+    /// counters split per class.
+    class: usize,
+    /// Absolute expiry (admission + [`ServeConfig::deadline`]), if any.
+    deadline: Option<Instant>,
+}
+
+/// Pure batch-window arithmetic, factored out of the scheduler loop so a
+/// mocked clock can regression-test it: given the oldest queued
+/// request's admission instant, "now", and the configured batch window,
+/// return whether the window has expired (the batch is ripe) and how
+/// long the scheduler may sleep before it does. Every subtraction is
+/// saturating/checked — a backwards clock observation (e.g. `now` read
+/// before `oldest` under preemption) must neither panic nor spin a hot
+/// loop with a zero timeout.
+fn batch_window(oldest: Option<Instant>, now: Instant, wait: Duration) -> (bool, Duration) {
+    let Some(t) = oldest else { return (false, wait) };
+    let ripe = now.saturating_duration_since(t) >= wait;
+    let remaining = t
+        .checked_add(wait)
+        .map(|d| d.saturating_duration_since(now))
+        .unwrap_or(Duration::ZERO);
+    (ripe, remaining.max(Duration::from_micros(1)))
 }
 
 /// Execution backend for one (worker, model) pair.
@@ -267,6 +353,28 @@ impl Pending {
             .recv()
             .map_err(|_| anyhow!("server dropped the request"))?
     }
+
+    /// Bounded [`Pending::wait`]: fails with a timeout error instead of
+    /// blocking forever. The drain guarantee means a timeout here is a
+    /// containment bug (a hung waiter), so tests use this everywhere a
+    /// bare `wait()` would turn that bug into a wedged CI job.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<usize> {
+        Ok(self.wait_with_latency_timeout(timeout)?.0)
+    }
+
+    /// Bounded [`Pending::wait_with_latency`] — see
+    /// [`Pending::wait_timeout`].
+    pub fn wait_with_latency_timeout(self, timeout: Duration) -> Result<(usize, u64)> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(answer) => answer,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("server dropped the request"))
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!(
+                "no response within {timeout:?} — the drain guarantee may be broken"
+            )),
+        }
+    }
 }
 
 /// A running multi-model gateway.
@@ -277,6 +385,12 @@ pub struct Server {
     /// classless entry for the plain constructors).
     shares: Vec<LaneShare>,
     by_name: BTreeMap<String, usize>,
+    /// Per-request deadline stamped at admission (from
+    /// [`ServeConfig::deadline`]).
+    deadline: Option<Duration>,
+    /// Admission-side fault injector (transient registry errors); the
+    /// same injector's execution schedule is drawn by the workers.
+    fault: Option<Arc<FaultInjector>>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -496,15 +610,20 @@ impl Server {
             work: Condvar::new(),
         });
 
+        let lane_metrics: Arc<Vec<Arc<Metrics>>> =
+            Arc::new(lanes.iter().map(|l| l.metrics.clone()).collect());
+
         // The one scheduling loop, whatever the lane count: waits for
-        // work, ages lanes toward ripeness (full batch / expired batch
-        // window / drain), picks the next (lane, batch) by strict class
-        // priority + per-lane deficit round robin, and pushes it at the
-        // worker pool. Exits once the gateway is closed and every lane
-        // has drained.
+        // work, sweeps expired deadlines, ages lanes toward ripeness
+        // (full batch / expired batch window / drain), picks the next
+        // (lane, batch) by strict class priority + per-lane deficit
+        // round robin, and pushes it at the worker pool. Exits once the
+        // gateway is closed and every lane has drained.
         {
             let sched = sched.clone();
             let depths: Vec<Arc<AtomicI64>> = lanes.iter().map(|l| l.depth.clone()).collect();
+            let metrics = lane_metrics.clone();
+            let sweep_deadlines = config.deadline.is_some();
             let n_lanes = specs.len();
             threads.push(std::thread::spawn(move || {
                 let mut drr = DrrPicker::new(n_lanes, max_batch);
@@ -513,6 +632,28 @@ impl Server {
                         let mut st = sched.state.lock().unwrap();
                         loop {
                             let now = Instant::now();
+                            // Skip dead work at batch-collection time:
+                            // an expired request is answered right here
+                            // instead of occupying a worker slot.
+                            if sweep_deadlines {
+                                for (i, q) in st.queues.iter_mut().enumerate() {
+                                    if q.is_empty() {
+                                        continue;
+                                    }
+                                    let dead =
+                                        q.sweep(|r| r.deadline.is_some_and(|d| now >= d));
+                                    if dead.is_empty() {
+                                        continue;
+                                    }
+                                    depths[i].fetch_sub(dead.len() as i64, Ordering::Relaxed);
+                                    for (class, req) in dead {
+                                        metrics[i].record_deadline(class);
+                                        let _ = req.resp.send(Err(anyhow::Error::new(
+                                            ServeError::DeadlineExceeded,
+                                        )));
+                                    }
+                                }
+                            }
                             let ready: Vec<Option<u32>> = st
                                 .queues
                                 .iter()
@@ -520,15 +661,11 @@ impl Server {
                                     if q.is_empty() {
                                         return None;
                                     }
+                                    let oldest = q.fronts().map(|r| r.submitted).min();
                                     let ripe = !st.open
                                         || wait.is_zero()
                                         || q.len() >= max_batch
-                                        || q.fronts()
-                                            .map(|r| r.submitted)
-                                            .min()
-                                            .is_some_and(|t| {
-                                                now.saturating_duration_since(t) >= wait
-                                            });
+                                        || batch_window(oldest, now, wait).0;
                                     if ripe { q.best_priority() } else { None }
                                 })
                                 .collect();
@@ -546,15 +683,27 @@ impl Server {
                                 continue;
                             }
                             // Queued but not ripe: sleep until the
-                            // earliest batch-window deadline, or until a
-                            // submission/shutdown signals sooner.
-                            let timeout = st
+                            // earliest batch-window expiry or request
+                            // deadline, or until a submission/shutdown
+                            // signals sooner.
+                            let window_timeout = st
                                 .queues
                                 .iter()
-                                .flat_map(|q| q.fronts().map(|r| r.submitted))
+                                .filter_map(|q| q.fronts().map(|r| r.submitted).min())
+                                .map(|t| batch_window(Some(t), now, wait).1)
                                 .min()
-                                .map(|t| (t + wait).saturating_duration_since(now))
-                                .unwrap_or(wait)
+                                .unwrap_or(wait);
+                            // Per-class FIFO order means each front
+                            // holds its class's earliest deadline.
+                            let deadline_timeout = st
+                                .queues
+                                .iter()
+                                .flat_map(|q| q.fronts().filter_map(|r| r.deadline))
+                                .min()
+                                .map(|d| d.saturating_duration_since(now))
+                                .unwrap_or(Duration::MAX);
+                            let timeout = window_timeout
+                                .min(deadline_timeout)
                                 .max(Duration::from_micros(1));
                             st = sched.work.wait_timeout(st, timeout).unwrap().0;
                         }
@@ -565,8 +714,8 @@ impl Server {
                             // must backpressure the scheduler, never
                             // block submissions on the state mutex.
                             if let Err(failed) = job_tx.send((lane, batch)) {
-                                // The worker pool is gone (a worker
-                                // panicked): close the gateway so new
+                                // The worker pool is gone (every worker
+                                // exited): close the gateway so new
                                 // submissions fail fast, and answer the
                                 // failed batch plus everything still
                                 // queued — an exited pool must surface
@@ -575,17 +724,17 @@ impl Server {
                                 st.open = false;
                                 let (_, unsent) = failed.0;
                                 for req in unsent {
-                                    let _ = req
-                                        .resp
-                                        .send(Err(anyhow!("server worker pool exited")));
+                                    let _ = req.resp.send(Err(anyhow::Error::new(
+                                        ServeError::PoolExited,
+                                    )));
                                 }
                                 for (i, q) in st.queues.iter_mut().enumerate() {
                                     let drained = q.pick(usize::MAX);
                                     depths[i].fetch_sub(drained.len() as i64, Ordering::Relaxed);
                                     for req in drained {
-                                        let _ = req
-                                            .resp
-                                            .send(Err(anyhow!("server worker pool exited")));
+                                        let _ = req.resp.send(Err(anyhow::Error::new(
+                                            ServeError::PoolExited,
+                                        )));
                                     }
                                 }
                                 break;
@@ -599,58 +748,146 @@ impl Server {
 
         // The shared worker pool: each worker builds one backend per lane
         // on its own thread (PJRT handles are not Send), reports
-        // readiness, then serves jobs for any lane.
+        // readiness, then serves jobs for any lane. Batch execution runs
+        // under `catch_unwind` supervision: a panicking backend (or an
+        // injected fault) answers its batch with a typed `WorkerFailed`
+        // and the worker respawns its backends with capped exponential
+        // backoff instead of taking the pool down.
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let factories: Arc<Vec<BackendFactory>> =
             Arc::new(specs.iter().map(|s| s.factory.clone()).collect());
-        let lane_metrics: Arc<Vec<Arc<Metrics>>> =
-            Arc::new(lanes.iter().map(|l| l.metrics.clone()).collect());
         for _ in 0..n_workers {
             let ready = ready_tx.clone();
             let jobs = job_rx.clone();
             let factories = factories.clone();
             let metrics = lane_metrics.clone();
+            let fault = config.fault.clone();
+            let straggle_threshold_us = config.straggle_threshold_us;
             threads.push(std::thread::spawn(move || {
-                let mut backends = Vec::with_capacity(factories.len());
-                for make in factories.iter() {
-                    match make() {
-                        Ok(b) => backends.push(b),
-                        Err(e) => {
-                            let _ = ready.send(Err(e));
-                            return;
-                        }
+                let build_all = |factories: &[BackendFactory]| -> Result<Vec<Backend>> {
+                    factories.iter().map(|make| make()).collect()
+                };
+                let mut backends = match build_all(&factories) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
                     }
-                }
+                };
                 let _ = ready.send(Ok(()));
+                let mut consecutive_panics = 0u32;
                 loop {
                     // Pull the next batch job (work-sharing across the pool).
                     let (lane, batch) = match jobs.lock().unwrap().recv() {
                         Ok(j) => j,
                         Err(_) => break,
                     };
-                    let backend = &mut backends[lane];
                     let m = &metrics[lane];
+                    // Last-chance deadline check: a request can expire
+                    // between the scheduler's sweep and execution.
+                    let now = Instant::now();
+                    let mut live = Vec::with_capacity(batch.len());
+                    for req in batch {
+                        if req.deadline.is_some_and(|d| now >= d) {
+                            m.record_deadline(req.class);
+                            let _ = req
+                                .resp
+                                .send(Err(anyhow::Error::new(ServeError::DeadlineExceeded)));
+                        } else {
+                            live.push(req);
+                        }
+                    }
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let batch = live;
+                    let backend = &mut backends[lane];
                     let count = batch.len();
                     let image_size = backend.image_size();
                     let mut flat = Vec::with_capacity(count * image_size);
                     for r in &batch {
                         flat.extend_from_slice(&r.image);
                     }
+                    let injected = fault.as_ref().and_then(|f| f.next_exec());
+                    let straggle_us =
+                        fault.as_ref().map(|f| f.plan().spec.straggle_us).unwrap_or(0);
                     let t0 = Instant::now();
-                    let preds = backend.execute(&flat, count);
-                    m.record_batch(count, t0.elapsed().as_micros() as u64);
-                    match preds {
-                        Ok(preds) => {
-                            for (req, pred) in batch.into_iter().zip(preds) {
-                                let latency_us = req.submitted.elapsed().as_micros() as u64;
-                                m.record_request(latency_us);
-                                let _ = req.resp.send(Ok((pred, latency_us)));
+                    let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>> {
+                        match injected {
+                            Some(FaultKind::Panic) => {
+                                panic!("injected worker panic (fault plan)")
+                            }
+                            Some(FaultKind::Straggle) => {
+                                // Slow batch: stall inside the timed
+                                // region so straggler accounting fires.
+                                std::thread::sleep(Duration::from_micros(straggle_us));
+                            }
+                            Some(FaultKind::Poison) => {
+                                anyhow::bail!("injected poisoned variant output (fault plan)")
+                            }
+                            None => {}
+                        }
+                        backend.execute(&flat, count)
+                    }));
+                    let batch_us = Instant::now().saturating_duration_since(t0).as_micros()
+                        as u64;
+                    m.record_batch(count, batch_us);
+                    if straggle_threshold_us > 0 && batch_us >= straggle_threshold_us {
+                        m.record_straggler();
+                    }
+                    match outcome {
+                        Ok(executed) => {
+                            consecutive_panics = 0;
+                            match executed {
+                                Ok(preds) => {
+                                    for (req, pred) in batch.into_iter().zip(preds) {
+                                        let latency_us = Instant::now()
+                                            .saturating_duration_since(req.submitted)
+                                            .as_micros()
+                                            as u64;
+                                        m.record_request(latency_us);
+                                        let _ = req.resp.send(Ok((pred, latency_us)));
+                                    }
+                                }
+                                Err(e) => {
+                                    let msg = format!("{e:#}");
+                                    for req in batch {
+                                        m.record_failed(req.class);
+                                        let _ = req.resp.send(Err(anyhow::Error::new(
+                                            ServeError::WorkerFailed(msg.clone()),
+                                        )));
+                                    }
+                                }
                             }
                         }
-                        Err(e) => {
-                            let msg = format!("{e:#}");
+                        Err(payload) => {
+                            // Panicked mid-batch: answer every waiter
+                            // (drain guarantee), then respawn this
+                            // worker's backends — a panic may have left
+                            // them in a torn state — with capped
+                            // exponential backoff between attempts.
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "worker panicked".to_string());
                             for req in batch {
-                                let _ = req.resp.send(Err(anyhow!("{msg}")));
+                                m.record_failed(req.class);
+                                let _ = req.resp.send(Err(anyhow::Error::new(
+                                    ServeError::WorkerFailed(msg.clone()),
+                                )));
+                            }
+                            consecutive_panics += 1;
+                            let backoff_ms =
+                                (1u64 << consecutive_panics.min(6) as u64).min(50);
+                            std::thread::sleep(Duration::from_millis(backoff_ms));
+                            match build_all(&factories) {
+                                Ok(fresh) => backends = fresh,
+                                // Respawn failed: this worker exits. If
+                                // the whole pool goes, the scheduler's
+                                // pool-exit path answers everything
+                                // still queued.
+                                Err(_) => break,
                             }
                         }
                     }
@@ -679,6 +916,8 @@ impl Server {
             lanes,
             shares,
             by_name,
+            deadline: config.deadline,
+            fault: config.fault.clone(),
             threads: Mutex::new(threads),
         })
     }
@@ -742,18 +981,29 @@ impl Server {
             "request class {class} out of range ({} classes registered)",
             self.shares.len()
         );
+        // Injected transient registry error: fails *before* admission
+        // (nothing to drain), so callers see a retryable `Err` — the
+        // loadgen's retry mode matches on it.
+        if let Some(injector) = &self.fault {
+            if injector.next_admit() {
+                return Err(anyhow::Error::new(ServeError::Transient));
+            }
+        }
         let (resp_tx, resp_rx) = mpsc::channel();
+        let now = Instant::now();
         let request = Request {
             image,
             resp: resp_tx,
-            submitted: Instant::now(),
+            submitted: now,
+            class,
+            deadline: self.deadline.and_then(|d| now.checked_add(d)),
         };
         let outcome = {
             let mut st = self.sched.state.lock().unwrap();
             // A submit racing shutdown's queue close gets a graceful
             // rejection, never a panic or a dropped response channel.
             if !st.open {
-                return Err(anyhow!("server is shutting down"));
+                return Err(anyhow::Error::new(ServeError::ShuttingDown));
             }
             let outcome = st.queues[idx].admit(class, request);
             if matches!(outcome, Admit::Admitted) {
@@ -773,9 +1023,7 @@ impl Server {
             Admit::Preempted { class: victim_class, item } => {
                 // The displaced request was admitted once, so it is
                 // answered — with an error naming why.
-                let _ = item.resp.send(Err(anyhow!(
-                    "preempted by a higher-priority request (per-class admission)"
-                )));
+                let _ = item.resp.send(Err(anyhow::Error::new(ServeError::Preempted)));
                 lane.metrics.record_preempted(victim_class);
                 self.sched.work.notify_one();
                 Ok(Submission::Admitted(Pending { rx: resp_rx }))
@@ -1209,6 +1457,7 @@ mod tests {
                 max_wait_us: 200,
                 workers: 1,
                 queue_depth: 2,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1222,7 +1471,7 @@ mod tests {
         }
         let admitted = pending.len();
         for p in pending {
-            p.wait().unwrap();
+            p.wait_timeout(Duration::from_secs(30)).unwrap();
         }
         let m = server.metrics_snapshot();
         assert_eq!(m.requests as usize, admitted);
@@ -1254,9 +1503,161 @@ mod tests {
             .collect();
         server.shutdown(); // must drain, not drop
         for p in pending {
-            assert!(p.wait().is_ok(), "admitted request dropped at shutdown");
+            assert!(
+                p.wait_timeout(Duration::from_secs(30)).is_ok(),
+                "admitted request dropped at shutdown"
+            );
         }
         assert_eq!(server.metrics_snapshot().requests, 24);
         assert!(server.submit("exact", vec![0.0; 28 * 28]).is_err());
+    }
+
+    /// Satellite regression (mocked clock): the batch-window arithmetic
+    /// must survive `now` observations that land *before* the oldest
+    /// submission (e.g. the scheduler read its clock, was preempted, and
+    /// a fresher submission stamped a later instant) without panicking,
+    /// and must never return a zero sleep that would spin the loop hot.
+    #[test]
+    fn batch_window_arithmetic_survives_clock_skew() {
+        let wait = Duration::from_micros(2000);
+        let now = Instant::now();
+        // Empty queue: not ripe, sleep a full window.
+        assert_eq!(batch_window(None, now, wait), (false, wait));
+        // Fresh submission: not ripe, remaining sleep ≈ the window.
+        let (ripe, sleep) = batch_window(Some(now), now, wait);
+        assert!(!ripe);
+        assert!(sleep > Duration::ZERO && sleep <= wait);
+        // Aged past the window: ripe, minimal (non-zero) sleep.
+        let old = now.checked_sub(Duration::from_millis(50)).unwrap();
+        let (ripe, sleep) = batch_window(Some(old), now, wait);
+        assert!(ripe);
+        assert!(sleep >= Duration::from_micros(1));
+        // Backwards clock: `oldest` is *after* `now`. Must not panic;
+        // not ripe; sleep stays bounded by skew + window.
+        let future = now.checked_add(Duration::from_millis(50)).unwrap();
+        let (ripe, sleep) = batch_window(Some(future), now, wait);
+        assert!(!ripe);
+        assert!(sleep >= wait && sleep <= Duration::from_millis(50) + wait + wait);
+    }
+
+    #[test]
+    fn wait_timeout_bounds_a_hung_waiter() {
+        // A response channel nobody will ever answer: bare `wait()`
+        // would hang forever; the bounded wait fails with a timeout.
+        let (_tx, rx) = mpsc::channel::<Result<(usize, u64)>>();
+        let p = Pending { rx };
+        let err = p
+            .wait_timeout(Duration::from_millis(20))
+            .expect_err("unanswered channel must time out");
+        assert!(format!("{err:#}").contains("drain guarantee"), "{err:#}");
+        // Dropping the sender is a distinct, immediate failure.
+        let (tx, rx) = mpsc::channel::<Result<(usize, u64)>>();
+        drop(tx);
+        let err = Pending { rx }
+            .wait_timeout(Duration::from_secs(5))
+            .expect_err("dropped channel must error");
+        assert!(format!("{err:#}").contains("dropped"), "{err:#}");
+    }
+
+    /// Tentpole: injected worker panics are contained — the batch is
+    /// answered with a typed `WorkerFailed`, the worker respawns, and
+    /// service continues for later submissions.
+    #[test]
+    fn injected_panic_is_contained_and_worker_respawns() {
+        use super::super::fault::{FaultPlan, FaultSpec};
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        // Panic-only plan: 3 scheduled panics, then clean forever.
+        let spec = FaultSpec {
+            seed: 11,
+            points: 3,
+            panic_milli: 1000,
+            straggle_milli: 0,
+            poison_milli: 0,
+            admit_milli: 0,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(&spec, 1).unwrap();
+        let server = Server::start_native(
+            graph,
+            Multiplier::Exact,
+            (1, 28, 28),
+            ServeConfig {
+                max_batch: 1,
+                max_wait_us: 0,
+                workers: 1,
+                fault: Some(Arc::new(FaultInjector::new(Arc::new(plan)))),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut failed = 0usize;
+        let mut served = 0usize;
+        for _ in 0..8 {
+            let p = server.submit("default", vec![0.5; 28 * 28]).unwrap();
+            match p.wait_timeout(Duration::from_secs(30)) {
+                Ok(_) => served += 1,
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<ServeError>()
+                            .is_some_and(|s| matches!(s, ServeError::WorkerFailed(_))),
+                        "panic must surface as WorkerFailed: {e:#}"
+                    );
+                    failed += 1;
+                }
+            }
+        }
+        // All 3 scheduled panics fired (single worker, sequential
+        // submits) and the respawned worker served everything after.
+        assert_eq!(failed, 3, "every scheduled panic answers its batch");
+        assert_eq!(served, 5, "the pool must keep serving after respawn");
+        let m = server.metrics_snapshot();
+        assert_eq!(m.failed, 3);
+        assert_eq!(m.requests as usize, served);
+        server.shutdown();
+    }
+
+    /// Tentpole: with a deadline configured, requests that age out in
+    /// the queue are answered `DeadlineExceeded` — never executed, never
+    /// hung — and counted.
+    #[test]
+    fn expired_deadlines_are_swept_not_served() {
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let server = Server::start_native(
+            graph,
+            Multiplier::Exact,
+            (1, 28, 28),
+            ServeConfig {
+                max_batch: 4,
+                // Batch window far beyond the deadline: queued requests
+                // expire before the window ripens them.
+                max_wait_us: 500_000,
+                workers: 1,
+                deadline: Some(Duration::from_millis(5)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let pending: Vec<Pending> = (0..3)
+            .map(|_| server.submit("default", vec![0.5; 28 * 28]).unwrap())
+            .collect();
+        let mut expired = 0usize;
+        for p in pending {
+            match p.wait_timeout(Duration::from_secs(30)) {
+                Ok(_) => {}
+                Err(e) => {
+                    assert!(
+                        e.downcast_ref::<ServeError>()
+                            .is_some_and(|s| *s == ServeError::DeadlineExceeded),
+                        "expiry must be typed DeadlineExceeded: {e:#}"
+                    );
+                    expired += 1;
+                }
+            }
+        }
+        assert!(expired > 0, "a 5ms deadline under a 500ms batch window must expire");
+        assert_eq!(server.metrics_snapshot().deadline_expired as usize, expired);
+        server.shutdown();
     }
 }

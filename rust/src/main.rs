@@ -389,6 +389,7 @@ fn serve(argv: &[String]) -> Result<()> {
         max_wait_us: args.get_as("wait-us")?,
         workers: args.get_as("workers")?,
         queue_depth: args.get_as("queue-depth")?,
+        ..Default::default()
     };
     // Fail with a clean CLI error here — the infallible-signature
     // `start_native` below would otherwise turn a bad flag into a panic.
@@ -500,6 +501,20 @@ fn loadgen(argv: &[String]) -> Result<()> {
         "assert the least-important class served at least this burst fraction \
          approximate AND the exact variant was restored (0 = no assertion)",
     )
+    .opt(
+        "fault-plan",
+        "",
+        "seeded fault plan 'seed=..[,points=..][,panic=..][,straggle=..][,poison=..]\
+         [,straggle-us=..][,admit=..][,admit-points=..][,window-ticks=..]' \
+         (empty = no injection)",
+    )
+    .opt("deadline-ms", "0", "per-request deadline from admission, ms (0 = none)")
+    .opt("retry", "0", "retry budget for rejected/failed submissions (0 = off)")
+    .opt(
+        "retry-backoff-us",
+        "2000",
+        "base retry backoff (us); exponential per attempt with seeded jitter",
+    )
     .parse(argv)?;
 
     if args.get_nonempty("classes").is_some() {
@@ -522,14 +537,10 @@ fn loadgen(argv: &[String]) -> Result<()> {
         let mul = multiplier_by_name(name)?;
         registry.register(name, &graph, &mul, dims)?;
     }
+    let fault_spec = parse_fault_arg(args)?;
     let server = Server::start_gateway(
         registry,
-        ServeConfig {
-            max_batch: args.get_as("batch")?,
-            max_wait_us: args.get_as("wait-us")?,
-            workers: args.get_as("workers")?,
-            queue_depth: args.get_as("queue-depth")?,
-        },
+        serve_config_with_faults(args, &fault_spec, mix.len())?,
     )?;
 
     let burst_period: u64 = args.get_as("burst-period-ms")?;
@@ -550,20 +561,92 @@ fn loadgen(argv: &[String]) -> Result<()> {
             })
         })
         .transpose()?,
+        retry: parse_retry_arg(args)?,
     };
     let report = loadgen::run(&server, &cfg)?;
     server.shutdown();
+    let m = server.metrics_snapshot();
     print!("{}", report.render());
     if let Some(out) = args.get_nonempty("out") {
         std::fs::write(out, report.to_json().to_json())?;
         println!("wrote {out}");
     }
-    anyhow::ensure!(
-        report.dropped == 0,
-        "{} admitted requests were dropped — the drain guarantee is broken",
-        report.dropped
-    );
+    if fault_spec.is_some() {
+        // Under injected faults `dropped` legitimately counts the
+        // requests answered with a typed failure (that is the point of
+        // the harness) — report the containment counters instead of
+        // enforcing the healthy-run invariant.
+        println!(
+            "fault injection: {} failed batch answers, {} stragglers, {} deadline-expired",
+            m.failed, m.stragglers, m.deadline_expired
+        );
+    } else {
+        anyhow::ensure!(
+            report.dropped == 0,
+            "{} admitted requests were dropped — the drain guarantee is broken",
+            report.dropped
+        );
+    }
     Ok(())
+}
+
+/// Parse `--fault-plan` into a [`FaultSpec`] (None when the flag is empty).
+fn parse_fault_arg(args: &Args) -> Result<Option<heam::coordinator::fault::FaultSpec>> {
+    match args.get_nonempty("fault-plan") {
+        Some(s) => Ok(Some(heam::coordinator::fault::FaultSpec::parse(s)?)),
+        None => Ok(None),
+    }
+}
+
+/// Parse `--retry`/`--retry-backoff-us` into a loadgen retry policy.
+fn parse_retry_arg(args: &Args) -> Result<Option<heam::coordinator::loadgen::RetryConfig>> {
+    let attempts: u32 = args.get_as("retry")?;
+    (attempts > 0)
+        .then(|| {
+            Ok::<_, anyhow::Error>(heam::coordinator::loadgen::RetryConfig {
+                attempts,
+                backoff_us: args.get_as("retry-backoff-us")?,
+            })
+        })
+        .transpose()
+}
+
+/// Build the gateway config shared by `loadgen` and `loadgen --classes`:
+/// the batching/queue knobs plus the failure-containment fields — the
+/// per-request deadline, the straggler threshold (tied to the plan's
+/// injected straggle duration so injected stragglers always register),
+/// and the live [`FaultInjector`] generated from the plan for `tiers`
+/// lanes.
+fn serve_config_with_faults(
+    args: &Args,
+    fault_spec: &Option<heam::coordinator::fault::FaultSpec>,
+    tiers: usize,
+) -> Result<ServeConfig> {
+    use heam::coordinator::fault::{FaultInjector, FaultPlan};
+    let deadline_ms: u64 = args.get_as("deadline-ms")?;
+    let fault = match fault_spec {
+        Some(spec) => {
+            let plan = FaultPlan::generate(spec, tiers)?;
+            println!(
+                "fault plan {:#018x}: {} exec points, {} admit points, window {} ticks",
+                plan.fingerprint(),
+                spec.points,
+                spec.admit_points,
+                spec.window_ticks
+            );
+            Some(Arc::new(FaultInjector::new(Arc::new(plan))))
+        }
+        None => None,
+    };
+    Ok(ServeConfig {
+        max_batch: args.get_as("batch")?,
+        max_wait_us: args.get_as("wait-us")?,
+        workers: args.get_as("workers")?,
+        queue_depth: args.get_as("queue-depth")?,
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        straggle_threshold_us: fault_spec.as_ref().map_or(0, |s| s.straggle_us),
+        fault,
+    })
 }
 
 /// Echo the per-class admission shares a QoS gateway will enforce.
@@ -632,12 +715,8 @@ fn loadgen_qos(args: &Args) -> Result<()> {
         }
     };
     let (registry, family) = register_family_arg(args.get("family"), &graph, dims)?;
-    let config = ServeConfig {
-        max_batch: args.get_as("batch")?,
-        max_wait_us: args.get_as("wait-us")?,
-        workers: args.get_as("workers")?,
-        queue_depth: args.get_as("queue-depth")?,
-    };
+    let fault_spec = parse_fault_arg(args)?;
+    let config = serve_config_with_faults(args, &fault_spec, family.len())?;
     let interval_ms: u64 = args.get_as("qos-interval-ms")?;
     let policy = QosPolicy {
         classes,
@@ -675,6 +754,7 @@ fn loadgen_qos(args: &Args) -> Result<()> {
             workers: args.get_as("sim-workers")?,
             queue_depth: args.get_as("sim-queue-depth")?,
         },
+        fault: fault_spec.clone(),
     };
     let report = qos::replay::run(&server, &router, &cfg)?;
     server.shutdown();
@@ -717,6 +797,44 @@ fn loadgen_qos(args: &Args) -> Result<()> {
             least.name,
             frac * 100.0,
             expect * 100.0
+        );
+    }
+    if let Some(fr) = &report.fault {
+        // Containment self-check: the fault plan must actually have
+        // exercised each containment path, and the gateway must have
+        // come back. A plan that never fired would make the chaos smoke
+        // vacuous.
+        let m = server.metrics_snapshot();
+        let deadline_ms: u64 = args.get_as("deadline-ms")?;
+        anyhow::ensure!(
+            m.failed > 0,
+            "fault plan ran but no batch was answered with a typed failure \
+             (panic/poison containment never fired)"
+        );
+        anyhow::ensure!(
+            fr.opened > 0,
+            "fault plan ran but no circuit breaker opened (quarantine never fired)"
+        );
+        anyhow::ensure!(
+            fr.recovered_tick.is_some(),
+            "circuit breakers never closed again after the fault window \
+             (exact-tier service did not resume)"
+        );
+        anyhow::ensure!(
+            deadline_ms == 0 || m.deadline_expired > 0,
+            "--deadline-ms {deadline_ms} set but no request was swept as expired \
+             (deadline containment never fired)"
+        );
+        println!(
+            "fault containment check OK: {} failed answers contained, {} breaker \
+             opens quarantined (rerouted {}, shed {}), {} deadline-expired swept, \
+             recovered at tick {}",
+            m.failed,
+            fr.opened,
+            fr.rerouted,
+            fr.shed,
+            m.deadline_expired,
+            fr.recovered_tick.unwrap_or(0)
         );
     }
     Ok(())

@@ -1,0 +1,312 @@
+//! Chaos suite: seeded fault injection against the serving gateway.
+//!
+//! Three containment layers under test, all driven by the deterministic
+//! [`FaultPlan`] harness:
+//!
+//! * worker supervision — injected panics/poisoned outputs are caught,
+//!   the batch is answered with a typed `WorkerFailed` (never hung), the
+//!   worker respawns, and service resumes once the storm passes;
+//! * deadlines — requests that expire in the queue are swept and
+//!   answered `DeadlineExceeded` without wasting worker time;
+//! * circuit breaking — the QoS router quarantines a sick tier, reroutes
+//!   to the nearest healthy accuracy tier without violating any class's
+//!   accuracy floor, sheds what cannot be served, and recovers.
+//!
+//! The deterministic halves (plan, breaker ledger, routing, admit
+//! faults) are pinned byte-identical across worker counts via the
+//! `fault trace` line — the same contract `tests/qos.rs` pins for the
+//! decision trace.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use heam::coordinator::fault::{FaultInjector, FaultKind, FaultPlan, FaultSpec};
+use heam::coordinator::qos::replay;
+use heam::coordinator::qos::{
+    ControllerConfig, QosPolicy, QosRouter, QosRunConfig, RequestClass, SimConfig,
+};
+use heam::coordinator::registry::ModelRegistry;
+use heam::coordinator::server::{ServeConfig, Server, Submission};
+use heam::mult::MultKind;
+use heam::nn::lenet;
+use heam::nn::multiplier::Multiplier;
+
+fn one_model_gateway(config: ServeConfig) -> Server {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    let graph = lenet::load_graph(&bundle).unwrap();
+    let mut reg = ModelRegistry::new();
+    reg.register("m", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+    Server::start_gateway(reg, config).unwrap()
+}
+
+/// `hi` pinned to the exact tier, `lo` free to degrade — the same shape
+/// as the QoS suite, so quarantine exercises both the reroute and the
+/// shed path.
+fn policy() -> QosPolicy {
+    QosPolicy {
+        classes: vec![
+            RequestClass {
+                name: "hi".into(),
+                priority: 0,
+                max_p99_us: 25_000,
+                min_accuracy_tier: 0,
+                weight: 1.0,
+            },
+            RequestClass {
+                name: "lo".into(),
+                priority: 1,
+                max_p99_us: 60_000,
+                min_accuracy_tier: 2,
+                weight: 3.0,
+            },
+        ],
+        ctl: ControllerConfig { interval_us: 10_000, ..Default::default() },
+    }
+}
+
+/// Three-tier family gateway with an optional live fault injector.
+fn family_gateway(workers: usize, fault: Option<Arc<FaultInjector>>) -> (Server, QosRouter) {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    let graph = lenet::load_graph(&bundle).unwrap();
+    let mut reg = ModelRegistry::new();
+    let family = reg
+        .register_family(
+            "lenet",
+            &graph,
+            &[
+                ("exact".to_string(), Multiplier::Exact),
+                ("heam".to_string(), Multiplier::Lut(Arc::new(MultKind::Heam.lut()))),
+                ("ou3".to_string(), Multiplier::Lut(Arc::new(MultKind::OuL3.lut()))),
+            ],
+            (1, 28, 28),
+        )
+        .unwrap();
+    let config = ServeConfig {
+        max_batch: 8,
+        max_wait_us: 500,
+        workers,
+        queue_depth: 64,
+        straggle_threshold_us: 20_000,
+        fault,
+        ..Default::default()
+    };
+    let shares = policy().lane_shares(config.queue_depth).unwrap();
+    let server = Server::start_gateway_with_classes(reg, config, shares).unwrap();
+    let router = QosRouter::new(family, policy()).unwrap();
+    (server, router)
+}
+
+/// Live panic/poison storm on a single worker: every batch of the storm
+/// window fails by injection, every one is answered with a typed error
+/// within the bounded wait (contained, never hung), the worker respawns,
+/// and exact service resumes the moment the plan is exhausted.
+#[test]
+fn live_panic_storm_is_contained_and_service_resumes() {
+    let spec = FaultSpec {
+        seed: 17,
+        points: 6,
+        panic_milli: 600,
+        straggle_milli: 0,
+        poison_milli: 400,
+        admit_milli: 0,
+        ..Default::default()
+    };
+    let plan = FaultPlan::generate(&spec, 1).unwrap();
+    assert!(plan.scheduled(FaultKind::Panic) > 0, "plan must contain a panic");
+    assert!(plan.scheduled(FaultKind::Poison) > 0, "plan must contain a poison");
+    let server = one_model_gateway(ServeConfig {
+        max_batch: 1,
+        max_wait_us: 0,
+        workers: 1,
+        queue_depth: 8,
+        fault: Some(Arc::new(FaultInjector::new(Arc::new(plan)))),
+        ..Default::default()
+    });
+    let (mut ok, mut failed) = (0u64, 0u64);
+    // Sequential single-request batches: the fault sequence maps 1:1
+    // onto submissions, so the outcome split is exact, not statistical.
+    for _ in 0..20 {
+        match server.try_submit("m", vec![0.3; 28 * 28]).unwrap() {
+            Submission::Admitted(p) => match p.wait_timeout(Duration::from_secs(30)) {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(
+                        msg.contains("worker failed"),
+                        "storm answers must be typed worker failures: {msg}"
+                    );
+                    assert!(!msg.contains("drain guarantee"), "request hung: {msg}");
+                    failed += 1;
+                }
+            },
+            Submission::Rejected => panic!("sequential load cannot overflow the queue"),
+        }
+    }
+    // Exactly the 6 scheduled fault points fail; everything after the
+    // plan is exhausted is served by the respawned worker.
+    assert_eq!(failed, 6, "every scheduled fault fires exactly once");
+    assert_eq!(ok, 14, "service must resume after the storm");
+    let m = server.metrics_snapshot();
+    assert_eq!(m.failed, 6);
+    assert_eq!(m.requests, 14);
+    assert_eq!(m.class_failed.iter().sum::<u64>(), m.failed);
+    server.shutdown();
+}
+
+/// Deadline flood: requests whose deadline expires while they sit in a
+/// lazy batch window are swept and answered `DeadlineExceeded` — and the
+/// server-side expiry ledger matches the client's count exactly. A full
+/// batch, by contrast, dispatches immediately and beats the deadline.
+#[test]
+fn expired_deadlines_are_swept_and_ledgered() {
+    let server = one_model_gateway(ServeConfig {
+        max_batch: 16,
+        max_wait_us: 300_000,
+        workers: 1,
+        queue_depth: 32,
+        deadline: Some(Duration::from_millis(50)),
+        ..Default::default()
+    });
+    // 5 requests < max_batch under a 300ms window: nothing dispatches
+    // before the 50ms deadline, so all five must be swept.
+    let mut pending = Vec::new();
+    for _ in 0..5 {
+        match server.try_submit("m", vec![0.2; 28 * 28]).unwrap() {
+            Submission::Admitted(p) => pending.push(p),
+            Submission::Rejected => panic!("queue has room"),
+        }
+    }
+    let mut expired = 0u64;
+    for p in pending {
+        let e = p
+            .wait_timeout(Duration::from_secs(30))
+            .expect_err("an unripe batch cannot beat a 50ms deadline");
+        assert!(
+            format!("{e:#}").contains("deadline exceeded"),
+            "expiry must be typed: {e:#}"
+        );
+        expired += 1;
+    }
+    let m = server.metrics_snapshot();
+    assert_eq!(m.deadline_expired, expired, "expiry ledger must balance");
+    assert_eq!(m.class_deadline.iter().sum::<u64>(), m.deadline_expired);
+    assert_eq!(m.requests, 0, "no expired request may reach a worker");
+    // A full batch dispatches immediately — the deadline only kills
+    // requests the scheduler would otherwise let rot in the window.
+    let full: Vec<_> = (0..16)
+        .map(|_| match server.try_submit("m", vec![0.2; 28 * 28]).unwrap() {
+            Submission::Admitted(p) => p,
+            Submission::Rejected => panic!("queue has room"),
+        })
+        .collect();
+    for p in full {
+        p.wait_timeout(Duration::from_secs(30))
+            .expect("a full batch dispatches before the deadline");
+    }
+    assert_eq!(server.metrics_snapshot().requests, 16);
+    server.shutdown();
+}
+
+/// The chaos acceptance test: a fixed-seed fault storm replayed through
+/// the QoS router at 1, 2 and 4 workers. The deterministic ledgers —
+/// `qos trace` and `fault trace` — must be byte-identical at every
+/// worker count; the storm must actually quarantine (breaker opens,
+/// reroutes, sheds), the pinned class must never be served below its
+/// accuracy floor, every event must be accounted for exactly once, and
+/// the breakers must close again after the fault window.
+#[test]
+fn fault_trace_is_byte_identical_at_any_worker_count() {
+    let spec = FaultSpec { seed: 13, ..Default::default() };
+    let cfg = QosRunConfig {
+        seed: 5,
+        requests: 1500,
+        rate_rps: 8000.0,
+        burst: None,
+        sim: SimConfig::default(),
+        fault: Some(spec.clone()),
+    };
+    let mut trace_lines = Vec::new();
+    let mut fault_lines = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let plan = FaultPlan::generate(&spec, 3).unwrap();
+        let injector = Arc::new(FaultInjector::new(Arc::new(plan)));
+        let (server, router) = family_gateway(workers, Some(injector));
+        let report = replay::run(&server, &router, &cfg).unwrap();
+        server.shutdown();
+
+        let fr = report.fault.as_ref().expect("fault spec must yield a ledger");
+        // The storm really fired and was contained.
+        assert!(fr.opened > 0, "breakers must open under the virtual storm");
+        assert!(fr.rerouted > 0, "degradable traffic must be rerouted");
+        assert!(fr.shed > 0, "pinned traffic must be shed during quarantine");
+        assert!(
+            fr.admit_faults.iter().sum::<u64>() > 0,
+            "transient admission faults must fire"
+        );
+        assert!(
+            fr.recovered_tick.is_some(),
+            "breakers must all close again after the {}-tick fault window",
+            spec.window_ticks
+        );
+        // Quarantine never violates the accuracy floor: the pinned class
+        // is shed, not degraded.
+        let hi = &report.per_class[0];
+        assert_eq!(
+            hi.served_by_tier[1..].iter().sum::<u64>(),
+            0,
+            "hi is pinned to tier 0 even mid-quarantine: {hi:?}"
+        );
+        // Exact-tier service resumes: the run ends with every class on
+        // the exact variant.
+        assert_eq!(report.levels_final, vec![0, 0]);
+        // Every trace event is answered exactly once: completed, shed
+        // (admission or quarantine), failed, or an injected admit fault.
+        for (c, class) in report.per_class.iter().enumerate() {
+            assert_eq!(
+                class.completed + class.rejected + class.failed + fr.admit_faults[c],
+                class.submitted,
+                "chaos ledger must balance for {}",
+                class.name
+            );
+            assert_eq!(
+                class.served_by_tier.iter().sum::<u64>() + fr.admit_faults[c],
+                class.submitted,
+                "routing ledger must balance for {}",
+                class.name
+            );
+        }
+        trace_lines.push(report.trace_line());
+        fault_lines.push(report.fault_line().expect("fault line present"));
+    }
+    assert_eq!(trace_lines[0], trace_lines[1], "qos trace, 1 vs 2 workers");
+    assert_eq!(trace_lines[0], trace_lines[2], "qos trace, 1 vs 4 workers");
+    assert_eq!(fault_lines[0], fault_lines[1], "fault trace, 1 vs 2 workers");
+    assert_eq!(fault_lines[0], fault_lines[2], "fault trace, 1 vs 4 workers");
+}
+
+/// Plan generation is a pure function of (spec, tiers): same spec, same
+/// fingerprint; different seeds diverge; the spec parser round-trips the
+/// CLI surface; degenerate specs are rejected.
+#[test]
+fn fault_plans_are_deterministic_and_validated() {
+    let spec = FaultSpec { seed: 21, ..Default::default() };
+    let a = FaultPlan::generate(&spec, 3).unwrap();
+    let b = FaultPlan::generate(&spec, 3).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint(), "same spec, same plan");
+    let c = FaultPlan::generate(&FaultSpec { seed: 22, ..spec.clone() }, 3).unwrap();
+    assert_ne!(a.fingerprint(), c.fingerprint(), "seeds must diverge");
+    // Every enabled fault kind is guaranteed present by construction, so
+    // chaos assertions can rely on each containment path firing.
+    for kind in [FaultKind::Panic, FaultKind::Straggle, FaultKind::Poison] {
+        assert!(a.scheduled(kind) > 0, "{kind:?} enabled but never scheduled");
+    }
+    // CLI surface: the parser accepts the documented keys...
+    let parsed = FaultSpec::parse("seed=21,points=10,panic=500,admit=0").unwrap();
+    assert_eq!(parsed.seed, 21);
+    assert_eq!(parsed.points, 10);
+    assert_eq!(parsed.panic_milli, 500);
+    assert_eq!(parsed.admit_milli, 0);
+    // ...and rejects unknown keys and impossible probabilities.
+    assert!(FaultSpec::parse("seed=1,bogus=2").is_err());
+    assert!(FaultSpec::parse("seed=1,panic=800,poison=800").is_err());
+}

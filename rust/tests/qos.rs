@@ -73,6 +73,7 @@ fn family_gateway(workers: usize) -> (Server, QosRouter) {
         max_wait_us: 500,
         workers,
         queue_depth: 64,
+        ..Default::default()
     };
     // Class-aware admission: router submissions carry the class index,
     // so the gateway needs the policy's per-class queue shares.
@@ -91,6 +92,7 @@ fn burst_cfg(requests: usize, rate_rps: f64, factor: f64, burst_ms: u64) -> QosR
         // closes it — the shape the restore check needs.
         burst: Some(BurstConfig { period_ms: 60_000, burst_ms, factor }),
         sim: SimConfig::default(),
+        fault: None,
     }
 }
 
@@ -214,6 +216,7 @@ fn steady_headroom_never_shifts() {
             rate_rps: 2000.0,
             burst: None,
             sim: SimConfig::default(),
+            fault: None,
         },
     )
     .unwrap();

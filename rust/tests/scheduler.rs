@@ -41,6 +41,7 @@ fn high_priority_arrivals_preempt_saturated_low_priority_queue() {
             max_wait_us: 200,
             workers: 1,
             queue_depth: 8,
+            ..Default::default()
         },
         vec![
             LaneShare { priority: 0, reserved: 6 }, // hi
@@ -73,11 +74,12 @@ fn high_priority_arrivals_preempt_saturated_low_priority_queue() {
     // be preempted, so all must complete.
     let mut completed = hi_admitted;
     for p in hi_pending {
-        p.wait().expect("admitted hi request must never be preempted");
+        p.wait_timeout(std::time::Duration::from_secs(30))
+            .expect("admitted hi request must never be preempted");
     }
     let mut failed = 0usize;
     for p in lo_pending {
-        match p.wait() {
+        match p.wait_timeout(std::time::Duration::from_secs(30)) {
             Ok(_) => completed += 1,
             Err(e) => {
                 failed += 1;
@@ -130,6 +132,7 @@ fn submit_racing_shutdown_is_graceful() {
                 max_wait_us: 500,
                 workers: 2,
                 queue_depth: 32,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -156,10 +159,11 @@ fn submit_racing_shutdown_is_graceful() {
                             }
                         }
                         // Every admitted request is answered across the
-                        // shutdown (the drain guarantee) — a hang here
-                        // fails the test via the harness timeout.
+                        // shutdown (the drain guarantee) — the bounded
+                        // wait fails fast instead of hanging the suite.
                         for p in pending {
-                            p.wait().expect("admitted request must be drained");
+                            p.wait_timeout(std::time::Duration::from_secs(30))
+                                .expect("admitted request must be drained");
                         }
                     })
                 })
@@ -202,6 +206,7 @@ fn single_scheduler_serves_many_lanes_without_starvation() {
             max_wait_us: 500,
             workers: 2,
             queue_depth: 64,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -240,6 +245,7 @@ fn classes_share_the_lane_freely_under_headroom() {
             max_wait_us: 500,
             workers: 1,
             queue_depth: 16,
+            ..Default::default()
         },
         vec![
             LaneShare { priority: 0, reserved: 4 },
@@ -254,11 +260,115 @@ fn classes_share_the_lane_freely_under_headroom() {
         }
     }
     for p in pending {
-        p.wait().unwrap();
+        p.wait_timeout(std::time::Duration::from_secs(30)).unwrap();
     }
     let m = server.metrics_snapshot();
     assert_eq!(m.requests, 12);
     assert_eq!(m.rejected, 0);
     assert_eq!(m.preempted, 0, "no contention, no preemption");
     server.shutdown();
+}
+
+/// PR 6 satellite: drain-on-shutdown racing an injected worker panic.
+/// A fault plan that panics every batch is armed while class-tagged
+/// clients flood the lane and `shutdown()` lands mid-storm. Invariants:
+/// every admitted request is answered within the bounded wait (success,
+/// `preempted`, `worker failed`, or `shutting down` — never a hang),
+/// and the per-class preempt/failed/served counters balance the
+/// client-side ledger exactly.
+#[test]
+fn drain_on_shutdown_survives_injected_worker_panics() {
+    use heam::coordinator::fault::{FaultInjector, FaultPlan, FaultSpec};
+    for round in 0..4u64 {
+        let spec = FaultSpec {
+            seed: 31 + round,
+            points: 12,
+            panic_milli: 700,
+            straggle_milli: 0,
+            poison_milli: 300,
+            admit_milli: 0,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(&spec, 1).unwrap();
+        let server = one_model_gateway(
+            ServeConfig {
+                max_batch: 2,
+                max_wait_us: 200,
+                workers: 2,
+                queue_depth: 16,
+                fault: Some(Arc::new(FaultInjector::new(Arc::new(plan)))),
+                ..Default::default()
+            },
+            vec![
+                LaneShare { priority: 0, reserved: 8 },
+                LaneShare { priority: 1, reserved: 8 },
+            ],
+        );
+        let outcomes: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|c| {
+                    let server = &server;
+                    s.spawn(move || {
+                        let mut pending = Vec::new();
+                        for i in 0..20 {
+                            let img = vec![((c + i) % 9) as f32 * 0.1; 28 * 28];
+                            match server.try_submit_class("m", (c + i) % 2, img) {
+                                Ok(Submission::Admitted(p)) => pending.push(p),
+                                Ok(Submission::Rejected) => {}
+                                Err(e) => assert!(
+                                    format!("{e:#}").contains("shutting down"),
+                                    "unexpected submit error: {e:#}"
+                                ),
+                            }
+                        }
+                        let (mut ok, mut failed) = (0u64, 0u64);
+                        let mut preempted = 0u64;
+                        for p in pending {
+                            match p.wait_timeout(std::time::Duration::from_secs(30)) {
+                                Ok(_) => ok += 1,
+                                Err(e) => {
+                                    let msg = format!("{e:#}");
+                                    assert!(
+                                        !msg.contains("drain guarantee"),
+                                        "request hung through shutdown: {msg}"
+                                    );
+                                    if msg.contains("preempted") {
+                                        preempted += 1;
+                                    } else {
+                                        assert!(
+                                            msg.contains("worker failed")
+                                                || msg.contains("shutting down")
+                                                || msg.contains("worker pool exited"),
+                                            "unexpected drain answer: {msg}"
+                                        );
+                                        failed += 1;
+                                    }
+                                }
+                            }
+                        }
+                        (ok, preempted, failed)
+                    })
+                })
+                .collect();
+            // Land the shutdown at a different point of the storm each
+            // round.
+            std::thread::sleep(std::time::Duration::from_micros(300 * round));
+            server.shutdown();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let ok: u64 = outcomes.iter().map(|o| o.0).sum();
+        let preempted: u64 = outcomes.iter().map(|o| o.1).sum();
+        let m = server.metrics_snapshot();
+        // Server- and client-side ledgers agree exactly: successes with
+        // successes, preemptions with preemptions, and the per-class
+        // splits with their totals.
+        assert_eq!(m.requests, ok, "round {round}: served ledger must balance");
+        assert_eq!(
+            m.preempted, preempted,
+            "round {round}: preemption ledger must balance"
+        );
+        assert_eq!(m.class_preempted.iter().sum::<u64>(), m.preempted);
+        assert_eq!(m.class_failed.iter().sum::<u64>(), m.failed);
+        assert_eq!(m.class_rejected.iter().sum::<u64>(), m.rejected);
+    }
 }

@@ -44,6 +44,7 @@ fn shutdown_stress_answers_every_admitted_request() {
         max_wait_us: 1000,
         workers: 2,
         queue_depth: 64,
+        ..Default::default()
     });
     let names = ["exact", "heam"];
     let clients = 16usize;
@@ -64,10 +65,13 @@ fn shutdown_stress_answers_every_admitted_request() {
                             Err(_) => refused += 1, // queue full or shut down: clean failure
                         }
                     }
-                    // ...then every admitted one must resolve Ok.
+                    // ...then every admitted one must resolve Ok. The
+                    // bounded wait turns a broken drain guarantee into a
+                    // failure instead of a hung suite.
                     let mut answered = 0usize;
                     for p in pending {
-                        p.wait().expect("admitted request must be answered");
+                        p.wait_timeout(std::time::Duration::from_secs(30))
+                            .expect("admitted request must be answered");
                         answered += 1;
                     }
                     (answered, refused)
@@ -144,6 +148,7 @@ fn queue_gauge_never_negative_under_concurrent_load() {
         max_wait_us: 100,
         workers: 2,
         queue_depth: 8,
+        ..Default::default()
     });
     let stop = std::sync::atomic::AtomicBool::new(false);
     std::thread::scope(|s| {
@@ -199,6 +204,7 @@ fn soak_bounded_queue_sheds_load_without_dropping() {
         max_wait_us: 500,
         workers: 1,
         queue_depth,
+        ..Default::default()
     });
     let cfg = LoadgenConfig {
         seed: 99,
@@ -208,6 +214,7 @@ fn soak_bounded_queue_sheds_load_without_dropping() {
         mode: Mode::Open { rate_rps: 200_000.0 },
         mix: mix(),
         burst: None,
+        retry: None,
     };
     let report = loadgen::run(&server, &cfg).unwrap();
     server.shutdown();
@@ -242,6 +249,7 @@ fn loadgen_trace_replays_identically_per_seed() {
             mode: mode.clone(),
             mix: mix(),
             burst: None,
+            retry: None,
         };
         let a = generate_trace(&cfg(5)).unwrap();
         let b = generate_trace(&cfg(5)).unwrap();
@@ -265,6 +273,7 @@ fn closed_loop_gateway_run_is_fully_served() {
         max_wait_us: 1000,
         workers: 2,
         queue_depth: 64,
+        ..Default::default()
     });
     let report = loadgen::run(
         &server,
@@ -274,6 +283,7 @@ fn closed_loop_gateway_run_is_fully_served() {
             mode: Mode::Closed { clients: 4 },
             mix: mix(),
             burst: None,
+            retry: None,
         },
     )
     .unwrap();

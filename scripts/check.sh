@@ -7,6 +7,7 @@
 #   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
 #   scripts/check.sh --qos      # QoS routing smoke only (builds if needed)
 #   scripts/check.sh --sched    # shared-scheduler smoke only (builds if needed)
+#   scripts/check.sh --chaos    # fault-injection / containment smoke only (builds if needed)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,14 +16,16 @@ run_python=1
 run_loadgen=1
 run_qos=1
 run_sched=1
+run_chaos=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0 ;;
-  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0 ;;
-  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0 ;;
-  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0 ;;
+  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0 ;;
+  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0 ;;
+  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0 ;;
+  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0 ;;
+  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos]" >&2; exit 2 ;;
 esac
 
 # Deterministic serving smoke: a short fixed-seed open-loop soak, run
@@ -142,6 +145,53 @@ sched_smoke() {
   echo "sched smoke OK: $line_a"
 }
 
+# Fixed-seed chaos smoke: the QoS replay under a seeded fault storm
+# (worker panics, stragglers, poisoned outputs, transient admission
+# errors) plus a per-request deadline. Run twice:
+#   * the deterministic `fault trace` line (plan + breaker-ledger
+#     fingerprints, quarantine opens, reroute/shed counts, per-class
+#     admit faults, recovery tick) must be byte-identical across runs —
+#     the containment ledger is a pure function of (seed, policy, sim,
+#     trace), never of live worker timing;
+#   * the binary's own `fault containment check OK` line asserts the
+#     storm actually fired and was contained: failed batches answered,
+#     breakers opened and quarantined a tier, expired requests swept,
+#     every breaker closed again after the fault window.
+chaos_smoke() {
+  echo "== chaos containment smoke =="
+  local bin=target/release/heam
+  cargo build --release
+  local classes='hi:prio=0,p99_ms=25,tier=0,weight=1;lo:prio=1,p99_ms=60,tier=2,weight=3'
+  local out_a out_b
+  out_a=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 13 --requests 6000 --rate 2000 \
+          --burst-period-ms 60000 --burst-ms 300 --burst-factor 10 \
+          --qos-interval-ms 20 --fault-plan seed=13 --deadline-ms 15 \
+          --out /tmp/heam_chaos_a.json)
+  out_b=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 13 --requests 6000 --rate 2000 \
+          --burst-period-ms 60000 --burst-ms 300 --burst-factor 10 \
+          --qos-interval-ms 20 --fault-plan seed=13 --deadline-ms 15 \
+          --out /tmp/heam_chaos_b.json)
+  local line_a line_b
+  line_a=$(printf '%s\n' "$out_a" | grep '^fault trace')
+  line_b=$(printf '%s\n' "$out_b" | grep '^fault trace')
+  if [ "$line_a" != "$line_b" ]; then
+    echo "!! fault traces diverged across identical seeds:" >&2
+    echo "   run A: $line_a" >&2
+    echo "   run B: $line_b" >&2
+    exit 1
+  fi
+  for out in "$out_a" "$out_b"; do
+    if ! printf '%s\n' "$out" | grep -q 'fault containment check OK'; then
+      echo "!! chaos containment assertion did not pass:" >&2
+      printf '%s\n' "$out" >&2
+      exit 1
+    fi
+  done
+  echo "chaos smoke OK: $line_a"
+}
+
 skipped=""
 if [ "$run_rust" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
@@ -155,6 +205,7 @@ if [ "$run_rust" = 1 ]; then
     run_loadgen=0
     run_qos=0
     run_sched=0
+    run_chaos=0
   fi
 fi
 
@@ -182,6 +233,15 @@ if [ "$run_sched" = 1 ]; then
   else
     echo "!! cargo not found — sched smoke skipped" >&2
     skipped="${skipped:+$skipped,}sched"
+  fi
+fi
+
+if [ "$run_chaos" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    chaos_smoke
+  else
+    echo "!! cargo not found — chaos smoke skipped" >&2
+    skipped="${skipped:+$skipped,}chaos"
   fi
 fi
 

@@ -2,9 +2,9 @@
 //! controller with the seeded class-trace replay and record the split
 //! trajectory in `BENCH_qos.json`.
 //!
-//! Three phases over one 3-variant family gateway (exact / HEAM / OU-L3
-//! variants of the same LeNet, random weights unless trained artifacts
-//! exist):
+//! Four phases — three over one 3-variant family gateway (exact / HEAM
+//! / OU-L3 variants of the same LeNet, random weights unless trained
+//! artifacts exist), one over a heterogeneous per-layer frontier family:
 //!
 //! 1. **Steady headroom** — arrivals far below virtual capacity; the
 //!    controller must hold every class on the exact variant (zero
@@ -16,6 +16,11 @@
 //!    controller must restore the exact variant once the burst passes.
 //! 3. **Replay** — phase 2 re-run from the same seed on a fresh router;
 //!    the deterministic `qos trace` line must be byte-identical.
+//! 4. **Frontier family** — the hand-picked ladder is replaced by a
+//!    family registered from the greedy per-layer Pareto frontier
+//!    (`ModelRegistry::register_frontier`, PR 7); the burst replay must
+//!    route low-priority traffic across frontier tiers with the qos
+//!    trace line byte-identical at 1, 2 and 4 gateway workers.
 //!
 //! Run: `cargo bench --bench qos_routing`
 
@@ -31,6 +36,9 @@ use heam::coordinator::server::{ServeConfig, Server};
 use heam::mult::MultKind;
 use heam::nn::lenet;
 use heam::nn::multiplier::Multiplier;
+use heam::opt::assign::{self, AssignObjective};
+use heam::opt::distributions::DistSet;
+use heam::opt::Frontier;
 use heam::util::json::Value;
 
 fn policy() -> QosPolicy {
@@ -185,6 +193,67 @@ fn main() {
         println!("-- replay determinism OK --\n{line_b}\n{}", report.sched_line());
         phases.push(("replay", report.to_json(&router)));
         server.shutdown();
+    }
+
+    // 4. Frontier family: heterogeneous per-layer variants from the
+    //    greedy Pareto frontier, replayed at 1/2/4 gateway workers —
+    //    the qos trace line must not depend on the worker count.
+    {
+        let frontier_gateway = |workers: usize| {
+            let graph = lenet::load("artifacts/weights/digits.htb")
+                .or_else(|_| lenet::load_graph(&lenet::random_bundle(1, 28, 42)))
+                .expect("graph");
+            let layers: Vec<String> =
+                graph.assignable_layers().iter().map(|s| s.to_string()).collect();
+            let obj = AssignObjective::new(&DistSet::synthetic_lenet_like(), &layers, 1.0)
+                .expect("objective");
+            let frontier =
+                Frontier::from_candidates("lenet", &layers, 7, assign::greedy_frontier(&obj));
+            assert!(
+                frontier.interior_points() >= 3,
+                "greedy frontier must carry >= 3 interior points, got {}",
+                frontier.interior_points()
+            );
+            let mut reg = ModelRegistry::new();
+            let family = reg
+                .register_frontier("lenet", &graph, &frontier, (1, 28, 28))
+                .expect("frontier family");
+            let config = ServeConfig {
+                max_batch: 16,
+                max_wait_us: 1000,
+                workers,
+                queue_depth: 64,
+                ..Default::default()
+            };
+            let shares = policy().lane_shares(config.queue_depth).unwrap();
+            let server = Server::start_gateway_with_classes(reg, config, shares).unwrap();
+            let router = QosRouter::new(family, policy()).unwrap();
+            (server, router)
+        };
+        let mut lines = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let (server, router) = frontier_gateway(workers);
+            let report = replay::run(&server, &router, &burst_cfg()).unwrap();
+            assert_eq!(
+                report.per_class[0].approx_fraction, 0.0,
+                "the tier-0-pinned class must stay exact on the frontier family too"
+            );
+            assert!(
+                report.per_class[1].burst_approx_fraction() > 0.0,
+                "the burst must route low-priority traffic across frontier tiers"
+            );
+            lines.push(report.trace_line());
+            if workers == 4 {
+                println!("-- frontier family (workers 1/2/4) --\n{}", report.render());
+                phases.push(("frontier_family", report.to_json(&router)));
+            }
+            server.shutdown();
+        }
+        assert!(
+            lines.windows(2).all(|w| w[0] == w[1]),
+            "the frontier-family qos trace must be byte-identical at workers 1/2/4"
+        );
+        println!("-- frontier trace worker-invariance OK --\n{}", lines[0]);
     }
 
     let phases: Vec<Value> = phases

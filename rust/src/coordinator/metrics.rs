@@ -243,10 +243,21 @@ impl Snapshot {
     /// exact). This is how the load generator isolates one run's latency
     /// histogram and batch stats on a reused server.
     pub fn delta_since(&self, base: &Snapshot) -> Snapshot {
+        // Pad to the *longer* of the two vectors: merged snapshots can
+        // carry per-class vectors of different lengths (single-class
+        // lanes alongside multi-class ones), and the old version silently
+        // dropped base entries past `self`'s length — or panicked on the
+        // underflow when a shorter `self` met a longer base. Saturating
+        // subtraction keeps a stale-baseline misuse observable as a zero
+        // instead of a wrapped counter.
         let sub_padded = |a: &[u64], b: &[u64]| -> Vec<u64> {
-            a.iter()
-                .enumerate()
-                .map(|(i, &v)| v - b.get(i).copied().unwrap_or(0))
+            (0..a.len().max(b.len()))
+                .map(|i| {
+                    a.get(i)
+                        .copied()
+                        .unwrap_or(0)
+                        .saturating_sub(b.get(i).copied().unwrap_or(0))
+                })
                 .collect()
         };
         Snapshot {
@@ -266,12 +277,9 @@ impl Snapshot {
             // Gauge semantics: the window "delta" of a level is its
             // current value, not a subtraction against the baseline.
             queue: self.queue,
-            latency_buckets: self
-                .latency_buckets
-                .iter()
-                .zip(&base.latency_buckets)
-                .map(|(a, b)| a - b)
-                .collect(),
+            // Same padding rule: zip() would truncate to the shorter
+            // histogram and lose the tail buckets.
+            latency_buckets: sub_padded(&self.latency_buckets, &base.latency_buckets),
         }
     }
 
@@ -488,6 +496,41 @@ mod tests {
         // percentiles.
         assert!(d.latency_percentile_us(0.5) >= 512_000);
         assert_eq!(d.mean_batch(), 1.0);
+    }
+
+    /// Regression: deltas between snapshots whose per-class vectors have
+    /// different lengths (a merged multi-class view against a
+    /// single-class baseline, or vice versa) must pad to the longer
+    /// vector instead of truncating or underflowing.
+    #[test]
+    fn delta_since_pads_unequal_class_vectors() {
+        let wide = Metrics::with_classes(3);
+        wide.record_rejected(0);
+        wide.record_rejected(2);
+        wide.record_failed(1);
+        let narrow = Metrics::default();
+        narrow.record_rejected(0);
+        // Wide current vs narrow baseline: classes past the baseline's
+        // length keep their full counts.
+        let d = wide.snapshot().delta_since(&narrow.snapshot());
+        assert_eq!(d.class_rejected, vec![0, 0, 1]);
+        assert_eq!(d.class_failed, vec![0, 1, 0]);
+        // Narrow current vs wide baseline: the result still spans every
+        // class the baseline knew about (all saturated to zero), rather
+        // than silently dropping them — the old code panicked here in
+        // debug builds and wrapped in release.
+        let d = narrow.snapshot().delta_since(&wide.snapshot());
+        assert_eq!(d.class_rejected, vec![0, 0, 0]);
+        assert_eq!(d.class_failed, vec![0, 0, 0]);
+        // Latency histograms follow the same rule: a truncated baseline
+        // histogram must not shear off the current snapshot's tail.
+        let m = Metrics::default();
+        m.record_request(1_000_000); // bucket 19
+        let mut base = m.snapshot();
+        base.latency_buckets.truncate(4);
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(d.latency_buckets.len(), 25);
+        assert!(d.latency_percentile_us(1.0) >= 512_000);
     }
 
     #[test]

@@ -9,6 +9,14 @@
 //! — the positive/negative-multiplier spectrum Spantidi/Zervakis steer
 //! traffic across. Ties are broken by name so tier assignment is a pure
 //! function of the member set, never of registration order.
+//!
+//! Members need not be *homogeneous*: a family built from a per-layer
+//! assignment Pareto frontier (`ModelRegistry::register_frontier`, fed
+//! by `heam optimize --per-layer`) has one heterogeneous variant per
+//! frontier point, each carrying a different multiplier per layer. The
+//! ordering key is then the handle's MAC-weighted composite NMED — the
+//! same scalar axis, so the QoS router and controller steer frontier
+//! tiers exactly as they steer the 1-D whole-model accuracy ladder.
 
 use anyhow::{bail, Result};
 
@@ -222,6 +230,38 @@ mod tests {
         assert_eq!(fam.nearest_healthy(1, 2, |_| false), None);
         // `want` beyond the cap is clamped before searching.
         assert_eq!(fam.nearest_healthy(2, 1, |_| true), Some(1));
+    }
+
+    /// Heterogeneous per-layer handles (frontier points) order by their
+    /// composite MAC-weighted NMED on the same axis as whole-model
+    /// variants — mixed families are steerable like homogeneous ones.
+    #[test]
+    fn frontier_style_heterogeneous_members_order_by_composite_nmed() {
+        let bundle = lenet::random_bundle(1, 20, 3);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let n = graph.assignable_layers().len();
+        let heam = Multiplier::Lut(Arc::new(MultKind::Heam.lut()));
+        // conv1 exact, everything else heam: strictly between the exact
+        // and all-heam corners on the composite-NMED axis.
+        let mut mixed = vec![heam.clone(); n];
+        mixed[0] = Multiplier::Exact;
+        let hs = vec![
+            graph
+                .prepare_handle_assigned("f2", &vec![heam.clone(); n], (1, 20, 20))
+                .unwrap(),
+            graph.prepare_handle_assigned("f1", &mixed, (1, 20, 20)).unwrap(),
+            graph
+                .prepare_handle_assigned("f0", &vec![Multiplier::Exact; n], (1, 20, 20))
+                .unwrap(),
+        ];
+        let refs: Vec<&ModelHandle> = hs.iter().collect();
+        let fam = VariantFamily::from_handles("lenet", &refs).unwrap();
+        assert_eq!(fam.names(), vec!["f0", "f1", "f2"]);
+        assert_eq!(fam.variant(0).nmed, 0.0);
+        assert!(fam.variant(1).nmed > 0.0);
+        assert!(fam.variant(2).nmed > fam.variant(1).nmed);
+        // The heterogeneous member's label is the joined per-layer form.
+        assert!(fam.variant(1).mul_label.contains('+'));
     }
 
     #[test]

@@ -188,15 +188,44 @@ impl QosPolicy {
             .map(|c| spare as f64 * c.weight / w_sum)
             .collect();
         let mut extra: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
-        let assigned: usize = extra.iter().sum();
+        let mut assigned: usize = extra.iter().sum();
         let mut by_remainder: Vec<usize> = (0..n).collect();
         by_remainder.sort_by(|&a, &b| {
             let (fa, fb) = (exact[a] - exact[a].floor(), exact[b] - exact[b].floor());
             fb.partial_cmp(&fa).expect("finite remainders").then(a.cmp(&b))
         });
-        for &c in by_remainder.iter().take(spare.saturating_sub(assigned)) {
-            extra[c] += 1;
+        // Largest-remainder correction, in both directions. Exact
+        // arithmetic only ever under-assigns (each floor loses < 1), but
+        // the floating-point shares can also *over*-assign when rounding
+        // pushes `spare * w / w_sum` past an integer — the old
+        // `saturating_sub` silently swallowed that case and returned
+        // shares summing past `queue_depth`, breaking the preemption
+        // invariant. Hand missing slots to the largest remainders first;
+        // reclaim surplus slots from the smallest remainders first. Both
+        // loops terminate: the inner passes always move `assigned` toward
+        // `spare` (when over-assigned, Σ extra = assigned > spare ≥ 0, so
+        // some class has a slot to give back).
+        while assigned < spare {
+            for &c in by_remainder.iter() {
+                if assigned == spare {
+                    break;
+                }
+                extra[c] += 1;
+                assigned += 1;
+            }
         }
+        while assigned > spare {
+            for &c in by_remainder.iter().rev() {
+                if assigned == spare {
+                    break;
+                }
+                if extra[c] > 0 {
+                    extra[c] -= 1;
+                    assigned -= 1;
+                }
+            }
+        }
+        debug_assert_eq!(n + extra.iter().sum::<usize>(), queue_depth);
         Ok(self
             .classes
             .iter()
@@ -324,9 +353,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn lane_shares_apportion_by_weight_and_sum_to_the_depth() {
-        let policy = |weights: &[f64]| QosPolicy {
+    fn weighted_policy(weights: &[f64]) -> QosPolicy {
+        QosPolicy {
             classes: weights
                 .iter()
                 .enumerate()
@@ -339,12 +367,20 @@ mod tests {
                 })
                 .collect(),
             ctl: ControllerConfig::default(),
-        };
+        }
+    }
+
+    #[test]
+    fn lane_shares_apportion_by_weight_and_sum_to_the_depth() {
+        let policy = weighted_policy;
         // 1:3 weights over depth 64: shares track the weights exactly
         // and carry the class priorities through.
+        // spare = 62; exact shares [15.5, 46.5] floor to [15, 46],
+        // leaving one slot; the 0.5 remainder tie breaks to the lower
+        // class index, so class 0 gets it: 1 + 15 + 1 = 17.
         let shares = policy(&[1.0, 3.0]).lane_shares(64).unwrap();
         assert_eq!(shares.iter().map(|s| s.reserved).sum::<usize>(), 64);
-        assert_eq!(shares[0].reserved, 17); // 1 + floor(62/4) = 16, +1 remainder? see below
+        assert_eq!(shares[0].reserved, 17);
         assert_eq!(shares[1].reserved, 47);
         assert_eq!(shares[0].priority, 0);
         assert_eq!(shares[1].priority, 1);
@@ -358,6 +394,36 @@ mod tests {
         assert!(policy(&[1.0, 1.0, 1.0]).lane_shares(2).is_err());
         assert!(policy(&[1.0, f64::NAN]).lane_shares(8).is_err());
         assert!(policy(&[]).lane_shares(8).is_err());
+    }
+
+    /// Property test for the largest-remainder apportionment: for random
+    /// weight/depth combinations (weights spanning nine orders of
+    /// magnitude to stress the floating-point floors), the shares must
+    /// sum to exactly `queue_depth`, keep at least one slot per class,
+    /// and be a pure function of the policy.
+    #[test]
+    fn lane_shares_sum_invariant_holds_for_random_policies() {
+        let mut rng = crate::util::prng::Rng::new(0x51A5E5);
+        for trial in 0..500 {
+            let n = 1 + rng.below(8);
+            let weights: Vec<f64> = (0..n)
+                .map(|_| (1.0 + 99.0 * rng.f64()) * 10f64.powi(rng.below(9) as i32 - 4))
+                .collect();
+            let depth = n + rng.below(512);
+            let policy = weighted_policy(&weights);
+            let shares = policy.lane_shares(depth).unwrap();
+            assert_eq!(
+                shares.iter().map(|s| s.reserved).sum::<usize>(),
+                depth,
+                "trial {trial}: weights {weights:?} depth {depth}"
+            );
+            assert!(
+                shares.iter().all(|s| s.reserved >= 1),
+                "trial {trial}: every class keeps a slot"
+            );
+            let again = policy.lane_shares(depth).unwrap();
+            assert_eq!(shares, again, "trial {trial}: apportionment is deterministic");
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::nn::gemm::Scratch;
 use crate::nn::graph::{Graph, ModelHandle};
 use crate::nn::multiplier::Multiplier;
+use crate::opt::assign::Frontier;
 
 use super::qos::family::VariantFamily;
 
@@ -109,6 +110,62 @@ impl ModelRegistry {
             staged.register(name, graph, mul, image_dims)?;
         }
         let names: Vec<String> = variants.iter().map(|(n, _)| n.clone()).collect();
+        let family = staged.family(network, &names)?;
+        self.entries.extend(staged.entries);
+        Ok(family)
+    }
+
+    /// Register a variant family from a per-layer assignment Pareto
+    /// frontier (`heam optimize --per-layer` output): one heterogeneous
+    /// prepared variant per frontier point, named `{network}-f{i}` in
+    /// ascending-cost order, each carrying the point's per-layer zoo
+    /// labels. Returns the accuracy-ordered [`VariantFamily`] — tier 0
+    /// is the frontier's most accurate point, the deepest tier its
+    /// cheapest. Staged all-or-nothing like [`Self::register_family`].
+    pub fn register_frontier(
+        &mut self,
+        network: &str,
+        graph: &Graph,
+        frontier: &Frontier,
+        image_dims: (usize, usize, usize),
+    ) -> Result<VariantFamily> {
+        if frontier.points.len() < 2 {
+            bail!(
+                "frontier for '{network}' has {} point(s); a family needs at least 2 tiers",
+                frontier.points.len()
+            );
+        }
+        let graph_layers: Vec<&str> = graph.assignable_layers();
+        if frontier.layers != graph_layers {
+            bail!(
+                "frontier layers {:?} do not match the graph's assignable layers {:?}",
+                frontier.layers,
+                graph_layers
+            );
+        }
+        let mut staged = ModelRegistry::new();
+        let mut names = Vec::with_capacity(frontier.points.len());
+        for (i, point) in frontier.points.iter().enumerate() {
+            let name = format!("{network}-f{i}");
+            if self.entries.iter().any(|e| e.name == name) {
+                bail!("duplicate model name '{name}'");
+            }
+            let muls: Vec<Multiplier> = point
+                .labels
+                .iter()
+                .map(|label| {
+                    Multiplier::from_zoo(label).ok_or_else(|| {
+                        anyhow!(
+                            "frontier point {i}: unknown multiplier label '{label}' \
+                             (zoo: exact, heam, kmap, cr6, cr7, ac, ou1, ou3, wallace)"
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let handle = graph.prepare_handle_assigned(&name, &muls, image_dims)?;
+            staged.register_handle(handle)?;
+            names.push(name);
+        }
         let family = staged.family(network, &names)?;
         self.entries.extend(staged.entries);
         Ok(family)
@@ -282,6 +339,69 @@ mod tests {
         // The name is free again — re-registration succeeds.
         reg.register_handle(h).unwrap();
         assert_eq!(reg.names(), vec!["b", "a"]);
+    }
+
+    /// A frontier file's points become one heterogeneous variant each,
+    /// named in cost order, with the family accuracy-ordered as usual —
+    /// and bad frontiers fail atomically.
+    #[test]
+    fn frontier_family_registers_heterogeneous_tiers() {
+        use crate::opt::assign::FrontierPoint;
+        let g = tiny_graph();
+        let layers: Vec<String> =
+            g.assignable_layers().iter().map(|s| s.to_string()).collect();
+        let n = layers.len();
+        let point = |first: &str, fill: &str, err: f64, cost: f64| {
+            let mut labels = vec![fill.to_string(); n];
+            labels[0] = first.to_string();
+            FrontierPoint {
+                labels,
+                assignment: String::new(),
+                err,
+                nmed: err,
+                cost,
+            }
+        };
+        let frontier = Frontier {
+            model: "lenet".to_string(),
+            layers: layers.clone(),
+            seed: 7,
+            points: vec![
+                point("ac", "ac", 3.0, 1.0),       // cheapest corner
+                point("exact", "ac", 2.0, 2.0),    // interior mix
+                point("exact", "exact", 0.0, 3.0), // exact corner
+            ],
+        };
+        let mut reg = ModelRegistry::new();
+        let fam = reg.register_frontier("lenet", &g, &frontier, (1, 20, 20)).unwrap();
+        // Lanes registered in cost order...
+        assert_eq!(reg.names(), vec!["lenet-f0", "lenet-f1", "lenet-f2"]);
+        // ...family tiers ordered by the handles' composite accuracy.
+        assert_eq!(fam.variant(0).name, "lenet-f2");
+        assert_eq!(fam.variant(0).nmed, 0.0);
+        assert_eq!(fam.variant(1).name, "lenet-f1");
+        assert_eq!(fam.variant(2).name, "lenet-f0");
+        assert!(fam.variant(2).nmed > fam.variant(1).nmed);
+        // Each lane carries its point's per-layer assignment.
+        assert_eq!(reg.get("lenet-f1").unwrap().mul_labels.len(), n);
+        // Unknown labels fail without half-registering.
+        let mut bad = frontier.clone();
+        bad.points[1].labels[0] = "bogus".to_string();
+        let mut reg2 = ModelRegistry::new();
+        assert!(reg2.register_frontier("lenet", &g, &bad, (1, 20, 20)).is_err());
+        assert!(reg2.is_empty());
+        // A 1-point frontier is not a family; mismatched layer lists are
+        // rejected before any preparation work.
+        let mut one = frontier.clone();
+        one.points.truncate(1);
+        assert!(ModelRegistry::new()
+            .register_frontier("lenet", &g, &one, (1, 20, 20))
+            .is_err());
+        let mut wrong = frontier.clone();
+        wrong.layers.pop();
+        assert!(ModelRegistry::new()
+            .register_frontier("lenet", &g, &wrong, (1, 20, 20))
+            .is_err());
     }
 
     #[test]

@@ -41,6 +41,13 @@ impl AsicReport {
     pub fn fmax_mhz(&self) -> f64 {
         1000.0 / self.latency_ns
     }
+
+    /// Area·delay·power product (um² · ns · uW) — the scalar hardware-cost
+    /// axis of the per-layer assignment Pareto frontier. One number per
+    /// multiplier lets layer costs be summed MAC-weighted across a model.
+    pub fn adp(&self) -> f64 {
+        self.area_um2 * self.latency_ns * self.power_uw
+    }
 }
 
 /// Input-vector source for switching-activity estimation.
@@ -223,6 +230,15 @@ mod tests {
         // at ~8% of total (typical 65nm): leakage = 52.68 uW.
         println!("leakage_scale={}", 0.08 * 658.49 / r.area_um2);
         println!("power_scale={}", (0.92 * 658.49) / r.dynamic_uw);
+    }
+
+    #[test]
+    fn adp_is_the_area_delay_power_product() {
+        let r = analyze_default(&wallace::build(8));
+        assert_eq!(r.adp(), r.area_um2 * r.latency_ns * r.power_uw);
+        assert!(r.adp() > 0.0);
+        // AC is cheaper than Wallace on every axis, so also on ADP.
+        assert!(analyze_default(&ac::build(8)).adp() < r.adp());
     }
 
     #[test]

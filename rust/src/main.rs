@@ -193,7 +193,20 @@ fn optimize(argv: &[String]) -> Result<()> {
     .opt("migration-interval", "10", "generations between island migrations / checkpoints")
     .opt("checkpoint", "", "checkpoint JSON path: resume if present, write during the search")
     .flag("uniform", "ignore the distribution file (Mul2 ablation)")
+    .flag(
+        "per-layer",
+        "search per-layer multiplier assignments instead of one design: \
+         GA + greedy baseline over the zoo, emitting a Pareto frontier JSON",
+    )
+    .opt("lambda", "1", "per-layer: cost weight in the scalarized GA fitness")
+    .opt("weights", "artifacts/weights/digits.htb", "per-layer: weight bundle (random fallback)")
+    .opt("channels", "1", "per-layer: input channels (with the random fallback)")
+    .opt("hw", "28", "per-layer: input height = width (must match the weight bundle)")
     .parse(argv)?;
+
+    if args.is_set("per-layer") {
+        return optimize_per_layer(&args);
+    }
 
     let (px, py) = if args.is_set("uniform") {
         let u = opt::Dist256::uniform();
@@ -293,6 +306,98 @@ fn optimize(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `heam optimize --per-layer`: search the per-layer assignment space
+/// and emit a true accuracy-vs-cost Pareto frontier as
+/// `{out}/frontier.json` — the artifact `serve --family` / `loadgen
+/// --family` build heterogeneous variant families from. Deterministic:
+/// the same flags always write a byte-identical file (the CI `--pareto`
+/// gate diffs two fixed-seed runs).
+fn optimize_per_layer(args: &Args) -> Result<()> {
+    use heam::opt::assign::{self, AssignObjective};
+    let (c, hw): (usize, usize) = (args.get_as("channels")?, args.get_as("hw")?);
+    let dims = (c, hw, hw);
+    let graph = match heam::nn::lenet::load(args.get("weights")) {
+        Ok(g) => g,
+        Err(_) => {
+            println!("(no weight artifact — optimizing over random weights)");
+            heam::nn::lenet::load_graph(&heam::nn::lenet::random_bundle(c, hw, 3))?
+        }
+    };
+    let layers: Vec<String> =
+        graph.assignable_layers().iter().map(|s| s.to_string()).collect();
+    anyhow::ensure!(!layers.is_empty(), "the model has no assignable layers");
+    // Per-layer sensitivity needs per-layer operand histograms: use the
+    // training export when it covers every assignable layer, otherwise
+    // capture a deterministic set from seeded images.
+    let dist = match DistSet::load(args.get("dist")) {
+        Ok(ds) if layers.iter().all(|l| ds.layer(l).is_ok()) => {
+            println!("loaded per-layer distributions from {}", args.get("dist"));
+            ds
+        }
+        _ => {
+            println!("(capturing per-layer distributions from 8 seeded images)");
+            graph.capture_dist_set("lenet", dims, 8, 0xD157)?
+        }
+    };
+    let obj = AssignObjective::new(&dist, &layers, args.get_as("lambda")?)?;
+    let config = GaConfig {
+        population: args.get_as("population")?,
+        generations: args.get_as("generations")?,
+        seed: args.get_as("seed")?,
+        islands: args.get_as("islands")?,
+        threads: args.get_as("threads")?,
+        migration_interval: args.get_as("migration-interval")?,
+        ..Default::default()
+    };
+    println!(
+        "per-layer GA: pop {} gens {} layers {} choices {} islands {} threads {}",
+        config.population,
+        config.generations,
+        layers.len(),
+        obj.n_choices(),
+        config.islands,
+        opt::resolve_threads(config.threads)
+    );
+    let checkpoint = args.get_nonempty("checkpoint").map(std::path::Path::new);
+    if let Some(path) = checkpoint {
+        if path.exists() {
+            println!("resuming from checkpoint {}", path.display());
+        }
+    }
+    let (frontier, ga) = assign::search_frontier(&obj, &config, "lenet", checkpoint)?;
+    println!(
+        "GA done: fitness {:.4e} after {} evaluations ({} archived assignments)",
+        ga.best_fitness,
+        ga.evaluations,
+        ga.archive.len()
+    );
+    for p in &frontier.points {
+        println!(
+            "  cost {:>14.1}  err {:.4e}  nmed {:.4e}  [{}]",
+            p.cost,
+            p.err,
+            p.nmed,
+            p.labels.join(",")
+        );
+    }
+    let interior = frontier.interior_points();
+    anyhow::ensure!(
+        interior >= 3,
+        "degenerate frontier: only {interior} non-dominated point(s) between the \
+         exact and fully-approximate corners"
+    );
+    let out = args.get("out");
+    let path = format!("{out}/frontier.json");
+    frontier.save(&path)?;
+    println!(
+        "pareto frontier OK: {} points ({interior} interior), fp {:016x}",
+        frontier.points.len(),
+        frontier.fingerprint()
+    );
+    println!("wrote {path}");
+    Ok(())
+}
+
 fn eval(argv: &[String]) -> Result<()> {
     let args = Args::new("heam eval", "Evaluate a trained model under a multiplier")
         .opt("weights", "artifacts/weights/digits.htb", "weight bundle")
@@ -380,7 +485,12 @@ fn serve(argv: &[String]) -> Result<()> {
         "request classes 'name:prio=..,p99_ms=..[,tier=..][,weight=..];...' — \
          serve a variant family behind the closed-loop QoS router (needs --native)",
     )
-    .opt("family", "exact,heam", "variant family for --qos-policy (zoo names or LUT paths)")
+    .opt(
+        "family",
+        "exact,heam",
+        "variant family for --qos-policy: zoo names / LUT paths, or a Pareto \
+         frontier JSON from `heam optimize --per-layer`",
+    )
     .opt("qos-interval-ms", "20", "live QoS controller tick period (ms)")
     .flag("native", "serve through the native batched LUT-GEMM engine")
     .parse(argv)?;
@@ -489,7 +599,12 @@ fn loadgen(argv: &[String]) -> Result<()> {
         "QoS mode: request classes 'name:prio=..,p99_ms=..[,tier=..][,weight=..];...' \
          replayed through the closed-loop router over --family",
     )
-    .opt("family", "exact,heam,ou3", "variant family for --classes (zoo names or LUT paths)")
+    .opt(
+        "family",
+        "exact,heam,ou3",
+        "variant family for --classes: zoo names / LUT paths, or a Pareto \
+         frontier JSON from `heam optimize --per-layer`",
+    )
     .opt("qos-interval-ms", "20", "QoS controller tick period, virtual ms of trace time")
     .opt("sim-service-us", "400", "deterministic lane model: tier-0 service cost (us)")
     .opt("sim-speedup-milli", "1500", "lane model: per-tier speedup, milli (1500 = 1.5x)")
@@ -668,8 +783,13 @@ fn print_shares(
 }
 
 /// Shared by `serve --qos-policy` and `loadgen --classes`: parse a
-/// `--family` list (zoo names or LUT paths), register every variant as
-/// one accuracy-ordered family, and echo the resulting tier order.
+/// `--family` argument and register it as one accuracy-ordered family,
+/// echoing the resulting tier order. Two forms:
+///
+/// * a comma-separated list of zoo names / LUT paths — one homogeneous
+///   variant each (the 1-D accuracy ladder), or
+/// * a path to a Pareto frontier JSON from `heam optimize --per-layer` —
+///   one *heterogeneous* per-layer variant per frontier point.
 fn register_family_arg(
     spec: &str,
     graph: &heam::nn::graph::Graph,
@@ -678,6 +798,17 @@ fn register_family_arg(
     heam::coordinator::registry::ModelRegistry,
     heam::coordinator::qos::VariantFamily,
 )> {
+    if spec.ends_with(".json") && std::path::Path::new(spec).exists() {
+        let frontier = heam::opt::Frontier::load(spec)?;
+        let mut registry = heam::coordinator::registry::ModelRegistry::new();
+        let family = registry.register_frontier(&frontier.model, graph, &frontier, dims)?;
+        println!(
+            "qos family from frontier {spec} ({} points; accuracy order): {:?}",
+            frontier.points.len(),
+            family.names()
+        );
+        return Ok((registry, family));
+    }
     let variants: Vec<(String, Multiplier)> = spec
         .split(',')
         .map(str::trim)
@@ -840,32 +971,22 @@ fn loadgen_qos(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Parse a multiplier spec (zoo name or LUT path).
+/// Parse a multiplier spec (zoo name or LUT path). Zoo matching is
+/// delegated to [`Multiplier::from_zoo`] so the CLI vocabulary and the
+/// frontier-label vocabulary can never drift apart.
 fn multiplier_by_name(name: &str) -> Result<Multiplier> {
-    let kind = match name {
-        "exact" => return Ok(Multiplier::Exact),
-        "heam" => MultKind::Heam,
-        "kmap" => MultKind::KMap,
-        "cr6" => MultKind::CrC6,
-        "cr7" => MultKind::CrC7,
-        "ac" => MultKind::Ac,
-        "ou1" => MultKind::OuL1,
-        "ou3" => MultKind::OuL3,
-        "wallace" => MultKind::Wallace,
-        path => {
-            // Only fall through to the LUT-file path when the file
-            // exists — a typo'd zoo name used to surface as an opaque
-            // bundle-loading error.
-            if !std::path::Path::new(path).exists() {
-                bail!(
-                    "unknown multiplier '{path}': not a zoo name \
-                     (exact, heam, kmap, cr6, cr7, ac, ou1, ou3, wallace) \
-                     and no LUT file of that name exists"
-                );
-            }
-            let lut = Lut::load(path).with_context(|| format!("loading LUT '{path}'"))?;
-            return Ok(Multiplier::Lut(Arc::new(lut)));
-        }
-    };
-    Ok(Multiplier::Lut(Arc::new(kind.lut())))
+    if let Some(mul) = Multiplier::from_zoo(name) {
+        return Ok(mul);
+    }
+    // Only fall through to the LUT-file path when the file exists — a
+    // typo'd zoo name used to surface as an opaque bundle-loading error.
+    if !std::path::Path::new(name).exists() {
+        bail!(
+            "unknown multiplier '{name}': not a zoo name \
+             (exact, heam, kmap, cr6, cr7, ac, ou1, ou3, wallace) \
+             and no LUT file of that name exists"
+        );
+    }
+    let lut = Lut::load(name).with_context(|| format!("loading LUT '{name}'"))?;
+    Ok(Multiplier::Lut(Arc::new(lut)))
 }

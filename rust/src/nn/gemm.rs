@@ -526,47 +526,71 @@ struct PreparedNode {
 pub struct PreparedGraph {
     nodes: Vec<PreparedNode>,
     by_name: BTreeMap<String, usize>,
-    kernel: Kernel,
+    /// One kernel reference per node, parallel to `nodes`. A broadcast
+    /// prepare shares a single kernel across every node; a per-layer
+    /// assignment shares one kernel per *distinct* multiplier label, so
+    /// two layers on the same LUT still walk one compacted table.
+    kernels: Vec<std::sync::Arc<Kernel>>,
+}
+
+fn prepare_nodes(graph: &Graph) -> (Vec<PreparedNode>, BTreeMap<String, usize>) {
+    let nodes: Vec<PreparedNode> = graph
+        .nodes
+        .iter()
+        .map(|node| {
+            let op = match &node.op {
+                Op::Input => PreparedOp::Input,
+                Op::Quantize(q) => PreparedOp::Quantize(*q),
+                Op::Conv(l) => PreparedOp::Conv(PreparedConv::new(l)),
+                Op::Dense(l) => PreparedOp::Dense(PreparedDense::new(l)),
+                Op::DenseLogits(l) => PreparedOp::DenseLogits(PreparedDense::new(l)),
+                Op::MaxPool2 => PreparedOp::MaxPool2,
+                Op::Flatten => PreparedOp::Flatten,
+            };
+            PreparedNode {
+                name: node.name.clone(),
+                op,
+                inputs: node.inputs.clone(),
+            }
+        })
+        .collect();
+    let by_name = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.name.clone(), i))
+        .collect();
+    (nodes, by_name)
 }
 
 impl PreparedGraph {
-    /// Prepare a graph for a multiplier.
+    /// Prepare a graph for a single multiplier (broadcast to every layer).
     pub fn new(graph: &Graph, mul: &Multiplier) -> Self {
-        let nodes: Vec<PreparedNode> = graph
-            .nodes
-            .iter()
-            .map(|node| {
-                let op = match &node.op {
-                    Op::Input => PreparedOp::Input,
-                    Op::Quantize(q) => PreparedOp::Quantize(*q),
-                    Op::Conv(l) => PreparedOp::Conv(PreparedConv::new(l)),
-                    Op::Dense(l) => PreparedOp::Dense(PreparedDense::new(l)),
-                    Op::DenseLogits(l) => PreparedOp::DenseLogits(PreparedDense::new(l)),
-                    Op::MaxPool2 => PreparedOp::MaxPool2,
-                    Op::Flatten => PreparedOp::Flatten,
-                };
-                PreparedNode {
-                    name: node.name.clone(),
-                    op,
-                    inputs: node.inputs.clone(),
-                }
-            })
-            .collect();
-        let by_name = nodes
-            .iter()
-            .enumerate()
-            .map(|(i, n)| (n.name.clone(), i))
-            .collect();
-        Self {
-            nodes,
-            by_name,
-            kernel: Kernel::prepare(mul),
-        }
+        let (nodes, by_name) = prepare_nodes(graph);
+        let kernel = std::sync::Arc::new(Kernel::prepare(mul));
+        let kernels = nodes.iter().map(|_| kernel.clone()).collect();
+        Self { nodes, by_name, kernels }
     }
 
-    /// The prepared multiplier kernel.
-    pub fn kernel(&self) -> &Kernel {
-        &self.kernel
+    /// Prepare a graph for a per-layer multiplier assignment: `muls` is
+    /// parallel to [`Graph::assignable_layers`] (a single entry is
+    /// broadcast; a length mismatch is an error). Kernels are deduped by
+    /// multiplier label so same-label layers share one compacted table.
+    pub fn new_assigned(graph: &Graph, muls: &[Multiplier]) -> Result<Self> {
+        let per_node = graph.per_node_muls(muls)?;
+        let (nodes, by_name) = prepare_nodes(graph);
+        let passthrough = std::sync::Arc::new(Kernel::Exact);
+        let mut by_label: BTreeMap<String, std::sync::Arc<Kernel>> = BTreeMap::new();
+        let kernels = per_node
+            .into_iter()
+            .map(|m| match m {
+                None => passthrough.clone(),
+                Some(mul) => by_label
+                    .entry(mul.label())
+                    .or_insert_with(|| std::sync::Arc::new(Kernel::prepare(mul)))
+                    .clone(),
+            })
+            .collect();
+        Ok(Self { nodes, by_name, kernels })
     }
 
     /// Node id by name.
@@ -605,17 +629,17 @@ impl PreparedGraph {
                 }
                 PreparedOp::Conv(layer) => {
                     let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
-                    Value::U8(layer.forward(x, &self.kernel, scratch))
+                    Value::U8(layer.forward(x, &self.kernels[i], scratch))
                 }
                 PreparedOp::Dense(layer) => {
                     let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
-                    let out = layer.forward_codes(&x.data, &self.kernel);
+                    let out = layer.forward_codes(&x.data, &self.kernels[i]);
                     let n = out.len();
                     Value::U8(Tensor::new(vec![n], out))
                 }
                 PreparedOp::DenseLogits(layer) => {
                     let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
-                    let out = layer.forward_logits(&x.data, &self.kernel);
+                    let out = layer.forward_logits(&x.data, &self.kernels[i]);
                     let n = out.len();
                     Value::F32(Tensor::new(vec![n], out))
                 }
@@ -684,6 +708,13 @@ impl Graph {
         PreparedGraph::new(self, mul)
     }
 
+    /// [`Graph::prepare`] for a per-layer multiplier assignment (`muls`
+    /// parallel to [`Graph::assignable_layers`]; a single entry is
+    /// broadcast).
+    pub fn prepare_assigned(&self, muls: &[Multiplier]) -> Result<PreparedGraph> {
+        PreparedGraph::new_assigned(self, muls)
+    }
+
     /// Batched forward: prepare once, then fan `feeds` across `workers`
     /// threads. Byte-identical to calling [`Graph::run`] per feed.
     pub fn forward_batch(
@@ -694,6 +725,18 @@ impl Graph {
         workers: usize,
     ) -> Result<Vec<Value>> {
         self.prepare(mul).run_batch(output, feeds, workers)
+    }
+
+    /// [`Graph::forward_batch`] with a per-layer assignment; byte-identical
+    /// to calling [`Graph::run_assigned`] per feed.
+    pub fn forward_batch_assigned(
+        &self,
+        output: &str,
+        feeds: &[BTreeMap<String, Value>],
+        muls: &[Multiplier],
+        workers: usize,
+    ) -> Result<Vec<Value>> {
+        self.prepare_assigned(muls)?.run_batch(output, feeds, workers)
     }
 }
 
@@ -823,6 +866,99 @@ mod tests {
                 assert_eq!(&b.as_f32().unwrap().data, s, "workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn narrow_rebias_roundtrips_the_full_i16_range() {
+        // Satellite audit of the i16→u16 re-bias at gemm.rs' Narrow
+        // compaction: a table spanning every i16 value exactly once —
+        // including i16::MIN and i16::MAX — must decode losslessly as
+        // `entry as i64 + bias` for all 65 536 operand pairs, so the
+        // Narrow loop can never silently wrap a signed entry.
+        let lut = Lut::from_fn("i16-span", |x, y| ((x * 256 + y) as i64) - 32768);
+        assert!(matches!(lut.compact().data, CompactData::I16(_)));
+        let kernel = Kernel::from_lut(&lut);
+        let (t, bias) = match &kernel {
+            Kernel::Narrow { t, bias } => (t, *bias),
+            other => panic!("i16-span table must compact Narrow, got {}", other.label()),
+        };
+        assert_eq!(bias, -32768);
+        for x in 0..256usize {
+            for y in 0..256usize {
+                let decoded = t[(y << 8) | x] as i64 + bias;
+                assert_eq!(
+                    decoded,
+                    lut.get(x as u8, y as u8) as i64,
+                    "({x},{y})"
+                );
+            }
+        }
+        // The edges explicitly: (0,0) hits i16::MIN, (255,255) i16::MAX.
+        assert_eq!(lut.get(0, 0), i16::MIN as i32);
+        assert_eq!(lut.get(255, 255), i16::MAX as i32);
+        assert_eq!(dot_raw(&kernel, &[0], &[0]), i16::MIN as i64);
+        assert_eq!(dot_raw(&kernel, &[255], &[255]), i16::MAX as i64);
+    }
+
+    #[test]
+    fn assigned_prepare_matches_naive_and_broadcast() {
+        let bundle = crate::nn::lenet::random_bundle(1, 20, 9);
+        let graph = crate::nn::lenet::load_graph(&bundle).unwrap();
+        let layers = graph.assignable_layers().len();
+        assert_eq!(layers, 5, "LeNet has conv1, conv2, fc1, fc2, fc3");
+        let muls = vec![
+            Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+            Multiplier::Lut(Arc::new(MultKind::OuL3.lut())),
+            Multiplier::Exact,
+            Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+            Multiplier::Lut(Arc::new(MultKind::KMap.lut())),
+        ];
+        let mut rng = Rng::new(17);
+        let feeds: Vec<BTreeMap<String, Value>> = (0..4)
+            .map(|_| {
+                let img: Vec<f32> = (0..20 * 20).map(|_| rng.f32()).collect();
+                let mut f = BTreeMap::new();
+                f.insert(
+                    "image".to_string(),
+                    Value::F32(Tensor::new(vec![1, 20, 20], img)),
+                );
+                f
+            })
+            .collect();
+        // Mixed assignment: prepared path == naive per-layer path.
+        let naive: Vec<Vec<f32>> = feeds
+            .iter()
+            .map(|f| {
+                graph
+                    .run_assigned("fc3", f, &muls, None)
+                    .unwrap()
+                    .as_f32()
+                    .unwrap()
+                    .data
+                    .clone()
+            })
+            .collect();
+        for workers in [1usize, 3] {
+            let fast = graph
+                .forward_batch_assigned("fc3", &feeds, &muls, workers)
+                .unwrap();
+            for (b, s) in fast.iter().zip(&naive) {
+                assert_eq!(&b.as_f32().unwrap().data, s, "workers={workers}");
+            }
+        }
+        // A single-entry assignment broadcasts: byte-identical to the
+        // whole-model prepare.
+        let one = [Multiplier::Lut(Arc::new(MultKind::Heam.lut()))];
+        let broadcast = graph
+            .forward_batch_assigned("fc3", &feeds, &one, 1)
+            .unwrap();
+        let whole = graph.forward_batch("fc3", &feeds, &one[0], 1).unwrap();
+        for (a, b) in broadcast.iter().zip(&whole) {
+            assert_eq!(a.as_f32().unwrap().data, b.as_f32().unwrap().data);
+        }
+        // Length mismatches are rejected, never misbound.
+        assert!(graph.prepare_assigned(&muls[..3]).is_err());
+        assert!(graph.prepare_assigned(&[]).is_err());
     }
 
     #[test]

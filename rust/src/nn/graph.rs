@@ -132,6 +132,52 @@ impl Graph {
             .ok_or_else(|| anyhow!("no node '{name}'"))
     }
 
+    /// Names of the multiplier-consuming layers (Conv / Dense /
+    /// DenseLogits), in node order — the index space of a per-layer
+    /// multiplier assignment. LeNet: `conv1, conv2, fc1, fc2, fc3`.
+    pub fn assignable_layers(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv(_) | Op::Dense(_) | Op::DenseLogits(_)))
+            .map(|n| n.name.as_str())
+            .collect()
+    }
+
+    /// Resolve an assignment — one multiplier per assignable layer, or a
+    /// single entry broadcast to every layer — to per-node references.
+    /// A length mismatch is an error so a truncated assignment can never
+    /// silently bind the wrong multiplier to a layer.
+    pub(crate) fn per_node_muls<'a>(
+        &self,
+        muls: &'a [Multiplier],
+    ) -> Result<Vec<Option<&'a Multiplier>>> {
+        let n_layers = self.assignable_layers().len();
+        if muls.is_empty() {
+            bail!("assignment must name at least one multiplier");
+        }
+        if muls.len() != 1 && muls.len() != n_layers {
+            bail!(
+                "assignment has {} multipliers for {} assignable layers \
+                 (pass a single multiplier to broadcast)",
+                muls.len(),
+                n_layers
+            );
+        }
+        let mut ord = 0usize;
+        Ok(self
+            .nodes
+            .iter()
+            .map(|node| match node.op {
+                Op::Conv(_) | Op::Dense(_) | Op::DenseLogits(_) => {
+                    let m = if muls.len() == 1 { &muls[0] } else { &muls[ord] };
+                    ord += 1;
+                    Some(m)
+                }
+                _ => None,
+            })
+            .collect())
+    }
+
     /// Run the graph to produce `output`, feeding input nodes from `feeds`.
     /// Dependencies are resolved and memoized automatically.
     pub fn run(
@@ -139,8 +185,22 @@ impl Graph {
         output: &str,
         feeds: &BTreeMap<String, Value>,
         mul: &Multiplier,
+        stats: Option<&mut StatsCollector>,
+    ) -> Result<Value> {
+        self.run_assigned(output, feeds, std::slice::from_ref(mul), stats)
+    }
+
+    /// [`Graph::run`] with a per-layer multiplier assignment: `muls` is
+    /// parallel to [`Graph::assignable_layers`] (a single entry is
+    /// broadcast). Non-layer nodes are unaffected.
+    pub fn run_assigned(
+        &self,
+        output: &str,
+        feeds: &BTreeMap<String, Value>,
+        muls: &[Multiplier],
         mut stats: Option<&mut StatsCollector>,
     ) -> Result<Value> {
+        let per_node = self.per_node_muls(muls)?;
         let target = self.id(output)?;
         let mut memo: Vec<Option<Value>> = (0..self.nodes.len()).map(|_| None).collect();
         // Forward sweep up to the target; skip nodes it doesn't need.
@@ -161,16 +221,19 @@ impl Graph {
                     Value::U8(q.quantize_tensor(x))
                 }
                 Op::Conv(layer) => {
+                    let mul = per_node[i].expect("layer nodes always carry a multiplier");
                     let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
                     Value::U8(layer.forward(x, mul, stats.as_deref_mut()))
                 }
                 Op::Dense(layer) => {
+                    let mul = per_node[i].expect("layer nodes always carry a multiplier");
                     let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
                     let out = layer.forward(&x.data, mul, stats.as_deref_mut());
                     let n = out.len();
                     Value::U8(Tensor::new(vec![n], out))
                 }
                 Op::DenseLogits(layer) => {
+                    let mul = per_node[i].expect("layer nodes always carry a multiplier");
                     let x = memo[node.inputs[0]].as_ref().unwrap().as_u8()?;
                     let out = layer.forward_f32(&x.data, mul, stats.as_deref_mut());
                     let n = out.len();
@@ -218,8 +281,122 @@ impl Graph {
             prepared: std::sync::Arc::new(self.prepare(mul)),
             image_dims,
             mul_label: mul.label(),
+            mul_labels: vec![mul.label()],
             accuracy: mul.error_metrics(),
         }
+    }
+
+    /// One-forward multiplication counts per assignable layer, measured
+    /// by pushing a zero image of `image_dims` through the stats
+    /// collector to the graph's final node — no static shape arithmetic
+    /// is duplicated here. Layers that do not feed the final node fall
+    /// back to a count of 1.
+    pub fn layer_mac_counts(&self, image_dims: (usize, usize, usize)) -> Result<Vec<u64>> {
+        let (c, h, w) = image_dims;
+        let mut feeds = BTreeMap::new();
+        for node in &self.nodes {
+            if matches!(node.op, Op::Input) {
+                feeds.insert(
+                    node.name.clone(),
+                    Value::F32(Tensor::new(vec![c, h, w], vec![0.0; c * h * w])),
+                );
+            }
+        }
+        let last = self
+            .nodes
+            .last()
+            .ok_or_else(|| anyhow!("cannot count MACs of an empty graph"))?
+            .name
+            .clone();
+        let mut stats = StatsCollector::new();
+        self.run(&last, &feeds, &Multiplier::Exact, Some(&mut stats))?;
+        Ok(self
+            .assignable_layers()
+            .iter()
+            .map(|l| stats.layer(l).map_or(1, |s| s.mults.max(1)))
+            .collect())
+    }
+
+    /// Capture per-layer operand distributions deterministically: push
+    /// `images` seeded pseudo-random images through the reference forward
+    /// pass with a stats collector (weight histograms included) and fold
+    /// the counts into a [`crate::opt::DistSet`]. This is the
+    /// `heam optimize --per-layer` input when no training-time
+    /// distribution export covers the graph's assignable layers — the
+    /// same (graph, dims, images, seed) always yields the same set.
+    pub fn capture_dist_set(
+        &self,
+        model: &str,
+        image_dims: (usize, usize, usize),
+        images: usize,
+        seed: u64,
+    ) -> Result<crate::opt::DistSet> {
+        let (c, h, w) = image_dims;
+        let last = self
+            .nodes
+            .last()
+            .ok_or_else(|| anyhow!("cannot capture distributions of an empty graph"))?
+            .name
+            .clone();
+        let mut stats = StatsCollector::new();
+        self.record_weights(&mut stats);
+        let mut rng = crate::util::prng::Rng::new(seed);
+        for _ in 0..images.max(1) {
+            let img: Vec<f32> = (0..c * h * w).map(|_| rng.f32()).collect();
+            let mut feeds = BTreeMap::new();
+            for node in &self.nodes {
+                if matches!(node.op, Op::Input) {
+                    feeds.insert(
+                        node.name.clone(),
+                        Value::F32(Tensor::new(vec![c, h, w], img.clone())),
+                    );
+                }
+            }
+            self.run(&last, &feeds, &Multiplier::Exact, Some(&mut stats))?;
+        }
+        Ok(stats.to_dist_set(model))
+    }
+
+    /// [`Graph::prepare_handle`] for a per-layer multiplier assignment:
+    /// `muls` is parallel to [`Graph::assignable_layers`] (a single entry
+    /// is broadcast). The handle's `accuracy` is the MAC-weighted mean of
+    /// the per-layer multipliers' exhaustive error metrics, so a family
+    /// of frontier points still orders by one scalar NMED — exactly the
+    /// axis the QoS router steers.
+    pub fn prepare_handle_assigned(
+        &self,
+        name: &str,
+        muls: &[Multiplier],
+        image_dims: (usize, usize, usize),
+    ) -> Result<ModelHandle> {
+        let resolved: Vec<&Multiplier> =
+            self.per_node_muls(muls)?.into_iter().flatten().collect();
+        let prepared = std::sync::Arc::new(self.prepare_assigned(muls)?);
+        let labels: Vec<String> = resolved.iter().map(|m| m.label()).collect();
+        let macs = self.layer_mac_counts(image_dims)?;
+        debug_assert_eq!(macs.len(), labels.len());
+        let total: f64 = macs.iter().map(|&m| m as f64).sum::<f64>().max(1.0);
+        let mut acc = crate::mult::ErrorMetrics { med: 0.0, nmed: 0.0, mred: 0.0 };
+        for (m, &w) in resolved.iter().zip(&macs) {
+            let e = m.error_metrics();
+            let w = w as f64 / total;
+            acc.med += w * e.med;
+            acc.nmed += w * e.nmed;
+            acc.mred += w * e.mred;
+        }
+        let mul_label = if labels.windows(2).all(|w| w[0] == w[1]) {
+            labels[0].clone()
+        } else {
+            labels.join("+")
+        };
+        Ok(ModelHandle {
+            name: name.to_string(),
+            prepared,
+            image_dims,
+            mul_label,
+            mul_labels: labels,
+            accuracy: acc,
+        })
     }
 }
 
@@ -236,7 +413,13 @@ pub struct ModelHandle {
     /// Expected input geometry (channels, height, width).
     pub image_dims: (usize, usize, usize),
     /// Label of the multiplier baked into the plan (reports / tracing).
+    /// For a heterogeneous assignment this is the `+`-joined per-layer
+    /// labels; `mul_labels` carries the structured form.
     pub mul_label: String,
+    /// Per-layer multiplier labels, parallel to
+    /// [`Graph::assignable_layers`]. A broadcast (whole-model) handle
+    /// carries a single entry.
+    pub mul_labels: Vec<String>,
     /// Accuracy-tier metadata: the baked multiplier's exhaustive error
     /// metrics, measured once at preparation. The QoS layer orders a
     /// variant family by `accuracy.nmed` (exact = 0.0 = tier 0) and
@@ -301,6 +484,58 @@ mod tests {
         let g = tiny_graph();
         let feeds = BTreeMap::new();
         assert!(g.run("logits", &feeds, &Multiplier::Exact, None).is_err());
+    }
+
+    #[test]
+    fn assignment_broadcasts_and_rejects_length_mismatch() {
+        let g = tiny_graph();
+        assert_eq!(g.assignable_layers(), vec!["logits"]);
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "image".to_string(),
+            Value::F32(Tensor::new(vec![1, 2, 2], vec![1.0, 0.0, 0.0, 0.0])),
+        );
+        let whole = g.run("logits", &feeds, &Multiplier::Exact, None).unwrap();
+        let assigned = g
+            .run_assigned("logits", &feeds, &[Multiplier::Exact], None)
+            .unwrap();
+        assert_eq!(whole.as_f32().unwrap().data, assigned.as_f32().unwrap().data);
+        // Wrong-length assignments are rejected outright — never bound.
+        let three = [Multiplier::Exact, Multiplier::Exact, Multiplier::Exact];
+        assert!(g.run_assigned("logits", &feeds, &three, None).is_err());
+        assert!(g.run_assigned("logits", &feeds, &[], None).is_err());
+    }
+
+    #[test]
+    fn assigned_handle_carries_per_layer_labels_and_composite_accuracy() {
+        let g = tiny_graph();
+        let exact = g
+            .prepare_handle_assigned("t-exact", &[Multiplier::Exact], (1, 2, 2))
+            .unwrap();
+        assert_eq!(exact.mul_labels, vec!["exact".to_string()]);
+        assert_eq!(exact.mul_label, "exact");
+        assert_eq!(exact.accuracy.nmed, 0.0);
+        // With a single assignable layer the MAC weight is 1, so the
+        // composite equals that multiplier's own exhaustive metrics.
+        let heam = Multiplier::from_zoo("heam").unwrap();
+        let h = g
+            .prepare_handle_assigned("t-heam", std::slice::from_ref(&heam), (1, 2, 2))
+            .unwrap();
+        let e = heam.error_metrics();
+        assert_eq!(h.accuracy.nmed, e.nmed);
+        assert_eq!(h.accuracy.med, e.med);
+        assert_eq!(h.mul_label, heam.label());
+        assert_eq!(h.mul_labels, vec![heam.label()]);
+        // The broadcast constructor agrees on the single-label shape.
+        let b = g.prepare_handle("t-b", &heam, (1, 2, 2));
+        assert_eq!(b.mul_labels, h.mul_labels);
+    }
+
+    #[test]
+    fn layer_mac_counts_measure_the_forward_pass() {
+        let g = tiny_graph();
+        // fc: 4 inputs x 2 outputs = 8 multiplications.
+        assert_eq!(g.layer_mac_counts((1, 2, 2)).unwrap(), vec![8]);
     }
 
     #[test]

@@ -19,6 +19,28 @@ pub enum Multiplier {
 }
 
 impl Multiplier {
+    /// Resolve a zoo short name (the CLI vocabulary: `exact`, `heam`,
+    /// `kmap`, `cr6`, `cr7`, `ac`, `ou1`, `ou3`, `wallace`) to a
+    /// multiplier. `None` for anything else — callers with a LUT-path
+    /// fallback (the CLI) try the filesystem next; programmatic callers
+    /// (frontier registration) surface the unknown label.
+    pub fn from_zoo(name: &str) -> Option<Multiplier> {
+        use crate::mult::MultKind;
+        let kind = match name {
+            "exact" => return Some(Multiplier::Exact),
+            "heam" => MultKind::Heam,
+            "kmap" => MultKind::KMap,
+            "cr6" => MultKind::CrC6,
+            "cr7" => MultKind::CrC7,
+            "ac" => MultKind::Ac,
+            "ou1" => MultKind::OuL1,
+            "ou3" => MultKind::OuL3,
+            "wallace" => MultKind::Wallace,
+            _ => return None,
+        };
+        Some(Multiplier::Lut(Arc::new(kind.lut())))
+    }
+
     /// Multiply two codes.
     #[inline(always)]
     pub fn mul(&self, x: u8, y: u8) -> i32 {
@@ -98,6 +120,22 @@ mod tests {
         for (x, y) in [(0u8, 0u8), (255, 255), (13, 200), (128, 128)] {
             assert_eq!(lut.mul(x, y), exact.mul(x, y));
         }
+    }
+
+    #[test]
+    fn from_zoo_covers_the_cli_vocabulary() {
+        for name in ["exact", "heam", "kmap", "cr6", "cr7", "ac", "ou1", "ou3", "wallace"] {
+            let m = Multiplier::from_zoo(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            // The label round-trips for exact; LUT variants carry the
+            // zoo's human-readable name instead of the short one.
+            if name == "exact" {
+                assert_eq!(m.label(), "exact");
+            } else {
+                assert!(matches!(m, Multiplier::Lut(_)));
+            }
+        }
+        assert!(Multiplier::from_zoo("nope").is_none());
+        assert!(Multiplier::from_zoo("").is_none());
     }
 
     #[test]

@@ -1,0 +1,1147 @@
+//! Per-layer heterogeneous multiplier assignment (ROADMAP open item 3).
+//!
+//! HEAM's premise is that a multiplier should match the operand
+//! distribution it actually sees — and those distributions differ layer by
+//! layer ("Positive/Negative Approximate Multipliers for DNN Accelerators"
+//! and "Leveraging Highly Approximated Multipliers in DNN Inference" make
+//! the per-layer step explicit). This module searches the assignment space
+//! `zoo^layers` two ways and emits a true accuracy-vs-cost Pareto
+//! frontier:
+//!
+//! * **GA over assignment genomes** — the same island-model machinery as
+//!   [`super::ga`] (derived per-island RNG streams, breeding on the
+//!   calling thread, sharded ordered fitness batches, ring migration,
+//!   JSON checkpoint/resume), but over [`AssignmentGenome`] integer
+//!   vectors. Every evaluated genome is folded into a deterministic
+//!   Pareto *archive* keyed by its digit string.
+//! * **Greedy sensitivity-ordered baseline** — walk from the all-exact
+//!   corner to the all-cheapest corner, at each step applying the single
+//!   (layer, choice) swap that buys the most cost reduction per unit of
+//!   added error. The chain is mutually non-dominated by construction,
+//!   so the frontier always has interior points even when the GA
+//!   collapses onto the corners.
+//!
+//! **Axes.** Accuracy proxy: the MAC-weighted mean of each layer's
+//! distribution-weighted expected squared multiplier error
+//! ([`Lut::avg_sq_error_weighted`] under that layer's operand histograms
+//! from `nn/stats.rs`). Cost: the MAC-weighted sum of each chosen
+//! multiplier's area·delay·power product ([`AsicReport::adp`] under the
+//! calibrated library). Both are pure functions of the assignment, so the
+//! frontier is byte-identical for any thread count.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cost::asic::analyze_default;
+use crate::mult::{Lut, MultKind};
+use crate::util::hash::fnv1a_u64;
+use crate::util::json::{self, Value};
+use crate::util::prng::Rng;
+
+use super::distributions::DistSet;
+use super::ga::{island_sizes, tournament, GaConfig};
+use super::genome::AssignmentGenome;
+use super::objective::resolve_threads;
+
+/// The assignment vocabulary: the CLI zoo short names, in a fixed order
+/// that defines the genome's digit values. Index 0 is the exact corner.
+pub const CHOICES: [&str; 9] = [
+    "exact", "heam", "kmap", "cr6", "cr7", "ac", "ou1", "ou3", "wallace",
+];
+
+fn choice_kind(name: &str) -> Option<MultKind> {
+    Some(match name {
+        "heam" => MultKind::Heam,
+        "kmap" => MultKind::KMap,
+        "cr6" => MultKind::CrC6,
+        "cr7" => MultKind::CrC7,
+        "ac" => MultKind::Ac,
+        "ou1" => MultKind::OuL1,
+        "ou3" => MultKind::OuL3,
+        "wallace" => MultKind::Wallace,
+        _ => return None,
+    })
+}
+
+/// Scalar summary of one assignment on the frontier axes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PointMetrics {
+    /// MAC-weighted mean distribution-weighted squared multiplier error.
+    pub err: f64,
+    /// MAC-weighted mean exhaustive NMED (the QoS accuracy-tier axis).
+    pub nmed: f64,
+    /// MAC-weighted summed area·delay·power product.
+    pub cost: f64,
+}
+
+/// Precomputed per-layer sensitivity tables: everything an assignment
+/// evaluation needs, so genome fitness is an O(layers) table walk.
+pub struct AssignObjective {
+    /// Assignable layer names, in graph node order.
+    pub layers: Vec<String>,
+    /// Cost-vs-error tradeoff weight on the scalarized GA fitness.
+    pub lambda: f64,
+    /// Per-layer MAC counts (the aggregation weights), from the
+    /// distribution set's `mults`.
+    macs: Vec<f64>,
+    /// `err[l][c]`: layer `l`'s distribution-weighted squared error under
+    /// choice `c` (0.0 for the exact choices).
+    err: Vec<Vec<f64>>,
+    /// Per-choice exhaustive NMED (layer-independent).
+    nmed: Vec<f64>,
+    /// Per-choice area·delay·power product (layer-independent).
+    adp: Vec<f64>,
+    /// Normalization scales so error and cost are comparable in the
+    /// scalarized fitness (each is the worst-choice-everywhere value).
+    err_scale: f64,
+    cost_scale: f64,
+}
+
+impl AssignObjective {
+    /// Build the evaluator: one LUT + ASIC analysis per zoo choice, one
+    /// weighted-error row per (layer, choice). Layers missing from the
+    /// distribution set fall back to its aggregate histograms; their MAC
+    /// weight falls back to 1.
+    pub fn new(dist: &DistSet, layer_names: &[String], lambda: f64) -> Result<Self> {
+        anyhow::ensure!(!layer_names.is_empty(), "no assignable layers");
+        anyhow::ensure!(lambda.is_finite() && lambda >= 0.0, "lambda must be finite and >= 0");
+        let mut luts: Vec<Option<Lut>> = Vec::with_capacity(CHOICES.len());
+        let mut nmed = Vec::with_capacity(CHOICES.len());
+        let mut adp = Vec::with_capacity(CHOICES.len());
+        for &name in CHOICES.iter() {
+            match choice_kind(name) {
+                Some(kind) => {
+                    let lut = kind.lut();
+                    nmed.push(lut.error_metrics().nmed);
+                    adp.push(analyze_default(&kind.build()).adp());
+                    luts.push(Some(lut));
+                }
+                None => {
+                    // "exact": zero error by definition; its hardware cost
+                    // is the exact Wallace tree's.
+                    nmed.push(0.0);
+                    adp.push(analyze_default(&MultKind::Wallace.build()).adp());
+                    luts.push(None);
+                }
+            }
+        }
+        let aggregate = dist.aggregate();
+        let mut macs = Vec::with_capacity(layer_names.len());
+        let mut err = Vec::with_capacity(layer_names.len());
+        for name in layer_names {
+            let (px, py, m) = match dist.layer(name) {
+                Ok(l) => (&l.x.p, &l.y.p, l.mults.max(1) as f64),
+                Err(_) => (&aggregate.0.p, &aggregate.1.p, 1.0),
+            };
+            macs.push(m);
+            err.push(
+                luts.iter()
+                    .map(|lut| lut.as_ref().map_or(0.0, |l| l.avg_sq_error_weighted(px, py)))
+                    .collect(),
+            );
+        }
+        let total: f64 = macs.iter().sum();
+        let worst_err: f64 = macs
+            .iter()
+            .zip(&err)
+            .map(|(&m, row)| m * row.iter().cloned().fold(0.0, f64::max))
+            .sum::<f64>()
+            / total;
+        let worst_adp = adp.iter().cloned().fold(0.0, f64::max);
+        let cost_scale = macs.iter().map(|&m| m * worst_adp).sum::<f64>();
+        Ok(Self {
+            layers: layer_names.to_vec(),
+            lambda,
+            macs,
+            err,
+            nmed,
+            adp,
+            err_scale: if worst_err > 0.0 { worst_err } else { 1.0 },
+            cost_scale: if cost_scale > 0.0 { cost_scale } else { 1.0 },
+        })
+    }
+
+    /// Number of choices per layer (the genome's digit range).
+    pub fn n_choices(&self) -> usize {
+        CHOICES.len()
+    }
+
+    /// The choice index minimizing hardware cost (deterministic: first on
+    /// ties) — the fully-approximate corner the greedy walk ends at.
+    pub fn cheapest_choice(&self) -> usize {
+        let mut best = 0;
+        for (c, &a) in self.adp.iter().enumerate() {
+            if a < self.adp[best] {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Zoo labels of an assignment, parallel to `layers`.
+    pub fn labels(&self, g: &AssignmentGenome) -> Vec<String> {
+        g.choices.iter().map(|&c| CHOICES[c as usize].to_string()).collect()
+    }
+
+    /// The frontier-axis metrics of an assignment.
+    pub fn metrics(&self, g: &AssignmentGenome) -> PointMetrics {
+        debug_assert_eq!(g.choices.len(), self.layers.len());
+        let total: f64 = self.macs.iter().sum();
+        let mut err = 0.0;
+        let mut nmed = 0.0;
+        let mut cost = 0.0;
+        for (l, &c) in g.choices.iter().enumerate() {
+            let c = c as usize;
+            err += self.macs[l] * self.err[l][c];
+            nmed += self.macs[l] * self.nmed[c];
+            cost += self.macs[l] * self.adp[c];
+        }
+        PointMetrics {
+            err: err / total,
+            nmed: nmed / total,
+            cost,
+        }
+    }
+
+    /// Scalarized GA fitness (lower is better): normalized error plus
+    /// `lambda` times normalized cost.
+    pub fn fitness(&self, g: &AssignmentGenome) -> f64 {
+        let m = self.metrics(g);
+        m.err / self.err_scale + self.lambda * m.cost / self.cost_scale
+    }
+
+    /// Evaluate a batch, sharded across `threads` workers with results in
+    /// input order — the same ordered chunked reduction as
+    /// [`super::objective::Objective::fitness_batch`], so the GA stays
+    /// bit-identical for any thread count.
+    pub fn fitness_batch(&self, genomes: &[AssignmentGenome], threads: usize) -> Vec<f64> {
+        let threads = resolve_threads(threads).min(genomes.len().max(1));
+        if threads == 1 {
+            return genomes.iter().map(|g| self.fitness(g)).collect();
+        }
+        let chunk = genomes.len().div_ceil(threads);
+        let per_chunk: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = genomes
+                .chunks(chunk)
+                .map(|part| {
+                    s.spawn(move || part.iter().map(|g| self.fitness(g)).collect::<Vec<f64>>())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        per_chunk.into_iter().flatten().collect()
+    }
+}
+
+/// One operating point of the frontier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// Per-layer zoo labels, parallel to the frontier's `layers`.
+    pub labels: Vec<String>,
+    /// Base-36 digit form of the assignment (see [`AssignmentGenome`]).
+    pub assignment: String,
+    pub err: f64,
+    pub nmed: f64,
+    pub cost: f64,
+}
+
+impl FrontierPoint {
+    fn from_genome(obj: &AssignObjective, g: &AssignmentGenome) -> Self {
+        let m = obj.metrics(g);
+        Self {
+            labels: obj.labels(g),
+            assignment: g.to_digit_string(),
+            err: m.err,
+            nmed: m.nmed,
+            cost: m.cost,
+        }
+    }
+
+    /// True when `self` dominates `other` (no worse on both axes,
+    /// strictly better on at least one).
+    fn dominates(&self, other: &FrontierPoint) -> bool {
+        self.err <= other.err
+            && self.cost <= other.cost
+            && (self.err < other.err || self.cost < other.cost)
+    }
+}
+
+const FRONTIER_FORMAT: &str = "heam-frontier-v1";
+
+/// A Pareto frontier over per-layer assignments: the artifact
+/// `heam optimize --per-layer` writes and `heam serve --family` /
+/// `heam loadgen --family` consume (see EXPERIMENTS.md for the JSON
+/// schema).
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    pub model: String,
+    /// Assignable layer names, parallel to every point's `labels`.
+    pub layers: Vec<String>,
+    /// The search seed (provenance; replays must reproduce the file).
+    pub seed: u64,
+    /// Non-dominated points, ascending hardware cost (so descending or
+    /// equal error): index 0 is the cheapest, the last is the exact
+    /// corner's cost tier.
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Assemble a frontier from candidate points: drop dominated and
+    /// duplicate assignments, order ascending by (cost, err, assignment).
+    pub fn from_candidates(
+        model: &str,
+        layers: &[String],
+        seed: u64,
+        candidates: Vec<FrontierPoint>,
+    ) -> Self {
+        let mut seen = BTreeMap::new();
+        for p in candidates {
+            seen.entry(p.assignment.clone()).or_insert(p);
+        }
+        let all: Vec<FrontierPoint> = seen.into_values().collect();
+        let mut points: Vec<FrontierPoint> = all
+            .iter()
+            .filter(|p| !all.iter().any(|q| q.dominates(p)))
+            .cloned()
+            .collect();
+        points.sort_by(|a, b| {
+            a.cost
+                .partial_cmp(&b.cost)
+                .unwrap()
+                .then(a.err.partial_cmp(&b.err).unwrap())
+                .then(a.assignment.cmp(&b.assignment))
+        });
+        Self {
+            model: model.to_string(),
+            layers: layers.to_vec(),
+            seed,
+            points,
+        }
+    }
+
+    /// Points strictly between the cheapest and the most accurate end of
+    /// the frontier — the acceptance criterion counts these.
+    pub fn interior_points(&self) -> usize {
+        self.points.len().saturating_sub(2)
+    }
+
+    /// FNV fingerprint of the serialized frontier (determinism checks).
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a_u64(self.to_json().bytes().map(u64::from))
+    }
+
+    /// Serialize to the deterministic JSON schema.
+    pub fn to_json(&self) -> String {
+        let points: Vec<Value> = self
+            .points
+            .iter()
+            .map(|p| {
+                Value::obj(vec![
+                    (
+                        "labels",
+                        Value::Arr(p.labels.iter().map(|l| Value::Str(l.clone())).collect()),
+                    ),
+                    ("assignment", Value::Str(p.assignment.clone())),
+                    ("err", Value::Num(p.err)),
+                    ("nmed", Value::Num(p.nmed)),
+                    ("cost", Value::Num(p.cost)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("format", Value::Str(FRONTIER_FORMAT.to_string())),
+            ("model", Value::Str(self.model.clone())),
+            ("seed", Value::u64_hex_arr(&[self.seed])),
+            (
+                "layers",
+                Value::Arr(self.layers.iter().map(|l| Value::Str(l.clone())).collect()),
+            ),
+            ("points", Value::Arr(points)),
+        ])
+        .to_json()
+    }
+
+    /// Parse the [`Frontier::to_json`] schema, validating shape.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let format = v.require("format")?.as_str().unwrap_or_default();
+        anyhow::ensure!(
+            format == FRONTIER_FORMAT,
+            "unknown frontier format '{format}'"
+        );
+        let model = v
+            .require("model")?
+            .as_str()
+            .ok_or_else(|| anyhow!("model must be a string"))?
+            .to_string();
+        let seed = v.require("seed")?.to_u64_hex_vec()?;
+        anyhow::ensure!(seed.len() == 1, "seed must be a single hex word");
+        let layers: Vec<String> = v
+            .require("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers must be an array"))?
+            .iter()
+            .map(|l| {
+                l.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("layer names must be strings"))
+            })
+            .collect::<Result<_>>()?;
+        let mut points = Vec::new();
+        for (i, p) in v
+            .require("points")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("points must be an array"))?
+            .iter()
+            .enumerate()
+        {
+            let labels: Vec<String> = p
+                .require("labels")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("point {i}: labels must be an array"))?
+                .iter()
+                .map(|l| {
+                    l.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("point {i}: labels must be strings"))
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(
+                labels.len() == layers.len(),
+                "point {i}: {} labels for {} layers",
+                labels.len(),
+                layers.len()
+            );
+            let assignment = p
+                .require("assignment")?
+                .as_str()
+                .ok_or_else(|| anyhow!("point {i}: assignment must be a string"))?
+                .to_string();
+            let req_f64 = |key: &str| -> Result<f64> {
+                let x = p
+                    .require(key)?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("point {i}: {key} must be a number"))?;
+                anyhow::ensure!(x.is_finite() && x >= 0.0, "point {i}: {key} must be finite");
+                Ok(x)
+            };
+            points.push(FrontierPoint {
+                labels,
+                assignment,
+                err: req_f64("err")?,
+                nmed: req_f64("nmed")?,
+                cost: req_f64("cost")?,
+            });
+        }
+        Ok(Self { model, seed: seed[0], layers, points })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::from_json(&text).with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+
+    /// Save to a JSON file (parent directories created).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+/// Greedy sensitivity-ordered descent from the all-exact corner: at each
+/// step apply the single (layer, choice) swap with the best cost
+/// reduction per unit of added error (ties broken by (layer, choice)),
+/// until the all-cheapest corner is reached. Every step strictly lowers
+/// cost and weakly raises error, so the emitted chain is mutually
+/// non-dominated.
+pub fn greedy_frontier(obj: &AssignObjective) -> Vec<FrontierPoint> {
+    let mut current = AssignmentGenome::uniform(obj.layers.len(), 0);
+    let mut points = vec![FrontierPoint::from_genome(obj, &current)];
+    loop {
+        let here = obj.metrics(&current);
+        let mut best: Option<(f64, usize, u8)> = None; // (score, layer, choice)
+        for l in 0..obj.layers.len() {
+            for c in 0..obj.n_choices() as u8 {
+                if c == current.choices[l] {
+                    continue;
+                }
+                let mut trial = current.clone();
+                trial.choices[l] = c;
+                let m = obj.metrics(&trial);
+                if m.cost >= here.cost {
+                    continue;
+                }
+                // Error added per unit of cost saved; lower is better.
+                let score = (m.err - here.err).max(0.0) / (here.cost - m.cost);
+                let better = match best {
+                    None => true,
+                    Some((s, bl, bc)) => {
+                        score < s || (score == s && (l, c) < (bl, bc))
+                    }
+                };
+                if better {
+                    best = Some((score, l, c));
+                }
+            }
+        }
+        match best {
+            Some((_, l, c)) => {
+                current.choices[l] = c;
+                points.push(FrontierPoint::from_genome(obj, &current));
+            }
+            None => return points,
+        }
+    }
+}
+
+/// Assignment-GA outcome: the scalarized winner plus the Pareto archive
+/// of every evaluated assignment.
+#[derive(Clone, Debug)]
+pub struct AssignGaResult {
+    pub best: AssignmentGenome,
+    pub best_fitness: f64,
+    /// Best fitness per generation across islands; length
+    /// `generations + 1`.
+    pub history: Vec<f64>,
+    pub island_histories: Vec<Vec<f64>>,
+    pub evaluations: usize,
+    /// Every distinct assignment the search evaluated, as frontier
+    /// candidates (deterministic order: by assignment digit string).
+    pub archive: Vec<FrontierPoint>,
+}
+
+struct Island {
+    rng: Rng,
+    population: Vec<AssignmentGenome>,
+    fitness: Vec<f64>,
+    history: Vec<f64>,
+}
+
+struct AssignState {
+    generation: usize,
+    evaluations: usize,
+    islands: Vec<Island>,
+    /// Evaluated assignments keyed by digit string; values are the
+    /// frontier metrics (pure functions of the genome, so archive
+    /// content never depends on thread count or resume point).
+    archive: BTreeMap<String, PointMetrics>,
+}
+
+const CHECKPOINT_FORMAT: &str = "heam-assign-checkpoint-v1";
+
+/// Run the assignment GA.
+pub fn run(obj: &AssignObjective, config: &GaConfig) -> AssignGaResult {
+    let mut state = init_state(obj, config);
+    evolve(obj, config, &mut state, None);
+    finalize(obj, config, state)
+}
+
+/// [`run`] with JSON checkpointing, mirroring
+/// [`super::ga::run_with_checkpoint`]: resume validates the seed, layer
+/// count, population, island layout and every trajectory-shaping
+/// hyperparameter; the archive rides along so a resumed search emits the
+/// same frontier as an uninterrupted one.
+pub fn run_with_checkpoint(
+    obj: &AssignObjective,
+    config: &GaConfig,
+    path: &Path,
+) -> Result<AssignGaResult> {
+    let mut state = if path.exists() {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading assignment checkpoint {}", path.display()))?;
+        state_from_json(obj, config, &json::parse(&text)?)
+            .with_context(|| format!("resuming assignment checkpoint {}", path.display()))?
+    } else {
+        init_state(obj, config)
+    };
+    evolve(obj, config, &mut state, Some(path));
+    Ok(finalize(obj, config, state))
+}
+
+fn record_archive(
+    obj: &AssignObjective,
+    archive: &mut BTreeMap<String, PointMetrics>,
+    genomes: &[AssignmentGenome],
+) {
+    for g in genomes {
+        archive
+            .entry(g.to_digit_string())
+            .or_insert_with(|| obj.metrics(g));
+    }
+}
+
+/// Generation-0 state: per-island derived RNG streams; island 0 anchored
+/// with the exact and all-cheapest corner assignments (the frontier's
+/// endpoints) when `seed_individual` is set.
+fn init_state(obj: &AssignObjective, config: &GaConfig) -> AssignState {
+    let layers = obj.layers.len();
+    let sizes = island_sizes(config);
+    let mut islands: Vec<Island> = Vec::with_capacity(sizes.len());
+    let mut all: Vec<AssignmentGenome> = Vec::with_capacity(config.population);
+    for (i, &size) in sizes.iter().enumerate() {
+        let mut rng = Rng::derive(config.seed, i as u64);
+        let mut population: Vec<AssignmentGenome> = Vec::with_capacity(size);
+        if i == 0 && config.seed_individual && size >= 2 {
+            population.push(AssignmentGenome::uniform(layers, 0));
+            population.push(AssignmentGenome::uniform(
+                layers,
+                obj.cheapest_choice() as u8,
+            ));
+        }
+        while population.len() < size {
+            population.push(AssignmentGenome::random(layers, obj.n_choices(), &mut rng));
+        }
+        all.extend(population.iter().cloned());
+        islands.push(Island {
+            rng,
+            population,
+            fitness: Vec::new(),
+            history: Vec::new(),
+        });
+    }
+    let fits = obj.fitness_batch(&all, config.threads);
+    let evaluations = fits.len();
+    let mut archive = BTreeMap::new();
+    record_archive(obj, &mut archive, &all);
+    let mut it = fits.into_iter();
+    for island in &mut islands {
+        island.fitness = it.by_ref().take(island.population.len()).collect();
+    }
+    AssignState {
+        generation: 0,
+        evaluations,
+        islands,
+        archive,
+    }
+}
+
+/// Advance to `config.generations`; the loop structure (and therefore the
+/// RNG draw order) mirrors [`super::ga::run`] exactly, including the
+/// unconditional epoch-boundary migration that keeps truncated-and-resumed
+/// trajectories identical.
+fn evolve(
+    obj: &AssignObjective,
+    config: &GaConfig,
+    state: &mut AssignState,
+    checkpoint: Option<&Path>,
+) {
+    let interval = config.migration_interval;
+    for gen in state.generation..config.generations {
+        for island in &mut state.islands {
+            let best = island.fitness.iter().cloned().fold(f64::INFINITY, f64::min);
+            island.history.push(best);
+        }
+
+        let mut offspring: Vec<AssignmentGenome> = Vec::with_capacity(config.population);
+        for island in &mut state.islands {
+            breed_into(obj, island, config, &mut offspring);
+        }
+
+        let fits = obj.fitness_batch(&offspring, config.threads);
+        state.evaluations += fits.len();
+        record_archive(obj, &mut state.archive, &offspring);
+
+        let mut gi = offspring.into_iter();
+        let mut fi = fits.into_iter();
+        for island in &mut state.islands {
+            let n = island.population.len();
+            island.population = gi.by_ref().take(n).collect();
+            island.fitness = fi.by_ref().take(n).collect();
+        }
+
+        state.generation = gen + 1;
+
+        if interval > 0 && state.generation % interval == 0 {
+            migrate_ring(&mut state.islands, config.migrants);
+        }
+
+        if let Some(path) = checkpoint {
+            let due = (interval > 0 && state.generation % interval == 0)
+                || state.generation == config.generations;
+            if due {
+                if let Err(e) = write_checkpoint(path, state, config) {
+                    eprintln!("warning: assignment checkpoint write failed: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+fn breed_into(
+    obj: &AssignObjective,
+    island: &mut Island,
+    config: &GaConfig,
+    out: &mut Vec<AssignmentGenome>,
+) {
+    let size = island.population.len();
+    let mut order: Vec<usize> = (0..size).collect();
+    order.sort_by(|&a, &b| island.fitness[a].partial_cmp(&island.fitness[b]).unwrap());
+    let elites = config.elitism.min(size);
+    out.extend(order.iter().take(elites).map(|&i| island.population[i].clone()));
+    let rng = &mut island.rng;
+    for _ in elites..size {
+        let a = tournament(&island.fitness, config.tournament, rng);
+        let mut child = if rng.chance(config.crossover_rate) {
+            let b = tournament(&island.fitness, config.tournament, rng);
+            island.population[a].crossover(&island.population[b], rng)
+        } else {
+            island.population[a].clone()
+        };
+        child.mutate(rng, config.mutation_rate, obj.n_choices());
+        out.push(child);
+    }
+}
+
+/// Ring migration; identical invariants to [`super::ga`]'s: pre-snapshot
+/// parcels, worst-first replacement, the destination's best slot is never
+/// displaced.
+fn migrate_ring(islands: &mut [Island], migrants: usize) {
+    let k = islands.len();
+    if k < 2 || migrants == 0 {
+        return;
+    }
+    let mut parcels: Vec<Vec<(AssignmentGenome, f64)>> = Vec::with_capacity(k);
+    for island in islands.iter() {
+        let m = migrants.min(island.population.len());
+        let mut order: Vec<usize> = (0..island.population.len()).collect();
+        order.sort_by(|&a, &b| island.fitness[a].partial_cmp(&island.fitness[b]).unwrap());
+        parcels.push(
+            order
+                .iter()
+                .take(m)
+                .map(|&i| (island.population[i].clone(), island.fitness[i]))
+                .collect(),
+        );
+    }
+    for (src, parcel) in parcels.into_iter().enumerate() {
+        let dst = (src + 1) % k;
+        let island = &mut islands[dst];
+        let mut order: Vec<usize> = (0..island.population.len()).collect();
+        order.sort_by(|&a, &b| island.fitness[b].partial_cmp(&island.fitness[a]).unwrap());
+        let keep = island.population.len().saturating_sub(1);
+        for ((genome, fit), &slot) in parcel.into_iter().take(keep).zip(&order) {
+            island.population[slot] = genome;
+            island.fitness[slot] = fit;
+        }
+    }
+}
+
+fn finalize(obj: &AssignObjective, config: &GaConfig, mut state: AssignState) -> AssignGaResult {
+    let mut best: Option<(usize, usize, f64)> = None;
+    for (k, island) in state.islands.iter_mut().enumerate() {
+        let (idx, fit) = island
+            .fitness
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, &f)| (i, f))
+            .expect("island population is never empty");
+        island.history.push(fit);
+        if best.map_or(true, |(_, _, bf)| fit < bf) {
+            best = Some((k, idx, fit));
+        }
+    }
+    let (bk, bi, best_fitness) = best.expect("at least one island");
+    let island_histories: Vec<Vec<f64>> =
+        state.islands.iter().map(|i| i.history.clone()).collect();
+    let len = config.generations + 1;
+    let history: Vec<f64> = (0..len)
+        .map(|g| {
+            island_histories
+                .iter()
+                .map(|h| h[g])
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    let layers = obj.layers.len();
+    let archive: Vec<FrontierPoint> = state
+        .archive
+        .iter()
+        .map(|(digits, m)| FrontierPoint {
+            labels: AssignmentGenome::from_digit_string(layers, obj.n_choices(), digits)
+                .map(|g| obj.labels(&g))
+                .unwrap_or_default(),
+            assignment: digits.clone(),
+            err: m.err,
+            nmed: m.nmed,
+            cost: m.cost,
+        })
+        .collect();
+    AssignGaResult {
+        best: state.islands[bk].population[bi].clone(),
+        best_fitness,
+        history,
+        island_histories,
+        evaluations: state.evaluations,
+        archive,
+    }
+}
+
+fn write_checkpoint(path: &Path, state: &AssignState, config: &GaConfig) -> Result<()> {
+    let islands: Vec<Value> = state
+        .islands
+        .iter()
+        .map(|island| {
+            Value::obj(vec![
+                ("rng", Value::u64_hex_arr(&island.rng.state())),
+                (
+                    "population",
+                    Value::Arr(
+                        island
+                            .population
+                            .iter()
+                            .map(|g| Value::Str(g.to_digit_string()))
+                            .collect(),
+                    ),
+                ),
+                ("fitness", Value::f64_arr(&island.fitness)),
+                ("history", Value::f64_arr(&island.history)),
+            ])
+        })
+        .collect();
+    let archive: Vec<Value> = state
+        .archive
+        .iter()
+        .map(|(digits, m)| {
+            Value::obj(vec![
+                ("g", Value::Str(digits.clone())),
+                ("err", Value::Num(m.err)),
+                ("nmed", Value::Num(m.nmed)),
+                ("cost", Value::Num(m.cost)),
+            ])
+        })
+        .collect();
+    let root = Value::obj(vec![
+        ("format", Value::Str(CHECKPOINT_FORMAT.to_string())),
+        ("seed", Value::u64_hex_arr(&[config.seed])),
+        ("population", Value::Int(config.population as i64)),
+        ("hyper", Value::obj(vec![
+            ("tournament", Value::Int(config.tournament as i64)),
+            ("crossover_rate", Value::Num(config.crossover_rate)),
+            ("mutation_rate", Value::Num(config.mutation_rate)),
+            ("elitism", Value::Int(config.elitism as i64)),
+            ("seed_individual", Value::Bool(config.seed_individual)),
+            ("islands", Value::Int(config.islands as i64)),
+            ("migration_interval", Value::Int(config.migration_interval as i64)),
+            ("migrants", Value::Int(config.migrants as i64)),
+        ])),
+        ("generation", Value::Int(state.generation as i64)),
+        ("evaluations", Value::Int(state.evaluations as i64)),
+        ("islands", Value::Arr(islands)),
+        ("archive", Value::Arr(archive)),
+    ]);
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, root.to_json())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn state_from_json(obj: &AssignObjective, config: &GaConfig, v: &Value) -> Result<AssignState> {
+    let format = v.require("format")?.as_str().unwrap_or_default();
+    anyhow::ensure!(
+        format == CHECKPOINT_FORMAT,
+        "unknown checkpoint format '{format}'"
+    );
+    let seed = v.require("seed")?.to_u64_hex_vec()?;
+    anyhow::ensure!(
+        seed.len() == 1 && seed[0] == config.seed,
+        "checkpoint seed {:?} does not match config seed {}",
+        seed,
+        config.seed
+    );
+    let population = v.require_usize("population")?;
+    anyhow::ensure!(
+        population == config.population,
+        "checkpoint population {population} does not match config {}",
+        config.population
+    );
+    let hyper = v.require("hyper")?;
+    let check_usize = |key: &str, want: usize| -> Result<()> {
+        let got = hyper.require_usize(key)?;
+        anyhow::ensure!(
+            got == want,
+            "checkpoint {key} {got} does not match config {want} — \
+             resuming with different hyperparameters would silently diverge"
+        );
+        Ok(())
+    };
+    check_usize("tournament", config.tournament)?;
+    check_usize("elitism", config.elitism)?;
+    check_usize("islands", config.islands)?;
+    check_usize("migration_interval", config.migration_interval)?;
+    check_usize("migrants", config.migrants)?;
+    let check_f64 = |key: &str, want: f64| -> Result<()> {
+        let got = hyper.require(key)?.as_f64().unwrap_or(f64::NAN);
+        anyhow::ensure!(
+            got.to_bits() == want.to_bits(),
+            "checkpoint {key} {got} does not match config {want}"
+        );
+        Ok(())
+    };
+    check_f64("crossover_rate", config.crossover_rate)?;
+    check_f64("mutation_rate", config.mutation_rate)?;
+    let seeded = matches!(hyper.require("seed_individual")?, Value::Bool(true));
+    anyhow::ensure!(
+        seeded == config.seed_individual,
+        "checkpoint seed_individual {seeded} does not match config {}",
+        config.seed_individual
+    );
+    let generation = v.require_usize("generation")?;
+    anyhow::ensure!(
+        generation <= config.generations,
+        "checkpoint is {generation} generations in, config asks for only {}",
+        config.generations
+    );
+    let sizes = island_sizes(config);
+    let raw = v.require("islands")?.as_arr().unwrap_or_default();
+    anyhow::ensure!(
+        raw.len() == sizes.len(),
+        "checkpoint has {} islands, config implies {}",
+        raw.len(),
+        sizes.len()
+    );
+    let layers = obj.layers.len();
+    let mut islands = Vec::with_capacity(raw.len());
+    for (k, (iv, &size)) in raw.iter().zip(&sizes).enumerate() {
+        let rng_words = iv.require("rng")?.to_u64_hex_vec()?;
+        anyhow::ensure!(rng_words.len() == 4, "island {k}: bad RNG state length");
+        let rng = Rng::from_state([rng_words[0], rng_words[1], rng_words[2], rng_words[3]]);
+        let pop_raw = iv.require("population")?.as_arr().unwrap_or_default();
+        anyhow::ensure!(
+            pop_raw.len() == size,
+            "island {k}: checkpoint population {} != expected {size}",
+            pop_raw.len()
+        );
+        let population = pop_raw
+            .iter()
+            .map(|g| {
+                AssignmentGenome::from_digit_string(
+                    layers,
+                    obj.n_choices(),
+                    g.as_str().unwrap_or_default(),
+                )
+            })
+            .collect::<Result<Vec<AssignmentGenome>>>()
+            .with_context(|| format!("island {k} genomes"))?;
+        let fitness = iv.require("fitness")?.to_f64_vec()?;
+        anyhow::ensure!(
+            fitness.len() == size,
+            "island {k}: fitness length {} != population {size}",
+            fitness.len()
+        );
+        let history = iv.require("history")?.to_f64_vec()?;
+        anyhow::ensure!(
+            history.len() == generation,
+            "island {k}: history length {} != generation {generation}",
+            history.len()
+        );
+        islands.push(Island {
+            rng,
+            population,
+            fitness,
+            history,
+        });
+    }
+    let mut archive = BTreeMap::new();
+    for (i, entry) in v
+        .require("archive")?
+        .as_arr()
+        .unwrap_or_default()
+        .iter()
+        .enumerate()
+    {
+        let digits = entry
+            .require("g")?
+            .as_str()
+            .ok_or_else(|| anyhow!("archive entry {i}: assignment must be a string"))?
+            .to_string();
+        // Validate the digit string against the current layer/zoo shape.
+        AssignmentGenome::from_digit_string(layers, obj.n_choices(), &digits)
+            .with_context(|| format!("archive entry {i}"))?;
+        let req_f64 = |key: &str| -> Result<f64> {
+            let x = entry
+                .require(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("archive entry {i}: {key} must be a number"))?;
+            anyhow::ensure!(x.is_finite(), "archive entry {i}: {key} must be finite");
+            Ok(x)
+        };
+        archive.insert(
+            digits,
+            PointMetrics {
+                err: req_f64("err")?,
+                nmed: req_f64("nmed")?,
+                cost: req_f64("cost")?,
+            },
+        );
+    }
+    Ok(AssignState {
+        generation,
+        evaluations: v.require_usize("evaluations")?,
+        islands,
+        archive,
+    })
+}
+
+/// The full `--per-layer` search: GA archive + greedy chain + corner
+/// assignments, filtered to the non-dominated set.
+pub fn search_frontier(
+    obj: &AssignObjective,
+    config: &GaConfig,
+    model: &str,
+    checkpoint: Option<&Path>,
+) -> Result<(Frontier, AssignGaResult)> {
+    let ga = match checkpoint {
+        Some(path) => run_with_checkpoint(obj, config, path)?,
+        None => Ok::<_, anyhow::Error>(run(obj, config))?,
+    };
+    let mut candidates = ga.archive.clone();
+    candidates.extend(greedy_frontier(obj));
+    // The corners are in the greedy chain by construction, but make the
+    // guarantee explicit: exact and all-cheapest are always candidates.
+    candidates.push(FrontierPoint::from_genome(
+        obj,
+        &AssignmentGenome::uniform(obj.layers.len(), 0),
+    ));
+    candidates.push(FrontierPoint::from_genome(
+        obj,
+        &AssignmentGenome::uniform(obj.layers.len(), obj.cheapest_choice() as u8),
+    ));
+    let frontier = Frontier::from_candidates(model, &obj.layers, config.seed, candidates);
+    Ok((frontier, ga))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer_names() -> Vec<String> {
+        ["conv1", "conv2", "fc1", "fc2", "fc3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    fn small_objective() -> AssignObjective {
+        AssignObjective::new(&DistSet::synthetic_lenet_like(), &layer_names(), 1.0).unwrap()
+    }
+
+    fn small_config() -> GaConfig {
+        GaConfig {
+            population: 16,
+            generations: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn corners_have_expected_metrics() {
+        let obj = small_objective();
+        let exact = AssignmentGenome::uniform(5, 0);
+        let m = obj.metrics(&exact);
+        assert_eq!(m.err, 0.0);
+        assert_eq!(m.nmed, 0.0);
+        assert!(m.cost > 0.0);
+        let cheap = AssignmentGenome::uniform(5, obj.cheapest_choice() as u8);
+        let mc = obj.metrics(&cheap);
+        assert!(mc.cost < m.cost, "cheapest corner must undercut exact");
+        assert!(mc.err > 0.0, "the cheapest multiplier is not exact");
+        // AC is the zoo's smallest design (Table I shape).
+        assert_eq!(CHOICES[obj.cheapest_choice()], "ac");
+    }
+
+    #[test]
+    fn greedy_chain_is_mutually_non_dominated() {
+        let obj = small_objective();
+        let chain = greedy_frontier(&obj);
+        assert!(chain.len() >= 5, "5 layers walk at least 5 steps, got {}", chain.len());
+        for (i, a) in chain.iter().enumerate() {
+            for (j, b) in chain.iter().enumerate() {
+                if i != j {
+                    assert!(!a.dominates(b), "step {i} dominates step {j}");
+                }
+            }
+        }
+        // Strictly decreasing cost along the walk.
+        for w in chain.windows(2) {
+            assert!(w[1].cost < w[0].cost);
+            assert!(w[1].err >= w[0].err);
+        }
+        assert_eq!(chain.first().unwrap().labels, vec!["exact"; 5]);
+        assert_eq!(chain.last().unwrap().labels, vec!["ac"; 5]);
+    }
+
+    #[test]
+    fn frontier_has_interior_points_and_roundtrips() {
+        let obj = small_objective();
+        let (frontier, ga) = search_frontier(&obj, &small_config(), "lenet", None).unwrap();
+        assert!(ga.evaluations >= 16 * 9);
+        assert!(
+            frontier.interior_points() >= 3,
+            "acceptance: >= 3 interior non-dominated points, got {}",
+            frontier.interior_points()
+        );
+        // Ascending cost, no dominated points.
+        for w in frontier.points.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+        }
+        for (i, a) in frontier.points.iter().enumerate() {
+            for (j, b) in frontier.points.iter().enumerate() {
+                if i != j {
+                    assert!(!a.dominates(b), "frontier point {i} dominates {j}");
+                }
+            }
+        }
+        // JSON roundtrip is lossless and the fingerprint is stable.
+        let parsed = Frontier::from_json(&frontier.to_json()).unwrap();
+        assert_eq!(parsed.to_json(), frontier.to_json());
+        assert_eq!(parsed.fingerprint(), frontier.fingerprint());
+        assert_eq!(parsed.layers, layer_names());
+        assert!(Frontier::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn search_is_deterministic_and_thread_independent() {
+        let obj = small_objective();
+        let (fa, _) = search_frontier(&obj, &small_config(), "lenet", None).unwrap();
+        let mut cfg = small_config();
+        cfg.threads = 4;
+        cfg.islands = 2;
+        let obj2 = small_objective();
+        let (fb, _) = search_frontier(&obj2, &cfg, "lenet", None).unwrap();
+        // Same seed, different islands/threads: the archive differs (the
+        // trajectory differs with island count), but each run must be
+        // self-reproducible.
+        let (fa2, _) = search_frontier(&obj, &small_config(), "lenet", None).unwrap();
+        assert_eq!(fa.to_json(), fa2.to_json());
+        let (fb2, _) = search_frontier(&obj2, &cfg, "lenet", None).unwrap();
+        assert_eq!(fb.to_json(), fb2.to_json());
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_frontier() {
+        let obj = small_objective();
+        let mut base = small_config();
+        base.islands = 2;
+        base.threads = 1;
+        let (f1, g1) = search_frontier(&obj, &base, "lenet", None).unwrap();
+        for threads in [2usize, 4] {
+            let mut cfg = base.clone();
+            cfg.threads = threads;
+            let (f, g) = search_frontier(&obj, &cfg, "lenet", None).unwrap();
+            assert_eq!(f.to_json(), f1.to_json(), "threads={threads}");
+            assert_eq!(g.best, g1.best);
+            assert_eq!(g.best_fitness.to_bits(), g1.best_fitness.to_bits());
+        }
+    }
+}

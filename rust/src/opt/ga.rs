@@ -116,13 +116,14 @@ const CHECKPOINT_FORMAT: &str = "heam-ga-checkpoint-v1";
 
 /// Effective island count: at least 1, and small enough that every island
 /// holds >= 4 individuals (an island needs room for elites *and* offspring).
-fn effective_islands(config: &GaConfig) -> usize {
+/// Shared with the assignment-genome GA in [`super::assign`].
+pub(crate) fn effective_islands(config: &GaConfig) -> usize {
     (config.population / 4).max(1).min(config.islands.max(1))
 }
 
 /// Per-island population sizes (total preserved, remainder spread over the
-/// leading islands).
-fn island_sizes(config: &GaConfig) -> Vec<usize> {
+/// leading islands). Shared with [`super::assign`].
+pub(crate) fn island_sizes(config: &GaConfig) -> Vec<usize> {
     let k = effective_islands(config);
     let base = config.population / k;
     let rem = config.population % k;
@@ -358,7 +359,9 @@ fn finalize(config: &GaConfig, mut state: GaState) -> GaResult {
     }
 }
 
-fn tournament(fitness: &[f64], k: usize, rng: &mut Rng) -> usize {
+/// k-way tournament pick (lowest fitness wins). Shared with
+/// [`super::assign`].
+pub(crate) fn tournament(fitness: &[f64], k: usize, rng: &mut Rng) -> usize {
     let mut best = rng.below(fitness.len());
     for _ in 1..k {
         let c = rng.below(fitness.len());

@@ -162,6 +162,91 @@ impl Genome {
     }
 }
 
+/// A per-layer multiplier assignment genome: one choice index per
+/// assignable layer of a model graph. The index space is positional into
+/// a caller-held choice vocabulary (the zoo labels), so the genome itself
+/// stays a dense integer vector the GA operators can treat uniformly —
+/// the assignment analogue of the θ bit vector above.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AssignmentGenome {
+    /// `choices[l]` selects the multiplier for assignable layer `l`.
+    pub choices: Vec<u8>,
+}
+
+/// Digit alphabet for [`AssignmentGenome`] checkpoint strings (base-36,
+/// lowercase — far more choices than any realistic zoo).
+const DIGITS: &[u8; 36] = b"0123456789abcdefghijklmnopqrstuvwxyz";
+
+impl AssignmentGenome {
+    /// All layers on choice 0 (by convention the exact corner).
+    pub fn uniform(layers: usize, choice: u8) -> Self {
+        Self { choices: vec![choice; layers] }
+    }
+
+    /// Uniformly random assignment over `n_choices` per layer.
+    pub fn random(layers: usize, n_choices: usize, rng: &mut Rng) -> Self {
+        Self {
+            choices: (0..layers).map(|_| rng.below(n_choices) as u8).collect(),
+        }
+    }
+
+    /// Uniform crossover.
+    pub fn crossover(&self, other: &AssignmentGenome, rng: &mut Rng) -> AssignmentGenome {
+        AssignmentGenome {
+            choices: self
+                .choices
+                .iter()
+                .zip(&other.choices)
+                .map(|(&a, &b)| if rng.chance(0.5) { a } else { b })
+                .collect(),
+        }
+    }
+
+    /// Per-gene redraw mutation: each layer re-rolls its choice with
+    /// probability `rate` (the redraw may land on the same choice, which
+    /// keeps the operator unbiased over the vocabulary).
+    pub fn mutate(&mut self, rng: &mut Rng, rate: f64, n_choices: usize) {
+        for c in self.choices.iter_mut() {
+            if rng.chance(rate) {
+                *c = rng.below(n_choices) as u8;
+            }
+        }
+    }
+
+    /// Serialize as a base-36 digit string (checkpoint format).
+    pub fn to_digit_string(&self) -> String {
+        self.choices.iter().map(|&c| DIGITS[c as usize] as char).collect()
+    }
+
+    /// Parse a [`AssignmentGenome::to_digit_string`] form, validating
+    /// length and per-gene range against the layer count and vocabulary.
+    pub fn from_digit_string(layers: usize, n_choices: usize, s: &str) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            s.len() == layers,
+            "assignment string has {} genes, model has {} assignable layers",
+            s.len(),
+            layers
+        );
+        let choices = s
+            .bytes()
+            .map(|b| {
+                let idx = DIGITS
+                    .iter()
+                    .position(|&d| d == b)
+                    .ok_or_else(|| anyhow::anyhow!("invalid assignment digit '{}'", b as char))?;
+                anyhow::ensure!(
+                    idx < n_choices,
+                    "assignment digit '{}' out of range for a {}-choice zoo",
+                    b as char,
+                    n_choices
+                );
+                Ok(idx as u8)
+            })
+            .collect::<anyhow::Result<Vec<u8>>>()?;
+        Ok(Self { choices })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +314,39 @@ mod tests {
         }
         assert!(Genome::from_bit_string(&s, "01").is_err());
         assert!(Genome::from_bit_string(&s, &"x".repeat(s.len())).is_err());
+    }
+
+    #[test]
+    fn assignment_digit_string_roundtrip() {
+        let mut rng = Rng::new(21);
+        for _ in 0..10 {
+            let g = AssignmentGenome::random(5, 9, &mut rng);
+            let text = g.to_digit_string();
+            assert_eq!(text.len(), 5);
+            assert_eq!(AssignmentGenome::from_digit_string(5, 9, &text).unwrap(), g);
+        }
+        // Length, alphabet and range violations are all rejected.
+        assert!(AssignmentGenome::from_digit_string(5, 9, "012").is_err());
+        assert!(AssignmentGenome::from_digit_string(5, 9, "012X4").is_err());
+        assert!(AssignmentGenome::from_digit_string(5, 9, "01299").is_err());
+        // '8' is the last valid digit of a 9-choice zoo.
+        assert_eq!(
+            AssignmentGenome::from_digit_string(5, 9, "00008").unwrap().choices,
+            vec![0, 0, 0, 0, 8]
+        );
+    }
+
+    #[test]
+    fn assignment_operators_stay_in_range() {
+        let mut rng = Rng::new(22);
+        let a = AssignmentGenome::uniform(7, 0);
+        let b = AssignmentGenome::uniform(7, 8);
+        let c = a.crossover(&b, &mut rng);
+        assert!(c.choices.iter().all(|&v| v == 0 || v == 8));
+        let mut m = AssignmentGenome::uniform(7, 3);
+        m.mutate(&mut rng, 1.0, 9);
+        assert!(m.choices.iter().all(|&v| v < 9));
+        assert_ne!(m, AssignmentGenome::uniform(7, 3), "rate-1.0 redraw should move");
     }
 
     #[test]

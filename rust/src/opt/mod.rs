@@ -14,12 +14,17 @@
 //!   per-gene mutation and elitism; ring migration of elites; fitness
 //!   sharded across a scoped thread pool with thread-count-independent
 //!   determinism; JSON checkpoint/resume for long searches.
+//! * [`assign`] — per-layer heterogeneous multiplier assignment: a GA
+//!   over zoo-label genomes plus a greedy sensitivity-ordered baseline,
+//!   emitting the accuracy-vs-cost Pareto frontier consumed by
+//!   `heam serve --family` (the ROADMAP's layer-wise search item).
 //! * [`finetune`] — §II.C: OR-merging compressed terms to cut the number
 //!   of compressed partial-product rows (Fig. 4(b) → Fig. 4(c)).
 //! * [`linear_fit`] — the §II.A / Fig. 2 demonstration: weighted
 //!   least-squares linear-form multipliers f1 (uniform) and f2
 //!   (distribution-weighted) over the bases {1, x, y, x^2, y^2}.
 
+pub mod assign;
 pub mod distributions;
 pub mod finetune;
 pub mod ga;
@@ -28,6 +33,7 @@ pub mod linear_fit;
 pub mod nonlinear;
 pub mod objective;
 
+pub use assign::{AssignObjective, Frontier, FrontierPoint};
 pub use distributions::{Dist256, DistSet, LayerDist};
 pub use ga::{GaConfig, GaResult};
 pub use genome::Genome;

@@ -8,6 +8,7 @@ use heam::mult::heam::HeamDesign;
 use heam::mult::{pack_xy, Lut};
 use heam::nn::ops::Requant;
 use heam::nn::quant::QuantParams;
+use heam::opt::assign::{self, AssignObjective};
 use heam::opt::distributions::DistSet;
 use heam::opt::genome::{Genome, GenomeSpace};
 use heam::opt::{ga, GaConfig, Objective};
@@ -143,6 +144,150 @@ fn ga_checkpoint_resume_reproduces_uninterrupted_run() {
     );
     assert!(err.is_err(), "mismatched migration interval must fail to resume");
     let err = ga::run_with_checkpoint(&obj, &GaConfig { mutation_rate: 0.5, ..full }, &path);
+    assert!(err.is_err(), "mismatched mutation rate must fail to resume");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The assignment-GA analogue of [`ga_objective`]: per-layer sensitivity
+/// tables from the synthetic distribution set over LeNet's layer names.
+fn assign_objective() -> AssignObjective {
+    let layers: Vec<String> = ["conv1", "conv2", "fc1", "fc2", "fc3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    AssignObjective::new(&DistSet::synthetic_lenet_like(), &layers, 1.0).unwrap()
+}
+
+/// Byte-level equality of two assignment-GA results, Pareto archive
+/// included — the archive feeds the frontier JSON, so any divergence here
+/// would surface as a non-reproducible frontier file.
+fn assert_assign_results_identical(
+    a: &assign::AssignGaResult,
+    b: &assign::AssignGaResult,
+    context: &str,
+) {
+    assert_eq!(a.best, b.best, "{context}: best assignment");
+    assert_eq!(
+        a.best_fitness.to_bits(),
+        b.best_fitness.to_bits(),
+        "{context}: best fitness"
+    );
+    assert_eq!(a.evaluations, b.evaluations, "{context}: evaluations");
+    let bits = |h: &[f64]| h.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a.history), bits(&b.history), "{context}: merged history");
+    assert_eq!(
+        a.island_histories.len(),
+        b.island_histories.len(),
+        "{context}: island count"
+    );
+    for (k, (ha, hb)) in a.island_histories.iter().zip(&b.island_histories).enumerate() {
+        assert_eq!(bits(ha), bits(hb), "{context}: island {k} history");
+    }
+    assert_eq!(a.archive.len(), b.archive.len(), "{context}: archive size");
+    for (pa, pb) in a.archive.iter().zip(&b.archive) {
+        assert_eq!(pa.assignment, pb.assignment, "{context}: archive order");
+        assert_eq!(pa.err.to_bits(), pb.err.to_bits(), "{context}: archive err");
+        assert_eq!(pa.nmed.to_bits(), pb.nmed.to_bits(), "{context}: archive nmed");
+        assert_eq!(pa.cost.to_bits(), pb.cost.to_bits(), "{context}: archive cost");
+    }
+}
+
+/// Assignment-GA determinism: the per-layer search (PR 7) must honor the
+/// same contract as the design GA — identical results (archive included)
+/// at any evaluation thread count, single- and multi-island.
+#[test]
+fn assignment_ga_identical_across_thread_counts() {
+    let obj = assign_objective();
+    for islands in [1usize, 4] {
+        let mk = |threads: usize| GaConfig {
+            population: 24,
+            generations: 10,
+            islands,
+            threads,
+            migration_interval: 3,
+            ..Default::default()
+        };
+        let baseline = assign::run(&obj, &mk(1));
+        assert_eq!(baseline.island_histories.len(), islands);
+        assert!(!baseline.archive.is_empty(), "search must archive what it evaluates");
+        for threads in [2usize, 8] {
+            let r = assign::run(&obj, &mk(threads));
+            assert_assign_results_identical(
+                &r,
+                &baseline,
+                &format!("assign islands={islands} threads={threads}"),
+            );
+        }
+    }
+}
+
+/// Assignment-GA checkpoint/resume: interrupting mid-migration-interval
+/// (generation 7 of interval 4) and resuming must reproduce the
+/// uninterrupted run bit-for-bit — including the Pareto archive the
+/// frontier is built from — with every phase at a different thread count
+/// (1, 2 and 4). Boundary interruption and hyperparameter-mismatch
+/// rejection mirror the design-GA suite.
+#[test]
+fn assignment_ga_checkpoint_resume_reproduces_uninterrupted_run() {
+    let obj = assign_objective();
+    let full = GaConfig {
+        population: 20,
+        generations: 12,
+        islands: 2,
+        threads: 1,
+        migration_interval: 4,
+        ..Default::default()
+    };
+    let uninterrupted = assign::run(&obj, &full);
+
+    let dir = std::env::temp_dir().join("heam_assign_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("assign_checkpoint.json");
+    let _ = std::fs::remove_file(&path);
+
+    // Truncate at generation 7 — strictly inside a migration interval.
+    let partial = GaConfig {
+        generations: 7,
+        threads: 2,
+        ..full.clone()
+    };
+    let halfway = assign::run_with_checkpoint(&obj, &partial, &path).unwrap();
+    assert!(path.exists(), "truncated run must leave a checkpoint behind");
+    for (g, (a, b)) in halfway.history[..7]
+        .iter()
+        .zip(&uninterrupted.history[..7])
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "prefix history at generation {g}");
+    }
+
+    let resumed = assign::run_with_checkpoint(
+        &obj,
+        &GaConfig { threads: 4, ..full.clone() },
+        &path,
+    )
+    .unwrap();
+    assert_assign_results_identical(&resumed, &uninterrupted, "resumed vs uninterrupted");
+
+    // Interrupting exactly on the migration boundary must also resume
+    // identically (migration runs unconditionally at epoch ends).
+    let _ = std::fs::remove_file(&path);
+    let at_boundary = GaConfig { generations: 8, ..full.clone() };
+    let _ = assign::run_with_checkpoint(&obj, &at_boundary, &path).unwrap();
+    let resumed2 = assign::run_with_checkpoint(&obj, &full, &path).unwrap();
+    assert_assign_results_identical(&resumed2, &uninterrupted, "boundary resume");
+
+    // Seed / trajectory-shaping hyperparameter mismatches are rejected.
+    let err = assign::run_with_checkpoint(&obj, &GaConfig { seed: 7, ..full.clone() }, &path);
+    assert!(err.is_err(), "mismatched seed must fail to resume");
+    let err = assign::run_with_checkpoint(
+        &obj,
+        &GaConfig { migration_interval: 5, ..full.clone() },
+        &path,
+    );
+    assert!(err.is_err(), "mismatched migration interval must fail to resume");
+    let err =
+        assign::run_with_checkpoint(&obj, &GaConfig { mutation_rate: 0.5, ..full }, &path);
     assert!(err.is_err(), "mismatched mutation rate must fail to resume");
     let _ = std::fs::remove_dir_all(dir);
 }

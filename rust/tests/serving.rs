@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use heam::coordinator::loadgen::{self, generate_trace, trace_fingerprint, LoadgenConfig, Mode};
-use heam::coordinator::metrics::Metrics;
+use heam::coordinator::metrics::{Metrics, Snapshot};
 use heam::coordinator::registry::ModelRegistry;
 use heam::coordinator::server::{Pending, ServeConfig, Server};
 use heam::mult::MultKind;
@@ -135,6 +135,36 @@ fn metrics_concurrent_updates_are_lossless() {
     );
     assert!(s.queue >= 0, "snapshot gauge must never be negative: {}", s.queue);
     assert_eq!(s.class_rejected.iter().sum::<u64>(), s.rejected);
+}
+
+/// Satellite regression: a gateway-wide view merges lane snapshots whose
+/// per-class counter vectors have different lengths (classless lanes next
+/// to multi-class ones), and a delta against a baseline snapped *before*
+/// the wide lanes existed must pad to the longer vector — the old
+/// `delta_since` truncated to `self`'s length (dropping the tail classes)
+/// and subtracted unchecked (panicking in debug builds when the baseline
+/// was wider).
+#[test]
+fn snapshot_delta_survives_unequal_class_vectors() {
+    let narrow = Metrics::default();
+    narrow.record_rejected(0);
+    let base = Snapshot::zero().merge(&narrow.snapshot());
+
+    let wide = Metrics::with_classes(4);
+    wide.record_rejected(3);
+    wide.record_preempted(1);
+    let merged = base.clone().merge(&wide.snapshot());
+
+    let d = merged.delta_since(&base);
+    assert_eq!(d.class_rejected, vec![0, 0, 0, 1], "tail classes must survive the delta");
+    assert_eq!(d.class_preempted, vec![0, 1, 0, 0]);
+    assert_eq!(d.rejected, 1);
+
+    // Reverse orientation (narrow current vs wide baseline): saturates to
+    // zero across the baseline's full width instead of underflowing.
+    let r = base.delta_since(&merged);
+    assert_eq!(r.class_rejected.len(), 4);
+    assert!(r.class_rejected.iter().all(|&c| c == 0));
 }
 
 /// Satellite regression: the lane queue gauge is read lock-free while

@@ -1,13 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
 #
-#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched smokes + python tests
+#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched/chaos/pareto smokes + python tests
 #   scripts/check.sh --rust     # rust only (includes all three smokes)
 #   scripts/check.sh --python   # python only
 #   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
 #   scripts/check.sh --qos      # QoS routing smoke only (builds if needed)
 #   scripts/check.sh --sched    # shared-scheduler smoke only (builds if needed)
 #   scripts/check.sh --chaos    # fault-injection / containment smoke only (builds if needed)
+#   scripts/check.sh --pareto   # per-layer Pareto frontier determinism smoke only (builds if needed)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,15 +18,17 @@ run_loadgen=1
 run_qos=1
 run_sched=1
 run_chaos=1
+run_pareto=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0 ;;
-  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0 ;;
-  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0 ;;
-  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0 ;;
-  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0 ;;
+  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
+  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
+  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
+  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0; run_pareto=0 ;;
+  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_pareto=0 ;;
+  --pareto) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos|--pareto]" >&2; exit 2 ;;
 esac
 
 # Deterministic serving smoke: a short fixed-seed open-loop soak, run
@@ -192,6 +195,37 @@ chaos_smoke() {
   echo "chaos smoke OK: $line_a"
 }
 
+# Fixed-seed per-layer Pareto smoke: `heam optimize --per-layer` run
+# twice from one seed — once at 2 evaluation threads, once at 4 — must
+# emit byte-identical frontier JSON (`cmp`, not a structural diff: the
+# file is the interchange artifact `heam serve --family` consumes, so
+# even formatting drift breaks reproducibility). Each run's own
+# "pareto frontier OK" line already asserts >= 3 interior points between
+# the exact and fully-approximate corners.
+pareto_smoke() {
+  echo "== per-layer pareto determinism smoke =="
+  local bin=target/release/heam
+  cargo build --release
+  local out_a out_b
+  out_a=$("$bin" optimize --per-layer --seed 7 --population 16 --generations 8 \
+          --islands 2 --threads 2 --out /tmp/heam_pareto_a)
+  out_b=$("$bin" optimize --per-layer --seed 7 --population 16 --generations 8 \
+          --islands 2 --threads 4 --out /tmp/heam_pareto_b)
+  for out in "$out_a" "$out_b"; do
+    if ! printf '%s\n' "$out" | grep -q '^pareto frontier OK'; then
+      echo "!! per-layer optimize did not report a valid frontier:" >&2
+      printf '%s\n' "$out" >&2
+      exit 1
+    fi
+  done
+  if ! cmp -s /tmp/heam_pareto_a/frontier.json /tmp/heam_pareto_b/frontier.json; then
+    echo "!! frontier JSON diverged across identical seeds / thread counts:" >&2
+    diff /tmp/heam_pareto_a/frontier.json /tmp/heam_pareto_b/frontier.json >&2 || true
+    exit 1
+  fi
+  echo "pareto smoke OK: $(printf '%s\n' "$out_a" | grep '^pareto frontier OK')"
+}
+
 skipped=""
 if [ "$run_rust" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
@@ -206,6 +240,7 @@ if [ "$run_rust" = 1 ]; then
     run_qos=0
     run_sched=0
     run_chaos=0
+    run_pareto=0
   fi
 fi
 
@@ -242,6 +277,15 @@ if [ "$run_chaos" = 1 ]; then
   else
     echo "!! cargo not found — chaos smoke skipped" >&2
     skipped="${skipped:+$skipped,}chaos"
+  fi
+fi
+
+if [ "$run_pareto" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    pareto_smoke
+  else
+    echo "!! cargo not found — pareto smoke skipped" >&2
+    skipped="${skipped:+$skipped,}pareto"
   fi
 fi
 

@@ -9,6 +9,9 @@
 //! * ApproxFlow conv hot loop — one LeNet conv2 layer forward, naive
 //!   reference vs the im2col + LUT-GEMM core (asserted byte-identical
 //!   before timing).
+//! * Per-(multiplier, kernel-tier) conv records — the scalar LUT walk
+//!   vs the dispatched kernel (closed-form specialization or SIMD LUT),
+//!   parity-asserted before timing, emitted with `img_per_s`.
 //! * LUT-dot primitive — the MAC inner loop, 256 KiB i32 table vs the
 //!   cache-compact 16-bit table.
 //! * Whole-graph forward — naive `Graph::run` vs the prepared plan, plus
@@ -200,6 +203,45 @@ fn main() {
         "  -> conv2 LUT speedup (naive / gemm): {:.2}x",
         naive_lut.ns() / gemm_lut.ns()
     );
+
+    // 3b. Per-(multiplier, kernel-tier) conv records: each zoo
+    //     representative prepared twice — pinned to the scalar LUT walk
+    //     (the bit-exactness reference) and under full dispatch
+    //     (closed-form recognition + the host's SIMD tier). Outputs are
+    //     asserted byte-identical before timing; every record carries
+    //     img_per_s (conv2 forwards/second) so BENCH_hotpaths.json
+    //     tracks specialization wins per kernel PR-over-PR.
+    {
+        use heam::nn::kernels::DispatchPolicy;
+        let zoo = [
+            ("exact", Multiplier::Exact),
+            ("heam", Multiplier::Lut(heam_lut.clone())),
+            ("ou1", Multiplier::Lut(Arc::new(MultKind::OuL1.lut()))),
+            ("wallace", Multiplier::Lut(Arc::new(MultKind::Wallace.lut()))),
+        ];
+        for (name, mul) in &zoo {
+            let scalar = Kernel::prepare_with(mul, DispatchPolicy::scalar());
+            let full = Kernel::prepare_with(mul, DispatchPolicy::full());
+            assert_eq!(
+                prepared_conv.forward(&x, &scalar, &mut scratch),
+                prepared_conv.forward(&x, &full, &mut scratch),
+                "dispatch tiers diverged on conv2 for '{name}'"
+            );
+            for (tag, kernel) in [("scalar", &scalar), ("dispatched", &full)] {
+                let bench_name =
+                    format!("gemm_conv2d_forward ({name}, {tag}: {})", kernel.label());
+                let m = bench_print(&bench_name, &mut || {
+                    std::hint::black_box(prepared_conv.forward(&x, kernel, &mut scratch));
+                });
+                records.push(Record {
+                    op: bench_name,
+                    ns: m.ns(),
+                    img_per_s: Some(1e9 / m.ns()),
+                    ga_evals_per_sec: None,
+                });
+            }
+        }
+    }
 
     // 4. The dot primitive: full-width table walk vs the compact 16-bit
     //    transposed table.

@@ -12,6 +12,9 @@
 //!   `artifacts/luts/` (serving artifacts).
 //! * `report`     — print the standalone multiplier cost table (Table I
 //!   hardware columns).
+//! * `kernels`    — print the kernel dispatch decision per zoo multiplier
+//!   (closed-form specialization / SIMD tier) and self-check every tier
+//!   against the scalar LUT reference on a seeded workload.
 //! * `serve`      — run the serving coordinator: PJRT runtime on an
 //!   AOT-compiled model, or (`--native`) the in-process batched LUT-GEMM
 //!   engine with a `--workers` thread pool; see `examples/serve_lenet.rs`
@@ -58,6 +61,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "eval" => eval(rest),
         "luts" => luts(rest),
         "report" => report(rest),
+        "kernels" => kernels(rest),
         "serve" => serve(rest),
         "loadgen" => loadgen(rest),
         "nonlinear" => nonlinear(rest),
@@ -79,6 +83,7 @@ fn print_usage() {
            eval       evaluate a trained model under a multiplier\n\
            luts       dump every multiplier's LUT to artifacts/luts/\n\
            report     print the standalone multiplier cost table\n\
+           kernels    print kernel dispatch decisions and self-check all tiers\n\
            serve      serve a model (PJRT runtime, or --native LUT-GEMM pool)\n\
            loadgen    replay seeded traffic against a multi-model gateway\n\
            nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\n\
@@ -462,6 +467,83 @@ fn luts(argv: &[String]) -> Result<()> {
 fn report(argv: &[String]) -> Result<()> {
     let _args = Args::new("heam report", "Standalone multiplier cost table").parse(argv)?;
     println!("{}", heam::bench::table1::hardware_table());
+    Ok(())
+}
+
+fn kernels(argv: &[String]) -> Result<()> {
+    use heam::nn::gemm::{gemm_raw, Kernel};
+    use heam::nn::kernels::{detect_simd, DispatchPolicy};
+    use heam::util::hash::fnv1a_u64;
+    use heam::util::prng::Rng;
+
+    let args = Args::new(
+        "heam kernels",
+        "Print the dispatch decision per zoo multiplier and self-check every \
+         kernel tier against the scalar LUT reference on a seeded workload",
+    )
+    .opt("seed", "7", "seed for the parity workload")
+    .opt("n", "160", "patch-strip width of the check GEMM")
+    .opt("k", "96", "reduction depth of the check GEMM")
+    .opt("m", "4", "weight rows of the check GEMM")
+    .parse(argv)?;
+    let seed: u64 = args.get_as("seed")?;
+    let n: usize = args.get_as("n")?;
+    let k: usize = args.get_as("k")?;
+    let m: usize = args.get_as("m")?;
+    if n == 0 || k == 0 || m == 0 {
+        bail!("n, k, m must all be nonzero");
+    }
+
+    let mut rng = Rng::new(seed);
+    let xt: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+    let w: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+
+    let mults: Vec<(String, Multiplier)> = std::iter::once(("exact".to_string(), Multiplier::Exact))
+        .chain(MultKind::ALL.iter().map(|kind| {
+            (
+                kind.label().to_lowercase().replace([' ', '(', ')', '.'], ""),
+                Multiplier::Lut(Arc::new(kind.lut())),
+            )
+        }))
+        .collect();
+
+    let mut specialized = 0usize;
+    let mut fps: Vec<u64> = Vec::with_capacity(mults.len());
+    for (name, mul) in &mults {
+        let reference = Kernel::prepare_with(mul, DispatchPolicy::scalar());
+        let dispatched = Kernel::prepare_with(mul, DispatchPolicy::full());
+        let mut expect = vec![0i64; m * n];
+        let mut got = vec![0i64; m * n];
+        gemm_raw(&reference, &xt, n, k, &w, m, &mut expect);
+        gemm_raw(&dispatched, &xt, n, k, &w, m, &mut got);
+        if got != expect {
+            bail!(
+                "kernel parity FAILED for '{name}': {} diverges from the scalar reference",
+                dispatched.label()
+            );
+        }
+        if dispatched.is_specialized() {
+            specialized += 1;
+        }
+        let fp = fnv1a_u64(got.iter().map(|&v| v as u64));
+        fps.push(fp);
+        println!(
+            "kernel {name}: {} [{}]  fp={fp:016x}  parity=ok",
+            dispatched.label(),
+            dispatched.describe()
+        );
+    }
+
+    let host = detect_simd().suffix().trim_start_matches('+');
+    let combined = fnv1a_u64(fps.iter().copied());
+    println!("kernels trace seed={seed} n={n} k={k} m={m} fp={combined:016x}");
+    if specialized == 0 {
+        bail!("no multiplier specialized — the closed-form recognizers are dead");
+    }
+    println!(
+        "kernel check OK: specialized={specialized} of {}, host simd={host}",
+        mults.len()
+    );
     Ok(())
 }
 

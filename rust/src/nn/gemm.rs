@@ -40,27 +40,41 @@ use anyhow::{anyhow, Result};
 use crate::mult::lut::{CompactData, Lut};
 
 use super::graph::{Graph, Op, Value};
+use super::kernels::{self, simd, ClosedForm, ClosedKernel, DispatchPolicy, SimdTier};
 use super::multiplier::Multiplier;
 use super::ops::{maxpool2, QConv2d, QDense, Requant};
 use super::quant::QuantParams;
 use super::tensor::Tensor;
 
 /// Patch-strip width: i32 accumulator tile held in registers / L1.
-const N_BLOCK: usize = 128;
+pub const N_BLOCK: usize = 128;
 
 /// k-chunk bound for 16-bit entry accumulation in i32 lanes:
-/// 2^14 * (2^16 - 1) < 2^30, so a chunk can never overflow.
-const K_CHUNK: usize = 16384;
+/// 2^14 * (2^16 - 1) < 2^30, so a chunk can never overflow. Closed-form
+/// kernels whose value range exceeds 2^16 carry a tighter per-kernel
+/// bound ([`ClosedKernel::chunk`]).
+pub const K_CHUNK: usize = 16384;
 
 /// The inner-loop multiplication kernel, prepared once per graph.
+///
+/// [`Kernel::prepare`] dispatches through two specialization tiers (see
+/// [`super::kernels`] for the decision table): a verified closed-form
+/// arithmetic kernel when the table *is* one of the known bit-trick
+/// families, otherwise the general transposed-table walk with a SIMD
+/// tier selected once per prepare.
 pub enum Kernel {
     /// Exact `x * y` (no table).
     Exact,
     /// Transposed 16-bit table with additive bias:
-    /// `mul(x, y) = t[(y << 8) | x] as i64 + bias`.
-    Narrow { t: Vec<u16>, bias: i64 },
+    /// `mul(x, y) = t[(y << 8) | x] as i64 + bias`. The table carries
+    /// [`simd::NARROW_PAD`] extra zero entries so 32-bit SIMD gathers at
+    /// the last index stay in-bounds.
+    Narrow { t: Vec<u16>, bias: i64, simd: SimdTier },
     /// Transposed full-width fallback (value ranges wider than 2^16).
-    Wide { t: Vec<i32> },
+    Wide { t: Vec<i32>, simd: SimdTier },
+    /// Branchless closed-form kernel (no table at all), emitted only
+    /// after exhaustive verification against all 65 536 table entries.
+    Closed(ClosedKernel),
 }
 
 fn transpose256<T: Copy + Default>(src: &[T]) -> Vec<T> {
@@ -73,17 +87,47 @@ fn transpose256<T: Copy + Default>(src: &[T]) -> Vec<T> {
     dst
 }
 
+/// Append the SIMD gather pad to a transposed narrow table (see
+/// [`simd::NARROW_PAD`]): zeros, so a scalar walk can never observe it.
+fn pad_narrow(mut t: Vec<u16>) -> Vec<u16> {
+    t.extend(std::iter::repeat(0).take(simd::NARROW_PAD));
+    t
+}
+
 impl Kernel {
-    /// Build the kernel for a pluggable multiplier.
+    /// Build the kernel for a pluggable multiplier under the process
+    /// default policy (full dispatch unless `HEAM_KERNEL_FORCE` pins a
+    /// tier — see [`DispatchPolicy::from_env`]).
     pub fn prepare(mul: &Multiplier) -> Self {
+        Self::prepare_with(mul, DispatchPolicy::from_env())
+    }
+
+    /// Build the kernel under an explicit dispatch policy (tests and
+    /// benchmarks pin tiers this way instead of racing on env vars).
+    pub fn prepare_with(mul: &Multiplier, policy: DispatchPolicy) -> Self {
         match mul {
             Multiplier::Exact => Kernel::Exact,
-            Multiplier::Lut(lut) => Kernel::from_lut(lut),
+            Multiplier::Lut(lut) => Kernel::from_lut_with(lut, policy),
         }
     }
 
-    /// Compact + transpose a LUT into the kernel layout.
+    /// Compact + transpose a LUT into the kernel layout (process default
+    /// policy, like [`Kernel::prepare`]).
     pub fn from_lut(lut: &Lut) -> Self {
+        Self::from_lut_with(lut, DispatchPolicy::from_env())
+    }
+
+    /// [`Kernel::from_lut`] under an explicit policy: first try the
+    /// closed-form recognizers (exhaustively verified, so bit-exact by
+    /// construction), then fall back to the table walk with the policy's
+    /// SIMD tier.
+    pub fn from_lut_with(lut: &Lut, policy: DispatchPolicy) -> Self {
+        if policy.allow_closed {
+            if let Some(ck) = kernels::closed::recognize(lut, K_CHUNK) {
+                return Kernel::Closed(ck);
+            }
+        }
+        let simd = policy.resolve_simd();
         match lut.compact().data {
             CompactData::I16(v) => {
                 // Re-bias i16 entries into u16 so one Narrow loop serves
@@ -91,25 +135,43 @@ impl Kernel {
                 let unsigned: Vec<u16> =
                     v.iter().map(|&e| (e as i32 + 32768) as u16).collect();
                 Kernel::Narrow {
-                    t: transpose256(&unsigned),
+                    t: pad_narrow(transpose256(&unsigned)),
                     bias: -32768,
+                    simd,
                 }
             }
             CompactData::U16 { entries, bias } => Kernel::Narrow {
-                t: transpose256(&entries),
+                t: pad_narrow(transpose256(&entries)),
                 bias: bias as i64,
+                simd,
             },
-            CompactData::I32(v) => Kernel::Wide { t: transpose256(&v) },
+            CompactData::I32(v) => Kernel::Wide { t: transpose256(&v), simd },
         }
     }
 
-    /// Human-readable label (diagnostics).
-    pub fn label(&self) -> &'static str {
+    /// Human-readable label (diagnostics / parity suite), e.g. `exact`,
+    /// `lut16+avx2`, `lut32`, `closed:affine`.
+    pub fn label(&self) -> String {
         match self {
-            Kernel::Exact => "exact",
-            Kernel::Narrow { .. } => "lut16",
-            Kernel::Wide { .. } => "lut32",
+            Kernel::Exact => "exact".to_string(),
+            Kernel::Narrow { simd, .. } => format!("lut16{}", simd.suffix()),
+            Kernel::Wide { simd, .. } => format!("lut32{}", simd.suffix()),
+            Kernel::Closed(ck) => ck.form.label().to_string(),
         }
+    }
+
+    /// Long-form description including closed-form parameters and
+    /// specialization provenance.
+    pub fn describe(&self) -> String {
+        match self {
+            Kernel::Closed(ck) => format!("{} from '{}'", ck.form.describe(), ck.source),
+            other => other.label(),
+        }
+    }
+
+    /// True when prepare replaced the table with a closed-form kernel.
+    pub fn is_specialized(&self) -> bool {
+        matches!(self, Kernel::Closed(_))
     }
 }
 
@@ -139,16 +201,26 @@ pub fn gemm_raw(
     debug_assert_eq!(wrows.len(), m * k);
     debug_assert_eq!(raw.len(), m * n);
     match kernel {
-        Kernel::Exact => {
-            gemm_blocked_i32(xt, n, k, wrows, m, raw, 0, |y| y as i32, |y, xv| y * xv as i32)
-        }
-        Kernel::Narrow { t, bias } => gemm_blocked_i32(
+        Kernel::Exact => gemm_blocked_i32(
             xt,
             n,
             k,
             wrows,
             m,
             raw,
+            K_CHUNK,
+            0,
+            |y| y as i32,
+            |y, xv| y * xv as i32,
+        ),
+        Kernel::Narrow { t, bias, simd: SimdTier::Scalar } => gemm_blocked_i32(
+            xt,
+            n,
+            k,
+            wrows,
+            m,
+            raw,
+            K_CHUNK,
             k as i64 * *bias,
             // One 512-byte table row serves a whole strip; the fixed-size
             // array view makes the u8 index provably in-bounds, so the
@@ -160,17 +232,128 @@ pub fn gemm_raw(
             },
             |row, xv| row[xv as usize] as i32,
         ),
-        Kernel::Wide { t } => gemm_wide(t, xt, n, k, wrows, m, raw),
+        Kernel::Narrow { t, bias, simd: tier } => {
+            simd::gemm_narrow(*tier, t, xt, n, k, wrows, m, raw, k as i64 * *bias)
+        }
+        Kernel::Wide { t, simd: tier } => {
+            let _ = tier;
+            #[cfg(target_arch = "x86_64")]
+            {
+                if *tier == SimdTier::Avx2 && simd::gemm_wide_avx2_available() {
+                    // SAFETY: availability checked; the Wide table is
+                    // exactly 65536 entries by construction.
+                    unsafe { simd::gemm_wide_avx2(t, xt, n, k, wrows, m, raw) };
+                    return;
+                }
+            }
+            gemm_wide(t, xt, n, k, wrows, m, raw)
+        }
+        Kernel::Closed(ck) => gemm_closed(ck, xt, n, k, wrows, m, raw),
+    }
+}
+
+/// Closed-form GEMM: the same strip-blocked skeleton, with the table
+/// lookup replaced by branchless arithmetic. Every arm accumulates under
+/// the kernel's own proven chunk bound ([`ClosedKernel::chunk`]).
+fn gemm_closed(
+    ck: &ClosedKernel,
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+) {
+    match &ck.form {
+        ClosedForm::ExactProduct => gemm_blocked_i32(
+            xt,
+            n,
+            k,
+            wrows,
+            m,
+            raw,
+            ck.chunk,
+            0,
+            |y| y as i32,
+            |y, xv| y * xv as i32,
+        ),
+        ClosedForm::OperandTrunc { xmask, ymask } => {
+            let (xm, ym) = (*xmask, *ymask);
+            gemm_blocked_i32(
+                xt,
+                n,
+                k,
+                wrows,
+                m,
+                raw,
+                ck.chunk,
+                0,
+                move |y| (y & ym) as i32,
+                move |yv, xv| yv * (xv & xm) as i32,
+            )
+        }
+        ClosedForm::ProductTrunc { shift } => {
+            let sh = *shift;
+            gemm_blocked_i32(
+                xt,
+                n,
+                k,
+                wrows,
+                m,
+                raw,
+                ck.chunk,
+                0,
+                |y| y as i32,
+                move |yv, xv| ((yv * xv as i32) >> sh) << sh,
+            )
+        }
+        ClosedForm::AffineGrid { xshift, yshift, gy, planes } => {
+            let (xs, ys, gy) = (*xshift, *yshift, *gy);
+            let gx = planes.len() / gy;
+            // Per weight byte the plane index depends only on the x
+            // segment, so hoist the y-dependent parts into two gx-entry
+            // tables: term = consts[sx] + slopes[sx] * x. gx <= 16 by
+            // construction, so the row fits two cache lines.
+            gemm_blocked_i32(
+                xt,
+                n,
+                k,
+                wrows,
+                m,
+                raw,
+                ck.chunk,
+                0,
+                move |y| {
+                    let yi = (y as usize) >> ys;
+                    let mut consts = [0i32; 16];
+                    let mut slopes = [0i32; 16];
+                    for sx in 0..gx {
+                        let p = planes[sx * gy + yi];
+                        consts[sx] = p.a + p.c * y as i32;
+                        slopes[sx] = p.b;
+                    }
+                    (consts, slopes)
+                },
+                move |(consts, slopes): ([i32; 16], [i32; 16]), xv| {
+                    let sx = (xv as usize) >> xs;
+                    consts[sx] + slopes[sx] * xv as i32
+                },
+            )
+        }
     }
 }
 
 /// Strip-blocked skeleton shared by the kernels whose per-element terms
-/// fit i32 (exact products and 16-bit table entries): K_CHUNK terms are
-/// accumulated in i32 lanes, widened to i64 between chunks, and `kbias`
-/// (the Narrow table's `k * bias` decode term) is folded in on writeout.
+/// fit i32 (exact products, 16-bit table entries, closed-form
+/// arithmetic): `chunk` terms are accumulated in i32 lanes, widened to
+/// i64 between chunks, and `kbias` (the Narrow table's `k * bias` decode
+/// term) is folded in on writeout. The caller proves its own bound:
+/// `chunk * max|term| <= 2^30` (K_CHUNK for 16-bit terms, the
+/// recognizer-computed [`ClosedKernel::chunk`] for closed forms).
 /// `mk_row` turns a weight byte into whatever the inner loop needs — a
-/// table row, or the widened byte itself.
+/// table row, the widened byte itself, or hoisted plane coefficients.
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn gemm_blocked_i32<Row, MkRow, Term>(
     xt: &[u8],
     n: usize,
@@ -178,6 +361,7 @@ fn gemm_blocked_i32<Row, MkRow, Term>(
     wrows: &[u8],
     m: usize,
     raw: &mut [i64],
+    chunk: usize,
     kbias: i64,
     mk_row: MkRow,
     term: Term,
@@ -186,6 +370,7 @@ fn gemm_blocked_i32<Row, MkRow, Term>(
     MkRow: Fn(u8) -> Row,
     Term: Fn(Row, u8) -> i32,
 {
+    debug_assert!(chunk >= 1);
     let mut nb = 0;
     while nb < n {
         let nw = N_BLOCK.min(n - nb);
@@ -194,7 +379,7 @@ fn gemm_blocked_i32<Row, MkRow, Term>(
             let mut acc64 = [0i64; N_BLOCK];
             let mut kc = 0;
             while kc < k {
-                let kend = (kc + K_CHUNK).min(k);
+                let kend = (kc + chunk).min(k);
                 let mut acc = [0i32; N_BLOCK];
                 for ki in kc..kend {
                     let row = mk_row(wrow[ki]);
@@ -243,11 +428,29 @@ fn gemm_wide(t: &[i32], xt: &[u8], n: usize, k: usize, wrows: &[u8], m: usize, r
 /// indexes the transposed table pairwise with four parallel accumulator
 /// chains, like `Multiplier::dot` but over 16-bit entries).
 pub fn dot_raw(kernel: &Kernel, xs: &[u8], ws: &[u8]) -> i64 {
-    debug_assert_eq!(xs.len(), ws.len());
+    // A real check, not a debug_assert: in release a longer `ws` would
+    // otherwise silently pair garbage table rows with the zipped prefix
+    // instead of failing loudly (found in the PR-8 hot-path sweep).
+    assert_eq!(
+        xs.len(),
+        ws.len(),
+        "dot_raw: operand length mismatch ({} activations vs {} weights)",
+        xs.len(),
+        ws.len()
+    );
     match kernel {
         Kernel::Exact => xs.iter().zip(ws).map(|(&x, &y)| x as i64 * y as i64).sum(),
-        Kernel::Narrow { t, bias } => dot4(t, xs, ws) + xs.len() as i64 * bias,
-        Kernel::Wide { t } => dot4(t, xs, ws),
+        Kernel::Narrow { t, bias, simd: tier } => {
+            simd::dot_narrow(*tier, t, xs, ws) + xs.len() as i64 * bias
+        }
+        Kernel::Wide { t, .. } => dot4(t, xs, ws),
+        // Closed forms evaluate per element; the match inside `eval` sits
+        // on a loop-constant discriminant, so it predicts perfectly.
+        Kernel::Closed(ck) => xs
+            .iter()
+            .zip(ws)
+            .map(|(&x, &y)| ck.eval(x, y) as i64)
+            .sum(),
     }
 }
 
@@ -563,10 +766,16 @@ fn prepare_nodes(graph: &Graph) -> (Vec<PreparedNode>, BTreeMap<String, usize>) 
 }
 
 impl PreparedGraph {
-    /// Prepare a graph for a single multiplier (broadcast to every layer).
+    /// Prepare a graph for a single multiplier (broadcast to every layer)
+    /// under the process default [`DispatchPolicy`].
     pub fn new(graph: &Graph, mul: &Multiplier) -> Self {
+        Self::new_with(graph, mul, DispatchPolicy::from_env())
+    }
+
+    /// [`PreparedGraph::new`] under an explicit dispatch policy.
+    pub fn new_with(graph: &Graph, mul: &Multiplier, policy: DispatchPolicy) -> Self {
         let (nodes, by_name) = prepare_nodes(graph);
-        let kernel = std::sync::Arc::new(Kernel::prepare(mul));
+        let kernel = std::sync::Arc::new(Kernel::prepare_with(mul, policy));
         let kernels = nodes.iter().map(|_| kernel.clone()).collect();
         Self { nodes, by_name, kernels }
     }
@@ -576,6 +785,15 @@ impl PreparedGraph {
     /// broadcast; a length mismatch is an error). Kernels are deduped by
     /// multiplier label so same-label layers share one compacted table.
     pub fn new_assigned(graph: &Graph, muls: &[Multiplier]) -> Result<Self> {
+        Self::new_assigned_with(graph, muls, DispatchPolicy::from_env())
+    }
+
+    /// [`PreparedGraph::new_assigned`] under an explicit dispatch policy.
+    pub fn new_assigned_with(
+        graph: &Graph,
+        muls: &[Multiplier],
+        policy: DispatchPolicy,
+    ) -> Result<Self> {
         let per_node = graph.per_node_muls(muls)?;
         let (nodes, by_name) = prepare_nodes(graph);
         let passthrough = std::sync::Arc::new(Kernel::Exact);
@@ -586,11 +804,21 @@ impl PreparedGraph {
                 None => passthrough.clone(),
                 Some(mul) => by_label
                     .entry(mul.label())
-                    .or_insert_with(|| std::sync::Arc::new(Kernel::prepare(mul)))
+                    .or_insert_with(|| std::sync::Arc::new(Kernel::prepare_with(mul, policy)))
                     .clone(),
             })
             .collect();
         Ok(Self { nodes, by_name, kernels })
+    }
+
+    /// (node name, kernel label) pairs for every prepared node — the
+    /// dispatch-diagnostics surface the `kernels` subcommand prints.
+    pub fn kernel_labels(&self) -> Vec<(String, String)> {
+        self.nodes
+            .iter()
+            .zip(&self.kernels)
+            .map(|(n, k)| (n.name.clone(), k.label()))
+            .collect()
     }
 
     /// Node id by name.
@@ -708,11 +936,26 @@ impl Graph {
         PreparedGraph::new(self, mul)
     }
 
+    /// [`Graph::prepare`] under an explicit [`DispatchPolicy`] (the
+    /// parity suite pins tiers through this instead of env vars).
+    pub fn prepare_with(&self, mul: &Multiplier, policy: DispatchPolicy) -> PreparedGraph {
+        PreparedGraph::new_with(self, mul, policy)
+    }
+
     /// [`Graph::prepare`] for a per-layer multiplier assignment (`muls`
     /// parallel to [`Graph::assignable_layers`]; a single entry is
     /// broadcast).
     pub fn prepare_assigned(&self, muls: &[Multiplier]) -> Result<PreparedGraph> {
         PreparedGraph::new_assigned(self, muls)
+    }
+
+    /// [`Graph::prepare_assigned`] under an explicit [`DispatchPolicy`].
+    pub fn prepare_assigned_with(
+        &self,
+        muls: &[Multiplier],
+        policy: DispatchPolicy,
+    ) -> Result<PreparedGraph> {
+        PreparedGraph::new_assigned_with(self, muls, policy)
     }
 
     /// Batched forward: prepare once, then fan `feeds` across `workers`
@@ -877,9 +1120,12 @@ mod tests {
         // Narrow loop can never silently wrap a signed entry.
         let lut = Lut::from_fn("i16-span", |x, y| ((x * 256 + y) as i64) - 32768);
         assert!(matches!(lut.compact().data, CompactData::I16(_)));
-        let kernel = Kernel::from_lut(&lut);
+        // Pin the LUT path: this ramp table is a single affine plane, so
+        // full dispatch would (correctly) specialize it closed-form — but
+        // the property under audit is the Narrow re-bias arithmetic.
+        let kernel = Kernel::from_lut_with(&lut, DispatchPolicy::scalar());
         let (t, bias) = match &kernel {
-            Kernel::Narrow { t, bias } => (t, *bias),
+            Kernel::Narrow { t, bias, .. } => (t, *bias),
             other => panic!("i16-span table must compact Narrow, got {}", other.label()),
         };
         assert_eq!(bias, -32768);
@@ -963,21 +1209,40 @@ mod tests {
 
     #[test]
     fn strip_blocking_covers_ragged_sizes() {
-        // n deliberately not a multiple of N_BLOCK, k not of 4.
-        let kernel = Kernel::from_lut(&Lut::exact());
+        // n deliberately not a multiple of N_BLOCK, k not of 4 — and the
+        // same exact table driven through every dispatch policy: scalar
+        // LUT walk, SIMD LUT walk, and full (which specializes this
+        // table to closed:exact). All three must reproduce the product.
         let (n, k, m) = (N_BLOCK + 37, 13usize, 3usize);
         let mut rng = Rng::new(13);
         let xt: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
         let w: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
-        let mut raw = vec![0i64; m * n];
-        gemm_raw(&kernel, &xt, n, k, &w, m, &mut raw);
-        for mi in 0..m {
-            for p in 0..n {
-                let expect: i64 = (0..k)
-                    .map(|ki| xt[ki * n + p] as i64 * w[mi * k + ki] as i64)
-                    .sum();
-                assert_eq!(raw[mi * n + p], expect, "({mi},{p})");
+        for policy in [
+            DispatchPolicy::scalar(),
+            DispatchPolicy::lut_simd(),
+            DispatchPolicy::full(),
+        ] {
+            let kernel = Kernel::from_lut_with(&Lut::exact(), policy);
+            let mut raw = vec![0i64; m * n];
+            gemm_raw(&kernel, &xt, n, k, &w, m, &mut raw);
+            for mi in 0..m {
+                for p in 0..n {
+                    let expect: i64 = (0..k)
+                        .map(|ki| xt[ki * n + p] as i64 * w[mi * k + ki] as i64)
+                        .sum();
+                    assert_eq!(raw[mi * n + p], expect, "{} ({mi},{p})", kernel.label());
+                }
             }
         }
+        assert!(Kernel::from_lut_with(&Lut::exact(), DispatchPolicy::full()).is_specialized());
+    }
+
+    #[test]
+    #[should_panic(expected = "operand length mismatch")]
+    fn dot_raw_rejects_mismatched_lengths_in_release_too() {
+        // Regression (PR-8 satellite): this was a debug_assert, so a
+        // release build silently truncated to the zipped prefix.
+        let kernel = Kernel::from_lut_with(&Lut::exact(), DispatchPolicy::scalar());
+        dot_raw(&kernel, &[1, 2, 3], &[1, 2]);
     }
 }

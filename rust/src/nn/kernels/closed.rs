@@ -1,0 +1,411 @@
+//! Closed-form kernel recognition — the prepare-time "kernel compiler".
+//!
+//! [`recognize`] pattern-matches a 256x256 multiplier table against the
+//! closed-form families the approximate-multiplier literature keeps
+//! rediscovering (Zervakis et al. and Spantidi et al. both exploit the
+//! same observation: most zoo designs reduce to a handful of bit tricks):
+//!
+//! * **ExactProduct** — the table *is* `x*y` (the Wallace baseline and
+//!   any exact LUT loaded from disk);
+//! * **OperandTrunc** — operand-width reduction: low operand bits are
+//!   dropped before an exact multiply, `(x & mx) * (y & my)`;
+//! * **ProductTrunc** — low output columns dropped after an exact
+//!   multiply, `((x*y) >> k) << k`;
+//! * **AffineGrid** — a per-segment affine plane `a_s + b_s·x + c_s·y`
+//!   over a power-of-two segment grid (the OU linear-form family, both
+//!   L.1's 2x2 grid and L.3's 4x8 grid).
+//!
+//! A recognizer *proposes* parameters from a few structural probes, then
+//! **verifies the proposal against all 65 536 table entries**; only a
+//! table the closed form reproduces bit-for-bit specializes. The HEAM /
+//! KMap / CR / AC gate-level designs match no family and stay on the
+//! general LUT path — exactly the fallback contract the bit-exactness
+//! suite (`rust/tests/gemm_parity.rs`) pins.
+//!
+//! Recognition cost is a handful of linear passes over the 64 K-entry
+//! table — microseconds at prepare time, zero on the hot path.
+
+use crate::mult::Lut;
+
+/// One affine plane of an [`ClosedForm::AffineGrid`] kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Plane {
+    pub a: i32,
+    pub b: i32,
+    pub c: i32,
+}
+
+/// A verified closed-form equivalent of a multiplier table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClosedForm {
+    /// `f(x, y) = x * y`.
+    ExactProduct,
+    /// `f(x, y) = (x & xmask) * (y & ymask)` — operand-width reduction.
+    OperandTrunc { xmask: u8, ymask: u8 },
+    /// `f(x, y) = ((x * y) >> shift) << shift` — output-column drop.
+    ProductTrunc { shift: u32 },
+    /// `f(x, y) = a_s + b_s*x + c_s*y` with
+    /// `s = (x >> xshift) * gy + (y >> yshift)` — the OU linear-form
+    /// family. `planes.len() == gx * gy`, row-major over (x-seg, y-seg).
+    AffineGrid {
+        xshift: u32,
+        yshift: u32,
+        gy: usize,
+        planes: Vec<Plane>,
+    },
+}
+
+/// A closed-form kernel ready for the GEMM dispatch: the verified form
+/// plus the accumulation-chunk bound its value range admits.
+#[derive(Clone, Debug)]
+pub struct ClosedKernel {
+    pub form: ClosedForm,
+    /// Provenance: the table this kernel was specialized from.
+    pub source: String,
+    /// Maximum i32-lane accumulation run that provably cannot overflow:
+    /// `chunk * max|f|  <=  2^30`. The Narrow LUT path hardcodes the
+    /// equivalent bound for 16-bit entries; closed forms (AffineGrid can
+    /// exceed 2^16 in magnitude) carry their own.
+    pub chunk: usize,
+}
+
+impl ClosedForm {
+    /// Evaluate the closed form on one operand pair — the scalar
+    /// primitive behind verification and the dense `dot_raw` path.
+    #[inline(always)]
+    pub fn eval(&self, x: u8, y: u8) -> i32 {
+        match self {
+            ClosedForm::ExactProduct => x as i32 * y as i32,
+            ClosedForm::OperandTrunc { xmask, ymask } => {
+                ((x & xmask) as i32) * ((y & ymask) as i32)
+            }
+            ClosedForm::ProductTrunc { shift } => {
+                ((x as i32 * y as i32) >> shift) << shift
+            }
+            ClosedForm::AffineGrid { xshift, yshift, gy, planes } => {
+                // usize shifts: a 1-wide grid has xshift == 8, which would
+                // overflow a u8 shift.
+                let s = ((x as usize) >> xshift) * gy + ((y as usize) >> yshift);
+                let p = planes[s];
+                // No-overflow bound: |coef| <= 2^20 (enforced at
+                // derivation), so |a| + |b|*255 + |c|*255 < 2^29.
+                p.a + p.b * x as i32 + p.c * y as i32
+            }
+        }
+    }
+
+    /// Stable label for dispatch diagnostics and the parity suite.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClosedForm::ExactProduct => "closed:exact",
+            ClosedForm::OperandTrunc { .. } => "closed:operand-trunc",
+            ClosedForm::ProductTrunc { .. } => "closed:product-trunc",
+            ClosedForm::AffineGrid { .. } => "closed:affine",
+        }
+    }
+
+    /// Human-readable parameters (diagnostics only).
+    pub fn describe(&self) -> String {
+        match self {
+            ClosedForm::ExactProduct => "closed:exact".to_string(),
+            ClosedForm::OperandTrunc { xmask, ymask } => {
+                format!("closed:operand-trunc(x&{xmask:#04x}, y&{ymask:#04x})")
+            }
+            ClosedForm::ProductTrunc { shift } => {
+                format!("closed:product-trunc(>>{shift})")
+            }
+            ClosedForm::AffineGrid { gy, planes, .. } => {
+                let gx = planes.len() / gy;
+                format!("closed:affine({gx}x{gy} planes)")
+            }
+        }
+    }
+}
+
+impl ClosedKernel {
+    #[inline(always)]
+    pub fn eval(&self, x: u8, y: u8) -> i32 {
+        self.form.eval(x, y)
+    }
+}
+
+/// True iff `form` reproduces every one of the table's 65 536 entries.
+fn verify(lut: &Lut, form: &ClosedForm) -> bool {
+    for x in 0..256usize {
+        for y in 0..256usize {
+            if lut.values[(x << 8) | y] != form.eval(x as u8, y as u8) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// The i32-lane accumulation chunk a value bound admits (see
+/// [`ClosedKernel::chunk`]). Clamped to the Narrow path's chunk so a
+/// closed kernel never accumulates *longer* runs than the table it
+/// replaced was proven safe for.
+fn chunk_for(max_abs: i64, cap: usize) -> usize {
+    let bound = (1i64 << 30) / max_abs.max(1);
+    (bound.max(1) as usize).min(cap)
+}
+
+/// Operand masks of the "keep the top w bits" family, widest first
+/// (explicit table: `0xFF << 8` would overflow the shift).
+const HI_MASKS: [u8; 9] = [0xFF, 0xFE, 0xFC, 0xF8, 0xF0, 0xE0, 0xC0, 0x80, 0x00];
+
+fn recognize_exact(lut: &Lut) -> Option<ClosedForm> {
+    let form = ClosedForm::ExactProduct;
+    verify(lut, &form).then_some(form)
+}
+
+fn recognize_operand_trunc(lut: &Lut) -> Option<ClosedForm> {
+    for &xmask in &HI_MASKS {
+        for &ymask in &HI_MASKS {
+            if xmask == 0xFF && ymask == 0xFF {
+                continue; // that is ExactProduct, tried before this
+            }
+            // Cheap structural pre-probe before the exhaustive pass: the
+            // masked form is constant across any operand pair that only
+            // differs in dropped bits, so probe two corners first.
+            let probe = ClosedForm::OperandTrunc { xmask, ymask };
+            if lut.get(255, 255) != probe.eval(255, 255)
+                || lut.get(3, 3) != probe.eval(3, 3)
+            {
+                continue;
+            }
+            if verify(lut, &probe) {
+                return Some(probe);
+            }
+        }
+    }
+    None
+}
+
+fn recognize_product_trunc(lut: &Lut) -> Option<ClosedForm> {
+    for shift in 1..16u32 {
+        let probe = ClosedForm::ProductTrunc { shift };
+        if lut.get(255, 255) != probe.eval(255, 255)
+            || lut.get(1, 1) != probe.eval(1, 1)
+        {
+            continue;
+        }
+        if verify(lut, &probe) {
+            return Some(probe);
+        }
+    }
+    None
+}
+
+/// Coefficient magnitude bound for derived planes. Any physically
+/// plausible linear-form multiplier has |b|, |c| <= 255 and |a| within a
+/// few thousand; 2^20 leaves three orders of headroom while guaranteeing
+/// the i32 evaluation `a + b*x + c*y` cannot overflow any intermediate
+/// (|a| + |b|*255 + |c|*255 < 2^29). Adversarial tables whose probe
+/// points imply larger coefficients simply stay on the LUT path.
+const PLANE_COEF_BOUND: i64 = 1 << 20;
+
+/// Derive the unique affine plane through a segment's three probe points
+/// (arithmetic in i64; rejected unless every coefficient is comfortably
+/// within [`PLANE_COEF_BOUND`]).
+fn derive_plane(lut: &Lut, x0: usize, y0: usize) -> Option<Plane> {
+    let at = |x: usize, y: usize| lut.values[(x << 8) | y] as i64;
+    let v00 = at(x0, y0);
+    let b = at(x0 + 1, y0) - v00;
+    let c = at(x0, y0 + 1) - v00;
+    let a = v00 - b * x0 as i64 - c * y0 as i64;
+    let fits = |v: i64| (v.abs() <= PLANE_COEF_BOUND).then_some(v as i32);
+    Some(Plane { a: fits(a)?, b: fits(b)?, c: fits(c)? })
+}
+
+fn recognize_affine_grid(lut: &Lut) -> Option<ClosedForm> {
+    // Power-of-two grids up to 16x16, smallest plane count first so the
+    // minimal (cheapest) grid wins. Segment width >= 16 > 1 guarantees
+    // the derivation probes (x0+1, y0+1) stay inside the segment.
+    let mut grids: Vec<(usize, usize)> = Vec::new();
+    for gx in [1usize, 2, 4, 8, 16] {
+        for gy in [1usize, 2, 4, 8, 16] {
+            grids.push((gx, gy));
+        }
+    }
+    grids.sort_by_key(|&(gx, gy)| (gx * gy, gx));
+    for (gx, gy) in grids {
+        let (wx, wy) = (256 / gx, 256 / gy);
+        let mut planes = Vec::with_capacity(gx * gy);
+        let mut ok = true;
+        'derive: for sx in 0..gx {
+            for sy in 0..gy {
+                match derive_plane(lut, sx * wx, sy * wy) {
+                    Some(p) => planes.push(p),
+                    None => {
+                        ok = false;
+                        break 'derive;
+                    }
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let probe = ClosedForm::AffineGrid {
+            xshift: wx.trailing_zeros(),
+            yshift: wy.trailing_zeros(),
+            gy,
+            planes,
+        };
+        if verify(lut, &probe) {
+            return Some(probe);
+        }
+    }
+    None
+}
+
+/// Try every recognizer against a table; `cap` is the caller's default
+/// accumulation chunk (the Narrow path's `K_CHUNK`). Returns a kernel
+/// only if one family reproduces the table exactly.
+pub fn recognize(lut: &Lut, cap: usize) -> Option<ClosedKernel> {
+    let form = recognize_exact(lut)
+        .or_else(|| recognize_operand_trunc(lut))
+        .or_else(|| recognize_product_trunc(lut))
+        .or_else(|| recognize_affine_grid(lut))?;
+    let max_abs = lut.values.iter().map(|&v| (v as i64).abs()).max().unwrap_or(0);
+    Some(ClosedKernel {
+        form,
+        source: lut.name.clone(),
+        chunk: chunk_for(max_abs, cap),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::MultKind;
+
+    const CAP: usize = 16384;
+
+    fn assert_matches_table(lut: &Lut, k: &ClosedKernel) {
+        for x in 0..256usize {
+            for y in 0..256usize {
+                assert_eq!(
+                    k.eval(x as u8, y as u8),
+                    lut.get(x as u8, y as u8),
+                    "{} ({x},{y})",
+                    k.form.describe()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_table_specializes_to_exact_product() {
+        let lut = Lut::exact();
+        let k = recognize(&lut, CAP).expect("exact table must specialize");
+        assert_eq!(k.form, ClosedForm::ExactProduct);
+        assert_eq!(k.chunk, CAP, "255*255 < 2^16 keeps the full chunk");
+        assert_matches_table(&lut, &k);
+    }
+
+    #[test]
+    fn wallace_lut_specializes_to_exact_product() {
+        let lut = MultKind::Wallace.lut();
+        let k = recognize(&lut, CAP).expect("wallace is exact");
+        assert_eq!(k.form, ClosedForm::ExactProduct);
+    }
+
+    #[test]
+    fn operand_truncation_is_recognized_with_its_masks() {
+        let lut = Lut::from_fn("drum-ish", |x, y| {
+            ((x & 0xF8) as i64) * ((y & 0xE0) as i64)
+        });
+        let k = recognize(&lut, CAP).expect("operand truncation must specialize");
+        assert_eq!(
+            k.form,
+            ClosedForm::OperandTrunc { xmask: 0xF8, ymask: 0xE0 }
+        );
+        assert_matches_table(&lut, &k);
+    }
+
+    #[test]
+    fn product_truncation_is_recognized_with_its_shift() {
+        let lut = Lut::from_fn("lowcol-drop", |x, y| {
+            (((x * y) >> 4) << 4) as i64
+        });
+        let k = recognize(&lut, CAP).expect("product truncation must specialize");
+        assert_eq!(k.form, ClosedForm::ProductTrunc { shift: 4 });
+        assert_matches_table(&lut, &k);
+    }
+
+    #[test]
+    fn ou_linear_forms_are_recognized_as_affine_grids() {
+        for (level, gx, gy) in [(1usize, 2usize, 2usize), (3, 4, 8)] {
+            let lut = Lut::from_fn(&format!("ou-l{level}"), |x, y| {
+                crate::mult::ou::model(8, level, x as i64, y as i64)
+            });
+            let k = recognize(&lut, CAP)
+                .unwrap_or_else(|| panic!("OU L.{level} must specialize"));
+            match &k.form {
+                ClosedForm::AffineGrid { gy: g, planes, .. } => {
+                    assert_eq!(*g, gy, "L.{level} y-grid");
+                    assert_eq!(planes.len(), gx * gy, "L.{level} plane count");
+                }
+                other => panic!("OU L.{level} matched {}", other.describe()),
+            }
+            assert_matches_table(&lut, &k);
+            // OU magnitudes exceed 2^16, so the chunk must have shrunk
+            // below the Narrow default to keep i32 lanes overflow-free.
+            let max_abs = lut
+                .values
+                .iter()
+                .map(|&v| (v as i64).abs())
+                .max()
+                .unwrap();
+            if max_abs > (1 << 16) {
+                assert!(k.chunk < CAP, "L.{level} chunk must shrink");
+            }
+            assert!(k.chunk as i64 * max_abs <= 1 << 30, "overflow bound");
+        }
+    }
+
+    #[test]
+    fn netlist_ou_lut_specializes_identically_to_the_model() {
+        // The gate-level OU netlist evaluates to the same table as the
+        // behavioral model, so the recognizer must specialize the real
+        // zoo LUT too, not just the synthetic one.
+        let lut = MultKind::OuL1.lut();
+        let k = recognize(&lut, CAP).expect("zoo OU L.1 must specialize");
+        assert!(matches!(k.form, ClosedForm::AffineGrid { .. }));
+        assert_matches_table(&lut, &k);
+    }
+
+    #[test]
+    fn gate_level_designs_do_not_falsely_specialize() {
+        // HEAM / KMap / CR / AC are genuine gate-level approximations: no
+        // closed family reproduces them, so they must stay on the LUT
+        // path (a false positive here would silently change inference).
+        for kind in [MultKind::Heam, MultKind::KMap, MultKind::CrC6, MultKind::Ac] {
+            assert!(
+                recognize(&kind.lut(), CAP).is_none(),
+                "{kind:?} must NOT specialize"
+            );
+        }
+    }
+
+    #[test]
+    fn off_by_one_entry_defeats_every_recognizer() {
+        // Exhaustive verification is the safety net: a single corrupted
+        // entry in an otherwise-exact table must kill specialization.
+        let mut lut = Lut::exact();
+        lut.values[(200 << 8) | 123] += 1;
+        assert!(recognize(&lut, CAP).is_none());
+    }
+
+    #[test]
+    fn chunk_bound_arithmetic() {
+        assert_eq!(chunk_for(0, CAP), CAP);
+        assert_eq!(chunk_for(1, CAP), CAP);
+        assert_eq!(chunk_for(65535, CAP), CAP); // 2^30/65535 > 16384
+        assert_eq!(chunk_for(1 << 17, CAP), 8192);
+        assert_eq!(chunk_for(1 << 30, CAP), 1);
+        assert_eq!(chunk_for(i64::MAX, CAP), 1, "never zero");
+    }
+}

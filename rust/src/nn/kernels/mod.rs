@@ -1,0 +1,182 @@
+//! Prepare-time kernel specialization + runtime SIMD dispatch for the
+//! LUT-GEMM inner loop (ROADMAP open item 2).
+//!
+//! Two compounding attacks on the scalar 16-bit table walk in
+//! [`super::gemm`]:
+//!
+//! 1. **Closed-form specialization** ([`closed`]). Many zoo multipliers
+//!    are not "arbitrary" tables: the Wallace tree *is* `x * y`, the OU
+//!    linear-form family *is* a per-segment affine plane, and common
+//!    truncation designs *are* masked/shifted exact products. At
+//!    [`super::gemm::Kernel::prepare`] time the recognizers in [`closed`]
+//!    pattern-match the 256x256 table against those families and — only
+//!    after an **exhaustive 65 536-pair verification** — emit a branchless
+//!    arithmetic kernel instead of materializing a table at all. A kernel
+//!    that is pure arithmetic auto-vectorizes (no gather), never misses
+//!    cache, and frees 128 KiB of L2 per multiplier. Tables that match no
+//!    family (HEAM itself, KMap, CR, AC) keep the general LUT path, so
+//!    specialization is bit-exact *by construction*: either the closed
+//!    form reproduced every entry, or it is not used.
+//!
+//! 2. **Runtime-dispatched SIMD for the general LUT path** ([`simd`]).
+//!    The compact transposed table's inner loop is a gather: AVX2 hosts
+//!    (detected once per prepare via `is_x86_feature_detected!`) use
+//!    `vpgatherdd` to pull 8 table entries per step across a patch strip;
+//!    aarch64 hosts use a NEON widening-accumulate over an 8-entry gather
+//!    buffer (AArch64 NEON has no gather instruction, so the loads stay
+//!    scalar and the adds vectorize); every other host gets a portable
+//!    8-wide unrolled tier that batches the gathers ahead of the adds.
+//!    The scalar loop in `gemm.rs` is kept verbatim as the reference
+//!    fallback — it is what the bit-exactness property suite compares
+//!    every other tier against.
+//!
+//! **Dispatch decision table** (also in EXPERIMENTS.md §Kernel
+//! specialization & SIMD dispatch):
+//!
+//! | Multiplier shape                  | Kernel               | Inner loop |
+//! |-----------------------------------|----------------------|------------|
+//! | `Multiplier::Exact`               | `Exact`              | auto-vec   |
+//! | table ≡ `x*y`                     | `Closed(ExactProduct)` | auto-vec |
+//! | table ≡ `(x&mx)*(y&my)`           | `Closed(OperandTrunc)` | auto-vec |
+//! | table ≡ `(x*y >> k) << k`         | `Closed(ProductTrunc)` | auto-vec |
+//! | table ≡ per-segment `a + bx + cy` | `Closed(AffineGrid)` | auto-vec   |
+//! | other, range fits 16 bit          | `Narrow`             | AVX2 gather / NEON / unroll8 / scalar |
+//! | other, range needs 32 bit         | `Wide`               | AVX2 gather / scalar |
+//!
+//! Forcing a tier (debugging / benchmarking): set `HEAM_KERNEL_FORCE` to
+//! `scalar` (plain table walk, no SIMD, no specialization — the reference
+//! path), `lut` (table walk with SIMD, specialization off), or leave it
+//! unset for full dispatch. Tests never rely on the env var — they pass a
+//! [`DispatchPolicy`] explicitly so parallel test threads cannot race on
+//! process environment.
+
+pub mod closed;
+pub mod simd;
+
+pub use closed::{ClosedForm, ClosedKernel};
+
+/// The SIMD tier a prepared LUT kernel walks its table with. Selected
+/// once at `Kernel::prepare` time, never re-probed on the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// The reference scalar loop (bit-exactness anchor, always available).
+    Scalar,
+    /// Portable 8-wide unrolled gather-then-add (no intrinsics; shaped so
+    /// the autovectorizer can batch the table loads ahead of the adds).
+    Unroll8,
+    /// AVX2 `vpgatherdd` strip kernel (x86_64, runtime-detected).
+    Avx2,
+    /// NEON widening accumulate over an 8-entry gather buffer (aarch64;
+    /// AArch64 guarantees NEON, so no runtime probe is needed).
+    Neon,
+}
+
+impl SimdTier {
+    /// Label suffix for kernel diagnostics (`lut16+avx2` etc.).
+    pub fn suffix(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "",
+            SimdTier::Unroll8 => "+unroll8",
+            SimdTier::Avx2 => "+avx2",
+            SimdTier::Neon => "+neon",
+        }
+    }
+}
+
+/// Detect the best SIMD tier this host supports. `is_x86_feature_detected!`
+/// caches the CPUID probe internally, so calling this per prepare is cheap.
+pub fn detect_simd() -> SimdTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdTier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdTier::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdTier::Unroll8
+}
+
+/// How `Kernel::prepare` is allowed to specialize. The default
+/// ([`DispatchPolicy::full`]) uses everything the host and the table
+/// admit; the other constructors pin tiers for tests, benchmarks, and
+/// debugging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DispatchPolicy {
+    /// Permit closed-form specialization (tier b).
+    pub allow_closed: bool,
+    /// Pin the LUT walk's SIMD tier; `None` = auto-detect.
+    pub simd: Option<SimdTier>,
+}
+
+impl DispatchPolicy {
+    /// Full dispatch: closed forms allowed, SIMD auto-detected.
+    pub fn full() -> Self {
+        Self { allow_closed: true, simd: None }
+    }
+
+    /// The reference path: plain scalar table walk, nothing specialized.
+    /// Every other tier is property-tested byte-identical against this.
+    pub fn scalar() -> Self {
+        Self { allow_closed: false, simd: Some(SimdTier::Scalar) }
+    }
+
+    /// General LUT path with SIMD, specialization disabled (isolates the
+    /// SIMD tier's contribution in benchmarks).
+    pub fn lut_simd() -> Self {
+        Self { allow_closed: false, simd: None }
+    }
+
+    /// Resolve the policy for this process: full dispatch unless the
+    /// `HEAM_KERNEL_FORCE` env var pins a tier (`scalar` | `lut`).
+    /// Unknown values fall back to full dispatch rather than erroring —
+    /// a typo'd debug override must not change serving behaviour, and
+    /// every tier is bit-exact anyway.
+    pub fn from_env() -> Self {
+        match std::env::var("HEAM_KERNEL_FORCE").as_deref() {
+            Ok("scalar") => Self::scalar(),
+            Ok("lut") => Self::lut_simd(),
+            _ => Self::full(),
+        }
+    }
+
+    /// The SIMD tier this policy resolves to on this host.
+    pub fn resolve_simd(&self) -> SimdTier {
+        self.simd.unwrap_or_else(detect_simd)
+    }
+}
+
+impl Default for DispatchPolicy {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_returns_a_dispatchable_tier() {
+        // Whatever the host, detection must land on a tier the dispatch
+        // match implements (never Scalar — that is a forced policy only).
+        let t = detect_simd();
+        assert_ne!(t, SimdTier::Scalar);
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_ne!(t, SimdTier::Avx2);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_ne!(t, SimdTier::Neon);
+    }
+
+    #[test]
+    fn policies_pin_what_they_claim() {
+        assert_eq!(DispatchPolicy::scalar().resolve_simd(), SimdTier::Scalar);
+        assert!(!DispatchPolicy::scalar().allow_closed);
+        assert!(DispatchPolicy::full().allow_closed);
+        assert!(!DispatchPolicy::lut_simd().allow_closed);
+        assert_eq!(DispatchPolicy::default(), DispatchPolicy::full());
+    }
+}

@@ -1,0 +1,573 @@
+//! SIMD tiers for the general LUT walk (see the module docs in
+//! [`super`]). Every function here computes *exactly* the same integer
+//! sums as the scalar reference loop in [`crate::nn::gemm`]: table reads
+//! are exact, i32 chunk accumulation uses the same `K_CHUNK` bound, and
+//! the widening points are identical — integer addition is associative,
+//! so lane order cannot change a result. The property suite
+//! (`rust/tests/gemm_parity.rs`) pins each tier byte-identical to the
+//! scalar path on every zoo multiplier and ragged shape.
+//!
+//! Safety layout contract for the AVX2 gathers: a `vpgatherdd` on a
+//! 16-bit table reads 32 bits per lane, i.e. 2 bytes past the last
+//! entry's own storage when the index is the final table slot. The
+//! Narrow kernel therefore pads its transposed table with one extra u16
+//! ([`NARROW_PAD`]), making every gather provably in-bounds of the same
+//! allocation; the high garbage bytes are masked off with `& 0xFFFF`.
+//! The i32 Wide table needs no pad (a 4-byte gather at the last 4-byte
+//! entry ends exactly at the allocation boundary).
+
+use super::SimdTier;
+use crate::nn::gemm::{K_CHUNK, N_BLOCK};
+
+/// Extra u16 entries appended to the transposed Narrow table so 32-bit
+/// gathers at the final index stay in-bounds (see module docs).
+pub const NARROW_PAD: usize = 1;
+
+/// Entries a padded Narrow table holds.
+pub const NARROW_LEN: usize = 65536 + NARROW_PAD;
+
+/// Strip-blocked Narrow GEMM through the tier's inner loop. `kbias` is
+/// the Narrow decode term `k * bias`, folded in on writeout exactly like
+/// the scalar path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_narrow(
+    tier: SimdTier,
+    t: &[u16],
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+    kbias: i64,
+) {
+    match tier {
+        SimdTier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    // SAFETY: AVX2 presence checked on the line above;
+                    // the padded-table contract is asserted inside.
+                    unsafe { gemm_narrow_avx2(t, xt, n, k, wrows, m, raw, kbias) };
+                    return;
+                }
+            }
+            gemm_narrow_unroll8(t, xt, n, k, wrows, m, raw, kbias);
+        }
+        SimdTier::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is architecturally guaranteed on AArch64.
+                unsafe { gemm_narrow_neon(t, xt, n, k, wrows, m, raw, kbias) };
+                return;
+            }
+            #[allow(unreachable_code)]
+            gemm_narrow_unroll8(t, xt, n, k, wrows, m, raw, kbias);
+        }
+        SimdTier::Scalar | SimdTier::Unroll8 => {
+            gemm_narrow_unroll8(t, xt, n, k, wrows, m, raw, kbias);
+        }
+    }
+}
+
+/// Raw Narrow dot (sum of table entries, no bias term) through the
+/// tier. The caller adds `n * bias`, mirroring the scalar `dot_raw`.
+pub fn dot_narrow(tier: SimdTier, t: &[u16], xs: &[u8], ws: &[u8]) -> i64 {
+    if tier == SimdTier::Avx2 {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                // SAFETY: feature checked; padded table asserted inside.
+                return unsafe { dot_narrow_avx2(t, xs, ws) };
+            }
+        }
+    }
+    // NEON has no gather; the scalar four-chain walk in gemm.rs already
+    // saturates the load ports for the dense/GEMV shape, so the other
+    // tiers share it.
+    dot_narrow_scalar4(t, xs, ws)
+}
+
+/// Wide (i32) GEMM through the tier. Only AVX2 has a profitable gather
+/// here; every other tier uses the scalar path in `gemm.rs` (the caller
+/// dispatches, this function is the AVX2 leg).
+#[cfg(target_arch = "x86_64")]
+pub fn gemm_wide_avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn gemm_wide_avx2_available() -> bool {
+    false
+}
+
+/// Four-chain pairwise walk over the padded u16 table (the non-AVX2 dot
+/// tier; identical arithmetic to `gemm.rs::dot4` over u16 entries).
+fn dot_narrow_scalar4(t: &[u16], xs: &[u8], ws: &[u8]) -> i64 {
+    let n = xs.len();
+    let at = |i: usize| -> i64 { t[((ws[i] as usize) << 8) | xs[i] as usize] as i64 };
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    for c in 0..chunks {
+        let i = c * 4;
+        a0 += at(i);
+        a1 += at(i + 1);
+        a2 += at(i + 2);
+        a3 += at(i + 3);
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in chunks * 4..n {
+        acc += at(i);
+    }
+    acc
+}
+
+/// Portable 8-wide tier: batch eight table gathers ahead of eight adds
+/// so the loads have no serial dependence on the accumulate (the shape
+/// the autovectorizer and any OoO core overlap well). This is also the
+/// fallback body for SIMD tiers on hosts that lost the feature probe.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_narrow_unroll8(
+    t: &[u16],
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+    kbias: i64,
+) {
+    debug_assert_eq!(xt.len(), k * n);
+    debug_assert_eq!(wrows.len(), m * k);
+    debug_assert_eq!(raw.len(), m * n);
+    let mut nb = 0;
+    while nb < n {
+        let nw = N_BLOCK.min(n - nb);
+        let nv = nw & !7;
+        for mi in 0..m {
+            let wrow = &wrows[mi * k..(mi + 1) * k];
+            let mut acc64 = [0i64; N_BLOCK];
+            let mut kc = 0;
+            while kc < k {
+                let kend = (kc + K_CHUNK).min(k);
+                let mut acc = [0i32; N_BLOCK];
+                for ki in kc..kend {
+                    let base = wrow[ki] as usize * 256;
+                    let row: &[u16; 256] = t[base..base + 256].try_into().unwrap();
+                    let xrow = &xt[ki * n + nb..ki * n + nb + nw];
+                    let mut p = 0;
+                    while p < nv {
+                        let e = [
+                            row[xrow[p] as usize],
+                            row[xrow[p + 1] as usize],
+                            row[xrow[p + 2] as usize],
+                            row[xrow[p + 3] as usize],
+                            row[xrow[p + 4] as usize],
+                            row[xrow[p + 5] as usize],
+                            row[xrow[p + 6] as usize],
+                            row[xrow[p + 7] as usize],
+                        ];
+                        for j in 0..8 {
+                            acc[p + j] += e[j] as i32;
+                        }
+                        p += 8;
+                    }
+                    for q in nv..nw {
+                        acc[q] += row[xrow[q] as usize] as i32;
+                    }
+                }
+                for (wide, &lane) in acc64[..nw].iter_mut().zip(&acc[..nw]) {
+                    *wide += lane as i64;
+                }
+                kc = kend;
+            }
+            let out = &mut raw[mi * n + nb..mi * n + nb + nw];
+            for (o, &a) in out.iter_mut().zip(&acc64[..nw]) {
+                *o = a + kbias;
+            }
+        }
+        nb += N_BLOCK;
+    }
+}
+
+/// AVX2 strip kernel: one `vpgatherdd` pulls 8 u16 entries of the
+/// current 512-byte table row per step; garbage high bytes are masked.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available. The table must carry the
+/// [`NARROW_PAD`] (asserted): a gather at in-row offset 510 reads bytes
+/// 510..514 of the row, which for the final row are the pad entry.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_narrow_avx2(
+    t: &[u16],
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+    kbias: i64,
+) {
+    use std::arch::x86_64::*;
+    assert!(t.len() >= NARROW_LEN, "narrow table missing the gather pad");
+    debug_assert_eq!(xt.len(), k * n);
+    debug_assert_eq!(wrows.len(), m * k);
+    debug_assert_eq!(raw.len(), m * n);
+    let mask16 = _mm256_set1_epi32(0xFFFF);
+    let tp = t.as_ptr();
+    let mut nb = 0;
+    while nb < n {
+        let nw = N_BLOCK.min(n - nb);
+        let nv = nw & !7;
+        for mi in 0..m {
+            let wrow = &wrows[mi * k..(mi + 1) * k];
+            let mut acc64 = [0i64; N_BLOCK];
+            let mut kc = 0;
+            while kc < k {
+                let kend = (kc + K_CHUNK).min(k);
+                let mut acc = [0i32; N_BLOCK];
+                for ki in kc..kend {
+                    let row = tp.add(wrow[ki] as usize * 256);
+                    let xrow = &xt[ki * n + nb..ki * n + nb + nw];
+                    let xp = xrow.as_ptr();
+                    let mut p = 0;
+                    while p < nv {
+                        // 8 activation codes -> 8 i32 lane indices.
+                        let codes = _mm_loadl_epi64(xp.add(p) as *const __m128i);
+                        let idx = _mm256_cvtepu8_epi32(codes);
+                        // Gather 32 bits at byte offset 2*idx from the
+                        // row; keep the low 16 (the u16 entry).
+                        let g = _mm256_i32gather_epi32::<2>(row as *const i32, idx);
+                        let e = _mm256_and_si256(g, mask16);
+                        let a = _mm256_loadu_si256(acc.as_ptr().add(p) as *const __m256i);
+                        _mm256_storeu_si256(
+                            acc.as_mut_ptr().add(p) as *mut __m256i,
+                            _mm256_add_epi32(a, e),
+                        );
+                        p += 8;
+                    }
+                    for q in nv..nw {
+                        acc[q] += *row.add(xrow[q] as usize) as i32;
+                    }
+                }
+                for (wide, &lane) in acc64[..nw].iter_mut().zip(&acc[..nw]) {
+                    *wide += lane as i64;
+                }
+                kc = kend;
+            }
+            let out = &mut raw[mi * n + nb..mi * n + nb + nw];
+            for (o, &a) in out.iter_mut().zip(&acc64[..nw]) {
+                *o = a + kbias;
+            }
+        }
+        nb += N_BLOCK;
+    }
+}
+
+/// AVX2 Wide (i32) strip kernel: gather at scale 4, sign-extend each
+/// half to i64 lanes. No pad is needed — a 4-byte gather at the last
+/// 4-byte entry ends exactly at the allocation boundary.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and `t.len() == 65536`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn gemm_wide_avx2(
+    t: &[i32],
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+) {
+    use std::arch::x86_64::*;
+    assert_eq!(t.len(), 65536, "wide table shape");
+    debug_assert_eq!(xt.len(), k * n);
+    debug_assert_eq!(wrows.len(), m * k);
+    debug_assert_eq!(raw.len(), m * n);
+    let tp = t.as_ptr();
+    let mut nb = 0;
+    while nb < n {
+        let nw = N_BLOCK.min(n - nb);
+        let nv = nw & !7;
+        for mi in 0..m {
+            let wrow = &wrows[mi * k..(mi + 1) * k];
+            let mut acc = [0i64; N_BLOCK];
+            for ki in 0..k {
+                let row = tp.add(wrow[ki] as usize * 256);
+                let xrow = &xt[ki * n + nb..ki * n + nb + nw];
+                let xp = xrow.as_ptr();
+                let mut p = 0;
+                while p < nv {
+                    let codes = _mm_loadl_epi64(xp.add(p) as *const __m128i);
+                    let idx = _mm256_cvtepu8_epi32(codes);
+                    let g = _mm256_i32gather_epi32::<4>(row, idx);
+                    let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(g));
+                    let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(g));
+                    let a0 = _mm256_loadu_si256(acc.as_ptr().add(p) as *const __m256i);
+                    let a1 = _mm256_loadu_si256(acc.as_ptr().add(p + 4) as *const __m256i);
+                    _mm256_storeu_si256(
+                        acc.as_mut_ptr().add(p) as *mut __m256i,
+                        _mm256_add_epi64(a0, lo),
+                    );
+                    _mm256_storeu_si256(
+                        acc.as_mut_ptr().add(p + 4) as *mut __m256i,
+                        _mm256_add_epi64(a1, hi),
+                    );
+                    p += 8;
+                }
+                for q in nv..nw {
+                    acc[q] += *row.add(xrow[q] as usize) as i64;
+                }
+            }
+            raw[mi * n + nb..mi * n + nb + nw].copy_from_slice(&acc[..nw]);
+        }
+        nb += N_BLOCK;
+    }
+}
+
+/// AVX2 dot over the padded Narrow table: 8 full-table indices
+/// `(w << 8) | x` per gather, widened to i64 lanes before accumulation
+/// (so arbitrarily long vectors cannot overflow).
+///
+/// # Safety
+/// Caller must ensure AVX2 is available; table pad asserted.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_narrow_avx2(t: &[u16], xs: &[u8], ws: &[u8]) -> i64 {
+    use std::arch::x86_64::*;
+    assert!(t.len() >= NARROW_LEN, "narrow table missing the gather pad");
+    debug_assert_eq!(xs.len(), ws.len());
+    let n = xs.len();
+    let nv = n & !7;
+    let mask16 = _mm256_set1_epi32(0xFFFF);
+    let tp = t.as_ptr() as *const i32;
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < nv {
+        let xv = _mm_loadl_epi64(xs.as_ptr().add(i) as *const __m128i);
+        let wv = _mm_loadl_epi64(ws.as_ptr().add(i) as *const __m128i);
+        let xi = _mm256_cvtepu8_epi32(xv);
+        let wi = _mm256_cvtepu8_epi32(wv);
+        let idx = _mm256_or_si256(_mm256_slli_epi32::<8>(wi), xi);
+        let g = _mm256_and_si256(_mm256_i32gather_epi32::<2>(tp, idx), mask16);
+        let lo = _mm256_cvtepu32_epi64(_mm256_castsi256_si128(g));
+        let hi = _mm256_cvtepu32_epi64(_mm256_extracti128_si256::<1>(g));
+        acc = _mm256_add_epi64(acc, _mm256_add_epi64(lo, hi));
+        i += 8;
+    }
+    let mut lanes = [0i64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    for j in nv..n {
+        total += t[((ws[j] as usize) << 8) | xs[j] as usize] as i64;
+    }
+    total
+}
+
+/// NEON Narrow strip kernel. AArch64 NEON has no gather instruction, so
+/// the eight table loads stay scalar (into a stack buffer) and the
+/// widening accumulate vectorizes: `vaddw_u16` folds 8 u16 entries into
+/// two u32x4 lanes per step. u32 lanes are safe for a full `K_CHUNK`
+/// run (2^14 * (2^16 - 1) < 2^30).
+///
+/// # Safety
+/// NEON is architecturally guaranteed on AArch64; the `target_feature`
+/// attribute still makes this `unsafe fn` on older toolchains.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_narrow_neon(
+    t: &[u16],
+    xt: &[u8],
+    n: usize,
+    k: usize,
+    wrows: &[u8],
+    m: usize,
+    raw: &mut [i64],
+    kbias: i64,
+) {
+    use core::arch::aarch64::*;
+    debug_assert_eq!(xt.len(), k * n);
+    debug_assert_eq!(wrows.len(), m * k);
+    debug_assert_eq!(raw.len(), m * n);
+    let mut nb = 0;
+    while nb < n {
+        let nw = N_BLOCK.min(n - nb);
+        let nv = nw & !7;
+        for mi in 0..m {
+            let wrow = &wrows[mi * k..(mi + 1) * k];
+            let mut acc64 = [0i64; N_BLOCK];
+            let mut kc = 0;
+            while kc < k {
+                let kend = (kc + K_CHUNK).min(k);
+                let mut acc = [0u32; N_BLOCK];
+                for ki in kc..kend {
+                    let base = wrow[ki] as usize * 256;
+                    let row: &[u16; 256] = t[base..base + 256].try_into().unwrap();
+                    let xrow = &xt[ki * n + nb..ki * n + nb + nw];
+                    let mut p = 0;
+                    while p < nv {
+                        let buf = [
+                            row[xrow[p] as usize],
+                            row[xrow[p + 1] as usize],
+                            row[xrow[p + 2] as usize],
+                            row[xrow[p + 3] as usize],
+                            row[xrow[p + 4] as usize],
+                            row[xrow[p + 5] as usize],
+                            row[xrow[p + 6] as usize],
+                            row[xrow[p + 7] as usize],
+                        ];
+                        let v = vld1q_u16(buf.as_ptr());
+                        let lo = vaddw_u16(vld1q_u32(acc.as_ptr().add(p)), vget_low_u16(v));
+                        vst1q_u32(acc.as_mut_ptr().add(p), lo);
+                        let hi = vaddw_high_u16(vld1q_u32(acc.as_ptr().add(p + 4)), v);
+                        vst1q_u32(acc.as_mut_ptr().add(p + 4), hi);
+                        p += 8;
+                    }
+                    for q in nv..nw {
+                        acc[q] += row[xrow[q] as usize] as u32;
+                    }
+                }
+                for (wide, &lane) in acc64[..nw].iter_mut().zip(&acc[..nw]) {
+                    *wide += lane as i64;
+                }
+                kc = kend;
+            }
+            let out = &mut raw[mi * n + nb..mi * n + nb + nw];
+            for (o, &a) in out.iter_mut().zip(&acc64[..nw]) {
+                *o = a + kbias;
+            }
+        }
+        nb += N_BLOCK;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Random padded narrow table + operands; the naive per-element walk
+    /// is the oracle for every tier.
+    fn fixture(seed: u64, n: usize, k: usize, m: usize) -> (Vec<u16>, Vec<u8>, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let mut t: Vec<u16> = (0..65536).map(|_| rng.below(65536) as u16).collect();
+        t.extend(std::iter::repeat(0).take(NARROW_PAD));
+        let xt: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        (t, xt, w)
+    }
+
+    fn naive(t: &[u16], xt: &[u8], n: usize, k: usize, w: &[u8], m: usize, kbias: i64) -> Vec<i64> {
+        let mut raw = vec![0i64; m * n];
+        for mi in 0..m {
+            for p in 0..n {
+                let mut s = 0i64;
+                for ki in 0..k {
+                    s += t[(w[mi * k + ki] as usize) * 256 + xt[ki * n + p] as usize] as i64;
+                }
+                raw[mi * n + p] = s + kbias;
+            }
+        }
+        raw
+    }
+
+    #[test]
+    fn every_tier_matches_the_naive_walk_on_ragged_shapes() {
+        for (n, k, m) in [(1usize, 1usize, 1usize), (7, 13, 3), (128, 9, 2), (129, 33, 2), (333, 150, 4)] {
+            let (t, xt, w) = fixture(n as u64 * 31 + k as u64, n, k, m);
+            let expect = naive(&t, &xt, n, k, &w, m, -17 * k as i64);
+            for tier in [SimdTier::Scalar, SimdTier::Unroll8, SimdTier::Avx2, SimdTier::Neon] {
+                let mut raw = vec![0i64; m * n];
+                gemm_narrow(tier, &t, &xt, n, k, &w, m, &mut raw, -17 * k as i64);
+                assert_eq!(raw, expect, "tier {tier:?} n={n} k={k} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundary_is_respected() {
+        // k spanning one full K_CHUNK plus a ragged tail: the i32->i64
+        // widening point must not change any sum.
+        let (n, k, m) = (9usize, K_CHUNK + 3, 1usize);
+        let (t, xt, w) = fixture(99, n, k, m);
+        let expect = naive(&t, &xt, n, k, &w, m, 0);
+        for tier in [SimdTier::Unroll8, SimdTier::Avx2, SimdTier::Neon] {
+            let mut raw = vec![0i64; m * n];
+            gemm_narrow(tier, &t, &xt, n, k, &w, m, &mut raw, 0);
+            assert_eq!(raw, expect, "tier {tier:?}");
+        }
+    }
+
+    #[test]
+    fn dot_tiers_match_the_pairwise_walk() {
+        let mut rng = Rng::new(5);
+        let mut t: Vec<u16> = (0..65536).map(|_| rng.below(65536) as u16).collect();
+        t.extend(std::iter::repeat(0).take(NARROW_PAD));
+        for n in [0usize, 1, 3, 8, 9, 333, 1024] {
+            let xs: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let ws: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let expect: i64 = (0..n)
+                .map(|i| t[((ws[i] as usize) << 8) | xs[i] as usize] as i64)
+                .sum();
+            for tier in [SimdTier::Scalar, SimdTier::Unroll8, SimdTier::Avx2, SimdTier::Neon] {
+                assert_eq!(dot_narrow(tier, &t, &xs, &ws), expect, "tier {tier:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn last_row_gather_hits_the_pad_not_garbage() {
+        // Force every lookup through table row 255 at the final column:
+        // index 65535 is the exact case whose 32-bit gather needs the
+        // pad entry. Any tier reading past it would differ from naive.
+        let mut t = vec![0u16; NARROW_LEN];
+        t[65535] = 0xABCD;
+        // Poison the pad: its *low* bytes must never leak into a sum.
+        t[65536] = 0xFFFF;
+        let n = 16usize;
+        let xt = vec![255u8; n]; // k = 1
+        let w = vec![255u8];
+        let expect = vec![0xABCDi64; n];
+        for tier in [SimdTier::Scalar, SimdTier::Unroll8, SimdTier::Avx2, SimdTier::Neon] {
+            let mut raw = vec![0i64; n];
+            gemm_narrow(tier, &t, &xt, n, 1, &w, 1, &mut raw, 0);
+            assert_eq!(raw, expect, "tier {tier:?}");
+        }
+        assert_eq!(
+            dot_narrow(SimdTier::Avx2, &t, &[255u8; 9], &[255u8; 9]),
+            9 * 0xABCD
+        );
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn wide_avx2_matches_naive_when_available() {
+        if !gemm_wide_avx2_available() {
+            return; // host cannot run the kernel; parity holds vacuously
+        }
+        let mut rng = Rng::new(21);
+        let t: Vec<i32> = (0..65536)
+            .map(|_| rng.range_inclusive(-2_000_000, 2_000_000) as i32)
+            .collect();
+        let (n, k, m) = (131usize, 29usize, 3usize);
+        let xt: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let mut expect = vec![0i64; m * n];
+        for mi in 0..m {
+            for p in 0..n {
+                expect[mi * n + p] = (0..k)
+                    .map(|ki| t[(w[mi * k + ki] as usize) * 256 + xt[ki * n + p] as usize] as i64)
+                    .sum();
+            }
+        }
+        let mut raw = vec![0i64; m * n];
+        // SAFETY: availability checked above; table is exactly 65536.
+        unsafe { gemm_wide_avx2(&t, &xt, n, k, &w, m, &mut raw) };
+        assert_eq!(raw, expect);
+    }
+}

@@ -18,10 +18,14 @@
 //! prepared at graph-load time. It is byte-identical to the naive operator
 //! loops (enforced by property tests) and backs `Graph::forward_batch`,
 //! the batched accuracy sweeps, and the coordinator's native workers.
+//! [`kernels`] specializes that hot path further: prepare-time
+//! closed-form kernel recognition plus runtime-dispatched SIMD tiers for
+//! the general table walk, all behind the same `Kernel` enum.
 
 pub mod gcn;
 pub mod gemm;
 pub mod graph;
+pub mod kernels;
 pub mod lenet;
 pub mod multiplier;
 pub mod ops;

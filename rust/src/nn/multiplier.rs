@@ -79,7 +79,16 @@ impl Multiplier {
     /// table misses L1 on random access) — §Perf iteration 3.
     #[inline]
     pub fn dot(&self, xs: &[u8], ys: &[u8]) -> i64 {
-        debug_assert_eq!(xs.len(), ys.len());
+        // A real check like `gemm::dot_raw`'s: the LUT branch indexes
+        // both slices by position, so a release-mode length mismatch
+        // would read pairs the caller never meant, not just panic late.
+        assert_eq!(
+            xs.len(),
+            ys.len(),
+            "Multiplier::dot: operand length mismatch ({} vs {})",
+            xs.len(),
+            ys.len()
+        );
         match self {
             Multiplier::Exact => xs
                 .iter()
@@ -145,5 +154,13 @@ mod tests {
         let ys = [5u8, 0, 7, 200];
         let d = m.dot(&xs, &ys);
         assert_eq!(d, 5 + 0 + 21 + 40000);
+    }
+
+    #[test]
+    #[should_panic(expected = "operand length mismatch")]
+    fn dot_rejects_mismatched_lengths() {
+        // Regression (PR-8 satellite): was a debug_assert, so release
+        // builds truncated to the shorter slice silently.
+        Multiplier::Exact.dot(&[1, 2, 3], &[1, 2]);
     }
 }

@@ -11,21 +11,55 @@ pub struct QuantParams {
 }
 
 impl QuantParams {
+    /// True iff `scale` is usable: a positive, normal, finite float. A
+    /// zero / NaN / infinite / subnormal / negative scale makes every
+    /// `quantize` division meaningless (the saturating cast would hide
+    /// it as a silently-wrong code).
+    pub fn valid_scale(scale: f32) -> bool {
+        scale.is_finite() && scale >= f32::MIN_POSITIVE
+    }
+
+    /// Validating constructor: panics on a scale [`Self::valid_scale`]
+    /// rejects, so a degenerate calibration fails at construction time
+    /// instead of corrupting codes downstream. (The fields stay `pub`
+    /// for the trusted literal call sites; this is the checked front
+    /// door for computed parameters.)
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        assert!(
+            Self::valid_scale(scale),
+            "QuantParams scale must be a positive normal float, got {scale:e}"
+        );
+        Self { scale, zero_point }
+    }
+
     /// Choose parameters covering `[lo, hi]` (asymmetric, u8 range),
     /// always including 0 in the representable range (required so ReLU's
     /// zero and zero padding are exactly representable).
     pub fn calibrate(lo: f32, hi: f32) -> Self {
         let lo = lo.min(0.0);
         let hi = hi.max(f32::EPSILON);
-        let scale = (hi - lo) / 255.0;
+        let mut scale = (hi - lo) / 255.0;
+        if !scale.is_finite() {
+            // hi - lo overflowed f32 (a range spanning most of the float
+            // line): saturate the step instead of carrying inf into new.
+            scale = f32::MAX / 255.0;
+        }
         let zero_point = (-lo / scale).round().clamp(0.0, 255.0) as i32;
-        Self { scale, zero_point }
+        Self::new(scale, zero_point)
     }
 
     /// Quantize one value.
+    ///
+    /// Edge behavior (pinned by tests, relying on Rust's defined
+    /// saturating float->int casts): `NaN` maps to the zero point (the
+    /// code of real 0), `+inf` and any overflowing positive value
+    /// saturate to 255, `-inf` and any overflowing negative value to 0.
+    /// The intermediate is i64: the old `as i32` path could hit
+    /// `i32::MAX + zero_point` on +inf, a signed overflow.
     #[inline]
     pub fn quantize(&self, v: f32) -> u8 {
-        ((v / self.scale).round() as i32 + self.zero_point).clamp(0, 255) as u8
+        debug_assert!(Self::valid_scale(self.scale), "invalid scale {:e}", self.scale);
+        ((v / self.scale).round() as i64 + self.zero_point as i64).clamp(0, 255) as u8
     }
 
     /// Dequantize one code.
@@ -110,5 +144,79 @@ mod tests {
         let q = QuantParams::calibrate(0.0, 1.0);
         assert_eq!(q.quantize(99.0), 255);
         assert_eq!(q.quantize(-99.0), 0);
+    }
+
+    #[test]
+    fn new_accepts_any_normal_positive_scale() {
+        let q = QuantParams::new(0.02, 7);
+        assert_eq!((q.scale, q.zero_point), (0.02, 7));
+        QuantParams::new(f32::MIN_POSITIVE, 0);
+        QuantParams::new(f32::MAX, 255);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive normal float")]
+    fn new_rejects_zero_scale() {
+        QuantParams::new(0.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive normal float")]
+    fn new_rejects_nan_scale() {
+        QuantParams::new(f32::NAN, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive normal float")]
+    fn new_rejects_negative_scale() {
+        QuantParams::new(-1.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive normal float")]
+    fn new_rejects_subnormal_scale() {
+        QuantParams::new(f32::MIN_POSITIVE / 2.0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive normal float")]
+    fn new_rejects_infinite_scale() {
+        QuantParams::new(f32::INFINITY, 0);
+    }
+
+    #[test]
+    fn quantize_edge_values_are_pinned() {
+        // The documented contract for non-finite / overflowing inputs:
+        // NaN -> zero point, +inf / huge -> 255, -inf / -huge -> 0.
+        // (Before the i64 intermediate, +inf hit i32::MAX + zero_point —
+        // signed overflow — on any layer with a nonzero zero point.)
+        let q = QuantParams::calibrate(-2.0, 6.0);
+        assert!(q.zero_point > 0, "asymmetric range must shift zp");
+        assert_eq!(q.quantize(f32::NAN), q.zero_point as u8);
+        assert_eq!(q.quantize(f32::NAN), q.quantize(0.0), "NaN == real 0");
+        assert_eq!(q.quantize(f32::INFINITY), 255);
+        assert_eq!(q.quantize(f32::NEG_INFINITY), 0);
+        assert_eq!(q.quantize(3.0e38), 255);
+        assert_eq!(q.quantize(-3.0e38), 0);
+    }
+
+    #[test]
+    fn calibrate_survives_a_range_spanning_the_float_line() {
+        // hi - lo overflows f32 here; the step saturates instead of
+        // carrying inf into the validating constructor.
+        let q = QuantParams::calibrate(-f32::MAX, f32::MAX);
+        assert!(QuantParams::valid_scale(q.scale));
+        assert_eq!(q.quantize(f32::MAX), 255);
+        assert_eq!(q.quantize(-f32::MAX), 0);
+    }
+
+    #[test]
+    fn calibrate_from_ignores_nan_samples() {
+        let with_nan = calibrate_from(&[0.1, f32::NAN, -0.2, 3.0]);
+        let without = calibrate_from(&[0.1, -0.2, 3.0]);
+        assert_eq!(with_nan, without);
+        // All-NaN (or empty) observations fall back to the default.
+        let degenerate = calibrate_from(&[f32::NAN, f32::NAN]);
+        assert!(QuantParams::valid_scale(degenerate.scale));
     }
 }

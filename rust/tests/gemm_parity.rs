@@ -7,13 +7,23 @@
 //! multipliers (exact, the Wallace-tree LUT, HEAM, and the signed OU L.1
 //! design) through both paths and demand byte-identical codes / bit-
 //! identical logits, plus the compact-table vs i32-table equivalence.
+//!
+//! PR 8 adds the dispatch-tier sweep: every kernel tier `Kernel::prepare`
+//! can emit — the scalar LUT walk (the reference), each SIMD LUT tier,
+//! and every closed-form specialized kernel — is pinned byte-identical to
+//! the scalar path across ragged strip sizes, the full zoo, K_CHUNK
+//! boundaries, and per-layer assigned handles.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use heam::mult::{Lut, MultKind};
-use heam::nn::gemm::{dot_raw, Kernel, PreparedConv, PreparedDense, PreparedMatmul, Scratch};
+use heam::nn::gemm::{
+    dot_raw, gemm_raw, Kernel, PreparedConv, PreparedDense, PreparedMatmul, Scratch, K_CHUNK,
+    N_BLOCK,
+};
 use heam::nn::graph::Value;
+use heam::nn::kernels::{DispatchPolicy, SimdTier};
 use heam::nn::multiplier::Multiplier;
 use heam::nn::ops::{qmatmul_f32, QConv2d, QDense};
 use heam::nn::quant::QuantParams;
@@ -225,4 +235,209 @@ fn gemm_kernel_decodes_like_the_multiplier() {
     let mul = Multiplier::Lut(Arc::new(wide));
     let kernel = Kernel::prepare(&mul);
     assert_eq!(mul.dot(&xs, &ys), dot_raw(&kernel, &xs, &ys), "wide i32 fallback");
+}
+
+// ---------------------------------------------------------------------------
+// PR 8: dispatch-tier sweep. The scalar LUT walk is the reference; every
+// other tier — SIMD LUT walks and closed-form specialized kernels — must
+// reproduce it byte for byte on every table and shape.
+// ---------------------------------------------------------------------------
+
+/// Every table the dispatcher can see: the full zoo (gate-level designs
+/// that must NOT specialize, plus Wallace/OU which must), synthetic
+/// closed-form families the recognizers target, and a wide-range table
+/// that forces the i32 fallback.
+fn sweep_luts() -> Vec<Lut> {
+    let mut luts: Vec<Lut> = MultKind::ALL.iter().map(|k| k.lut()).collect();
+    luts.push(Lut::exact());
+    luts.push(Lut::from_fn("syn-operand-trunc", |x, y| {
+        ((x & 0xF0) as i64) * ((y & 0xFC) as i64)
+    }));
+    luts.push(Lut::from_fn("syn-product-trunc", |x, y| {
+        (((x * y) >> 3) << 3) as i64
+    }));
+    luts.push(Lut::from_fn("syn-affine", |x, y| 3 * x as i64 - 2 * y as i64 + 7));
+    luts.push(Lut::from_fn("syn-wide", |x, y| {
+        x as i64 * y as i64 * 40 - 2_000_000
+    }));
+    luts
+}
+
+/// The policies spanning every dispatch tier. Pinned tiers the host
+/// cannot run (e.g. AVX2 on an old x86) fall back portably — still a
+/// valid parity point, just a redundant one.
+fn sweep_policies() -> Vec<(&'static str, DispatchPolicy)> {
+    vec![
+        ("scalar", DispatchPolicy::scalar()),
+        (
+            "unroll8",
+            DispatchPolicy { allow_closed: false, simd: Some(SimdTier::Unroll8) },
+        ),
+        (
+            "avx2-or-fallback",
+            DispatchPolicy { allow_closed: false, simd: Some(SimdTier::Avx2) },
+        ),
+        ("lut-simd-auto", DispatchPolicy::lut_simd()),
+        ("full", DispatchPolicy::full()),
+    ]
+}
+
+#[test]
+fn every_dispatch_tier_matches_the_scalar_reference_on_ragged_shapes() {
+    // Ragged on every axis: n around/below/above N_BLOCK, k not a
+    // multiple of the unroll widths, several weight rows.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (7, 13, 3),
+        (N_BLOCK, 5, 2),
+        (N_BLOCK + 1, 150, 4),
+        (333, 37, 3),
+    ];
+    let mut g = Gen::new(41, 1.0);
+    for lut in sweep_luts() {
+        let mul = Multiplier::Lut(Arc::new(lut));
+        let reference = Kernel::prepare_with(&mul, DispatchPolicy::scalar());
+        for &(n, k, m) in &shapes {
+            let xt = gen_codes(&mut g, k * n);
+            let w = gen_codes(&mut g, m * k);
+            let mut expect = vec![0i64; m * n];
+            gemm_raw(&reference, &xt, n, k, &w, m, &mut expect);
+            for (pname, policy) in sweep_policies() {
+                let kernel = Kernel::prepare_with(&mul, policy);
+                let mut raw = vec![0i64; m * n];
+                gemm_raw(&kernel, &xt, n, k, &w, m, &mut raw);
+                assert_eq!(
+                    raw,
+                    expect,
+                    "mul={} policy={pname} kernel={} n={n} k={k} m={m}",
+                    mul.label(),
+                    kernel.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_raw_matches_across_tiers_for_the_whole_zoo() {
+    let mut g = Gen::new(43, 1.0);
+    for lut in sweep_luts() {
+        let mul = Multiplier::Lut(Arc::new(lut));
+        let reference = Kernel::prepare_with(&mul, DispatchPolicy::scalar());
+        for n in [0usize, 1, 3, 8, 9, 64, 333] {
+            let xs = gen_codes(&mut g, n);
+            let ws = gen_codes(&mut g, n);
+            let expect = dot_raw(&reference, &xs, &ws);
+            for (pname, policy) in sweep_policies() {
+                let kernel = Kernel::prepare_with(&mul, policy);
+                assert_eq!(
+                    dot_raw(&kernel, &xs, &ws),
+                    expect,
+                    "mul={} policy={pname} n={n}",
+                    mul.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn specialization_decisions_are_stable_for_the_zoo() {
+    let full = DispatchPolicy::full();
+    let label_of = |kind: MultKind| {
+        Kernel::prepare_with(&Multiplier::Lut(Arc::new(kind.lut())), full).label()
+    };
+    // Closed-form families the recognizers must catch:
+    assert_eq!(label_of(MultKind::Wallace), "closed:exact");
+    assert_eq!(label_of(MultKind::OuL1), "closed:affine");
+    assert_eq!(label_of(MultKind::OuL3), "closed:affine");
+    // Gate-level designs with no closed form must stay on the LUT walk:
+    for kind in [MultKind::Heam, MultKind::KMap, MultKind::CrC6, MultKind::CrC7, MultKind::Ac] {
+        let kernel = Kernel::prepare_with(&Multiplier::Lut(Arc::new(kind.lut())), full);
+        assert!(
+            kernel.label().starts_with("lut16") && !kernel.is_specialized(),
+            "{kind:?} must stay on the narrow LUT path, got {}",
+            kernel.label()
+        );
+    }
+    // Exact never needs a table, under any policy.
+    assert_eq!(Kernel::prepare_with(&Multiplier::Exact, full).label(), "exact");
+    assert_eq!(
+        Kernel::prepare_with(&Multiplier::Exact, DispatchPolicy::scalar()).label(),
+        "exact"
+    );
+    // Forced-scalar keeps even a specializable table on the plain walk.
+    let pinned = Kernel::prepare_with(
+        &Multiplier::Lut(Arc::new(MultKind::Wallace.lut())),
+        DispatchPolicy::scalar(),
+    );
+    assert_eq!(pinned.label(), "lut16");
+    assert!(!pinned.is_specialized());
+}
+
+#[test]
+fn k_chunk_boundary_is_bit_exact_in_every_tier() {
+    // Spanning the i32->i64 widening point matters most for the kernels
+    // with non-default chunk bounds: OU L.1 specializes closed-form with
+    // a shrunken chunk (its values exceed 2^16), HEAM exercises the LUT
+    // tiers' internal chunking.
+    let mut g = Gen::new(47, 1.0);
+    let (n, m) = (3usize, 1usize);
+    for kind in [MultKind::OuL1, MultKind::Heam] {
+        let mul = Multiplier::Lut(Arc::new(kind.lut()));
+        let reference = Kernel::prepare_with(&mul, DispatchPolicy::scalar());
+        for k in [K_CHUNK - 1, K_CHUNK, K_CHUNK + 3] {
+            let xt = gen_codes(&mut g, k * n);
+            let w = gen_codes(&mut g, m * k);
+            let mut expect = vec![0i64; m * n];
+            gemm_raw(&reference, &xt, n, k, &w, m, &mut expect);
+            for (pname, policy) in sweep_policies() {
+                let kernel = Kernel::prepare_with(&mul, policy);
+                let mut raw = vec![0i64; m * n];
+                gemm_raw(&kernel, &xt, n, k, &w, m, &mut raw);
+                assert_eq!(raw, expect, "{kind:?} policy={pname} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn assigned_handles_sweep_every_tier_bit_exactly() {
+    // Per-layer assigned kernels (the Pareto-frontier serving path) under
+    // every dispatch policy must produce the logits the scalar reference
+    // does — specialization may never leak through the assignment cache.
+    let bundle = heam::nn::lenet::random_bundle(1, 20, 321);
+    let graph = heam::nn::lenet::load_graph(&bundle).unwrap();
+    let muls = vec![
+        Multiplier::Lut(Arc::new(MultKind::OuL1.lut())), // specializes (affine)
+        Multiplier::Lut(Arc::new(MultKind::Heam.lut())), // stays LUT
+        Multiplier::Exact,
+        Multiplier::Lut(Arc::new(MultKind::Wallace.lut())), // specializes (exact)
+        Multiplier::Lut(Arc::new(MultKind::KMap.lut())),    // stays LUT
+    ];
+    let mut g = Gen::new(53, 1.0);
+    let feeds: Vec<BTreeMap<String, Value>> = (0..3)
+        .map(|_| {
+            let img: Vec<f32> = (0..20 * 20).map(|_| g.f64_range(0.0, 1.0) as f32).collect();
+            let mut f = BTreeMap::new();
+            f.insert(
+                "image".to_string(),
+                Value::F32(Tensor::new(vec![1, 20, 20], img)),
+            );
+            f
+        })
+        .collect();
+    let run = |policy: DispatchPolicy| -> Vec<Vec<f32>> {
+        let prepared = graph.prepare_assigned_with(&muls, policy).unwrap();
+        prepared
+            .run_batch("fc3", &feeds, 2)
+            .unwrap()
+            .into_iter()
+            .map(|v| v.as_f32().unwrap().data.clone())
+            .collect()
+    };
+    let expect = run(DispatchPolicy::scalar());
+    for (pname, policy) in sweep_policies() {
+        assert_eq!(run(policy), expect, "policy={pname}");
+    }
 }

@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
 #
-#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched/chaos/pareto smokes + python tests
-#   scripts/check.sh --rust     # rust only (includes all three smokes)
+#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched/chaos/pareto/kernels smokes + python tests
+#   scripts/check.sh --rust     # rust only (includes all smokes)
 #   scripts/check.sh --python   # python only
 #   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
 #   scripts/check.sh --qos      # QoS routing smoke only (builds if needed)
 #   scripts/check.sh --sched    # shared-scheduler smoke only (builds if needed)
 #   scripts/check.sh --chaos    # fault-injection / containment smoke only (builds if needed)
 #   scripts/check.sh --pareto   # per-layer Pareto frontier determinism smoke only (builds if needed)
+#   scripts/check.sh --kernels  # kernel specialization / SIMD dispatch smoke only (builds if needed)
+#
+# Every tier that cannot run prints an explicit "SKIPPED: no cargo"
+# marker and the run exits nonzero with a per-tier summary — a green run
+# is a *tested* run, never a silently-skipped one.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,16 +24,18 @@ run_qos=1
 run_sched=1
 run_chaos=1
 run_pareto=1
+run_kernels=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
-  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
-  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
-  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0; run_pareto=0 ;;
-  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_pareto=0 ;;
-  --pareto) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0 ;;
+  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
+  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
+  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
+  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
+  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_pareto=0; run_kernels=0 ;;
+  --pareto) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_kernels=0 ;;
+  --kernels) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos|--pareto]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos|--pareto|--kernels]" >&2; exit 2 ;;
 esac
 
 # Deterministic serving smoke: a short fixed-seed open-loop soak, run
@@ -226,66 +233,127 @@ pareto_smoke() {
   echo "pareto smoke OK: $(printf '%s\n' "$out_a" | grep '^pareto frontier OK')"
 }
 
+# Fixed-seed kernel specialization / SIMD dispatch smoke: `heam kernels`
+# prepares every zoo multiplier twice — once pinned to the scalar LUT
+# walk (the bit-exactness reference) and once under full dispatch
+# (closed-form recognition + the host's SIMD tier) — runs a seeded GEMM
+# through both, and exits nonzero unless every pair is byte-identical
+# AND at least one multiplier actually dispatched a specialized kernel.
+# Run twice: the `kernels trace` fingerprint line must also be identical
+# across runs (prepare-time recognition is deterministic).
+kernels_smoke() {
+  echo "== kernel specialization smoke =="
+  local bin=target/release/heam
+  cargo build --release
+  local out_a out_b
+  out_a=$("$bin" kernels --seed 7)
+  out_b=$("$bin" kernels --seed 7)
+  local line_a line_b
+  line_a=$(printf '%s\n' "$out_a" | grep '^kernels trace')
+  line_b=$(printf '%s\n' "$out_b" | grep '^kernels trace')
+  if [ "$line_a" != "$line_b" ]; then
+    echo "!! kernel traces diverged across identical seeds:" >&2
+    echo "   run A: $line_a" >&2
+    echo "   run B: $line_b" >&2
+    exit 1
+  fi
+  for out in "$out_a" "$out_b"; do
+    if ! printf '%s\n' "$out" | grep -q '^kernel check OK'; then
+      echo "!! kernel self-check (parity + >=1 specialization) did not pass:" >&2
+      printf '%s\n' "$out" >&2
+      exit 1
+    fi
+  done
+  echo "kernels smoke OK: $(printf '%s\n' "$out_a" | grep '^kernel check OK')"
+}
+
+# Per-tier ledger. A tier that cannot run appends to `skipped` and
+# prints the literal "SKIPPED: no cargo" marker — machine-greppable, so
+# log scrapers can't mistake a skipped gate for a green one. The final
+# summary is nonzero-aware: any skip turns the gate PARTIAL (exit 1).
+passed=""
 skipped=""
+mark_pass() { passed="${passed:+$passed,}$1"; }
+mark_skip() {
+  echo "!! SKIPPED: no cargo — $1 gate did not run (install rustup or run in CI)" >&2
+  skipped="${skipped:+$skipped,}$1"
+}
+
 if [ "$run_rust" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     echo "== cargo build --release =="
     cargo build --release
     echo "== cargo test -q =="
     cargo test -q
+    mark_pass rust
   else
-    echo "!! cargo not found — rust gate skipped (install rustup or run in CI)" >&2
-    skipped="rust"
+    mark_skip rust
     run_loadgen=0
     run_qos=0
     run_sched=0
     run_chaos=0
     run_pareto=0
+    run_kernels=0
+    mark_skip loadgen
+    mark_skip qos
+    mark_skip sched
+    mark_skip chaos
+    mark_skip pareto
+    mark_skip kernels
   fi
 fi
 
 if [ "$run_loadgen" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     loadgen_smoke
+    mark_pass loadgen
   else
-    echo "!! cargo not found — loadgen smoke skipped" >&2
-    skipped="${skipped:+$skipped,}loadgen"
+    mark_skip loadgen
   fi
 fi
 
 if [ "$run_qos" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     qos_smoke
+    mark_pass qos
   else
-    echo "!! cargo not found — qos smoke skipped" >&2
-    skipped="${skipped:+$skipped,}qos"
+    mark_skip qos
   fi
 fi
 
 if [ "$run_sched" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     sched_smoke
+    mark_pass sched
   else
-    echo "!! cargo not found — sched smoke skipped" >&2
-    skipped="${skipped:+$skipped,}sched"
+    mark_skip sched
   fi
 fi
 
 if [ "$run_chaos" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     chaos_smoke
+    mark_pass chaos
   else
-    echo "!! cargo not found — chaos smoke skipped" >&2
-    skipped="${skipped:+$skipped,}chaos"
+    mark_skip chaos
   fi
 fi
 
 if [ "$run_pareto" = 1 ]; then
   if command -v cargo >/dev/null 2>&1; then
     pareto_smoke
+    mark_pass pareto
   else
-    echo "!! cargo not found — pareto smoke skipped" >&2
-    skipped="${skipped:+$skipped,}pareto"
+    mark_skip pareto
+  fi
+fi
+
+if [ "$run_kernels" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    kernels_smoke
+    mark_pass kernels
+  else
+    mark_skip kernels
   fi
 fi
 
@@ -293,10 +361,12 @@ if [ "$run_python" = 1 ]; then
   if command -v python3 >/dev/null 2>&1; then PY=python3; else PY=python; fi
   echo "== $PY -m pytest python/tests -q =="
   "$PY" -m pytest python/tests -q
+  mark_pass python
 fi
 
+echo "tier summary: passed=[${passed:-none}] skipped=[${skipped:-none}]"
 if [ -n "$skipped" ]; then
-  echo "tier-1 gate PARTIAL: $skipped gate skipped — do NOT treat this as a full pass" >&2
+  echo "tier-1 gate PARTIAL: SKIPPED: no cargo for [$skipped] — do NOT treat this as a full pass" >&2
   exit 1
 fi
 echo "tier-1 gate OK"

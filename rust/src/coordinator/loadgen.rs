@@ -267,8 +267,9 @@ pub fn trace_fingerprint(events: &[TraceEvent]) -> u64 {
 }
 
 /// Deterministic synthetic input for one request (shared with the QoS
-/// replay harness, which generates images from the same trace seeds).
-pub(crate) fn image_for(seed: u64, size: usize) -> Vec<f32> {
+/// replay harness, `heam top`/`heam calibrate`, and the telemetry
+/// integration suite, which all generate images from trace seeds).
+pub fn image_for(seed: u64, size: usize) -> Vec<f32> {
     let mut rng = Rng::new(seed);
     (0..size).map(|_| rng.f32()).collect()
 }

@@ -3,8 +3,19 @@
 //! into one aggregate view. Shed and preempt counters are additionally
 //! kept *per request class* — the per-class admission control of the
 //! shared scheduler is invisible without them.
+//!
+//! The observability layer (PR 9) adds two more families: per-stage
+//! duration histograms (one log2 histogram per [`Stage`], fed by the
+//! same span instrumentation that drives `--trace-out`) and
+//! per-kernel-label execute counters (which dispatch tier — scalar,
+//! AVX2, closed-form — actually served the traffic). Both surface
+//! through [`Snapshot::render_prometheus`], the text exposition behind
+//! `heam top` and `heam serve --prom-every-ms`.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::telemetry::{Stage, N_STAGES, STAGES};
 
 /// Lock-free metrics shared between the scheduler, workers and clients.
 pub struct Metrics {
@@ -33,6 +44,14 @@ pub struct Metrics {
     class_deadline: Vec<AtomicU64>,
     /// Log2-bucketed latency histogram (microseconds), buckets 0..=24.
     latency_buckets: [AtomicU64; 25],
+    /// Per-stage duration histograms: outer index = [`Stage`] code,
+    /// inner = the same log2 µs buckets as `latency_buckets`.
+    stage_buckets: Vec<[AtomicU64; 25]>,
+    /// Registered kernel labels (index = slot in `kernel_execs`). Fixed
+    /// at construction so the execute hot path is a plain indexed
+    /// `fetch_add` with no lock and no allocation.
+    kernel_names: Vec<String>,
+    kernel_execs: Vec<AtomicU64>,
 }
 
 impl Default for Metrics {
@@ -70,12 +89,30 @@ pub struct Snapshot {
     /// backpressure signal alongside p99 and the rejection rate.
     pub queue: i64,
     pub latency_buckets: Vec<u64>,
+    /// Per-stage duration histograms (outer index = [`Stage`] code,
+    /// inner = log2 µs buckets). [`Snapshot::merge`] and
+    /// [`Snapshot::delta_since`] pad *both* dimensions to the longer
+    /// side, same rule as the per-class vectors.
+    pub stage_buckets: Vec<Vec<u64>>,
+    /// Per-kernel-label execute counts as `(label, count)` pairs.
+    /// Merge and delta match entries *by label*, not by position —
+    /// different lanes register different kernel sets.
+    pub kernel_execs: Vec<(String, u64)>,
 }
 
 impl Metrics {
     /// Metrics for a lane serving `classes` request classes (clamped to
     /// at least one).
     pub fn with_classes(classes: usize) -> Self {
+        Self::with_observability(classes, Vec::new())
+    }
+
+    /// Metrics for a lane serving `classes` request classes whose
+    /// execution plan dispatches through the given kernel labels. The
+    /// label set is fixed at construction — the per-layer execute hot
+    /// path records by index ([`Metrics::record_kernel_exec`]) without
+    /// locking or allocating.
+    pub fn with_observability(classes: usize, kernel_names: Vec<String>) -> Self {
         let classes = classes.max(1);
         Self {
             requests: AtomicU64::new(0),
@@ -92,14 +129,24 @@ impl Metrics {
             class_failed: (0..classes).map(|_| AtomicU64::new(0)).collect(),
             class_deadline: (0..classes).map(|_| AtomicU64::new(0)).collect(),
             latency_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            stage_buckets: (0..N_STAGES)
+                .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+                .collect(),
+            kernel_execs: (0..kernel_names.len()).map(|_| AtomicU64::new(0)).collect(),
+            kernel_names,
         }
+    }
+
+    /// The log2 µs bucket for a duration (0 clamps into bucket 0, the
+    /// top bucket 24 is open-ended).
+    fn bucket(v: u64) -> usize {
+        (64 - v.max(1).leading_zeros() as usize - 1).min(24)
     }
 
     /// Record one completed request's end-to-end latency.
     pub fn record_request(&self, latency_us: u64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(24);
-        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.latency_buckets[Self::bucket(latency_us)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed batch.
@@ -107,6 +154,34 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
         self.execute_us.fetch_add(execute_us, Ordering::Relaxed);
+    }
+
+    /// Record one stage duration into its per-stage histogram.
+    pub fn record_stage(&self, stage: Stage, dur_us: u64) {
+        self.stage_buckets[stage as usize][Self::bucket(dur_us)]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one per-layer execution dispatched through the kernel
+    /// registered at `kernel` (see [`Metrics::kernel_index`]).
+    /// Out-of-range indices are ignored rather than panicking a worker.
+    pub fn record_kernel_exec(&self, kernel: usize) {
+        self.record_kernel_execs(kernel, 1);
+    }
+
+    /// [`Metrics::record_kernel_exec`] for `n` executions at once — a
+    /// batch of `n` requests runs each kernel-bearing node `n` times,
+    /// and the worker records the whole batch with one atomic add.
+    pub fn record_kernel_execs(&self, kernel: usize, n: u64) {
+        if let Some(c) = self.kernel_execs.get(kernel) {
+            c.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// The counter slot for a registered kernel label, resolved once at
+    /// lane build time — never on the hot path.
+    pub fn kernel_index(&self, name: &str) -> Option<usize> {
+        self.kernel_names.iter().position(|n| n == name)
     }
 
     /// Record one request of `class` refused at admission.
@@ -183,6 +258,17 @@ impl Metrics {
                 .iter()
                 .map(|b| b.load(Ordering::Relaxed))
                 .collect(),
+            stage_buckets: self
+                .stage_buckets
+                .iter()
+                .map(|h| h.iter().map(|b| b.load(Ordering::Relaxed)).collect())
+                .collect(),
+            kernel_execs: self
+                .kernel_names
+                .iter()
+                .cloned()
+                .zip(self.kernel_execs.iter().map(|c| c.load(Ordering::Relaxed)))
+                .collect(),
         }
     }
 }
@@ -206,6 +292,8 @@ impl Snapshot {
             class_deadline: Vec::new(),
             queue: 0,
             latency_buckets: vec![0; 25],
+            stage_buckets: vec![vec![0; 25]; N_STAGES],
+            kernel_execs: Vec::new(),
         }
     }
 
@@ -235,13 +323,35 @@ impl Snapshot {
         Self::add_padded(&mut self.class_failed, &other.class_failed);
         Self::add_padded(&mut self.class_deadline, &other.class_deadline);
         Self::add_padded(&mut self.latency_buckets, &other.latency_buckets);
+        // Stage histograms pad both dimensions: a zero() identity or an
+        // old snapshot may carry fewer stages than a newer build.
+        if self.stage_buckets.len() < other.stage_buckets.len() {
+            self.stage_buckets.resize(other.stage_buckets.len(), Vec::new());
+        }
+        for (i, hist) in other.stage_buckets.iter().enumerate() {
+            Self::add_padded(&mut self.stage_buckets[i], hist);
+        }
+        // Kernel counters merge by label (lanes register different
+        // kernel sets); the result is label-sorted, hence deterministic.
+        let mut by_name: BTreeMap<String, u64> = BTreeMap::new();
+        for (name, n) in self
+            .kernel_execs
+            .drain(..)
+            .chain(other.kernel_execs.iter().map(|(s, n)| (s.clone(), *n)))
+        {
+            *by_name.entry(name).or_insert(0) += n;
+        }
+        self.kernel_execs = by_name.into_iter().collect();
         self
     }
 
     /// The counters accumulated since `base` was snapped from the same
-    /// `Metrics` (all counters are monotonic, so pointwise subtraction is
-    /// exact). This is how the load generator isolates one run's latency
-    /// histogram and batch stats on a reused server.
+    /// `Metrics`. Every subtraction *saturates*: a long soak that
+    /// restarts its baseline, or a stale baseline from a replaced lane,
+    /// shows up as a zero delta instead of a wrapped 2^64-ish count
+    /// poisoning downstream QoS decisions. This is how the load
+    /// generator isolates one run's latency histogram and batch stats
+    /// on a reused server.
     pub fn delta_since(&self, base: &Snapshot) -> Snapshot {
         // Pad to the *longer* of the two vectors: merged snapshots can
         // carry per-class vectors of different lengths (single-class
@@ -260,16 +370,38 @@ impl Snapshot {
                 })
                 .collect()
         };
+        // Stage histograms: pad the stage dimension both directions,
+        // then the bucket dimension inside each stage.
+        let n_stages = self.stage_buckets.len().max(base.stage_buckets.len());
+        let stage_buckets = (0..n_stages)
+            .map(|i| {
+                sub_padded(
+                    self.stage_buckets.get(i).map(Vec::as_slice).unwrap_or(&[]),
+                    base.stage_buckets.get(i).map(Vec::as_slice).unwrap_or(&[]),
+                )
+            })
+            .collect();
+        // Kernel counters: the union of labels, each saturating against
+        // the baseline; labels only the baseline knew stay visible as
+        // explicit zeros.
+        let mut by_name: BTreeMap<String, u64> = BTreeMap::new();
+        for (name, n) in &self.kernel_execs {
+            *by_name.entry(name.clone()).or_insert(0) += n;
+        }
+        for (name, n) in &base.kernel_execs {
+            let e = by_name.entry(name.clone()).or_insert(0);
+            *e = e.saturating_sub(*n);
+        }
         Snapshot {
-            requests: self.requests - base.requests,
-            batches: self.batches - base.batches,
-            batched_items: self.batched_items - base.batched_items,
-            execute_us: self.execute_us - base.execute_us,
-            rejected: self.rejected - base.rejected,
-            preempted: self.preempted - base.preempted,
-            failed: self.failed - base.failed,
-            stragglers: self.stragglers - base.stragglers,
-            deadline_expired: self.deadline_expired - base.deadline_expired,
+            requests: self.requests.saturating_sub(base.requests),
+            batches: self.batches.saturating_sub(base.batches),
+            batched_items: self.batched_items.saturating_sub(base.batched_items),
+            execute_us: self.execute_us.saturating_sub(base.execute_us),
+            rejected: self.rejected.saturating_sub(base.rejected),
+            preempted: self.preempted.saturating_sub(base.preempted),
+            failed: self.failed.saturating_sub(base.failed),
+            stragglers: self.stragglers.saturating_sub(base.stragglers),
+            deadline_expired: self.deadline_expired.saturating_sub(base.deadline_expired),
             class_rejected: sub_padded(&self.class_rejected, &base.class_rejected),
             class_preempted: sub_padded(&self.class_preempted, &base.class_preempted),
             class_failed: sub_padded(&self.class_failed, &base.class_failed),
@@ -280,6 +412,8 @@ impl Snapshot {
             // Same padding rule: zip() would truncate to the shorter
             // histogram and lose the tail buckets.
             latency_buckets: sub_padded(&self.latency_buckets, &base.latency_buckets),
+            stage_buckets,
+            kernel_execs: by_name.into_iter().collect(),
         }
     }
 
@@ -292,22 +426,22 @@ impl Snapshot {
         }
     }
 
-    /// Approximate latency percentile from the log2 histogram, reported as
-    /// the *inclusive upper bound* of the bucket holding the p-quantile:
-    /// bucket `i` covers `[2^i, 2^(i+1) - 1]` µs, so a 1 µs latency
-    /// reports 1 (not 2, as the pre-fix `1 << (i + 1)` exclusive bound
-    /// did). The last bucket (24) is open-ended — it absorbs everything
-    /// ≥ 2^24 µs (~16.8 s) — so it reports its lower bound 2^24 as a
-    /// saturation marker rather than inventing an upper bound.
-    pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.latency_buckets.iter().sum();
+    /// The p-quantile of a log2 histogram, reported as the *inclusive
+    /// upper bound* of the bucket holding it: bucket `i` covers
+    /// `[2^i, 2^(i+1) - 1]` µs, so a 1 µs latency reports 1 (not 2, as
+    /// the pre-fix `1 << (i + 1)` exclusive bound did). The last bucket
+    /// is open-ended — it absorbs everything ≥ its lower bound — so it
+    /// reports that lower bound as a saturation marker rather than
+    /// inventing an upper bound.
+    fn percentile_from(buckets: &[u64], p: f64) -> u64 {
+        let total: u64 = buckets.iter().sum();
         if total == 0 {
             return 0;
         }
         let target = ((total as f64 * p).ceil() as u64).clamp(1, total);
-        let last = self.latency_buckets.len() - 1;
+        let last = buckets.len() - 1;
         let mut seen = 0;
-        for (i, &c) in self.latency_buckets.iter().enumerate() {
+        for (i, &c) in buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
                 return if i == last {
@@ -318,6 +452,114 @@ impl Snapshot {
             }
         }
         unreachable!("seen == total >= target");
+    }
+
+    /// Approximate end-to-end latency percentile (inclusive-upper-bound
+    /// semantics, see [`Snapshot::percentile_from`]).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        Self::percentile_from(&self.latency_buckets, p)
+    }
+
+    /// Approximate duration percentile of one instrumented stage.
+    pub fn stage_percentile_us(&self, stage: Stage, p: f64) -> u64 {
+        self.stage_buckets
+            .get(stage as usize)
+            .map(|b| Self::percentile_from(b, p))
+            .unwrap_or(0)
+    }
+
+    /// Total samples recorded for one instrumented stage.
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        self.stage_buckets
+            .get(stage as usize)
+            .map(|b| b.iter().sum())
+            .unwrap_or(0)
+    }
+
+    /// Render the snapshot in the Prometheus text exposition format
+    /// (version 0.0.4), labeling every sample with `tier` (the lane
+    /// name, or an aggregate name like `all` for merged snapshots).
+    ///
+    /// Families: `heam_*_total` request/batch/shed counters (the
+    /// per-class splits carry a `class` label), `heam_queue_depth`
+    /// gauge, `heam_latency_us` + `heam_stage_duration_us` histograms
+    /// with cumulative `le` buckets matching the log2 layout (`le` =
+    /// each bucket's inclusive upper bound, then `+Inf`), and
+    /// `heam_kernel_execute_total{kernel=...}`. Empty stage histograms
+    /// are skipped; registered kernels always appear, even at zero.
+    pub fn render_prometheus(&self, tier: &str) -> String {
+        let mut out = String::new();
+        let scalars: [(&str, u64); 9] = [
+            ("heam_requests_total", self.requests),
+            ("heam_batches_total", self.batches),
+            ("heam_batched_items_total", self.batched_items),
+            ("heam_execute_us_total", self.execute_us),
+            ("heam_rejected_total", self.rejected),
+            ("heam_preempted_total", self.preempted),
+            ("heam_failed_total", self.failed),
+            ("heam_stragglers_total", self.stragglers),
+            ("heam_deadline_expired_total", self.deadline_expired),
+        ];
+        for (name, v) in scalars {
+            out.push_str(&format!(
+                "# TYPE {name} counter\n{name}{{tier=\"{tier}\"}} {v}\n"
+            ));
+        }
+        let classed: [(&str, &[u64]); 4] = [
+            ("heam_class_rejected_total", &self.class_rejected),
+            ("heam_class_preempted_total", &self.class_preempted),
+            ("heam_class_failed_total", &self.class_failed),
+            ("heam_class_deadline_expired_total", &self.class_deadline),
+        ];
+        for (name, counts) in classed {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            for (class, v) in counts.iter().enumerate() {
+                out.push_str(&format!(
+                    "{name}{{tier=\"{tier}\",class=\"{class}\"}} {v}\n"
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "# TYPE heam_queue_depth gauge\nheam_queue_depth{{tier=\"{tier}\"}} {}\n",
+            self.queue
+        ));
+        let histogram = |out: &mut String, name: &str, extra: &str, buckets: &[u64]| {
+            let mut seen = 0u64;
+            let last = buckets.len().saturating_sub(1);
+            for (i, &c) in buckets.iter().enumerate() {
+                seen += c;
+                let le = if i == last {
+                    "+Inf".to_string()
+                } else {
+                    ((1u64 << (i + 1)) - 1).to_string()
+                };
+                out.push_str(&format!(
+                    "{name}_bucket{{tier=\"{tier}\"{extra},le=\"{le}\"}} {seen}\n"
+                ));
+            }
+            out.push_str(&format!("{name}_count{{tier=\"{tier}\"{extra}}} {seen}\n"));
+        };
+        out.push_str("# TYPE heam_latency_us histogram\n");
+        histogram(&mut out, "heam_latency_us", "", &self.latency_buckets);
+        out.push_str("# TYPE heam_stage_duration_us histogram\n");
+        for (i, buckets) in self.stage_buckets.iter().enumerate() {
+            if buckets.iter().all(|&c| c == 0) {
+                continue;
+            }
+            let stage = STAGES
+                .get(i)
+                .map(|s| s.label().to_string())
+                .unwrap_or_else(|| format!("stage{i}"));
+            let extra = format!(",stage=\"{stage}\"");
+            histogram(&mut out, "heam_stage_duration_us", &extra, buckets);
+        }
+        out.push_str("# TYPE heam_kernel_execute_total counter\n");
+        for (kernel, v) in &self.kernel_execs {
+            out.push_str(&format!(
+                "heam_kernel_execute_total{{tier=\"{tier}\",kernel=\"{kernel}\"}} {v}\n"
+            ));
+        }
+        out
     }
 }
 
@@ -533,6 +775,44 @@ mod tests {
         assert!(d.latency_percentile_us(1.0) >= 512_000);
     }
 
+    /// Regression at the wrap boundary (satellite: saturating deltas).
+    /// A baseline *ahead* of the current snapshot — a restarted lane
+    /// reusing an old baseline, or counters captured out of order —
+    /// must saturate every scalar to zero instead of wrapping to
+    /// ~2^64, which the old plain `-` did in release builds (and
+    /// panicked in debug).
+    #[test]
+    fn delta_since_saturates_scalars_at_the_wrap_boundary() {
+        let m = Metrics::default();
+        m.record_request(100);
+        let mut base = m.snapshot();
+        // A baseline claiming *more* traffic than the current snapshot,
+        // with counters at the wrap boundary.
+        base.requests = u64::MAX;
+        base.batches = u64::MAX;
+        base.batched_items = u64::MAX;
+        base.execute_us = u64::MAX;
+        base.rejected = u64::MAX;
+        base.preempted = u64::MAX;
+        base.failed = u64::MAX;
+        base.stragglers = u64::MAX;
+        base.deadline_expired = u64::MAX;
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(d.requests, 0);
+        assert_eq!(d.batches, 0);
+        assert_eq!(d.batched_items, 0);
+        assert_eq!(d.execute_us, 0);
+        assert_eq!(d.rejected, 0);
+        assert_eq!(d.preempted, 0);
+        assert_eq!(d.failed, 0);
+        assert_eq!(d.stragglers, 0);
+        assert_eq!(d.deadline_expired, 0);
+        // And the true direction still subtracts exactly.
+        let base = m.snapshot();
+        m.record_request(50);
+        assert_eq!(m.snapshot().delta_since(&base).requests, 1);
+    }
+
     #[test]
     fn queue_gauge_merges_by_sum_and_deltas_by_current_value() {
         let mut a = Metrics::default().snapshot();
@@ -563,5 +843,152 @@ mod tests {
         assert_eq!(merged.rejected, 1);
         assert_eq!(merged.latency_percentile_us(0.25), 1);
         assert!(merged.latency_percentile_us(0.99) >= 512_000);
+    }
+
+    #[test]
+    fn stage_histograms_record_merge_and_delta() {
+        let m = Metrics::default();
+        m.record_stage(Stage::QueueWait, 100); // bucket 6
+        m.record_stage(Stage::QueueWait, 100);
+        m.record_stage(Stage::Execute, 1_000_000); // bucket 19
+        let s = m.snapshot();
+        assert_eq!(s.stage_count(Stage::QueueWait), 2);
+        assert_eq!(s.stage_count(Stage::Execute), 1);
+        assert_eq!(s.stage_count(Stage::Admit), 0);
+        assert_eq!(s.stage_percentile_us(Stage::QueueWait, 0.5), 127);
+        assert!(s.stage_percentile_us(Stage::Execute, 0.99) >= 512_000);
+        // Merge sums per-stage, per-bucket.
+        let other = Metrics::default();
+        other.record_stage(Stage::QueueWait, 100);
+        let merged = Snapshot::zero().merge(&s).merge(&other.snapshot());
+        assert_eq!(merged.stage_count(Stage::QueueWait), 3);
+        assert_eq!(merged.stage_count(Stage::Execute), 1);
+        // Delta isolates a window.
+        let base = m.snapshot();
+        m.record_stage(Stage::Execute, 500);
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(d.stage_count(Stage::Execute), 1);
+        assert_eq!(d.stage_count(Stage::QueueWait), 0);
+    }
+
+    /// Satellite: merge/delta over the per-stage histograms pad
+    /// unequal lengths in *both* dimensions and both directions.
+    #[test]
+    fn stage_histograms_pad_unequal_lengths_both_directions() {
+        let m = Metrics::default();
+        m.record_stage(Stage::Respond, 1_000_000); // stage 8, bucket 19
+        let full = m.snapshot();
+        // A truncated baseline (fewer stages, shorter buckets) must not
+        // shear off the tail in either dimension.
+        let mut short = full.clone();
+        short.stage_buckets.truncate(3);
+        for h in &mut short.stage_buckets {
+            h.truncate(4);
+        }
+        let d = full.delta_since(&short);
+        assert_eq!(d.stage_buckets.len(), N_STAGES);
+        assert_eq!(d.stage_count(Stage::Respond), 1);
+        // The reverse direction spans every stage the baseline knew,
+        // saturated to zero instead of wrapping.
+        let d = short.delta_since(&full);
+        assert_eq!(d.stage_buckets.len(), N_STAGES);
+        assert_eq!(d.stage_count(Stage::Respond), 0);
+        // Merge follows the same padding rule.
+        let merged =
+            Snapshot { stage_buckets: Vec::new(), ..Snapshot::zero() }.merge(&full);
+        assert_eq!(merged.stage_buckets.len(), N_STAGES);
+        assert_eq!(merged.stage_count(Stage::Respond), 1);
+    }
+
+    #[test]
+    fn kernel_exec_counters_merge_by_label_and_delta_saturates() {
+        let m = Metrics::with_observability(
+            1,
+            vec!["lut16".to_string(), "closed_form".to_string()],
+        );
+        let lut = m.kernel_index("lut16").unwrap();
+        m.record_kernel_exec(lut);
+        m.record_kernel_exec(lut);
+        m.record_kernel_exec(m.kernel_index("closed_form").unwrap());
+        m.record_kernel_exec(99); // out of range: ignored, not a panic
+        assert!(m.kernel_index("nope").is_none());
+        let s = m.snapshot();
+        assert_eq!(
+            s.kernel_execs,
+            vec![("lut16".to_string(), 2), ("closed_form".to_string(), 1)]
+        );
+        // Merge matches by label across lanes with different kernel
+        // sets, producing a label-sorted result.
+        let other = Metrics::with_observability(
+            1,
+            vec!["avx2".to_string(), "lut16".to_string()],
+        );
+        other.record_kernel_exec(0);
+        other.record_kernel_exec(1);
+        let merged = Snapshot::zero().merge(&s).merge(&other.snapshot());
+        assert_eq!(
+            merged.kernel_execs,
+            vec![
+                ("avx2".to_string(), 1),
+                ("closed_form".to_string(), 1),
+                ("lut16".to_string(), 3),
+            ]
+        );
+        // Delta matches by label and saturates: a label only the
+        // baseline carries stays visible as an explicit zero.
+        let base = m.snapshot();
+        m.record_kernel_exec(lut);
+        let d = m.snapshot().delta_since(&base);
+        assert_eq!(
+            d.kernel_execs,
+            vec![("closed_form".to_string(), 0), ("lut16".to_string(), 1)]
+        );
+        let d = s.delta_since(&merged);
+        assert_eq!(
+            d.kernel_execs,
+            vec![
+                ("avx2".to_string(), 0),
+                ("closed_form".to_string(), 0),
+                ("lut16".to_string(), 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn render_prometheus_exposes_counters_histograms_and_kernels() {
+        let m = Metrics::with_observability(2, vec!["lut16".to_string()]);
+        m.record_request(100); // bucket 6 → le="127"
+        m.record_batch(1, 500);
+        m.record_rejected(1);
+        m.record_stage(Stage::Execute, 100);
+        m.record_kernel_exec(0);
+        let mut s = m.snapshot();
+        s.queue = 3;
+        let text = s.render_prometheus("exact");
+        assert!(text.contains("heam_requests_total{tier=\"exact\"} 1\n"));
+        assert!(text.contains("heam_rejected_total{tier=\"exact\"} 1\n"));
+        assert!(text.contains("heam_class_rejected_total{tier=\"exact\",class=\"1\"} 1\n"));
+        assert!(text.contains("heam_queue_depth{tier=\"exact\"} 3\n"));
+        // Histogram buckets are cumulative and end at +Inf == _count.
+        assert!(text.contains("heam_latency_us_bucket{tier=\"exact\",le=\"127\"} 1\n"));
+        assert!(text.contains("heam_latency_us_bucket{tier=\"exact\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("heam_latency_us_count{tier=\"exact\"} 1\n"));
+        assert!(text.contains(
+            "heam_stage_duration_us_bucket{tier=\"exact\",stage=\"execute\",le=\"127\"} 1\n"
+        ));
+        assert!(text.contains(
+            "heam_stage_duration_us_count{tier=\"exact\",stage=\"execute\"} 1\n"
+        ));
+        // Empty stages are skipped entirely.
+        assert!(!text.contains("stage=\"admit\""));
+        assert!(
+            text.contains("heam_kernel_execute_total{tier=\"exact\",kernel=\"lut16\"} 1\n")
+        );
+        // Every sample line parses as `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (head, value) = line.rsplit_once(' ').expect("sample has a value");
+            assert!(head.contains("{tier=\"exact\""), "line {line}");
+            assert!(value.parse::<i64>().is_ok(), "line {line}");
+        }
     }
 }

@@ -31,6 +31,14 @@
 //! per-tier circuit breaker ([`fault::HealthBoard`]) the router uses to
 //! quarantine sick variants and degrade to the nearest healthy accuracy
 //! tier (`--fault-plan`, `--deadline-ms`, the `fault trace` ledger).
+//!
+//! The [`telemetry`] module is the observability layer: seeded-sampled
+//! per-request span tracing through lock-free per-worker rings with a
+//! deterministic ledger fingerprint (`--trace-out`, the `trace ledger`
+//! line), per-stage duration histograms + per-kernel execute counters in
+//! [`metrics`] with a Prometheus text exposition, and the `heam
+//! calibrate` aggregation that feeds measured virtual service costs back
+//! into the QoS replay.
 
 pub mod batcher;
 pub mod fault;
@@ -39,6 +47,7 @@ pub mod metrics;
 pub mod qos;
 pub mod registry;
 pub mod server;
+pub mod telemetry;
 
 use anyhow::Result;
 

@@ -59,6 +59,46 @@ pub enum Action {
     ShiftExact,
 }
 
+/// The dominant metric signal behind a decision, checked in the same
+/// order phase 1 classifies a class (p99 edge, then rejections, then
+/// queue gauge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TriggerKind {
+    /// p99 over the class SLO; the value is the observed p99 (µs).
+    P99Breach,
+    /// Requests shed at admission; the value is the window's rejection
+    /// delta summed over the touched tiers.
+    Rejections,
+    /// Queue gauge at or above `queue_high`; the value is the deepest
+    /// touched queue.
+    QueueHigh,
+    /// Recovery edge: p99 under `recover_frac * SLO` with no rejections
+    /// and drained queues; the value is the observed p99 (µs).
+    Clear,
+}
+
+impl TriggerKind {
+    /// Stable short label used in the `qos trace` line and JSON report.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TriggerKind::P99Breach => "p99",
+            TriggerKind::Rejections => "rej",
+            TriggerKind::QueueHigh => "queue",
+            TriggerKind::Clear => "clear",
+        }
+    }
+}
+
+/// The metric delta that tripped a decision — the "why" annotation on
+/// the decision trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Trigger {
+    pub kind: TriggerKind,
+    /// The offending (or clearing) metric's observed value on the
+    /// decision tick, in the kind's native unit.
+    pub value: u64,
+}
+
 /// One entry of the decision trace.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DecisionRecord {
@@ -69,6 +109,10 @@ pub struct DecisionRecord {
     pub action: Action,
     /// The class's split level after the shift, in milli-tiers.
     pub level_milli: u32,
+    /// The metric signal that tripped the decision. Annotation only:
+    /// [`Controller::decision_fingerprint`] deliberately excludes it so
+    /// replay identities from before the annotation stay comparable.
+    pub trigger: Trigger,
 }
 
 /// Deterministic closed-loop controller state.
@@ -126,7 +170,11 @@ impl Controller {
     pub fn tick(&mut self, obs: &[LaneObservation]) -> Option<DecisionRecord> {
         let ctl = self.policy.ctl.clone();
         // Phase 1: classify every class against its own SLO, looking only
-        // at the tiers its split actually touches.
+        // at the tiers its split actually touches. `triggers[c]` records
+        // the dominant signal behind this tick's classification so a
+        // phase-2 decision can say *why* it moved.
+        let mut triggers =
+            vec![Trigger { kind: TriggerKind::Clear, value: 0 }; self.policy.classes.len()];
         for (c, class) in self.policy.classes.iter().enumerate() {
             let (lo, hi) = Self::touched_tiers(self.levels[c]);
             let mut lanes = vec![&obs[lo]];
@@ -142,9 +190,17 @@ impl Controller {
                 && rejected == 0
                 && queue_max <= ctl.queue_low;
             if degraded {
+                triggers[c] = if p99 > class.max_p99_us {
+                    Trigger { kind: TriggerKind::P99Breach, value: p99 }
+                } else if rejected > 0 {
+                    Trigger { kind: TriggerKind::Rejections, value: rejected }
+                } else {
+                    Trigger { kind: TriggerKind::QueueHigh, value: queue_max.max(0) as u64 }
+                };
                 self.degrade_streak[c] += 1;
                 self.recover_streak[c] = 0;
             } else if clear {
+                triggers[c] = Trigger { kind: TriggerKind::Clear, value: p99 };
                 self.recover_streak[c] += 1;
                 self.degrade_streak[c] = 0;
             } else {
@@ -169,6 +225,7 @@ impl Controller {
                 class: c,
                 action: Action::ShiftApprox,
                 level_milli: self.levels[c],
+                trigger: triggers[c],
             })
         } else if let Some(c) = (0..n)
             .filter(|&c| self.recover_streak[c] >= ctl.recover_ticks && self.levels[c] > 0)
@@ -180,6 +237,7 @@ impl Controller {
                 class: c,
                 action: Action::ShiftExact,
                 level_milli: self.levels[c],
+                trigger: triggers[c],
             })
         } else {
             None
@@ -387,6 +445,40 @@ mod tests {
         let d3 = c.tick(&[calm(), calm(), calm()]).unwrap();
         assert_eq!(d3.action, Action::ShiftExact);
         assert_eq!(c.policy().classes[d3.class].name, "a");
+    }
+
+    #[test]
+    fn decisions_carry_the_dominant_trigger() {
+        let ctl = ControllerConfig {
+            degrade_ticks: 1,
+            recover_ticks: 1,
+            step_milli: 1000,
+            ..Default::default()
+        };
+        let fresh = || Controller::new(policy(vec![class("lo", 1, 50_000, 2)], ctl.clone()));
+
+        // p99 breach dominates even with rejections present.
+        let mut c = fresh();
+        let d = c.tick(&[hot(), calm(), calm()]).unwrap();
+        assert_eq!(d.trigger, Trigger { kind: TriggerKind::P99Breach, value: 1_000_000 });
+
+        // Rejections with p99 inside the SLO.
+        let mut c = fresh();
+        let obs = LaneObservation { p99_us: 100, rejected_delta: 7, ..Default::default() };
+        let d = c.tick(&[obs, calm(), calm()]).unwrap();
+        assert_eq!(d.trigger, Trigger { kind: TriggerKind::Rejections, value: 7 });
+
+        // Queue gauge alone over queue_high.
+        let mut c = fresh();
+        let q = c.policy().ctl.queue_high;
+        let obs = LaneObservation { p99_us: 100, queue: q, ..Default::default() };
+        let d = c.tick(&[obs, calm(), calm()]).unwrap();
+        assert_eq!(d.trigger, Trigger { kind: TriggerKind::QueueHigh, value: q as u64 });
+
+        // Recovery decisions carry the clearing p99.
+        let d = c.tick(&[calm(), calm(), calm()]).unwrap();
+        assert_eq!(d.action, Action::ShiftExact);
+        assert_eq!(d.trigger, Trigger { kind: TriggerKind::Clear, value: 100 });
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub mod policy;
 pub mod replay;
 pub mod router;
 
-pub use controller::{Action, Controller, DecisionRecord, LaneObservation};
+pub use controller::{Action, Controller, DecisionRecord, LaneObservation, Trigger, TriggerKind};
 pub use family::{Variant, VariantFamily};
 pub use policy::{parse_classes, ControllerConfig, QosPolicy, RequestClass};
 pub use replay::{FaultReport, QosReport, QosRunConfig, SimConfig};

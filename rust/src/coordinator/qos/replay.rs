@@ -32,7 +32,7 @@ use super::super::fault::{FaultPlan, FaultSpec};
 use super::super::loadgen::{class_trace_fingerprint, generate_class_trace, image_for, BurstConfig};
 use super::super::metrics::{Metrics, Snapshot};
 use super::super::server::{ServeError, Server, Submission};
-use super::controller::{Action, DecisionRecord, LaneObservation};
+use super::controller::{Action, DecisionRecord, LaneObservation, TriggerKind};
 use super::router::QosRouter;
 
 /// The deterministic lane model.
@@ -49,6 +49,16 @@ pub struct SimConfig {
     /// Virtual per-lane queue bound; backlog beyond it is shed and
     /// surfaces as the controller's rejection signal.
     pub queue_depth: u64,
+    /// Measured per-tier service costs (µs), typically from a
+    /// `heam calibrate` run ([`Calibration::tier_costs`]). When set,
+    /// these replace the geometric `service_us / speedup^t` model for
+    /// the tiers they cover; any remaining tiers extend geometrically
+    /// from the last measured one. Still deterministic — the costs are
+    /// a fixed input, not a clock read.
+    ///
+    /// [`Calibration::tier_costs`]:
+    ///     crate::coordinator::telemetry::Calibration::tier_costs
+    pub costs_us: Option<Vec<u64>>,
 }
 
 impl Default for SimConfig {
@@ -58,6 +68,7 @@ impl Default for SimConfig {
             speedup_milli: 1500,
             workers: 2,
             queue_depth: 512,
+            costs_us: None,
         }
     }
 }
@@ -65,9 +76,16 @@ impl Default for SimConfig {
 impl SimConfig {
     /// Virtual service cost per family tier.
     fn costs(&self, tiers: usize) -> Vec<u64> {
-        let mut costs = Vec::with_capacity(tiers);
-        let mut c = self.service_us.max(1);
-        for _ in 0..tiers {
+        let mut costs: Vec<u64> = match &self.costs_us {
+            Some(measured) => measured.iter().take(tiers).map(|&c| c.max(1)).collect(),
+            None => Vec::with_capacity(tiers),
+        };
+        let mut c = match costs.last() {
+            // Continue the geometric decay from the last measured tier.
+            Some(&last) => (last * 1000 / self.speedup_milli as u64).max(1),
+            None => self.service_us.max(1),
+        };
+        while costs.len() < tiers {
             costs.push(c);
             c = (c * 1000 / self.speedup_milli as u64).max(1);
         }
@@ -242,14 +260,25 @@ impl QosReport {
             .zip(&self.levels_final)
             .map(|(c, l)| format!("{}={l}", c.name))
             .collect();
+        // Per-kind tally of the decision triggers — deterministic (a
+        // pure function of the decision trace) and the human-facing
+        // "why did the controller move" annotation.
+        let count = |k: TriggerKind| {
+            self.decisions.iter().filter(|d| d.trigger.kind == k).count()
+        };
         format!(
-            "qos trace {:#018x} decisions {:#018x} ticks {}+{} burst-shift [{}] final [{}]",
+            "qos trace {:#018x} decisions {:#018x} ticks {}+{} burst-shift [{}] final [{}] \
+             triggers [p99={}, rej={}, queue={}, clear={}]",
             self.trace_fingerprint,
             self.decision_fingerprint,
             self.event_ticks,
             self.drain_ticks,
             shifts.join(", "),
-            finals.join(", ")
+            finals.join(", "),
+            count(TriggerKind::P99Breach),
+            count(TriggerKind::Rejections),
+            count(TriggerKind::QueueHigh),
+            count(TriggerKind::Clear),
         )
     }
 
@@ -452,6 +481,8 @@ impl QosReport {
                         ),
                     ),
                     ("level_milli", Value::Int(d.level_milli as i64)),
+                    ("trigger", Value::Str(d.trigger.kind.label().to_string())),
+                    ("trigger_value", Value::Int(d.trigger.value as i64)),
                 ])
             })
             .collect();
@@ -849,4 +880,30 @@ pub fn run(server: &Server, router: &QosRouter, cfg: &QosRunConfig) -> Result<Qo
         fault,
         wall_s,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_costs_override_the_geometric_model() {
+        // Default: pure geometric decay from service_us.
+        let sim = SimConfig::default();
+        assert_eq!(sim.costs(2), vec![400, 266]);
+        // Measured tiers replace the model verbatim (clamped >= 1)...
+        let sim = SimConfig { costs_us: Some(vec![900, 0]), ..Default::default() };
+        assert_eq!(sim.costs(2), vec![900, 1]);
+        // ...and uncovered tiers extend geometrically from the last
+        // measured one, not from service_us.
+        let sim = SimConfig {
+            costs_us: Some(vec![600]),
+            speedup_milli: 2000,
+            ..Default::default()
+        };
+        assert_eq!(sim.costs(3), vec![600, 300, 150]);
+        // Extra measured tiers beyond the family are ignored.
+        let sim = SimConfig { costs_us: Some(vec![5, 4, 3]), ..Default::default() };
+        assert_eq!(sim.costs(2), vec![5, 4]);
+    }
 }

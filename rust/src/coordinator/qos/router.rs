@@ -34,8 +34,11 @@ use super::policy::QosPolicy;
 
 struct RouterState {
     ctl: Controller,
-    /// Per-class WRR credit accumulator (milli-tier units).
-    acc: Vec<u32>,
+    /// Per-class WRR credit accumulator (milli-tier units). u64 like
+    /// every other long-lived counter on the serving path: the value
+    /// itself stays below 1000, but the width rules out any wrap
+    /// arithmetic if the invariant ever changes.
+    acc: Vec<u64>,
     /// Per-tier circuit breakers: an Open tier is quarantined and
     /// submissions resolve to the nearest healthy tier instead.
     health: HealthBoard,
@@ -96,7 +99,7 @@ impl QosRouter {
         if frac == 0 {
             return lo;
         }
-        st.acc[class] += frac;
+        st.acc[class] += frac as u64;
         if st.acc[class] >= 1000 {
             st.acc[class] -= 1000;
             lo + 1

@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::mult::Lut;
-use crate::nn::gemm::{PreparedGraph, Scratch};
+use crate::nn::gemm::{NodeTiming, PreparedGraph, Scratch};
 use crate::nn::graph::{Graph, ModelHandle};
 use crate::nn::multiplier::Multiplier;
 use crate::nn::ops::argmax;
@@ -46,6 +46,7 @@ use super::batcher::{Admit, ClassQueues, DrrPicker, LaneShare};
 use super::fault::{FaultInjector, FaultKind};
 use super::metrics::{Metrics, Snapshot};
 use super::registry::ModelRegistry;
+use super::telemetry::{Span, Stage, TraceContext, Tracer, NO_LABEL};
 
 /// Typed post-admission failures. Every admitted request is answered —
 /// the drain guarantee — and when the answer is not a prediction it is
@@ -117,6 +118,14 @@ pub struct ServeConfig {
     /// panics / stragglers / poisoned outputs around batch execution and
     /// transient errors at admission. `None` in production.
     pub fault: Option<Arc<FaultInjector>>,
+    /// Optional span tracer (`--trace-out`). `None` — the default —
+    /// compiles the instrumentation down to one branch per stage: no
+    /// sampling decision, no clock reads, no ring writes. When set,
+    /// every admission draws exactly one seeded sampling decision and
+    /// sampled requests carry a [`TraceContext`] through the whole
+    /// path. Build it with `2 + workers` rings (admission, scheduler,
+    /// one per worker).
+    pub trace: Option<Arc<Tracer>>,
 }
 
 impl Default for ServeConfig {
@@ -129,6 +138,7 @@ impl Default for ServeConfig {
             deadline: None,
             straggle_threshold_us: 0,
             fault: None,
+            trace: None,
         }
     }
 }
@@ -173,6 +183,10 @@ struct Request {
     class: usize,
     /// Absolute expiry (admission + [`ServeConfig::deadline`]), if any.
     deadline: Option<Instant>,
+    /// The sampling decision drawn at admission: `Some` on the 1 in
+    /// `sample_per` traced requests, `None` otherwise. Two words and
+    /// `Copy` — carrying it costs nothing on the unsampled path.
+    trace: Option<TraceContext>,
 }
 
 /// Pure batch-window arithmetic, factored out of the scheduler loop so a
@@ -279,6 +293,50 @@ impl Backend {
             }
         }
     }
+
+    /// [`Backend::execute`] capturing per-node timings for the requests
+    /// flagged in `profile` (parallel to the batch). `sink` receives
+    /// `(request index, timings)` per profiled request. Only the native
+    /// backend can see inside its plan — the PJRT artifact is opaque and
+    /// falls back to the plain path. Results are byte-identical either
+    /// way (`run_profiled` only adds clock reads around timed nodes).
+    fn execute_traced(
+        &mut self,
+        images: &[f32],
+        count: usize,
+        profile: &[bool],
+        sink: &mut Vec<(usize, Vec<NodeTiming>)>,
+    ) -> Result<Vec<usize>> {
+        if !matches!(self, Backend::Native { .. }) {
+            return self.execute(images, count);
+        }
+        match self {
+            Backend::Native { prepared, image_dims, scratch } => {
+                let (c, h, w) = *image_dims;
+                let sz = c * h * w;
+                let mut preds = Vec::with_capacity(count);
+                for i in 0..count {
+                    let img = &images[i * sz..(i + 1) * sz];
+                    let pred = if profile.get(i).copied().unwrap_or(false) {
+                        let mut timings = Vec::new();
+                        let (pred, _) = crate::nn::lenet::classify_prepared_profiled(
+                            prepared, img, *image_dims, scratch, &mut timings,
+                        )?;
+                        sink.push((i, timings));
+                        pred
+                    } else {
+                        crate::nn::lenet::classify_prepared(
+                            prepared, img, *image_dims, scratch,
+                        )?
+                        .0
+                    };
+                    preds.push(pred);
+                }
+                Ok(preds)
+            }
+            Backend::Pjrt { .. } => unreachable!("handled by the early return"),
+        }
+    }
 }
 
 /// Backend constructor, run inside each worker thread once per model.
@@ -289,6 +347,27 @@ struct LaneSpec {
     name: String,
     image_size: usize,
     factory: BackendFactory,
+    /// `(node index, dispatched kernel label)` for every kernel-bearing
+    /// node of the lane's prepared plan — the static node → kernel map
+    /// the observability layer resolves span labels and per-kernel
+    /// execute counters against, built once at lane construction.
+    /// Empty when the backend is opaque (PJRT artifact, per-worker
+    /// factory pools): those lanes get no per-kernel observability.
+    kernel_nodes: Vec<(usize, String)>,
+}
+
+/// Per-lane observability tables resolved once at gateway spawn — the
+/// worker hot path only does indexed lookups and atomic adds.
+struct LaneObs {
+    /// Interned lane name (the `Execute` span label; ties a batch span
+    /// to its serving tier for calibration). [`NO_LABEL`] untraced.
+    exec_label: u32,
+    /// Prepared-node index → interned kernel label ([`NO_LABEL`] for
+    /// pass-through nodes or when tracing is off).
+    node_label: Vec<u32>,
+    /// Metrics counter slot per kernel-bearing node (one entry per
+    /// node occurrence — a batch of `n` bumps each by `n`).
+    kernel_slots: Vec<usize>,
 }
 
 /// Client-visible per-lane state.
@@ -391,6 +470,9 @@ pub struct Server {
     /// Admission-side fault injector (transient registry errors); the
     /// same injector's execution schedule is drawn by the workers.
     fault: Option<Arc<FaultInjector>>,
+    /// Span tracer shared with the scheduler and workers (`None` — the
+    /// default — keeps admission to a single untaken branch).
+    trace: Option<Arc<Tracer>>,
     threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
@@ -435,6 +517,7 @@ impl Server {
                         image_dims: (c, h, w),
                     })
                 }),
+                kernel_nodes: Vec::new(),
             }],
             &cfg,
             shares,
@@ -488,6 +571,7 @@ impl Server {
                         scratch: Scratch::default(),
                     })
                 }),
+                kernel_nodes: Vec::new(),
             }],
             &config,
             shares,
@@ -529,6 +613,7 @@ impl Server {
                     image_dims,
                     ..
                 } = handle;
+                let kernel_nodes = prepared.kernel_nodes();
                 LaneSpec {
                     name,
                     image_size,
@@ -539,6 +624,7 @@ impl Server {
                             scratch: Scratch::default(),
                         })
                     }),
+                    kernel_nodes,
                 }
             })
             .collect();
@@ -590,14 +676,54 @@ impl Server {
             if by_name.insert(spec.name.clone(), idx).is_some() {
                 anyhow::bail!("duplicate model name '{}'", spec.name);
             }
+            // Distinct dispatched kernel labels, order of first
+            // appearance: the lane's fixed per-kernel counter set.
+            let mut kernel_names: Vec<String> = Vec::new();
+            for (_, label) in &spec.kernel_nodes {
+                if !kernel_names.contains(label) {
+                    kernel_names.push(label.clone());
+                }
+            }
             lanes.push(Lane {
                 name: spec.name.clone(),
                 image_size: spec.image_size,
-                metrics: Arc::new(Metrics::with_classes(n_classes)),
+                metrics: Arc::new(Metrics::with_observability(n_classes, kernel_names)),
                 depth: Arc::new(AtomicI64::new(0)),
                 queue_depth,
             });
         }
+
+        // Resolve the per-lane observability tables once: intern lane
+        // names and kernel labels (when tracing) and map each
+        // kernel-bearing node to its metrics counter slot. Workers only
+        // index into these.
+        let trace = config.trace.clone();
+        let obs: Arc<Vec<LaneObs>> = Arc::new(
+            specs
+                .iter()
+                .zip(&lanes)
+                .map(|(spec, lane)| {
+                    let exec_label = trace
+                        .as_ref()
+                        .map(|t| t.intern(&spec.name))
+                        .unwrap_or(NO_LABEL);
+                    let n_nodes =
+                        spec.kernel_nodes.iter().map(|(i, _)| i + 1).max().unwrap_or(0);
+                    let mut node_label = vec![NO_LABEL; n_nodes];
+                    if let Some(t) = &trace {
+                        for (i, label) in &spec.kernel_nodes {
+                            node_label[*i] = t.intern(label);
+                        }
+                    }
+                    let kernel_slots = spec
+                        .kernel_nodes
+                        .iter()
+                        .filter_map(|(_, label)| lane.metrics.kernel_index(label))
+                        .collect();
+                    LaneObs { exec_label, node_label, kernel_slots }
+                })
+                .collect(),
+        );
 
         let sched = Arc::new(Sched {
             state: Mutex::new(SchedState {
@@ -625,6 +751,7 @@ impl Server {
             let metrics = lane_metrics.clone();
             let sweep_deadlines = config.deadline.is_some();
             let n_lanes = specs.len();
+            let trace = trace.clone();
             threads.push(std::thread::spawn(move || {
                 let mut drr = DrrPicker::new(n_lanes, max_batch);
                 loop {
@@ -673,7 +800,15 @@ impl Server {
                                 let batch = st.queues[lane].pick(max_batch);
                                 drr.charge(lane, batch.len());
                                 depths[lane].fetch_sub(batch.len() as i64, Ordering::Relaxed);
-                                break Some((lane, batch));
+                                // Selection work this iteration (sweep +
+                                // ripeness + DRR + pull) — the `pick`
+                                // stage. One clock read, traced runs only.
+                                let pick_us = if trace.is_some() {
+                                    now.elapsed().as_micros() as u64
+                                } else {
+                                    0
+                                };
+                                break Some((lane, batch, pick_us));
                             }
                             if st.queues.iter().all(|q| q.is_empty()) {
                                 if !st.open {
@@ -709,7 +844,51 @@ impl Server {
                         }
                     };
                     match picked {
-                        Some((lane, batch)) => {
+                        Some((lane, batch, pick_us)) => {
+                            // Scheduler-side spans, recorded outside the
+                            // state lock: per traced request the class-
+                            // queue wait (admission → pick), and per
+                            // batch — carried by its first traced
+                            // request — the pick itself and the job-pipe
+                            // dispatch (whose duration is the
+                            // backpressure wait on a saturated pool).
+                            let carrier = batch.iter().find_map(|r| r.trace);
+                            let mut dispatch_start = 0u64;
+                            if let Some(t) = &trace {
+                                let now_us = t.now_us();
+                                for r in &batch {
+                                    let Some(ctx) = r.trace else { continue };
+                                    let wait_us =
+                                        r.submitted.elapsed().as_micros() as u64;
+                                    t.record(
+                                        Tracer::RING_SCHED,
+                                        Span {
+                                            req: ctx.id,
+                                            class: ctx.class,
+                                            stage: Stage::QueueWait,
+                                            label: NO_LABEL,
+                                            start_us: now_us.saturating_sub(wait_us),
+                                            dur_us: wait_us,
+                                        },
+                                    );
+                                    metrics[lane].record_stage(Stage::QueueWait, wait_us);
+                                }
+                                if let Some(ctx) = carrier {
+                                    t.record(
+                                        Tracer::RING_SCHED,
+                                        Span {
+                                            req: ctx.id,
+                                            class: ctx.class,
+                                            stage: Stage::Pick,
+                                            label: NO_LABEL,
+                                            start_us: now_us.saturating_sub(pick_us),
+                                            dur_us: pick_us,
+                                        },
+                                    );
+                                    metrics[lane].record_stage(Stage::Pick, pick_us);
+                                }
+                                dispatch_start = t.now_us();
+                            }
                             // Sent outside the lock: a saturated pool
                             // must backpressure the scheduler, never
                             // block submissions on the state mutex.
@@ -738,6 +917,20 @@ impl Server {
                                     }
                                 }
                                 break;
+                            } else if let (Some(t), Some(ctx)) = (&trace, carrier) {
+                                let dur = t.now_us().saturating_sub(dispatch_start);
+                                t.record(
+                                    Tracer::RING_SCHED,
+                                    Span {
+                                        req: ctx.id,
+                                        class: ctx.class,
+                                        stage: Stage::Dispatch,
+                                        label: NO_LABEL,
+                                        start_us: dispatch_start,
+                                        dur_us: dur,
+                                    },
+                                );
+                                metrics[lane].record_stage(Stage::Dispatch, dur);
                             }
                         }
                         None => break,
@@ -756,14 +949,17 @@ impl Server {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let factories: Arc<Vec<BackendFactory>> =
             Arc::new(specs.iter().map(|s| s.factory.clone()).collect());
-        for _ in 0..n_workers {
+        for w in 0..n_workers {
             let ready = ready_tx.clone();
             let jobs = job_rx.clone();
             let factories = factories.clone();
             let metrics = lane_metrics.clone();
             let fault = config.fault.clone();
             let straggle_threshold_us = config.straggle_threshold_us;
+            let trace = trace.clone();
+            let obs = obs.clone();
             threads.push(std::thread::spawn(move || {
+                let ring = Tracer::ring_worker(w);
                 let build_all = |factories: &[BackendFactory]| -> Result<Vec<Backend>> {
                     factories.iter().map(|make| make()).collect()
                 };
@@ -783,6 +979,9 @@ impl Server {
                         Err(_) => break,
                     };
                     let m = &metrics[lane];
+                    // Assemble stage: deadline re-check + image flatten.
+                    // One clock read per batch, traced runs only.
+                    let asm_start = trace.as_ref().map(|t| t.now_us()).unwrap_or(0);
                     // Last-chance deadline check: a request can expire
                     // between the scheduler's sweep and execution.
                     let now = Instant::now();
@@ -801,16 +1000,41 @@ impl Server {
                         continue;
                     }
                     let batch = live;
-                    let backend = &mut backends[lane];
                     let count = batch.len();
-                    let image_size = backend.image_size();
+                    let image_size = backends[lane].image_size();
                     let mut flat = Vec::with_capacity(count * image_size);
                     for r in &batch {
                         flat.extend_from_slice(&r.image);
                     }
+                    // Batch-level spans ride on the first traced
+                    // request; per-layer timings are captured per traced
+                    // request through the profiled run.
+                    let carrier = batch.iter().find_map(|r| r.trace);
+                    if let (Some(t), Some(ctx)) = (&trace, carrier) {
+                        let dur = t.now_us().saturating_sub(asm_start);
+                        t.record(
+                            ring,
+                            Span {
+                                req: ctx.id,
+                                class: ctx.class,
+                                stage: Stage::Assemble,
+                                label: NO_LABEL,
+                                start_us: asm_start,
+                                dur_us: dur,
+                            },
+                        );
+                        m.record_stage(Stage::Assemble, dur);
+                    }
+                    let profile: Vec<bool> = if carrier.is_some() {
+                        batch.iter().map(|r| r.trace.is_some()).collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let mut layer_timings: Vec<(usize, Vec<NodeTiming>)> = Vec::new();
                     let injected = fault.as_ref().and_then(|f| f.next_exec());
                     let straggle_us =
                         fault.as_ref().map(|f| f.plan().spec.straggle_us).unwrap_or(0);
+                    let exec_start = trace.as_ref().map(|t| t.now_us()).unwrap_or(0);
                     let t0 = Instant::now();
                     let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>> {
                         match injected {
@@ -827,11 +1051,69 @@ impl Server {
                             }
                             None => {}
                         }
-                        backend.execute(&flat, count)
+                        if profile.iter().any(|&p| p) {
+                            backends[lane].execute_traced(
+                                &flat,
+                                count,
+                                &profile,
+                                &mut layer_timings,
+                            )
+                        } else {
+                            backends[lane].execute(&flat, count)
+                        }
                     }));
                     let batch_us = Instant::now().saturating_duration_since(t0).as_micros()
                         as u64;
                     m.record_batch(count, batch_us);
+                    m.record_stage(Stage::Execute, batch_us);
+                    // Always-on per-kernel execute counters: each
+                    // kernel-bearing node ran once per batched request —
+                    // a handful of indexed atomic adds, no allocation.
+                    for &slot in &obs[lane].kernel_slots {
+                        m.record_kernel_execs(slot, count as u64);
+                    }
+                    if let (Some(t), Some(ctx)) = (&trace, carrier) {
+                        t.record(
+                            ring,
+                            Span {
+                                req: ctx.id,
+                                class: ctx.class,
+                                stage: Stage::Execute,
+                                label: obs[lane].exec_label,
+                                start_us: exec_start,
+                                dur_us: batch_us,
+                            },
+                        );
+                        for (i, timings) in &layer_timings {
+                            let Some(ictx) = batch[*i].trace else { continue };
+                            for nt in timings {
+                                let (stage, label) = if nt.is_quantize {
+                                    (Stage::Requant, NO_LABEL)
+                                } else {
+                                    (
+                                        Stage::LayerExecute,
+                                        obs[lane]
+                                            .node_label
+                                            .get(nt.node)
+                                            .copied()
+                                            .unwrap_or(NO_LABEL),
+                                    )
+                                };
+                                t.record(
+                                    ring,
+                                    Span {
+                                        req: ictx.id,
+                                        class: ictx.class,
+                                        stage,
+                                        label,
+                                        start_us: exec_start,
+                                        dur_us: nt.dur_us,
+                                    },
+                                );
+                                m.record_stage(stage, nt.dur_us);
+                            }
+                        }
+                    }
                     if straggle_threshold_us > 0 && batch_us >= straggle_threshold_us {
                         m.record_straggler();
                     }
@@ -846,7 +1128,28 @@ impl Server {
                                             .as_micros()
                                             as u64;
                                         m.record_request(latency_us);
+                                        let resp_start = match (&trace, req.trace) {
+                                            (Some(t), Some(_)) => Some(t.now_us()),
+                                            _ => None,
+                                        };
                                         let _ = req.resp.send(Ok((pred, latency_us)));
+                                        if let (Some(t), Some(ctx), Some(s0)) =
+                                            (&trace, req.trace, resp_start)
+                                        {
+                                            let dur = t.now_us().saturating_sub(s0);
+                                            t.record(
+                                                ring,
+                                                Span {
+                                                    req: ctx.id,
+                                                    class: ctx.class,
+                                                    stage: Stage::Respond,
+                                                    label: NO_LABEL,
+                                                    start_us: s0,
+                                                    dur_us: dur,
+                                                },
+                                            );
+                                            m.record_stage(Stage::Respond, dur);
+                                        }
                                     }
                                 }
                                 Err(e) => {
@@ -918,6 +1221,7 @@ impl Server {
             by_name,
             deadline: config.deadline,
             fault: config.fault.clone(),
+            trace,
             threads: Mutex::new(threads),
         })
     }
@@ -989,6 +1293,14 @@ impl Server {
                 return Err(anyhow::Error::new(ServeError::Transient));
             }
         }
+        // The single per-request tracing check: one sampling decision
+        // per admission attempt (dense ids keep the sampled *set* a
+        // pure function of the attempt count — worker-count
+        // independent). Untraced path: this branch and nothing else.
+        let (trace_ctx, admit_start) = match &self.trace {
+            Some(t) => (t.sample(class as u32), t.now_us()),
+            None => (None, 0),
+        };
         let (resp_tx, resp_rx) = mpsc::channel();
         let now = Instant::now();
         let request = Request {
@@ -997,6 +1309,7 @@ impl Server {
             submitted: now,
             class,
             deadline: self.deadline.and_then(|d| now.checked_add(d)),
+            trace: trace_ctx,
         };
         let outcome = {
             let mut st = self.sched.state.lock().unwrap();
@@ -1011,6 +1324,23 @@ impl Server {
             }
             outcome
         };
+        // The admit span covers queue admission (every outcome — a shed
+        // or preempting arrival is still an admission decision).
+        if let (Some(t), Some(ctx)) = (&self.trace, trace_ctx) {
+            let dur = t.now_us().saturating_sub(admit_start);
+            t.record(
+                Tracer::RING_ADMIT,
+                Span {
+                    req: ctx.id,
+                    class: ctx.class,
+                    stage: Stage::Admit,
+                    label: NO_LABEL,
+                    start_us: admit_start,
+                    dur_us: dur,
+                },
+            );
+            lane.metrics.record_stage(Stage::Admit, dur);
+        }
         match outcome {
             Admit::Admitted => {
                 self.sched.work.notify_one();
@@ -1658,6 +1988,95 @@ mod tests {
         }
         assert!(expired > 0, "a 5ms deadline under a 500ms batch window must expire");
         assert_eq!(server.metrics_snapshot().deadline_expired as usize, expired);
+        server.shutdown();
+    }
+
+    /// Tentpole: a fully sampled gateway records a span for every
+    /// instrumented stage, labels execute/layer spans with the lane and
+    /// dispatched kernel, keeps exact drop accounting, and feeds the
+    /// always-on per-kernel counters and per-stage histograms.
+    #[test]
+    fn traced_gateway_records_spans_and_kernel_counters() {
+        use super::super::telemetry::TelemetryConfig;
+        let bundle = lenet::random_bundle(1, 28, 42);
+        let graph = lenet::load_graph(&bundle).unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.register("exact", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+        let tracer = Arc::new(
+            Tracer::new(
+                &TelemetryConfig { seed: 3, sample_per: 1, ring_capacity: 4096 },
+                2 + 1,
+            )
+            .unwrap(),
+        );
+        let server = Server::start_gateway(
+            reg,
+            ServeConfig {
+                max_batch: 4,
+                max_wait_us: 200,
+                workers: 1,
+                trace: Some(tracer.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for i in 0..6 {
+            server
+                .classify_model("exact", vec![(i as f32) / 6.0; 28 * 28])
+                .unwrap();
+        }
+        server.shutdown();
+        let ledger = tracer.ledger();
+        assert_eq!(ledger.attempts, 6);
+        assert_eq!(ledger.sampled.len(), 6, "sample_per 1 traces everything");
+        assert_eq!(ledger.dropped, 0);
+        let spans = tracer.drain();
+        assert_eq!(ledger.recorded as usize, spans.len(), "drain must be exact");
+        for st in super::super::telemetry::STAGES {
+            assert!(
+                spans.iter().any(|s| s.stage == st),
+                "no span recorded for stage {st:?}"
+            );
+        }
+        // Execute spans carry the lane name, layer spans the dispatched
+        // kernel label (the exact multiplier dispatches `exact`).
+        let labels = tracer.labels();
+        let exec = spans.iter().find(|s| s.stage == Stage::Execute).unwrap();
+        assert_eq!(labels[exec.label as usize], "exact");
+        let layer = spans.iter().find(|s| s.stage == Stage::LayerExecute).unwrap();
+        assert_eq!(labels[layer.label as usize], "exact");
+        // Always-on observability, independent of span drain: 5 kernel
+        // nodes (conv1/conv2/fc1/fc2/fc3) × 6 requests, and per-stage
+        // histograms populated.
+        let m = server.model_metrics("exact").unwrap();
+        assert_eq!(m.kernel_execs, vec![("exact".to_string(), 30)]);
+        assert!(m.stage_count(Stage::Execute) >= 1);
+        assert_eq!(m.stage_count(Stage::QueueWait), 6);
+        assert_eq!(m.stage_count(Stage::Respond), 6);
+    }
+
+    /// Tracing disabled (the default) must leave zero telemetry residue:
+    /// no stage histogram entries beyond the always-measured execute
+    /// stage, which costs no extra clock reads.
+    #[test]
+    fn untraced_gateway_records_only_the_free_stages() {
+        let server = native_server(4, 200);
+        server.classify(vec![0.5; 28 * 28]).unwrap();
+        let m = server.metrics_snapshot();
+        // Execute reuses the batch timing the gateway always measures.
+        assert!(m.stage_count(Stage::Execute) >= 1);
+        for st in [
+            Stage::Admit,
+            Stage::QueueWait,
+            Stage::Pick,
+            Stage::Assemble,
+            Stage::Dispatch,
+            Stage::LayerExecute,
+            Stage::Requant,
+            Stage::Respond,
+        ] {
+            assert_eq!(m.stage_count(st), 0, "stage {st:?} recorded without a tracer");
+        }
         server.shutdown();
     }
 }

@@ -1,0 +1,256 @@
+//! The calibration artifact: measured per-stage / per-kernel / per-tier
+//! timings aggregated from drained spans.
+//!
+//! `heam calibrate` replays a fixed seeded workload through a fully
+//! sampled gateway, drains the span rings, and aggregates them here into
+//! a JSON artifact (`format: heam-calibration-v1`). The per-tier mean
+//! service costs are what ROADMAP item 5 wants: `heam loadgen --classes
+//! --calibration <file>` loads them into
+//! [`SimConfig`](crate::coordinator::qos::SimConfig) as measured virtual
+//! service costs, replacing the assumed geometric-decay model, so
+//! replayed controller decisions track the actual machine.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+use super::{Span, Stage};
+
+/// Aggregated timing of one group (a stage, a kernel label, a tier).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CostRow {
+    pub name: String,
+    pub count: u64,
+    pub mean_us: u64,
+    pub max_us: u64,
+}
+
+fn aggregate(groups: BTreeMap<String, (u64, u64, u64)>) -> Vec<CostRow> {
+    groups
+        .into_iter()
+        .map(|(name, (count, total, max))| CostRow {
+            name,
+            count,
+            // Round-to-nearest keeps sub-µs means from collapsing to 0.
+            mean_us: if count == 0 { 0 } else { (total + count / 2) / count },
+            max_us: max,
+        })
+        .collect()
+}
+
+/// The calibration artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Calibration {
+    pub seed: u64,
+    pub requests: u64,
+    /// Per-[`Stage`] aggregate over every span of that stage.
+    pub stages: Vec<CostRow>,
+    /// Per-kernel-label aggregate over `LayerExecute` spans.
+    pub kernels: Vec<CostRow>,
+    /// Per-family-tier aggregate over `Execute` spans (name = lane
+    /// name, in family accuracy order; mean is per *request*, i.e. the
+    /// batch duration split across its traced carrier).
+    pub tiers: Vec<CostRow>,
+}
+
+impl Calibration {
+    /// Aggregate drained spans. `tier_names` gives the family lanes in
+    /// accuracy order; `Execute` spans are matched to tiers by their
+    /// interned lane-name label.
+    pub fn from_spans(
+        seed: u64,
+        requests: u64,
+        spans: &[Span],
+        labels: &[String],
+        tier_names: &[String],
+    ) -> Self {
+        let mut stages: BTreeMap<String, (u64, u64, u64)> = BTreeMap::new();
+        let mut kernels: BTreeMap<String, (u64, u64, u64)> = BTreeMap::new();
+        let mut tiers: BTreeMap<String, (u64, u64, u64)> = BTreeMap::new();
+        let mut add = |m: &mut BTreeMap<String, (u64, u64, u64)>, key: &str, dur: u64| {
+            let e = m.entry(key.to_string()).or_insert((0, 0, 0));
+            e.0 += 1;
+            e.1 += dur;
+            e.2 = e.2.max(dur);
+        };
+        for span in spans {
+            add(&mut stages, span.stage.label(), span.dur_us);
+            let label = labels.get(span.label as usize).map(String::as_str);
+            match span.stage {
+                Stage::LayerExecute => {
+                    if let Some(l) = label {
+                        add(&mut kernels, l, span.dur_us);
+                    }
+                }
+                Stage::Execute => {
+                    if let Some(l) = label {
+                        if tier_names.iter().any(|n| n == l) {
+                            add(&mut tiers, l, span.dur_us);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut tier_rows = aggregate(tiers);
+        // Family accuracy order, not BTreeMap name order — the replay
+        // consumes this positionally as tier 0, 1, ….
+        tier_rows.sort_by_key(|r| {
+            tier_names.iter().position(|n| n == &r.name).unwrap_or(usize::MAX)
+        });
+        Self {
+            seed,
+            requests,
+            stages: aggregate(stages),
+            kernels: aggregate(kernels),
+            tiers: tier_rows,
+        }
+    }
+
+    /// Measured per-tier virtual service costs for the replay's lane
+    /// model, one entry per name in `family` (in order). `None` when
+    /// any family tier is missing from the artifact — a partial
+    /// calibration must not silently zero a tier.
+    pub fn tier_costs(&self, family: &[String]) -> Option<Vec<u64>> {
+        family
+            .iter()
+            .map(|name| {
+                self.tiers
+                    .iter()
+                    .find(|r| &r.name == name)
+                    .map(|r| r.mean_us.max(1))
+            })
+            .collect()
+    }
+
+    fn rows_json(rows: &[CostRow], key: &'static str) -> Value {
+        Value::Arr(
+            rows.iter()
+                .map(|r| {
+                    Value::obj(vec![
+                        (key, Value::Str(r.name.clone())),
+                        ("count", Value::Int(r.count as i64)),
+                        ("mean_us", Value::Int(r.mean_us as i64)),
+                        ("max_us", Value::Int(r.max_us as i64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("format", Value::Str("heam-calibration-v1".to_string())),
+            ("seed", Value::Int(self.seed as i64)),
+            ("requests", Value::Int(self.requests as i64)),
+            ("stages", Self::rows_json(&self.stages, "stage")),
+            ("kernels", Self::rows_json(&self.kernels, "kernel")),
+            ("tiers", Self::rows_json(&self.tiers, "tier")),
+        ])
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json())
+            .with_context(|| format!("writing calibration '{path}'"))
+    }
+
+    fn rows_from(v: &Value, key: &str) -> Result<Vec<CostRow>> {
+        v.as_arr()
+            .context("calibration rows must be an array")?
+            .iter()
+            .map(|r| {
+                Ok(CostRow {
+                    name: r
+                        .require(key)?
+                        .as_str()
+                        .context("calibration row name must be a string")?
+                        .to_string(),
+                    count: r.require_usize("count")? as u64,
+                    mean_us: r.require_usize("mean_us")? as u64,
+                    max_us: r.require_usize("max_us")? as u64,
+                })
+            })
+            .collect()
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration '{path}'"))?;
+        let v = json::parse(&text)?;
+        let format = v.require("format")?.as_str().unwrap_or("");
+        anyhow::ensure!(
+            format == "heam-calibration-v1",
+            "unsupported calibration format '{format}' (want heam-calibration-v1)"
+        );
+        Ok(Self {
+            seed: v.require_usize("seed")? as u64,
+            requests: v.require_usize("requests")? as u64,
+            stages: Self::rows_from(v.require("stages")?, "stage")?,
+            kernels: Self::rows_from(v.require("kernels")?, "kernel")?,
+            tiers: Self::rows_from(v.require("tiers")?, "tier")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::NO_LABEL;
+
+    fn span(stage: Stage, label: u32, dur_us: u64) -> Span {
+        Span { req: 0, class: 0, stage, label, start_us: 0, dur_us }
+    }
+
+    #[test]
+    fn aggregates_stages_kernels_and_tiers() {
+        // labels: 0 = "exact" (lane), 1 = "lut16" (kernel).
+        let labels = vec!["exact".to_string(), "lut16".to_string()];
+        let tiers = vec!["exact".to_string(), "heam".to_string()];
+        let spans = vec![
+            span(Stage::Execute, 0, 100),
+            span(Stage::Execute, 0, 200),
+            span(Stage::LayerExecute, 1, 30),
+            span(Stage::LayerExecute, 1, 50),
+            span(Stage::Admit, NO_LABEL, 2),
+        ];
+        let cal = Calibration::from_spans(7, 5, &spans, &labels, &tiers);
+        let exec = cal.stages.iter().find(|r| r.name == "execute").unwrap();
+        assert_eq!((exec.count, exec.mean_us, exec.max_us), (2, 150, 200));
+        let lut = cal.kernels.iter().find(|r| r.name == "lut16").unwrap();
+        assert_eq!((lut.count, lut.mean_us), (2, 40));
+        assert_eq!(cal.tiers.len(), 1, "only the observed tier appears");
+        assert_eq!(cal.tiers[0].name, "exact");
+        assert_eq!(cal.tiers[0].mean_us, 150);
+    }
+
+    #[test]
+    fn tier_costs_require_full_family_coverage() {
+        let labels = vec!["exact".to_string(), "heam".to_string()];
+        let tiers = vec!["exact".to_string(), "heam".to_string()];
+        let spans = vec![span(Stage::Execute, 0, 400), span(Stage::Execute, 1, 250)];
+        let cal = Calibration::from_spans(1, 2, &spans, &labels, &tiers);
+        assert_eq!(cal.tier_costs(&tiers), Some(vec![400, 250]));
+        let bigger = vec!["exact".to_string(), "heam".to_string(), "ou3".to_string()];
+        assert_eq!(cal.tier_costs(&bigger), None, "missing tier must not default");
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let labels = vec!["exact".to_string()];
+        let tiers = vec!["exact".to_string()];
+        let spans = vec![span(Stage::Execute, 0, 123), span(Stage::Requant, NO_LABEL, 4)];
+        let cal = Calibration::from_spans(42, 2, &spans, &labels, &tiers);
+        let dir = std::env::temp_dir().join("heam_calibrate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cal.json");
+        let path = path.to_str().unwrap();
+        cal.save(path).unwrap();
+        let loaded = Calibration::load(path).unwrap();
+        assert_eq!(loaded, cal);
+        // A wrong format marker is rejected.
+        std::fs::write(path, "{\"format\":\"other\"}").unwrap();
+        assert!(Calibration::load(path).is_err());
+    }
+}

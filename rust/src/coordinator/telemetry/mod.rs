@@ -1,0 +1,523 @@
+//! Low-overhead request tracing + stage metrics for the serving stack.
+//!
+//! Three pieces, used together by the gateway:
+//!
+//! * **Span tracing** — every admission attempt draws a deterministic
+//!   sampling decision ([`Tracer::sample`], one FNV hash per request);
+//!   sampled requests carry a [`TraceContext`] through the whole path
+//!   and every instrumented stage ([`Stage`]) records a fixed-size
+//!   [`Span`] into a lock-free per-worker [`SpanRing`]. Unsampled
+//!   requests carry `None` and the instrumentation reduces to one
+//!   branch per stage — no clocks read, no ring writes, no allocation.
+//! * **Deterministic ledger** — the set of sampled request ids is a
+//!   pure function of `(seed, sample_per, request count)`: ids are
+//!   dense sequence numbers, so the sampled *set* — and therefore
+//!   [`TraceLedger::fingerprint`] — is byte-identical at any worker
+//!   count, which is what `scripts/check.sh --trace` pins. Span
+//!   *timings* are wall-clock and explicitly not part of the ledger.
+//! * **JSONL export + calibration** — [`write_jsonl`] dumps drained
+//!   spans (`heam serve/loadgen --trace-out`), and
+//!   [`calibrate::Calibration`] aggregates them into the per-stage /
+//!   per-kernel timing artifact that feeds measured virtual service
+//!   costs into `qos/replay.rs` (ROADMAP item 5).
+
+pub mod calibrate;
+mod ring;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::hash::fnv1a_u64;
+use crate::util::json::Value;
+
+pub use calibrate::{Calibration, CostRow};
+pub use ring::SpanRing;
+
+/// `Span::label` value meaning "no kernel label attached".
+pub const NO_LABEL: u32 = u32::MAX;
+
+/// The instrumented stages of a request's life, in path order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Admission control: `try_submit_class` entry to outcome.
+    Admit = 0,
+    /// Admission to scheduler batch pick (class-queue wait).
+    QueueWait = 1,
+    /// Scheduler lane selection + batch pull (DRR pick).
+    Pick = 2,
+    /// Worker-side batch assembly (deadline re-check + image flatten).
+    Assemble = 3,
+    /// Job-pipe dispatch: scheduler send to worker receive.
+    Dispatch = 4,
+    /// Whole-batch model execution.
+    Execute = 5,
+    /// One kernel-bearing layer inside the model (label = dispatched
+    /// `Kernel::label()`).
+    LayerExecute = 6,
+    /// Input quantization / requant node.
+    Requant = 7,
+    /// Per-request response delivery + bookkeeping.
+    Respond = 8,
+}
+
+/// Number of [`Stage`] variants — the width of the per-stage metric
+/// vectors in `coordinator/metrics.rs`.
+pub const N_STAGES: usize = 9;
+
+/// All stages in declaration (path) order.
+pub const STAGES: [Stage; N_STAGES] = [
+    Stage::Admit,
+    Stage::QueueWait,
+    Stage::Pick,
+    Stage::Assemble,
+    Stage::Dispatch,
+    Stage::Execute,
+    Stage::LayerExecute,
+    Stage::Requant,
+    Stage::Respond,
+];
+
+impl Stage {
+    /// Stable exposition name (Prometheus label / JSONL field value).
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::QueueWait => "queue_wait",
+            Stage::Pick => "pick",
+            Stage::Assemble => "assemble",
+            Stage::Dispatch => "dispatch",
+            Stage::Execute => "execute",
+            Stage::LayerExecute => "layer_execute",
+            Stage::Requant => "requant",
+            Stage::Respond => "respond",
+        }
+    }
+
+    /// Decode a ring-stored stage code; out-of-range codes collapse to
+    /// [`Stage::Execute`] (they cannot occur through the public API).
+    pub fn from_code(code: u8) -> Stage {
+        STAGES.get(code as usize).copied().unwrap_or(Stage::Execute)
+    }
+}
+
+/// One recorded stage timing. Fixed-size and `Copy` — producers never
+/// allocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Sampled request id (dense admission sequence number).
+    pub req: u64,
+    /// Request class index.
+    pub class: u32,
+    pub stage: Stage,
+    /// Interned label index ([`Tracer::intern`]); [`NO_LABEL`] = none.
+    /// Kernel-bearing stages carry the dispatched `Kernel::label()`,
+    /// `Execute` spans carry the serving lane's name.
+    pub label: u32,
+    /// Microseconds since the tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// The sampling decision carried by a sampled request. `Copy` and two
+/// words wide — threading it through the request path costs nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    pub id: u64,
+    pub class: u32,
+}
+
+/// Tracer construction knobs.
+#[derive(Clone, Debug)]
+pub struct TelemetryConfig {
+    /// Sampling seed: the sampled-id set is a pure function of
+    /// `(seed, sample_per)` over the dense id sequence.
+    pub seed: u64,
+    /// Sample 1 in `sample_per` requests (1 = every request).
+    pub sample_per: u64,
+    /// Capacity of each span ring (rounded up to a power of two).
+    pub ring_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self { seed: 0, sample_per: 64, ring_capacity: 4096 }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.sample_per > 0, "telemetry sample_per must be positive");
+        anyhow::ensure!(self.ring_capacity > 0, "telemetry ring_capacity must be positive");
+        Ok(())
+    }
+}
+
+/// The deterministic identity of a traced run: the sorted sampled-id
+/// set plus exact span drop accounting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceLedger {
+    /// Sampled request ids, ascending.
+    pub sampled: Vec<u64>,
+    /// Admission attempts that drew a sampling decision.
+    pub attempts: u64,
+    /// Spans successfully recorded across all rings (exact).
+    pub recorded: u64,
+    /// Spans dropped on full rings (exact).
+    pub dropped: u64,
+}
+
+impl TraceLedger {
+    /// FNV identity of the sampled-id *set* — deliberately independent
+    /// of span timings, span counts, and worker interleaving: the ids
+    /// are sorted before hashing and nothing wall-clock enters.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a_u64(
+            std::iter::once(self.sampled.len() as u64).chain(self.sampled.iter().copied()),
+        )
+    }
+
+    /// The pinned identity line (`scripts/check.sh --trace` diffs this
+    /// across seeded runs at 1/2/4 workers).
+    pub fn line(&self) -> String {
+        format!(
+            "trace ledger {:#018x} sampled {} of {}",
+            self.fingerprint(),
+            self.sampled.len(),
+            self.attempts
+        )
+    }
+}
+
+/// The tracing hub: sampling decisions, per-worker span rings, the
+/// label intern table, and the deterministic ledger.
+pub struct Tracer {
+    seed: u64,
+    sample_per: u64,
+    epoch: Instant,
+    rings: Vec<SpanRing>,
+    /// Dense admission sequence — the request-id source.
+    next_id: AtomicU64,
+    attempts: AtomicU64,
+    /// Sampled ids in decision order (sorted at ledger time). Touched
+    /// only on the sampled path (1 in `sample_per`).
+    sampled: Mutex<Vec<u64>>,
+    /// Interned span labels (kernel labels, lane names). Interning
+    /// happens at prepare/startup time, never per request.
+    labels: Mutex<Vec<String>>,
+    /// Serializes collectors: the rings are single-consumer.
+    drain: Mutex<()>,
+}
+
+impl Tracer {
+    /// A tracer with `rings` independent span rings (one per producer
+    /// role: ring 0 = admission/client threads, ring 1 = scheduler,
+    /// ring `2 + i` = worker `i`).
+    pub fn new(cfg: &TelemetryConfig, rings: usize) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            seed: cfg.seed,
+            sample_per: cfg.sample_per,
+            epoch: Instant::now(),
+            rings: (0..rings.max(1)).map(|_| SpanRing::new(cfg.ring_capacity)).collect(),
+            next_id: AtomicU64::new(0),
+            attempts: AtomicU64::new(0),
+            sampled: Mutex::new(Vec::new()),
+            labels: Mutex::new(Vec::new()),
+            drain: Mutex::new(()),
+        })
+    }
+
+    /// Ring index for the admission path (client threads).
+    pub const RING_ADMIT: usize = 0;
+    /// Ring index for the scheduler thread.
+    pub const RING_SCHED: usize = 1;
+    /// Ring index for worker `w`.
+    pub fn ring_worker(w: usize) -> usize {
+        2 + w
+    }
+
+    /// Draw the sampling decision for the next admission attempt — the
+    /// single per-request check. The id is a dense sequence number, so
+    /// the sampled id *set* over a run of N attempts is a pure function
+    /// of `(seed, sample_per, N)` however threads interleave.
+    pub fn sample(&self, class: u32) -> Option<TraceContext> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+        if fnv1a_u64([self.seed, id]) % self.sample_per != 0 {
+            return None;
+        }
+        self.sampled.lock().unwrap().push(id);
+        Some(TraceContext { id, class })
+    }
+
+    /// Microseconds since the tracer epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one span into ring `ring` (clamped to the ring count).
+    /// Returns `false` when the ring was full and the span was dropped
+    /// (counted exactly).
+    pub fn record(&self, ring: usize, span: Span) -> bool {
+        self.rings[ring.min(self.rings.len() - 1)].push(span)
+    }
+
+    /// Intern a label, returning its stable index. Idempotent; intended
+    /// for prepare/startup time, not the per-request path.
+    pub fn intern(&self, label: &str) -> u32 {
+        let mut labels = self.labels.lock().unwrap();
+        if let Some(i) = labels.iter().position(|l| l == label) {
+            return i as u32;
+        }
+        labels.push(label.to_string());
+        (labels.len() - 1) as u32
+    }
+
+    /// Snapshot of the intern table (index = label id).
+    pub fn labels(&self) -> Vec<String> {
+        self.labels.lock().unwrap().clone()
+    }
+
+    /// Drain every ring to empty. Safe to call concurrently (collectors
+    /// are serialized); producers keep recording while a drain runs.
+    pub fn drain(&self) -> Vec<Span> {
+        let _guard = self.drain.lock().unwrap();
+        let mut out = Vec::new();
+        loop {
+            let mut got = false;
+            for ring in &self.rings {
+                while let Some(span) = ring.pop() {
+                    out.push(span);
+                    got = true;
+                }
+            }
+            if !got {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Total spans recorded across rings (exact).
+    pub fn recorded(&self) -> u64 {
+        self.rings.iter().map(|r| r.recorded()).sum()
+    }
+
+    /// Total spans dropped across rings (exact).
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// The deterministic ledger so far.
+    pub fn ledger(&self) -> TraceLedger {
+        let mut sampled = self.sampled.lock().unwrap().clone();
+        sampled.sort_unstable();
+        TraceLedger {
+            sampled,
+            attempts: self.attempts.load(Ordering::Relaxed),
+            recorded: self.recorded(),
+            dropped: self.dropped(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("seed", &self.seed)
+            .field("sample_per", &self.sample_per)
+            .field("rings", &self.rings.len())
+            .finish()
+    }
+}
+
+/// One span as a deterministic JSON object (stage and label resolved to
+/// strings; unknown label ids serialize as null).
+fn span_json(span: &Span, labels: &[String]) -> Value {
+    let label = labels
+        .get(span.label as usize)
+        .map(|l| Value::Str(l.clone()))
+        .unwrap_or(Value::Null);
+    Value::obj(vec![
+        ("req", Value::Int(span.req as i64)),
+        ("class", Value::Int(span.class as i64)),
+        ("stage", Value::Str(span.stage.label().to_string())),
+        ("label", label),
+        ("start_us", Value::Int(span.start_us as i64)),
+        ("dur_us", Value::Int(span.dur_us as i64)),
+    ])
+}
+
+/// Render drained spans as JSONL: one span object per line, sorted by
+/// `(req, start_us, stage)` for stable reading, terminated by a ledger
+/// line carrying the deterministic fingerprint and the exact drop
+/// accounting. Timings are wall-clock — only the ledger line's
+/// fingerprint is replay-pinned.
+pub fn render_jsonl(spans: &[Span], labels: &[String], ledger: &TraceLedger) -> String {
+    let mut sorted: Vec<&Span> = spans.iter().collect();
+    sorted.sort_by_key(|s| (s.req, s.start_us, s.stage));
+    let mut out = String::new();
+    for span in sorted {
+        out.push_str(&span_json(span, labels).to_json());
+        out.push('\n');
+    }
+    let ledger_obj = Value::obj(vec![(
+        "ledger",
+        Value::obj(vec![
+            ("fingerprint", Value::Str(format!("{:#018x}", ledger.fingerprint()))),
+            ("sampled", Value::Int(ledger.sampled.len() as i64)),
+            ("attempts", Value::Int(ledger.attempts as i64)),
+            ("recorded", Value::Int(ledger.recorded as i64)),
+            ("dropped", Value::Int(ledger.dropped as i64)),
+        ]),
+    )]);
+    out.push_str(&ledger_obj.to_json());
+    out.push('\n');
+    out
+}
+
+/// Write the JSONL export to `path`.
+pub fn write_jsonl(
+    path: &str,
+    spans: &[Span],
+    labels: &[String],
+    ledger: &TraceLedger,
+) -> Result<()> {
+    std::fs::write(path, render_jsonl(spans, labels, ledger))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_set_is_seed_deterministic_and_dense_id_based() {
+        let cfg = TelemetryConfig { seed: 9, sample_per: 4, ring_capacity: 64 };
+        let run = || {
+            let t = Tracer::new(&cfg, 2).unwrap();
+            for _ in 0..256 {
+                t.sample(0);
+            }
+            t.ledger()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.sampled, b.sampled);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.attempts, 256);
+        assert!(!a.sampled.is_empty(), "1/4 sampling of 256 must pick something");
+        assert!(a.sampled.len() < 256, "1/4 sampling must not pick everything");
+        // A different seed picks a different set (overwhelmingly).
+        let other = Tracer::new(
+            &TelemetryConfig { seed: 10, ..cfg.clone() },
+            2,
+        )
+        .unwrap();
+        for _ in 0..256 {
+            other.sample(0);
+        }
+        assert_ne!(other.ledger().fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn sample_per_one_samples_every_request() {
+        let t = Tracer::new(
+            &TelemetryConfig { seed: 1, sample_per: 1, ring_capacity: 16 },
+            1,
+        )
+        .unwrap();
+        for i in 0..32u64 {
+            let ctx = t.sample(3).expect("rate 1 samples everything");
+            assert_eq!(ctx.id, i);
+            assert_eq!(ctx.class, 3);
+        }
+        assert_eq!(t.ledger().sampled.len(), 32);
+    }
+
+    #[test]
+    fn ledger_fingerprint_ignores_decision_order() {
+        // Two tracers observing the same id set in different thread
+        // interleavings must agree: sort-before-hash.
+        let mk = || {
+            Tracer::new(
+                &TelemetryConfig { seed: 5, sample_per: 1, ring_capacity: 16 },
+                1,
+            )
+            .unwrap()
+        };
+        let a = mk();
+        for _ in 0..16 {
+            a.sample(0);
+        }
+        let b = mk();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..4 {
+                        b.sample(0);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.ledger().fingerprint(), b.ledger().fingerprint());
+    }
+
+    #[test]
+    fn intern_is_idempotent_and_stable() {
+        let t = Tracer::new(&TelemetryConfig::default(), 1).unwrap();
+        let a = t.intern("lut16+avx2");
+        let b = t.intern("exact");
+        assert_eq!(t.intern("lut16+avx2"), a);
+        assert_eq!(t.intern("exact"), b);
+        assert_ne!(a, b);
+        assert_eq!(t.labels()[a as usize], "lut16+avx2");
+    }
+
+    #[test]
+    fn jsonl_round_trips_and_ends_with_the_ledger() {
+        let t = Tracer::new(
+            &TelemetryConfig { seed: 0, sample_per: 1, ring_capacity: 16 },
+            1,
+        )
+        .unwrap();
+        let ctx = t.sample(1).unwrap();
+        let label = t.intern("exact");
+        t.record(
+            0,
+            Span {
+                req: ctx.id,
+                class: ctx.class,
+                stage: Stage::Execute,
+                label,
+                start_us: 10,
+                dur_us: 5,
+            },
+        );
+        let spans = t.drain();
+        let text = render_jsonl(&spans, &t.labels(), &t.ledger());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let span = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(span.get("stage").unwrap().as_str(), Some("execute"));
+        assert_eq!(span.get("label").unwrap().as_str(), Some("exact"));
+        assert_eq!(span.get("dur_us").unwrap().as_i64(), Some(5));
+        let ledger = crate::util::json::parse(lines[1]).unwrap();
+        let l = ledger.get("ledger").unwrap();
+        assert_eq!(l.get("recorded").unwrap().as_i64(), Some(1));
+        assert_eq!(l.get("dropped").unwrap().as_i64(), Some(0));
+        assert!(l.get("fingerprint").unwrap().as_str().unwrap().starts_with("0x"));
+    }
+
+    #[test]
+    fn stage_codes_round_trip() {
+        for (i, s) in STAGES.iter().enumerate() {
+            assert_eq!(Stage::from_code(i as u8), *s);
+            assert_eq!(*s as usize, i);
+        }
+    }
+}

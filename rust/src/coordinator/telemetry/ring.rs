@@ -1,0 +1,214 @@
+//! Lock-free bounded span ring buffer.
+//!
+//! A fixed-capacity multi-producer / single-consumer queue in the style
+//! of the classic bounded sequence-number queue: every slot carries a
+//! sequence counter that encodes whose turn it is (a producer claiming
+//! the slot, or the consumer releasing it), so producers never block and
+//! never allocate on the hot path. A full ring *drops* the span and
+//! counts the drop exactly — tracing must shed its own load rather than
+//! apply backpressure to the serving path — and the
+//! `recorded`/`dropped` counters are exact: every `push` either lands
+//! (recorded) or is counted (dropped), never both, never neither. The
+//! drop-accounting test in `rust/tests/telemetry.rs` races producers
+//! against a live collector and checks the balance to the span.
+//!
+//! The payload is stored in plain atomics (claimed slots are owned by
+//! exactly one thread between the two seq transitions), keeping the
+//! implementation free of `unsafe`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{Span, Stage, NO_LABEL};
+
+struct Slot {
+    /// Turn counter: `index` = free for the producer of lap 0,
+    /// `head + 1` = filled, `tail + capacity` = freed for the next lap.
+    seq: AtomicU64,
+    req: AtomicU64,
+    class: AtomicU64,
+    stage: AtomicU64,
+    label: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+/// Bounded lock-free span queue (multi-producer, single-consumer).
+pub struct SpanRing {
+    slots: Vec<Slot>,
+    mask: u64,
+    cap: u64,
+    head: AtomicU64,
+    tail: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    /// A ring holding at least `capacity` spans (rounded up to a power
+    /// of two, minimum 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two() as u64;
+        let slots = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicU64::new(i),
+                req: AtomicU64::new(0),
+                class: AtomicU64::new(0),
+                stage: AtomicU64::new(0),
+                label: AtomicU64::new(0),
+                start_us: AtomicU64::new(0),
+                dur_us: AtomicU64::new(0),
+            })
+            .collect();
+        Self {
+            slots,
+            mask: cap - 1,
+            cap,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Capacity after power-of-two rounding.
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Try to record one span. Returns `false` — and counts the drop —
+    /// when the ring is full. Never blocks, never allocates.
+    pub fn push(&self, span: Span) -> bool {
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(head & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == head {
+                match self.head.compare_exchange_weak(
+                    head,
+                    head + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        slot.req.store(span.req, Ordering::Relaxed);
+                        slot.class.store(span.class as u64, Ordering::Relaxed);
+                        slot.stage.store(span.stage as u64, Ordering::Relaxed);
+                        slot.label.store(span.label as u64, Ordering::Relaxed);
+                        slot.start_us.store(span.start_us, Ordering::Relaxed);
+                        slot.dur_us.store(span.dur_us, Ordering::Relaxed);
+                        slot.seq.store(head + 1, Ordering::Release);
+                        self.recorded.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    Err(actual) => head = actual,
+                }
+            } else if seq < head {
+                // The slot one lap ahead is still occupied: full.
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            } else {
+                // Another producer claimed this slot; chase the head.
+                head = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Take the oldest span, if any. Single consumer only — the
+    /// [`Tracer`](super::Tracer) serializes collectors behind its drain
+    /// lock.
+    pub fn pop(&self) -> Option<Span> {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let slot = &self.slots[(tail & self.mask) as usize];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq != tail + 1 {
+            return None;
+        }
+        let span = Span {
+            req: slot.req.load(Ordering::Relaxed),
+            class: slot.class.load(Ordering::Relaxed) as u32,
+            stage: Stage::from_code(slot.stage.load(Ordering::Relaxed) as u8),
+            label: slot.label.load(Ordering::Relaxed) as u32,
+            start_us: slot.start_us.load(Ordering::Relaxed),
+            dur_us: slot.dur_us.load(Ordering::Relaxed),
+        };
+        slot.seq.store(tail + self.cap, Ordering::Release);
+        self.tail.store(tail + 1, Ordering::Release);
+        Some(span)
+    }
+
+    /// Spans successfully recorded so far (exact).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Spans dropped on a full ring so far (exact).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for SpanRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanRing")
+            .field("capacity", &self.cap)
+            .field("recorded", &self.recorded())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req: u64) -> Span {
+        Span {
+            req,
+            class: 0,
+            stage: Stage::Execute,
+            label: NO_LABEL,
+            start_us: req,
+            dur_us: 1,
+        }
+    }
+
+    #[test]
+    fn fifo_within_capacity() {
+        let ring = SpanRing::new(8);
+        for i in 0..8 {
+            assert!(ring.push(span(i)));
+        }
+        for i in 0..8 {
+            assert_eq!(ring.pop().unwrap().req, i);
+        }
+        assert!(ring.pop().is_none());
+        assert_eq!(ring.recorded(), 8);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_exactly_the_overflow() {
+        let ring = SpanRing::new(4);
+        for i in 0..9 {
+            ring.push(span(i));
+        }
+        assert_eq!(ring.recorded(), 4);
+        assert_eq!(ring.dropped(), 5);
+        // The survivors are the oldest four, in order.
+        for i in 0..4 {
+            assert_eq!(ring.pop().unwrap().req, i);
+        }
+        assert!(ring.pop().is_none());
+        // Freed slots accept new spans again (lap arithmetic survives
+        // the wrap).
+        assert!(ring.push(span(100)));
+        assert_eq!(ring.pop().unwrap().req, 100);
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_a_power_of_two() {
+        assert_eq!(SpanRing::new(0).capacity(), 2);
+        assert_eq!(SpanRing::new(5).capacity(), 8);
+        assert_eq!(SpanRing::new(64).capacity(), 64);
+    }
+}

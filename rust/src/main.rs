@@ -26,12 +26,19 @@
 //!   The same `--seed` replays a byte-identical trace. With `--classes`
 //!   the trace is class-tagged and replayed through the QoS router in
 //!   deterministic virtual time, writing `BENCH_qos.json`.
+//! * `top`        — run a short seeded gateway workload and print the
+//!   one-shot Prometheus text exposition (per-lane counters, per-stage
+//!   duration histograms, per-kernel execute counters).
+//! * `calibrate`  — replay a fixed fully-traced workload and write the
+//!   measured per-stage / per-kernel / per-tier timing artifact that
+//!   `loadgen --classes --calibration` feeds into the QoS lane model.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use heam::coordinator::server::{ServeConfig, Server};
+use heam::coordinator::server::{ServeConfig, Server, Submission};
+use heam::coordinator::telemetry::{self, Calibration, TelemetryConfig, Tracer};
 use heam::mult::{Lut, MultKind};
 use heam::nn::multiplier::Multiplier;
 use heam::opt::{self, DistSet, GaConfig};
@@ -64,6 +71,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "kernels" => kernels(rest),
         "serve" => serve(rest),
         "loadgen" => loadgen(rest),
+        "top" => top(rest),
+        "calibrate" => calibrate(rest),
         "nonlinear" => nonlinear(rest),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -86,6 +95,8 @@ fn print_usage() {
            kernels    print kernel dispatch decisions and self-check all tiers\n\
            serve      serve a model (PJRT runtime, or --native LUT-GEMM pool)\n\
            loadgen    replay seeded traffic against a multi-model gateway\n\
+           top        one-shot Prometheus exposition from a seeded gateway workload\n\
+           calibrate  replay a fully-traced workload, write per-stage/kernel timings\n\
            nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\n\
          Run `heam <subcommand> --help` for options."
     );
@@ -547,6 +558,59 @@ fn kernels(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared `--trace-*` flags into a tracer (None unless
+/// `--trace-out` is set — disabled tracing must cost nothing on the hot
+/// path). Rings: admission + scheduler + one per worker.
+fn tracer_from_args(args: &Args, workers: usize) -> Result<Option<Arc<Tracer>>> {
+    if args.get_nonempty("trace-out").is_none() {
+        return Ok(None);
+    }
+    let cfg = TelemetryConfig {
+        seed: args.get_as("trace-seed")?,
+        sample_per: args.get_as("trace-sample")?,
+        ..Default::default()
+    };
+    Ok(Some(Arc::new(Tracer::new(&cfg, 2 + workers)?)))
+}
+
+/// Finish a traced run (call after `server.shutdown()`, when every
+/// producer has stopped): write the span JSONL, print the pinned
+/// `trace ledger` line, and self-check the span accounting — every
+/// recorded span must have been exported.
+fn finish_trace(args: &Args, trace: &Option<Arc<Tracer>>) -> Result<()> {
+    let (Some(t), Some(path)) = (trace, args.get_nonempty("trace-out")) else {
+        return Ok(());
+    };
+    let spans = t.drain();
+    let ledger = t.ledger();
+    telemetry::write_jsonl(path, &spans, &t.labels(), &ledger)?;
+    println!("{}", ledger.line());
+    anyhow::ensure!(
+        spans.len() as u64 == ledger.recorded,
+        "span accounting broken: drained {} spans of {} recorded",
+        spans.len(),
+        ledger.recorded
+    );
+    println!(
+        "trace accounting OK: exported {} spans of {} recorded ({} dropped), wrote {path}",
+        spans.len(),
+        ledger.recorded,
+        ledger.dropped
+    );
+    Ok(())
+}
+
+/// One Prometheus text exposition over every lane of a gateway.
+fn prom_render(server: &Server) -> String {
+    let mut out = String::new();
+    for name in server.model_names() {
+        if let Ok(snap) = server.model_metrics(name) {
+            out.push_str(&snap.render_prometheus(name));
+        }
+    }
+    out
+}
+
 fn serve(argv: &[String]) -> Result<()> {
     let args = Args::new(
         "heam serve",
@@ -574,13 +638,20 @@ fn serve(argv: &[String]) -> Result<()> {
          frontier JSON from `heam optimize --per-layer`",
     )
     .opt("qos-interval-ms", "20", "live QoS controller tick period (ms)")
+    .opt("trace-out", "", "write sampled request-span JSONL here (enables tracing)")
+    .opt("trace-seed", "0", "span sampling seed")
+    .opt("trace-sample", "64", "sample 1 in N requests (1 = every request)")
+    .opt("prom-every-ms", "0", "rewrite a Prometheus text dump this often (0 = final dump only)")
+    .opt("prom-out", "", "Prometheus dump path (empty with --prom-every-ms = stdout)")
     .flag("native", "serve through the native batched LUT-GEMM engine")
     .parse(argv)?;
+    let trace = tracer_from_args(&args, args.get_as("workers")?)?;
     let config = ServeConfig {
         max_batch: args.get_as("batch")?,
         max_wait_us: args.get_as("wait-us")?,
         workers: args.get_as("workers")?,
         queue_depth: args.get_as("queue-depth")?,
+        trace: trace.clone(),
         ..Default::default()
     };
     // Fail with a clean CLI error here — the infallible-signature
@@ -588,6 +659,46 @@ fn serve(argv: &[String]) -> Result<()> {
     config.validate()?;
     let ds = heam::data::ImageDataset::load(args.get("data"), "serve")?;
     let n: usize = args.get_as("requests")?;
+    let prom_every: u64 = args.get_as("prom-every-ms")?;
+    let prom_out: Option<String> = args.get_nonempty("prom-out").map(str::to_string);
+
+    // Periodic Prometheus exposition: a scrape-loop stand-in that
+    // rewrites the dump every interval for the life of the server, then
+    // leaves a final dump behind (also the one-shot `--prom-out` path).
+    let spawn_prom = |server: Arc<Server>| {
+        (prom_every > 0).then(|| {
+            let out = prom_out.clone();
+            let (tx, rx) = std::sync::mpsc::channel::<()>();
+            let handle = std::thread::spawn(move || loop {
+                match rx.recv_timeout(std::time::Duration::from_millis(prom_every)) {
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    // Stop signal or sender dropped: exit.
+                    _ => break,
+                }
+                let text = prom_render(&server);
+                match &out {
+                    Some(path) => {
+                        let _ = std::fs::write(path, &text);
+                    }
+                    None => print!("{text}"),
+                }
+            });
+            (tx, handle)
+        })
+    };
+    let finish_prom = |server: &Server,
+                       dumper: Option<(std::sync::mpsc::Sender<()>, std::thread::JoinHandle<()>)>|
+     -> Result<()> {
+        if let Some((tx, handle)) = dumper {
+            drop(tx);
+            let _ = handle.join();
+        }
+        if let Some(path) = &prom_out {
+            std::fs::write(path, prom_render(server))?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    };
 
     if let Some(spec) = args.get_nonempty("qos-policy") {
         use heam::coordinator::qos::{self, ControllerConfig, QosPolicy, QosRouter};
@@ -616,11 +727,14 @@ fn serve(argv: &[String]) -> Result<()> {
         print_shares(&policy, &shares, config.queue_depth);
         let server = Arc::new(Server::start_gateway_with_classes(registry, config, shares)?);
         let router = Arc::new(QosRouter::new(family, policy)?);
+        let dumper = spawn_prom(server.clone());
         let live = qos::spawn_live(router.clone(), server.clone())?;
         let report = heam::coordinator::drive_demo_qos(&server, &router, &ds, n)?;
         live.stop();
         println!("{report}");
         server.shutdown();
+        finish_prom(&server, dumper)?;
+        finish_trace(&args, &trace)?;
         return Ok(());
     }
 
@@ -641,9 +755,13 @@ fn serve(argv: &[String]) -> Result<()> {
         Server::start(args.get("model"), Arc::new(lut), config)
             .context("starting PJRT server (hint: pass --native for the in-process engine)")?
     };
+    let server = Arc::new(server);
+    let dumper = spawn_prom(server.clone());
     let report = heam::coordinator::drive_demo(&server, &ds, n)?;
     println!("{report}");
     server.shutdown();
+    finish_prom(&server, dumper)?;
+    finish_trace(&args, &trace)?;
     Ok(())
 }
 
@@ -712,6 +830,21 @@ fn loadgen(argv: &[String]) -> Result<()> {
         "2000",
         "base retry backoff (us); exponential per attempt with seeded jitter",
     )
+    .opt("trace-out", "", "write sampled request-span JSONL here (enables tracing)")
+    .opt("trace-seed", "0", "span sampling seed")
+    .opt("trace-sample", "64", "sample 1 in N requests (1 = every request)")
+    .opt(
+        "slo-p99-us",
+        "0",
+        "exit nonzero when any measured p99 (per model, or per class with \
+         --classes) exceeds this many microseconds (0 = no gate)",
+    )
+    .opt(
+        "calibration",
+        "",
+        "with --classes: calibration JSON from `heam calibrate` — measured \
+         per-tier service costs replace the lane model's geometric decay",
+    )
     .parse(argv)?;
 
     if args.get_nonempty("classes").is_some() {
@@ -734,10 +867,11 @@ fn loadgen(argv: &[String]) -> Result<()> {
         let mul = multiplier_by_name(name)?;
         registry.register(name, &graph, &mul, dims)?;
     }
-    let fault_spec = parse_fault_arg(args)?;
+    let fault_spec = parse_fault_arg(&args)?;
+    let trace = tracer_from_args(&args, args.get_as("workers")?)?;
     let server = Server::start_gateway(
         registry,
-        serve_config_with_faults(args, &fault_spec, mix.len())?,
+        serve_config_with_faults(&args, &fault_spec, mix.len(), trace.clone())?,
     )?;
 
     let burst_period: u64 = args.get_as("burst-period-ms")?;
@@ -758,10 +892,11 @@ fn loadgen(argv: &[String]) -> Result<()> {
             })
         })
         .transpose()?,
-        retry: parse_retry_arg(args)?,
+        retry: parse_retry_arg(&args)?,
     };
     let report = loadgen::run(&server, &cfg)?;
     server.shutdown();
+    finish_trace(&args, &trace)?;
     let m = server.metrics_snapshot();
     print!("{}", report.render());
     if let Some(out) = args.get_nonempty("out") {
@@ -784,6 +919,25 @@ fn loadgen(argv: &[String]) -> Result<()> {
             report.dropped
         );
     }
+    check_slo(&args, report.per_model.iter().map(|m| (m.name.as_str(), m.p99_us)))?;
+    Ok(())
+}
+
+/// `--slo-p99-us` gate: fail the run (nonzero exit) when any measured
+/// p99 exceeds the bound. `groups` yields (name, p99_us) — per model for
+/// the classic load generator, per class for `--classes` runs.
+fn check_slo<'a>(args: &Args, groups: impl Iterator<Item = (&'a str, u64)>) -> Result<()> {
+    let slo: u64 = args.get_as("slo-p99-us")?;
+    if slo == 0 {
+        return Ok(());
+    }
+    for (name, p99) in groups {
+        anyhow::ensure!(
+            p99 <= slo,
+            "SLO breach: '{name}' measured p99 {p99}us exceeds --slo-p99-us {slo}us"
+        );
+    }
+    println!("slo check OK: every measured p99 <= {slo}us");
     Ok(())
 }
 
@@ -818,6 +972,7 @@ fn serve_config_with_faults(
     args: &Args,
     fault_spec: &Option<heam::coordinator::fault::FaultSpec>,
     tiers: usize,
+    trace: Option<Arc<Tracer>>,
 ) -> Result<ServeConfig> {
     use heam::coordinator::fault::{FaultInjector, FaultPlan};
     let deadline_ms: u64 = args.get_as("deadline-ms")?;
@@ -843,6 +998,7 @@ fn serve_config_with_faults(
         deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
         straggle_threshold_us: fault_spec.as_ref().map_or(0, |s| s.straggle_us),
         fault,
+        trace,
     })
 }
 
@@ -929,7 +1085,22 @@ fn loadgen_qos(args: &Args) -> Result<()> {
     };
     let (registry, family) = register_family_arg(args.get("family"), &graph, dims)?;
     let fault_spec = parse_fault_arg(args)?;
-    let config = serve_config_with_faults(args, &fault_spec, family.len())?;
+    let trace = tracer_from_args(args, args.get_as("workers")?)?;
+    let config = serve_config_with_faults(args, &fault_spec, family.len(), trace.clone())?;
+    // Measured virtual service costs: a calibration artifact replaces
+    // the lane model's geometric cost decay for the tiers it covers.
+    let costs_us = match args.get_nonempty("calibration") {
+        Some(path) => {
+            let cal = Calibration::load(path)?;
+            let names: Vec<String> = family.names().iter().map(|n| n.to_string()).collect();
+            let costs = cal.tier_costs(&names).with_context(|| {
+                format!("calibration '{path}' does not cover every family tier {names:?}")
+            })?;
+            println!("calibrated lane costs (us, accuracy order): {costs:?}");
+            Some(costs)
+        }
+        None => None,
+    };
     let interval_ms: u64 = args.get_as("qos-interval-ms")?;
     let policy = QosPolicy {
         classes,
@@ -966,11 +1137,13 @@ fn loadgen_qos(args: &Args) -> Result<()> {
             speedup_milli: args.get_as("sim-speedup-milli")?,
             workers: args.get_as("sim-workers")?,
             queue_depth: args.get_as("sim-queue-depth")?,
+            costs_us,
         },
         fault: fault_spec.clone(),
     };
     let report = qos::replay::run(&server, &router, &cfg)?;
     server.shutdown();
+    finish_trace(args, &trace)?;
     print!("{}", report.render());
     // The option's *default* names the classic serving report; a QoS run
     // that didn't say --out writes its own file instead. An explicit
@@ -1050,6 +1223,195 @@ fn loadgen_qos(args: &Args) -> Result<()> {
             fr.recovered_tick.unwrap_or(0)
         );
     }
+    check_slo(args, report.per_class.iter().map(|c| (c.name.as_str(), c.p99_us)))?;
+    Ok(())
+}
+
+/// `heam top`: drive a short seeded workload through a variant-family
+/// gateway and print the one-shot Prometheus text exposition — the
+/// quickest way to see the per-stage histograms and per-kernel execute
+/// counters without attaching a scraper.
+fn top(argv: &[String]) -> Result<()> {
+    let args = Args::new(
+        "heam top",
+        "One-shot Prometheus metrics exposition from a seeded gateway workload",
+    )
+    .opt("weights", "artifacts/weights/digits.htb", "weight bundle (random fallback)")
+    .opt("channels", "1", "input channels")
+    .opt("hw", "28", "input height = width")
+    .opt(
+        "family",
+        "exact,heam",
+        "variants to host: zoo names / LUT paths, or a Pareto frontier JSON",
+    )
+    .opt("requests", "128", "seeded warm-up requests before the dump")
+    .opt("seed", "7", "warm-up image seed")
+    .opt("batch", "16", "max dynamic batch")
+    .opt("wait-us", "2000", "batcher wait budget (us)")
+    .opt("workers", "2", "worker threads")
+    .opt("queue-depth", "256", "bounded admission queue per lane")
+    .opt("trace-sample", "1", "sample 1 in N requests into the stage histograms")
+    .opt("out", "", "write the exposition here instead of stdout")
+    .parse(argv)?;
+    let (c, hw): (usize, usize) = (args.get_as("channels")?, args.get_as("hw")?);
+    let graph = match heam::nn::lenet::load(args.get("weights")) {
+        Ok(g) => g,
+        Err(_) => {
+            println!("(no weight artifact — serving random weights)");
+            heam::nn::lenet::load_graph(&heam::nn::lenet::random_bundle(c, hw, 42))?
+        }
+    };
+    let (registry, family) = register_family_arg(args.get("family"), &graph, (c, hw, hw))?;
+    let workers: usize = args.get_as("workers")?;
+    let seed: u64 = args.get_as("seed")?;
+    let requests: usize = args.get_as("requests")?;
+    // Tracing on: the non-execute stage histograms populate from traced
+    // requests only, so an untraced `top` would show mostly-empty rows.
+    let tracer = Arc::new(Tracer::new(
+        &TelemetryConfig {
+            seed,
+            sample_per: args.get_as("trace-sample")?,
+            ..Default::default()
+        },
+        2 + workers,
+    )?);
+    let config = ServeConfig {
+        max_batch: args.get_as("batch")?,
+        max_wait_us: args.get_as("wait-us")?,
+        workers,
+        queue_depth: args.get_as("queue-depth")?,
+        trace: Some(tracer),
+        ..Default::default()
+    };
+    config.validate()?;
+    let names: Vec<String> = family.names().iter().map(|n| n.to_string()).collect();
+    let server = Server::start_gateway(registry, config)?;
+    let image_size = server.image_size(&names[0])?;
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let image =
+            heam::coordinator::loadgen::image_for(seed.wrapping_add(i as u64), image_size);
+        match server.try_submit(&names[i % names.len()], image)? {
+            Submission::Admitted(p) => pending.push(p),
+            Submission::Rejected => {}
+        }
+    }
+    for p in pending {
+        let _ = p.wait_timeout(std::time::Duration::from_secs(30));
+    }
+    server.shutdown();
+    let text = prom_render(&server);
+    match args.get_nonempty("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+/// `heam calibrate`: replay a fixed, fully-traced (1-in-1 sampling)
+/// workload against a variant-family gateway, aggregate the drained
+/// spans into per-stage / per-kernel / per-tier timing rows, and write
+/// the calibration artifact `loadgen --classes --calibration` consumes.
+fn calibrate(argv: &[String]) -> Result<()> {
+    let args = Args::new(
+        "heam calibrate",
+        "Measure per-stage / per-kernel / per-tier service costs from a traced replay",
+    )
+    .opt("weights", "artifacts/weights/digits.htb", "weight bundle (random fallback)")
+    .opt("channels", "1", "input channels")
+    .opt("hw", "28", "input height = width")
+    .opt(
+        "family",
+        "exact,heam,ou3",
+        "variants to measure: zoo names / LUT paths, or a Pareto frontier JSON \
+         (match the family you will replay with --calibration)",
+    )
+    .opt("requests", "240", "calibration requests, round-robin across the family")
+    .opt("seed", "7", "image seed")
+    .opt("batch", "16", "max dynamic batch")
+    .opt("wait-us", "2000", "batcher wait budget (us)")
+    .opt("workers", "2", "worker threads")
+    .opt("queue-depth", "256", "bounded admission queue per lane")
+    .opt("out", "artifacts/calibration.json", "calibration artifact path")
+    .parse(argv)?;
+    let (c, hw): (usize, usize) = (args.get_as("channels")?, args.get_as("hw")?);
+    let graph = match heam::nn::lenet::load(args.get("weights")) {
+        Ok(g) => g,
+        Err(_) => {
+            println!("(no weight artifact — measuring random weights)");
+            heam::nn::lenet::load_graph(&heam::nn::lenet::random_bundle(c, hw, 42))?
+        }
+    };
+    let (registry, family) = register_family_arg(args.get("family"), &graph, (c, hw, hw))?;
+    let workers: usize = args.get_as("workers")?;
+    let seed: u64 = args.get_as("seed")?;
+    let requests: usize = args.get_as("requests")?;
+    let tracer = Arc::new(Tracer::new(
+        &TelemetryConfig { seed, sample_per: 1, ..Default::default() },
+        2 + workers,
+    )?);
+    let config = ServeConfig {
+        max_batch: args.get_as("batch")?,
+        max_wait_us: args.get_as("wait-us")?,
+        workers,
+        queue_depth: args.get_as("queue-depth")?,
+        trace: Some(tracer.clone()),
+        ..Default::default()
+    };
+    config.validate()?;
+    let names: Vec<String> = family.names().iter().map(|n| n.to_string()).collect();
+    let server = Server::start_gateway(registry, config)?;
+    let image_size = server.image_size(&names[0])?;
+    // Submit-and-wait sequentially: per-request batches keep the Execute
+    // spans clean per tier (no cross-tier batching noise), which is what
+    // the per-tier mean feeds into the replay's lane model.
+    for i in 0..requests {
+        let image =
+            heam::coordinator::loadgen::image_for(seed.wrapping_add(i as u64), image_size);
+        if let Submission::Admitted(p) = server.try_submit(&names[i % names.len()], image)? {
+            let _ = p.wait_timeout(std::time::Duration::from_secs(30));
+        }
+    }
+    server.shutdown();
+    let spans = tracer.drain();
+    let ledger = tracer.ledger();
+    println!("{}", ledger.line());
+    anyhow::ensure!(
+        spans.len() as u64 == ledger.recorded && ledger.dropped == 0,
+        "calibration trace incomplete: {} exported, {} recorded, {} dropped \
+         (raise the ring capacity or lower --requests)",
+        spans.len(),
+        ledger.recorded,
+        ledger.dropped
+    );
+    let cal = Calibration::from_spans(seed, requests as u64, &spans, &tracer.labels(), &names);
+    let section = |title: &str, rows: &[telemetry::CostRow]| {
+        println!("  {title}:");
+        for r in rows {
+            println!(
+                "    {:<16} n {:>6}  mean {:>7}us  max {:>7}us",
+                r.name, r.count, r.mean_us, r.max_us
+            );
+        }
+    };
+    println!("calibration over {requests} requests (seed {seed}):");
+    section("stages", &cal.stages);
+    section("kernels", &cal.kernels);
+    section("tiers", &cal.tiers);
+    if let Some(costs) = cal.tier_costs(&names) {
+        println!("measured lane costs (us, accuracy order): {costs:?}");
+    }
+    let out = args.get("out");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    cal.save(out)?;
+    println!("wrote {out} — replay with `heam loadgen --classes ... --calibration {out}`");
     Ok(())
 }
 

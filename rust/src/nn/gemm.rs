@@ -702,6 +702,20 @@ impl PreparedMatmul {
     }
 }
 
+/// One timed node from a profiled run ([`PreparedGraph::run_profiled`]):
+/// `node` indexes the prepared graph (parallel to
+/// [`PreparedGraph::kernel_labels`], which the telemetry layer uses to
+/// resolve the dispatched kernel label without touching the hot path).
+/// `is_quantize` distinguishes the standalone quantize node (the
+/// telemetry requant stage; per-layer requant is fused into the kernel
+/// execute and inseparable from it) from kernel-executing layers.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeTiming {
+    pub node: usize,
+    pub is_quantize: bool,
+    pub dur_us: u64,
+}
+
 /// A prepared node mirrors one graph node with its layer invariants baked.
 enum PreparedOp {
     Input,
@@ -821,6 +835,26 @@ impl PreparedGraph {
             .collect()
     }
 
+    /// `(node index, dispatched kernel label)` for every kernel-executing
+    /// node (conv / dense / dense-logits). Pass-through nodes (input,
+    /// quantize, pool, flatten) dispatch no GEMM kernel and are excluded
+    /// — this is the static node → kernel map the serving observability
+    /// layer resolves span labels and execute counters against, built
+    /// once at lane construction, never on the hot path.
+    pub fn kernel_nodes(&self) -> Vec<(usize, String)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                matches!(
+                    n.op,
+                    PreparedOp::Conv(_) | PreparedOp::Dense(_) | PreparedOp::DenseLogits(_)
+                )
+            })
+            .map(|(i, _)| (i, self.kernels[i].label()))
+            .collect()
+    }
+
     /// Node id by name.
     pub fn id(&self, name: &str) -> Result<usize> {
         self.by_name
@@ -837,6 +871,32 @@ impl PreparedGraph {
         feeds: &BTreeMap<String, Value>,
         scratch: &mut Scratch,
     ) -> Result<Value> {
+        self.run_inner(output, feeds, scratch, None)
+    }
+
+    /// [`PreparedGraph::run`] with per-node timing capture for the
+    /// kernel-executing layers (conv/dense/logits) and the standalone
+    /// quantize node — the telemetry layer's per-layer span source.
+    /// Results stay byte-identical to [`PreparedGraph::run`]; the only
+    /// extra work is two `Instant` reads per timed node, which is why
+    /// the server runs this variant *only* for trace-sampled requests.
+    pub fn run_profiled(
+        &self,
+        output: &str,
+        feeds: &BTreeMap<String, Value>,
+        scratch: &mut Scratch,
+        timings: &mut Vec<NodeTiming>,
+    ) -> Result<Value> {
+        self.run_inner(output, feeds, scratch, Some(timings))
+    }
+
+    fn run_inner(
+        &self,
+        output: &str,
+        feeds: &BTreeMap<String, Value>,
+        scratch: &mut Scratch,
+        mut timings: Option<&mut Vec<NodeTiming>>,
+    ) -> Result<Value> {
         let target = self.id(output)?;
         let mut memo: Vec<Option<Value>> = (0..self.nodes.len()).map(|_| None).collect();
         let edges: Vec<&[usize]> = self.nodes.iter().map(|n| n.inputs.as_slice()).collect();
@@ -846,6 +906,17 @@ impl PreparedGraph {
                 continue;
             }
             let node = &self.nodes[i];
+            let timed = timings.is_some().then(|| match &node.op {
+                PreparedOp::Quantize(_) => Some(true),
+                PreparedOp::Conv(_) | PreparedOp::Dense(_) | PreparedOp::DenseLogits(_) => {
+                    Some(false)
+                }
+                _ => None,
+            });
+            let t0 = match timed {
+                Some(Some(_)) => Some(std::time::Instant::now()),
+                _ => None,
+            };
             let value = match &node.op {
                 PreparedOp::Input => feeds
                     .get(&node.name)
@@ -881,6 +952,15 @@ impl PreparedGraph {
                     Value::U8(x.clone().reshape(vec![n]))
                 }
             };
+            if let (Some(ts), Some(Some(is_quantize)), Some(t0)) =
+                (timings.as_deref_mut(), timed, t0)
+            {
+                ts.push(NodeTiming {
+                    node: i,
+                    is_quantize,
+                    dur_us: t0.elapsed().as_micros() as u64,
+                });
+            }
             memo[i] = Some(value);
         }
         Ok(memo[target].take().unwrap())
@@ -1235,6 +1315,37 @@ mod tests {
             }
         }
         assert!(Kernel::from_lut_with(&Lut::exact(), DispatchPolicy::full()).is_specialized());
+    }
+
+    #[test]
+    fn profiled_run_is_byte_identical_and_times_every_kernel_node() {
+        let bundle = crate::nn::lenet::random_bundle(1, 20, 21);
+        let graph = crate::nn::lenet::load_graph(&bundle).unwrap();
+        let prepared = graph.prepare(&Multiplier::Exact);
+        let mut scratch = Scratch::default();
+        let mut feeds = BTreeMap::new();
+        feeds.insert(
+            "image".to_string(),
+            Value::F32(Tensor::new(vec![1, 20, 20], vec![0.4f32; 400])),
+        );
+        let plain = prepared.run("fc3", &feeds, &mut scratch).unwrap();
+        let mut timings = Vec::new();
+        let profiled = prepared
+            .run_profiled("fc3", &feeds, &mut scratch, &mut timings)
+            .unwrap();
+        assert_eq!(
+            plain.as_f32().unwrap().data,
+            profiled.as_f32().unwrap().data,
+            "profiling must not perturb the result"
+        );
+        // One standalone quantize node plus conv1/conv2/fc1/fc2/fc3.
+        assert_eq!(timings.iter().filter(|t| t.is_quantize).count(), 1);
+        assert_eq!(timings.iter().filter(|t| !t.is_quantize).count(), 5);
+        // Every timed node resolves a kernel label for the span export.
+        let labels = prepared.kernel_labels();
+        for t in &timings {
+            assert!(t.node < labels.len(), "node {} out of range", t.node);
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::util::tensor_io::Bundle;
 
-use super::gemm::{PreparedGraph, Scratch};
+use super::gemm::{NodeTiming, PreparedGraph, Scratch};
 use super::graph::{Graph, Op, Value};
 use super::multiplier::Multiplier;
 use super::ops::{QConv2d, QDense};
@@ -138,6 +138,23 @@ pub fn classify_prepared(
 ) -> Result<(usize, Vec<f32>)> {
     let feeds = image_feed(image, shape);
     let out = prepared.run("fc3", &feeds, scratch)?;
+    let logits = out.as_f32()?.data.clone();
+    Ok((super::ops::argmax(&logits), logits))
+}
+
+/// [`classify_prepared`] with per-node timing capture — the traced
+/// serving path. Byte-identical predictions; `timings` gains one entry
+/// per kernel-executing layer and the quantize node (see
+/// [`NodeTiming`]), which the gateway turns into per-layer spans.
+pub fn classify_prepared_profiled(
+    prepared: &PreparedGraph,
+    image: &[f32],
+    shape: (usize, usize, usize),
+    scratch: &mut Scratch,
+    timings: &mut Vec<NodeTiming>,
+) -> Result<(usize, Vec<f32>)> {
+    let feeds = image_feed(image, shape);
+    let out = prepared.run_profiled("fc3", &feeds, scratch, timings)?;
     let logits = out.as_f32()?.data.clone();
     Ok((super::ops::argmax(&logits), logits))
 }

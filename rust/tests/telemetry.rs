@@ -1,0 +1,264 @@
+//! Telemetry integration suite: the span-ring drop accounting under a
+//! producer/collector race, worker-count independence of the trace
+//! ledger on the real gateway, calibration from a live traced run, and
+//! the stage-histogram / kernel-counter halves of `Snapshot::merge` /
+//! `delta_since`.
+
+use std::sync::Arc;
+
+use heam::coordinator::loadgen::image_for;
+use heam::coordinator::metrics::{Metrics, Snapshot};
+use heam::coordinator::registry::ModelRegistry;
+use heam::coordinator::server::{Pending, ServeConfig, Server, Submission};
+use heam::coordinator::telemetry::{
+    Calibration, Span, Stage, TelemetryConfig, TraceLedger, Tracer, NO_LABEL,
+};
+use heam::mult::MultKind;
+use heam::nn::lenet;
+use heam::nn::multiplier::Multiplier;
+
+fn two_model_gateway(config: ServeConfig) -> Server {
+    let bundle = lenet::random_bundle(1, 28, 42);
+    let graph = lenet::load_graph(&bundle).unwrap();
+    let mut registry = ModelRegistry::new();
+    registry.register("exact", &graph, &Multiplier::Exact, (1, 28, 28)).unwrap();
+    registry
+        .register(
+            "heam",
+            &graph,
+            &Multiplier::Lut(Arc::new(MultKind::Heam.lut())),
+            (1, 28, 28),
+        )
+        .unwrap();
+    Server::start_gateway(registry, config).unwrap()
+}
+
+fn span(req: u64, stage: Stage, dur_us: u64) -> Span {
+    Span { req, class: 0, stage, label: NO_LABEL, start_us: req, dur_us }
+}
+
+/// The accounting contract of the lock-free rings under fire: many
+/// producer threads push into tiny (overflowing) rings while a live
+/// collector drains concurrently. Every push must land exactly once in
+/// `recorded` (and eventually in a drain) or exactly once in `dropped`
+/// — never both, never neither — however the race interleaves.
+#[test]
+fn concurrent_producers_and_live_drain_account_every_span() {
+    let tracer = Arc::new(
+        Tracer::new(
+            // Rings far smaller than the load: drops are guaranteed, so
+            // the test exercises both sides of the accounting.
+            &TelemetryConfig { seed: 0, sample_per: 1, ring_capacity: 32 },
+            4,
+        )
+        .unwrap(),
+    );
+    let producers = 8usize;
+    let per_producer = 4000usize;
+    let drained: Vec<Span> = std::thread::scope(|s| {
+        let stop = &std::sync::atomic::AtomicBool::new(false);
+        let collector = {
+            let t = Arc::clone(&tracer);
+            s.spawn(move || {
+                let mut got = Vec::new();
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    got.extend(t.drain());
+                    std::thread::yield_now();
+                }
+                got
+            })
+        };
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let t = Arc::clone(&tracer);
+                s.spawn(move || {
+                    for i in 0..per_producer {
+                        let ring = (p + i) % 4;
+                        t.record(ring, span((p * per_producer + i) as u64, Stage::Execute, 1));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let mut got = collector.join().unwrap();
+        // Producers are done: one last drain empties whatever is left.
+        got.extend(tracer.drain());
+        got
+    });
+    let attempts = (producers * per_producer) as u64;
+    assert_eq!(
+        tracer.recorded() + tracer.dropped(),
+        attempts,
+        "every push must be recorded or dropped, exactly once"
+    );
+    assert_eq!(
+        drained.len() as u64,
+        tracer.recorded(),
+        "the drains together must export exactly the recorded spans"
+    );
+    assert!(tracer.dropped() > 0, "32-slot rings under this load must overflow");
+    // No span was duplicated or invented: ids are unique by construction.
+    let mut ids: Vec<u64> = drained.iter().map(|s| s.req).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), drained.len(), "drained spans must be unique");
+}
+
+/// Out-of-range ring indices clamp instead of panicking — instrumented
+/// code paths must never be able to crash the serving path.
+#[test]
+fn ring_index_clamps_to_the_last_ring() {
+    let t = Tracer::new(&TelemetryConfig::default(), 2).unwrap();
+    assert!(t.record(usize::MAX, span(1, Stage::Admit, 1)));
+    assert_eq!(t.drain().len(), 1);
+}
+
+/// The acceptance gate's in-process half: the same seeded workload
+/// through gateways with 1, 2, and 4 workers must produce the identical
+/// pinned ledger line — the sampled-id set is a pure function of
+/// `(seed, sample_per, attempts)` and never of scheduling.
+#[test]
+fn ledger_line_is_worker_count_independent_on_the_gateway() {
+    let run = |workers: usize| -> TraceLedger {
+        let tracer = Arc::new(
+            Tracer::new(
+                &TelemetryConfig { seed: 11, sample_per: 4, ring_capacity: 4096 },
+                2 + workers,
+            )
+            .unwrap(),
+        );
+        let server = two_model_gateway(ServeConfig {
+            max_batch: 4,
+            max_wait_us: 500,
+            workers,
+            queue_depth: 256,
+            trace: Some(Arc::clone(&tracer)),
+            ..Default::default()
+        });
+        let names = ["exact", "heam"];
+        let mut pending: Vec<Pending> = Vec::new();
+        for i in 0..96u64 {
+            let image = image_for(1000 + i, 28 * 28);
+            match server.try_submit(names[i as usize % 2], image).unwrap() {
+                Submission::Admitted(p) => pending.push(p),
+                Submission::Rejected => panic!("depth-256 queues must admit 96 requests"),
+            }
+        }
+        for p in pending {
+            p.wait_timeout(std::time::Duration::from_secs(30)).unwrap();
+        }
+        server.shutdown();
+        tracer.ledger()
+    };
+    let (a, b, c) = (run(1), run(2), run(4));
+    assert_eq!(a.line(), b.line(), "1 vs 2 workers");
+    assert_eq!(a.line(), c.line(), "1 vs 4 workers");
+    assert_eq!(a.sampled, b.sampled);
+    assert_eq!(a.attempts, 96);
+    assert!(!a.sampled.is_empty(), "1/4 sampling of 96 must pick something");
+}
+
+/// `heam calibrate` end to end, minus the CLI: a fully sampled run
+/// drains cleanly (exported == recorded, nothing dropped), aggregates
+/// into a calibration covering every family tier, and the artifact
+/// round-trips through disk into the costs the replay consumes.
+#[test]
+fn calibration_from_a_live_traced_run_covers_the_family() {
+    let tracer = Arc::new(
+        Tracer::new(
+            &TelemetryConfig { seed: 7, sample_per: 1, ring_capacity: 1 << 15 },
+            2 + 2,
+        )
+        .unwrap(),
+    );
+    let server = two_model_gateway(ServeConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        workers: 2,
+        queue_depth: 64,
+        trace: Some(Arc::clone(&tracer)),
+        ..Default::default()
+    });
+    let names = vec!["exact".to_string(), "heam".to_string()];
+    for i in 0..32u64 {
+        if let Submission::Admitted(p) =
+            server.try_submit(&names[i as usize % 2], image_for(i, 28 * 28)).unwrap()
+        {
+            p.wait_timeout(std::time::Duration::from_secs(30)).unwrap();
+        }
+    }
+    server.shutdown();
+    let spans = tracer.drain();
+    let ledger = tracer.ledger();
+    assert_eq!(ledger.dropped, 0, "32k rings must not overflow on 32 requests");
+    assert_eq!(spans.len() as u64, ledger.recorded, "exported == recorded");
+    let cal = Calibration::from_spans(7, 32, &spans, &tracer.labels(), &names);
+    // Every tier was exercised, so the replay handoff must be total.
+    let costs = cal.tier_costs(&names).expect("both tiers must be measured");
+    assert_eq!(costs.len(), 2);
+    assert!(costs.iter().all(|&c| c >= 1), "costs clamp to >= 1us: {costs:?}");
+    assert_eq!(cal.tiers[0].name, "exact", "tiers in family accuracy order");
+    assert_eq!(cal.tiers[1].name, "heam");
+    // Per-stage rows cover the whole instrumented path.
+    for want in ["admit", "queue_wait", "execute", "layer_execute", "respond"] {
+        assert!(
+            cal.stages.iter().any(|r| r.name == want && r.count > 0),
+            "stage '{want}' missing from {:?}",
+            cal.stages
+        );
+    }
+    assert!(!cal.kernels.is_empty(), "LayerExecute spans must carry kernel labels");
+    // Disk round-trip preserves the artifact bit-for-bit.
+    let dir = std::env::temp_dir().join("heam_telemetry_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cal.json");
+    cal.save(path.to_str().unwrap()).unwrap();
+    assert_eq!(Calibration::load(path.to_str().unwrap()).unwrap(), cal);
+}
+
+/// Satellite: the stage-histogram and kernel-counter halves of the
+/// snapshot algebra. `merge` folds lanes with different kernel sets
+/// into one label-sorted view; `delta_since` isolates a window and
+/// *saturates* against stale baselines instead of wrapping.
+#[test]
+fn stage_histograms_survive_merge_and_delta() {
+    let a = Metrics::with_observability(1, vec!["exact".to_string()]);
+    let b = Metrics::with_observability(1, vec!["lut16+avx2".to_string()]);
+    a.record_stage(Stage::Admit, 3);
+    a.record_stage(Stage::Execute, 1000);
+    a.record_kernel_execs(0, 5);
+    b.record_stage(Stage::Execute, 4000);
+    b.record_kernel_execs(0, 7);
+
+    let merged = Snapshot::zero().merge(&a.snapshot()).merge(&b.snapshot());
+    assert_eq!(merged.stage_count(Stage::Execute), 2, "both lanes' execute spans");
+    assert_eq!(merged.stage_count(Stage::Admit), 1);
+    assert_eq!(
+        merged.kernel_execs,
+        vec![("exact".to_string(), 5), ("lut16+avx2".to_string(), 7)],
+        "kernel counters merge by label, label-sorted"
+    );
+    // The histogram kept the magnitudes: p100 lands in the 4000us lane.
+    assert!(merged.stage_percentile_us(Stage::Execute, 1.0) >= 2048);
+
+    // Window isolation: only what happened after the baseline shows.
+    let base = merged.clone();
+    let c = Metrics::with_observability(1, vec!["exact".to_string()]);
+    c.record_stage(Stage::Execute, 16);
+    c.record_kernel_execs(0, 2);
+    let now = base.clone().merge(&c.snapshot());
+    let d = now.delta_since(&base);
+    assert_eq!(d.stage_count(Stage::Execute), 1, "one new execute span in the window");
+    assert_eq!(d.stage_count(Stage::Admit), 0);
+    assert_eq!(d.stage_percentile_us(Stage::Execute, 1.0), 31, "16us bucket bound");
+    let exact = d.kernel_execs.iter().find(|(n, _)| n == "exact").unwrap();
+    assert_eq!(exact.1, 2, "kernel delta isolates the window");
+
+    // Stale baseline (newer than "current"): saturate, never wrap.
+    let r = base.delta_since(&now);
+    assert_eq!(r.stage_count(Stage::Execute), 0);
+    assert!(r.kernel_execs.iter().all(|(_, n)| *n == 0), "{:?}", r.kernel_execs);
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command — the same gate CI runs (.github/workflows/ci.yml).
 #
-#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched/chaos/pareto/kernels smokes + python tests
+#   scripts/check.sh            # rust build + rust tests + loadgen/qos/sched/chaos/pareto/kernels/trace smokes + python tests
 #   scripts/check.sh --rust     # rust only (includes all smokes)
 #   scripts/check.sh --python   # python only
 #   scripts/check.sh --loadgen  # loadgen determinism smoke only (builds if needed)
@@ -10,6 +10,7 @@
 #   scripts/check.sh --chaos    # fault-injection / containment smoke only (builds if needed)
 #   scripts/check.sh --pareto   # per-layer Pareto frontier determinism smoke only (builds if needed)
 #   scripts/check.sh --kernels  # kernel specialization / SIMD dispatch smoke only (builds if needed)
+#   scripts/check.sh --trace    # end-to-end tracing observability smoke only (builds if needed)
 #
 # Every tier that cannot run prints an explicit "SKIPPED: no cargo"
 # marker and the run exits nonzero with a per-tier summary — a green run
@@ -25,17 +26,19 @@ run_sched=1
 run_chaos=1
 run_pareto=1
 run_kernels=1
+run_trace=1
 case "${1:-}" in
   --rust) run_python=0 ;;
-  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
-  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
-  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
-  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
-  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_pareto=0; run_kernels=0 ;;
-  --pareto) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_kernels=0 ;;
-  --kernels) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0 ;;
+  --python) run_rust=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0; run_trace=0 ;;
+  --loadgen) run_rust=0; run_python=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0; run_trace=0 ;;
+  --qos) run_rust=0; run_python=0; run_loadgen=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0; run_trace=0 ;;
+  --sched) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_chaos=0; run_pareto=0; run_kernels=0; run_trace=0 ;;
+  --chaos) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_pareto=0; run_kernels=0; run_trace=0 ;;
+  --pareto) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_kernels=0; run_trace=0 ;;
+  --kernels) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_trace=0 ;;
+  --trace) run_rust=0; run_python=0; run_loadgen=0; run_qos=0; run_sched=0; run_chaos=0; run_pareto=0; run_kernels=0 ;;
   "") ;;
-  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos|--pareto|--kernels]" >&2; exit 2 ;;
+  *) echo "usage: scripts/check.sh [--rust|--python|--loadgen|--qos|--sched|--chaos|--pareto|--kernels|--trace]" >&2; exit 2 ;;
 esac
 
 # Deterministic serving smoke: a short fixed-seed open-loop soak, run
@@ -267,6 +270,46 @@ kernels_smoke() {
   echo "kernels smoke OK: $(printf '%s\n' "$out_a" | grep '^kernel check OK')"
 }
 
+# Fixed-seed end-to-end tracing smoke: the same seeded class-trace
+# replay with span tracing enabled, run at 1, 2, and 4 workers. The
+# pinned artifact is the `trace ledger` line: the sampled-id set — and
+# therefore its FNV fingerprint — is a pure function of (trace seed,
+# sample rate, admission attempts), so it must be byte-identical however
+# the batches land on workers. Each run's own "trace accounting OK" line
+# additionally asserts that every recorded span was exported to the
+# JSONL artifact (exported == recorded, drops counted exactly).
+trace_smoke() {
+  echo "== trace observability smoke =="
+  local bin=target/release/heam
+  cargo build --release
+  local classes='hi:prio=0,p99_ms=25,tier=0,weight=1;lo:prio=1,p99_ms=60,tier=2,weight=3'
+  local ref_line=""
+  local workers out line
+  for workers in 1 2 4; do
+    out=$("$bin" loadgen --classes "$classes" --family exact,heam,ou3 \
+          --seed 7 --requests 4000 --rate 2000 \
+          --qos-interval-ms 20 --workers "$workers" \
+          --trace-out "/tmp/heam_trace_w$workers.jsonl" \
+          --trace-seed 7 --trace-sample 64 \
+          --out "/tmp/heam_trace_w$workers.json")
+    if ! printf '%s\n' "$out" | grep -q 'trace accounting OK'; then
+      echo "!! span accounting did not pass at $workers workers:" >&2
+      printf '%s\n' "$out" >&2
+      exit 1
+    fi
+    line=$(printf '%s\n' "$out" | grep '^trace ledger')
+    if [ -z "$ref_line" ]; then
+      ref_line="$line"
+    elif [ "$line" != "$ref_line" ]; then
+      echo "!! trace ledger diverged with worker count:" >&2
+      echo "   1 worker:  $ref_line" >&2
+      echo "   $workers workers: $line" >&2
+      exit 1
+    fi
+  done
+  echo "trace smoke OK: $ref_line"
+}
+
 # Per-tier ledger. A tier that cannot run appends to `skipped` and
 # prints the literal "SKIPPED: no cargo" marker — machine-greppable, so
 # log scrapers can't mistake a skipped gate for a green one. The final
@@ -294,12 +337,14 @@ if [ "$run_rust" = 1 ]; then
     run_chaos=0
     run_pareto=0
     run_kernels=0
+    run_trace=0
     mark_skip loadgen
     mark_skip qos
     mark_skip sched
     mark_skip chaos
     mark_skip pareto
     mark_skip kernels
+    mark_skip trace
   fi
 fi
 
@@ -354,6 +399,15 @@ if [ "$run_kernels" = 1 ]; then
     mark_pass kernels
   else
     mark_skip kernels
+  fi
+fi
+
+if [ "$run_trace" = 1 ]; then
+  if command -v cargo >/dev/null 2>&1; then
+    trace_smoke
+    mark_pass trace
+  else
+    mark_skip trace
   fi
 fi
 

@@ -1,0 +1,164 @@
+//! Committed-baseline bookkeeping: legacy findings are tracked, new
+//! ones fail the gate.
+//!
+//! The baseline is keyed on `(rule, path) → count`, not on line
+//! numbers: unrelated edits move lines constantly, and a line-keyed
+//! baseline would churn (or worse, silently re-match a *new* finding
+//! against a stale entry). Counts are stable under drift and still
+//! strict — adding one more `.expect(` to a baselined file trips the
+//! gate, and fixing one makes the surplus visible as a *stale* entry
+//! so the baseline is burned down explicitly with `--update-baseline`.
+//!
+//! Serialized via `util::json` (BTreeMap objects), so the committed
+//! file is byte-deterministic: same findings, same file.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+use super::Finding;
+
+/// Format tag in the committed file; bump on incompatible change.
+pub const FORMAT: &str = "heam-analyze-baseline-v1";
+
+/// Accepted legacy findings: `(rule, path) → count`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    counts: BTreeMap<(String, String), usize>,
+}
+
+/// Result of diffing a finding list against a baseline.
+#[derive(Debug, Default)]
+pub struct Diff {
+    /// Indices (into the sorted finding list) not covered by the
+    /// baseline — these fail the gate.
+    pub new: Vec<usize>,
+    /// Findings absorbed by the baseline.
+    pub baselined: usize,
+    /// Baseline entries larger than reality (fixed findings): rendered
+    /// `"R5 path: baseline 9, found 8"`. Warn-only, but the self-test
+    /// pins this empty so the committed baseline stays exact.
+    pub stale: Vec<String>,
+}
+
+impl Baseline {
+    /// The empty baseline (every finding is new).
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    /// Count of distinct `(rule, path)` entries.
+    pub fn entries(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total findings the baseline absorbs.
+    pub fn total(&self) -> usize {
+        self.counts.values().sum()
+    }
+
+    /// Build a baseline that absorbs exactly `findings`.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in findings {
+            *counts
+                .entry((f.rule.to_string(), f.path.clone()))
+                .or_insert(0) += 1;
+        }
+        Baseline { counts }
+    }
+
+    /// Parse the committed JSON form.
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let v = json::parse(text).context("parsing analyze baseline")?;
+        let format = v.require("format")?.as_str().unwrap_or("");
+        if format != FORMAT {
+            bail!("unsupported analyze baseline format '{format}' (expected '{FORMAT}')");
+        }
+        let mut counts = BTreeMap::new();
+        for e in v.require("entries")?.as_arr().unwrap_or(&[]) {
+            let rule = e
+                .require("rule")?
+                .as_str()
+                .context("baseline entry 'rule' is not a string")?
+                .to_string();
+            let path = e
+                .require("path")?
+                .as_str()
+                .context("baseline entry 'path' is not a string")?
+                .to_string();
+            let count = e.require_usize("count")?;
+            if counts.insert((rule.clone(), path.clone()), count).is_some() {
+                bail!("duplicate baseline entry ({rule}, {path})");
+            }
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Load from disk; a missing file is the empty baseline (a fresh
+    /// checkout of a clean tree needs no committed file).
+    pub fn load(path: &Path) -> Result<Baseline> {
+        if !path.exists() {
+            return Ok(Baseline::empty());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Baseline::parse(&text)
+    }
+
+    /// Serialize deterministically (entries sorted by (rule, path),
+    /// BTreeMap key order inside each object, trailing newline).
+    pub fn to_json(&self) -> String {
+        let entries: Vec<Value> = self
+            .counts
+            .iter()
+            .map(|((rule, path), count)| {
+                Value::obj(vec![
+                    ("count", Value::Int(*count as i64)),
+                    ("path", Value::Str(path.clone())),
+                    ("rule", Value::Str(rule.clone())),
+                ])
+            })
+            .collect();
+        let doc = Value::obj(vec![
+            ("entries", Value::Arr(entries)),
+            ("format", Value::Str(FORMAT.to_string())),
+        ]);
+        let mut s = doc.to_json();
+        s.push('\n');
+        s
+    }
+
+    /// Diff sorted `findings` against this baseline. Within one
+    /// `(rule, path)` group the baseline absorbs the first `count`
+    /// findings in line order; the surplus is new.
+    pub fn diff(&self, findings: &[Finding]) -> Diff {
+        let mut seen: BTreeMap<(String, String), usize> = BTreeMap::new();
+        let mut d = Diff::default();
+        for (idx, f) in findings.iter().enumerate() {
+            let key = (f.rule.to_string(), f.path.clone());
+            let allowed = self.counts.get(&key).copied().unwrap_or(0);
+            let used = seen.entry(key).or_insert(0);
+            if *used < allowed {
+                *used += 1;
+                d.baselined += 1;
+            } else {
+                d.new.push(idx);
+            }
+        }
+        for ((rule, path), &allowed) in &self.counts {
+            let used = seen
+                .get(&(rule.clone(), path.clone()))
+                .copied()
+                .unwrap_or(0);
+            if used < allowed {
+                d.stale
+                    .push(format!("{rule} {path}: baseline {allowed}, found {used}"));
+            }
+        }
+        d
+    }
+}

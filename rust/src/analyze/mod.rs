@@ -1,0 +1,201 @@
+//! `heam analyze` — a self-hosted, dependency-free static-analysis
+//! pass over this repo's own Rust tree.
+//!
+//! Every load-bearing guarantee here — bit-exact LUT-GEMM kernels,
+//! byte-identical trace/sched/fault/qos ledgers at any worker count,
+//! drain-on-shutdown — is an invariant the compiler cannot check, and
+//! the PR history shows them slipping mechanically (an unregistered
+//! test target, an unbounded wait, a wrapping 32-bit counter). This
+//! module encodes those incident classes as rules (`rules.rs`), lexes
+//! the tree precisely enough to scan only real code (`source.rs`), and
+//! gates CI against *new* findings while a committed
+//! `analyze-baseline.json` tracks the legacy ones (`baseline.rs`).
+//!
+//! The analyzer follows the repo's own determinism discipline: file
+//! walk sorted, findings sorted by (path, line, rule), output
+//! byte-identical across runs, and an FNV-1a fingerprint over the
+//! rendered findings printed in the summary — `scripts/check.sh
+//! --analyze` double-runs it and diffs, exactly like the trace/sched
+//! ledger smokes.
+//!
+//! Suppressions are inline and justified at the site:
+//!
+//! ```text
+//! // heam-analyze: allow(R2): bounded by channel disconnect at drain.
+//! let job = rx.recv();
+//! ```
+//!
+//! `allow-file(Rn)` in any comment suppresses a rule for the whole
+//! file. A standalone suppression comment covers the next code line.
+
+pub mod baseline;
+pub mod rules;
+pub mod source;
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::hash::fnv1a_bytes;
+
+pub use baseline::Baseline;
+pub use source::SourceFile;
+
+/// Finding severity. Informational: the baseline gate treats every
+/// non-baselined finding as fatal regardless of severity (a "warn"
+/// class you can freely add to isn't a gate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One rule violation. Field order gives the derived `Ord` the output
+/// order the determinism contract promises: path, then line, then
+/// rule.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    /// 1-based line number (1 for file-level findings).
+    pub line: usize,
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub msg: String,
+}
+
+impl Finding {
+    /// One deterministic output line: `path:line severity [rule] msg`.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{} {} [{}] {}",
+            self.path, self.line, self.severity, self.rule, self.msg
+        )
+    }
+}
+
+/// The result of one analyzer pass.
+pub struct Report {
+    /// Sorted by (path, line, rule); suppressions already applied.
+    pub findings: Vec<Finding>,
+    /// Findings silenced by inline `heam-analyze: allow(..)` comments.
+    pub suppressed: usize,
+    /// Files scanned (including Cargo.toml).
+    pub files: usize,
+}
+
+impl Report {
+    /// FNV-1a over the rendered findings, newline-terminated — the
+    /// same fingerprint discipline as the trace/sched/fault ledgers,
+    /// so `check.sh --analyze` can pin byte-identical double runs.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a_bytes(
+            self.findings
+                .iter()
+                .flat_map(|f| f.render().into_bytes().into_iter().chain([b'\n'])),
+        )
+    }
+}
+
+/// Analyze an in-memory file set: `(repo-relative path, content)`.
+/// This is the pure core — `run` is fs glue around it, and the fixture
+/// tests call it directly. The R1 disk inventory is derived from the
+/// paths present in `files`.
+pub fn analyze_files(files: &[(String, String)]) -> Report {
+    let inventory = |dir: &str| -> Vec<String> {
+        files
+            .iter()
+            .map(|(p, _)| p.clone())
+            .filter(|p| p.starts_with(dir) && p.ends_with(".rs"))
+            .collect()
+    };
+    let test_files = inventory("rust/tests/");
+    let bench_files = inventory("rust/benches/");
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for (path, content) in files {
+        if path == "Cargo.toml" {
+            findings.extend(rules::check_manifest(content, &test_files, &bench_files));
+            continue;
+        }
+        if !path.ends_with(".rs") {
+            continue;
+        }
+        let sf = SourceFile::parse(path, content);
+        for f in rules::check_source(&sf) {
+            if sf.allowed(f.line - 1, f.rule) {
+                suppressed += 1;
+            } else {
+                findings.push(f);
+            }
+        }
+    }
+    findings.sort();
+    Report {
+        findings,
+        suppressed,
+        files: files.len(),
+    }
+}
+
+/// Analyze the tree rooted at `root`: `Cargo.toml` plus every `.rs`
+/// file under `rust/src`, `rust/tests`, `rust/benches`, `examples`
+/// (vendored crates are out of scope — not our code to lint).
+pub fn run(root: &Path) -> Result<Report> {
+    Ok(analyze_files(&collect_files(root)?))
+}
+
+fn collect_files(root: &Path) -> Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    let cargo = root.join("Cargo.toml");
+    if cargo.exists() {
+        let text = std::fs::read_to_string(&cargo)
+            .with_context(|| format!("reading {}", cargo.display()))?;
+        files.push(("Cargo.toml".to_string(), text));
+    }
+    for dir in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        walk(root, Path::new(dir), &mut files)?;
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(files)
+}
+
+fn walk(root: &Path, rel: &Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    let abs = root.join(rel);
+    if !abs.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(&abs)
+        .with_context(|| format!("listing {}", abs.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let rel_child = rel.join(&name);
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &rel_child, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            // Normalize separators so scoping and output are identical
+            // on every platform.
+            let rel_str = rel_child
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel_str, text));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! The rule set. Each rule is distilled from a real incident in this
+//! repo's PR history (see EXPERIMENTS.md §"Static analysis" for the
+//! full writeups):
+//!
+//! * **R1** — every `rust/tests/*.rs` / `rust/benches/*.rs` file has a
+//!   matching `[[test]]`/`[[bench]]` entry in `Cargo.toml`. PR 7 found
+//!   the PR-6 chaos suite silently unregistered: `cargo test` was green
+//!   while the whole fault-injection tier never ran.
+//! * **R2** — no unbounded `.recv()` / `.wait(` in serving, test, bench
+//!   or example code: a hung worker must surface as a timeout, not a
+//!   wedged suite. PR 6 retrofitted `_timeout` variants everywhere.
+//! * **R3** — no `Instant::now` / `SystemTime` in deterministic-replay
+//!   or fingerprint modules. A wall-clock read that leaks into a ledger
+//!   turns "same seed, same fingerprint" into a flaky promise.
+//! * **R4** — every `unsafe` site carries an adjacent `// SAFETY:`
+//!   comment (or `# Safety` doc section), and `unsafe fn` bodies guard
+//!   their raw-pointer contracts with `assert!`, not `debug_assert!`
+//!   (release builds are exactly where the SIMD kernels run).
+//! * **R5** — no `.unwrap()` / `.expect(` / bare `panic!` on the
+//!   serving path (`coordinator/`): a poisoned mutex or surprised
+//!   invariant must degrade one request, not the whole gateway.
+//! * **R6** — long-lived counters in the metrics layer are `u64`.
+//!   PR 9 had to widen wrapping 32-bit counters.
+//!
+//! Rules emit *raw* findings; the engine in `mod.rs` applies inline
+//! suppressions and sorts.
+
+use super::source::{has_word, SourceFile};
+use super::{Finding, Severity};
+
+/// Static metadata for one rule (usage text and docs).
+pub struct Rule {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "R1",
+        severity: Severity::Error,
+        summary: "every rust/tests + rust/benches file is registered in Cargo.toml",
+    },
+    Rule {
+        id: "R2",
+        severity: Severity::Error,
+        summary: "no unbounded .recv()/.wait( — use the _timeout variants",
+    },
+    Rule {
+        id: "R3",
+        severity: Severity::Error,
+        summary: "no wall-clock reads in deterministic replay/fingerprint modules",
+    },
+    Rule {
+        id: "R4",
+        severity: Severity::Error,
+        summary: "unsafe sites carry SAFETY comments; unsafe fns use assert!, not debug_assert!",
+    },
+    Rule {
+        id: "R5",
+        severity: Severity::Warn,
+        summary: "no unwrap/expect/panic! on the serving path (coordinator/)",
+    },
+    Rule {
+        id: "R6",
+        severity: Severity::Error,
+        summary: "long-lived metrics counters are u64",
+    },
+];
+
+/// How many lines above an `unsafe` site the SAFETY comment may sit,
+/// crossing only comment, attribute, and blank lines.
+const SAFETY_LOOKBACK: usize = 30;
+
+/// Run every source-level rule (R2–R6) against one lexed file,
+/// returning raw findings (suppressions not yet applied). 1-based
+/// line numbers.
+pub fn check_source(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let p = sf.path.as_str();
+    if r2_scope(p) {
+        r2_unbounded_waits(sf, &mut out);
+    }
+    if r3_scope(p) {
+        r3_wall_clock(sf, &mut out);
+    }
+    if p.ends_with(".rs") {
+        r4_unsafe_hygiene(sf, &mut out);
+    }
+    if r5_scope(p) {
+        r5_serving_panics(sf, &mut out);
+    }
+    if r6_scope(p) {
+        r6_narrow_counters(sf, &mut out);
+    }
+    out
+}
+
+/// R2 covers everything that blocks in serving or in the suites: a
+/// hang anywhere here wedges either the gateway or CI.
+fn r2_scope(path: &str) -> bool {
+    path.starts_with("rust/src/coordinator/")
+        || path.starts_with("rust/tests/")
+        || path.starts_with("rust/benches/")
+        || path.starts_with("examples/")
+}
+
+/// R3 covers the modules whose output is fingerprinted or replayed:
+/// the QoS replay clock, the fault plan, loadgen trace generation, and
+/// the telemetry ledger.
+fn r3_scope(path: &str) -> bool {
+    path == "rust/src/coordinator/qos/replay.rs"
+        || path == "rust/src/coordinator/fault.rs"
+        || path == "rust/src/coordinator/loadgen.rs"
+        || path.starts_with("rust/src/coordinator/telemetry/")
+}
+
+/// R5 covers the request path: everything under `coordinator/`.
+fn r5_scope(path: &str) -> bool {
+    path.starts_with("rust/src/coordinator/")
+}
+
+/// R6 covers the long-lived counter structs. Scoped to `metrics.rs`
+/// only: elsewhere 32-bit integers are legitimate (e.g. the QoS
+/// router's milli-unit tier levels are values, not counters).
+fn r6_scope(path: &str) -> bool {
+    path == "rust/src/coordinator/metrics.rs"
+}
+
+fn finding(sf: &SourceFile, line0: usize, rule: &'static str, sev: Severity, msg: String) -> Finding {
+    Finding {
+        path: sf.path.clone(),
+        line: line0 + 1,
+        rule,
+        severity: sev,
+        msg,
+    }
+}
+
+fn r2_unbounded_waits(sf: &SourceFile, out: &mut Vec<Finding>) {
+    // `.recv()` and `.wait(` never match their `_timeout` variants:
+    // the parenthesis / closing paren is part of the pattern.
+    for (i, line) in sf.lines.iter().enumerate() {
+        for pat in [".recv()", ".wait("] {
+            if line.code.contains(pat) {
+                out.push(finding(
+                    sf,
+                    i,
+                    "R2",
+                    Severity::Error,
+                    format!(
+                        "unbounded `{pat}` — use the `_timeout` variant, or justify with \
+                         `// heam-analyze: allow(R2): <why this wait is bounded>`"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn r3_wall_clock(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.in_test[i] {
+            continue;
+        }
+        for tok in ["Instant::now", "SystemTime"] {
+            if line.code.contains(tok) {
+                out.push(finding(
+                    sf,
+                    i,
+                    "R3",
+                    Severity::Error,
+                    format!(
+                        "wall-clock `{tok}` in a deterministic replay/fingerprint module — \
+                         derive time from the virtual clock or keep it out of ledger state"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn r4_unsafe_hygiene(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if has_word(&line.code, "unsafe") && !safety_justified(sf, i) {
+            out.push(finding(
+                sf,
+                i,
+                "R4",
+                Severity::Error,
+                "`unsafe` without an adjacent `// SAFETY:` comment (or `# Safety` doc \
+                 section) stating the contract"
+                    .to_string(),
+            ));
+        }
+        if sf.in_unsafe_fn[i] && has_debug_assert(&line.code) {
+            out.push(finding(
+                sf,
+                i,
+                "R4",
+                Severity::Error,
+                "`debug_assert!` guarding an `unsafe fn` body — raw-pointer contracts \
+                 must hold in release builds too; use `assert!`"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// True when line `i` (0-based) has a SAFETY justification: on the
+/// same line, or directly above across comment / attribute / blank
+/// lines only.
+fn safety_justified(sf: &SourceFile, i: usize) -> bool {
+    let is_safety = |l: &super::source::Line| {
+        l.comment.contains("SAFETY") || l.comment.contains("# Safety")
+    };
+    if is_safety(&sf.lines[i]) {
+        return true;
+    }
+    for j in (i.saturating_sub(SAFETY_LOOKBACK)..i).rev() {
+        let l = &sf.lines[j];
+        if is_safety(l) {
+            return true;
+        }
+        let code = l.code.trim();
+        if code.is_empty() || code.starts_with("#[") || code.starts_with("#![") {
+            continue; // comment, blank, or attribute line: keep looking
+        }
+        return false; // real code with no SAFETY in between
+    }
+    false
+}
+
+/// Matches `debug_assert!`, `debug_assert_eq!`, `debug_assert_ne!`
+/// with an identifier boundary before the token.
+fn has_debug_assert(code: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find("debug_assert") {
+        let abs = from + pos;
+        let before_ok = abs == 0
+            || !code[..abs]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok {
+            return true;
+        }
+        from = abs + "debug_assert".len();
+    }
+    false
+}
+
+fn r5_serving_panics(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.in_test[i] {
+            continue;
+        }
+        for pat in [".unwrap()", ".expect(", "panic!("] {
+            if line.code.contains(pat) {
+                out.push(finding(
+                    sf,
+                    i,
+                    "R5",
+                    Severity::Warn,
+                    format!(
+                        "`{pat}` on the serving path — propagate a typed error or recover \
+                         (poisoned locks: `util::sync::lock_unpoisoned`)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn r6_narrow_counters(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, line) in sf.lines.iter().enumerate() {
+        if sf.in_test[i] {
+            continue;
+        }
+        for tok in ["u32", "i32", "AtomicU32", "AtomicI32"] {
+            if has_word(&line.code, tok) {
+                out.push(finding(
+                    sf,
+                    i,
+                    "R6",
+                    Severity::Error,
+                    format!(
+                        "32-bit `{tok}` in the long-lived metrics layer — counters wrap \
+                         under sustained load; use u64 (the PR-9 incident class)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// R1: cross-check `Cargo.toml` `[[test]]`/`[[bench]]` registrations
+/// against the files on disk, both directions. `test_files` and
+/// `bench_files` are repo-relative paths (`rust/tests/foo.rs`).
+///
+/// This is the PR-7 incident as a permanent check: `chaos.rs` sat on
+/// disk for a full PR cycle with `cargo test` green because the target
+/// was never registered (this crate sets `autotests = false`
+/// semantics by registering every target explicitly).
+pub fn check_manifest(cargo_toml: &str, test_files: &[String], bench_files: &[String]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // Collect `path = "..."` entries per section kind, with line numbers.
+    let mut section = "";
+    let mut registered: Vec<(&'static str, String, usize)> = Vec::new();
+    for (idx, raw) in cargo_toml.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.starts_with('[') {
+            section = match line {
+                "[[test]]" => "test",
+                "[[bench]]" => "bench",
+                _ => "",
+            };
+            continue;
+        }
+        if section.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("path") {
+            let rest = rest.trim_start();
+            if let Some(v) = rest.strip_prefix('=') {
+                let v = v.trim().trim_matches('"');
+                let kind = if section == "test" { "test" } else { "bench" };
+                registered.push((kind, v.to_string(), idx + 1));
+            }
+        }
+    }
+    for (kind, files) in [("test", test_files), ("bench", bench_files)] {
+        for f in files {
+            if !registered.iter().any(|(k, p, _)| *k == kind && p == f) {
+                out.push(Finding {
+                    path: "Cargo.toml".to_string(),
+                    line: 1,
+                    rule: "R1",
+                    severity: Severity::Error,
+                    msg: format!(
+                        "`{f}` exists on disk but has no `[[{kind}]]` entry in Cargo.toml — \
+                         it silently never runs (the PR-7 chaos.rs failure mode)"
+                    ),
+                });
+            }
+        }
+        for (k, p, line) in &registered {
+            if *k == kind && !files.iter().any(|f| f == p) {
+                out.push(Finding {
+                    path: "Cargo.toml".to_string(),
+                    line: *line,
+                    rule: "R1",
+                    severity: Severity::Error,
+                    msg: format!(
+                        "`[[{kind}]]` entry `{p}` points at a file that does not exist on disk"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}

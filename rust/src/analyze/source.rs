@@ -1,0 +1,401 @@
+//! Source-file model for the analyzer: a small Rust lexer that splits
+//! every line into *code* and *comment* channels, plus the derived
+//! layers the rules consume (`#[cfg(test)]` regions, `unsafe fn`
+//! bodies, and `heam-analyze` suppression comments).
+//!
+//! The lexer is deliberately token-level, not a parser: it only has to
+//! be exact about what is code versus comment versus string/char
+//! literal, because every rule in `rules.rs` is a scoped substring
+//! match over the code channel. String and char *contents* are masked
+//! to spaces (the delimiters are kept so tokens cannot merge across a
+//! literal), which is what lets the analyzer's own fixture-bearing test
+//! suite — raw strings full of `.recv()` and `.unwrap()` bait — scan
+//! clean when the analyzer is applied to itself.
+
+use std::collections::BTreeSet;
+
+/// One physical source line, split into channels by the lexer.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// Code with comments removed and string/char contents masked to
+    /// spaces (delimiters kept).
+    pub code: String,
+    /// Concatenated comment text on this line (`//`, `///`, `//!` and
+    /// the slice of any block comment crossing it).
+    pub comment: String,
+}
+
+/// A lexed source file plus the region/suppression layers.
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    pub lines: Vec<Line>,
+    /// Line is inside a `#[cfg(test)]`-gated block.
+    pub in_test: Vec<bool>,
+    /// Line is inside the body of an `unsafe fn`.
+    pub in_unsafe_fn: Vec<bool>,
+    /// Per-line suppressed rule ids (from `// heam-analyze: allow(..)`).
+    allow: Vec<BTreeSet<String>>,
+    /// File-wide suppressed rule ids (from `allow-file(..)`).
+    allow_file: BTreeSet<String>,
+}
+
+impl SourceFile {
+    /// Lex `text` and derive every layer. `path` is kept verbatim (the
+    /// rules scope on it).
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let lines = lex(text);
+        let (in_test, in_unsafe_fn) = regions(&lines);
+        let (allow, allow_file) = suppressions(&lines);
+        SourceFile {
+            path: path.to_string(),
+            lines,
+            in_test,
+            in_unsafe_fn,
+            allow,
+            allow_file,
+        }
+    }
+
+    /// True when findings of `rule` on 0-based line `idx` are
+    /// suppressed by an inline or file-level allow.
+    pub fn allowed(&self, idx: usize, rule: &str) -> bool {
+        self.allow_file.contains(rule)
+            || self.allow.get(idx).is_some_and(|s| s.contains(rule))
+    }
+}
+
+/// Lexer state: what the *next* character belongs to.
+enum St {
+    Code,
+    LineComment,
+    /// Block comment at nesting depth (Rust block comments nest).
+    Block(u32),
+    Str,
+    /// Raw string terminated by `"` + this many `#`.
+    RawStr(usize),
+}
+
+fn lex(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut st = St::Code;
+    let mut i = 0usize;
+    let n = chars.len();
+    macro_rules! code {
+        ($c:expr) => {
+            lines.last_mut().expect("lines never empty").code.push($c)
+        };
+    }
+    macro_rules! com {
+        ($c:expr) => {
+            lines.last_mut().expect("lines never empty").comment.push($c)
+        };
+    }
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line::default());
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code!('"');
+                    st = St::Str;
+                    i += 1;
+                } else if let Some((prefix, hashes)) = raw_string_start(&chars, i) {
+                    // `r"`, `r#"`, `br"`, ... — emit the prefix and the
+                    // opening quote as code, mask the body.
+                    for _ in 0..prefix {
+                        code!(chars[i]);
+                        i += 1;
+                    }
+                    code!('"');
+                    i += 1;
+                    st = St::RawStr(hashes);
+                } else if c == '\'' {
+                    // Char literal vs lifetime. A literal is `'\...'`
+                    // or `'X'`; anything else (`'a`, `'_`, `'static`)
+                    // is a lifetime and stays plain code.
+                    if next == Some('\\') {
+                        code!('\'');
+                        i += 2; // quote + backslash
+                        if i < n && chars[i] != '\n' {
+                            i += 1; // the escaped character
+                        }
+                        while i < n && chars[i] != '\'' && chars[i] != '\n' {
+                            i += 1; // e.g. the tail of `\u{1F600}`
+                        }
+                        if i < n && chars[i] == '\'' {
+                            code!(' ');
+                            code!('\'');
+                            i += 1;
+                        }
+                    } else if chars.get(i + 2).copied() == Some('\'')
+                        && next.is_some_and(|ch| ch != '\'')
+                    {
+                        code!('\'');
+                        code!(' ');
+                        code!('\'');
+                        i += 3;
+                    } else {
+                        code!('\'');
+                        i += 1;
+                    }
+                } else {
+                    code!(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                com!(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    if depth == 1 {
+                        st = St::Code;
+                    } else {
+                        st = St::Block(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else {
+                    com!(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    code!(' ');
+                    if chars.get(i + 1).copied() == Some('\n') {
+                        i += 1; // line-continuation escape: keep the newline
+                    } else {
+                        code!(' ');
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code!('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    code!(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && (i + 1..=i + hashes).all(|j| chars.get(j).copied() == Some('#'))
+                {
+                    code!('"');
+                    for _ in 0..hashes {
+                        code!('#');
+                    }
+                    st = St::Code;
+                    i += 1 + hashes;
+                } else {
+                    code!(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines
+}
+
+/// At `chars[i]`, does a raw-string literal start? Returns
+/// `(prefix chars before the quote, hash count)` — e.g. `r#"` is
+/// `(2, 1)`, `br"` is `(2, 0)`. The char before the prefix must not be
+/// identifier-ish, so `for`, `attr` or `br` mid-identifier never match.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let ident_before = |j: usize| {
+        j > 0
+            && chars
+                .get(j - 1)
+                .is_some_and(|c| c.is_alphanumeric() || *c == '_')
+    };
+    let from_r = |r: usize| -> Option<usize> {
+        // `r` `#`* `"` — returns the hash count.
+        let mut j = r + 1;
+        let mut hashes = 0usize;
+        while chars.get(j).copied() == Some('#') {
+            hashes += 1;
+            j += 1;
+        }
+        (chars.get(j).copied() == Some('"')).then_some(hashes)
+    };
+    match chars.get(i).copied() {
+        Some('r') if !ident_before(i) => from_r(i).map(|h| (1 + h, h)),
+        Some('b')
+            if !ident_before(i) && chars.get(i + 1).copied() == Some('r') =>
+        {
+            from_r(i + 1).map(|h| (2 + h, h))
+        }
+        _ => None,
+    }
+}
+
+/// Derive the `#[cfg(test)]` and `unsafe fn` body regions by tracking
+/// brace depth over the code channel.
+fn regions(lines: &[Line]) -> (Vec<bool>, Vec<bool>) {
+    let mut in_test = vec![false; lines.len()];
+    let mut in_unsafe = vec![false; lines.len()];
+    let mut depth = 0usize;
+    let mut test_open: Vec<usize> = Vec::new();
+    let mut unsafe_open: Vec<usize> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_unsafe = false;
+    // Paren/bracket nesting while an `unsafe fn` signature is pending,
+    // so the `;` in `[u8; 4]` doesn't cancel it (only a trait-style
+    // body-less `;` at signature level does).
+    let mut pend_nest = 0i32;
+    for (idx, line) in lines.iter().enumerate() {
+        if line.code.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        if has_token_pair(&line.code, "unsafe", "fn") {
+            pending_unsafe = true;
+            pend_nest = 0;
+        }
+        let start_marked = (!test_open.is_empty(), !unsafe_open.is_empty());
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending_test {
+                        test_open.push(depth);
+                        pending_test = false;
+                    } else if pending_unsafe {
+                        unsafe_open.push(depth);
+                        pending_unsafe = false;
+                    }
+                }
+                '}' => {
+                    if test_open.last() == Some(&depth) {
+                        test_open.pop();
+                    }
+                    if unsafe_open.last() == Some(&depth) {
+                        unsafe_open.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                '(' | '[' if pending_unsafe => pend_nest += 1,
+                ')' | ']' if pending_unsafe => pend_nest -= 1,
+                ';' if pending_unsafe && pend_nest == 0 => pending_unsafe = false,
+                _ => {}
+            }
+        }
+        in_test[idx] = start_marked.0 || !test_open.is_empty();
+        in_unsafe[idx] = start_marked.1 || !unsafe_open.is_empty();
+    }
+    (in_test, in_unsafe)
+}
+
+/// True when `code` contains the two words adjacent (whitespace
+/// separated) with identifier boundaries — e.g. `pub unsafe fn x(`.
+fn has_token_pair(code: &str, a: &str, b: &str) -> bool {
+    let mut rest = code;
+    while let Some(pos) = rest.find(a) {
+        let before_ok = pos == 0
+            || !rest[..pos]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = &rest[pos + a.len()..];
+        let trimmed = after.trim_start();
+        if before_ok
+            && after.len() != trimmed.len()
+            && trimmed.starts_with(b)
+            && !trimmed[b.len()..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_')
+        {
+            return true;
+        }
+        rest = &rest[pos + a.len()..];
+    }
+    false
+}
+
+/// True when `code` contains `word` with identifier boundaries.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let mut rest = code;
+    let mut consumed = 0usize;
+    while let Some(pos) = rest.find(word) {
+        let abs = consumed + pos;
+        let before_ok = abs == 0
+            || !code[..abs]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after_ok = !code[abs + word.len()..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        consumed = abs + word.len();
+        rest = &code[consumed..];
+    }
+    false
+}
+
+const MARKER: &str = "heam-analyze:";
+
+/// Parse `// heam-analyze: allow(R2, R5): justification` and
+/// `allow-file(..)` comments. A suppression on a code-bearing line
+/// covers that line; a standalone comment covers the next line that
+/// carries code (so the justification sits directly above the site it
+/// licenses).
+fn suppressions(lines: &[Line]) -> (Vec<BTreeSet<String>>, BTreeSet<String>) {
+    let mut allow: Vec<BTreeSet<String>> = vec![BTreeSet::new(); lines.len()];
+    let mut allow_file: BTreeSet<String> = BTreeSet::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let mut text = line.comment.as_str();
+        while let Some(pos) = text.find(MARKER) {
+            text = text[pos + MARKER.len()..].trim_start();
+            let file_level = text.starts_with("allow-file(");
+            let open = match text.find('(') {
+                Some(p) if text[..p].trim() == "allow" || text[..p].trim() == "allow-file" => p,
+                _ => continue,
+            };
+            let Some(close) = text[open..].find(')') else { continue };
+            let ids = text[open + 1..open + close]
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty());
+            if file_level {
+                allow_file.extend(ids);
+            } else {
+                let rules: Vec<String> = ids.collect();
+                allow[idx].extend(rules.iter().cloned());
+                if line.code.trim().is_empty() {
+                    // Standalone comment: cover the next code line.
+                    if let Some(target) = (idx + 1..lines.len())
+                        .find(|&j| !lines[j].code.trim().is_empty())
+                    {
+                        allow[target].extend(rules.iter().cloned());
+                    }
+                }
+            }
+            text = &text[open + close..];
+        }
+    }
+    (allow, allow_file)
+}

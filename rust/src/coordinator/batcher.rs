@@ -118,6 +118,9 @@ impl<T> ClassQueues<T> {
             .max_by_key(|&v| (self.shares[v].priority, v));
         match victim {
             Some(v) => {
+                // heam-analyze: allow(R5): the victim filter requires
+                // queues[v].len() > reserved >= 0, so the queue is
+                // provably non-empty — this expect is unreachable.
                 let old = self.queues[v].pop_front().expect("victim class is non-empty");
                 self.queues[class].push_back(item);
                 Admit::Preempted { class: v, item: old }

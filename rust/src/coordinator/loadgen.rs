@@ -463,6 +463,9 @@ pub fn run(server: &Server, cfg: &LoadgenConfig) -> Result<LoadReport> {
         .map(|(name, _)| server.image_size(name).expect("validated above"))
         .collect();
 
+    // heam-analyze: allow(R3): wall-clock throughput measurement only —
+    // wall_s and throughput_rps are reporting fields, never part of the
+    // trace fingerprint (which is sealed before the run starts).
     let t0 = Instant::now();
     let totals = match cfg.mode {
         Mode::Open { .. } => run_open(server, cfg, &events, &sizes),
@@ -546,6 +549,9 @@ fn run_open(
             let mut ok = 0u64;
             let mut ok_after_retry = 0u64;
             let mut failed: Vec<(usize, u64)> = Vec::new();
+            // heam-analyze: allow(R2): bounded by disconnect — the
+            // dispatcher drops done_tx when the trace is drained, which
+            // ends this loop; each response wait below is timeout-bounded.
             while let Ok((model, image_seed, was_retried, p)) = done_rx.recv() {
                 match p.wait_timeout(Duration::from_secs(30)) {
                     Ok(_) => {
@@ -559,6 +565,9 @@ fn run_open(
         });
         let budget = cfg.retry.map_or(0, |r| r.attempts);
         let mut retry_rng = Rng::derive(cfg.seed, 7);
+        // heam-analyze: allow(R3): live open-loop pacing — arrival
+        // *offsets* come from the seeded trace; the wall clock only paces
+        // their real-time dispatch and is never fingerprinted.
         let start = Instant::now();
         let mut totals = ClientTotals::default();
         for ev in events {

@@ -19,11 +19,18 @@
 //!   deterministic lane model ([`super::replay`]); nothing here depends
 //!   on timing or worker count.
 
+// Rule R5 (`heam analyze`) keeps the request path panic-free; these
+// tool lints add the semantic check on toolchain machines. No-ops
+// under plain rustc. The test module opts back out below.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
+
+use crate::util::sync::lock_unpoisoned;
 
 use super::super::fault::{BreakerConfig, BreakerState, HealthBoard, HealthEvent};
 use super::super::metrics::Snapshot;
@@ -92,7 +99,7 @@ impl QosRouter {
     /// class's WRR credit. Never exceeds the class's accuracy floor —
     /// the controller clamps levels at `min_accuracy_tier * 1000`.
     pub fn route(&self, class: usize) -> usize {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         let level = st.ctl.levels()[class];
         let lo = (level / 1000) as usize;
         let frac = level % 1000;
@@ -117,7 +124,7 @@ impl QosRouter {
     /// served below the class's accuracy floor.
     pub fn resolve(&self, class: usize) -> (usize, Option<usize>) {
         let want = self.route(class);
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         let cap = st.ctl.policy().classes[class].min_accuracy_tier;
         let health = &mut st.health;
         let resolved = self.family.nearest_healthy(want, cap, |t| health.allow(t));
@@ -156,7 +163,7 @@ impl QosRouter {
     /// starts from the same (exact-first) routing pattern — leftover
     /// credit from a previous level must not skew the next one.
     pub fn tick(&self, obs: &[LaneObservation]) -> Option<DecisionRecord> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         // Health first: the breaker must see this window's failure /
         // straggler deltas before any submission routed after the tick.
         let deltas: Vec<(u64, u64)> =
@@ -201,81 +208,81 @@ impl QosRouter {
 
     /// Current per-class split levels (milli-tiers).
     pub fn levels(&self) -> Vec<u32> {
-        self.state.lock().unwrap().ctl.levels().to_vec()
+        lock_unpoisoned(&self.state).ctl.levels().to_vec()
     }
 
     /// The split trajectory (one level vector per tick). Entry `i`
     /// describes tick [`QosRouter::history_dropped`]` + i`.
     pub fn history(&self) -> Vec<Vec<u32>> {
-        self.state.lock().unwrap().ctl.history().to_vec()
+        lock_unpoisoned(&self.state).ctl.history().to_vec()
     }
 
     /// Ticks dropped off the front of the trajectory by the live-mode
     /// trace bound (0 for bounded replay runs).
     pub fn history_dropped(&self) -> u64 {
-        self.state.lock().unwrap().ctl.history_dropped()
+        lock_unpoisoned(&self.state).ctl.history_dropped()
     }
 
     /// The decision trace so far.
     pub fn decisions(&self) -> Vec<DecisionRecord> {
-        self.state.lock().unwrap().ctl.decisions().to_vec()
+        lock_unpoisoned(&self.state).ctl.decisions().to_vec()
     }
 
     /// Replay identity of the decision trace.
     pub fn decision_fingerprint(&self) -> u64 {
-        self.state.lock().unwrap().ctl.decision_fingerprint()
+        lock_unpoisoned(&self.state).ctl.decision_fingerprint()
     }
 
     /// Ticks elapsed.
     pub fn ticks(&self) -> u64 {
-        self.state.lock().unwrap().ctl.ticks()
+        lock_unpoisoned(&self.state).ctl.ticks()
     }
 
     /// The policy (classes + controller parameters).
     pub fn policy(&self) -> QosPolicy {
-        self.state.lock().unwrap().ctl.policy().clone()
+        lock_unpoisoned(&self.state).ctl.policy().clone()
     }
 
     /// Breaker state of one tier.
     pub fn health_state(&self, tier: usize) -> BreakerState {
-        self.state.lock().unwrap().health.state(tier)
+        lock_unpoisoned(&self.state).health.state(tier)
     }
 
     /// True when no tier is quarantined or probing.
     pub fn health_all_closed(&self) -> bool {
-        self.state.lock().unwrap().health.all_closed()
+        lock_unpoisoned(&self.state).health.all_closed()
     }
 
     /// The breaker transition ledger so far.
     pub fn health_events(&self) -> Vec<HealthEvent> {
-        self.state.lock().unwrap().health.events().to_vec()
+        lock_unpoisoned(&self.state).health.events().to_vec()
     }
 
     /// Quarantine count: transitions into `Open`.
     pub fn health_opened(&self) -> u64 {
-        self.state.lock().unwrap().health.opened()
+        lock_unpoisoned(&self.state).health.opened()
     }
 
     /// FNV fingerprint of the breaker transition ledger.
     pub fn health_fingerprint(&self) -> u64 {
-        self.state.lock().unwrap().health.fingerprint()
+        lock_unpoisoned(&self.state).health.fingerprint()
     }
 
     /// Tick of the final breaker close once every tier is healthy again
     /// (`None` while quarantined, or if nothing ever opened).
     pub fn health_recovered_tick(&self) -> Option<u64> {
-        self.state.lock().unwrap().health.recovered_tick()
+        lock_unpoisoned(&self.state).health.recovered_tick()
     }
 
     /// Submissions rerouted around a quarantined tier.
     pub fn rerouted(&self) -> u64 {
-        self.state.lock().unwrap().rerouted
+        lock_unpoisoned(&self.state).rerouted
     }
 
     /// Submissions shed because no healthy tier satisfied the class's
     /// accuracy floor.
     pub fn quarantine_shed(&self) -> u64 {
-        self.state.lock().unwrap().quarantine_shed
+        lock_unpoisoned(&self.state).quarantine_shed
     }
 }
 
@@ -341,6 +348,8 @@ pub fn spawn_live(router: Arc<QosRouter>, server: Arc<Server>) -> Result<LiveCon
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::coordinator::qos::policy::{ControllerConfig, RequestClass};
     use crate::nn::lenet;

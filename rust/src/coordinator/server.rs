@@ -26,6 +26,12 @@
 //! every job, and only then do the threads exit — no admitted request
 //! is ever dropped (preempted requests *are* answered, with an error).
 
+// The serving path must never panic on behalf of a request: rule R5
+// (`heam analyze`) enforces it textually, and these tool lints make a
+// toolchain-equipped `cargo clippy` enforce it semantically. No-ops
+// under plain rustc. The test module opts back out below.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicI64, Ordering};
@@ -47,6 +53,15 @@ use super::fault::{FaultInjector, FaultKind};
 use super::metrics::{Metrics, Snapshot};
 use super::registry::ModelRegistry;
 use super::telemetry::{Span, Stage, TraceContext, Tracer, NO_LABEL};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
+
+/// Idle-scheduler housekeeping tick: with nothing queued the scheduling
+/// loop parks on its condvar at most this long before re-deriving state
+/// from scratch. Every wake recomputes ripeness from the queues, so a
+/// periodic spurious wake is free — and it turns a lost notification
+/// (or a poisoned-then-recovered peer) into a 100 ms hiccup instead of
+/// a wedged gateway.
+const SCHED_IDLE_TICK: Duration = Duration::from_millis(100);
 
 /// Typed post-admission failures. Every admitted request is answered —
 /// the drain guarantee — and when the answer is not a prediction it is
@@ -413,12 +428,19 @@ pub enum Submission {
 }
 
 impl Pending {
-    /// Block until the gateway answers. An error here means the request
-    /// failed *after* admission (backend error, or preemption by a
-    /// higher-priority arrival) — the drain guarantee ensures the
-    /// channel is always answered, never dropped.
+    /// Backstop bound on [`Pending::wait`] / [`Pending::wait_with_latency`].
+    /// The drain guarantee means no admitted request legitimately waits
+    /// anywhere near this long; hitting it is a containment bug, and a
+    /// typed error after five minutes beats a caller wedged forever
+    /// (static-analysis rule R2 — the pre-PR-6 hang class).
+    pub const WAIT_CAP: Duration = Duration::from_secs(300);
+
+    /// Block until the gateway answers, bounded by [`Pending::WAIT_CAP`].
+    /// An error here means the request failed *after* admission (backend
+    /// error, or preemption by a higher-priority arrival) — the drain
+    /// guarantee ensures the channel is always answered, never dropped.
     pub fn wait(self) -> Result<usize> {
-        Ok(self.wait_with_latency()?.0)
+        self.wait_timeout(Self::WAIT_CAP)
     }
 
     /// Like [`Pending::wait`], additionally returning the request's
@@ -426,11 +448,9 @@ impl Pending {
     /// the serving worker. Use this when responses are collected from a
     /// queue: `Instant`-based measurement around the collecting `recv`
     /// would fold head-of-line waiting on *other* requests into this
-    /// one's latency.
+    /// one's latency. Bounded by [`Pending::WAIT_CAP`].
     pub fn wait_with_latency(self) -> Result<(usize, u64)> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("server dropped the request"))?
+        self.wait_with_latency_timeout(Self::WAIT_CAP)
     }
 
     /// Bounded [`Pending::wait`]: fails with a timeout error instead of
@@ -756,7 +776,7 @@ impl Server {
                 let mut drr = DrrPicker::new(n_lanes, max_batch);
                 loop {
                     let picked = {
-                        let mut st = sched.state.lock().unwrap();
+                        let mut st = lock_unpoisoned(&sched.state);
                         loop {
                             let now = Instant::now();
                             // Skip dead work at batch-collection time:
@@ -814,7 +834,12 @@ impl Server {
                                 if !st.open {
                                     break None; // drained: shut down
                                 }
-                                st = sched.work.wait(st).unwrap();
+                                st = wait_timeout_unpoisoned(
+                                    &sched.work,
+                                    st,
+                                    SCHED_IDLE_TICK,
+                                )
+                                .0;
                                 continue;
                             }
                             // Queued but not ripe: sleep until the
@@ -840,7 +865,7 @@ impl Server {
                             let timeout = window_timeout
                                 .min(deadline_timeout)
                                 .max(Duration::from_micros(1));
-                            st = sched.work.wait_timeout(st, timeout).unwrap().0;
+                            st = wait_timeout_unpoisoned(&sched.work, st, timeout).0;
                         }
                     };
                     match picked {
@@ -899,7 +924,7 @@ impl Server {
                                 // failed batch plus everything still
                                 // queued — an exited pool must surface
                                 // as errors, never as hung waiters.
-                                let mut st = sched.state.lock().unwrap();
+                                let mut st = lock_unpoisoned(&sched.state);
                                 st.open = false;
                                 let (_, unsent) = failed.0;
                                 for req in unsent {
@@ -974,7 +999,10 @@ impl Server {
                 let mut consecutive_panics = 0u32;
                 loop {
                     // Pull the next batch job (work-sharing across the pool).
-                    let (lane, batch) = match jobs.lock().unwrap().recv() {
+                    // heam-analyze: allow(R2): bounded by disconnect — the
+                    // scheduler drops job_tx at drain, which wakes this recv
+                    // with Err; a timeout would only add spurious wakeups.
+                    let (lane, batch) = match lock_unpoisoned(&jobs).recv() {
                         Ok(j) => j,
                         Err(_) => break,
                     };
@@ -1039,6 +1067,9 @@ impl Server {
                     let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>> {
                         match injected {
                             Some(FaultKind::Panic) => {
+                                // heam-analyze: allow(R5): deliberate fault
+                                // injection — this panic exists to exercise
+                                // the catch_unwind containment right below.
                                 panic!("injected worker panic (fault plan)")
                             }
                             Some(FaultKind::Straggle) => {
@@ -1202,11 +1233,13 @@ impl Server {
         // the gateway so the scheduler and surviving workers unwind,
         // then join everything — no threads are leaked.
         for _ in 0..n_workers {
-            let up = ready_rx
-                .recv()
-                .map_err(|_| anyhow!("server worker died during startup"));
+            // heam-analyze: allow(R2): bounded by disconnect — each worker
+            // either sends its readiness result or drops ready_tx on exit,
+            // so this startup handshake cannot outlive the worker.
+            let up = ready_rx.recv();
+            let up = up.map_err(|_| anyhow!("server worker died during startup"));
             if let Err(e) = up.and_then(|r| r) {
-                sched.state.lock().unwrap().open = false;
+                lock_unpoisoned(&sched.state).open = false;
                 sched.work.notify_all();
                 for h in threads {
                     let _ = h.join();
@@ -1312,7 +1345,7 @@ impl Server {
             trace: trace_ctx,
         };
         let outcome = {
-            let mut st = self.sched.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.sched.state);
             // A submit racing shutdown's queue close gets a graceful
             // rejection, never a panic or a dropped response channel.
             if !st.open {
@@ -1378,6 +1411,8 @@ impl Server {
 
     /// Classify one image on a named model (blocking).
     pub fn classify_model(&self, model: &str, image: Vec<f32>) -> Result<usize> {
+        // heam-analyze: allow(R2): Pending::wait is itself bounded by
+        // Pending::WAIT_CAP, so this blocking call cannot hang forever.
         self.submit(model, image)?.wait()
     }
 
@@ -1424,11 +1459,11 @@ impl Server {
     /// receives its response; submissions after it fail cleanly.
     pub fn shutdown(&self) {
         {
-            let mut st = self.sched.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.sched.state);
             st.open = false;
         }
         self.sched.work.notify_all();
-        let handles: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = lock_unpoisoned(&self.threads).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -1443,6 +1478,10 @@ impl Drop for Server {
 
 #[cfg(test)]
 mod tests {
+    // Tests are the one place where unwrap/expect is the right tool:
+    // a failed expectation *should* panic the test.
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::mult::MultKind;
     use crate::nn::lenet;

@@ -21,6 +21,11 @@
 //!   per-kernel timing artifact that feeds measured virtual service
 //!   costs into `qos/replay.rs` (ROADMAP item 5).
 
+// Telemetry sits on the request path (every sampled span goes through
+// here): rule R5 plus these tool lints keep it panic-free on behalf of
+// requests. No-ops under plain rustc; tests opt back out below.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod calibrate;
 mod ring;
 
@@ -32,6 +37,7 @@ use anyhow::Result;
 
 use crate::util::hash::fnv1a_u64;
 use crate::util::json::Value;
+use crate::util::sync::lock_unpoisoned;
 
 pub use calibrate::{Calibration, CostRow};
 pub use ring::SpanRing;
@@ -221,6 +227,9 @@ impl Tracer {
         Ok(Self {
             seed: cfg.seed,
             sample_per: cfg.sample_per,
+            // heam-analyze: allow(R3): the epoch anchors span
+            // wall-times only; the ledger fingerprint covers the sampled
+            // id set, which is a pure function of (seed, sample_per, N).
             epoch: Instant::now(),
             rings: (0..rings.max(1)).map(|_| SpanRing::new(cfg.ring_capacity)).collect(),
             next_id: AtomicU64::new(0),
@@ -250,7 +259,7 @@ impl Tracer {
         if fnv1a_u64([self.seed, id]) % self.sample_per != 0 {
             return None;
         }
-        self.sampled.lock().unwrap().push(id);
+        lock_unpoisoned(&self.sampled).push(id);
         Some(TraceContext { id, class })
     }
 
@@ -269,7 +278,7 @@ impl Tracer {
     /// Intern a label, returning its stable index. Idempotent; intended
     /// for prepare/startup time, not the per-request path.
     pub fn intern(&self, label: &str) -> u32 {
-        let mut labels = self.labels.lock().unwrap();
+        let mut labels = lock_unpoisoned(&self.labels);
         if let Some(i) = labels.iter().position(|l| l == label) {
             return i as u32;
         }
@@ -279,13 +288,13 @@ impl Tracer {
 
     /// Snapshot of the intern table (index = label id).
     pub fn labels(&self) -> Vec<String> {
-        self.labels.lock().unwrap().clone()
+        lock_unpoisoned(&self.labels).clone()
     }
 
     /// Drain every ring to empty. Safe to call concurrently (collectors
     /// are serialized); producers keep recording while a drain runs.
     pub fn drain(&self) -> Vec<Span> {
-        let _guard = self.drain.lock().unwrap();
+        let _guard = lock_unpoisoned(&self.drain);
         let mut out = Vec::new();
         loop {
             let mut got = false;
@@ -314,7 +323,7 @@ impl Tracer {
 
     /// The deterministic ledger so far.
     pub fn ledger(&self) -> TraceLedger {
-        let mut sampled = self.sampled.lock().unwrap().clone();
+        let mut sampled = lock_unpoisoned(&self.sampled).clone();
         sampled.sort_unstable();
         TraceLedger {
             sampled,
@@ -393,6 +402,8 @@ pub fn write_jsonl(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]

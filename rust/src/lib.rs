@@ -41,6 +41,12 @@
 //!   from a common queue.
 //! * [`bench`] — regeneration harness for every table and figure in the
 //!   paper's evaluation section.
+//! * [`analyze`] — self-hosted static analysis (`heam analyze`): a
+//!   dependency-free rule engine over this repo's own Rust tree that
+//!   gates CI on the determinism & safety invariants the compiler
+//!   cannot check (unregistered test targets, unbounded waits,
+//!   wall-clock reads in replay modules, SAFETY hygiene, serving-path
+//!   panics, narrow counters).
 //! * [`util`] — offline-crate substitutes: PRNG, mini-JSON, tensor-bundle
 //!   IO, CLI parsing, and a small property-testing framework.
 //!
@@ -48,6 +54,7 @@
 //! paper-vs-measured results.
 
 pub mod accel;
+pub mod analyze;
 pub mod bench;
 pub mod coordinator;
 pub mod cost;

@@ -32,6 +32,10 @@
 //! * `calibrate`  — replay a fixed fully-traced workload and write the
 //!   measured per-stage / per-kernel / per-tier timing artifact that
 //!   `loadgen --classes --calibration` feeds into the QoS lane model.
+//! * `analyze`    — self-hosted static analysis of the repo's own Rust
+//!   tree (rules R1–R6: registered test targets, bounded waits, no
+//!   wall-clock in replay modules, SAFETY hygiene, serving-path panic
+//!   freedom, u64 counters) gated by `analyze-baseline.json`.
 
 use std::sync::Arc;
 
@@ -74,6 +78,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "top" => top(rest),
         "calibrate" => calibrate(rest),
         "nonlinear" => nonlinear(rest),
+        "analyze" => analyze(rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -97,9 +102,87 @@ fn print_usage() {
            loadgen    replay seeded traffic against a multi-model gateway\n\
            top        one-shot Prometheus exposition from a seeded gateway workload\n\
            calibrate  replay a fully-traced workload, write per-stage/kernel timings\n\
-           nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\n\
+           nonlinear  optimize an approximate Sigmoid/Softmax unit (paper §V)\n\
+           analyze    static-analysis self-check of the Rust tree (rules R1-R6)\n\n\
          Run `heam <subcommand> --help` for options."
     );
+}
+
+fn analyze(argv: &[String]) -> Result<()> {
+    use heam::analyze::Baseline;
+    let args = Args::new(
+        "heam analyze",
+        "Self-hosted static analysis of the repo's Rust tree (rules R1-R6); \
+         exits nonzero on any finding not covered by the committed baseline",
+    )
+    .opt("root", ".", "repo root to analyze")
+    .opt(
+        "baseline",
+        "analyze-baseline.json",
+        "baseline JSON path (relative to --root unless absolute)",
+    )
+    .flag("update-baseline", "rewrite the baseline to absorb all current findings")
+    .flag("list-rules", "print the rule table and exit")
+    .parse(argv)?;
+    if args.is_set("list-rules") {
+        for r in heam::analyze::rules::RULES {
+            println!("{} {} {}", r.id, r.severity, r.summary);
+        }
+        return Ok(());
+    }
+    let root = std::path::PathBuf::from(args.get("root"));
+    let baseline_arg = std::path::PathBuf::from(args.get("baseline"));
+    let baseline_path = if baseline_arg.is_absolute() {
+        baseline_arg
+    } else {
+        root.join(baseline_arg)
+    };
+    let report = heam::analyze::run(&root)?;
+    if args.is_set("update-baseline") {
+        let base = Baseline::from_findings(&report.findings);
+        std::fs::write(&baseline_path, base.to_json())
+            .with_context(|| format!("writing {}", baseline_path.display()))?;
+        println!(
+            "analyze baseline: wrote {} entries ({} findings) to {}",
+            base.entries(),
+            base.total(),
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let base = Baseline::load(&baseline_path)?;
+    let diff = base.diff(&report.findings);
+    let new_set: std::collections::BTreeSet<usize> = diff.new.iter().copied().collect();
+    for (idx, f) in report.findings.iter().enumerate() {
+        let tag = if new_set.contains(&idx) { "NEW" } else { "baselined" };
+        println!("{tag} {}", f.render());
+    }
+    for s in &diff.stale {
+        println!("stale baseline entry: {s} (fixed findings — run `heam analyze --update-baseline`)");
+    }
+    println!(
+        "analyze summary: files={} findings={} new={} baselined={} suppressed={} stale={}",
+        report.files,
+        report.findings.len(),
+        diff.new.len(),
+        diff.baselined,
+        report.suppressed,
+        diff.stale.len()
+    );
+    println!(
+        "analyze fingerprint: fp=0x{:016x} files={}",
+        report.fingerprint(),
+        report.files
+    );
+    if !diff.new.is_empty() {
+        bail!(
+            "analyze: {} new finding(s) not covered by {} — fix them, suppress with a \
+             justified `// heam-analyze: allow(..)`, or (legacy only) --update-baseline",
+            diff.new.len(),
+            baseline_path.display()
+        );
+    }
+    Ok(())
 }
 
 fn nonlinear(argv: &[String]) -> Result<()> {

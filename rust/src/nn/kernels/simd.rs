@@ -212,9 +212,9 @@ unsafe fn gemm_narrow_avx2(
 ) {
     use std::arch::x86_64::*;
     assert!(t.len() >= NARROW_LEN, "narrow table missing the gather pad");
-    debug_assert_eq!(xt.len(), k * n);
-    debug_assert_eq!(wrows.len(), m * k);
-    debug_assert_eq!(raw.len(), m * n);
+    assert_eq!(xt.len(), k * n);
+    assert_eq!(wrows.len(), m * k);
+    assert_eq!(raw.len(), m * n);
     let mask16 = _mm256_set1_epi32(0xFFFF);
     let tp = t.as_ptr();
     let mut nb = 0;
@@ -285,9 +285,9 @@ pub unsafe fn gemm_wide_avx2(
 ) {
     use std::arch::x86_64::*;
     assert_eq!(t.len(), 65536, "wide table shape");
-    debug_assert_eq!(xt.len(), k * n);
-    debug_assert_eq!(wrows.len(), m * k);
-    debug_assert_eq!(raw.len(), m * n);
+    assert_eq!(xt.len(), k * n);
+    assert_eq!(wrows.len(), m * k);
+    assert_eq!(raw.len(), m * n);
     let tp = t.as_ptr();
     let mut nb = 0;
     while nb < n {
@@ -340,7 +340,7 @@ pub unsafe fn gemm_wide_avx2(
 unsafe fn dot_narrow_avx2(t: &[u16], xs: &[u8], ws: &[u8]) -> i64 {
     use std::arch::x86_64::*;
     assert!(t.len() >= NARROW_LEN, "narrow table missing the gather pad");
-    debug_assert_eq!(xs.len(), ws.len());
+    assert_eq!(xs.len(), ws.len());
     let n = xs.len();
     let nv = n & !7;
     let mask16 = _mm256_set1_epi32(0xFFFF);
@@ -391,9 +391,9 @@ unsafe fn gemm_narrow_neon(
     kbias: i64,
 ) {
     use core::arch::aarch64::*;
-    debug_assert_eq!(xt.len(), k * n);
-    debug_assert_eq!(wrows.len(), m * k);
-    debug_assert_eq!(raw.len(), m * n);
+    assert_eq!(xt.len(), k * n);
+    assert_eq!(wrows.len(), m * k);
+    assert_eq!(raw.len(), m * n);
     let mut nb = 0;
     while nb < n {
         let nw = N_BLOCK.min(n - nb);

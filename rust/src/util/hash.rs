@@ -19,6 +19,18 @@ pub fn fnv1a_u64(words: impl IntoIterator<Item = u64>) -> u64 {
     h
 }
 
+/// FNV-1a over a raw byte stream — the same parameters as
+/// [`fnv1a_u64`], for fingerprints whose natural unit is text (the
+/// static-analyzer report) rather than u64 event words.
+pub fn fnv1a_bytes(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -26,6 +38,16 @@ mod tests {
     #[test]
     fn empty_stream_is_the_offset_basis() {
         assert_eq!(fnv1a_u64([]), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn bytes_variant_agrees_with_word_variant() {
+        // A u64 folds little-endian byte by byte, so the two schemes
+        // coincide on the same byte stream.
+        assert_eq!(fnv1a_bytes([]), fnv1a_u64([]));
+        let w = 0x0123456789abcdefu64;
+        assert_eq!(fnv1a_bytes(w.to_le_bytes()), fnv1a_u64([w]));
+        assert_ne!(fnv1a_bytes([1, 2]), fnv1a_bytes([2, 1]));
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod propcheck;
+pub mod sync;
 pub mod tensor_io;
 
 /// Format a float with a fixed number of significant-ish decimals for the

@@ -1,0 +1,75 @@
+//! Poison-tolerant synchronization helpers for the serving path.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking worker into a poisoned
+//! mutex, and the *next* thread to touch that lock — often the
+//! scheduler or a metrics reader on a completely healthy request —
+//! panics too, cascading a single fault across the gateway. The
+//! coordinator already contains worker panics with `catch_unwind`
+//! (PR 6); these helpers close the remaining gap by recovering the
+//! guard from a `PoisonError` instead of propagating it.
+//!
+//! Recovering is sound here because every coordinator critical section
+//! leaves its protected state consistent at each await-free step (the
+//! scheduler re-derives lane state from scratch on every pass, and the
+//! metrics structs are monotone counters), so the worst case after a
+//! mid-section panic is one stale observation — strictly better than a
+//! poisoned-lock panic storm. Static-analysis rule R5 points here.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout`, recovering the guard if the mutex was
+/// poisoned while parked.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, timeout)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    #[test]
+    fn lock_recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recovers_and_reports_timeout() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison while holding");
+        })
+        .join();
+        let (m, cv) = &*pair;
+        let g = lock_unpoisoned(m);
+        let (g, res) = wait_timeout_unpoisoned(cv, g, Duration::from_millis(5));
+        assert!(res.timed_out());
+        assert!(!*g);
+    }
+}

@@ -1,0 +1,409 @@
+//! Fixture-driven tests for the `heam analyze` static-analysis pass:
+//! lexer masking, region tracking, suppression parsing, each rule's
+//! known-good / known-bad snippets, baseline diffing — and the strict
+//! self-application check: analyzing this repo from a test must be
+//! byte-deterministic and produce exactly the committed baseline.
+//!
+//! Fixture snippets deliberately contain rule-trigger text (`.recv()`,
+//! `.unwrap()`, …) inside string literals in an R2-scoped file path —
+//! which is itself a test of the lexer: the analyzer scanning *this*
+//! file must mask them all.
+
+use std::path::Path;
+
+use heam::analyze::{analyze_files, rules, Baseline, Finding, Severity, SourceFile};
+
+/// Run the full engine (rules + suppressions + sort) over one file.
+fn scan_one(path: &str, src: &str) -> Vec<Finding> {
+    analyze_files(&[(path.to_string(), src.to_string())]).findings
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------- lexer
+
+#[test]
+fn lexer_masks_strings_comments_and_raw_strings() {
+    let src = r##"
+fn f() {
+    let _s = "rx.recv() inside a string";
+    let _r = r#"rx.recv() inside a raw string"#;
+    let _b = b"rx.recv() in a byte string";
+    let _e = "escaped \" quote then rx.recv()";
+    // rx.recv() inside a line comment
+    /* rx.recv() inside /* a nested */ block comment */
+}
+"##;
+    assert!(
+        scan_one("rust/src/coordinator/x.rs", src).is_empty(),
+        "literal/comment contents must be masked"
+    );
+}
+
+#[test]
+fn lexer_distinguishes_char_literals_from_lifetimes() {
+    // The '"' char literal must not open a string (which would mask the
+    // real `.recv()` after it), and lifetimes must not be parsed as
+    // char literals.
+    let src = r#"
+fn f<'a>(x: &'a str) -> &'a str {
+    let _q = '"';
+    let _e = '\n';
+    let _u = '\u{1F600}';
+    rx.recv();
+    x
+}
+"#;
+    let f = scan_one("rust/src/coordinator/x.rs", src);
+    assert_eq!(rules_of(&f), ["R2"], "exactly the real .recv(): {f:#?}");
+    assert_eq!(f[0].line, 6);
+}
+
+#[test]
+fn lexer_reports_one_based_lines() {
+    let sf = SourceFile::parse("x.rs", "fn a() {}\nfn b() {}\n// c\n");
+    assert_eq!(sf.lines.len(), 4); // 3 lines + empty trailing segment
+    assert_eq!(sf.lines[0].code.trim(), "fn a() {}");
+    assert_eq!(sf.lines[2].code.trim(), "");
+    assert!(sf.lines[2].comment.contains(" c"));
+}
+
+// -------------------------------------------------------------- regions
+
+#[test]
+fn test_modules_are_excluded_from_r5() {
+    let src = r#"
+fn serve() { val.unwrap(); }
+#[cfg(test)]
+mod tests {
+    fn check() { val.unwrap(); val.expect("fine in tests"); }
+}
+"#;
+    let f = scan_one("rust/src/coordinator/x.rs", src);
+    assert_eq!(rules_of(&f), ["R5"], "{f:#?}");
+    assert_eq!(f[0].line, 2, "only the non-test unwrap is flagged");
+}
+
+#[test]
+fn unsafe_fn_bodies_are_tracked_across_multiline_signatures() {
+    let src = r#"
+/// # Safety
+/// Caller upholds the pointer contract.
+#[inline]
+unsafe fn g(
+    p: *const u8,
+    n: usize,
+) {
+    debug_assert_eq!(n, 1);
+}
+
+fn safe_fn(n: usize) {
+    debug_assert_eq!(n, 1);
+}
+"#;
+    let f = scan_one("rust/src/nn/x.rs", src);
+    assert_eq!(rules_of(&f), ["R4"], "{f:#?}");
+    assert_eq!(f[0].line, 9, "debug_assert inside the unsafe fn body only");
+}
+
+// --------------------------------------------------------- suppressions
+
+#[test]
+fn suppressions_cover_same_line_next_code_line_and_whole_file() {
+    let same_line =
+        "fn f() { rx.recv(); } // heam-analyze: allow(R2): bounded by disconnect.\n";
+    assert!(scan_one("rust/src/coordinator/x.rs", same_line).is_empty());
+
+    let above = "\
+// heam-analyze: allow(R2): bounded by disconnect.
+fn f() { rx.recv(); }
+fn g() { rx.recv(); }
+";
+    let f = scan_one("rust/src/coordinator/x.rs", above);
+    assert_eq!(rules_of(&f), ["R2"]);
+    assert_eq!(f[0].line, 3, "the standalone comment covers only the next code line");
+
+    let file_wide = "\
+// heam-analyze: allow-file(R2)
+fn f() { rx.recv(); }
+fn g() { rx.recv(); }
+";
+    assert!(scan_one("rust/src/coordinator/x.rs", file_wide).is_empty());
+
+    let wrong_rule = "\
+// heam-analyze: allow(R5): wrong rule id.
+fn f() { rx.recv(); }
+";
+    assert_eq!(
+        rules_of(&scan_one("rust/src/coordinator/x.rs", wrong_rule)),
+        ["R2"],
+        "an allow for a different rule must not suppress"
+    );
+
+    let multi = "fn f() { rx.recv().unwrap(); } // heam-analyze: allow(R2, R5): both justified.\n";
+    assert!(scan_one("rust/src/coordinator/x.rs", multi).is_empty());
+}
+
+#[test]
+fn suppressed_findings_are_counted() {
+    let src = "fn f() { rx.recv(); } // heam-analyze: allow(R2): bounded.\n";
+    let report = analyze_files(&[("rust/src/coordinator/x.rs".to_string(), src.to_string())]);
+    assert!(report.findings.is_empty());
+    assert_eq!(report.suppressed, 1);
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn r2_flags_unbounded_waits_only_in_scope() {
+    let bad = "fn f() { rx.recv(); cv.wait(guard); }\n";
+    for path in [
+        "rust/src/coordinator/x.rs",
+        "rust/tests/x.rs",
+        "rust/benches/x.rs",
+        "examples/x.rs",
+    ] {
+        assert_eq!(rules_of(&scan_one(path, bad)), ["R2", "R2"], "{path}");
+    }
+    assert!(
+        scan_one("rust/src/nn/x.rs", bad).is_empty(),
+        "R2 is scoped to serving/test/bench/example code"
+    );
+    let good = "fn f() { rx.recv_timeout(d); cv.wait_timeout(g, d); p.wait_with_latency_timeout(d); }\n";
+    assert!(scan_one("rust/src/coordinator/x.rs", good).is_empty());
+}
+
+#[test]
+fn r3_flags_wall_clock_in_replay_modules_only() {
+    let bad = "fn now() -> u64 { Instant::now().elapsed().as_micros() as u64 }\n";
+    for path in [
+        "rust/src/coordinator/qos/replay.rs",
+        "rust/src/coordinator/fault.rs",
+        "rust/src/coordinator/loadgen.rs",
+        "rust/src/coordinator/telemetry/mod.rs",
+    ] {
+        assert_eq!(rules_of(&scan_one(path, bad)), ["R3"], "{path}");
+    }
+    assert!(
+        scan_one("rust/src/coordinator/server.rs", bad).is_empty(),
+        "the server legitimately reads the wall clock"
+    );
+    let sys = "fn f() { let _ = SystemTime::now(); }\n";
+    assert_eq!(
+        rules_of(&scan_one("rust/src/coordinator/fault.rs", sys)),
+        ["R3"]
+    );
+}
+
+#[test]
+fn r4_requires_adjacent_safety_comments() {
+    let bad = "fn f() { unsafe { danger() } }\n";
+    let f = scan_one("rust/src/nn/x.rs", bad);
+    assert_eq!(rules_of(&f), ["R4"], "{f:#?}");
+
+    let good = "\
+fn f() {
+    // SAFETY: bounds asserted above; the pad entry covers the tail.
+    unsafe { danger() }
+}
+";
+    assert!(scan_one("rust/src/nn/x.rs", good).is_empty());
+
+    let doc_style = "\
+/// # Safety
+/// Caller must ensure AVX2 is available.
+#[cfg(target_arch = \"x86_64\")]
+#[target_feature(enable = \"avx2\")]
+unsafe fn g(p: *const u8) {
+    assert!(!p.is_null());
+}
+";
+    assert!(
+        scan_one("rust/src/nn/x.rs", doc_style).is_empty(),
+        "a # Safety doc section across attribute lines justifies the unsafe fn"
+    );
+
+    let too_far = "\
+// SAFETY: stale justification.
+fn unrelated() {}
+fn f() { unsafe { danger() } }
+";
+    assert_eq!(
+        rules_of(&scan_one("rust/src/nn/x.rs", too_far)),
+        ["R4"],
+        "a SAFETY comment does not reach across real code"
+    );
+}
+
+#[test]
+fn r5_flags_serving_path_panics_not_expect_err() {
+    let bad = "fn f() { a.unwrap(); b.expect(\"boom\"); panic!(\"no\"); }\n";
+    let f = scan_one("rust/src/coordinator/x.rs", bad);
+    assert_eq!(rules_of(&f), ["R5", "R5", "R5"], "{f:#?}");
+    assert!(f.iter().all(|x| x.severity == Severity::Warn));
+
+    let ok = "fn f() { r.unwrap_or_else(recover); e.expect_err(\"must fail\"); }\n";
+    assert!(
+        scan_one("rust/src/coordinator/x.rs", ok).is_empty(),
+        "unwrap_or_else and expect_err are fine"
+    );
+    assert!(
+        scan_one("rust/src/nn/x.rs", bad).is_empty(),
+        "R5 is scoped to coordinator/"
+    );
+}
+
+#[test]
+fn r6_flags_narrow_counters_in_metrics_only() {
+    let bad = "pub struct Metrics { pub requests: u32, pub drops: AtomicU32 }\n";
+    let f = scan_one("rust/src/coordinator/metrics.rs", bad);
+    assert_eq!(rules_of(&f), ["R6", "R6"], "{f:#?}");
+
+    let good = "pub struct Metrics { pub requests: u64, pub queue: i64, pub my_u32_note: u64 }\n";
+    assert!(
+        scan_one("rust/src/coordinator/metrics.rs", good).is_empty(),
+        "u64/i64 and u32-as-identifier-fragment are fine"
+    );
+    assert!(
+        scan_one("rust/src/coordinator/qos/router.rs", bad).is_empty(),
+        "R6 is scoped to metrics.rs (milli-tier u32 levels elsewhere are values, not counters)"
+    );
+}
+
+#[test]
+fn r1_cross_checks_manifest_against_disk_both_ways() {
+    let toml = "\
+[package]
+name = \"x\"
+
+[[test]]
+name = \"a\"
+path = \"rust/tests/a.rs\"
+";
+    let t = |s: &str| s.to_string();
+    // b.rs on disk but unregistered -> one finding.
+    let f = rules::check_manifest(toml, &[t("rust/tests/a.rs"), t("rust/tests/b.rs")], &[]);
+    assert_eq!(rules_of(&f), ["R1"], "{f:#?}");
+    assert!(f[0].msg.contains("rust/tests/b.rs"), "{}", f[0].msg);
+
+    // registered but gone from disk -> one finding at the entry's line.
+    let f = rules::check_manifest(toml, &[], &[]);
+    assert_eq!(rules_of(&f), ["R1"]);
+    assert_eq!(f[0].line, 6);
+
+    // consistent -> clean.
+    assert!(rules::check_manifest(toml, &[t("rust/tests/a.rs")], &[]).is_empty());
+
+    // And through the engine: the inventory comes from the file set.
+    let report = analyze_files(&[
+        ("Cargo.toml".to_string(), toml.to_string()),
+        ("rust/tests/a.rs".to_string(), "fn main() {}\n".to_string()),
+        ("rust/tests/b.rs".to_string(), "fn main() {}\n".to_string()),
+    ]);
+    assert_eq!(rules_of(&report.findings), ["R1"], "{:#?}", report.findings);
+    assert_eq!(report.findings[0].path, "Cargo.toml");
+}
+
+// -------------------------------------------------------------- baseline
+
+fn mk(path: &str, line: usize) -> Finding {
+    Finding {
+        path: path.to_string(),
+        line,
+        rule: "R5",
+        severity: Severity::Warn,
+        msg: "m".to_string(),
+    }
+}
+
+#[test]
+fn baseline_roundtrips_byte_identically() {
+    let findings = vec![mk("a.rs", 1), mk("a.rs", 5), mk("b.rs", 2)];
+    let base = Baseline::from_findings(&findings);
+    assert_eq!(base.entries(), 2);
+    assert_eq!(base.total(), 3);
+    let text = base.to_json();
+    let reparsed = Baseline::parse(&text).unwrap();
+    assert_eq!(reparsed, base);
+    assert_eq!(reparsed.to_json(), text, "serialization is deterministic");
+}
+
+#[test]
+fn baseline_diff_splits_new_baselined_and_stale() {
+    let base = Baseline::from_findings(&[mk("a.rs", 1), mk("a.rs", 5), mk("b.rs", 2)]);
+
+    let same = vec![mk("a.rs", 11), mk("a.rs", 15), mk("b.rs", 12)];
+    let d = base.diff(&same);
+    assert!(d.new.is_empty(), "line drift alone must not trip the gate");
+    assert_eq!(d.baselined, 3);
+    assert!(d.stale.is_empty());
+
+    let grown = vec![mk("a.rs", 1), mk("a.rs", 5), mk("a.rs", 9), mk("b.rs", 2)];
+    let d = base.diff(&grown);
+    assert_eq!(d.new, vec![2], "the surplus finding (last in line order) is new");
+
+    let shrunk = vec![mk("a.rs", 1), mk("b.rs", 2)];
+    let d = base.diff(&shrunk);
+    assert!(d.new.is_empty());
+    assert_eq!(d.stale.len(), 1, "{:?}", d.stale);
+    assert!(d.stale[0].contains("a.rs"), "{:?}", d.stale);
+
+    let other_rule = vec![Finding { rule: "R2", ..mk("a.rs", 1) }];
+    let d = base.diff(&other_rule);
+    assert_eq!(d.new, vec![0], "baseline keys include the rule id");
+}
+
+#[test]
+fn baseline_load_of_missing_file_is_empty() {
+    let base = Baseline::load(Path::new("does-not-exist.json")).unwrap();
+    assert_eq!(base, Baseline::empty());
+    assert!(Baseline::parse("{\"format\":\"other\",\"entries\":[]}").is_err());
+}
+
+// ------------------------------------------------------ self-application
+
+#[test]
+fn self_run_is_deterministic() {
+    let a = heam::analyze::run(Path::new(".")).unwrap();
+    let b = heam::analyze::run(Path::new(".")).unwrap();
+    let ra: Vec<String> = a.findings.iter().map(Finding::render).collect();
+    let rb: Vec<String> = b.findings.iter().map(Finding::render).collect();
+    assert_eq!(ra, rb, "two runs over the same tree must render identically");
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.files, b.files);
+    // Sorted output is part of the contract (derived Ord: path, line,
+    // rule — numeric lines, so *not* lexicographic on the rendering).
+    assert!(a.findings.windows(2).all(|w| w[0] <= w[1]));
+}
+
+#[test]
+fn self_run_matches_committed_baseline_exactly() {
+    let report = heam::analyze::run(Path::new(".")).unwrap();
+    let base = Baseline::load(Path::new("analyze-baseline.json")).unwrap();
+    let diff = base.diff(&report.findings);
+    let new: Vec<String> = diff
+        .new
+        .iter()
+        .map(|&i| report.findings[i].render())
+        .collect();
+    assert!(
+        new.is_empty(),
+        "non-baselined findings — fix them or add a justified suppression:\n{}",
+        new.join("\n")
+    );
+    assert!(
+        diff.stale.is_empty(),
+        "stale baseline entries — run `heam analyze --update-baseline`:\n{}",
+        diff.stale.join("\n")
+    );
+    assert_eq!(diff.baselined, report.findings.len());
+    // The committed file itself must be in canonical form.
+    let committed = std::fs::read_to_string("analyze-baseline.json").unwrap();
+    assert_eq!(
+        committed,
+        base.to_json(),
+        "analyze-baseline.json is not canonical — regenerate with --update-baseline"
+    );
+}
